@@ -1,0 +1,50 @@
+//! CNN case study (paper §4.3.2, Table 5): run the build-time-trained CNN
+//! on its frozen test set with one conv layer's im2col GEMM substituted by
+//! SpAMM, sweeping τ and reporting prediction-accuracy delta — the paper's
+//! "acc loss" column.
+//!
+//!   cargo run --release --example cnn_inference -- [layer] [limit]
+
+use std::collections::BTreeMap;
+
+use cuspamm::cnn::{Cnn, GemmMode};
+use cuspamm::prelude::*;
+
+fn main() -> Result<()> {
+    cuspamm::telemetry::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let layer = args.first().cloned().unwrap_or_else(|| "conv2".to_string());
+    let limit: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let bundle = ArtifactBundle::load("artifacts")?;
+    let meta = bundle
+        .cnn
+        .clone()
+        .expect("bundle lacks CNN export — re-run `make artifacts`");
+    let cnn = Cnn::load(&meta)?;
+    let engine = SpammEngine::new(&bundle, SpammConfig::default())?;
+
+    println!(
+        "== CNN case study: layer {layer}, {limit} test images (build-time accuracy {:.2}%) ==",
+        meta.test_accuracy * 100.0
+    );
+
+    let mut modes: BTreeMap<String, GemmMode> = BTreeMap::new();
+    let baseline = cnn.accuracy(&modes, Some(&engine), 100, Some(limit))?;
+    println!("exact inference accuracy: {:.2}%", baseline * 100.0);
+
+    // Sweep τ like Table 5 sweeps per-layer thresholds.
+    println!("\n      τ      accuracy    acc loss");
+    for tau in [0.0f32, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        modes.insert(layer.clone(), GemmMode::Spamm { tau });
+        let acc = cnn.accuracy(&modes, Some(&engine), 100, Some(limit))?;
+        println!(
+            "  {tau:8.2}    {:6.2}%    {:+.2}%",
+            acc * 100.0,
+            (acc - baseline) * 100.0
+        );
+    }
+    println!("\n(Table 5's shape: accuracy is insensitive until τ gets large — \
+              CNNs tolerate GEMM approximation)");
+    Ok(())
+}

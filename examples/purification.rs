@@ -1,0 +1,64 @@
+//! Density-matrix purification — the electronic-structure application
+//! SpAMM was built for (paper's motivation; Challacombe & Bock's original
+//! O(N) use case).  Runs McWeeny iterations P ← 3P² − 2P³ with the SpAMM
+//! engine at several τ and shows that purification converges while most
+//! tile products are skipped — SpAMM's self-correcting sweet spot.
+//!
+//!   cargo run --release --example purification -- [n] [devices]
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::prelude::*;
+use cuspamm::spamm::purification::{initial_density, mcweeny_purify};
+
+fn main() -> Result<()> {
+    cuspamm::telemetry::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let devices: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let bundle = ArtifactBundle::load("artifacts")?;
+    let mut cfg = SpammConfig::default();
+    cfg.lonum = if n >= 512 { 128 } else { 32 };
+    cfg.devices = devices;
+    let coord = Coordinator::new(&bundle, cfg)?;
+
+    println!("== McWeeny purification, N = {n}, {devices} device(s) ==");
+    let p0 = initial_density(n, 7);
+    println!("initial ‖P₀‖_F = {:.4}", p0.fnorm());
+
+    for tau in [0.0f32, 1e-8, 1e-5] {
+        let r = mcweeny_purify(&coord, &p0, tau, 25, 1e-6)?;
+        println!(
+            "\nτ = {tau:>7.0e}: {} iterations, converged = {}",
+            r.steps.len(),
+            r.converged
+        );
+        println!("  iter   ‖P²−P‖_F    valid%   wall(s)");
+        for s in r.steps.iter().take(6) {
+            println!(
+                "  {:4}   {:.3e}   {:6.2}   {:.3}",
+                s.iter,
+                s.idempotency_err,
+                s.valid_ratio * 100.0,
+                s.wall_secs
+            );
+        }
+        if r.steps.len() > 6 {
+            let s = r.steps.last().unwrap();
+            println!(
+                "  ...\n  {:4}   {:.3e}   {:6.2}   {:.3}",
+                s.iter,
+                s.idempotency_err,
+                s.valid_ratio * 100.0,
+                s.wall_secs
+            );
+        }
+    }
+    println!(
+        "\n(purification is self-correcting: SpAMM's skipped mass does not \
+         prevent quadratic convergence — the paper's electronic-structure \
+         motivation in action)"
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the minimal cuspamm workflow.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Generates an algebraic-decay matrix pair (the paper's synthesized
+//! dataset), tunes τ for a 10% valid ratio, runs SpAMM, and compares time
+//! and error against the dense XLA baseline (the cuBLAS stand-in).
+
+use cuspamm::prelude::*;
+
+fn main() -> Result<()> {
+    cuspamm::telemetry::init_logging();
+    let bundle = ArtifactBundle::load("artifacts")?;
+    let mut cfg = SpammConfig::default();
+    cfg.lonum = 128; // MXU-native tile; best tile-GEMM throughput on this runtime
+    let engine = SpammEngine::new(&bundle, cfg.clone())?;
+
+    let n = 1024;
+    println!("== cuspamm quickstart (N = {n}, LoNum = {}) ==", cfg.lonum);
+    let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+
+    // 1. Tune τ for a target valid ratio (§3.5.2).
+    let tuned = engine.tune_tau(&a, &b, 0.10)?;
+    println!(
+        "tuned τ = {:.5e} → valid ratio {:.2}% in {} iterations",
+        tuned.tau,
+        tuned.achieved_ratio * 100.0,
+        tuned.iters
+    );
+
+    // 2. SpAMM multiply (skips ~90% of tile products).
+    engine.multiply(&a, &b, tuned.tau)?; // warm (compile executables)
+    let (c, stats) = engine.multiply_with_stats(&a, &b, tuned.tau)?;
+    println!(
+        "spamm:  {:.3}s  ({} of {} tile products executed, {} batches)",
+        stats.total_secs, stats.valid_products, stats.total_products, stats.batches
+    );
+    println!(
+        "        norm {:.1}ms | schedule {:.1}ms | gather {:.1}ms | exec {:.1}ms | scatter {:.1}ms",
+        stats.norm_secs * 1e3,
+        stats.schedule_secs * 1e3,
+        stats.gather_secs * 1e3,
+        stats.exec_secs * 1e3,
+        stats.scatter_secs * 1e3
+    );
+
+    // 3. Dense baseline on the same runtime (warm, then timed).
+    engine.dense(&a, &b)?;
+    let t = std::time::Instant::now();
+    let dense = engine.dense(&a, &b)?;
+    let dense_secs = t.elapsed().as_secs_f64();
+    println!("dense:  {dense_secs:.3}s");
+
+    // 4. Accuracy report (the paper's Eq. 5 criterion).
+    let err = c.error_fnorm(&dense)?;
+    println!(
+        "speedup {:.2}x   ‖E‖_F = {:.4e}   ‖E‖_F/‖C‖_F = {:.2e}",
+        dense_secs / stats.total_secs,
+        err,
+        err / dense.fnorm()
+    );
+    Ok(())
+}

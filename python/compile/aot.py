@@ -1,0 +1,193 @@
+# AOT artifact builder: lowers every Layer-2 graph variant to HLO *text*
+# (NOT .serialize() — xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id
+# protos; the text parser reassigns ids) plus a manifest.json that the Rust
+# runtime's artifact registry consumes.
+#
+#   python -m python.compile.aot --out artifacts
+#
+# Runs once per source change (`make artifacts`); the request path is pure
+# Rust afterwards.
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+LONUM = 32                      # default / CNN tile size
+LONUMS = [32, 128]              # 128 = MXU-native tile, used by the benches
+SQUARE_SIZES = [256, 512, 1024, 2048]
+# Tile-GEMM batch buckets per LoNum (bounded by buffer size: 3·b·L²·4 B).
+TILE_BATCHES = {32: [64, 256, 1024], 128: [16, 64, 256]}
+PRECISIONS = ["f32", "bf16"]
+# Rectangular GEMM shapes of the case-study CNN's im2col convolutions
+# (weights (C_out, C_in·9) @ patches (C_in·9, batch·H·W) at batch=100).
+CNN_GEMMS = [
+    ("conv1", 64, 9, 25600),
+    ("conv2", 64, 576, 6400),
+    ("conv3", 128, 576, 1600),
+]
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_meta(s):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+def build_specs():
+    """The full artifact grid: (name, fn, example_args, metadata)."""
+    specs = []
+
+    def add(name, kind, fn, args, **params):
+        specs.append(
+            {
+                "name": name,
+                "kind": kind,
+                "fn": fn,
+                "args": args,
+                "params": params,
+            }
+        )
+
+    # --- get-norm kernel, square synthesized/ergo matrices ----------------
+    for lonum in LONUMS:
+        for n in SQUARE_SIZES:
+            if n % lonum:
+                continue
+            add(
+                f"getnorm_n{n}_l{lonum}", "getnorm",
+                functools.partial(model.getnorm_graph, lonum=lonum),
+                (f32(n, n),), n=n, lonum=lonum, precision="f32",
+            )
+            add(
+                f"getnorm_mxu_n{n}_l{lonum}", "getnorm",
+                functools.partial(model.getnorm_mxu_graph, lonum=lonum),
+                (f32(n, n),), n=n, lonum=lonum, precision="bf16",
+            )
+
+    # --- batched tile GEMM (coordinator execution vehicle) ----------------
+    for lonum in LONUMS:
+        for b in TILE_BATCHES[lonum]:
+            for prec in PRECISIONS:
+                add(
+                    f"tilegemm_l{lonum}_b{b}_{prec}", "tilegemm",
+                    functools.partial(model.tile_gemm_graph, precision=prec),
+                    (f32(b, lonum, lonum), f32(b, lonum, lonum)),
+                    batch=b, lonum=lonum, precision=prec,
+                )
+
+    # --- dense GEMM baseline (cuBLAS stand-in) ----------------------------
+    for n in SQUARE_SIZES:
+        for prec in PRECISIONS:
+            add(
+                f"dense_n{n}_{prec}", "dense",
+                functools.partial(model.dense_graph, precision=prec),
+                (f32(n, n), f32(n, n)), m=n, k=n, n=n, precision=prec,
+            )
+
+    # --- fused single-call SpAMM (numerics oracle / small problems) -------
+    for n in [256, 512]:
+        for prec in PRECISIONS:
+            add(
+                f"spamm_fused_n{n}_{prec}", "spamm_fused",
+                functools.partial(
+                    model.spamm_fused_graph, lonum=LONUM, precision=prec
+                ),
+                (f32(n, n), f32(n, n), f32()),
+                n=n, lonum=LONUM, precision=prec,
+            )
+
+    # --- τ tuning kernel (§3.5.2) ------------------------------------------
+    bdims = sorted({n // l for n in SQUARE_SIZES for l in LONUMS if n % l == 0})
+    for bdim in bdims:
+        add(
+            f"tune_b{bdim}", "tune",
+            functools.partial(model.tune_graph, iters=20),
+            (f32(bdim, bdim), f32(bdim, bdim), f32()),
+            bdim=bdim, iters=20,
+        )
+
+    # --- CNN case-study conv GEMMs (dense baselines, rectangular) ---------
+    for layer, m, k, n in CNN_GEMMS:
+        for prec in PRECISIONS:
+            add(
+                f"dense_{layer}_{m}x{k}x{n}_{prec}", "dense",
+                functools.partial(model.dense_graph, precision=prec),
+                (f32(m, k), f32(k, n)), m=m, k=k, n=n, precision=prec,
+                layer=layer,
+            )
+
+    return specs
+
+
+def lower_spec(spec):
+    lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--skip-cnn", action="store_true",
+                    help="skip CNN training (kernel artifacts only)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    specs = build_specs()
+    manifest = {"lonum": LONUM, "version": 1, "artifacts": []}
+    for i, spec in enumerate(specs):
+        fname = f"{spec['name']}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        text = lower_spec(spec)
+        with open(path, "w") as f:
+            f.write(text)
+        n_outputs = len(jax.eval_shape(spec["fn"], *spec["args"]))
+        manifest["artifacts"].append(
+            {
+                "name": spec["name"],
+                "kind": spec["kind"],
+                "file": fname,
+                "inputs": [shape_meta(s) for s in spec["args"]],
+                "n_outputs": n_outputs,
+                "params": spec["params"],
+            }
+        )
+        print(f"[{i + 1}/{len(specs)}] {fname} ({len(text)} chars)")
+
+    if not args.skip_cnn:
+        print("training case-study CNN ...")
+        from . import cnn
+
+        meta = cnn.export(os.path.join(args.out, "cnn"))
+        manifest["cnn"] = {
+            "dir": "cnn",
+            "test_accuracy": meta["test_accuracy"],
+            "conv_specs": meta["conv_specs"],
+            "img": meta["img"],
+            "num_classes": meta["num_classes"],
+        }
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}/")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,183 @@
+# Build-time CNN for the VGG13/MNIST case study (cuSpAMM §4.3.2), scaled to
+# this testbed (DESIGN.md §2): a 3-conv CNN on a synthetic 16×16 digits
+# dataset.  Every conv is expressed as an im2col GEMM, exactly the transform
+# the paper applies to VGG13, so the Rust inference engine can substitute any
+# conv GEMM with the SpAMM pipeline and sweep τ / valid-ratio against
+# end-task accuracy (Table 5).
+#
+# Runs ONCE during `make artifacts`; exports weights + the frozen test set
+# via tensorio so the Rust request path never touches Python.
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Architecture (input 1×16×16) — channel widths sized so the im2col GEMMs
+# match the paper's conv21/conv31 *tile granularity* (the weights matrix
+# must span many LoNum=32 tiles in K, or SpAMM's tile skipping is
+# catastrophically coarse — paper conv21 is 128×576, ours is 64×576):
+#   conv1: 1→64,  3×3, pad 1 → relu → maxpool2   (16×16 → 8×8)
+#   conv2: 64→64, 3×3, pad 1 → relu → maxpool2   (8×8 → 4×4)   ["conv21" analog: 64×576 GEMM]
+#   conv3: 64→128, 3×3, pad 1 → relu             (4×4)         ["conv31" analog: 128×576 GEMM]
+#   fc:    2048 → 10
+CONV_SPECS = [
+    ("conv1", 1, 64),
+    ("conv2", 64, 64),
+    ("conv3", 64, 128),
+]
+IMG = 16
+NUM_CLASSES = 10
+FC_IN = 128 * 4 * 4
+
+
+def make_dataset(seed=7, n_train=2000, n_test=500):
+    """Synthetic 'digits': smooth per-class templates + shift + noise."""
+    rng = np.random.default_rng(seed)
+    # Smooth random template per class (low-frequency cosine mixture).
+    xs = np.arange(IMG)
+    grid_y, grid_x = np.meshgrid(xs, xs, indexing="ij")
+    templates = []
+    for _ in range(NUM_CLASSES):
+        t = np.zeros((IMG, IMG))
+        for _ in range(4):
+            fy, fx = rng.uniform(0.2, 1.2, 2)
+            py, px = rng.uniform(0, 2 * np.pi, 2)
+            t += rng.uniform(0.5, 1.5) * np.cos(fy * grid_y + py) * np.cos(fx * grid_x + px)
+        t = (t - t.mean()) / (t.std() + 1e-6)
+        templates.append(t)
+    templates = np.stack(templates)
+
+    def sample(n):
+        labels = rng.integers(0, NUM_CLASSES, n)
+        imgs = templates[labels].copy()
+        # random circular shift ±2 px + noise
+        for i in range(n):
+            sy, sx = rng.integers(-2, 3, 2)
+            imgs[i] = np.roll(np.roll(imgs[i], sy, axis=0), sx, axis=1)
+        imgs += rng.normal(0, 0.35, imgs.shape)
+        return imgs.astype(np.float32)[:, None], labels.astype(np.int32)
+
+    return sample(n_train), sample(n_test)
+
+
+def im2col(x, ksize=3, pad=1):
+    """NCHW → (C·k·k, N·H·W) patch matrix — the paper's im2col transform."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    cols = []
+    for dy in range(ksize):
+        for dx in range(ksize):
+            cols.append(xp[:, :, dy:dy + h, dx:dx + w])
+    # (k·k, N, C, H, W) → (C, k·k, N, H, W) → (C·k·k, N·H·W)
+    patches = jnp.stack(cols)  # (k², N, C, H, W)
+    patches = patches.transpose(2, 0, 1, 3, 4).reshape(c * ksize * ksize, n * h * w)
+    return patches
+
+
+def conv_gemm(params_w, params_b, x):
+    """Convolution as weight-matrix @ im2col-patches (+bias), NCHW."""
+    n, c, h, w = x.shape
+    cols = im2col(x)
+    out = params_w @ cols + params_b[:, None]  # (C_out, N·H·W)
+    c_out = params_w.shape[0]
+    return out.reshape(c_out, n, h, w).transpose(1, 0, 2, 3)
+
+
+def maxpool2(x):
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def forward(params, x):
+    x = jax.nn.relu(conv_gemm(params["conv1_w"], params["conv1_b"], x))
+    x = maxpool2(x)
+    x = jax.nn.relu(conv_gemm(params["conv2_w"], params["conv2_b"], x))
+    x = maxpool2(x)
+    x = jax.nn.relu(conv_gemm(params["conv3_w"], params["conv3_b"], x))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, cin, cout in CONV_SPECS:
+        fan_in = cin * 9
+        params[f"{name}_w"] = jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / fan_in), (cout, fan_in)), jnp.float32
+        )
+        params[f"{name}_b"] = jnp.zeros((cout,), jnp.float32)
+    params["fc_w"] = jnp.asarray(
+        rng.normal(0, np.sqrt(2.0 / FC_IN), (FC_IN, NUM_CLASSES)), jnp.float32
+    )
+    params["fc_b"] = jnp.zeros((NUM_CLASSES,), jnp.float32)
+    return params
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+@jax.jit
+def train_step(params, momt, x, y, lr=0.01, beta=0.9):
+    grads = jax.grad(loss_fn)(params, x, y)
+    new_m, new_p = {}, {}
+    for k in params:
+        new_m[k] = beta * momt[k] + grads[k]
+        new_p[k] = params[k] - lr * new_m[k]
+    return new_p, new_m
+
+
+def accuracy(params, x, y, batch=250):
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(params, x[i:i + batch])
+        hits += int(jnp.sum(jnp.argmax(logits, axis=1) == y[i:i + batch]))
+    return hits / x.shape[0]
+
+
+def train(steps=400, batch=100, seed=0, log=print):
+    (xtr, ytr), (xte, yte) = make_dataset()
+    params = init_params(seed)
+    momt = {k: jnp.zeros_like(v) for k, v in params.items()}
+    rng = np.random.default_rng(seed + 1)
+    xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr)
+    for step in range(steps):
+        idx = rng.integers(0, xtr.shape[0], batch)
+        params, momt = train_step(params, momt, xtr_j[idx], ytr_j[idx])
+        if log and (step + 1) % 100 == 0:
+            log(f"  cnn train step {step + 1}/{steps} "
+                f"loss={float(loss_fn(params, xtr_j[idx], ytr_j[idx])):.4f}")
+    acc = accuracy(params, jnp.asarray(xte), jnp.asarray(yte))
+    if log:
+        log(f"  cnn test accuracy: {acc:.4f}")
+    return params, (xte, yte), acc
+
+
+def export(outdir, log=print):
+    """Train and dump weights + test set + metadata for the Rust engine."""
+    import json
+    import os
+
+    from .tensorio import save_tensor
+
+    os.makedirs(outdir, exist_ok=True)
+    params, (xte, yte), acc = train(log=log)
+    names = []
+    for k, v in params.items():
+        save_tensor(os.path.join(outdir, f"{k}.cstn"), np.asarray(v))
+        names.append(k)
+    save_tensor(os.path.join(outdir, "test_images.cstn"), xte)
+    save_tensor(os.path.join(outdir, "test_labels.cstn"), yte)
+    meta = {
+        "tensors": names,
+        "test_accuracy": acc,
+        "img": IMG,
+        "num_classes": NUM_CLASSES,
+        "conv_specs": [[n, ci, co] for n, ci, co in CONV_SPECS],
+    }
+    with open(os.path.join(outdir, "cnn_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta

@@ -1,0 +1,19 @@
+# Layer-1 Pallas kernels for cuSpAMM-rs.
+#
+# All kernels are authored for the TPU memory model (VMEM tiles, MXU matmul)
+# but are lowered with interpret=True so the resulting HLO runs on any PJRT
+# backend, including the Rust CPU client on the request path.  See
+# DESIGN.md §4 (hardware adaptation) for the CUDA→TPU mapping.
+
+from .get_norm import get_norm, get_norm_mxu
+from .multiply import spamm_multiply
+from .tile_gemm import tile_gemm_batch
+from .tune import tune_tau
+
+__all__ = [
+    "get_norm",
+    "get_norm_mxu",
+    "spamm_multiply",
+    "tile_gemm_batch",
+    "tune_tau",
+]

@@ -1,0 +1,120 @@
+# Layer-1 Pallas: the paper's *get-norm* kernel (cuSpAMM §3.2).
+#
+# Computes the Frobenius norm of every LoNum×LoNum sub-matrix (tile) of the
+# input, producing the `normmap` array used by the multiplication kernel to
+# decide which tile products satisfy ‖A[i,k]‖·‖B[k,j]‖ ≥ τ.
+#
+# CUDA → TPU adaptation (DESIGN.md §4):
+#   * paper: one threadblock per tile, per-thread squares staged in shared
+#     memory, bank-conflict-free tree reduction.
+#   * here: one Pallas grid program per tile; the tile is a VMEM block
+#     (BlockSpec), the reduction is a single VPU 2-D reduce — there are no
+#     shared-memory banks to conflict on.
+#   * paper's tensor-core reduction (Eq. 3/4: D = 1·X, D' = D·1) maps to two
+#     MXU matmuls with bf16 inputs and f32 accumulation (`get_norm_mxu`).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _get_norm_kernel(a_ref, o_ref):
+    """One grid program: F-norm of one LoNum×LoNum tile via VPU reduce."""
+    t = a_ref[...].astype(jnp.float32)
+    o_ref[0, 0] = jnp.sqrt(jnp.sum(t * t))
+
+
+def _get_norm_mxu_kernel(a_ref, o_ref):
+    """Paper Eq. 3/4 ones-matmul reduction on the MXU.
+
+    The squares are formed in bf16 (mirroring the paper's fp16 tensor-core
+    inputs) and both matmuls accumulate in f32 (`preferred_element_type`),
+    which is exactly the tensor-core MMA contract the paper relies on.
+    """
+    x = a_ref[...].astype(jnp.bfloat16)
+    sq = (x * x).astype(jnp.bfloat16)
+    m = sq.shape[0]
+    ones = jnp.ones((m, m), dtype=jnp.bfloat16)
+    # Eq. 3: column sums into every row; Eq. 4: row sums of that — every
+    # element of d2 is the full tile reduction, we read [0, 0].
+    d1 = jax.lax.dot(ones, sq, preferred_element_type=jnp.float32)
+    d2 = jax.lax.dot(
+        d1.astype(jnp.bfloat16), ones, preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = jnp.sqrt(d2[0, 0])
+
+
+def _build(kernel, rows, cols, lonum, interpret):
+    if rows % lonum or cols % lonum:
+        raise ValueError(
+            f"matrix {rows}x{cols} not divisible by LoNum={lonum}; pad first"
+        )
+    bdim_r, bdim_c = rows // lonum, cols // lonum
+    return pl.pallas_call(
+        kernel,
+        grid=(bdim_r, bdim_c),
+        in_specs=[pl.BlockSpec((lonum, lonum), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bdim_r, bdim_c), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def _make_block_norm_kernel(rows, cols, lonum, mxu):
+    """Whole-matrix single-program variant for the CPU-PJRT export shape
+    (interpret-mode grid steps cost ~2 ms each; DESIGN.md §Perf).  Computes
+    every tile norm with one reshaped reduction.  The mxu flavour casts the
+    squares to bf16 and accumulates in f32 — same contract as Eq. 3/4 on
+    the MXU."""
+    br, bc = rows // lonum, cols // lonum
+
+    def kernel(a_ref, o_ref):
+        x = a_ref[...]
+        if mxu:
+            xb = x.astype(jnp.bfloat16)
+            sq = (xb * xb).astype(jnp.bfloat16)
+        else:
+            sq = x * x
+        t = sq.reshape(br, lonum, bc, lonum)
+        s = jnp.sum(t.astype(jnp.float32), axis=(1, 3), dtype=jnp.float32)
+        o_ref[...] = jnp.sqrt(s)
+
+    return kernel
+
+
+def _build_block(rows, cols, lonum, mxu, interpret):
+    if rows % lonum or cols % lonum:
+        raise ValueError(
+            f"matrix {rows}x{cols} not divisible by LoNum={lonum}; pad first"
+        )
+    br, bc = rows // lonum, cols // lonum
+    return pl.pallas_call(
+        _make_block_norm_kernel(rows, cols, lonum, mxu),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((rows, cols), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, bc), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((br, bc), jnp.float32),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lonum", "interpret", "block"))
+def get_norm(a, *, lonum=32, interpret=True, block=False):
+    """normmap[i, j] = ‖a[i·LoNum:(i+1)·LoNum, j·LoNum:(j+1)·LoNum]‖_F (f32).
+
+    block=False is the TPU-shaped per-tile grid kernel; block=True is the
+    single-program CPU-PJRT export shape (numerically identical).
+    """
+    if block:
+        return _build_block(a.shape[0], a.shape[1], lonum, False, interpret)(a)
+    return _build(_get_norm_kernel, a.shape[0], a.shape[1], lonum, interpret)(a)
+
+
+@functools.partial(jax.jit, static_argnames=("lonum", "interpret", "block"))
+def get_norm_mxu(a, *, lonum=32, interpret=True, block=False):
+    """Mixed-precision normmap using the paper's MMA ones-matmul reduction."""
+    if block:
+        return _build_block(a.shape[0], a.shape[1], lonum, True, interpret)(a)
+    return _build(_get_norm_mxu_kernel, a.shape[0], a.shape[1], lonum, interpret)(a)

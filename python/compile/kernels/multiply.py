@@ -1,0 +1,153 @@
+# Layer-1 Pallas: the paper's *multiplication* kernel (cuSpAMM §3.3, Alg. 2/3).
+#
+# Flat (non-recursive) SpAMM: for every output tile C[i,j], accumulate
+# A[i,k] @ B[k,j] over k, but only for k where the norm product passes the
+# threshold:  ‖A[i,k]‖_F · ‖B[k,j]‖_F ≥ τ   (the paper's `bitmap[k]`).
+#
+# CUDA → TPU adaptation (DESIGN.md §4):
+#   * paper: threadblock per C tile, bitmap + map_offset in shared memory,
+#     double-buffered tile loads, first/second half-block prefetch overlap.
+#   * here: grid (i, j, k) with k innermost; the tile loads are VMEM blocks
+#     scheduled by BlockSpec index maps (on a real TPU the Mosaic pipeliner
+#     performs the double buffering the paper hand-codes); the bitmap test
+#     becomes a `pl.when` predicate on the current k step.
+#   * Alg. 3 (tensor core): `precision="bf16"` casts the operands to bf16 and
+#     accumulates in f32 via `preferred_element_type` — the MXU analog of
+#     fp16 MMA fragments with an f32 accumulator fragment.
+#
+# NOTE ON WORK SKIPPING: under interpret=True on a CPU backend the masked
+# branch is still *scheduled* (select semantics), so this fused kernel is the
+# semantics/numerics vehicle.  The genuinely-skipping execution path is the
+# Rust coordinator + `tile_gemm_batch` (see DESIGN.md §2, row 3).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(bdim, precision):
+    def kernel(tau_ref, na_ref, nb_ref, a_ref, b_ref, o_ref, acc_ref):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # The paper's bitmap[k] test: norm product against τ.
+        norm_mul = na_ref[i, k] * nb_ref[k, j]
+
+        @pl.when(norm_mul >= tau_ref[0, 0])
+        def _accum():
+            if precision == "bf16":
+                a = a_ref[...].astype(jnp.bfloat16)
+                b = b_ref[...].astype(jnp.bfloat16)
+            else:
+                a = a_ref[...]
+                b = b_ref[...]
+            acc_ref[...] += jax.lax.dot(
+                a, b, preferred_element_type=jnp.float32
+            )
+
+        @pl.when(k == bdim - 1)
+        def _store():
+            o_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+def _make_block_kernel(bdim, lonum, precision):
+    """Single-program variant for the CPU-PJRT export shape (interpret-mode
+    grid steps cost ~2 ms each; DESIGN.md §Perf).
+
+    Computes every tile product with one batched contraction and applies
+    the bitmap as a mask on the k-sum.  On a real TPU the per-(i,j,k) grid
+    kernel above is the right shape — and there `pl.when` genuinely skips
+    the masked MXU work, which this dense-compute variant does not (the
+    *skipping* execution path on this testbed is the Rust coordinator +
+    tile_gemm batches).
+    """
+
+    def kernel(tau_ref, na_ref, nb_ref, a_ref, b_ref, o_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        if precision == "bf16":
+            a = a.astype(jnp.bfloat16)
+            b = b.astype(jnp.bfloat16)
+        a4 = a.reshape(bdim, lonum, bdim, lonum)  # (i, r, k, s)
+        b4 = b.reshape(bdim, lonum, bdim, lonum)  # (k, s, j, t)
+        # every tile product T[i,k,j,r,t] = A[i,k] @ B[k,j]
+        t = jnp.einsum(
+            "irks,ksjt->ikjrt", a4, b4, preferred_element_type=jnp.float32
+        )
+        mask = (
+            na_ref[...][:, :, None] * nb_ref[...][None, :, :]
+            >= tau_ref[0, 0]
+        ).astype(jnp.float32)
+        c4 = jnp.einsum("ikjrt,ikj->irjt", t, mask)
+        o_ref[...] = c4.reshape(bdim * lonum, bdim * lonum)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lonum", "precision", "interpret", "block")
+)
+def spamm_multiply(a, b, a_normmap, b_normmap, tau, *, lonum=32,
+                   precision="f32", interpret=True, block=False):
+    """Masked SpAMM product C = A ⊛_τ B for square inputs.
+
+    Args:
+      a, b: f32[N, N] with N divisible by `lonum`.
+      a_normmap, b_normmap: f32[BDIM, BDIM] tile F-norms (from get_norm).
+      tau: f32 scalar (traced) — the approximation threshold.
+      precision: "f32" (cublasSgemm analog) or "bf16" (tensor-core analog).
+    Returns:
+      f32[N, N].
+    """
+    n = a.shape[0]
+    if a.shape != b.shape or a.shape[0] != a.shape[1]:
+        raise ValueError(f"square same-shape inputs required, got {a.shape} {b.shape}")
+    if n % lonum:
+        raise ValueError(f"N={n} not divisible by LoNum={lonum}")
+    bdim = n // lonum
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+
+    if block:
+        return pl.pallas_call(
+            _make_block_kernel(bdim, lonum, precision),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                pl.BlockSpec((bdim, bdim), lambda i: (0, 0)),
+                pl.BlockSpec((bdim, bdim), lambda i: (0, 0)),
+                pl.BlockSpec((n, n), lambda i: (0, 0)),
+                pl.BlockSpec((n, n), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            interpret=interpret,
+        )(tau_arr, a_normmap, b_normmap, a, b)
+
+    grid = (bdim, bdim, bdim)
+    return pl.pallas_call(
+        _make_kernel(bdim, precision),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),          # tau
+            pl.BlockSpec((bdim, bdim), lambda i, j, k: (0, 0)),    # normmap A
+            pl.BlockSpec((bdim, bdim), lambda i, j, k: (0, 0)),    # normmap B
+            pl.BlockSpec((lonum, lonum), lambda i, j, k: (i, k)),  # A tile
+            pl.BlockSpec((lonum, lonum), lambda i, j, k: (k, j)),  # B tile
+        ],
+        out_specs=pl.BlockSpec((lonum, lonum), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        # f32 VMEM accumulator — the paper's per-block register/SMEM
+        # accumulator (and Alg. 3's f32 `ab_frag` accumulator fragment).
+        scratch_shapes=[pltpu.VMEM((lonum, lonum), jnp.float32)],
+        interpret=interpret,
+    )(tau_arr, a_normmap, b_normmap, a, b)

@@ -1,0 +1,90 @@
+# Pure-jnp correctness oracles for every Layer-1 kernel.
+#
+# Two independent SpAMM references:
+#   * `spamm_flat`   — the flat two-kernel reformulation (cuSpAMM §3.1)
+#   * `spamm_recursive` — the original quad-tree Algorithm 1 of
+#     Challacombe & Bock, recursion cut off at LoNum.
+# The paper *asserts* the two are equivalent; python/tests/test_equivalence.py
+# proves it on swept inputs.
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def tile_norms(a, lonum):
+    """normmap[i, j] = ‖tile(i, j)‖_F, computed by reshape, in f64 then f32."""
+    rows, cols = a.shape
+    assert rows % lonum == 0 and cols % lonum == 0, (a.shape, lonum)
+    br, bc = rows // lonum, cols // lonum
+    t = np.asarray(a, np.float64).reshape(br, lonum, bc, lonum)
+    sq = np.sum(t**2, axis=(1, 3))
+    return jnp.asarray(np.sqrt(sq), jnp.float32)
+
+
+def spamm_flat(a, b, tau, lonum, a_normmap=None, b_normmap=None):
+    """Flat SpAMM: mask tile products by the norm threshold, then multiply.
+
+    C[i, j] = Σ_k  A[i, k] @ B[k, j] · [ ‖A[i,k]‖·‖B[k,j]‖ ≥ τ ]
+    """
+    n = a.shape[0]
+    bdim = n // lonum
+    na = tile_norms(a, lonum) if a_normmap is None else a_normmap
+    nb = tile_norms(b, lonum) if b_normmap is None else b_normmap
+    at = jnp.asarray(a, jnp.float32).reshape(bdim, lonum, bdim, lonum).transpose(0, 2, 1, 3)
+    bt = jnp.asarray(b, jnp.float32).reshape(bdim, lonum, bdim, lonum).transpose(0, 2, 1, 3)
+    c = jnp.zeros((bdim, bdim, lonum, lonum), jnp.float32)
+    mask = (na[:, :, None] * nb[None, :, :]) >= tau  # [i, k, j]
+    # einsum with a mask on the k contraction per (i, j): materialize masked
+    # products tile-by-tile (oracle clarity over speed).
+    for i in range(bdim):
+        for j in range(bdim):
+            acc = jnp.zeros((lonum, lonum), jnp.float32)
+            for k in range(bdim):
+                acc = acc + jnp.where(mask[i, k, j], at[i, k] @ bt[k, j], 0.0)
+            c = c.at[i, j].set(acc)
+    return c.transpose(0, 2, 1, 3).reshape(n, n)
+
+
+def spamm_recursive(a, b, tau, lonum):
+    """Original SpAMM (Algorithm 1): quad-tree recursion, cut off at LoNum."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+
+    def rec(a_, b_):
+        n = a_.shape[0]
+        if n <= lonum:
+            return a_ @ b_
+        h = n // 2
+        aq = [[a_[:h, :h], a_[:h, h:]], [a_[h:, :h], a_[h:, h:]]]
+        bq = [[b_[:h, :h], b_[:h, h:]], [b_[h:, :h], b_[h:, h:]]]
+        c = np.zeros_like(a_)
+        cq = [[c[:h, :h], c[:h, h:]], [c[h:, :h], c[h:, h:]]]
+        for i in range(2):
+            for j in range(2):
+                acc = np.zeros((h, h), np.float32)
+                for k in range(2):
+                    if np.linalg.norm(aq[i][k]) * np.linalg.norm(bq[k][j]) >= tau:
+                        acc += rec(aq[i][k], bq[k][j])
+                cq[i][j][...] = acc
+        return c
+
+    return rec(a, b)
+
+
+def dense(a, b):
+    """Exact dense GEMM reference (f32 accumulate)."""
+    return jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+
+
+def tile_gemm_batch(a_tiles, b_tiles):
+    """Batched tile product oracle."""
+    return jnp.einsum(
+        "bij,bjk->bik",
+        jnp.asarray(a_tiles, jnp.float32),
+        jnp.asarray(b_tiles, jnp.float32),
+    )
+
+
+def valid_ratio(a_normmap, b_normmap, tau):
+    prod = np.asarray(a_normmap)[:, :, None] * np.asarray(b_normmap)[None, :, :]
+    return float(np.mean(prod >= tau))

@@ -1,0 +1,101 @@
+# Layer-1 Pallas: batched tile GEMM — the execution vehicle for the Rust
+# coordinator's compacted schedule.
+#
+# The paper compacts the bitmap into `map_offset` *inside* the multiplication
+# kernel so that valid tile products are visited contiguously (Fig. 3b).  On
+# our PJRT-CPU substrate a masked kernel cannot actually skip work, so the
+# compaction lives in the Rust coordinator (spamm::schedule), which gathers
+# the valid (A[i,k], B[k,j]) tile pairs into a dense batch and runs this
+# kernel — contiguity re-appears as the batch dimension.  Time is then
+# genuinely proportional to the number of valid products, which is the
+# algorithmic property the paper's Fig. 3(b) optimization protects.
+#
+# The bf16 variant is the Alg. 3 tensor-core analog: operands cast to bf16,
+# MXU dot with f32 accumulation.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(precision):
+    def kernel(a_ref, b_ref, o_ref):
+        a = a_ref[0]
+        b = b_ref[0]
+        if precision == "bf16":
+            a = a.astype(jnp.bfloat16)
+            b = b.astype(jnp.bfloat16)
+        o_ref[0] = jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+def _make_block_kernel(precision):
+    """Whole batch in one VMEM block, batched MXU dot inside the program.
+
+    Interpret-mode grid steps cost ~2 ms each on CPU-PJRT (measured; see
+    DESIGN.md §Perf), so the exported artifacts collapse the grid: one
+    program, one batched dot_general.  On a real TPU the per-tile grid
+    variant above is the right shape (3·L²·4 B per step in VMEM); both are
+    numerically identical and the tests pin that.
+    """
+
+    def kernel(a_ref, b_ref, o_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        if precision == "bf16":
+            a = a.astype(jnp.bfloat16)
+            b = b.astype(jnp.bfloat16)
+        o_ref[...] = jax.lax.dot_general(
+            a,
+            b,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("precision", "interpret", "block")
+)
+def tile_gemm_batch(a_tiles, b_tiles, *, precision="f32", interpret=True,
+                    block=False):
+    """(batch, L, L) @ (batch, L, L) → (batch, L, L), f32 in/out.
+
+    block=False: one grid program per batch element; each program holds one
+    A tile, one B tile and the product tile in VMEM (3·L²·4 bytes — L=128
+    is still only 192 KiB, comfortably inside a TPU core's ~16 MiB VMEM).
+    This is the TPU-shaped kernel.
+
+    block=True: single program over the whole batch — the CPU-PJRT export
+    shape (see _make_block_kernel).
+    """
+    batch, lonum, _ = a_tiles.shape
+    if a_tiles.shape != b_tiles.shape:
+        raise ValueError(f"shape mismatch {a_tiles.shape} vs {b_tiles.shape}")
+    if block:
+        return pl.pallas_call(
+            _make_block_kernel(precision),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((batch, lonum, lonum), lambda i: (0, 0, 0)),
+                pl.BlockSpec((batch, lonum, lonum), lambda i: (0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((batch, lonum, lonum), lambda i: (0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, lonum, lonum), jnp.float32),
+            interpret=interpret,
+        )(a_tiles, b_tiles)
+    return pl.pallas_call(
+        _make_kernel(precision),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, lonum, lonum), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lonum, lonum), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lonum, lonum), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, lonum, lonum), jnp.float32),
+        interpret=interpret,
+    )(a_tiles, b_tiles)

@@ -1,0 +1,66 @@
+# Layer-1/2: in-graph τ search for a target *valid ratio* (cuSpAMM §3.5.2).
+#
+# valid_ratio(τ) = (# tile products with ‖A[i,k]‖·‖B[k,j]‖ ≥ τ) / BDIM³.
+# Given a user target the paper searches τ by binary search over
+# [0, k·ave] where `ave` is the mean norm product, expanding k whenever the
+# upper bound cannot satisfy the demand.  This file implements the identical
+# procedure as a lowerable JAX graph (lax.while_loop) over precomputed
+# normmaps, so the Rust runtime can run it on-device; a host-side Rust twin
+# lives in rust/src/spamm/tuner.rs.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def valid_ratio(a_normmap, b_normmap, tau):
+    """Fraction of (i, k, j) tile products passing the τ test."""
+    # prod[i, k, j] = na[i, k] * nb[k, j]
+    prod = a_normmap[:, :, None] * b_normmap[None, :, :]
+    return jnp.mean((prod >= tau).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def tune_tau(a_normmap, b_normmap, target_ratio, *, iters=20):
+    """Expanding binary search for τ s.t. valid_ratio(τ) ≈ target_ratio.
+
+    Returns (tau, achieved_ratio).  Matches §3.5.2: initial upper bound is
+    `ave` (the mean norm product, k=1); while the bound cannot reach below
+    the target ratio, k ← k+1; then `iters` bisection steps.
+    """
+    prod = a_normmap[:, :, None] * b_normmap[None, :, :]
+    total = jnp.float32(prod.size)
+    ave = jnp.mean(prod)
+    target = jnp.asarray(target_ratio, jnp.float32)
+
+    def ratio_at(tau):
+        return jnp.sum((prod >= tau).astype(jnp.float32)) / total
+
+    # Expansion phase: grow the upper bound k·ave until the ratio there is
+    # at or below the target (i.e. the bracket contains the answer).
+    def exp_cond(state):
+        k, _ = state
+        return jnp.logical_and(ratio_at(k * ave) > target, k < 1024.0)
+
+    def exp_body(state):
+        k, _ = state
+        return (k + 1.0, ratio_at((k + 1.0) * ave))
+
+    k, _ = jax.lax.while_loop(exp_cond, exp_body, (jnp.float32(1.0), ratio_at(ave)))
+
+    # Bisection phase.
+    def bis_body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        r = ratio_at(mid)
+        # ratio decreases with τ: too many valid → raise lo to mid.
+        lo = jnp.where(r > target, mid, lo)
+        hi = jnp.where(r > target, hi, mid)
+        return (lo, hi)
+
+    lo, hi = jax.lax.fori_loop(
+        0, iters, bis_body, (jnp.float32(0.0), k * ave)
+    )
+    tau = 0.5 * (lo + hi)
+    return tau, ratio_at(tau)

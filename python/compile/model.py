@@ -1,0 +1,61 @@
+# Layer-2: exportable JAX compute graphs composing the Layer-1 kernels.
+#
+# Every public function here is a *variant template*: `aot.py` instantiates
+# it for concrete shapes/dtypes and lowers it to HLO text that the Rust
+# runtime loads (one compiled executable per variant).  Nothing in this file
+# runs on the request path.
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import get_norm, get_norm_mxu, spamm_multiply, tile_gemm_batch
+from .kernels.tune import tune_tau
+
+
+def getnorm_graph(a, *, lonum=32):
+    """normmap of a (rows×cols f32) matrix — the get-norm kernel (f32 path)."""
+    return (get_norm(a, lonum=lonum, block=True),)
+
+
+def getnorm_mxu_graph(a, *, lonum=32):
+    """Mixed-precision normmap via the MXU ones-matmul reduction (Eq. 3/4)."""
+    return (get_norm_mxu(a, lonum=lonum, block=True),)
+
+
+def tile_gemm_graph(a_tiles, b_tiles, *, precision="f32"):
+    """Batched tile products for the coordinator's compacted schedule."""
+    return (tile_gemm_batch(a_tiles, b_tiles, precision=precision, block=True),)
+
+
+def spamm_fused_graph(a, b, tau, *, lonum=32, precision="f32"):
+    """Whole SpAMM in one graph: get-norm (both inputs) + masked multiply.
+
+    Used for single-call execution of small problems and as the on-device
+    numerics oracle for the coordinator path.
+    """
+    if precision == "bf16":
+        na = get_norm_mxu(a, lonum=lonum, block=True)
+        nb = get_norm_mxu(b, lonum=lonum, block=True)
+    else:
+        na = get_norm(a, lonum=lonum, block=True)
+        nb = get_norm(b, lonum=lonum, block=True)
+    c = spamm_multiply(a, b, na, nb, tau, lonum=lonum, precision=precision, block=True)
+    return (c,)
+
+
+def dense_graph(a, b, *, precision="f32"):
+    """Dense GEMM baseline — the cuBLAS stand-in, same runtime, same dot.
+
+    The bf16 variant mirrors cublasHgemm-with-tensor-cores: operands cast to
+    bf16, f32 accumulation.
+    """
+    if precision == "bf16":
+        a = a.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
+    return (jax.lax.dot(a, b, preferred_element_type=jnp.float32),)
+
+
+def tune_graph(a_normmap, b_normmap, target_ratio, *, iters=20):
+    """valid-ratio → τ search (§3.5.2) over precomputed normmaps."""
+    tau, ratio = tune_tau(a_normmap, b_normmap, target_ratio, iters=iters)
+    return (tau, ratio)

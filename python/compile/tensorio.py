@@ -1,0 +1,43 @@
+# Minimal binary tensor interchange between the Python build path and the
+# Rust runtime (weights, fixtures, datasets).  Deliberately trivial:
+#
+#   magic   : 4 bytes  b"CSTN"
+#   version : u32 LE   (1)
+#   dtype   : u32 LE   (0 = f32, 1 = i32)
+#   ndim    : u32 LE
+#   dims    : ndim × u32 LE
+#   data    : row-major little-endian payload
+#
+# Rust twin: rust/src/matrix/tensorio.rs.
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CSTN"
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save_tensor(path, arr):
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _DTYPE_IDS:
+        arr = arr.astype(np.float32)
+    did = _DTYPE_IDS[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<III", 1, did, arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def load_tensor(path):
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, did, ndim = struct.unpack("<III", f.read(12))
+        if version != 1:
+            raise ValueError(f"{path}: unsupported version {version}")
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        data = np.frombuffer(f.read(), dtype=_DTYPES[did])
+        return data.reshape(dims).copy()

@@ -1,0 +1,26 @@
+import numpy as np
+import pytest
+
+
+def decay_matrix(n, kind="algebraic", c=0.1, lam=0.1, seed=0, noise=True):
+    """Synthesized decay matrices per cuSpAMM §4.1.
+
+    algebraic: |a_ij| ≤ c/(|i−j|^λ + 1)   (the paper's synthesized dataset)
+    exponential: |a_ij| ≤ c·λ^|i−j|        (the ergo-like dataset)
+    """
+    idx = np.abs(np.subtract.outer(np.arange(n), np.arange(n))).astype(np.float64)
+    if kind == "algebraic":
+        env = c / (idx**lam + 1.0)
+    elif kind == "exponential":
+        env = c * np.power(lam, idx)
+    else:
+        raise ValueError(kind)
+    if noise:
+        rng = np.random.default_rng(seed)
+        env = env * rng.uniform(-1.0, 1.0, (n, n))
+    return env.astype(np.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

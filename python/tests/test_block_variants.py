@@ -1,0 +1,77 @@
+# The exported artifacts use single-program ("block") kernel variants
+# because interpret-mode grid steps cost ~2 ms each on CPU-PJRT
+# (DESIGN.md §Perf).  These tests pin the contract: block ≡ grid variant
+# numerically (exactly for f32 paths, within bf16 tolerance for MXU paths).
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from python.compile.kernels import (
+    get_norm,
+    get_norm_mxu,
+    spamm_multiply,
+    tile_gemm_batch,
+)
+from python.compile.kernels import ref
+from .conftest import decay_matrix
+
+
+def test_get_norm_block_equals_grid(rng):
+    a = rng.standard_normal((128, 128)).astype(np.float32)
+    g = np.asarray(get_norm(a, lonum=32))
+    b = np.asarray(get_norm(a, lonum=32, block=True))
+    np.testing.assert_array_equal(g, b)
+
+
+def test_get_norm_mxu_block_close_to_exact():
+    a = decay_matrix(128, seed=31)
+    exact = np.asarray(ref.tile_norms(a, 32))
+    b = np.asarray(get_norm_mxu(a, lonum=32, block=True))
+    np.testing.assert_allclose(b, exact, rtol=2e-2, atol=1e-4)
+
+
+def test_multiply_block_equals_grid(rng):
+    a = decay_matrix(128, seed=32)
+    b = decay_matrix(128, seed=33)
+    na = get_norm(a, lonum=32)
+    nb = get_norm(b, lonum=32)
+    tau = float(np.median(np.asarray(na))) ** 2
+    cg = np.asarray(spamm_multiply(a, b, na, nb, tau, lonum=32))
+    cb = np.asarray(spamm_multiply(a, b, na, nb, tau, lonum=32, block=True))
+    np.testing.assert_array_equal(cg, cb)
+
+
+def test_tile_gemm_block_equals_grid(rng):
+    at = rng.standard_normal((9, 32, 32)).astype(np.float32)
+    bt = rng.standard_normal((9, 32, 32)).astype(np.float32)
+    g = np.asarray(tile_gemm_batch(at, bt))
+    b = np.asarray(tile_gemm_batch(at, bt, block=True))
+    np.testing.assert_array_equal(g, b)
+
+
+def test_tile_gemm_block_bf16_close(rng):
+    at = rng.standard_normal((4, 32, 32)).astype(np.float32)
+    bt = rng.standard_normal((4, 32, 32)).astype(np.float32)
+    want = np.asarray(ref.tile_gemm_batch(at, bt))
+    got = np.asarray(tile_gemm_batch(at, bt, precision="bf16", block=True))
+    assert np.max(np.abs(got - want) / (np.abs(want) + 1.0)) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bdim=st.integers(1, 3),
+    lonum=st.sampled_from([8, 16, 32]),
+    tau_scale=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multiply_block_property(bdim, lonum, tau_scale, seed):
+    rng = np.random.default_rng(seed)
+    n = bdim * lonum
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    na = get_norm(a, lonum=lonum, block=True)
+    nb = get_norm(b, lonum=lonum, block=True)
+    tau = float(np.mean(np.asarray(na)) ** 2) * tau_scale
+    got = np.asarray(spamm_multiply(a, b, na, nb, tau, lonum=lonum, block=True))
+    want = np.asarray(ref.spamm_flat(a, b, tau, lonum))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,90 @@
+# Case-study CNN: im2col conv correctness + dataset/training sanity +
+# tensorio round trip.
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from python.compile import cnn
+from python.compile.tensorio import save_tensor, load_tensor
+
+
+def test_im2col_matches_direct_conv(rng):
+    """conv-as-GEMM must equal a direct convolution."""
+    x = rng.standard_normal((2, 3, 8, 8)).astype(np.float32)
+    w = rng.standard_normal((5, 3 * 9)).astype(np.float32)
+    b = rng.standard_normal(5).astype(np.float32)
+    got = np.asarray(cnn.conv_gemm(jnp.asarray(w), jnp.asarray(b), jnp.asarray(x)))
+    # direct conv via jax.lax
+    w4 = w.reshape(5, 3, 3, 3)
+    want = jax.lax.conv_general_dilated(
+        x, np.transpose(w4, (0, 1, 2, 3)), (1, 1), ((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) + b[None, :, None, None]
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shape():
+    x = jnp.zeros((4, 8, 16, 16))
+    cols = cnn.im2col(x)
+    assert cols.shape == (8 * 9, 4 * 16 * 16)
+
+
+def test_maxpool2():
+    x = jnp.arange(16.0).reshape(1, 1, 4, 4)
+    out = np.asarray(cnn.maxpool2(x))
+    np.testing.assert_array_equal(out[0, 0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+def test_dataset_deterministic_and_balanced():
+    (xtr, ytr), (xte, yte) = cnn.make_dataset(seed=7, n_train=500, n_test=100)
+    (xtr2, _), _ = cnn.make_dataset(seed=7, n_train=500, n_test=100)
+    np.testing.assert_array_equal(xtr, xtr2)
+    assert xtr.shape == (500, 1, 16, 16)
+    assert set(np.unique(ytr)) <= set(range(10))
+    assert len(np.unique(yte)) == 10
+
+
+def test_forward_shapes():
+    params = cnn.init_params()
+    x = jnp.zeros((3, 1, 16, 16))
+    logits = cnn.forward(params, x)
+    assert logits.shape == (3, 10)
+
+
+def test_short_training_learns():
+    """A tiny training run must beat chance decisively (dataset is easy)."""
+    params, (xte, yte), acc = cnn.train(steps=120, batch=64, log=None)
+    assert acc > 0.6
+
+
+def test_relu_feature_sparsity():
+    """The paper's premise: ReLU feature maps are ≥~50% zeros, making the
+    im2col patch matrices near-sparse."""
+    params, (xte, yte), _ = cnn.train(steps=120, batch=64, log=None)
+    x = jnp.asarray(xte[:50])
+    h = jax.nn.relu(cnn.conv_gemm(params["conv1_w"], params["conv1_b"], x))
+    h = cnn.maxpool2(h)
+    patches = np.asarray(cnn.im2col(h))
+    zero_frac = float(np.mean(patches == 0.0))
+    assert zero_frac > 0.3, zero_frac
+
+
+def test_tensorio_roundtrip(tmp_path, rng):
+    for arr in [
+        rng.standard_normal((3, 4, 5)).astype(np.float32),
+        np.arange(7, dtype=np.int32),
+        np.float32(3.5).reshape(()),
+    ]:
+        p = tmp_path / "t.cstn"
+        save_tensor(p, arr)
+        back = load_tensor(p)
+        assert back.dtype == arr.dtype
+        np.testing.assert_array_equal(back, arr)
+
+
+def test_tensorio_bad_magic(tmp_path):
+    p = tmp_path / "bad.cstn"
+    p.write_bytes(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        load_tensor(p)

@@ -1,0 +1,102 @@
+# Cross-layer consistency checks: the artifact grid must match what the
+# CNN/model actually produce at runtime (these would catch shape drift
+# between cnn.py and aot.py, or a manifest that lies about its kernels).
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from python.compile import aot, cnn, model
+
+
+def test_cnn_gemm_shapes_match_architecture():
+    """aot.CNN_GEMMS must equal the im2col GEMM shapes cnn.py produces at
+    the export batch size (100 test images)."""
+    batch = 100
+    specs = {name: (cin, cout) for name, cin, cout in cnn.CONV_SPECS}
+    # spatial dims per layer: conv1 on 16², conv2 on 8², conv3 on 4²
+    spatial = {"conv1": 16, "conv2": 8, "conv3": 4}
+    declared = {layer: (m, k, n) for layer, m, k, n in aot.CNN_GEMMS}
+    assert set(declared) == set(specs)
+    for layer, (cin, cout) in specs.items():
+        s = spatial[layer]
+        want = (cout, cin * 9, batch * s * s)
+        assert declared[layer] == want, f"{layer}: {declared[layer]} != {want}"
+
+
+def test_cnn_gemm_shapes_match_real_forward():
+    """Run one real forward batch and verify the im2col operands have the
+    declared artifact shapes."""
+    (xtr, _), _ = cnn.make_dataset(seed=7, n_train=100, n_test=10)
+    x = jnp.asarray(xtr[:100])
+    params = cnn.init_params()
+    declared = {layer: (m, k, n) for layer, m, k, n in aot.CNN_GEMMS}
+
+    cols1 = cnn.im2col(x)
+    assert (params["conv1_w"].shape[0], *cols1.shape) == declared["conv1"]
+    h = jax.nn.relu(cnn.conv_gemm(params["conv1_w"], params["conv1_b"], x))
+    h = cnn.maxpool2(h)
+    cols2 = cnn.im2col(h)
+    assert (params["conv2_w"].shape[0], *cols2.shape) == declared["conv2"]
+    h = jax.nn.relu(cnn.conv_gemm(params["conv2_w"], params["conv2_b"], h))
+    h = cnn.maxpool2(h)
+    cols3 = cnn.im2col(h)
+    assert (params["conv3_w"].shape[0], *cols3.shape) == declared["conv3"]
+
+
+def test_artifact_names_unique_and_resolvable():
+    specs = aot.build_specs()
+    names = [s["name"] for s in specs]
+    assert len(names) == len(set(names))
+    kinds = {s["kind"] for s in specs}
+    assert kinds == {"getnorm", "tilegemm", "dense", "spamm_fused", "tune"}
+    # every tilegemm lonum has at least two batch buckets (greedy packing
+    # in the Rust executor relies on a bucket ladder)
+    for lonum in aot.LONUMS:
+        buckets = [
+            s["params"]["batch"]
+            for s in specs
+            if s["kind"] == "tilegemm"
+            and s["params"]["lonum"] == lonum
+            and s["params"]["precision"] == "f32"
+        ]
+        assert len(buckets) >= 2, f"lonum {lonum} needs a bucket ladder"
+
+
+def test_tune_bdims_cover_square_grid():
+    """Every (N, LoNum) combination the benches use must have a tuner."""
+    specs = aot.build_specs()
+    tune_bdims = {
+        s["params"]["bdim"] for s in specs if s["kind"] == "tune"
+    }
+    for n in aot.SQUARE_SIZES:
+        for lonum in aot.LONUMS:
+            if n % lonum == 0:
+                assert n // lonum in tune_bdims, (n, lonum)
+
+
+def test_dense_baseline_covers_getnorm_grid():
+    """Speedup tables need a dense artifact for every getnorm size."""
+    specs = aot.build_specs()
+    dense_ns = {
+        s["params"]["n"]
+        for s in specs
+        if s["kind"] == "dense" and "layer" not in s["params"]
+    }
+    getnorm_ns = {s["params"]["n"] for s in specs if s["kind"] == "getnorm"}
+    assert getnorm_ns <= dense_ns
+
+
+def test_fused_spamm_equivalent_to_two_kernel_path():
+    """The fused artifact graph must equal getnorm+multiply composed (the
+    §3.1 'equivalent re-design' claim at the graph level)."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((128, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 128)).astype(np.float32)
+    (na,) = model.getnorm_graph(a)
+    (nb,) = model.getnorm_graph(b)
+    tau = jnp.float32(float(np.median(np.asarray(na))) ** 2)
+    from python.compile.kernels import spamm_multiply
+
+    two_kernel = spamm_multiply(a, b, na, nb, tau, lonum=32, block=True)
+    (fused,) = model.spamm_fused_graph(a, b, tau, lonum=32)
+    np.testing.assert_array_equal(np.asarray(two_kernel), np.asarray(fused))

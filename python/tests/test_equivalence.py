@@ -1,0 +1,75 @@
+# The paper's §3.1 claim: the flat two-kernel cuSpAMM re-design is
+# equivalent to the original recursive SpAMM (Algorithm 1) "because they
+# both perform calculation on the sub-matrices that satisfy the F-norm
+# threshold".  Strictly, the recursion also prunes *interior* nodes whose
+# aggregated norms fall under τ, so the flat algorithm performs a superset
+# of the recursive algorithm's work; equivalence is exact at the leaf level
+# when no interior pruning triggers.  These tests pin down both facts.
+import numpy as np
+import pytest
+
+from python.compile.kernels import get_norm, spamm_multiply
+from python.compile.kernels import ref
+from .conftest import decay_matrix
+
+
+def flat(a, b, tau, lonum):
+    na = get_norm(a, lonum=lonum)
+    nb = get_norm(b, lonum=lonum)
+    return np.asarray(spamm_multiply(a, b, na, nb, tau, lonum=lonum))
+
+
+def test_flat_equals_recursive_tau_zero():
+    a = decay_matrix(128, seed=11)
+    b = decay_matrix(128, seed=12)
+    np.testing.assert_allclose(
+        flat(a, b, 0.0, 32), ref.spamm_recursive(a, b, 0.0, 32),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("lonum", [16, 32])
+def test_flat_equals_recursive_moderate_tau(lonum):
+    """For thresholds below every interior norm product the recursion never
+    prunes an interior node, and flat ≡ recursive exactly."""
+    a = decay_matrix(128, seed=13)
+    b = decay_matrix(128, seed=14)
+    # Interior norms only grow as tiles aggregate, so a τ chosen at leaf
+    # scale (< min leaf product that matters) keeps interior tests passing.
+    na = np.asarray(ref.tile_norms(a, lonum))
+    nb = np.asarray(ref.tile_norms(b, lonum))
+    tau = float(np.percentile(na[:, :, None] * nb[None, :, :], 30))
+    f = flat(a, b, tau, lonum)
+    r = ref.spamm_recursive(a, b, tau, lonum)
+    np.testing.assert_allclose(f, r, rtol=1e-4, atol=1e-5)
+
+
+def test_flat_error_at_most_recursive_error():
+    """Flat skips a subset of what recursion skips (interior pruning skips
+    more) → ‖E_flat‖ ≤ ‖E_rec‖ for the same τ."""
+    a = decay_matrix(256, kind="exponential", c=1.0, lam=0.45, noise=True, seed=15)
+    b = decay_matrix(256, kind="exponential", c=1.0, lam=0.45, noise=True, seed=16)
+    exact = a.astype(np.float64) @ b.astype(np.float64)
+    for tau in [1e-3, 1e-2, 1e-1]:
+        ef = np.linalg.norm(exact - flat(a, b, tau, 32))
+        er = np.linalg.norm(exact - ref.spamm_recursive(a, b, tau, 32))
+        assert ef <= er + 1e-3, (tau, ef, er)
+
+
+def test_error_bound_artemov():
+    """Artemov's bound for exponential-decay inputs:
+    ‖E‖_F = O(N^{1/2} · τ^{p/2}), p < 2 — i.e. error vanishes with τ and the
+    τ-scaling exponent stays below 1 in log-log slope."""
+    a = decay_matrix(256, kind="exponential", c=1.0, lam=0.5, noise=True, seed=17)
+    b = decay_matrix(256, kind="exponential", c=1.0, lam=0.5, noise=True, seed=18)
+    exact = a.astype(np.float64) @ b.astype(np.float64)
+    taus = np.array([1e-4, 1e-3, 1e-2])
+    errs = np.array(
+        [max(np.linalg.norm(exact - flat(a, b, t, 32)), 1e-12) for t in taus]
+    )
+    assert np.all(np.diff(errs) >= 0)  # monotone
+    # log-log slope bounded by p/2 < 1 on the growing section
+    grow = errs > 1e-9
+    if grow.sum() >= 2:
+        slopes = np.diff(np.log(errs[grow])) / np.diff(np.log(taus[grow]))
+        assert np.all(slopes < 1.5)  # p/2 < 1 with sampling slack

@@ -1,0 +1,77 @@
+# get-norm kernel vs pure-jnp/numpy oracle.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from python.compile.kernels import get_norm, get_norm_mxu
+from python.compile.kernels import ref
+from .conftest import decay_matrix
+
+
+@pytest.mark.parametrize("n,lonum", [(32, 32), (64, 32), (128, 32), (128, 64), (256, 32)])
+def test_get_norm_matches_ref(n, lonum, rng):
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    got = np.asarray(get_norm(a, lonum=lonum))
+    want = np.asarray(ref.tile_norms(a, lonum))
+    assert got.shape == (n // lonum, n // lonum)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_get_norm_rectangular(rng):
+    a = rng.standard_normal((64, 160)).astype(np.float32)
+    got = np.asarray(get_norm(a, lonum=32))
+    want = np.asarray(ref.tile_norms(a, 32))
+    assert got.shape == (2, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_get_norm_zero_matrix():
+    a = np.zeros((64, 64), np.float32)
+    assert np.all(np.asarray(get_norm(a, lonum=32)) == 0.0)
+
+
+def test_get_norm_single_tile_is_fnorm(rng):
+    a = rng.standard_normal((32, 32)).astype(np.float32)
+    got = float(np.asarray(get_norm(a, lonum=32))[0, 0])
+    assert got == pytest.approx(float(np.linalg.norm(a)), rel=1e-5)
+
+
+def test_get_norm_indivisible_raises(rng):
+    a = rng.standard_normal((48, 48)).astype(np.float32)
+    with pytest.raises(ValueError):
+        get_norm(a, lonum=32)
+
+
+def test_get_norm_mxu_close_to_exact(rng):
+    """bf16 ones-matmul reduction (Eq. 3/4): ~3 decimal digits, like fp16 MMA."""
+    a = decay_matrix(128, seed=3)
+    exact = np.asarray(ref.tile_norms(a, 32))
+    got = np.asarray(get_norm_mxu(a, lonum=32))
+    np.testing.assert_allclose(got, exact, rtol=2e-2, atol=1e-4)
+
+
+def test_get_norm_decay_structure():
+    """Decay matrices: diagonal tiles must dominate off-diagonal tiles."""
+    a = decay_matrix(256, kind="exponential", c=1.0, lam=0.5, noise=False)
+    nm = np.asarray(get_norm(a, lonum=32))
+    diag = np.diag(nm)
+    off = nm[0, -1]
+    assert np.all(diag > off)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bdim=st.integers(1, 4),
+    lonum=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_get_norm_property(bdim, lonum, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((bdim * lonum, bdim * lonum)).astype(np.float32)
+    got = np.asarray(get_norm(a, lonum=lonum))
+    want = np.asarray(ref.tile_norms(a, lonum))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # Norm invariant: sum of squared tile norms == squared full F-norm.
+    np.testing.assert_allclose(
+        np.sum(got**2), np.linalg.norm(a) ** 2, rtol=1e-3
+    )

@@ -1,0 +1,101 @@
+# multiplication kernel (masked SpAMM) vs oracle.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from python.compile.kernels import get_norm, spamm_multiply
+from python.compile.kernels import ref
+from .conftest import decay_matrix
+
+
+def run_spamm(a, b, tau, lonum, precision="f32"):
+    na = get_norm(a, lonum=lonum)
+    nb = get_norm(b, lonum=lonum)
+    return np.asarray(
+        spamm_multiply(a, b, na, nb, tau, lonum=lonum, precision=precision)
+    )
+
+
+@pytest.mark.parametrize("n,lonum", [(64, 32), (128, 32), (128, 64), (256, 32)])
+def test_multiply_matches_ref(n, lonum, rng):
+    a = decay_matrix(n, seed=1)
+    b = decay_matrix(n, seed=2)
+    nm = np.asarray(ref.tile_norms(a, lonum))
+    tau = float(np.median(nm)) ** 2
+    got = run_spamm(a, b, tau, lonum)
+    want = np.asarray(ref.spamm_flat(a, b, tau, lonum))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_multiply_tau_zero_is_dense(rng):
+    """τ=0: every tile product valid → exact dense GEMM."""
+    a = rng.standard_normal((128, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 128)).astype(np.float32)
+    got = run_spamm(a, b, 0.0, 32)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_multiply_tau_huge_is_zero(rng):
+    """τ→∞: nothing passes → C = 0."""
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    got = run_spamm(a, b, 1e30, 32)
+    assert np.all(got == 0.0)
+
+
+def test_multiply_error_monotone_in_tau():
+    """‖E(τ)‖_F is non-decreasing in τ (more skipping, more error)."""
+    a = decay_matrix(128, seed=5)
+    b = decay_matrix(128, seed=6)
+    exact = np.asarray(a @ b, np.float32)
+    errs = []
+    for tau in [0.0, 1e-4, 1e-3, 1e-2, 1e-1]:
+        c = run_spamm(a, b, tau, 32)
+        errs.append(float(np.linalg.norm(exact - c)))
+    assert errs == sorted(errs)
+    assert errs[0] < 1e-3  # τ=0 exact
+
+
+def test_multiply_bf16_close():
+    """Tensor-core analog: bf16 operands, f32 accumulate → ~2 digit accuracy."""
+    a = decay_matrix(128, seed=7)
+    b = decay_matrix(128, seed=8)
+    f32_res = run_spamm(a, b, 0.0, 32, precision="f32")
+    bf16_res = run_spamm(a, b, 0.0, 32, precision="bf16")
+    denom = np.linalg.norm(f32_res) + 1e-30
+    assert np.linalg.norm(f32_res - bf16_res) / denom < 2e-2
+
+
+def test_multiply_skips_decayed_offdiagonal():
+    """On a strongly decayed matrix a moderate τ must leave C ≈ exact near
+    the diagonal while skipping far-off-diagonal work entirely."""
+    a = decay_matrix(256, kind="exponential", c=1.0, lam=0.3, noise=False)
+    b = a.copy()
+    nm = np.asarray(ref.tile_norms(a, 32))
+    tau = float(nm[0, -1] * nm.max()) * 10.0  # above corner-tile products
+    got = run_spamm(a, b, tau, 32)
+    exact = a @ b
+    # diagonal block almost exact
+    np.testing.assert_allclose(got[:32, :32], exact[:32, :32], rtol=1e-2)
+    # global error small relative to result
+    assert np.linalg.norm(exact - got) / np.linalg.norm(exact) < 1e-2
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bdim=st.integers(1, 4),
+    tau_scale=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multiply_property(bdim, tau_scale, seed):
+    """Kernel ≡ flat oracle for arbitrary shapes and thresholds."""
+    lonum = 16
+    n = bdim * lonum
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    nm = np.asarray(ref.tile_norms(a, lonum))
+    tau = float(np.mean(nm) ** 2) * tau_scale
+    got = run_spamm(a, b, tau, lonum)
+    want = np.asarray(ref.spamm_flat(a, b, tau, lonum))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

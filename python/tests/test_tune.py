@@ -1,0 +1,68 @@
+# valid-ratio → τ search (§3.5.2) vs oracle; paper claims <1% ratio error
+# within 20 iterations on its synthesized matrices.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from python.compile.kernels import get_norm
+from python.compile.kernels.tune import tune_tau, valid_ratio
+from python.compile.kernels import ref
+from .conftest import decay_matrix
+
+
+def normmaps(n=256, lonum=32, seeds=(1, 2)):
+    a = decay_matrix(n, seed=seeds[0])
+    b = decay_matrix(n, seed=seeds[1])
+    return get_norm(a, lonum=lonum), get_norm(b, lonum=lonum)
+
+
+@pytest.mark.parametrize("target", [0.30, 0.25, 0.20, 0.15, 0.10, 0.05])
+def test_tune_hits_paper_ratios(target):
+    """The six valid-ratio targets of Table 1, <1% absolute ratio error."""
+    na, nb = normmaps()
+    tau, ratio = tune_tau(na, nb, target, iters=20)
+    assert abs(float(ratio) - target) < 0.01
+    # achieved ratio must agree with the independent oracle
+    assert ref.valid_ratio(np.asarray(na), np.asarray(nb), float(tau)) == (
+        pytest.approx(float(ratio), abs=1e-6)
+    )
+
+
+def test_tune_ratio_one():
+    """target=1 → τ must fall at/below the smallest norm product."""
+    na, nb = normmaps()
+    tau, ratio = tune_tau(na, nb, 1.0, iters=30)
+    assert float(ratio) == pytest.approx(1.0, abs=0.01)
+
+
+def test_valid_ratio_monotone():
+    na, nb = normmaps()
+    taus = np.linspace(0, float(np.asarray(na).max()) ** 2, 10)
+    ratios = [float(valid_ratio(na, nb, t)) for t in taus]
+    assert all(r1 >= r2 for r1, r2 in zip(ratios, ratios[1:]))
+    assert ratios[0] == 1.0
+
+
+def test_tune_expansion_phase():
+    """A target so small that τ must exceed the mean product forces the
+    §3.5.2 upper-bound expansion (k > 1) to engage."""
+    na, nb = normmaps(n=512)
+    tau, ratio = tune_tau(na, nb, 0.01, iters=30)
+    prod = np.asarray(na)[:, :, None] * np.asarray(nb)[None, :, :]
+    assert float(tau) > float(prod.mean())  # needed expansion past ave
+    assert abs(float(ratio) - 0.01) < 0.01
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    target=st.floats(0.02, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tune_property(target, seed):
+    rng = np.random.default_rng(seed)
+    na = np.abs(rng.standard_normal((8, 8))).astype(np.float32)
+    nb = np.abs(rng.standard_normal((8, 8))).astype(np.float32)
+    tau, ratio = tune_tau(na, nb, target, iters=25)
+    # Discrete product set (512 values) → quantization ~1/512 plus search
+    # tolerance; paper's own bound is 1%.
+    assert abs(float(ratio) - target) < 0.02

@@ -1,0 +1,151 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   A. tile size LoNum (32 vs 128) — tile-GEMM throughput + end-to-end
+//!   B. batch bucket size — per-call overhead amortization
+//!   C. load balance policy (§3.5.1) — rowblock vs strided imbalance
+//!   D. normmap location — host vs on-device get-norm
+//!   E. precision — f32 vs bf16 tile path
+
+use std::time::Instant;
+
+use cuspamm::bench_harness::{find_bundle, fmt_secs, Table};
+use cuspamm::config::{Balance, SpammConfig};
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::runtime::Runtime;
+use cuspamm::spamm::balance::Assignment;
+use cuspamm::spamm::normmap::normmap;
+use cuspamm::spamm::schedule::Schedule;
+use cuspamm::spamm::SpammEngine;
+
+fn time_reps<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let bundle = find_bundle();
+    let rt = Runtime::new(&bundle).expect("runtime");
+
+    // --- A+B: tile-GEMM throughput per (LoNum, bucket) -------------------
+    let mut t_ab = Table::new(
+        "Ablation A/B — tile-GEMM throughput per LoNum and batch bucket",
+        &["LoNum", "bucket", "ms/call", "us/product", "GFLOPS"],
+    );
+    for (l, buckets) in [(32usize, vec![64usize, 256, 1024]), (128, vec![16, 64, 256])] {
+        for cap in buckets {
+            let a = Matrix::randn(cap * l, l, 1).into_vec();
+            let b = Matrix::randn(cap * l, l, 2).into_vec();
+            rt.tile_gemm(&a, &b, cap, l, "f32").unwrap(); // warm/compile
+            let per = time_reps(3, || {
+                rt.tile_gemm(&a, &b, cap, l, "f32").unwrap();
+            });
+            t_ab.row(vec![
+                l.to_string(),
+                cap.to_string(),
+                format!("{:.2}", per * 1e3),
+                format!("{:.1}", per / cap as f64 * 1e6),
+                format!(
+                    "{:.1}",
+                    2.0 * cap as f64 * (l * l * l) as f64 / per / 1e9
+                ),
+            ]);
+        }
+    }
+    t_ab.emit("ablation_tile_throughput");
+
+    // --- C: load balance (§3.5.1) ----------------------------------------
+    let mut t_c = Table::new(
+        "Ablation C — load-balance policy on a decay schedule (N=1024, l=128)",
+        &["devices", "rowblock imbalance", "strided:4 imbalance"],
+    );
+    let a = Matrix::decay_exponential(1024, 1.0, 0.55, 3);
+    let na = normmap(&PaddedMatrix::new(&a, 128));
+    let tuned = cuspamm::spamm::tuner::tune_tau(
+        &na,
+        &na,
+        0.15,
+        cuspamm::spamm::tuner::TuneParams::default(),
+    )
+    .unwrap();
+    let sched = Schedule::build(&na, &na, tuned.tau).unwrap();
+    for devices in [2usize, 4, 8] {
+        let rb = Assignment::build(&sched, devices, Balance::RowBlock).imbalance(&sched);
+        let st = Assignment::build(&sched, devices, Balance::Strided(4)).imbalance(&sched);
+        t_c.row(vec![
+            devices.to_string(),
+            format!("{rb:.3}"),
+            format!("{st:.3}"),
+        ]);
+    }
+    t_c.emit("ablation_balance");
+
+    // --- D: normmap host vs device ---------------------------------------
+    let mut t_d = Table::new(
+        "Ablation D — get-norm location (N=1024, l=128)",
+        &["path", "time"],
+    );
+    let m = Matrix::decay_algebraic(1024, 0.1, 0.1, 5);
+    let p = PaddedMatrix::new(&m, 128);
+    let host = time_reps(5, || {
+        normmap(&p);
+    });
+    rt.getnorm(&m, 128, false).unwrap(); // compile
+    let dev = time_reps(5, || {
+        rt.getnorm(&m, 128, false).unwrap();
+    });
+    t_d.row(vec!["host (rust)".into(), fmt_secs(host)]);
+    t_d.row(vec!["device (get-norm artifact)".into(), fmt_secs(dev)]);
+    t_d.emit("ablation_normmap");
+
+    // --- E: precision ------------------------------------------------------
+    let mut t_e = Table::new(
+        "Ablation E — precision of the tile path (N=1024, l=128, ratio 10%)",
+        &["precision", "multiply time", "‖E vs f32‖_F"],
+    );
+    let a = Matrix::decay_algebraic(1024, 0.1, 0.1, 7);
+    let b = Matrix::decay_algebraic(1024, 0.1, 0.1, 8);
+    let mut cfg = SpammConfig::default();
+    cfg.lonum = 128;
+    let engine_f32 = SpammEngine::new(&bundle, cfg.clone()).unwrap();
+    cfg.precision = cuspamm::config::Precision::Bf16;
+    let engine_bf16 = SpammEngine::new(&bundle, cfg).unwrap();
+    let tuned = engine_f32.tune_tau(&a, &b, 0.10).unwrap();
+    let c32 = engine_f32.multiply(&a, &b, tuned.tau).unwrap();
+    let f32_t = time_reps(3, || {
+        engine_f32.multiply(&a, &b, tuned.tau).unwrap();
+    });
+    let cbf = engine_bf16.multiply(&a, &b, tuned.tau).unwrap();
+    let bf16_t = time_reps(3, || {
+        engine_bf16.multiply(&a, &b, tuned.tau).unwrap();
+    });
+    t_e.row(vec!["f32".into(), fmt_secs(f32_t), "0".into()]);
+    t_e.row(vec![
+        "bf16".into(),
+        fmt_secs(bf16_t),
+        format!("{:.3e}", c32.error_fnorm(&cbf).unwrap()),
+    ]);
+    t_e.emit("ablation_precision");
+
+    // --- F: Algorithm-4 rows vs SUMMA 2-D grid (comm volume model) --------
+    use cuspamm::coordinator::summa::{comm_model_grid, comm_model_rows, grid_shape};
+    let mut t_f = Table::new(
+        "Ablation F — modeled per-run communication: row partition vs 2-D grid (N=1024)",
+        &["devices", "grid", "rows total MB", "grid total MB", "saving"],
+    );
+    for devices in [2usize, 4, 8, 16] {
+        let (pr, pc) = grid_shape(devices);
+        let rows = comm_model_rows(1024, devices);
+        let grid = comm_model_grid(1024, pr, pc);
+        t_f.row(vec![
+            devices.to_string(),
+            format!("{pr}x{pc}"),
+            format!("{:.1}", rows.total_bytes as f64 / 1e6),
+            format!("{:.1}", grid.total_bytes as f64 / 1e6),
+            format!("{:.2}x", rows.total_bytes as f64 / grid.total_bytes as f64),
+        ]);
+    }
+    t_f.emit("ablation_summa_comm");
+}

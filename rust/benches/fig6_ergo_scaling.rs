@@ -1,0 +1,61 @@
+//! Figure 6 reproduction: ergo case study speedup over dense while
+//! sweeping τ and scaling 1→8 devices, for each of the four matrices.
+//!
+//! Expected shape: speedup grows with τ (more skipping) and with device
+//! count (modeled column — see the Fig. 5 bench header for why wall-clock
+//! cannot scale on a shared-core testbed).
+
+use cuspamm::bench_harness::{find_bundle, fmt_speedup, Table};
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::ergo::{ergo_matrix, ERGO_SPECS};
+
+fn main() {
+    let bundle = find_bundle();
+    let lonum = 128usize;
+    let n: usize = if std::env::var("CUSPAMM_BENCH_FULL").is_ok() {
+        2048
+    } else {
+        1024
+    };
+    let taus: [f32; 3] = [1e-6, 1e-4, 1e-2];
+    let device_counts = [1usize, 2, 4, 8];
+
+    let mut table = Table::new(
+        "Figure 6 — ergo speedup vs dense (modeled), scaling devices",
+        &["no.", "τ", "valid%", "1 dev", "2 dev", "4 dev", "8 dev"],
+    );
+
+    for (no, _, _) in ERGO_SPECS {
+        let a = ergo_matrix(no, n, 42);
+        for &tau in &taus {
+            let mut row = vec![no.to_string(), format!("{tau:.0e}")];
+            let mut valid_pct = String::new();
+            let mut cells = Vec::new();
+            for &devices in &device_counts {
+                let mut cfg = SpammConfig::default();
+                cfg.lonum = lonum;
+                cfg.devices = devices;
+                cfg.sequential_devices = true;
+                let coord = Coordinator::new(&bundle, cfg).expect("coordinator");
+                coord.multiply(&a, &a, tau).expect("warm");
+                let rep = coord.multiply(&a, &a, tau).expect("spamm");
+                let dense = coord.dense(&a, &a).expect("dense");
+                if devices == 1 {
+                    valid_pct = format!("{:.1}", rep.valid_ratio * 100.0);
+                }
+                let modeled = rep
+                    .device_busy
+                    .iter()
+                    .cloned()
+                    .fold(0.0f64, f64::max)
+                    .max(1e-12);
+                cells.push(fmt_speedup(dense.wall_secs / modeled));
+            }
+            row.push(valid_pct);
+            row.extend(cells);
+            table.row(row);
+        }
+    }
+    table.emit("fig6_ergo_scaling");
+}

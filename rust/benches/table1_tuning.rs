@@ -1,0 +1,69 @@
+//! Table 1 reproduction: τ found by the §3.5.2 search for each
+//! (valid-ratio, N) cell on synthesized algebraic-decay matrices
+//! (a_ij = 0.1/(|i−j|^0.1 + 1)), ≤20 tuner iterations, <1% ratio error.
+//!
+//! Absolute τ values differ from the paper's (different random draws and
+//! testbed sizes); the *shape* that must hold: τ decreases with N at fixed
+//! ratio, increases as the ratio target falls, and every cell is reached
+//! within the iteration/error budget.
+
+use cuspamm::bench_harness::{find_bundle, Table};
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::spamm::normmap::normmap;
+use cuspamm::spamm::tuner::{tune_tau, TuneParams};
+
+fn main() {
+    let bundle = find_bundle();
+    let lonum = 128usize;
+    let sizes: Vec<usize> = bundle
+        .dense_sizes()
+        .into_iter()
+        .filter(|n| n % lonum == 0)
+        .collect();
+    let ratios = [0.30, 0.25, 0.20, 0.15, 0.10, 0.05];
+
+    let mut headers = vec!["valid ratio \\ N".to_string()];
+    headers.extend(sizes.iter().map(|n| n.to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table 1 — τ per (valid ratio, N), algebraic decay 0.1/(|i−j|^0.1+1)",
+        &hdr_refs,
+    );
+    let mut err_table = Table::new(
+        "Table 1b — achieved ratio error (paper bound: <1%) and iterations",
+        &hdr_refs,
+    );
+
+    // Precompute normmaps once per size.
+    let normmaps: Vec<_> = sizes
+        .iter()
+        .map(|&n| {
+            let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+            let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+            (
+                normmap(&PaddedMatrix::new(&a, lonum)),
+                normmap(&PaddedMatrix::new(&b, lonum)),
+            )
+        })
+        .collect();
+
+    for &ratio in &ratios {
+        let mut row = vec![format!("≈{:.0}%", ratio * 100.0)];
+        let mut erow = vec![format!("≈{:.0}%", ratio * 100.0)];
+        for (na, nb) in &normmaps {
+            let r = tune_tau(na, nb, ratio, TuneParams { max_iters: 20, tolerance: 0.0 })
+                .expect("tune");
+            row.push(format!("{:.6}", r.tau));
+            erow.push(format!(
+                "{:+.2}% ({} it)",
+                (r.achieved_ratio - ratio) * 100.0,
+                r.iters
+            ));
+        }
+        table.row(row);
+        err_table.row(erow);
+    }
+    table.emit("table1_tau");
+    err_table.emit("table1_error");
+}

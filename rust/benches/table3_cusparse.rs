@@ -1,0 +1,126 @@
+//! Table 3 reproduction: SpAMM vs the CSR SpGEMM baseline (cuSPARSE
+//! stand-in) at matched error levels.
+//!
+//! Protocol (paper §4.2.2): truncate the decay matrix at TRUN to produce
+//! a CSR operand at a given nz-ratio; record the truncated product's error
+//! ‖E‖_F; pick τ so SpAMM reaches the same error level; compare SpGEMM
+//! time against SpAMM on 1/2/4/8 devices.  Format-conversion time is
+//! excluded (as the paper excludes it).
+//!
+//! Expected shape: SpAMM ≫ SpGEMM at high nz ratios, the gap narrowing as
+//! the matrix gets truly sparse.
+
+use std::time::Instant;
+
+use cuspamm::bench_harness::{find_bundle, fmt_speedup, Table};
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::Matrix;
+use cuspamm::sparse::spgemm::spgemm;
+use cuspamm::sparse::CsrMatrix;
+
+/// Find τ whose SpAMM error best matches `target_err` (bisection on the
+/// monotone error-vs-τ curve, using the host reference for search).
+fn match_tau(a: &Matrix, b: &Matrix, exact: &Matrix, target_err: f64, lonum: usize) -> f32 {
+    let mut lo = 0.0f32;
+    let mut hi = {
+        // upper bound: τ big enough to zero everything
+        let na = cuspamm::spamm::normmap::normmap(
+            &cuspamm::matrix::tiling::PaddedMatrix::new(a, lonum),
+        );
+        let max = na.data().iter().cloned().fold(0.0f32, f32::max);
+        max * max * 4.0
+    };
+    for _ in 0..24 {
+        let mid = 0.5 * (lo + hi);
+        let c = cuspamm::spamm::reference::spamm_flat_host(a, b, mid, lonum).unwrap();
+        let err = exact.error_fnorm(&c).unwrap();
+        if err < target_err {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+fn main() {
+    let bundle = find_bundle();
+    let lonum = 128usize;
+    let sizes = [(1usize, 256usize), (2, 1024)]; // paper: 1024 and 8192
+    // TRUN thresholds chosen to hit the paper's nz-ratio ladder
+    // (~50% / ~25% / ~10%).  Entries are env(d)·U(−1,1) with
+    // env(d) = 0.1/(d^0.1+1) ∈ [~0.033, 0.05], so keeping a fraction p
+    // needs t ≈ (1−p)·env — thresholds sit in the 0.02–0.04 band.
+    let truns = [0.019f32, 0.028, 0.0345];
+
+    let mut table = Table::new(
+        "Table 3 — SpAMM vs CSR SpGEMM at matched error",
+        &[
+            "no.", "nz ratio", "valid ratio", "‖E‖_F csr", "‖E‖_F spamm",
+            "speedup (1/2/4/8 dev)",
+        ],
+    );
+
+    for &(no, n) in &sizes {
+        let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+        let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+        let exact = a.matmul(&b).unwrap();
+
+        for &trun in &truns {
+            // cuSPARSE side: truncate → CSR → SpGEMM (timed).
+            let mut at = a.clone();
+            let mut bt = b.clone();
+            at.truncate(trun);
+            bt.truncate(trun);
+            let ca = CsrMatrix::from_dense(&at, 0.0);
+            let cb = CsrMatrix::from_dense(&bt, 0.0);
+            let nz = ca.nz_ratio();
+            spgemm(&ca, &cb).unwrap(); // warm
+            let t0 = Instant::now();
+            let csr_prod = spgemm(&ca, &cb).unwrap();
+            let csr_secs = t0.elapsed().as_secs_f64();
+            let csr_err = exact.error_fnorm(&csr_prod.to_dense()).unwrap();
+
+            // SpAMM side: τ matched to the same error level.
+            let tau = match_tau(&a, &b, &exact, csr_err, lonum);
+            let mut speedups = Vec::new();
+            let mut spamm_err = 0.0;
+            let mut ratio = 0.0;
+            for devices in [1usize, 2, 4, 8] {
+                let mut cfg = SpammConfig::default();
+                cfg.lonum = lonum;
+                cfg.devices = devices;
+                cfg.sequential_devices = true;
+                let coord = Coordinator::new(&bundle, cfg).unwrap();
+                coord.multiply(&a, &b, tau).unwrap(); // warm
+                let rep = coord.multiply(&a, &b, tau).unwrap();
+                if devices == 1 {
+                    spamm_err = rep.c.error_fnorm(&exact).unwrap();
+                    ratio = rep.valid_ratio;
+                }
+                // modeled device time (see fig5 bench for rationale)
+                let spamm_secs = rep
+                    .device_busy
+                    .iter()
+                    .cloned()
+                    .fold(0.0f64, f64::max)
+                    .max(1e-12);
+                speedups.push(fmt_speedup(csr_secs / spamm_secs));
+            }
+            table.row(vec![
+                no.to_string(),
+                format!("{:.2}%", nz * 100.0),
+                format!("{:.2}%", ratio * 100.0),
+                format!("{csr_err:.1}"),
+                format!("{spamm_err:.1}"),
+                speedups.join("/"),
+            ]);
+        }
+    }
+    table.emit("table3_cusparse");
+    println!(
+        "(speedups use modeled per-device time; SpGEMM runs single-threaded \
+         like single-GPU cusparseScsrgemm; conversion time excluded per §4.1)"
+    );
+}

@@ -1,0 +1,152 @@
+//! Table 5 reproduction: the VGG13 case study — substitute a conv layer's
+//! im2col GEMM with SpAMM, sweep τ, and report valid ratio, end-task
+//! accuracy loss, and the layer GEMM's speedup on 1/2/4 devices.
+//!
+//! Expected shape: accuracy loss ≈ 0 over a wide τ range (CNNs are
+//! insensitive to GEMM approximation) while the conv GEMM accelerates;
+//! losses only appear at aggressive ratios.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use cuspamm::bench_harness::{find_bundle, fmt_speedup, Table};
+use cuspamm::cnn::{Cnn, GemmMode};
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::im2col::{im2col, maxpool2, relu};
+use cuspamm::matrix::Matrix;
+use cuspamm::spamm::SpammEngine;
+
+fn main() {
+    let bundle = find_bundle();
+    let meta = bundle.cnn.clone().expect("cnn export in bundle");
+    let cnn = Cnn::load(&meta).expect("cnn load");
+    let lonum = 32usize; // CNN GEMMs are small; MXU-128 padding would dominate
+    let mut cfg = SpammConfig::default();
+    cfg.lonum = lonum;
+    let engine = SpammEngine::new(&bundle, cfg).expect("engine");
+    let limit = if std::env::var("CUSPAMM_BENCH_FULL").is_ok() {
+        500
+    } else {
+        200
+    };
+
+    let mut table = Table::new(
+        "Table 5 — CNN case study: accuracy vs speedup per conv layer",
+        &[
+            "layer", "valid ratio", "acc loss", "τ",
+            "GEMM speedup (1/2/4 dev)",
+        ],
+    );
+
+    let no_modes: BTreeMap<String, GemmMode> = BTreeMap::new();
+    let baseline = cnn
+        .accuracy(&no_modes, Some(&engine), 100, Some(limit))
+        .expect("baseline accuracy");
+    println!("baseline accuracy over {limit} images: {:.2}%", baseline * 100.0);
+
+    for layer in ["conv2", "conv3"] {
+        // Build the layer's actual GEMM operands from real activations
+        // (first test batch), for the timing column.
+        let (x0, _) = cnn.test_batch(0, 100);
+        let mut h = x0;
+        {
+            // replicate forward up to the target layer with host convs
+            let w1 = &cnn_layer_weights(&cnn, "conv1");
+            let cols = im2col(&h);
+            let out = w1.matmul(&cols).unwrap();
+            let mut t = cuspamm::matrix::im2col::gemm_out_to_nchw(&out, h.n, h.h, h.w);
+            relu(&mut t);
+            h = maxpool2(&t);
+        }
+        if layer == "conv3" {
+            let w2 = &cnn_layer_weights(&cnn, "conv2");
+            let cols = im2col(&h);
+            let out = w2.matmul(&cols).unwrap();
+            let mut t = cuspamm::matrix::im2col::gemm_out_to_nchw(&out, h.n, h.h, h.w);
+            relu(&mut t);
+            h = maxpool2(&t);
+        }
+        let w = cnn_layer_weights(&cnn, layer);
+        let patches = im2col(&h);
+
+        // The paper's Table 5 is driven by *valid ratio* targets (§3.5.2:
+        // DNN users tune the ratio, not τ) — derive τ per target from the
+        // layer's real normmaps via the tuner.
+        let ratio_targets = [0.95f64, 0.80, 0.60, 0.40, 0.20, 0.10];
+        for &target in &ratio_targets {
+            let tau = {
+                let mut tcfg = SpammConfig::default();
+                tcfg.lonum = lonum;
+                let coord = Coordinator::new(&bundle, tcfg).unwrap();
+                coord.tune_tau(&w, &patches, target).unwrap().tau
+            };
+            // accuracy with this layer approximated
+            let mut modes = BTreeMap::new();
+            modes.insert(layer.to_string(), GemmMode::Spamm { tau });
+            let acc = cnn
+                .accuracy(&modes, Some(&engine), 100, Some(limit))
+                .expect("approx accuracy");
+
+            // layer GEMM speedup, 1/2/4 devices (modeled; see fig5 bench)
+            let mut cells = Vec::new();
+            let mut ratio_pct = String::new();
+            for devices in [1usize, 2, 4] {
+                let mut dcfg = SpammConfig::default();
+                dcfg.lonum = lonum;
+                dcfg.devices = devices;
+                dcfg.sequential_devices = true;
+                let coord = Coordinator::new(&bundle, dcfg).unwrap();
+                coord.multiply(&w, &patches, tau).unwrap(); // warm
+                let rep = coord.multiply(&w, &patches, tau).unwrap();
+                if devices == 1 {
+                    ratio_pct = format!("{:.2}%", rep.valid_ratio * 100.0);
+                }
+                // dense layer GEMM on the runtime (rect artifact exists at
+                // batch 100 shapes; fall back to host matmul timing).
+                let dense_secs = time_dense(&engine, &w, &patches);
+                let spamm_secs = rep
+                    .device_busy
+                    .iter()
+                    .cloned()
+                    .fold(0.0f64, f64::max)
+                    .max(1e-12);
+                cells.push(fmt_speedup(dense_secs / spamm_secs));
+            }
+            table.row(vec![
+                layer.to_string(),
+                ratio_pct,
+                format!("{:+.2}%", (acc - baseline) * 100.0),
+                format!("{tau:.3}"),
+                cells.join("/"),
+            ]);
+        }
+    }
+    table.emit("table5_cnn");
+}
+
+fn cnn_layer_weights(cnn: &Cnn, layer: &str) -> Matrix {
+    // The Cnn struct keeps weights private; rebuild via its forward API is
+    // overkill — load from the export directly.
+    let t = cuspamm::matrix::tensorio::load_tensor(
+        &cnn.meta.dir.join(format!("{layer}_w.cstn")),
+    )
+    .expect("weights");
+    let (dims, data) = t.as_f32().expect("f32 weights");
+    Matrix::from_vec(dims[0], dims[1], data.to_vec()).unwrap()
+}
+
+fn time_dense(engine: &SpammEngine, w: &Matrix, patches: &Matrix) -> f64 {
+    // Prefer the dense rect artifact; otherwise host matmul.
+    let runtime = engine.runtime();
+    if runtime.dense(w, patches, "f32").is_ok() {
+        runtime.dense(w, patches, "f32").unwrap();
+        let t0 = Instant::now();
+        runtime.dense(w, patches, "f32").unwrap();
+        t0.elapsed().as_secs_f64()
+    } else {
+        let t0 = Instant::now();
+        w.matmul(patches).unwrap();
+        t0.elapsed().as_secs_f64()
+    }
+}

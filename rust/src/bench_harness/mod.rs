@@ -1,0 +1,219 @@
+//! Benchmark harness substrate (criterion is not in the offline crate
+//! set): warmup + repeated timing, summary statistics, and the markdown /
+//! CSV table renderers the paper-table benches use.
+
+use std::time::Instant;
+
+use crate::runtime::ArtifactBundle;
+use crate::util::stats::Summary;
+
+/// Locate the artifact bundle from a bench/test binary regardless of CWD
+/// (workspace root vs package dir); honors CUSPAMM_ARTIFACTS.
+pub fn find_bundle() -> ArtifactBundle {
+    let candidates = [
+        std::env::var("CUSPAMM_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        "../artifacts".to_string(),
+    ];
+    for c in candidates.iter().filter(|c| !c.is_empty()) {
+        if std::path::Path::new(c).join("manifest.json").exists() {
+            return ArtifactBundle::load(c).expect("manifest parse");
+        }
+    }
+    panic!("artifact bundle not found — run `make artifacts` first");
+}
+
+/// Timing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        // Each measured op here is macroscopic (ms–s), so few reps suffice.
+        Policy { warmup: 1, reps: 3 }
+    }
+}
+
+impl Policy {
+    /// Honors CUSPAMM_BENCH_REPS / CUSPAMM_BENCH_WARMUP for quick CI runs.
+    pub fn from_env() -> Policy {
+        let mut p = Policy::default();
+        if let Ok(v) = std::env::var("CUSPAMM_BENCH_REPS") {
+            if let Ok(n) = v.parse() {
+                p.reps = n;
+            }
+        }
+        if let Ok(v) = std::env::var("CUSPAMM_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                p.warmup = n;
+            }
+        }
+        p
+    }
+}
+
+/// Time `f` under the policy; returns per-rep seconds.
+pub fn time_fn<F: FnMut()>(policy: Policy, mut f: F) -> Summary {
+    for _ in 0..policy.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(policy.reps.max(1));
+    for _ in 0..policy.reps.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::from(&samples)
+}
+
+/// A rendered results table (markdown + CSV).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let render = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:w$} |", c, w = widths[i]));
+            }
+            line
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&render(&self.headers));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist markdown+CSV under bench_results/.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.to_markdown());
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{slug}.md")), self.to_markdown());
+            let _ = std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv());
+        }
+    }
+}
+
+/// Format seconds for tables (μs/ms/s autoscale).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Format a speedup ratio like the paper's tables ("13.4").
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_runs_and_reports() {
+        let mut count = 0usize;
+        let s = time_fn(Policy { warmup: 2, reps: 5 }, || {
+            count += 1;
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | x |"));
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,x\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert_eq!(t.to_csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(0.5e-4), "50.0us");
+        assert_eq!(fmt_secs(0.5), "500.00ms");
+        assert_eq!(fmt_secs(2.0), "2.000s");
+        assert_eq!(fmt_speedup(13.44), "13.4");
+    }
+}

@@ -1,0 +1,241 @@
+//! Tiny declarative CLI argument parser substrate (clap is not in the
+//! offline crate set).  Supports `--flag`, `--key value`, `--key=value`,
+//! subcommands and positional arguments, with generated `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative command spec: options + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Spec {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = &o.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, kind, o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (not including argv[0] / subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positionals = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Config(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| {
+                        Error::Config(format!("unknown option --{key}\n\n{}", self.usage()))
+                    })?;
+                let val = if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::Config(format!("--{key} takes no value")));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?
+                };
+                values.insert(key, val);
+            } else {
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for o in &self.opts {
+            if !values.contains_key(o.name) {
+                if let Some(d) = &o.default {
+                    values.insert(o.name.to_string(), d.clone());
+                } else if !o.is_flag {
+                    return Err(Error::Config(format!(
+                        "missing required --{}\n\n{}",
+                        o.name,
+                        self.usage()
+                    )));
+                }
+            }
+        }
+        Ok(Args {
+            values,
+            positionals,
+        })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_default()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.values.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{}'", self.get(key))))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key}: expected number, got '{}'", self.get(key))))
+    }
+
+    /// Comma-separated usize list, e.g. `--devices 1,2,4,8`.
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("--{key}: bad list item '{s}'")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("test", "a test command")
+            .opt("n", "1024", "matrix size")
+            .req("ratio", "valid ratio")
+            .flag("verbose", "chatty")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&args(&["--ratio", "0.1"])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 1024);
+        assert_eq!(a.f64("ratio").unwrap(), 0.1);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(spec().parse(&args(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse(&args(&["--ratio=0.25", "--n=64", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.usize("n").unwrap(), 64);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(spec().parse(&args(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = spec().parse(&args(&["pos1", "--ratio", "0.1", "pos2"])).unwrap();
+        assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let s = Spec::new("t", "").opt("devices", "1,2,4", "device counts");
+        let a = s.parse(&args(&[])).unwrap();
+        assert_eq!(a.usize_list("devices").unwrap(), vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Rust inference engine for the case-study CNN (the VGG13 analog of
+//! §4.3.2).  Loads the build-time-trained weights + frozen test set
+//! (python/compile/cnn.py exports), runs im2col-GEMM convolutions, and
+//! lets any conv layer's GEMM be computed exactly (dense artifact) or
+//! approximately (SpAMM engine) — which is precisely the paper's Table 5
+//! experiment: sweep τ / valid-ratio per layer and watch end-task accuracy.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::matrix::im2col::{gemm_out_to_nchw, im2col, maxpool2, relu, Tensor4};
+use crate::matrix::tensorio::load_tensor;
+use crate::matrix::Matrix;
+use crate::runtime::artifact::CnnMeta;
+use crate::spamm::SpammEngine;
+
+/// How a conv layer's GEMM is executed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GemmMode {
+    /// Host matmul (tiny layers / baseline-independent reference).
+    Host,
+    /// Dense XLA artifact (the cuBLAS stand-in).
+    DenseArtifact,
+    /// SpAMM with the given τ.
+    Spamm { tau: f32 },
+}
+
+/// The loaded model.
+pub struct Cnn {
+    pub meta: CnnMeta,
+    /// conv weights: name → (C_out, C_in·9) matrix.
+    conv_w: BTreeMap<String, Matrix>,
+    conv_b: BTreeMap<String, Vec<f32>>,
+    fc_w: Matrix,
+    fc_b: Vec<f32>,
+    pub test_images: Tensor4,
+    pub test_labels: Vec<i32>,
+}
+
+impl Cnn {
+    /// Load weights + test data exported under `<artifacts>/cnn/`.
+    pub fn load(meta: &CnnMeta) -> Result<Cnn> {
+        let dir = &meta.dir;
+        let mut conv_w = BTreeMap::new();
+        let mut conv_b = BTreeMap::new();
+        for (name, cin, cout) in &meta.conv_specs {
+            let (dims, data) = load_tensor(&dir.join(format!("{name}_w.cstn")))?
+                .as_f32()
+                .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+            if dims != [*cout, cin * 9] {
+                return Err(Error::Artifact(format!(
+                    "{name}_w: dims {dims:?}, want [{cout}, {}]",
+                    cin * 9
+                )));
+            }
+            conv_w.insert(name.clone(), Matrix::from_vec(dims[0], dims[1], data)?);
+            let (_, bias) = load_tensor(&dir.join(format!("{name}_b.cstn")))?
+                .as_f32()
+                .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+            conv_b.insert(name.clone(), bias);
+        }
+        let (fdims, fdata) = load_tensor(&dir.join("fc_w.cstn"))?
+            .as_f32()
+            .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+        let fc_w = Matrix::from_vec(fdims[0], fdims[1], fdata)?;
+        let (_, fc_b) = load_tensor(&dir.join("fc_b.cstn"))?
+            .as_f32()
+            .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+
+        let (idims, idata) = load_tensor(&dir.join("test_images.cstn"))?
+            .as_f32()
+            .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+        let test_images = Tensor4::from_vec(idims[0], idims[1], idims[2], idims[3], idata)?;
+        let (_, labels) = load_tensor(&dir.join("test_labels.cstn"))?
+            .as_i32()
+            .map(|(d, v)| (d.to_vec(), v.to_vec()))?;
+
+        Ok(Cnn {
+            meta: meta.clone(),
+            conv_w,
+            conv_b,
+            fc_w,
+            fc_b,
+            test_images,
+            test_labels: labels,
+        })
+    }
+
+    /// Conv layer names in forward order.
+    pub fn layers(&self) -> Vec<String> {
+        self.meta.conv_specs.iter().map(|(n, _, _)| n.clone()).collect()
+    }
+
+    /// One conv layer as GEMM: W(C_out × C_in·9) @ im2col(x) + bias.
+    fn conv_layer(
+        &self,
+        name: &str,
+        x: &Tensor4,
+        mode: GemmMode,
+        engine: Option<&SpammEngine>,
+    ) -> Result<Tensor4> {
+        let w = &self.conv_w[name];
+        let bias = &self.conv_b[name];
+        let cols = im2col(x);
+        let mut out = match mode {
+            GemmMode::Host => w.matmul(&cols)?,
+            GemmMode::DenseArtifact => {
+                let eng =
+                    engine.ok_or_else(|| Error::Config("dense mode needs engine".into()))?;
+                eng.runtime()
+                    .dense(w, &cols, eng.config().precision.as_str())?
+            }
+            GemmMode::Spamm { tau } => {
+                let eng =
+                    engine.ok_or_else(|| Error::Config("spamm mode needs engine".into()))?;
+                eng.multiply(w, &cols, tau)?
+            }
+        };
+        // bias add
+        let ocols = out.cols();
+        for r in 0..out.rows() {
+            let b = bias[r];
+            for v in &mut out.data_mut()[r * ocols..(r + 1) * ocols] {
+                *v += b;
+            }
+        }
+        Ok(gemm_out_to_nchw(&out, x.n, x.h, x.w))
+    }
+
+    /// Full forward pass; `modes[layer]` overrides the default (Host).
+    pub fn forward(
+        &self,
+        x: &Tensor4,
+        modes: &BTreeMap<String, GemmMode>,
+        engine: Option<&SpammEngine>,
+    ) -> Result<Matrix> {
+        let get = |n: &str| modes.get(n).copied().unwrap_or(GemmMode::Host);
+        let mut h = self.conv_layer("conv1", x, get("conv1"), engine)?;
+        relu(&mut h);
+        let mut h = maxpool2(&h);
+        h = self.conv_layer("conv2", &h, get("conv2"), engine)?;
+        relu(&mut h);
+        let mut h = maxpool2(&h);
+        h = self.conv_layer("conv3", &h, get("conv3"), engine)?;
+        relu(&mut h);
+        // flatten (N, C·H·W) — matches jnp reshape(N, -1) on NCHW.
+        let n = h.n;
+        let feat = h.c * h.h * h.w;
+        let mut flat = Matrix::zeros(n, feat);
+        for ni in 0..n {
+            for ci in 0..h.c {
+                for y in 0..h.h {
+                    for xx in 0..h.w {
+                        flat[(ni, ci * h.h * h.w + y * h.w + xx)] = h.at(ni, ci, y, xx);
+                    }
+                }
+            }
+        }
+        // fc: (N, feat) @ (feat, classes) + b
+        let mut logits = flat.matmul(&self.fc_w)?;
+        for r in 0..logits.rows() {
+            for (c, b) in self.fc_b.iter().enumerate() {
+                logits[(r, c)] += b;
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Slice `count` test images starting at `start` (clamped).
+    pub fn test_batch(&self, start: usize, count: usize) -> (Tensor4, &[i32]) {
+        let n = self.test_images.n;
+        let s = start.min(n);
+        let e = (start + count).min(n);
+        let per = self.test_images.c * self.test_images.h * self.test_images.w;
+        let data = self.test_images.data[s * per..e * per].to_vec();
+        (
+            Tensor4::from_vec(e - s, self.test_images.c, self.test_images.h, self.test_images.w, data)
+                .expect("slice shape"),
+            &self.test_labels[s..e],
+        )
+    }
+
+    /// Accuracy over the frozen test set (batched like the paper's
+    /// batch-size-100 evaluation).
+    pub fn accuracy(
+        &self,
+        modes: &BTreeMap<String, GemmMode>,
+        engine: Option<&SpammEngine>,
+        batch: usize,
+        limit: Option<usize>,
+    ) -> Result<f64> {
+        let total = limit.unwrap_or(self.test_images.n).min(self.test_images.n);
+        let mut hits = 0usize;
+        let mut seen = 0usize;
+        let mut start = 0;
+        while start < total {
+            let count = batch.min(total - start);
+            let (x, labels) = self.test_batch(start, count);
+            let logits = self.forward(&x, modes, engine)?;
+            for (r, &label) in labels.iter().enumerate() {
+                let row = logits.row(r);
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                if pred == label {
+                    hits += 1;
+                }
+            }
+            seen += count;
+            start += count;
+        }
+        Ok(hits as f64 / seen.max(1) as f64)
+    }
+}

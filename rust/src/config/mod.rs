@@ -1,0 +1,263 @@
+//! Configuration system: typed run configuration + a small `key = value`
+//! config-file format (TOML-subset: sections, strings, numbers, booleans,
+//! comments) with CLI overrides.  serde/toml are not in the offline crate
+//! set, so the parser is a substrate of this repo.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Precision of the multiplication pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 everywhere — the paper's `cublasSgemm`-class configuration.
+    F32,
+    /// bf16 operands, f32 accumulation — the tensor-core (MXU) analog.
+    Bf16,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "bf16" | "fp16" | "mixed" => Ok(Precision::Bf16),
+            _ => Err(Error::Config(format!("unknown precision '{s}'"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Load-balance strategy for assigning output tiles to workers (§3.5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Balance {
+    /// Contiguous row blocks (Algorithm 4 default).
+    RowBlock,
+    /// Strided assignment with stride `s`: worker w computes tiles
+    /// {w, w+s, w+2s, ...} in row-major tile order, spreading the
+    /// diagonal-heavy load of decay matrices evenly.
+    Strided(usize),
+}
+
+/// Full engine/coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct SpammConfig {
+    /// Tile edge (the paper's LoNum).  Must match the compiled artifacts.
+    pub lonum: usize,
+    /// Numeric configuration.
+    pub precision: Precision,
+    /// Number of simulated devices (paper: GPUs; here: worker threads each
+    /// owning a PJRT CPU client).
+    pub devices: usize,
+    /// Transfer/compute batches per device (the paper's P).
+    pub pipeline_batches: usize,
+    /// Max tile products per tile-GEMM executable call.
+    pub max_tile_batch: usize,
+    /// Load-balance strategy.
+    pub balance: Balance,
+    /// Compute normmaps on-device (get-norm artifact) or on the host.
+    pub device_normmap: bool,
+    /// Run device pipelines one after another instead of concurrently.
+    /// On a testbed whose simulated devices share physical cores the
+    /// concurrent mode inflates each device's busy clock with contention;
+    /// sequential mode yields clean per-device times whose max models the
+    /// wall-clock of truly independent devices (used by the Fig. 5/6
+    /// benches; see DESIGN.md §2).
+    pub sequential_devices: bool,
+}
+
+impl Default for SpammConfig {
+    fn default() -> Self {
+        SpammConfig {
+            lonum: 32,
+            precision: Precision::F32,
+            devices: 1,
+            pipeline_batches: 4,
+            max_tile_batch: 1024,
+            balance: Balance::Strided(4),
+            device_normmap: false,
+            sequential_devices: false,
+        }
+    }
+}
+
+impl SpammConfig {
+    /// Apply `key = value` pairs (from file or CLI) onto the config.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "lonum" => self.lonum = parse_num(key, value)?,
+            "precision" => self.precision = Precision::parse(value)?,
+            "devices" => self.devices = parse_num(key, value)?,
+            "pipeline_batches" => self.pipeline_batches = parse_num(key, value)?,
+            "max_tile_batch" => self.max_tile_batch = parse_num(key, value)?,
+            "device_normmap" => {
+                self.device_normmap = parse_bool(key, value)?;
+            }
+            "sequential_devices" => {
+                self.sequential_devices = parse_bool(key, value)?;
+            }
+            "balance" => {
+                self.balance = if value == "rowblock" {
+                    Balance::RowBlock
+                } else if let Some(s) = value.strip_prefix("strided:") {
+                    Balance::Strided(parse_num(key, s)?)
+                } else {
+                    return Err(Error::Config(format!(
+                        "balance must be 'rowblock' or 'strided:<s>', got '{value}'"
+                    )));
+                };
+            }
+            _ => return Err(Error::Config(format!("unknown config key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    /// Load a config file and fold it over the defaults.
+    pub fn from_file(path: &Path) -> Result<SpammConfig> {
+        let mut cfg = SpammConfig::default();
+        for (k, v) in parse_config_text(&std::fs::read_to_string(path)?)? {
+            cfg.apply(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.lonum == 0 || !self.lonum.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "lonum must be a power of two, got {}",
+                self.lonum
+            )));
+        }
+        if self.devices == 0 {
+            return Err(Error::Config("devices must be ≥ 1".into()));
+        }
+        if self.max_tile_batch == 0 {
+            return Err(Error::Config("max_tile_batch must be ≥ 1".into()));
+        }
+        if self.pipeline_batches == 0 {
+            return Err(Error::Config("pipeline_batches must be ≥ 1".into()));
+        }
+        if let Balance::Strided(0) = self.balance {
+            return Err(Error::Config("stride must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(key: &str, value: &str) -> Result<usize> {
+    value
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("{key}: expected integer, got '{value}'")))
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value.trim() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(Error::Config(format!("{key}: expected bool, got '{value}'"))),
+    }
+}
+
+/// Parse `key = value` lines; `#`/`;` comments; `[section]` headers prefix
+/// keys as `section.key`; quoted strings unquoted.
+pub fn parse_config_text(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let mut val = v.trim().to_string();
+        if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            val = val[1..val.len() - 1].to_string();
+        }
+        out.push((key, val));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SpammConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = SpammConfig::default();
+        c.apply("devices", "8").unwrap();
+        c.apply("precision", "bf16").unwrap();
+        c.apply("balance", "strided:2").unwrap();
+        assert_eq!(c.devices, 8);
+        assert_eq!(c.precision, Precision::Bf16);
+        assert_eq!(c.balance, Balance::Strided(2));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = SpammConfig::default();
+        assert!(c.apply("devices", "lots").is_err());
+        assert!(c.apply("precision", "f8").is_err());
+        assert!(c.apply("balance", "zigzag").is_err());
+        assert!(c.apply("nonsense", "1").is_err());
+    }
+
+    #[test]
+    fn invalid_configs_fail_validation() {
+        let mut c = SpammConfig::default();
+        c.lonum = 33;
+        assert!(c.validate().is_err());
+        let mut c = SpammConfig::default();
+        c.devices = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_text_parses() {
+        let text = r#"
+            # comment
+            lonum = 64
+            precision = "bf16"   ; trailing comment
+            [run]
+            devices = 4
+        "#;
+        let kv = parse_config_text(text).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("lonum".to_string(), "64".to_string()),
+                ("precision".to_string(), "bf16".to_string()),
+                ("run.devices".to_string(), "4".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn config_text_bad_line() {
+        assert!(parse_config_text("just words").is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Result/metric types for multi-device runs.
+
+use crate::matrix::Matrix;
+
+/// Everything a multi-device multiply reports.
+#[derive(Clone, Debug)]
+pub struct MultiDeviceReport {
+    /// The (cropped) product matrix.
+    pub c: Matrix,
+    /// Wall-clock seconds from the post-warmup barrier to the last join.
+    pub wall_secs: f64,
+    /// Modeled per-device busy seconds (time inside PJRT execute).
+    pub device_busy: Vec<f64>,
+    /// Per-device valid-product counts (the §3.5.1 load vector).
+    pub device_load: Vec<usize>,
+    pub valid_products: usize,
+    pub total_products: usize,
+    pub valid_ratio: f64,
+    /// max(load)/mean(load) over devices — 1.0 is perfect balance.
+    pub imbalance: f64,
+    /// Seconds each device spent compiling executables (excluded from
+    /// wall_secs via the warmup barrier).
+    pub compile_secs: Vec<f64>,
+}
+
+impl MultiDeviceReport {
+    /// Aggregate busy time across devices.
+    pub fn total_busy(&self) -> f64 {
+        self.device_busy.iter().sum()
+    }
+
+    /// Parallel efficiency: total busy / (devices · wall).
+    pub fn efficiency(&self) -> f64 {
+        if self.wall_secs <= 0.0 || self.device_busy.is_empty() {
+            return 0.0;
+        }
+        self.total_busy() / (self.device_busy.len() as f64 * self.wall_secs)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "wall {:.3}s, busy {:?}, valid {}/{} ({:.1}%), imbalance {:.2}, eff {:.0}%",
+            self.wall_secs,
+            self.device_busy
+                .iter()
+                .map(|b| (b * 1e3).round() / 1e3)
+                .collect::<Vec<_>>(),
+            self.valid_products,
+            self.total_products,
+            self.valid_ratio * 100.0,
+            self.imbalance,
+            self.efficiency() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> MultiDeviceReport {
+        MultiDeviceReport {
+            c: Matrix::zeros(1, 1),
+            wall_secs: 2.0,
+            device_busy: vec![1.0, 1.0],
+            device_load: vec![10, 10],
+            valid_products: 20,
+            total_products: 40,
+            valid_ratio: 0.5,
+            imbalance: 1.0,
+            compile_secs: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn efficiency_math() {
+        let r = report();
+        assert!((r.total_busy() - 2.0).abs() < 1e-12);
+        assert!((r.efficiency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_is_renderable() {
+        assert!(report().summary_line().contains("50.0%"));
+    }
+}

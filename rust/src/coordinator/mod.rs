@@ -1,0 +1,20 @@
+//! Multi-device coordinator — the paper's Algorithm 4 ("Scaling to
+//! multiple GPUs") over simulated devices.
+//!
+//! The calculation is partitioned over M devices by output tiles (row
+//! blocks by default, the §3.5.1 strided policy optionally), B is logically
+//! broadcast (shared read-only here), per-device work is processed in P
+//! pipeline batches, and each device is a worker thread owning its own
+//! PJRT client (the one-context-per-GPU model).  Stream-level sync maps to
+//! the per-batch joins, host-level sync to the final join.
+
+pub mod metrics;
+pub mod partition;
+pub mod pipeline;
+pub mod service;
+pub mod summa;
+
+pub use metrics::MultiDeviceReport;
+pub use pipeline::Coordinator;
+pub use service::{Approx, SpammService};
+pub use summa::SummaCoordinator;

@@ -1,0 +1,100 @@
+//! Work partitioning for Algorithm 4: each device owns a set of output
+//! tiles (via [`crate::spamm::balance::Assignment`]) and processes them in
+//! P pipeline batches.
+
+use crate::config::Balance;
+use crate::spamm::balance::Assignment;
+use crate::spamm::schedule::Schedule;
+
+/// Per-device work description.
+#[derive(Clone, Debug)]
+pub struct DeviceWork {
+    pub device: usize,
+    /// Output tiles owned by this device, grouped into P pipeline batches
+    /// (Algorithm 4's batched transfer/compute loop).
+    pub tile_batches: Vec<Vec<(usize, usize)>>,
+}
+
+impl DeviceWork {
+    pub fn tiles(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.tile_batches.iter().flatten().copied()
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tile_batches.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Partition the schedule's output tiles across `devices` workers using the
+/// balance policy, then split each device's list into `p` pipeline batches.
+pub fn partition(
+    sched: &Schedule,
+    devices: usize,
+    policy: Balance,
+    p: usize,
+) -> Vec<DeviceWork> {
+    let assignment = Assignment::build(sched, devices, policy);
+    (0..devices)
+        .map(|d| {
+            let tiles = assignment.tiles_of(sched, d);
+            let p_eff = p.clamp(1, tiles.len().max(1));
+            let per = tiles.len().div_ceil(p_eff).max(1);
+            let tile_batches = tiles.chunks(per).map(|c| c.to_vec()).collect();
+            DeviceWork {
+                device: d,
+                tile_batches,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::tiling::PaddedMatrix;
+    use crate::matrix::Matrix;
+    use crate::spamm::normmap::normmap;
+
+    fn sched(n: usize) -> Schedule {
+        let a = Matrix::decay_algebraic(n, 0.1, 0.1, 1);
+        let na = normmap(&PaddedMatrix::new(&a, 32));
+        Schedule::build(&na, &na, 0.0).unwrap()
+    }
+
+    #[test]
+    fn covers_all_tiles_once() {
+        let s = sched(256);
+        for devices in [1, 2, 3, 8] {
+            for p in [1, 4, 100] {
+                let work = partition(&s, devices, Balance::RowBlock, p);
+                assert_eq!(work.len(), devices);
+                let mut seen = std::collections::BTreeSet::new();
+                for w in &work {
+                    for t in w.tiles() {
+                        assert!(seen.insert(t), "tile {t:?} duplicated");
+                    }
+                }
+                assert_eq!(seen.len(), s.tile_rows * s.tile_cols);
+            }
+        }
+    }
+
+    #[test]
+    fn respects_p_batching() {
+        let s = sched(256); // 8x8 tiles
+        let work = partition(&s, 1, Balance::RowBlock, 4);
+        assert_eq!(work[0].tile_batches.len(), 4);
+        // P larger than the tile count degrades gracefully.
+        let work = partition(&s, 1, Balance::RowBlock, 1000);
+        assert!(work[0].tile_batches.len() <= 64);
+        assert_eq!(work[0].tile_count(), 64);
+    }
+
+    #[test]
+    fn more_devices_than_rows() {
+        let s = sched(64); // 2x2 tiles
+        let work = partition(&s, 8, Balance::RowBlock, 2);
+        let total: usize = work.iter().map(|w| w.tile_count()).sum();
+        assert_eq!(total, 4);
+    }
+}

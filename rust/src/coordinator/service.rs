@@ -1,0 +1,227 @@
+//! Request service: a queued front-end over the coordinator, turning the
+//! library into the deployable shape a framework user expects — submit a
+//! stream of SpAMM jobs (mixed sizes, τ or valid-ratio targets), get
+//! results plus latency/throughput statistics.
+//!
+//! Single-node by construction (like the paper's system); the queue gives
+//! backpressure and the stats mirror what a serving stack would export.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::SpammConfig;
+use crate::coordinator::Coordinator;
+use crate::error::Result;
+use crate::matrix::Matrix;
+use crate::runtime::ArtifactBundle;
+use crate::util::stats::Summary;
+
+/// How the approximation level of a request is specified.
+#[derive(Clone, Copy, Debug)]
+pub enum Approx {
+    /// Explicit threshold.
+    Tau(f32),
+    /// Valid-ratio target — the service runs the §3.5.2 tuner per request.
+    ValidRatio(f64),
+}
+
+/// One multiplication job.
+pub struct Request {
+    pub id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+    pub approx: Approx,
+}
+
+/// Completed job.
+pub struct Response {
+    pub id: u64,
+    pub c: Matrix,
+    pub tau: f32,
+    pub valid_ratio: f64,
+    /// Seconds from submit to completion (queueing + compute).
+    pub latency_secs: f64,
+    /// Seconds of pure compute (multiply wall).
+    pub compute_secs: f64,
+}
+
+/// Service statistics over a drained queue.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    pub completed: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub latency: Summary,
+}
+
+/// A FIFO service wrapping one coordinator.
+pub struct SpammService {
+    coord: Coordinator,
+    queue: VecDeque<(Request, Instant)>,
+    next_id: u64,
+}
+
+impl SpammService {
+    pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<SpammService> {
+        Ok(SpammService {
+            coord: Coordinator::new(bundle, cfg)?,
+            queue: VecDeque::new(),
+            next_id: 0,
+        })
+    }
+
+    /// Enqueue a job; returns its id.
+    pub fn submit(&mut self, a: Matrix, b: Matrix, approx: Approx) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            Request {
+                id,
+                a,
+                b,
+                approx,
+            },
+            Instant::now(),
+        ));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Process every queued request in FIFO order.
+    pub fn drain(&mut self) -> Result<(Vec<Response>, ServiceStats)> {
+        let t0 = Instant::now();
+        let mut responses = Vec::with_capacity(self.queue.len());
+        let mut latencies = Vec::with_capacity(self.queue.len());
+        while let Some((req, submitted)) = self.queue.pop_front() {
+            let tau = match req.approx {
+                Approx::Tau(t) => t,
+                Approx::ValidRatio(r) => self.coord.tune_tau(&req.a, &req.b, r)?.tau,
+            };
+            let rep = self.coord.multiply(&req.a, &req.b, tau)?;
+            let latency = submitted.elapsed().as_secs_f64();
+            latencies.push(latency);
+            responses.push(Response {
+                id: req.id,
+                c: rep.c,
+                tau,
+                valid_ratio: rep.valid_ratio,
+                latency_secs: latency,
+                compute_secs: rep.wall_secs,
+            });
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = ServiceStats {
+            completed: responses.len(),
+            wall_secs: wall,
+            throughput_rps: responses.len() as f64 / wall.max(1e-12),
+            latency: if latencies.is_empty() {
+                Summary::from(&[0.0])
+            } else {
+                Summary::from(&latencies)
+            },
+        };
+        Ok((responses, stats))
+    }
+}
+
+/// Synthetic request-trace generator for the `serve` subcommand and the
+/// service tests: mixed decay kinds and approximation targets.
+pub fn synthetic_trace(count: usize, n: usize, seed: u64) -> Vec<(Matrix, Matrix, Approx)> {
+    use crate::util::prng::Rng;
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let s = seed.wrapping_add(i as u64 * 17);
+            let (a, b) = if rng.next_f32() < 0.5 {
+                (
+                    Matrix::decay_algebraic(n, 0.1, 0.1, s),
+                    Matrix::decay_algebraic(n, 0.1, 0.1, s ^ 1),
+                )
+            } else {
+                (
+                    Matrix::decay_exponential(n, 1.0, 0.9, s),
+                    Matrix::decay_exponential(n, 1.0, 0.9, s ^ 1),
+                )
+            };
+            let approx = if rng.next_f32() < 0.5 {
+                Approx::ValidRatio(rng.range_f32(0.05, 0.3) as f64)
+            } else {
+                Approx::Tau(rng.range_f32(1e-6, 1e-2))
+            };
+            (a, b, approx)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle() -> Option<ArtifactBundle> {
+        for c in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(c).join("manifest.json").exists() {
+                return ArtifactBundle::load(c).ok();
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn drains_fifo_with_stats() {
+        let Some(b) = bundle() else { return };
+        let mut svc = SpammService::new(&b, SpammConfig::default()).unwrap();
+        let trace = synthetic_trace(4, 96, 1);
+        let mut ids = Vec::new();
+        for (a, x, ap) in trace {
+            ids.push(svc.submit(a, x, ap));
+        }
+        assert_eq!(svc.pending(), 4);
+        let (resp, stats) = svc.drain().unwrap();
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(stats.completed, 4);
+        assert!(stats.throughput_rps > 0.0);
+        // FIFO order and monotone ids.
+        let got: Vec<u64> = resp.iter().map(|r| r.id).collect();
+        assert_eq!(got, ids);
+        // Latency ≥ compute; later requests queue longer.
+        for r in &resp {
+            assert!(r.latency_secs >= r.compute_secs * 0.5);
+            assert!(r.valid_ratio <= 1.0);
+            assert_eq!(r.c.rows(), 96);
+        }
+        assert!(resp.last().unwrap().latency_secs >= resp[0].latency_secs);
+    }
+
+    #[test]
+    fn valid_ratio_requests_are_tuned() {
+        let Some(b) = bundle() else { return };
+        let mut svc = SpammService::new(&b, SpammConfig::default()).unwrap();
+        let a = Matrix::decay_algebraic(128, 0.1, 0.1, 3);
+        let x = Matrix::decay_algebraic(128, 0.1, 0.1, 4);
+        svc.submit(a, x, Approx::ValidRatio(0.15));
+        let (resp, _) = svc.drain().unwrap();
+        assert!((resp[0].valid_ratio - 0.15).abs() < 0.05);
+        assert!(resp[0].tau > 0.0);
+    }
+
+    #[test]
+    fn empty_drain_is_ok() {
+        let Some(b) = bundle() else { return };
+        let mut svc = SpammService::new(&b, SpammConfig::default()).unwrap();
+        let (resp, stats) = svc.drain().unwrap();
+        assert!(resp.is_empty());
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn trace_generator_is_deterministic() {
+        let t1 = synthetic_trace(3, 64, 9);
+        let t2 = synthetic_trace(3, 64, 9);
+        for ((a1, _, _), (a2, _, _)) in t1.iter().zip(&t2) {
+            assert_eq!(a1, a2);
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by the cuspamm runtime and library layers.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape or divisibility constraint violated by caller input.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// An artifact (HLO file, manifest entry, weight blob) is missing or
+    /// does not match what the runtime expects.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// XLA/PJRT failure (compile, execute, literal conversion).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Config file / CLI parse problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON syntax or schema problem.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Binary tensor file problem.
+    #[error("tensorio error: {0}")]
+    TensorIo(String),
+
+    /// Coordinator/device-worker failure (a worker died or a channel
+    /// closed unexpectedly).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,59 @@
+//! # cuspamm — Sparse Approximate Matrix Multiplication, reproduced
+//!
+//! A Rust + JAX + Pallas reproduction of *"Accelerating Sparse Approximate
+//! Matrix Multiplication on GPUs"* (cuSpAMM, Liu et al., 2021).
+//!
+//! The system is a three-layer stack:
+//!
+//! * **Layer 1 (build time)** — Pallas kernels (`python/compile/kernels/`):
+//!   the paper's *get-norm* and *multiplication* kernels, plus a batched
+//!   tile-GEMM used by the coordinator's compacted schedule.
+//! * **Layer 2 (build time)** — JAX graphs (`python/compile/model.py`)
+//!   AOT-lowered to HLO text artifacts (`make artifacts`).
+//! * **Layer 3 (request path, this crate)** — the coordinator: artifact
+//!   loading and execution over PJRT ([`runtime`]), SpAMM scheduling and
+//!   tuning ([`spamm`]), multi-device orchestration ([`coordinator`]), and
+//!   every substrate the evaluation needs ([`matrix`], [`sparse`], ...).
+//!
+//! Python never runs on the request path; after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cuspamm::prelude::*;
+//!
+//! let bundle = ArtifactBundle::load("artifacts").unwrap();
+//! let engine = SpammEngine::new(&bundle, SpammConfig::default()).unwrap();
+//! let a = Matrix::decay_algebraic(1024, 0.1, 0.1, 7);
+//! let b = Matrix::decay_algebraic(1024, 0.1, 0.1, 8);
+//! let tuned = engine.tune_tau(&a, &b, 0.10).unwrap(); // 10% valid ratio
+//! let c = engine.multiply(&a, &b, tuned.tau).unwrap();
+//! println!("‖C‖_F = {}", c.fnorm());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod json;
+pub mod matrix;
+pub mod proptest;
+pub mod runtime;
+pub mod spamm;
+pub mod sparse;
+pub mod telemetry;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::SpammConfig;
+    pub use crate::coordinator::{Coordinator, MultiDeviceReport};
+    pub use crate::error::{Error, Result};
+    pub use crate::matrix::Matrix;
+    pub use crate::runtime::{ArtifactBundle, Runtime};
+    pub use crate::spamm::{SpammEngine, TuneResult};
+    pub use crate::sparse::CsrMatrix;
+}

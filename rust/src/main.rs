@@ -1,0 +1,249 @@
+//! cuspamm CLI — the Layer-3 launcher.
+//!
+//!   cuspamm info                          list artifacts + platform
+//!   cuspamm run   --n 1024 --ratio 0.10   tuned SpAMM vs dense, with stats
+//!   cuspamm tune  --n 1024 --ratio 0.10   τ search only (§3.5.2)
+//!   cuspamm cnn   --tau 2.5 --layer conv2 case-study CNN accuracy probe
+//!
+//! Global options: --artifacts <dir>, --devices, --precision, --balance,
+//! --config <file> (key = value overrides, see config::SpammConfig).
+
+use cuspamm::cli::Spec;
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::error::{Error, Result};
+use cuspamm::matrix::Matrix;
+use cuspamm::prelude::*;
+use cuspamm::telemetry;
+
+fn main() {
+    telemetry::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(Error::Config(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common(spec: Spec) -> Spec {
+    spec.opt("artifacts", "artifacts", "artifact bundle directory")
+        .opt("devices", "1", "simulated device count")
+        .opt("precision", "f32", "f32 | bf16")
+        .opt("balance", "strided:4", "rowblock | strided:<s>")
+        .opt("config", "", "optional config file (key = value)")
+}
+
+fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
+    let mut cfg = if a.get("config").is_empty() {
+        SpammConfig::default()
+    } else {
+        SpammConfig::from_file(std::path::Path::new(a.get("config")))?
+    };
+    cfg.apply("devices", a.get("devices"))?;
+    cfg.apply("precision", a.get("precision"))?;
+    cfg.apply("balance", a.get("balance"))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    match cmd {
+        "info" => cmd_info(rest),
+        "run" => cmd_run(rest),
+        "tune" => cmd_tune(rest),
+        "cnn" => cmd_cnn(rest),
+        "serve" => cmd_serve(rest),
+        "help" | "--help" | "-h" => {
+            println!(
+                "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
+                 subcommands:\n  info   list the artifact bundle\n  run    \
+                 tuned SpAMM vs dense baseline\n  tune   τ search for a valid \
+                 ratio\n  cnn    case-study CNN accuracy probe\n  serve  \
+                 process a synthetic request trace with service stats\n\nUse \
+                 `cuspamm <cmd> --help` for options."
+            );
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown subcommand '{other}' (try `cuspamm help`)"
+        ))),
+    }
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new("cuspamm info", "inspect the artifact bundle"));
+    let a = spec.parse(args)?;
+    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
+    println!("artifact bundle: {}", bundle.dir.display());
+    println!("LoNum: {}", bundle.lonum);
+    for name in bundle.names() {
+        let m = bundle.get(name)?;
+        println!("  {:32} kind={:12} inputs={:?}", m.name, m.kind, m.input_shapes);
+    }
+    if let Some(cnn) = &bundle.cnn {
+        println!(
+            "cnn: {} conv layers, build-time test accuracy {:.2}%",
+            cnn.conv_specs.len(),
+            cnn.test_accuracy * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new("cuspamm run", "tuned SpAMM vs the dense baseline"))
+        .opt("n", "1024", "matrix size (needs a dense_n<N> artifact)")
+        .opt("ratio", "0.10", "target valid ratio")
+        .opt("seed", "7", "workload seed")
+        .opt("kind", "algebraic", "decay kind: algebraic | exponential");
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let n = a.usize("n")?;
+    let ratio = a.f64("ratio")?;
+    let seed = a.usize("seed")? as u64;
+
+    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
+    let coord = Coordinator::new(&bundle, cfg.clone())?;
+
+    let (ma, mb) = match a.get("kind") {
+        "exponential" => (
+            Matrix::decay_exponential(n, 1.0, 0.5, seed),
+            Matrix::decay_exponential(n, 1.0, 0.5, seed + 1),
+        ),
+        _ => (
+            Matrix::decay_algebraic(n, 0.1, 0.1, seed),
+            Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1),
+        ),
+    };
+
+    let tuned = coord.tune_tau(&ma, &mb, ratio)?;
+    println!(
+        "tuned τ = {:.6e} (achieved ratio {:.2}%, {} iters, expansion k={})",
+        tuned.tau,
+        tuned.achieved_ratio * 100.0,
+        tuned.iters,
+        tuned.expansion_k
+    );
+
+    let report = coord.multiply(&ma, &mb, tuned.tau)?;
+    println!("spamm: {}", report.summary_line());
+
+    let dense = coord.dense(&ma, &mb)?;
+    println!("dense: wall {:.3}s", dense.wall_secs);
+    println!(
+        "speedup: {:.2}x   ‖E‖_F = {:.4e}  (‖C‖_F = {:.4e})",
+        dense.wall_secs / report.wall_secs,
+        report.c.error_fnorm(&dense.c)?,
+        dense.c.fnorm()
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new("cuspamm tune", "τ search (§3.5.2)"))
+        .opt("n", "1024", "matrix size")
+        .opt("ratio", "0.10", "target valid ratio")
+        .opt("seed", "7", "workload seed");
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
+    let coord = Coordinator::new(&bundle, cfg)?;
+    let n = a.usize("n")?;
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, a.usize("seed")? as u64);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, a.usize("seed")? as u64 + 1);
+    let r = coord.tune_tau(&ma, &mb, a.f64("ratio")?)?;
+    println!(
+        "τ = {:.6e}  ratio = {:.3}%  iters = {}  expansion k = {}",
+        r.tau,
+        r.achieved_ratio * 100.0,
+        r.iters,
+        r.expansion_k
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use cuspamm::coordinator::service::{synthetic_trace, SpammService};
+
+    let spec = common(Spec::new(
+        "cuspamm serve",
+        "drain a synthetic SpAMM request trace, report service stats",
+    ))
+    .opt("requests", "8", "number of requests in the trace")
+    .opt("n", "512", "matrix size per request")
+    .opt("seed", "7", "trace seed");
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
+    let mut svc = SpammService::new(&bundle, cfg)?;
+    for (ma, mb, approx) in
+        synthetic_trace(a.usize("requests")?, a.usize("n")?, a.usize("seed")? as u64)
+    {
+        svc.submit(ma, mb, approx);
+    }
+    println!("draining {} requests ...", svc.pending());
+    let (responses, stats) = svc.drain()?;
+    for r in responses.iter().take(5) {
+        println!(
+            "  req {:3}: τ={:.3e} valid {:5.1}%  compute {:.3}s  latency {:.3}s",
+            r.id,
+            r.tau,
+            r.valid_ratio * 100.0,
+            r.compute_secs,
+            r.latency_secs
+        );
+    }
+    if responses.len() > 5 {
+        println!("  ... ({} more)", responses.len() - 5);
+    }
+    println!(
+        "completed {} in {:.3}s — {:.2} req/s, latency p50 {:.3}s p95 {:.3}s",
+        stats.completed,
+        stats.wall_secs,
+        stats.throughput_rps,
+        stats.latency.median,
+        stats.latency.p95
+    );
+    Ok(())
+}
+
+fn cmd_cnn(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new("cuspamm cnn", "case-study CNN accuracy probe"))
+        .opt("tau", "0.0", "SpAMM τ for the chosen layer")
+        .opt("layer", "conv2", "conv layer to substitute")
+        .opt("limit", "200", "test images to evaluate");
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
+    let meta = bundle
+        .cnn
+        .clone()
+        .ok_or_else(|| Error::Artifact("bundle has no CNN export".into()))?;
+    let cnn = cuspamm::cnn::Cnn::load(&meta)?;
+    let engine = SpammEngine::new(&bundle, cfg)?;
+
+    let mut modes = std::collections::BTreeMap::new();
+    let baseline = cnn.accuracy(&modes, Some(&engine), 100, Some(a.usize("limit")?))?;
+    let tau = a.f64("tau")? as f32;
+    modes.insert(a.get("layer").to_string(), cuspamm::cnn::GemmMode::Spamm { tau });
+    let approx = cnn.accuracy(&modes, Some(&engine), 100, Some(a.usize("limit")?))?;
+    println!(
+        "layer {} τ={}: accuracy {:.2}% → {:.2}% (Δ {:+.2}%)",
+        a.get("layer"),
+        tau,
+        baseline * 100.0,
+        approx * 100.0,
+        (approx - baseline) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Decay matrix generators — the paper's synthesized datasets (§4.1).
+//!
+//! Algebraic decay: |a_ij| ≤ c / (|i−j|^λ + 1)   (Table 1's dataset uses
+//! c = 0.1, λ = 0.1).  Exponential decay: |a_ij| ≤ c·λ^|i−j| (the ergo-like
+//! dataset).  Entries are the envelope multiplied by a uniform [−1, 1)
+//! variate so the matrices are full-rank and sign-mixed, matching how the
+//! paper's matrices behave under the F-norm.
+
+use super::Matrix;
+use crate::util::prng::Rng;
+
+/// Decay profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DecayKind {
+    /// c / (|i−j|^lambda + 1)
+    Algebraic { c: f64, lambda: f64 },
+    /// c · lambda^|i−j|
+    Exponential { c: f64, lambda: f64 },
+}
+
+impl DecayKind {
+    /// Envelope value at separation d = |i − j|.
+    pub fn envelope(&self, d: usize) -> f64 {
+        match *self {
+            DecayKind::Algebraic { c, lambda } => c / ((d as f64).powf(lambda) + 1.0),
+            DecayKind::Exponential { c, lambda } => c * lambda.powi(d as i32),
+        }
+    }
+}
+
+/// Generate an n×n decay matrix (seeded, deterministic).
+pub fn generate(n: usize, kind: DecayKind, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, n);
+    // Precompute the envelope per separation (O(n) instead of O(n²) powf).
+    let env: Vec<f32> = (0..n).map(|d| kind.envelope(d) as f32).collect();
+    for i in 0..n {
+        for j in 0..n {
+            let d = i.abs_diff(j);
+            m[(i, j)] = env[d] * rng.range_f32(-1.0, 1.0);
+        }
+    }
+    m
+}
+
+impl Matrix {
+    /// The paper's synthesized algebraic-decay matrix
+    /// `a_ij = c/(|i−j|^λ + 1) · u`, u ~ U[−1, 1).
+    pub fn decay_algebraic(n: usize, c: f64, lambda: f64, seed: u64) -> Matrix {
+        generate(n, DecayKind::Algebraic { c, lambda }, seed)
+    }
+
+    /// Exponential-decay matrix `a_ij = c·λ^|i−j| · u` (ergo-like).
+    pub fn decay_exponential(n: usize, c: f64, lambda: f64, seed: u64) -> Matrix {
+        generate(n, DecayKind::Exponential { c, lambda }, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algebraic_envelope_bounds_entries() {
+        let n = 64;
+        let m = Matrix::decay_algebraic(n, 0.1, 0.1, 3);
+        let kind = DecayKind::Algebraic { c: 0.1, lambda: 0.1 };
+        for i in 0..n {
+            for j in 0..n {
+                let bound = kind.envelope(i.abs_diff(j)) as f32 + 1e-7;
+                assert!(m[(i, j)].abs() <= bound, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_decays_fast() {
+        let m = Matrix::decay_exponential(128, 1.0, 0.5, 4);
+        // At separation 40 the envelope is 0.5^40 ≈ 9e-13 — visually zero.
+        assert!(m[(0, 60)].abs() < 1e-12);
+        // Near-diagonal mass dominates.
+        let diag_mass: f64 = (0..128).map(|i| (m[(i, i)] as f64).abs()).sum();
+        let corner_mass: f64 = (0..64)
+            .map(|i| (m[(i, 64 + i)] as f64).abs())
+            .sum();
+        assert!(diag_mass > 100.0 * corner_mass);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Matrix::decay_algebraic(32, 0.1, 0.1, 7);
+        let b = Matrix::decay_algebraic(32, 0.1, 0.1, 7);
+        let c = Matrix::decay_algebraic(32, 0.1, 0.1, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn envelope_monotone_in_separation() {
+        for kind in [
+            DecayKind::Algebraic { c: 0.1, lambda: 0.1 },
+            DecayKind::Exponential { c: 1.0, lambda: 0.9 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for d in 0..100 {
+                let e = kind.envelope(d);
+                assert!(e <= prev);
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn algebraic_is_near_sparse_not_sparse() {
+        // The algebraic matrices of Table 1 are dense in the strict sense
+        // (no exact zeros) but compressible under the F-norm test.
+        let m = Matrix::decay_algebraic(128, 0.1, 0.1, 5);
+        assert!(m.nz_ratio() > 0.99);
+    }
+}

@@ -1,0 +1,214 @@
+//! im2col — convolution as GEMM, the transform the paper applies to VGG13
+//! (§4.3.2).  Mirrors python/compile/cnn.py's `im2col` exactly (3×3 kernel,
+//! pad 1, stride 1, NCHW) so Rust inference reproduces the trained model.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// NCHW activation tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor4 {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Tensor4 {
+        Tensor4 {
+            n,
+            c,
+            h,
+            w,
+            data: vec![0.0; n * c * h * w],
+        }
+    }
+
+    pub fn from_vec(n: usize, c: usize, h: usize, w: usize, data: Vec<f32>) -> Result<Tensor4> {
+        if data.len() != n * c * h * w {
+            return Err(Error::Shape(format!(
+                "tensor {n}x{c}x{h}x{w} needs {} elems, got {}",
+                n * c * h * w,
+                data.len()
+            )));
+        }
+        Ok(Tensor4 { n, c, h, w, data })
+    }
+
+    #[inline]
+    pub fn at(&self, ni: usize, ci: usize, hi: usize, wi: usize) -> f32 {
+        self.data[((ni * self.c + ci) * self.h + hi) * self.w + wi]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, ni: usize, ci: usize, hi: usize, wi: usize) -> &mut f32 {
+        &mut self.data[((ni * self.c + ci) * self.h + hi) * self.w + wi]
+    }
+
+    /// Fraction of exact zeros — the near-sparsity the paper exploits.
+    pub fn zero_ratio(&self) -> f64 {
+        let z = self.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.data.len().max(1) as f64
+    }
+}
+
+/// im2col for 3×3/pad-1/stride-1: output is (C·9, N·H·W), laid out to match
+/// cnn.py: row index = c·9 + (dy·3 + dx), col index = n·(H·W) + y·W + x.
+pub fn im2col(x: &Tensor4) -> Matrix {
+    let (n, c, h, w) = (x.n, x.c, x.h, x.w);
+    let rows = c * 9;
+    let cols = n * h * w;
+    let mut out = Matrix::zeros(rows, cols);
+    for ci in 0..c {
+        for dy in 0..3usize {
+            for dx in 0..3usize {
+                let row = ci * 9 + dy * 3 + dx;
+                let orow = &mut out.data_mut()[row * cols..(row + 1) * cols];
+                for ni in 0..n {
+                    for y in 0..h {
+                        let sy = y as isize + dy as isize - 1;
+                        if sy < 0 || sy >= h as isize {
+                            continue; // padded row → stays zero
+                        }
+                        for xx in 0..w {
+                            let sx = xx as isize + dx as isize - 1;
+                            if sx < 0 || sx >= w as isize {
+                                continue;
+                            }
+                            orow[ni * h * w + y * w + xx] =
+                                x.at(ni, ci, sy as usize, sx as usize);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im inverse mapping of the *output* of a conv GEMM: reshape
+/// (C_out, N·H·W) back to NCHW.
+pub fn gemm_out_to_nchw(out: &Matrix, n: usize, h: usize, w: usize) -> Tensor4 {
+    let c_out = out.rows();
+    let mut t = Tensor4::zeros(n, c_out, h, w);
+    for co in 0..c_out {
+        let row = out.row(co);
+        for ni in 0..n {
+            for y in 0..h {
+                for x in 0..w {
+                    *t.at_mut(ni, co, y, x) = row[ni * h * w + y * w + x];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// 2×2 max-pool, stride 2 (NCHW).
+pub fn maxpool2(x: &Tensor4) -> Tensor4 {
+    let (n, c, h, w) = (x.n, x.c, x.h, x.w);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor4::zeros(n, c, oh, ow);
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let m = x
+                        .at(ni, ci, 2 * y, 2 * xx)
+                        .max(x.at(ni, ci, 2 * y, 2 * xx + 1))
+                        .max(x.at(ni, ci, 2 * y + 1, 2 * xx))
+                        .max(x.at(ni, ci, 2 * y + 1, 2 * xx + 1));
+                    *out.at_mut(ni, ci, y, xx) = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor4) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_shape() {
+        let x = Tensor4::zeros(4, 8, 16, 16);
+        let m = im2col(&x);
+        assert_eq!((m.rows(), m.cols()), (72, 4 * 256));
+    }
+
+    #[test]
+    fn im2col_center_tap_is_identity() {
+        // dy=1, dx=1 (row c·9+4) is the un-shifted image.
+        let mut x = Tensor4::zeros(1, 1, 4, 4);
+        for i in 0..16 {
+            x.data[i] = i as f32;
+        }
+        let m = im2col(&x);
+        assert_eq!(m.row(4), &x.data[..]);
+    }
+
+    #[test]
+    fn im2col_conv_equals_direct_conv() {
+        // Convolve with a known kernel both ways.
+        let mut x = Tensor4::zeros(2, 2, 5, 5);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 7919) % 13) as f32 - 6.0;
+        }
+        let mut w = Matrix::zeros(3, 18); // 3 out-channels, 2 in × 9 taps
+        for (i, v) in w.data_mut().iter_mut().enumerate() {
+            *v = ((i * 104729) % 11) as f32 / 11.0 - 0.5;
+        }
+        let cols = im2col(&x);
+        let out = w.matmul(&cols).unwrap();
+        let out_t = gemm_out_to_nchw(&out, 2, 5, 5);
+        // direct conv at a few probe points
+        for &(ni, co, y, xx) in &[(0usize, 0usize, 0usize, 0usize), (1, 2, 2, 3), (0, 1, 4, 4)] {
+            let mut want = 0.0f32;
+            for ci in 0..2 {
+                for dy in 0..3isize {
+                    for dx in 0..3isize {
+                        let sy = y as isize + dy - 1;
+                        let sx = xx as isize + dx - 1;
+                        if sy < 0 || sy >= 5 || sx < 0 || sx >= 5 {
+                            continue;
+                        }
+                        want += w[(co, ci * 9 + (dy * 3 + dx) as usize)]
+                            * x.at(ni, ci, sy as usize, sx as usize);
+                    }
+                }
+            }
+            let got = out_t.at(ni, co, y, xx);
+            assert!((got - want).abs() < 1e-4, "({ni},{co},{y},{xx}) {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let mut x = Tensor4::zeros(1, 1, 4, 4);
+        for i in 0..16 {
+            x.data[i] = i as f32;
+        }
+        let p = maxpool2(&x);
+        assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let mut x = Tensor4::from_vec(1, 1, 1, 4, vec![-1.0, 2.0, -3.0, 0.0]).unwrap();
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 2.0, 0.0, 0.0]);
+        assert!((x.zero_ratio() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,323 @@
+//! Dense row-major f32 matrices plus the dataset generators the paper's
+//! evaluation needs (decay matrices, ergo-like matrices, im2col).
+
+pub mod decay;
+pub mod ergo;
+pub mod im2col;
+pub mod tensorio;
+pub mod tiling;
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "{rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Matrix with i.i.d. standard-normal entries (deterministic per seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn fnorm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// ‖self − other‖_F — the paper's error criterion (Eq. 5).
+    pub fn error_fnorm(&self, other: &Matrix) -> Result<f64> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "error_fnorm: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt())
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> Result<f32> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape("max_abs_diff shape mismatch".into()));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Fraction of non-zero elements — the paper's *nz ratio*.
+    pub fn nz_ratio(&self) -> f64 {
+        let nz = self.data.iter().filter(|&&x| x != 0.0).count();
+        nz as f64 / self.data.len() as f64
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Blocked single-thread host GEMM (f32 accumulate) — correctness
+    /// reference and small-matrix fallback; not the benchmarked baseline
+    /// (that is the XLA dense artifact).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        const BS: usize = 64;
+        for i0 in (0..m).step_by(BS) {
+            for k0 in (0..k).step_by(BS) {
+                for j0 in (0..n).step_by(BS) {
+                    for i in i0..(i0 + BS).min(m) {
+                        for kk in k0..(k0 + BS).min(k) {
+                            let a = self.data[i * k + kk];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let brow = &other.data[kk * n..kk * n + n];
+                            let crow = &mut out.data[i * n..i * n + n];
+                            for j in j0..(j0 + BS).min(n) {
+                                crow[j] += a * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Element-wise scale.
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Truncate: zero out all entries with |x| < threshold; returns count
+    /// of zeroed entries.  This is the paper's `TRUN` preparation for the
+    /// cuSPARSE baseline.
+    pub fn truncate(&mut self, threshold: f32) -> usize {
+        let mut zeroed = 0;
+        for x in &mut self.data {
+            if x.abs() < threshold && *x != 0.0 {
+                *x = 0.0;
+                zeroed += 1;
+            }
+        }
+        zeroed
+    }
+
+    /// Copy a sub-block into a destination slice (row-major LoNum²).
+    pub fn copy_block(&self, r0: usize, c0: usize, size: usize, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= size * size);
+        debug_assert!(r0 + size <= self.rows && c0 + size <= self.cols);
+        for r in 0..size {
+            let src = &self.data[(r0 + r) * self.cols + c0..][..size];
+            dst[r * size..(r + 1) * size].copy_from_slice(src);
+        }
+    }
+
+    /// Add a row-major block into position (r0, c0).
+    pub fn add_block(&mut self, r0: usize, c0: usize, size: usize, src: &[f32]) {
+        debug_assert!(src.len() >= size * size);
+        for r in 0..size {
+            let dst = &mut self.data[(r0 + r) * self.cols + c0..][..size];
+            for (d, s) in dst.iter_mut().zip(&src[r * size..(r + 1) * size]) {
+                *d += s;
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Matrix::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn fnorm_known() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]).unwrap();
+        assert!((m.fnorm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::randn(8, 8, 1);
+        let c = a.matmul(&Matrix::eye(8)).unwrap();
+        assert!(a.error_fnorm(&c).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Matrix::randn(3, 5, 2);
+        let b = Matrix::randn(5, 7, 3);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!((c.rows(), c.cols()), (3, 7));
+        // one element by hand
+        let want: f32 = (0..5).map(|k| a[(1, k)] * b[(k, 4)]).sum();
+        assert!((c[(1, 4)] - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch() {
+        assert!(Matrix::zeros(2, 3).matmul(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::randn(4, 6, 5);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn truncate_counts_and_zeroes() {
+        let mut m = Matrix::from_vec(1, 4, vec![0.1, -0.01, 0.5, 0.0]).unwrap();
+        let z = m.truncate(0.05);
+        assert_eq!(z, 1);
+        assert_eq!(m.data(), &[0.1, 0.0, 0.5, 0.0]);
+        assert!((m.nz_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_copy_add_roundtrip() {
+        let a = Matrix::randn(8, 8, 9);
+        let mut buf = vec![0.0; 16];
+        a.copy_block(4, 4, 4, &mut buf);
+        let mut out = Matrix::zeros(8, 8);
+        out.add_block(4, 4, 4, &buf);
+        out.add_block(4, 4, 4, &buf);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(out[(4 + r, 4 + c)], 2.0 * a[(4 + r, 4 + c)]);
+            }
+        }
+        assert_eq!(out[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Matrix::randn(4, 4, 7), Matrix::randn(4, 4, 7));
+        assert_ne!(Matrix::randn(4, 4, 7), Matrix::randn(4, 4, 8));
+    }
+}

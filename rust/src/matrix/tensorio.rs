@@ -1,0 +1,156 @@
+//! Binary tensor loader — Rust twin of python/compile/tensorio.py.
+//!
+//! Format: b"CSTN" | u32 version | u32 dtype (0=f32, 1=i32) | u32 ndim |
+//! ndim×u32 dims | little-endian payload.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A loaded tensor: shape + flat data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            Tensor::F32 { dims, data } => Ok((dims, data)),
+            _ => Err(Error::TensorIo("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            Tensor::I32 { dims, data } => Ok((dims, data)),
+            _ => Err(Error::TensorIo("expected i32 tensor".into())),
+        }
+    }
+}
+
+fn read_u32(r: &mut impl Read, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)
+        .map_err(|e| Error::TensorIo(format!("reading {what}: {e}")))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load a `.cstn` tensor file.
+pub fn load_tensor(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::TensorIo(format!("{}: {e}", path.display())))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)
+        .map_err(|e| Error::TensorIo(format!("{}: {e}", path.display())))?;
+    if &magic != b"CSTN" {
+        return Err(Error::TensorIo(format!("{}: bad magic", path.display())));
+    }
+    let version = read_u32(&mut f, "version")?;
+    if version != 1 {
+        return Err(Error::TensorIo(format!("unsupported version {version}")));
+    }
+    let dtype = read_u32(&mut f, "dtype")?;
+    let ndim = read_u32(&mut f, "ndim")? as usize;
+    if ndim > 8 {
+        return Err(Error::TensorIo(format!("implausible ndim {ndim}")));
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(read_u32(&mut f, "dim")? as usize);
+    }
+    let count: usize = dims.iter().product::<usize>().max(1);
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    if payload.len() != count * 4 {
+        return Err(Error::TensorIo(format!(
+            "{}: payload {} bytes, want {}",
+            path.display(),
+            payload.len(),
+            count * 4
+        )));
+    }
+    match dtype {
+        0 => {
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Tensor::F32 { dims, data })
+        }
+        1 => {
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Tensor::I32 { dims, data })
+        }
+        _ => Err(Error::TensorIo(format!("unknown dtype id {dtype}"))),
+    }
+}
+
+/// Save a f32 tensor (test fixtures / results).
+pub fn save_tensor_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+    if dims.iter().product::<usize>().max(1) != data.len().max(1) {
+        return Err(Error::TensorIo("dims/product mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(16 + 4 * dims.len() + 4 * data.len());
+    out.extend_from_slice(b"CSTN");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("cuspamm_tensorio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.cstn");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        save_tensor_f32(&p, &[2, 3, 4], &data).unwrap();
+        let t = load_tensor(&p).unwrap();
+        let (dims, got) = t.as_f32().unwrap();
+        assert_eq!(dims, &[2, 3, 4]);
+        assert_eq!(got, &data[..]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("cuspamm_tensorio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.cstn");
+        std::fs::write(&p, b"NOPE\0\0\0\0\0\0\0\0\0\0\0\0").unwrap();
+        assert!(load_tensor(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = std::env::temp_dir().join("cuspamm_tensorio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.cstn");
+        save_tensor_f32(&p, &[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(load_tensor(&p).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Tile-level views of matrices: zero padding to LoNum multiples, tile
+//! gather for the coordinator's compacted schedule, and scatter-accumulate
+//! of tile products back into C.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+use crate::util::round_up;
+
+/// A matrix padded to LoNum-multiple dimensions, remembering its logical
+/// (unpadded) shape — the paper pads inputs the same way (§3 notation).
+#[derive(Clone, Debug)]
+pub struct PaddedMatrix {
+    pub inner: Matrix,
+    pub logical_rows: usize,
+    pub logical_cols: usize,
+    pub lonum: usize,
+}
+
+impl PaddedMatrix {
+    pub fn new(m: &Matrix, lonum: usize) -> PaddedMatrix {
+        let pr = round_up(m.rows().max(1), lonum);
+        let pc = round_up(m.cols().max(1), lonum);
+        let mut inner = Matrix::zeros(pr, pc);
+        for r in 0..m.rows() {
+            inner.data_mut()[r * pc..r * pc + m.cols()].copy_from_slice(m.row(r));
+        }
+        PaddedMatrix {
+            inner,
+            logical_rows: m.rows(),
+            logical_cols: m.cols(),
+            lonum,
+        }
+    }
+
+    /// Number of tile rows (BDIM_r).
+    pub fn tile_rows(&self) -> usize {
+        self.inner.rows() / self.lonum
+    }
+
+    /// Number of tile cols (BDIM_c).
+    pub fn tile_cols(&self) -> usize {
+        self.inner.cols() / self.lonum
+    }
+
+    /// Copy tile (ti, tj) into `dst` (row-major lonum²).
+    pub fn copy_tile(&self, ti: usize, tj: usize, dst: &mut [f32]) {
+        self.inner
+            .copy_block(ti * self.lonum, tj * self.lonum, self.lonum, dst);
+    }
+
+    /// Crop back to the logical shape.
+    pub fn crop(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.logical_rows, self.logical_cols);
+        let pc = self.inner.cols();
+        for r in 0..self.logical_rows {
+            out.data_mut()[r * self.logical_cols..(r + 1) * self.logical_cols]
+                .copy_from_slice(&self.inner.data()[r * pc..r * pc + self.logical_cols]);
+        }
+        out
+    }
+}
+
+/// Gather the listed (row-tile, col-tile) pairs of `m` into a contiguous
+/// `(batch, lonum, lonum)` buffer (row-major), zero-padding up to
+/// `batch_cap` tiles — the layout the `tilegemm` artifacts expect.
+pub fn gather_tiles(
+    m: &PaddedMatrix,
+    ids: &[(usize, usize)],
+    batch_cap: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if ids.len() > batch_cap {
+        return Err(Error::Shape(format!(
+            "gather: {} tiles > batch cap {batch_cap}",
+            ids.len()
+        )));
+    }
+    let l2 = m.lonum * m.lonum;
+    out.clear();
+    out.resize(batch_cap * l2, 0.0);
+    for (slot, &(ti, tj)) in ids.iter().enumerate() {
+        if ti >= m.tile_rows() || tj >= m.tile_cols() {
+            return Err(Error::Shape(format!(
+                "gather: tile ({ti},{tj}) out of {}x{} grid",
+                m.tile_rows(),
+                m.tile_cols()
+            )));
+        }
+        m.copy_tile(ti, tj, &mut out[slot * l2..(slot + 1) * l2]);
+    }
+    Ok(())
+}
+
+/// Scatter-accumulate a `(batch, lonum, lonum)` product buffer into C:
+/// `products[slot]` is added at output tile `c_ids[slot]`.
+pub fn scatter_accumulate(
+    c: &mut PaddedMatrix,
+    c_ids: &[(usize, usize)],
+    products: &[f32],
+) -> Result<()> {
+    let l = c.lonum;
+    let l2 = l * l;
+    if products.len() < c_ids.len() * l2 {
+        return Err(Error::Shape(format!(
+            "scatter: {} products for {} ids",
+            products.len() / l2,
+            c_ids.len()
+        )));
+    }
+    for (slot, &(ti, tj)) in c_ids.iter().enumerate() {
+        c.inner
+            .add_block(ti * l, tj * l, l, &products[slot * l2..(slot + 1) * l2]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_crop_roundtrip() {
+        let m = Matrix::randn(33, 65, 1);
+        let p = PaddedMatrix::new(&m, 32);
+        assert_eq!(p.inner.rows(), 64);
+        assert_eq!(p.inner.cols(), 96);
+        assert_eq!(p.tile_rows(), 2);
+        assert_eq!(p.tile_cols(), 3);
+        assert_eq!(p.crop(), m);
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let m = Matrix::randn(10, 10, 2);
+        let p = PaddedMatrix::new(&m, 32);
+        // Everything outside 10x10 must be exactly zero.
+        for r in 0..32 {
+            for c in 0..32 {
+                if r >= 10 || c >= 10 {
+                    assert_eq!(p.inner[(r, c)], 0.0);
+                }
+            }
+        }
+        // padding preserves the F-norm
+        assert!((p.inner.fnorm() - m.fnorm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_multiple_unchanged() {
+        let m = Matrix::randn(64, 64, 3);
+        let p = PaddedMatrix::new(&m, 32);
+        assert_eq!(p.inner, m);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let m = Matrix::randn(64, 64, 4);
+        let p = PaddedMatrix::new(&m, 32);
+        let ids = [(0usize, 1usize), (1, 0)];
+        let mut buf = Vec::new();
+        gather_tiles(&p, &ids, 4, &mut buf).unwrap();
+        assert_eq!(buf.len(), 4 * 32 * 32);
+        // padded tail is zero
+        assert!(buf[2 * 1024..].iter().all(|&x| x == 0.0));
+
+        let mut c = PaddedMatrix::new(&Matrix::zeros(64, 64), 32);
+        scatter_accumulate(&mut c, &ids, &buf).unwrap();
+        for r in 0..32 {
+            for cc in 0..32 {
+                assert_eq!(c.inner[(r, 32 + cc)], m[(r, 32 + cc)]);
+                assert_eq!(c.inner[(32 + r, cc)], m[(32 + r, cc)]);
+                assert_eq!(c.inner[(r, cc)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_bounds_checked() {
+        let p = PaddedMatrix::new(&Matrix::zeros(32, 32), 32);
+        let mut buf = Vec::new();
+        assert!(gather_tiles(&p, &[(1, 0)], 2, &mut buf).is_err());
+        assert!(gather_tiles(&p, &[(0, 0); 5], 4, &mut buf).is_err());
+    }
+}

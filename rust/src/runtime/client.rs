@@ -1,0 +1,204 @@
+//! Single-threaded runtime: PJRT CPU client + per-artifact executable
+//! cache.  Used directly by the single-device engine and (one instance per
+//! worker thread) by the device simulator.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+use crate::runtime::artifact::ArtifactBundle;
+use crate::runtime::literal::{
+    literal_f32, literal_scalar, literal_to_matrix, literal_to_vec, matrix_to_literal,
+};
+
+/// A PJRT client plus lazily-compiled executables for one "device".
+pub struct Runtime {
+    client: xla::PjRtClient,
+    bundle: ArtifactBundle,
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    /// Cumulative seconds spent inside `execute` (the modeled device-busy
+    /// clock used for scaling reports).
+    busy: RefCell<f64>,
+    /// Cumulative seconds spent compiling (excluded from busy).
+    compile_time: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(bundle: &ArtifactBundle) -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            bundle: bundle.clone(),
+            cache: RefCell::new(BTreeMap::new()),
+            busy: RefCell::new(0.0),
+            compile_time: RefCell::new(0.0),
+        })
+    }
+
+    pub fn bundle(&self) -> &ArtifactBundle {
+        &self.bundle
+    }
+
+    /// Seconds this runtime has spent executing computations.
+    pub fn busy_secs(&self) -> f64 {
+        *self.busy.borrow()
+    }
+
+    pub fn compile_secs(&self) -> f64 {
+        *self.compile_time.borrow()
+    }
+
+    pub fn reset_busy(&self) {
+        *self.busy.borrow_mut() = 0.0;
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.bundle.get(name)?;
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compile_time.borrow_mut() += t.elapsed().as_secs_f64();
+        log::debug!(
+            "compiled {name} in {:.1} ms",
+            t.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (startup warm-up).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the named artifact on literal inputs; returns the flattened
+    /// output tuple (python lowers everything with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.executable(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let t = Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let root = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Xla(format!("{name}: empty execution result")))?
+            .to_literal_sync()?;
+        *self.busy.borrow_mut() += t.elapsed().as_secs_f64();
+        let meta = self.bundle.get(name)?;
+        let mut root = root;
+        let outs = root.decompose_tuple()?;
+        if outs.len() != meta.n_outputs {
+            return Err(Error::Xla(format!(
+                "{name}: expected {} outputs, got {}",
+                meta.n_outputs,
+                outs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    // ---- typed wrappers over the artifact grid ---------------------------
+
+    /// get-norm: n×n matrix → BDIM×BDIM normmap at tile size `lonum`.
+    pub fn getnorm(&self, m: &Matrix, lonum: usize, mxu: bool) -> Result<Matrix> {
+        let meta = self.bundle.getnorm(m.rows(), lonum, mxu)?;
+        let name = meta.name.clone();
+        let out = self.execute(&name, &[matrix_to_literal(m)?])?;
+        literal_to_matrix(&out[0])
+    }
+
+    /// Dense baseline: C = A·B via the XLA dense artifact.
+    pub fn dense(&self, a: &Matrix, b: &Matrix, precision: &str) -> Result<Matrix> {
+        let name = if a.rows() == a.cols() && a.rows() == b.rows() && b.rows() == b.cols() {
+            self.bundle.dense(a.rows(), precision)?.name.clone()
+        } else {
+            // rectangular (CNN) variants are named by shape
+            let found = self
+                .bundle
+                .names()
+                .find(|n| {
+                    n.starts_with("dense_")
+                        && n.contains(&format!("{}x{}x{}", a.rows(), a.cols(), b.cols()))
+                        && n.ends_with(precision)
+                })
+                .map(|s| s.to_string())
+                .ok_or_else(|| {
+                    Error::Artifact(format!(
+                        "no dense artifact for {}x{}x{} {precision}",
+                        a.rows(),
+                        a.cols(),
+                        b.cols()
+                    ))
+                })?;
+            found
+        };
+        let out = self.execute(&name, &[matrix_to_literal(a)?, matrix_to_literal(b)?])?;
+        literal_to_matrix(&out[0])
+    }
+
+    /// Batched tile GEMM on pre-gathered (batch·L², padded) buffers.
+    /// Returns the product buffer (batch·L²).
+    pub fn tile_gemm(
+        &self,
+        a_tiles: &[f32],
+        b_tiles: &[f32],
+        batch: usize,
+        lonum: usize,
+        precision: &str,
+    ) -> Result<Vec<f32>> {
+        let dims = [batch, lonum, lonum];
+        let out = self.execute(
+            &self.bundle.tilegemm(batch, lonum, precision)?.name.clone(),
+            &[literal_f32(&dims, a_tiles)?, literal_f32(&dims, b_tiles)?],
+        )?;
+        let (_, data) = literal_to_vec(&out[0])?;
+        Ok(data)
+    }
+
+    /// On-device τ search (§3.5.2): normmaps + target ratio → (τ, ratio).
+    pub fn tune(&self, na: &Matrix, nb: &Matrix, target: f32) -> Result<(f32, f32)> {
+        let bdim = na.rows();
+        let name = self.bundle.tune(bdim)?.name.clone();
+        let out = self.execute(
+            &name,
+            &[
+                matrix_to_literal(na)?,
+                matrix_to_literal(nb)?,
+                literal_scalar(target)?,
+            ],
+        )?;
+        let tau = out[0].to_vec::<f32>()?[0];
+        let ratio = out[1].to_vec::<f32>()?[0];
+        Ok((tau, ratio))
+    }
+
+    /// Fused single-call SpAMM (numerics oracle / small problems).
+    pub fn spamm_fused(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        tau: f32,
+        precision: &str,
+    ) -> Result<Matrix> {
+        let name = self.bundle.spamm_fused(a.rows(), precision)?.name.clone();
+        let out = self.execute(
+            &name,
+            &[
+                matrix_to_literal(a)?,
+                matrix_to_literal(b)?,
+                literal_scalar(tau)?,
+            ],
+        )?;
+        literal_to_matrix(&out[0])
+    }
+}

@@ -1,0 +1,160 @@
+//! Multi-device simulation (DESIGN.md §2): the paper runs on up to 8
+//! physical GPUs; here each simulated device is a worker thread owning its
+//! own PJRT CPU client + executable cache (the `xla` crate's client is not
+//! `Send`, and one-context-per-device is also the honest GPU model).
+//!
+//! Requests carry plain host tensors across the channel; the worker builds
+//! literals, executes, and replies.  Bounded channels provide the
+//! backpressure that the paper's P-batched UM transfers provide on CUDA.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::ArtifactBundle;
+use crate::runtime::client::Runtime;
+use crate::runtime::literal::{literal_f32, literal_to_vec};
+
+/// A shape + flat f32 payload (what crosses thread boundaries).
+pub type HostTensor = (Vec<usize>, Vec<f32>);
+
+/// One execution request for a device worker.
+pub struct ExecRequest {
+    pub artifact: String,
+    pub inputs: Vec<HostTensor>,
+    pub reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+}
+
+struct Worker {
+    sender: mpsc::SyncSender<ExecRequest>,
+    handle: Option<JoinHandle<()>>,
+    busy_nanos: Arc<AtomicU64>,
+}
+
+/// A pool of M simulated devices.
+pub struct DevicePool {
+    workers: Vec<Worker>,
+}
+
+impl DevicePool {
+    /// Spawn `devices` workers; each compiles artifacts lazily from its own
+    /// bundle view.  `queue_depth` bounds in-flight requests per device
+    /// (backpressure).
+    pub fn new(bundle: &ArtifactBundle, devices: usize, queue_depth: usize) -> Result<DevicePool> {
+        let mut workers = Vec::with_capacity(devices);
+        for dev in 0..devices {
+            let (tx, rx) = mpsc::sync_channel::<ExecRequest>(queue_depth.max(1));
+            let bundle = bundle.clone();
+            let busy = Arc::new(AtomicU64::new(0));
+            let busy_w = busy.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cuspamm-dev{dev}"))
+                .spawn(move || {
+                    let rt = match Runtime::new(&bundle) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            log::error!("device {dev}: client init failed: {e}");
+                            // Drain, failing every request.
+                            for req in rx {
+                                let _ = req
+                                    .reply
+                                    .send(Err(Error::Coordinator(format!(
+                                        "device {dev} failed to initialize"
+                                    ))));
+                            }
+                            return;
+                        }
+                    };
+                    for req in rx {
+                        let t = std::time::Instant::now();
+                        let result = Self::run_one(&rt, &req);
+                        busy_w.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        // Receiver may have given up; ignore send failure.
+                        let _ = req.reply.send(result);
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn device {dev}: {e}")))?;
+            workers.push(Worker {
+                sender: tx,
+                handle: Some(handle),
+                busy_nanos: busy,
+            });
+        }
+        Ok(DevicePool { workers })
+    }
+
+    fn run_one(rt: &Runtime, req: &ExecRequest) -> Result<Vec<HostTensor>> {
+        let mut literals = Vec::with_capacity(req.inputs.len());
+        for (dims, data) in &req.inputs {
+            literals.push(literal_f32(dims, data)?);
+        }
+        let outs = rt.execute(&req.artifact, &literals)?;
+        outs.iter().map(literal_to_vec).collect()
+    }
+
+    pub fn devices(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a request to device `dev`; blocks if its queue is full
+    /// (backpressure, like a full CUDA stream).
+    pub fn submit(
+        &self,
+        dev: usize,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.workers[dev]
+            .sender
+            .send(ExecRequest {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Coordinator(format!("device {dev} is gone")))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit and wait (single round trip).
+    pub fn call(
+        &self,
+        dev: usize,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        self.submit(dev, artifact, inputs)?
+            .recv()
+            .map_err(|_| Error::Coordinator(format!("device {dev} dropped reply")))?
+    }
+
+    /// Modeled device-busy seconds per device (the "GPU time" metric).
+    pub fn busy_secs(&self) -> Vec<f64> {
+        self.workers
+            .iter()
+            .map(|w| w.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9)
+            .collect()
+    }
+
+    pub fn reset_busy(&self) {
+        for w in &self.workers {
+            w.busy_nanos.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                // Swap the real sender out and drop it so the worker's
+                // `for req in rx` loop terminates, then join.
+                let (dummy_tx, _dummy_rx) = mpsc::sync_channel::<ExecRequest>(1);
+                drop(std::mem::replace(&mut w.sender, dummy_tx));
+                let _ = h.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Matrix/tensor ↔ `xla::Literal` conversion helpers.
+
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+
+/// Build an f32 literal of the given shape from a flat slice (no copy into
+/// an intermediate Vec — `create_from_shape_and_untyped_data` consumes raw
+/// bytes directly).
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let count: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != count && !(dims.is_empty() && data.len() == 1) {
+        return Err(Error::Shape(format!(
+            "literal shape {dims:?} needs {count} values, got {}",
+            data.len()
+        )));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Scalar f32 literal (shape `f32[]`).
+pub fn literal_scalar(x: f32) -> Result<xla::Literal> {
+    literal_f32(&[], &[x])
+}
+
+/// Matrix → 2-D literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    literal_f32(&[m.rows(), m.cols()], m.data())
+}
+
+/// Literal → flat f32 vec + dims.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<(Vec<usize>, Vec<f32>)> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok((dims, data))
+}
+
+/// Literal → Matrix (must be rank 2).
+pub fn literal_to_matrix(lit: &xla::Literal) -> Result<Matrix> {
+    let (dims, data) = literal_to_vec(lit)?;
+    if dims.len() != 2 {
+        return Err(Error::Shape(format!("expected rank-2 literal, got {dims:?}")));
+    }
+    Matrix::from_vec(dims[0], dims[1], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::randn(3, 5, 1);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = literal_scalar(3.25).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![3.25]);
+    }
+
+    #[test]
+    fn rank3_roundtrip() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lit = literal_f32(&[2, 3, 4], &data).unwrap();
+        let (dims, back) = literal_to_vec(&lit).unwrap();
+        assert_eq!(dims, vec![2, 3, 4]);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts produced by
+//! `make artifacts` and executes them on PJRT — the only place the crate
+//! touches XLA.  One compiled executable per model variant, cached.
+//!
+//! `PjRtClient` in the `xla` crate is `Rc`-based (not `Send`), so each
+//! simulated device ([`devicesim`]) owns its *own* client + executable
+//! cache on its worker thread — which is also the honest model of one
+//! context per physical GPU.
+
+pub mod artifact;
+pub mod client;
+pub mod devicesim;
+pub mod literal;
+
+pub use artifact::{ArtifactBundle, ArtifactMeta};
+pub use client::Runtime;
+pub use devicesim::{DevicePool, ExecRequest, HostTensor};

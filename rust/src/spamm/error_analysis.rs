@@ -1,0 +1,140 @@
+//! Error analysis for SpAMM — the theory the paper leans on (§5.1).
+//!
+//! Artemov (2019) proves that for matrices with exponential decay the
+//! absolute SpAMM error behaves as ‖E‖_F = O(N^{1/2} · τ^{p/2}) with
+//! p < 2.  This module provides:
+//!
+//! * an *a-priori* upper bound on ‖E‖_F from the schedule alone (the sum
+//!   of skipped norm products — submultiplicativity of ‖·‖_F), usable
+//!   before any multiplication happens;
+//! * an empirical scaling-exponent estimator used by the tests/benches to
+//!   check the measured error against Artemov's τ^{p/2}, p < 2 form.
+
+use crate::error::Result;
+use crate::matrix::Matrix;
+use crate::spamm::schedule::Schedule;
+
+/// A-priori bound: ‖E‖_F ≤ Σ_{skipped (i,k,j)} ‖A[i,k]‖·‖B[k,j]‖.
+///
+/// Follows from E = Σ_skipped A[i,k]B[k,j] (as block contributions) and
+/// ‖A[i,k]B[k,j]‖_F ≤ ‖A[i,k]‖_F·‖B[k,j]‖_F; each skipped product is
+/// < τ by construction, so the bound is also ≤ τ·(#skipped).
+pub fn apriori_error_bound(na: &Matrix, nb: &Matrix, tau: f32) -> Result<f64> {
+    let sched = Schedule::build(na, nb, tau)?;
+    let mut bound = 0.0f64;
+    for i in 0..sched.tile_rows {
+        for j in 0..sched.tile_cols {
+            let kept = sched.ks(i, j);
+            let mut ki = 0usize;
+            for k in 0..sched.tile_k {
+                if ki < kept.len() && kept[ki] == k as u32 {
+                    ki += 1;
+                    continue;
+                }
+                bound += (na[(i, k)] as f64) * (nb[(k, j)] as f64);
+            }
+        }
+    }
+    Ok(bound)
+}
+
+/// Least-squares slope of log(err) vs log(τ) over (τ, ‖E‖) samples with
+/// err > floor.  Artemov: slope = p/2 with p < 2 ⇒ slope < 1.
+pub fn tau_scaling_exponent(samples: &[(f64, f64)], floor: f64) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|(t, e)| *t > 0.0 && *e > floor)
+        .map(|(t, e)| (t.ln(), e.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    Some((n * sxy - sx * sy) / denom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::tiling::PaddedMatrix;
+    use crate::spamm::normmap::normmap;
+    use crate::spamm::reference::spamm_flat_host;
+
+    fn setup(n: usize) -> (Matrix, Matrix, Matrix, Matrix) {
+        let a = Matrix::decay_exponential(n, 1.0, 0.7, 5);
+        let b = Matrix::decay_exponential(n, 1.0, 0.7, 6);
+        let na = normmap(&PaddedMatrix::new(&a, 32));
+        let nb = normmap(&PaddedMatrix::new(&b, 32));
+        (a, b, na, nb)
+    }
+
+    #[test]
+    fn bound_dominates_measured_error() {
+        let (a, b, na, nb) = setup(128);
+        let exact = a.matmul(&b).unwrap();
+        for tau in [1e-4f32, 1e-3, 1e-2, 1e-1] {
+            let c = spamm_flat_host(&a, &b, tau, 32).unwrap();
+            let err = exact.error_fnorm(&c).unwrap();
+            let bound = apriori_error_bound(&na, &nb, tau).unwrap();
+            assert!(
+                err <= bound + 1e-3,
+                "τ={tau}: measured {err} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn bound_zero_when_nothing_skipped() {
+        let (_, _, na, nb) = setup(64);
+        assert_eq!(apriori_error_bound(&na, &nb, 0.0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn bound_monotone_in_tau() {
+        let (_, _, na, nb) = setup(128);
+        let mut prev = -1.0;
+        for tau in [0.0f32, 1e-4, 1e-2, 1.0] {
+            let b = apriori_error_bound(&na, &nb, tau).unwrap();
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn artemov_exponent_below_one() {
+        // Measured error must scale sub-linearly in τ (p/2 < 1).
+        let (a, b, _, _) = setup(128);
+        let exact = a.matmul(&b).unwrap();
+        let mut samples = Vec::new();
+        for tau in [1e-5f32, 1e-4, 1e-3, 1e-2, 1e-1] {
+            let c = spamm_flat_host(&a, &b, tau, 32).unwrap();
+            samples.push((tau as f64, exact.error_fnorm(&c).unwrap()));
+        }
+        let slope = tau_scaling_exponent(&samples, 1e-9).expect("enough samples");
+        assert!(slope > 0.0, "error must grow with τ, slope {slope}");
+        assert!(slope < 1.5, "Artemov p/2 < 1 (slack for sampling), slope {slope}");
+    }
+
+    #[test]
+    fn exponent_estimator_on_known_powerlaw() {
+        // err = τ^0.7 exactly → slope 0.7.
+        let samples: Vec<(f64, f64)> =
+            [1e-4, 1e-3, 1e-2, 1e-1].iter().map(|&t| (t, f64::powf(t, 0.7))).collect();
+        let s = tau_scaling_exponent(&samples, 0.0).unwrap();
+        assert!((s - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exponent_estimator_degenerate() {
+        assert!(tau_scaling_exponent(&[], 0.0).is_none());
+        assert!(tau_scaling_exponent(&[(1e-3, 1.0)], 0.0).is_none());
+    }
+}

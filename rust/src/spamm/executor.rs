@@ -1,0 +1,255 @@
+//! Single-device SpAMM executor: the paper's two-kernel pipeline driven
+//! from Rust — get-norm (host or device), τ tuning, schedule compaction,
+//! and batched tile-GEMM execution with genuine work skipping.
+
+use std::time::Instant;
+
+use crate::config::{Precision, SpammConfig};
+use crate::error::Result;
+use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
+use crate::matrix::Matrix;
+use crate::runtime::{ArtifactBundle, Runtime};
+use crate::spamm::normmap::normmap;
+use crate::spamm::schedule::{ProductRef, Schedule};
+use crate::spamm::tuner::{self, TuneParams};
+
+pub use crate::spamm::tuner::TuneResult;
+
+/// Timing/counting breakdown of one multiply call.
+#[derive(Clone, Debug, Default)]
+pub struct MultiplyStats {
+    pub valid_products: usize,
+    pub total_products: usize,
+    pub valid_ratio: f64,
+    pub norm_secs: f64,
+    pub schedule_secs: f64,
+    pub gather_secs: f64,
+    pub exec_secs: f64,
+    pub scatter_secs: f64,
+    pub total_secs: f64,
+    pub batches: usize,
+}
+
+/// Single-device SpAMM engine.
+pub struct SpammEngine {
+    rt: Runtime,
+    cfg: SpammConfig,
+}
+
+impl SpammEngine {
+    pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<SpammEngine> {
+        cfg.validate()?;
+        Ok(SpammEngine {
+            rt: Runtime::new(bundle)?,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &SpammConfig {
+        &self.cfg
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// normmap of a padded matrix — on-device (get-norm artifact) when
+    /// configured and available, host otherwise.
+    pub fn normmap_of(&self, p: &PaddedMatrix) -> Result<Matrix> {
+        if self.cfg.device_normmap && p.inner.rows() == p.inner.cols() {
+            let mxu = self.cfg.precision == Precision::Bf16;
+            if self
+                .rt
+                .bundle()
+                .getnorm(p.inner.rows(), self.cfg.lonum, mxu)
+                .is_ok()
+            {
+                return self.rt.getnorm(&p.inner, self.cfg.lonum, mxu);
+            }
+            log::debug!(
+                "no get-norm artifact for n={}, falling back to host",
+                p.inner.rows()
+            );
+        }
+        Ok(normmap(p))
+    }
+
+    /// Tune τ for a target valid ratio (§3.5.2; host twin of tune.py).
+    pub fn tune_tau(&self, a: &Matrix, b: &Matrix, target: f64) -> Result<TuneResult> {
+        let pa = PaddedMatrix::new(a, self.cfg.lonum);
+        let pb = PaddedMatrix::new(b, self.cfg.lonum);
+        let na = self.normmap_of(&pa)?;
+        let nb = self.normmap_of(&pb)?;
+        tuner::tune_tau(&na, &nb, target, TuneParams::default())
+    }
+
+    /// SpAMM multiply: C ≈ A·B skipping tile products under τ.
+    pub fn multiply(&self, a: &Matrix, b: &Matrix, tau: f32) -> Result<Matrix> {
+        Ok(self.multiply_with_stats(a, b, tau)?.0)
+    }
+
+    /// Multiply with a full stats breakdown.
+    pub fn multiply_with_stats(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        tau: f32,
+    ) -> Result<(Matrix, MultiplyStats)> {
+        let t_total = Instant::now();
+        let mut stats = MultiplyStats::default();
+
+        let pa = PaddedMatrix::new(a, self.cfg.lonum);
+        let pb = PaddedMatrix::new(b, self.cfg.lonum);
+
+        let t = Instant::now();
+        let na = self.normmap_of(&pa)?;
+        let nb = self.normmap_of(&pb)?;
+        stats.norm_secs = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let sched = Schedule::build(&na, &nb, tau)?;
+        stats.schedule_secs = t.elapsed().as_secs_f64();
+        stats.valid_products = sched.valid_products();
+        stats.total_products = sched.total_products();
+        stats.valid_ratio = sched.valid_ratio();
+
+        let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), self.cfg.lonum);
+        let all_tiles: Vec<(usize, usize)> = (0..sched.tile_rows)
+            .flat_map(|i| (0..sched.tile_cols).map(move |j| (i, j)))
+            .collect();
+        execute_products(
+            &self.rt,
+            &self.cfg,
+            &pa,
+            &pb,
+            &mut pc,
+            &sched,
+            &all_tiles,
+            &mut stats,
+        )?;
+
+        stats.total_secs = t_total.elapsed().as_secs_f64();
+        Ok((pc.crop(), stats))
+    }
+
+    /// Dense baseline (cuBLAS stand-in) on the same runtime.
+    pub fn dense(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        self.rt.dense(a, b, self.cfg.precision.as_str())
+    }
+
+    /// The paper's general form (§2.1): C ← α·SpAMM(A, B, τ) + β·C.
+    pub fn multiply_axpby(
+        &self,
+        alpha: f32,
+        a: &Matrix,
+        b: &Matrix,
+        tau: f32,
+        beta: f32,
+        c: &Matrix,
+    ) -> Result<Matrix> {
+        if c.rows() != a.rows() || c.cols() != b.cols() {
+            return Err(crate::error::Error::Shape(format!(
+                "axpby: C is {}x{}, want {}x{}",
+                c.rows(),
+                c.cols(),
+                a.rows(),
+                b.cols()
+            )));
+        }
+        let mut prod = self.multiply(a, b, tau)?;
+        for (p, &cv) in prod.data_mut().iter_mut().zip(c.data()) {
+            *p = alpha * *p + beta * cv;
+        }
+        Ok(prod)
+    }
+
+    /// Fused single-call SpAMM (on-device normmaps + masked multiply) —
+    /// the numerics oracle path; requires a `spamm_fused_n{N}` artifact.
+    pub fn multiply_fused(&self, a: &Matrix, b: &Matrix, tau: f32) -> Result<Matrix> {
+        self.rt
+            .spamm_fused(a, b, tau, self.cfg.precision.as_str())
+    }
+}
+
+/// Greedy bucket packing: take the largest full bucket that fits the
+/// remainder; the final partial chunk uses the smallest covering bucket.
+/// Keeps zero-padding waste on the tail only (e.g. 153 products over
+/// buckets {16,64,256} → 64+64+16+16 with 4.6% padding, instead of one
+/// padded 256-call with 67% padding).
+pub fn pack_chunks<'a>(
+    bundle: &crate::runtime::ArtifactBundle,
+    cfg: &SpammConfig,
+    products: &'a [ProductRef],
+) -> Result<Vec<&'a [ProductRef]>> {
+    let precision = cfg.precision.as_str();
+    let buckets = bundle.tilegemm_buckets(cfg.lonum, precision);
+    if buckets.is_empty() {
+        return Err(crate::error::Error::Artifact(format!(
+            "no tilegemm artifacts for lonum {} precision {precision}",
+            cfg.lonum
+        )));
+    }
+    let cap_limit = cfg.max_tile_batch.clamp(1, *buckets.last().unwrap());
+    let mut chunks = Vec::new();
+    let mut rest = products;
+    while !rest.is_empty() {
+        let take = buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= rest.len() && b <= cap_limit)
+            .copied()
+            .unwrap_or(rest.len()) // below the smallest bucket
+            .min(rest.len());
+        let (head, tail) = rest.split_at(take);
+        chunks.push(head);
+        rest = tail;
+    }
+    Ok(chunks)
+}
+
+/// Execute the surviving products of `tiles` in batched tile-GEMM calls,
+/// scatter-accumulating into `pc`.  Shared by the single-device engine and
+/// the per-device workers of the coordinator.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_products(
+    rt: &Runtime,
+    cfg: &SpammConfig,
+    pa: &PaddedMatrix,
+    pb: &PaddedMatrix,
+    pc: &mut PaddedMatrix,
+    sched: &Schedule,
+    tiles: &[(usize, usize)],
+    stats: &mut MultiplyStats,
+) -> Result<()> {
+    let products: Vec<ProductRef> = sched
+        .products_for_tiles(tiles.iter().copied())
+        .collect();
+    let precision = cfg.precision.as_str();
+    let chunks = pack_chunks(rt.bundle(), cfg, &products)?;
+    let mut a_buf = Vec::new();
+    let mut b_buf = Vec::new();
+    for chunk in chunks {
+        // Pick the smallest compiled batch bucket that fits this chunk.
+        let meta = rt.bundle().tilegemm(chunk.len(), cfg.lonum, precision)?;
+        let cap = meta.param_usize("batch").unwrap_or(chunk.len());
+        debug_assert!(cap >= chunk.len());
+
+        let t = Instant::now();
+        let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
+        let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
+        gather_tiles(pa, &a_ids, cap, &mut a_buf)?;
+        gather_tiles(pb, &b_ids, cap, &mut b_buf)?;
+        stats.gather_secs += t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let out = rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision)?;
+        stats.exec_secs += t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
+        scatter_accumulate(pc, &c_ids, &out)?;
+        stats.scatter_secs += t.elapsed().as_secs_f64();
+        stats.batches += 1;
+    }
+    Ok(())
+}

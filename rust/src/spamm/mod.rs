@@ -1,0 +1,18 @@
+//! The SpAMM core: normmaps, schedule compaction (bitmap → map_offset),
+//! load balance, τ tuning, reference implementations, and the
+//! single-device executor.  The multi-device coordinator builds on these
+//! in [`crate::coordinator`].
+
+pub mod balance;
+pub mod error_analysis;
+pub mod executor;
+pub mod normmap;
+pub mod power;
+pub mod purification;
+pub mod reference;
+pub mod schedule;
+pub mod tuner;
+
+pub use executor::{MultiplyStats, SpammEngine};
+pub use schedule::Schedule;
+pub use tuner::{tune_tau, TuneParams, TuneResult};

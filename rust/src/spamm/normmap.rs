@@ -1,0 +1,69 @@
+//! Host-side get-norm: tile Frobenius norms of a padded matrix.  Twin of
+//! the Layer-1 `get_norm` Pallas kernel (which the runtime can use instead
+//! via `SpammConfig::device_normmap`); both must agree to float tolerance —
+//! rust/tests/integration.rs checks that.
+
+use crate::matrix::tiling::PaddedMatrix;
+use crate::matrix::Matrix;
+
+/// normmap[i, j] = ‖tile(i, j)‖_F (f64 accumulation, f32 result — same
+/// contract as the kernel, which accumulates the reduce in f32 over ≤128²
+/// elements; the difference is below f32 epsilon·k).
+pub fn normmap(p: &PaddedMatrix) -> Matrix {
+    let (tr, tc, l) = (p.tile_rows(), p.tile_cols(), p.lonum);
+    let cols = p.inner.cols();
+    let data = p.inner.data();
+    let mut out = Matrix::zeros(tr, tc);
+    for ti in 0..tr {
+        for tj in 0..tc {
+            let mut acc = 0.0f64;
+            for r in 0..l {
+                let row = &data[(ti * l + r) * cols + tj * l..][..l];
+                for &x in row {
+                    acc += (x as f64) * (x as f64);
+                }
+            }
+            out[(ti, tj)] = acc.sqrt() as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_tile_is_full_fnorm() {
+        let m = Matrix::randn(32, 32, 1);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap(&p);
+        assert_eq!((nm.rows(), nm.cols()), (1, 1));
+        assert!((nm[(0, 0)] as f64 - m.fnorm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sum_of_squares_invariant() {
+        let m = Matrix::randn(96, 64, 2);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap(&p);
+        let total: f64 = nm.data().iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((total - m.fnorm().powi(2)).abs() / total < 1e-6);
+    }
+
+    #[test]
+    fn padded_region_contributes_zero() {
+        let m = Matrix::randn(40, 40, 3);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap(&p);
+        assert_eq!((nm.rows(), nm.cols()), (2, 2));
+        // the (1,1) tile is 8x8 real data + zero padding
+        let mut acc = 0.0f64;
+        for r in 32..40 {
+            for c in 32..40 {
+                acc += (m[(r, c)] as f64).powi(2);
+            }
+        }
+        assert!((nm[(1, 1)] as f64 - acc.sqrt()).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,239 @@
+//! Host reference implementations: the original recursive SpAMM
+//! (Algorithm 1, quad-tree) and the flat masked SpAMM — used as oracles by
+//! tests and by the accuracy-analysis benches (no XLA involved).
+
+use crate::error::{Error, Result};
+use crate::matrix::tiling::PaddedMatrix;
+use crate::matrix::Matrix;
+use crate::spamm::normmap::normmap;
+use crate::spamm::schedule::Schedule;
+
+/// Flat SpAMM on the host: schedule + per-tile host matmuls.
+/// C[i,j] = Σ_{k: ‖A[i,k]‖·‖B[k,j]‖ ≥ τ} A[i,k]·B[k,j].
+pub fn spamm_flat_host(a: &Matrix, b: &Matrix, tau: f32, lonum: usize) -> Result<Matrix> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "spamm: {}x{} @ {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let pa = PaddedMatrix::new(a, lonum);
+    let pb = PaddedMatrix::new(b, lonum);
+    let na = normmap(&pa);
+    let nb = normmap(&pb);
+    let sched = Schedule::build(&na, &nb, tau)?;
+    let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), lonum);
+
+    let l = lonum;
+    let mut ta = vec![0.0f32; l * l];
+    let mut tb = vec![0.0f32; l * l];
+    let mut tc = vec![0.0f32; l * l];
+    for i in 0..sched.tile_rows {
+        for j in 0..sched.tile_cols {
+            for &k in sched.ks(i, j) {
+                pa.copy_tile(i, k as usize, &mut ta);
+                pb.copy_tile(k as usize, j, &mut tb);
+                tile_matmul(&ta, &tb, &mut tc, l);
+                pc.inner.add_block(i * l, j * l, l, &tc);
+            }
+        }
+    }
+    Ok(pc.crop())
+}
+
+fn tile_matmul(a: &[f32], b: &[f32], c: &mut [f32], l: usize) {
+    c.fill(0.0);
+    for i in 0..l {
+        for k in 0..l {
+            let av = a[i * l + k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[k * l..(k + 1) * l];
+            let crow = &mut c[i * l..(i + 1) * l];
+            for j in 0..l {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Original recursive SpAMM (Algorithm 1): quad-tree, cut off at `lonum`.
+/// Inputs must be square; they are zero-padded to the next power-of-two
+/// multiple of lonum (padding norms are 0, so padded branches prune).
+pub fn spamm_recursive(a: &Matrix, b: &Matrix, tau: f32, lonum: usize) -> Result<Matrix> {
+    if a.rows() != a.cols() || b.rows() != b.cols() || a.rows() != b.rows() {
+        return Err(Error::Shape("recursive SpAMM needs square same-size inputs".into()));
+    }
+    let n0 = a.rows();
+    let mut n = lonum;
+    while n < n0 {
+        n *= 2;
+    }
+    let mut ap = Matrix::zeros(n, n);
+    let mut bp = Matrix::zeros(n, n);
+    for r in 0..n0 {
+        ap.data_mut()[r * n..r * n + n0].copy_from_slice(a.row(r));
+        bp.data_mut()[r * n..r * n + n0].copy_from_slice(b.row(r));
+    }
+    let mut cp = Matrix::zeros(n, n);
+    rec(&ap, &bp, &mut cp, 0, 0, 0, 0, 0, 0, n, tau, lonum);
+    let mut c = Matrix::zeros(n0, n0);
+    for r in 0..n0 {
+        c.data_mut()[r * n0..(r + 1) * n0].copy_from_slice(&cp.data()[r * n..r * n + n0]);
+    }
+    Ok(c)
+}
+
+/// Frobenius norm of the size×size block of m at (r0, c0).
+fn block_norm(m: &Matrix, r0: usize, c0: usize, size: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for r in r0..r0 + size {
+        for c in c0..c0 + size {
+            let x = m[(r, c)] as f64;
+            acc += x * x;
+        }
+    }
+    acc.sqrt()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+    ar: usize,
+    ac: usize,
+    br: usize,
+    bc: usize,
+    cr: usize,
+    cc: usize,
+    size: usize,
+    tau: f32,
+    lonum: usize,
+) {
+    if size <= lonum {
+        // leaf: dense block multiply-accumulate
+        for i in 0..size {
+            for k in 0..size {
+                let av = a[(ar + i, ac + k)];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..size {
+                    c[(cr + i, cc + j)] += av * b[(br + k, bc + j)];
+                }
+            }
+        }
+        return;
+    }
+    let h = size / 2;
+    for i in 0..2 {
+        for j in 0..2 {
+            for k in 0..2 {
+                // Norm test on the child product (Alg. 1 lines 7/10).
+                let an = block_norm(a, ar + i * h, ac + k * h, h);
+                let bn = block_norm(b, br + k * h, bc + j * h, h);
+                if (an * bn) as f32 >= tau {
+                    rec(
+                        a,
+                        b,
+                        c,
+                        ar + i * h,
+                        ac + k * h,
+                        br + k * h,
+                        bc + j * h,
+                        cr + i * h,
+                        cc + j * h,
+                        h,
+                        tau,
+                        lonum,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_tau_zero_is_dense() {
+        let a = Matrix::randn(96, 96, 1);
+        let b = Matrix::randn(96, 96, 2);
+        let got = spamm_flat_host(&a, &b, 0.0, 32).unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(got.error_fnorm(&want).unwrap() < 1e-2);
+    }
+
+    #[test]
+    fn flat_rectangular_with_padding() {
+        let a = Matrix::randn(50, 70, 3);
+        let b = Matrix::randn(70, 40, 4);
+        let got = spamm_flat_host(&a, &b, 0.0, 32).unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert_eq!((got.rows(), got.cols()), (50, 40));
+        assert!(got.error_fnorm(&want).unwrap() < 1e-2);
+    }
+
+    #[test]
+    fn recursive_tau_zero_is_dense() {
+        let a = Matrix::randn(64, 64, 5);
+        let b = Matrix::randn(64, 64, 6);
+        let got = spamm_recursive(&a, &b, 0.0, 32).unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(got.error_fnorm(&want).unwrap() < 1e-2);
+    }
+
+    #[test]
+    fn recursive_non_pow2_padding() {
+        let a = Matrix::randn(48, 48, 7);
+        let b = Matrix::randn(48, 48, 8);
+        let got = spamm_recursive(&a, &b, 0.0, 16).unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(got.error_fnorm(&want).unwrap() < 1e-2);
+    }
+
+    #[test]
+    fn flat_error_monotone_in_tau() {
+        let a = Matrix::decay_exponential(128, 1.0, 0.5, 9);
+        let b = Matrix::decay_exponential(128, 1.0, 0.5, 10);
+        let exact = a.matmul(&b).unwrap();
+        let mut prev = -1.0;
+        for tau in [0.0f32, 1e-4, 1e-2, 1.0] {
+            let c = spamm_flat_host(&a, &b, tau, 32).unwrap();
+            let e = exact.error_fnorm(&c).unwrap();
+            assert!(e >= prev - 1e-9, "tau={tau}: {e} < {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn flat_error_bounded_by_recursive_error() {
+        // Interior pruning makes recursion skip ⊇ flat skips.
+        let a = Matrix::decay_exponential(128, 1.0, 0.5, 11);
+        let b = Matrix::decay_exponential(128, 1.0, 0.5, 12);
+        let exact = a.matmul(&b).unwrap();
+        for tau in [1e-3f32, 1e-2, 1e-1] {
+            let ef = exact
+                .error_fnorm(&spamm_flat_host(&a, &b, tau, 32).unwrap())
+                .unwrap();
+            let er = exact
+                .error_fnorm(&spamm_recursive(&a, &b, tau, 32).unwrap())
+                .unwrap();
+            assert!(ef <= er + 1e-3, "tau={tau}: flat {ef} rec {er}");
+        }
+    }
+
+    #[test]
+    fn huge_tau_gives_zero() {
+        let a = Matrix::randn(64, 64, 13);
+        let c = spamm_flat_host(&a, &a, f32::MAX, 32).unwrap();
+        assert_eq!(c.fnorm(), 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Schedule compaction — the paper's bitmap → map_offset transform
+//! (Alg. 2 lines 5–14, Fig. 3b), hoisted from the CUDA kernel into the
+//! coordinator (DESIGN.md §2: on a CPU-PJRT backend this is what makes
+//! skipped tiles *actually* skipped).
+//!
+//! For every output tile C[i,j] the bitmap over k marks which products
+//! ‖A[i,k]‖·‖B[k,j]‖ ≥ τ survive; the compacted per-tile k-lists are the
+//! map_offset equivalent, and their concatenation is the dense batch the
+//! tile-GEMM artifacts execute.
+
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+
+/// Compacted SpAMM schedule for C = A·B with BDIM-tiled operands.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Tile grid: C is tile_rows × tile_cols, contraction depth tile_k.
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    pub tile_k: usize,
+    /// Per output tile (row-major), the compacted list of surviving k.
+    pub valid_k: Vec<Vec<u32>>,
+}
+
+impl Schedule {
+    /// Build from normmaps: na is (tile_rows × tile_k), nb is
+    /// (tile_k × tile_cols).
+    pub fn build(na: &Matrix, nb: &Matrix, tau: f32) -> Result<Schedule> {
+        if na.cols() != nb.rows() {
+            return Err(Error::Shape(format!(
+                "normmap shapes {}x{} vs {}x{}",
+                na.rows(),
+                na.cols(),
+                nb.rows(),
+                nb.cols()
+            )));
+        }
+        let (tr, tk, tc) = (na.rows(), na.cols(), nb.cols());
+        let mut valid_k = Vec::with_capacity(tr * tc);
+        for i in 0..tr {
+            for j in 0..tc {
+                // bitmap[k] = [‖A[i,k]‖·‖B[k,j]‖ ≥ τ]; compacted on the fly
+                // (the map_offset prefix-sum of Alg. 2 lines 9–14).
+                let mut ks = Vec::new();
+                for k in 0..tk {
+                    if na[(i, k)] * nb[(k, j)] >= tau {
+                        ks.push(k as u32);
+                    }
+                }
+                valid_k.push(ks);
+            }
+        }
+        Ok(Schedule {
+            tile_rows: tr,
+            tile_cols: tc,
+            tile_k: tk,
+            valid_k,
+        })
+    }
+
+    /// The paper's *valid multiplication* count v for tile (i, j) (§3.5.1).
+    pub fn v(&self, i: usize, j: usize) -> usize {
+        self.valid_k[i * self.tile_cols + j].len()
+    }
+
+    /// The V matrix of §3.5.1 (per-tile valid product counts).
+    pub fn v_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.tile_rows, self.tile_cols);
+        for i in 0..self.tile_rows {
+            for j in 0..self.tile_cols {
+                m[(i, j)] = self.v(i, j) as f32;
+            }
+        }
+        m
+    }
+
+    /// Total surviving tile products.
+    pub fn valid_products(&self) -> usize {
+        self.valid_k.iter().map(|v| v.len()).sum()
+    }
+
+    /// All possible tile products (BDIM³ for square).
+    pub fn total_products(&self) -> usize {
+        self.tile_rows * self.tile_cols * self.tile_k
+    }
+
+    /// valid ratio = Σ V / BDIM³ (§3.5.2).
+    pub fn valid_ratio(&self) -> f64 {
+        self.valid_products() as f64 / self.total_products().max(1) as f64
+    }
+
+    /// Iterate the compacted products of one output tile as (k) list.
+    pub fn ks(&self, i: usize, j: usize) -> &[u32] {
+        &self.valid_k[i * self.tile_cols + j]
+    }
+
+    /// Flatten a subset of output tiles into a (a_tile, b_tile, c_tile)
+    /// product list — the batch feed for tile-GEMM execution.
+    pub fn products_for_tiles<'a>(
+        &'a self,
+        tiles: impl IntoIterator<Item = (usize, usize)> + 'a,
+    ) -> impl Iterator<Item = ProductRef> + 'a {
+        tiles.into_iter().flat_map(move |(i, j)| {
+            self.ks(i, j).iter().map(move |&k| ProductRef {
+                a: (i, k as usize),
+                b: (k as usize, j),
+                c: (i, j),
+            })
+        })
+    }
+}
+
+/// One surviving tile product A[i,k]·B[k,j] → C[i,j].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProductRef {
+    pub a: (usize, usize),
+    pub b: (usize, usize),
+    pub c: (usize, usize),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nm(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn tau_zero_keeps_everything() {
+        let na = nm(3, 4, |_, _| 1.0);
+        let nb = nm(4, 2, |_, _| 1.0);
+        let s = Schedule::build(&na, &nb, 0.0).unwrap();
+        assert_eq!(s.valid_products(), 3 * 4 * 2);
+        assert_eq!(s.valid_ratio(), 1.0);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(s.ks(i, j), &[0, 1, 2, 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn huge_tau_keeps_nothing() {
+        let na = nm(2, 2, |_, _| 1.0);
+        let s = Schedule::build(&na, &na, 10.0).unwrap();
+        assert_eq!(s.valid_products(), 0);
+        assert_eq!(s.valid_ratio(), 0.0);
+    }
+
+    #[test]
+    fn threshold_is_inclusive() {
+        // The paper's test is ≥ τ (Alg. 1 line 7).
+        let na = nm(1, 1, |_, _| 2.0);
+        let nb = nm(1, 1, |_, _| 3.0);
+        let s = Schedule::build(&na, &nb, 6.0).unwrap();
+        assert_eq!(s.valid_products(), 1);
+        let s = Schedule::build(&na, &nb, 6.0 + 1e-4).unwrap();
+        assert_eq!(s.valid_products(), 0);
+    }
+
+    #[test]
+    fn selective_k() {
+        // na row 0 = [1, 0], nb col 0 = [1, 1]: only k=0 survives τ=0.5.
+        let na = nm(1, 2, |_, k| if k == 0 { 1.0 } else { 0.0 });
+        let nb = nm(2, 1, |_, _| 1.0);
+        let s = Schedule::build(&na, &nb, 0.5).unwrap();
+        assert_eq!(s.ks(0, 0), &[0]);
+    }
+
+    #[test]
+    fn v_matrix_diagonal_dominates_for_decay() {
+        use crate::matrix::tiling::PaddedMatrix;
+        use crate::spamm::normmap::normmap;
+
+        let a = Matrix::decay_exponential(256, 1.0, 0.5, 1);
+        let p = PaddedMatrix::new(&a, 32);
+        let na = normmap(&p);
+        let s = Schedule::build(&na, &na, 1e-4).unwrap();
+        let v = s.v_matrix();
+        // §3.5.1's observation: v is largest near the diagonal.
+        let center = v[(4, 4)];
+        let corner = v[(0, 7)];
+        assert!(center > corner, "center {center} corner {corner}");
+    }
+
+    #[test]
+    fn products_cover_compaction() {
+        let na = nm(2, 3, |i, k| (i + k) as f32);
+        let nb = nm(3, 2, |k, j| (k * j) as f32 + 0.5);
+        let s = Schedule::build(&na, &nb, 1.0).unwrap();
+        let all: Vec<ProductRef> = s
+            .products_for_tiles((0..2).flat_map(|i| (0..2).map(move |j| (i, j))))
+            .collect();
+        assert_eq!(all.len(), s.valid_products());
+        for p in all {
+            assert!(na[(p.a.0, p.a.1)] * nb[(p.b.0, p.b.1)] >= 1.0);
+            assert_eq!(p.a.1, p.b.0);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let na = nm(2, 3, |_, _| 1.0);
+        let nb = nm(2, 2, |_, _| 1.0);
+        assert!(Schedule::build(&na, &nb, 0.0).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Host-side τ search for a target valid ratio — the §3.5.2 procedure:
+//! expanding binary search over [0, k·ave] where ave is the mean norm
+//! product, k grows while the bracket cannot reach the target, and the
+//! user bounds iterations and tolerable ratio error.  Twin of the
+//! on-device `tune_tau` graph (python/compile/kernels/tune.py).
+
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+
+/// Search parameters (§3.5.2: "users can specify the number of iterations
+/// and tolerable error of valid ratio").
+#[derive(Clone, Copy, Debug)]
+pub struct TuneParams {
+    pub max_iters: usize,
+    pub tolerance: f64,
+}
+
+impl Default for TuneParams {
+    fn default() -> Self {
+        // The paper constrains its Table 1 tuning to 20 iterations and
+        // reports <1% ratio error.
+        TuneParams {
+            max_iters: 20,
+            tolerance: 0.01,
+        }
+    }
+}
+
+/// Result of a τ search.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneResult {
+    pub tau: f32,
+    pub achieved_ratio: f64,
+    pub iters: usize,
+    /// Final expansion coefficient k (1 = no expansion needed).
+    pub expansion_k: usize,
+}
+
+fn ratio_at(na: &Matrix, nb: &Matrix, tau: f32) -> f64 {
+    let (tr, tk, tc) = (na.rows(), na.cols(), nb.cols());
+    let mut count = 0usize;
+    for i in 0..tr {
+        for k in 0..tk {
+            let av = na[(i, k)];
+            for j in 0..tc {
+                if av * nb[(k, j)] >= tau {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count as f64 / (tr * tk * tc).max(1) as f64
+}
+
+/// Find τ such that valid_ratio(τ) ≈ target.
+pub fn tune_tau(
+    na: &Matrix,
+    nb: &Matrix,
+    target: f64,
+    params: TuneParams,
+) -> Result<TuneResult> {
+    if na.cols() != nb.rows() {
+        return Err(Error::Shape("tune_tau: normmap shapes".into()));
+    }
+    if !(0.0..=1.0).contains(&target) {
+        return Err(Error::Config(format!("target ratio {target} outside [0,1]")));
+    }
+    // ave = mean norm product (the tuning kernel's first step).
+    let (tr, tk, tc) = (na.rows(), na.cols(), nb.cols());
+    let mut sum = 0.0f64;
+    for i in 0..tr {
+        for k in 0..tk {
+            for j in 0..tc {
+                sum += (na[(i, k)] as f64) * (nb[(k, j)] as f64);
+            }
+        }
+    }
+    let ave = (sum / (tr * tk * tc).max(1) as f64) as f32;
+    if ave == 0.0 {
+        // All-zero inputs: every product is 0 ≥ τ=0 → ratio 1 at τ=0.
+        return Ok(TuneResult {
+            tau: 0.0,
+            achieved_ratio: 1.0,
+            iters: 0,
+            expansion_k: 1,
+        });
+    }
+
+    // Expansion phase: grow upper bound k·ave until ratio(k·ave) ≤ target.
+    let mut k = 1usize;
+    while ratio_at(na, nb, k as f32 * ave) > target && k < 1 << 20 {
+        k += 1;
+    }
+
+    // Bisection.
+    let (mut lo, mut hi) = (0.0f32, k as f32 * ave);
+    let mut iters = 0usize;
+    let mut best = TuneResult {
+        tau: hi,
+        achieved_ratio: ratio_at(na, nb, hi),
+        iters: 0,
+        expansion_k: k,
+    };
+    while iters < params.max_iters {
+        let mid = 0.5 * (lo + hi);
+        let r = ratio_at(na, nb, mid);
+        iters += 1;
+        if (r - target).abs() < (best.achieved_ratio - target).abs() {
+            best = TuneResult {
+                tau: mid,
+                achieved_ratio: r,
+                iters,
+                expansion_k: k,
+            };
+        }
+        if (r - target).abs() <= params.tolerance {
+            best.iters = iters;
+            return Ok(best);
+        }
+        if r > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best.iters = iters;
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::tiling::PaddedMatrix;
+    use crate::spamm::normmap::normmap;
+    use crate::spamm::schedule::Schedule;
+
+    fn decay_normmaps(n: usize) -> (Matrix, Matrix) {
+        let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+        let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+        (
+            normmap(&PaddedMatrix::new(&a, 32)),
+            normmap(&PaddedMatrix::new(&b, 32)),
+        )
+    }
+
+    #[test]
+    fn hits_table1_targets() {
+        let (na, nb) = decay_normmaps(512);
+        for target in [0.30, 0.25, 0.20, 0.15, 0.10, 0.05] {
+            let r = tune_tau(&na, &nb, target, TuneParams::default()).unwrap();
+            assert!(
+                (r.achieved_ratio - target).abs() < 0.01,
+                "target {target}: got {}",
+                r.achieved_ratio
+            );
+            // Consistency with the Schedule's own counting.
+            let s = Schedule::build(&na, &nb, r.tau).unwrap();
+            assert!((s.valid_ratio() - r.achieved_ratio).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ratio_monotone_decreasing_in_tau() {
+        let (na, nb) = decay_normmaps(256);
+        let mut prev = 1.1;
+        for t in [0.0f32, 1e-4, 1e-3, 1e-2, 1e-1, 1.0] {
+            let r = ratio_at(&na, &nb, t);
+            assert!(r <= prev + 1e-12);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn tiny_target_engages_expansion() {
+        let (na, nb) = decay_normmaps(256);
+        let r = tune_tau(&na, &nb, 0.002, TuneParams { max_iters: 40, tolerance: 0.001 })
+            .unwrap();
+        assert!(r.expansion_k > 1, "expected expansion, k={}", r.expansion_k);
+        assert!((r.achieved_ratio - 0.002).abs() < 0.005);
+    }
+
+    #[test]
+    fn zero_matrix_degenerate() {
+        let z = Matrix::zeros(4, 4);
+        let r = tune_tau(&z, &z, 0.5, TuneParams::default()).unwrap();
+        assert_eq!(r.tau, 0.0);
+        assert_eq!(r.achieved_ratio, 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_target() {
+        let (na, nb) = decay_normmaps(256);
+        assert!(tune_tau(&na, &nb, 1.5, TuneParams::default()).is_err());
+    }
+
+    #[test]
+    fn agrees_with_paper_iteration_budget() {
+        // <1% error within 20 iterations (the Table 1 protocol).
+        let (na, nb) = decay_normmaps(512);
+        let r = tune_tau(&na, &nb, 0.10, TuneParams { max_iters: 20, tolerance: 0.0 })
+            .unwrap();
+        assert!(r.iters <= 20);
+        assert!((r.achieved_ratio - 0.10).abs() < 0.01);
+    }
+}

@@ -1,0 +1,219 @@
+//! Additional sparse storage formats — COO and CSC, the other formats
+//! cuSPARSE supports (paper §5.2), plus format conversions.  Used by the
+//! SpMM kernel and the format-conversion ablation.
+
+use super::CsrMatrix;
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+
+/// Coordinate-format sparse matrix (row, col, value triplets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CooMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Triplets sorted by (row, col).
+    pub entries: Vec<(usize, usize, f32)>,
+}
+
+impl CooMatrix {
+    pub fn from_dense(m: &Matrix, threshold: f32) -> CooMatrix {
+        let mut entries = Vec::new();
+        for r in 0..m.rows() {
+            for (c, &x) in m.row(r).iter().enumerate() {
+                if x != 0.0 && x.abs() >= threshold {
+                    entries.push((r, c, x));
+                }
+            }
+        }
+        CooMatrix {
+            rows: m.rows(),
+            cols: m.cols(),
+            entries,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indptr = vec![0usize; self.rows + 1];
+        for &(r, _, _) in &self.entries {
+            indptr[r + 1] += 1;
+        }
+        for r in 0..self.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        let mut indices = vec![0usize; self.entries.len()];
+        let mut values = vec![0.0f32; self.entries.len()];
+        let mut cursor = indptr.clone();
+        for &(r, c, v) in &self.entries {
+            indices[cursor[r]] = c;
+            values[cursor[r]] = v;
+            cursor[r] += 1;
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for &(r, c, v) in &self.entries {
+            m[(r, c)] = v;
+        }
+        m
+    }
+}
+
+/// Compressed Sparse Column matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column pointer array, length cols+1.
+    pub indptr: Vec<usize>,
+    /// Row indices, sorted within each column.
+    pub indices: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl CscMatrix {
+    /// CSC of M = CSR of Mᵀ with rows/cols swapped back.
+    pub fn from_csr(csr: &CsrMatrix) -> CscMatrix {
+        let mut indptr = vec![0usize; csr.cols + 1];
+        for &c in &csr.indices {
+            indptr[c + 1] += 1;
+        }
+        for c in 0..csr.cols {
+            indptr[c + 1] += indptr[c];
+        }
+        let mut indices = vec![0usize; csr.nnz()];
+        let mut values = vec![0.0f32; csr.nnz()];
+        let mut cursor = indptr.clone();
+        for r in 0..csr.rows {
+            for i in csr.indptr[r]..csr.indptr[r + 1] {
+                let c = csr.indices[i];
+                indices[cursor[c]] = r;
+                values[cursor[c]] = csr.values[i];
+                cursor[c] += 1;
+            }
+        }
+        CscMatrix {
+            rows: csr.rows,
+            cols: csr.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for i in self.indptr[c]..self.indptr[c + 1] {
+                m[(self.indices[i], c)] = self.values[i];
+            }
+        }
+        m
+    }
+}
+
+/// SpMM: sparse (CSR) × dense → dense — cuSPARSE's sparse-dense workhorse,
+/// used when only one operand of a near-sparse product truncates well.
+pub fn spmm(a: &CsrMatrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols != b.rows() {
+        return Err(Error::Shape(format!(
+            "spmm: {}x{} @ {}x{}",
+            a.rows,
+            a.cols,
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let n = b.cols();
+    let mut out = Matrix::zeros(a.rows, n);
+    for r in 0..a.rows {
+        for i in a.indptr[r]..a.indptr[r + 1] {
+            let k = a.indices[i];
+            let av = a.values[i];
+            let brow = b.row(k);
+            let orow = &mut out.data_mut()[r * n..(r + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_dense_pair() -> (Matrix, Matrix) {
+        let mut a = Matrix::randn(20, 15, 1);
+        a.truncate(0.9);
+        let b = Matrix::randn(15, 12, 2);
+        (a, b)
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let (a, _) = sparse_dense_pair();
+        let coo = CooMatrix::from_dense(&a, 0.0);
+        assert_eq!(coo.to_dense(), a);
+        assert_eq!(coo.nnz(), CsrMatrix::from_dense(&a, 0.0).nnz());
+    }
+
+    #[test]
+    fn coo_to_csr_equals_direct() {
+        let (a, _) = sparse_dense_pair();
+        let via_coo = CooMatrix::from_dense(&a, 0.0).to_csr();
+        let direct = CsrMatrix::from_dense(&a, 0.0);
+        assert_eq!(via_coo, direct);
+        via_coo.validate().unwrap();
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let (a, _) = sparse_dense_pair();
+        let csr = CsrMatrix::from_dense(&a, 0.0);
+        let csc = CscMatrix::from_csr(&csr);
+        assert_eq!(csc.nnz(), csr.nnz());
+        assert_eq!(csc.to_dense(), a);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let (a, b) = sparse_dense_pair();
+        let csr = CsrMatrix::from_dense(&a, 0.0);
+        let got = spmm(&csr, &b).unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(got.error_fnorm(&want).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn spmm_shape_mismatch() {
+        let csr = CsrMatrix::from_dense(&Matrix::zeros(3, 4), 0.0);
+        assert!(spmm(&csr, &Matrix::zeros(5, 2)).is_err());
+    }
+
+    #[test]
+    fn empty_matrices() {
+        let z = Matrix::zeros(4, 4);
+        let coo = CooMatrix::from_dense(&z, 0.0);
+        assert_eq!(coo.nnz(), 0);
+        assert_eq!(coo.to_csr().nnz(), 0);
+        let csc = CscMatrix::from_csr(&coo.to_csr());
+        assert_eq!(csc.to_dense(), z);
+    }
+}

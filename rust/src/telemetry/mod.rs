@@ -1,0 +1,163 @@
+//! Telemetry substrate: a `log`-facade logger plus lightweight counters and
+//! wall-clock timers used by the coordinator and benches (env_logger is not
+//! in the offline crate set).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Stderr logger honoring `CUSPAMM_LOG` (error|warn|info|debug|trace).
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:5}] {}: {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops.
+pub fn init_logging() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let level = match std::env::var("CUSPAMM_LOG").as_deref() {
+            Ok("trace") => log::LevelFilter::Trace,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("info") => log::LevelFilter::Info,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("error") => log::LevelFilter::Error,
+            _ => log::LevelFilter::Warn,
+        };
+        let logger = Box::leak(Box::new(StderrLogger { level }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+}
+
+/// A named monotonically-increasing counter set (thread-safe).
+#[derive(Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Cumulative nanosecond clock, safe to bump from many threads.
+#[derive(Default)]
+pub struct NanoClock(AtomicU64);
+
+impl NanoClock {
+    pub fn add(&self, nanos: u64) {
+        self.0.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Scope timer: `let _t = ScopedTimer::new(&clock);`
+pub struct ScopedTimer<'a> {
+    clock: &'a NanoClock,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(clock: &'a NanoClock) -> Self {
+        ScopedTimer {
+            clock,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.clock.add(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::new();
+        c.add("x", 2);
+        c.add("x", 3);
+        c.add("y", 1);
+        assert_eq!(c.get("x"), 5);
+        assert_eq!(c.get("y"), 1);
+        assert_eq!(c.get("z"), 0);
+        assert_eq!(c.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn counters_threaded() {
+        let c = std::sync::Arc::new(Counters::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.add("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("n"), 4000);
+    }
+
+    #[test]
+    fn scoped_timer_accumulates() {
+        let clock = NanoClock::default();
+        {
+            let _t = ScopedTimer::new(&clock);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(clock.secs() >= 0.004);
+    }
+
+    #[test]
+    fn init_logging_idempotent() {
+        init_logging();
+        init_logging();
+        log::warn!("logger alive");
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal bfloat16 support (no `half` crate in the offline set).
+//!
+//! bf16 is the TPU MXU's native operand format and our stand-in for the
+//! paper's fp16 tensor-core inputs.  Conversion uses round-to-nearest-even,
+//! matching XLA's `convert` semantics so host-side error analysis agrees
+//! with what the artifacts compute.
+
+/// A bfloat16 value stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Convert from f32 with round-to-nearest-even (XLA semantics).
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Preserve NaN, force quiet bit.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen back to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Round-trip an f32 through bf16 — the "what the MXU sees" operator.
+#[inline]
+pub fn quantize(x: f32) -> f32 {
+    Bf16::from_f32(x).to_f32()
+}
+
+/// Quantize a whole slice in place.
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize(*x);
+    }
+}
+
+/// Max relative quantization step of bf16 (8 mantissa bits → 2^-8).
+pub const EPS: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(quantize(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut x = 1.0e-30f32;
+        while x < 1.0e30 {
+            let q = quantize(x);
+            assert!((q - x).abs() <= x * EPS, "x={x} q={q}");
+            x *= 3.7;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-9 is exactly halfway between 1.0 and 1 + 2^-8; RNE → 1.0.
+        let x = 1.0 + f32::powi(2.0, -9);
+        assert_eq!(quantize(x), 1.0);
+        // 1 + 3·2^-9 is halfway between 1+2^-8 and 1+2^-7; RNE → 1+2^-7.
+        let x = 1.0 + 3.0 * f32::powi(2.0, -9);
+        assert_eq!(quantize(x), 1.0 + f32::powi(2.0, -7));
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(quantize(0.0), 0.0);
+        assert_eq!(quantize(-0.0), -0.0);
+        assert_eq!(quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn negatives_mirror_positives() {
+        for &x in &[0.1f32, 1.5, 123.456, 3.0e7] {
+            assert_eq!(quantize(-x), -quantize(x));
+        }
+    }
+}

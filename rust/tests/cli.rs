@@ -1,0 +1,91 @@
+//! CLI integration: run the built `cuspamm` binary end-to-end (the
+//! launcher a downstream user actually touches).
+
+use std::process::Command;
+
+fn bin() -> std::path::PathBuf {
+    // cargo test binaries live in target/<profile>/deps; the CLI binary is
+    // one level up.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("cuspamm")
+}
+
+fn artifacts_dir() -> Option<&'static str> {
+    for c in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(c).join("manifest.json").exists() {
+            return Some(c);
+        }
+    }
+    None
+}
+
+#[test]
+fn info_lists_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let out = Command::new(bin())
+        .args(["info", "--artifacts", dir])
+        .output()
+        .expect("spawn cuspamm (cargo build first)");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("LoNum"));
+    assert!(stdout.contains("dense_n1024_f32"));
+    assert!(stdout.contains("cnn:"));
+}
+
+#[test]
+fn tune_reports_tau() {
+    let Some(dir) = artifacts_dir() else { return };
+    let out = Command::new(bin())
+        .args(["tune", "--artifacts", dir, "--n", "256", "--ratio", "0.2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("τ ="), "{stdout}");
+    assert!(stdout.contains("ratio ="));
+}
+
+#[test]
+fn run_reports_speedup_and_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let out = Command::new(bin())
+        .args([
+            "run", "--artifacts", dir, "--n", "256", "--ratio", "0.1",
+            "--devices", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("speedup"), "{stdout}");
+    assert!(stdout.contains("‖E‖_F"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_hint() {
+    let out = Command::new(bin()).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn help_exits_zero() {
+    let out = Command::new(bin()).arg("help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("subcommands"));
+}
+
+#[test]
+fn bad_option_is_a_config_error() {
+    let out = Command::new(bin())
+        .args(["run", "--bogus-flag", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2)); // config errors exit 2
+}

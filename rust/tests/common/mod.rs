@@ -1,0 +1,19 @@
+//! Shared helpers for integration tests.
+
+use cuspamm::runtime::ArtifactBundle;
+
+/// Locate the artifact bundle whether tests run from the workspace root or
+/// the package dir (honors CUSPAMM_ARTIFACTS).
+pub fn bundle() -> ArtifactBundle {
+    let candidates = [
+        std::env::var("CUSPAMM_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        "../artifacts".to_string(),
+    ];
+    for c in candidates.iter().filter(|c| !c.is_empty()) {
+        if std::path::Path::new(c).join("manifest.json").exists() {
+            return ArtifactBundle::load(c).expect("manifest parse");
+        }
+    }
+    panic!("artifact bundle not found — run `make artifacts` first");
+}

@@ -1,0 +1,163 @@
+//! Integration tests for the extension features (paper §2.1 general form,
+//! §3.4 future-work SUMMA, error analysis, matrix powers) plus failure
+//! injection on the artifact/runtime layers.
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Coordinator, SummaCoordinator};
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::runtime::{ArtifactBundle, Runtime};
+use cuspamm::spamm::error_analysis::apriori_error_bound;
+use cuspamm::spamm::normmap::normmap;
+use cuspamm::spamm::power::spamm_power;
+use cuspamm::spamm::SpammEngine;
+
+use common::bundle;
+
+#[test]
+fn axpby_general_form() {
+    // C ← α·AB + β·C with α=2, β=−1 against a host reference.
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_algebraic(96, 0.1, 0.1, 31);
+    let x = Matrix::decay_algebraic(96, 0.1, 0.1, 32);
+    let c0 = Matrix::randn(96, 96, 33);
+    let got = engine.multiply_axpby(2.0, &a, &x, 0.0, -1.0, &c0).unwrap();
+    let mut want = a.matmul(&x).unwrap();
+    for (w, &cv) in want.data_mut().iter_mut().zip(c0.data()) {
+        *w = 2.0 * *w - cv;
+    }
+    assert!(got.error_fnorm(&want).unwrap() / want.fnorm() < 1e-5);
+}
+
+#[test]
+fn axpby_shape_mismatch_rejected() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::zeros(64, 64);
+    let c = Matrix::zeros(32, 32);
+    assert!(engine.multiply_axpby(1.0, &a, &a, 0.0, 1.0, &c).is_err());
+}
+
+#[test]
+fn summa_matches_row_coordinator() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(256, 1.0, 0.6, 41);
+    let x = Matrix::decay_exponential(256, 1.0, 0.6, 42);
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 4;
+    let row = Coordinator::new(&b, cfg.clone()).unwrap();
+    let tuned = row.tune_tau(&a, &x, 0.3).unwrap();
+    let want = row.multiply(&a, &x, tuned.tau).unwrap();
+    let summa = SummaCoordinator::new(&b, cfg).unwrap();
+    assert_eq!(summa.grid(), (2, 2));
+    let (rep, grid_comm, rows_comm) = summa.multiply(&a, &x, tuned.tau).unwrap();
+    assert!(rep.c.error_fnorm(&want.c).unwrap() < 1e-6);
+    // 2×2 grid halves the per-device B traffic vs full broadcast.
+    assert!(grid_comm.b_bytes_per_device < rows_comm.b_bytes_per_device);
+    assert!(grid_comm.total_bytes < rows_comm.total_bytes);
+}
+
+#[test]
+fn power_chain_on_runtime() {
+    let b = bundle();
+    let coord = Coordinator::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 43);
+    let exact = a.matmul(&a).unwrap().matmul(&a).unwrap();
+    let r = spamm_power(&coord, &a, 3, 1e-6).unwrap();
+    let rel = r.value.error_fnorm(&exact).unwrap() / exact.fnorm().max(1e-30);
+    assert!(rel < 1e-3, "rel {rel}");
+    assert_eq!(r.steps.len(), 2);
+    assert!(r.steps.iter().all(|s| s.wall_secs >= 0.0));
+}
+
+#[test]
+fn apriori_bound_holds_on_runtime_path() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(256, 1.0, 0.55, 44);
+    let x = Matrix::decay_exponential(256, 1.0, 0.55, 45);
+    let exact = engine.multiply(&a, &x, 0.0).unwrap();
+    let na = normmap(&PaddedMatrix::new(&a, b.lonum));
+    let nb = normmap(&PaddedMatrix::new(&x, b.lonum));
+    for tau in [1e-4f32, 1e-2] {
+        let c = engine.multiply(&a, &x, tau).unwrap();
+        let err = exact.error_fnorm(&c).unwrap();
+        let bound = apriori_error_bound(&na, &nb, tau).unwrap();
+        assert!(err <= bound + 1e-3, "τ={tau}: {err} > {bound}");
+    }
+}
+
+// ---- failure injection ----------------------------------------------------
+
+#[test]
+fn corrupt_hlo_file_fails_cleanly() {
+    let b = bundle();
+    // Copy the bundle dir metadata but point one artifact at garbage.
+    let dir = std::env::temp_dir().join("cuspamm_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule bad\nthis is not hlo").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"lonum": 32, "artifacts": [{"name": "dense_n8_f32", "kind": "dense",
+            "file": "bad.hlo.txt", "n_outputs": 1,
+            "inputs": [{"shape": [8, 8], "dtype": "f32"}],
+            "params": {"n": 8, "precision": "f32"}}]}"#,
+    )
+    .unwrap();
+    let corrupt = ArtifactBundle::load(&dir).unwrap();
+    let rt = Runtime::new(&corrupt).unwrap();
+    let m = Matrix::zeros(8, 8);
+    let err = rt.dense(&m, &m, "f32");
+    assert!(err.is_err(), "corrupt HLO must fail, not crash");
+    drop(b);
+}
+
+#[test]
+fn wrong_shape_input_fails_cleanly() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    // dense_n256 artifact fed 128×128 inputs → compile/execute error, not UB.
+    let m = Matrix::zeros(128, 128);
+    let r = rt.execute(
+        "dense_n256_f32",
+        &[
+            cuspamm::runtime::literal::literal_f32(&[128, 128], m.data()).unwrap(),
+            cuspamm::runtime::literal::literal_f32(&[128, 128], m.data()).unwrap(),
+        ],
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn missing_artifact_name_fails_cleanly() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn engine_rejects_invalid_config() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.lonum = 0;
+    assert!(SpammEngine::new(&b, cfg).is_err());
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 0;
+    assert!(Coordinator::new(&b, cfg).is_err());
+}
+
+#[test]
+fn empty_matrices_handled() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let z = Matrix::zeros(64, 64);
+    let (c, stats) = engine.multiply_with_stats(&z, &z, 0.0).unwrap();
+    assert_eq!(c.fnorm(), 0.0);
+    assert_eq!(stats.valid_products, stats.total_products); // 0 ≥ τ=0 passes
+    let (c, stats) = engine.multiply_with_stats(&z, &z, 1.0).unwrap();
+    assert_eq!(c.fnorm(), 0.0);
+    assert_eq!(stats.valid_products, 0);
+}

@@ -1,0 +1,282 @@
+//! Integration tests over the real AOT artifacts: every executable the
+//! request path uses is loaded, compiled, executed, and checked against the
+//! host oracles.  Requires `make artifacts`.
+
+mod common;
+
+use cuspamm::config::{Balance, Precision, SpammConfig};
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::runtime::Runtime;
+use cuspamm::spamm::normmap::normmap;
+use cuspamm::spamm::reference::spamm_flat_host;
+use cuspamm::spamm::tuner::{tune_tau, TuneParams};
+use cuspamm::spamm::SpammEngine;
+
+use common::bundle;
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+    got.error_fnorm(want).unwrap() / want.fnorm().max(1e-30)
+}
+
+#[test]
+fn dense_artifact_matches_host_matmul() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 1);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 2);
+    let got = rt.dense(&a, &x, "f32").unwrap();
+    let want = a.matmul(&x).unwrap();
+    assert!(rel_err(&got, &want) < 1e-5, "rel err {}", rel_err(&got, &want));
+}
+
+#[test]
+fn dense_bf16_artifact_is_close() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 3);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 4);
+    let got = rt.dense(&a, &x, "bf16").unwrap();
+    let want = a.matmul(&x).unwrap();
+    let re = rel_err(&got, &want);
+    assert!(re > 1e-7, "bf16 must actually quantize (re={re})");
+    assert!(re < 2e-2, "bf16 rel err {re}");
+}
+
+#[test]
+fn getnorm_artifact_matches_host_normmap() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 5);
+    let got = rt.getnorm(&a, b.lonum, false).unwrap();
+    let want = normmap(&PaddedMatrix::new(&a, b.lonum));
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()));
+    assert!(got.max_abs_diff(&want).unwrap() < 1e-4);
+}
+
+#[test]
+fn getnorm_mxu_artifact_is_close() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 6);
+    let got = rt.getnorm(&a, b.lonum, true).unwrap();
+    let want = normmap(&PaddedMatrix::new(&a, b.lonum));
+    // bf16 ones-matmul reduction: ~2-3 digits.
+    for r in 0..want.rows() {
+        for c in 0..want.cols() {
+            let w = want[(r, c)];
+            assert!((got[(r, c)] - w).abs() <= 0.03 * w.abs() + 1e-4);
+        }
+    }
+}
+
+#[test]
+fn tilegemm_artifact_matches_host() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let l = b.lonum;
+    let batch = 7usize;
+    let cap = 64usize;
+    let ta = Matrix::randn(batch * l, l, 7);
+    let tb = Matrix::randn(batch * l, l, 8);
+    let mut a_buf = vec![0.0f32; cap * l * l];
+    let mut b_buf = vec![0.0f32; cap * l * l];
+    a_buf[..batch * l * l].copy_from_slice(ta.data());
+    b_buf[..batch * l * l].copy_from_slice(tb.data());
+    let out = rt.tile_gemm(&a_buf, &b_buf, cap, l, "f32").unwrap();
+    for s in 0..batch {
+        let am = Matrix::from_vec(l, l, ta.data()[s * l * l..(s + 1) * l * l].to_vec()).unwrap();
+        let bm = Matrix::from_vec(l, l, tb.data()[s * l * l..(s + 1) * l * l].to_vec()).unwrap();
+        let want = am.matmul(&bm).unwrap();
+        let got = Matrix::from_vec(l, l, out[s * l * l..(s + 1) * l * l].to_vec()).unwrap();
+        assert!(rel_err(&got, &want) < 1e-5, "slot {s}");
+    }
+    // padded tail is exactly zero
+    assert!(out[batch * l * l..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn tune_artifact_agrees_with_host_tuner() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(512, 0.1, 0.1, 9);
+    let x = Matrix::decay_algebraic(512, 0.1, 0.1, 10);
+    let na = normmap(&PaddedMatrix::new(&a, b.lonum));
+    let nb = normmap(&PaddedMatrix::new(&x, b.lonum));
+    let (tau_dev, ratio_dev) = rt.tune(&na, &nb, 0.10).unwrap();
+    let host = tune_tau(&na, &nb, 0.10, TuneParams::default()).unwrap();
+    assert!((ratio_dev as f64 - 0.10).abs() < 0.02, "device ratio {ratio_dev}");
+    assert!((host.achieved_ratio - 0.10).abs() < 0.01);
+    // Both τ land in the same decade.
+    assert!(
+        (tau_dev.ln() - host.tau.ln()).abs() < 1.0,
+        "τ device {tau_dev} vs host {}",
+        host.tau
+    );
+}
+
+#[test]
+fn spamm_fused_artifact_matches_host_flat() {
+    let b = bundle();
+    let rt = Runtime::new(&b).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 11);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 12);
+    let na = normmap(&PaddedMatrix::new(&a, b.lonum));
+    let tau = {
+        let mut v: Vec<f32> = na.data().to_vec();
+        v.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let med = v[v.len() / 2];
+        med * med
+    };
+    let got = rt.spamm_fused(&a, &x, tau, "f32").unwrap();
+    let want = spamm_flat_host(&a, &x, tau, b.lonum).unwrap();
+    assert!(rel_err(&got, &want) < 1e-5);
+}
+
+#[test]
+fn engine_tau_zero_equals_dense() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 13);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 14);
+    let (c, stats) = engine.multiply_with_stats(&a, &x, 0.0).unwrap();
+    assert_eq!(stats.valid_products, stats.total_products);
+    let want = engine.dense(&a, &x).unwrap();
+    assert!(rel_err(&c, &want) < 1e-5);
+}
+
+#[test]
+fn engine_matches_host_flat_spamm() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(256, 1.0, 0.5, 15);
+    let x = Matrix::decay_exponential(256, 1.0, 0.5, 16);
+    let tuned = engine.tune_tau(&a, &x, 0.25).unwrap();
+    let (c, stats) = engine.multiply_with_stats(&a, &x, tuned.tau).unwrap();
+    // On strongly decayed matrices the reachable ratios are quantized; the
+    // engine must agree with the tuner's *achieved* ratio exactly.
+    assert!((stats.valid_ratio - tuned.achieved_ratio).abs() < 1e-9);
+    assert!(stats.valid_ratio < 0.9, "τ must actually skip work");
+    let want = spamm_flat_host(&a, &x, tuned.tau, b.lonum).unwrap();
+    assert!(rel_err(&c, &want) < 1e-5);
+}
+
+#[test]
+fn engine_skips_work() {
+    // Lower valid ratio ⇒ fewer executed products (the whole point).
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(512, 1.0, 0.5, 17);
+    let x = Matrix::decay_exponential(512, 1.0, 0.5, 18);
+    let t10 = engine.tune_tau(&a, &x, 0.10).unwrap();
+    let (_, s10) = engine.multiply_with_stats(&a, &x, t10.tau).unwrap();
+    let (_, s100) = engine.multiply_with_stats(&a, &x, 0.0).unwrap();
+    assert!(s10.valid_products * 8 < s100.valid_products);
+}
+
+#[test]
+fn engine_bf16_close_to_f32() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.precision = Precision::Bf16;
+    let bf = SpammEngine::new(&b, cfg).unwrap();
+    let ff = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 19);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 20);
+    let cb = bf.multiply(&a, &x, 0.0).unwrap();
+    let cf = ff.multiply(&a, &x, 0.0).unwrap();
+    let re = rel_err(&cb, &cf);
+    assert!(re > 1e-7 && re < 2e-2, "bf16 rel err {re}");
+}
+
+#[test]
+fn coordinator_matches_single_device() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(256, 1.0, 0.55, 21);
+    let x = Matrix::decay_exponential(256, 1.0, 0.55, 22);
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let tuned = engine.tune_tau(&a, &x, 0.20).unwrap();
+    let want = engine.multiply(&a, &x, tuned.tau).unwrap();
+    for devices in [2usize, 4] {
+        for balance in [Balance::RowBlock, Balance::Strided(2)] {
+            let mut cfg = SpammConfig::default();
+            cfg.devices = devices;
+            cfg.balance = balance;
+            let coord = Coordinator::new(&b, cfg).unwrap();
+            let rep = coord.multiply(&a, &x, tuned.tau).unwrap();
+            assert!(
+                rel_err(&rep.c, &want) < 1e-6,
+                "devices={devices} balance={balance:?}"
+            );
+            assert_eq!(rep.valid_products, rep.device_load.iter().sum::<usize>());
+            assert!(rep.imbalance >= 1.0 - 1e-9);
+        }
+    }
+}
+
+#[test]
+fn coordinator_rectangular() {
+    let b = bundle();
+    let a = Matrix::randn(100, 70, 23);
+    let x = Matrix::randn(70, 130, 24);
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 3;
+    let coord = Coordinator::new(&b, cfg).unwrap();
+    let rep = coord.multiply(&a, &x, 0.0).unwrap();
+    let want = a.matmul(&x).unwrap();
+    assert_eq!((rep.c.rows(), rep.c.cols()), (100, 130));
+    assert!(rel_err(&rep.c, &want) < 1e-5);
+}
+
+#[test]
+fn device_pool_executes() {
+    use cuspamm::runtime::DevicePool;
+    let b = bundle();
+    let pool = DevicePool::new(&b, 2, 4).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 25);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 26);
+    let out = pool
+        .call(
+            1,
+            "dense_n256_f32",
+            vec![
+                (vec![256, 256], a.data().to_vec()),
+                (vec![256, 256], x.data().to_vec()),
+            ],
+        )
+        .unwrap();
+    let got = Matrix::from_vec(256, 256, out[0].1.clone()).unwrap();
+    let want = a.matmul(&x).unwrap();
+    assert!(rel_err(&got, &want) < 1e-5);
+    assert!(pool.busy_secs()[1] > 0.0);
+    assert_eq!(pool.busy_secs()[0], 0.0);
+}
+
+#[test]
+fn cnn_loads_and_matches_buildtime_accuracy() {
+    let b = bundle();
+    let meta = b.cnn.clone().expect("cnn export present");
+    let cnn = cuspamm::cnn::Cnn::load(&meta).unwrap();
+    let modes = std::collections::BTreeMap::new();
+    // Host path over a subset; must be near the recorded build-time value.
+    let acc = cnn.accuracy(&modes, None, 100, Some(200)).unwrap();
+    assert!(
+        (acc - meta.test_accuracy).abs() < 0.06,
+        "rust acc {acc} vs build-time {}",
+        meta.test_accuracy
+    );
+}
+
+#[test]
+fn cnn_spamm_tau_zero_preserves_accuracy() {
+    let b = bundle();
+    let meta = b.cnn.clone().expect("cnn export present");
+    let cnn = cuspamm::cnn::Cnn::load(&meta).unwrap();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let mut modes = std::collections::BTreeMap::new();
+    let base = cnn.accuracy(&modes, Some(&engine), 100, Some(100)).unwrap();
+    modes.insert("conv2".to_string(), cuspamm::cnn::GemmMode::Spamm { tau: 0.0 });
+    let with0 = cnn.accuracy(&modes, Some(&engine), 100, Some(100)).unwrap();
+    assert_eq!(base, with0);
+}

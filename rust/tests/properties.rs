@@ -1,0 +1,319 @@
+//! Cross-module property tests (host-only — no XLA) using the crate's own
+//! mini property-testing framework.  These pin the invariants DESIGN.md §7
+//! lists.
+
+use cuspamm::config::Balance;
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::proptest::{forall_ok, gen, PropConfig};
+use cuspamm::spamm::balance::Assignment;
+use cuspamm::spamm::normmap::normmap;
+use cuspamm::spamm::reference::{spamm_flat_host, spamm_recursive};
+use cuspamm::spamm::schedule::Schedule;
+use cuspamm::spamm::tuner::{tune_tau, TuneParams};
+use cuspamm::sparse::spgemm::spgemm;
+use cuspamm::sparse::CsrMatrix;
+use cuspamm::util::bf16;
+use cuspamm::util::prng::Rng;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        seed: 0xDECAF,
+    }
+}
+
+#[test]
+fn prop_spamm_tau_zero_is_exact_gemm() {
+    forall_ok(
+        cfg(12),
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 1, 80);
+            let m = gen::usize_in(rng, 1, 80);
+            let k = gen::usize_in(rng, 1, 80);
+            let seed = rng.next_u64();
+            (n, k, m, seed)
+        },
+        |&(n, k, m, seed)| {
+            let a = Matrix::randn(n, k, seed);
+            let b = Matrix::randn(k, m, seed ^ 1);
+            let got = spamm_flat_host(&a, &b, 0.0, 16).map_err(|e| e.to_string())?;
+            let want = a.matmul(&b).map_err(|e| e.to_string())?;
+            let err = got.error_fnorm(&want).unwrap();
+            let scale = want.fnorm().max(1.0);
+            if err / scale > 1e-5 {
+                return Err(format!("{n}x{k}x{m}: rel err {}", err / scale));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_error_monotone_in_tau() {
+    forall_ok(
+        cfg(10),
+        |rng: &mut Rng| (gen::pow2_in(rng, 64, 128), rng.next_u64()),
+        |&(n, seed)| {
+            let a = Matrix::decay_exponential(n, 1.0, 0.5, seed);
+            let b = Matrix::decay_exponential(n, 1.0, 0.5, seed ^ 7);
+            let exact = a.matmul(&b).unwrap();
+            let mut prev = -1.0f64;
+            for tau in [0.0f32, 1e-4, 1e-2, 1.0, 100.0] {
+                let c = spamm_flat_host(&a, &b, tau, 32).unwrap();
+                let e = exact.error_fnorm(&c).unwrap();
+                if e < prev - 1e-6 {
+                    return Err(format!("n={n} τ={tau}: error dropped {prev} → {e}"));
+                }
+                prev = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flat_error_at_most_recursive() {
+    forall_ok(
+        cfg(6),
+        |rng: &mut Rng| (rng.next_u64(), gen::f32_in(rng, 1e-4, 1e-1)),
+        |&(seed, tau)| {
+            let a = Matrix::decay_exponential(64, 1.0, 0.5, seed);
+            let b = Matrix::decay_exponential(64, 1.0, 0.5, seed ^ 3);
+            let exact = a.matmul(&b).unwrap();
+            let ef = exact
+                .error_fnorm(&spamm_flat_host(&a, &b, tau, 16).unwrap())
+                .unwrap();
+            let er = exact
+                .error_fnorm(&spamm_recursive(&a, &b, tau, 16).unwrap())
+                .unwrap();
+            if ef > er + 1e-3 {
+                return Err(format!("flat {ef} > recursive {er} at τ={tau}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_counts_consistent() {
+    forall_ok(
+        cfg(30),
+        |rng: &mut Rng| {
+            let tr = gen::usize_in(rng, 1, 12);
+            let tk = gen::usize_in(rng, 1, 12);
+            let tc = gen::usize_in(rng, 1, 12);
+            (tr, tk, tc, rng.next_u64(), gen::f32_in(rng, 0.0, 2.0))
+        },
+        |&(tr, tk, tc, seed, tau)| {
+            let na = {
+                let mut m = Matrix::randn(tr, tk, seed);
+                for v in m.data_mut() {
+                    *v = v.abs();
+                }
+                m
+            };
+            let nb = {
+                let mut m = Matrix::randn(tk, tc, seed ^ 9);
+                for v in m.data_mut() {
+                    *v = v.abs();
+                }
+                m
+            };
+            let s = Schedule::build(&na, &nb, tau).map_err(|e| e.to_string())?;
+            // total = Σ per-tile v == v_matrix sum == products iterator len
+            let v_sum: f32 = s.v_matrix().data().iter().sum();
+            if v_sum as usize != s.valid_products() {
+                return Err("v_matrix sum != valid_products".into());
+            }
+            let it_count = s
+                .products_for_tiles(
+                    (0..tr).flat_map(|i| (0..tc).map(move |j| (i, j))),
+                )
+                .count();
+            if it_count != s.valid_products() {
+                return Err("iterator count != valid_products".into());
+            }
+            // every listed k really passes, every omitted k really fails
+            for i in 0..tr {
+                for j in 0..tc {
+                    let ks = s.ks(i, j);
+                    let mut idx = 0usize;
+                    for k in 0..tk {
+                        let pass = na[(i, k)] * nb[(k, j)] >= tau;
+                        let listed = idx < ks.len() && ks[idx] == k as u32;
+                        if listed {
+                            idx += 1;
+                        }
+                        if pass != listed {
+                            return Err(format!("tile ({i},{j}) k={k}: pass={pass} listed={listed}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_assignment_partitions_tiles() {
+    forall_ok(
+        cfg(30),
+        |rng: &mut Rng| {
+            let tr = gen::usize_in(rng, 1, 16);
+            let tc = gen::usize_in(rng, 1, 16);
+            let devices = gen::usize_in(rng, 1, 9);
+            let strided = rng.next_f32() < 0.5;
+            let stride = gen::usize_in(rng, 1, 6);
+            (tr, tc, devices, strided, stride, rng.next_u64())
+        },
+        |&(tr, tc, devices, strided, stride, seed)| {
+            let na = Matrix::randn(tr, 4, seed);
+            let nb = Matrix::randn(4, tc, seed ^ 5);
+            let s = Schedule::build(&na, &nb, f32::MAX).unwrap();
+            let policy = if strided {
+                Balance::Strided(stride)
+            } else {
+                Balance::RowBlock
+            };
+            let a = Assignment::build(&s, devices, policy);
+            let mut seen = vec![0u8; tr * tc];
+            for d in 0..devices {
+                for (i, j) in a.tiles_of(&s, d) {
+                    seen[i * tc + j] += 1;
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!("{policy:?} {devices} devices: not a partition"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tuner_ratio_within_tolerance_or_quantization() {
+    forall_ok(
+        cfg(15),
+        |rng: &mut Rng| {
+            (
+                gen::usize_in(rng, 2, 10),
+                gen::f32_in(rng, 0.05, 0.95) as f64,
+                rng.next_u64(),
+            )
+        },
+        |&(bdim, target, seed)| {
+            let mut na = Matrix::randn(bdim, bdim, seed);
+            let mut nb = Matrix::randn(bdim, bdim, seed ^ 11);
+            for v in na.data_mut() {
+                *v = v.abs();
+            }
+            for v in nb.data_mut() {
+                *v = v.abs();
+            }
+            let r = tune_tau(&na, &nb, target, TuneParams { max_iters: 40, tolerance: 0.0 })
+                .map_err(|e| e.to_string())?;
+            // Reachable ratios are multiples of 1/bdim³; allow quantization.
+            let quantum = 1.0 / (bdim * bdim * bdim) as f64;
+            if (r.achieved_ratio - target).abs() > quantum + 0.02 {
+                return Err(format!(
+                    "bdim={bdim} target={target}: achieved {}",
+                    r.achieved_ratio
+                ));
+            }
+            // Achieved ratio must be the Schedule's ratio at that τ.
+            let s = Schedule::build(&na, &nb, r.tau).unwrap();
+            if (s.valid_ratio() - r.achieved_ratio).abs() > 1e-9 {
+                return Err("tuner/schedule ratio mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csr_roundtrip_and_spgemm() {
+    forall_ok(
+        cfg(20),
+        |rng: &mut Rng| {
+            (
+                gen::usize_in(rng, 1, 30),
+                gen::usize_in(rng, 1, 30),
+                gen::usize_in(rng, 1, 30),
+                gen::f32_in(rng, 0.0, 1.5),
+                rng.next_u64(),
+            )
+        },
+        |&(m, k, n, thresh, seed)| {
+            let mut a = Matrix::randn(m, k, seed);
+            let mut b = Matrix::randn(k, n, seed ^ 13);
+            a.truncate(thresh);
+            b.truncate(thresh);
+            let ca = CsrMatrix::from_dense(&a, 0.0);
+            let cb = CsrMatrix::from_dense(&b, 0.0);
+            ca.validate().map_err(|e| e.to_string())?;
+            if ca.to_dense() != a {
+                return Err("CSR round trip broke A".into());
+            }
+            let got = spgemm(&ca, &cb).map_err(|e| e.to_string())?;
+            got.validate().map_err(|e| e.to_string())?;
+            let want = a.matmul(&b).unwrap();
+            let err = got.to_dense().error_fnorm(&want).unwrap();
+            if err > 1e-3 * want.fnorm().max(1.0) {
+                return Err(format!("spgemm err {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bf16_quantization_bounds() {
+    forall_ok(
+        cfg(200),
+        |rng: &mut Rng| gen::f32_in(rng, -1e20, 1e20),
+        |&x| {
+            let q = bf16::quantize(x);
+            if x == 0.0 {
+                return Ok(());
+            }
+            let rel = ((q - x) / x).abs();
+            if rel > bf16::EPS {
+                return Err(format!("x={x} q={q} rel={rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_padding_preserves_norm_and_product() {
+    forall_ok(
+        cfg(15),
+        |rng: &mut Rng| {
+            (
+                gen::usize_in(rng, 1, 70),
+                gen::usize_in(rng, 1, 70),
+                rng.next_u64(),
+            )
+        },
+        |&(r, c, seed)| {
+            let m = Matrix::randn(r, c, seed);
+            let p = PaddedMatrix::new(&m, 32);
+            if (p.inner.fnorm() - m.fnorm()).abs() > 1e-6 * m.fnorm().max(1.0) {
+                return Err("padding changed the F-norm".into());
+            }
+            if p.crop() != m {
+                return Err("crop(pad(m)) != m".into());
+            }
+            // normmap sum-of-squares equals full norm squared
+            let nm = normmap(&p);
+            let ss: f64 = nm.data().iter().map(|&x| (x as f64).powi(2)).sum();
+            if (ss - m.fnorm().powi(2)).abs() > 1e-5 * m.fnorm().powi(2).max(1.0) {
+                return Err("normmap energy mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
