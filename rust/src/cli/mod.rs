@@ -80,6 +80,7 @@ impl Spec {
     /// Parse a raw arg list (not including argv[0] / subcommand name).
     pub fn parse(&self, args: &[String]) -> Result<Args> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut explicit: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
         let mut positionals = Vec::new();
         let mut i = 0;
         while i < args.len() {
@@ -112,6 +113,7 @@ impl Spec {
                         .cloned()
                         .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?
                 };
+                explicit.insert(key.clone());
                 values.insert(key, val);
             } else {
                 positionals.push(arg.clone());
@@ -134,6 +136,7 @@ impl Spec {
         }
         Ok(Args {
             values,
+            explicit,
             positionals,
         })
     }
@@ -143,6 +146,7 @@ impl Spec {
 #[derive(Clone, Debug)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    explicit: std::collections::BTreeSet<String>,
     pub positionals: Vec<String>,
 }
 
@@ -152,6 +156,14 @@ impl Args {
             .get(key)
             .map(|s| s.as_str())
             .unwrap_or_default()
+    }
+
+    /// Whether the user passed this option on the command line (as
+    /// opposed to its declared default filling in).  Lets callers layer
+    /// CLI > config file > built-in defaults without the CLI defaults
+    /// silently clobbering file settings.
+    pub fn provided(&self, key: &str) -> bool {
+        self.explicit.contains(key)
     }
 
     pub fn flag(&self, key: &str) -> bool {
@@ -205,6 +217,9 @@ mod tests {
         assert_eq!(a.usize("n").unwrap(), 1024);
         assert_eq!(a.f64("ratio").unwrap(), 0.1);
         assert!(!a.flag("verbose"));
+        // Explicitness is tracked: --ratio was passed, --n defaulted.
+        assert!(a.provided("ratio"));
+        assert!(!a.provided("n"));
     }
 
     #[test]

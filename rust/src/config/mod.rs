@@ -58,6 +58,14 @@ pub struct SpammConfig {
     pub pipeline_batches: usize,
     /// Max tile products per tile-GEMM executable call.
     pub max_tile_batch: usize,
+    /// In-flight chunks buffered between executor pipeline stages
+    /// (gather → exec → scatter).  Higher values let fast stages run
+    /// further ahead; even depth 1 overlaps stages (one staged chunk
+    /// per channel), it just minimizes buffering.
+    pub pipeline_depth: usize,
+    /// Memoize normmaps and compacted schedules across multiplies keyed on
+    /// operand content fingerprints + τ (`--no-cache` turns this off).
+    pub cache_enabled: bool,
     /// Load-balance strategy.
     pub balance: Balance,
     /// Compute normmaps on-device (get-norm artifact) or on the host.
@@ -79,6 +87,8 @@ impl Default for SpammConfig {
             devices: 1,
             pipeline_batches: 4,
             max_tile_batch: 1024,
+            pipeline_depth: 2,
+            cache_enabled: true,
             balance: Balance::Strided(4),
             device_normmap: false,
             sequential_devices: false,
@@ -95,6 +105,8 @@ impl SpammConfig {
             "devices" => self.devices = parse_num(key, value)?,
             "pipeline_batches" => self.pipeline_batches = parse_num(key, value)?,
             "max_tile_batch" => self.max_tile_batch = parse_num(key, value)?,
+            "pipeline_depth" => self.pipeline_depth = parse_num(key, value)?,
+            "cache_enabled" => self.cache_enabled = parse_bool(key, value)?,
             "device_normmap" => {
                 self.device_normmap = parse_bool(key, value)?;
             }
@@ -142,6 +154,9 @@ impl SpammConfig {
         }
         if self.pipeline_batches == 0 {
             return Err(Error::Config("pipeline_batches must be ≥ 1".into()));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(Error::Config("pipeline_depth must be ≥ 1".into()));
         }
         if let Balance::Strided(0) = self.balance {
             return Err(Error::Config("stride must be ≥ 1".into()));
@@ -215,6 +230,19 @@ mod tests {
         assert_eq!(c.precision, Precision::Bf16);
         assert_eq!(c.balance, Balance::Strided(2));
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn pipeline_and_cache_keys() {
+        let mut c = SpammConfig::default();
+        assert!(c.cache_enabled);
+        c.apply("pipeline_depth", "4").unwrap();
+        c.apply("cache_enabled", "false").unwrap();
+        assert_eq!(c.pipeline_depth, 4);
+        assert!(!c.cache_enabled);
+        c.validate().unwrap();
+        c.pipeline_depth = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Result/metric types for multi-device runs.
 
 use crate::matrix::Matrix;
+use crate::spamm::executor::MultiplyStats;
 
 /// Everything a multi-device multiply reports.
 #[derive(Clone, Debug)]
@@ -21,6 +22,10 @@ pub struct MultiDeviceReport {
     /// Seconds each device spent compiling executables (excluded from
     /// wall_secs via the warmup barrier).
     pub compile_secs: Vec<f64>,
+    /// Pipeline-stage seconds summed over the device workers
+    /// (gather/exec/scatter/span + batch count); with stage overlap,
+    /// `gather_secs + exec_secs + scatter_secs > exec_span_secs`.
+    pub stage: MultiplyStats,
 }
 
 impl MultiDeviceReport {
@@ -69,6 +74,7 @@ mod tests {
             valid_ratio: 0.5,
             imbalance: 1.0,
             compile_secs: vec![0.0, 0.0],
+            stage: MultiplyStats::default(),
         }
     }
 

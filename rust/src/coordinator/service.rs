@@ -161,12 +161,8 @@ mod tests {
     use super::*;
 
     fn bundle() -> Option<ArtifactBundle> {
-        for c in ["artifacts", "../artifacts"] {
-            if std::path::Path::new(c).join("manifest.json").exists() {
-                return ArtifactBundle::load(c).ok();
-            }
-        }
-        None
+        // Real AOT bundle when present, offline hostsim bundle otherwise.
+        crate::runtime::hostsim::find_or_test_bundle().ok()
     }
 
     #[test]

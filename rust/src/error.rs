@@ -1,43 +1,69 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — proc-macro derive crates are not
+//! in the offline crate set).
+
+use std::fmt;
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors produced by the cuspamm runtime and library layers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape or divisibility constraint violated by caller input.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// An artifact (HLO file, manifest entry, weight blob) is missing or
     /// does not match what the runtime expects.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// XLA/PJRT failure (compile, execute, literal conversion).
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Config file / CLI parse problem.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON syntax or schema problem.
-    #[error("json error: {0}")]
     Json(String),
 
     /// Binary tensor file problem.
-    #[error("tensorio error: {0}")]
     TensorIo(String),
 
     /// Coordinator/device-worker failure (a worker died or a channel
     /// closed unexpectedly).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::TensorIo(m) => write!(f, "tensorio error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -16,7 +16,37 @@
 //!   every substrate the evaluation needs ([`matrix`], [`sparse`], ...).
 //!
 //! Python never runs on the request path; after `make artifacts` the Rust
-//! binary is self-contained.
+//! binary is self-contained.  Without a python/JAX toolchain the vendored
+//! offline PJRT simulator executes synthesized *hostsim* bundles
+//! ([`runtime::hostsim`]) with the same manifest schema and numeric
+//! contract, so the full request path stays testable.
+//!
+//! ## Execution pipeline & caching
+//!
+//! The execution layer is stage-pipelined and cache-aware:
+//!
+//! * **Norm/schedule caches** ([`spamm::cache`]) — normmaps are memoized
+//!   keyed on a 128-bit content fingerprint of the padded operand
+//!   (dims + LoNum + data bits); compacted schedules are memoized keyed
+//!   on both operand fingerprints plus the exact τ bits.  Iterative
+//!   workloads (`spamm::power`, `spamm::purification`, repeated service
+//!   requests) skip the get-norm and schedule phases entirely on hits.
+//!   Hit/miss counts surface in [`spamm::MultiplyStats`] and the global
+//!   [`telemetry`] counters (`spamm.norm_cache.*`,
+//!   `spamm.schedule_cache.*`); `--no-cache` (CLI) or
+//!   `cache_enabled = false` (config) bypasses both caches.
+//! * **Stage overlap** ([`spamm::executor::execute_products`]) — chunk
+//!   execution is double-buffered: a gather worker stages chunk *i+1*
+//!   while the engine thread (which owns the non-`Send` PJRT client)
+//!   runs tile-GEMM on chunk *i*, and a scatter worker drains finished
+//!   products from a bounded channel.  `--pipeline-depth` / the
+//!   `pipeline_depth` config key bound the in-flight chunks.  With
+//!   overlap, `gather_secs + exec_secs + scatter_secs` exceeds the
+//!   `exec_span_secs` wall clock in [`spamm::MultiplyStats`].
+//!
+//! Both the single-device [`spamm::SpammEngine`] and the multi-device
+//! [`coordinator::Coordinator`] (whose per-device workers share the same
+//! executor) go through this path.
 //!
 //! ## Quick start
 //!

@@ -34,10 +34,26 @@ fn main() {
 }
 
 fn common(spec: Spec) -> Spec {
+    // Declared option defaults mirror SpammConfig::default() — derived,
+    // not hand-synced, so the two default sources cannot drift.
+    let d = SpammConfig::default();
+    let balance = match d.balance {
+        cuspamm::config::Balance::RowBlock => "rowblock".to_string(),
+        cuspamm::config::Balance::Strided(s) => format!("strided:{s}"),
+    };
     spec.opt("artifacts", "artifacts", "artifact bundle directory")
-        .opt("devices", "1", "simulated device count")
-        .opt("precision", "f32", "f32 | bf16")
-        .opt("balance", "strided:4", "rowblock | strided:<s>")
+        .opt("devices", &d.devices.to_string(), "simulated device count")
+        .opt("precision", d.precision.as_str(), "f32 | bf16")
+        .opt("balance", &balance, "rowblock | strided:<s>")
+        .opt(
+            "pipeline-depth",
+            &d.pipeline_depth.to_string(),
+            "chunks buffered between executor pipeline stages (gather/exec/scatter)",
+        )
+        .flag(
+            "no-cache",
+            "disable normmap/schedule caching across multiplies",
+        )
         .opt("config", "", "optional config file (key = value)")
 }
 
@@ -47,9 +63,24 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
     } else {
         SpammConfig::from_file(std::path::Path::new(a.get("config")))?
     };
-    cfg.apply("devices", a.get("devices"))?;
-    cfg.apply("precision", a.get("precision"))?;
-    cfg.apply("balance", a.get("balance"))?;
+    // CLI > config file > built-in defaults: when a config file is in
+    // play, only explicitly-passed options override it (the declared CLI
+    // defaults mirror SpammConfig::default(), which the file was folded
+    // over already).
+    let from_file = !a.get("config").is_empty();
+    for (opt, key) in [
+        ("devices", "devices"),
+        ("precision", "precision"),
+        ("balance", "balance"),
+        ("pipeline-depth", "pipeline_depth"),
+    ] {
+        if a.provided(opt) || !from_file {
+            cfg.apply(key, a.get(opt))?;
+        }
+    }
+    if a.flag("no-cache") {
+        cfg.cache_enabled = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -145,6 +176,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
         dense.wall_secs / report.wall_secs,
         report.c.error_fnorm(&dense.c)?,
         dense.c.fnorm()
+    );
+    let t = telemetry::global();
+    println!(
+        "caches: norm {} hit / {} miss, schedule {} hit / {} miss",
+        t.get("spamm.norm_cache.hits"),
+        t.get("spamm.norm_cache.misses"),
+        t.get("spamm.schedule_cache.hits"),
+        t.get("spamm.schedule_cache.misses")
     );
     Ok(())
 }

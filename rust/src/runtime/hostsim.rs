@@ -1,0 +1,263 @@
+//! Hostsim artifact bundles: synthesize a manifest + self-describing op
+//! files that the offline PJRT simulator (vendored `xla` crate) can
+//! "compile" and execute on the host.
+//!
+//! The real Layer-1/2 pipeline (`make artifacts`) needs a python/JAX
+//! toolchain to AOT-lower Pallas kernels to HLO.  In environments without
+//! it, [`write_bundle`] produces a bundle with the same manifest schema
+//! and artifact naming grid (`dense_n{N}_{prec}`, `tilegemm_l{L}_b{B}_…`,
+//! `getnorm…`, `tune_b{B}`, `spamm_fused…`) whose files carry a hostsim
+//! op spec instead of HLO text, with the same numeric contract.  The
+//! integration tests and benches use [`test_bundle`] when no real
+//! artifact directory is present, so the whole request path stays
+//! exercised end-to-end.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::runtime::artifact::ArtifactBundle;
+
+/// What to put in a synthesized bundle.
+#[derive(Clone, Debug)]
+pub struct HostsimSpec {
+    /// Tile edge (LoNum) of the whole grid.
+    pub lonum: usize,
+    /// Square sizes with dense baselines (per precision).
+    pub dense_sizes: Vec<usize>,
+    /// Square sizes with get-norm artifacts (host + MXU variants).
+    pub getnorm_sizes: Vec<usize>,
+    /// Tile-GEMM batch buckets (per precision).
+    pub tilegemm_batches: Vec<usize>,
+    /// Normmap BDIMs with an on-device τ tuner.
+    pub tune_bdims: Vec<usize>,
+    /// Square sizes with a fused single-call SpAMM (f32 only).
+    pub fused_sizes: Vec<usize>,
+    /// Precision variants for dense/tile-GEMM ("f32", "bf16").
+    pub precisions: Vec<&'static str>,
+}
+
+impl Default for HostsimSpec {
+    fn default() -> Self {
+        HostsimSpec {
+            lonum: 32,
+            dense_sizes: vec![256, 512],
+            getnorm_sizes: vec![256, 512],
+            tilegemm_batches: vec![16, 64, 256],
+            tune_bdims: vec![8, 16],
+            fused_sizes: vec![256],
+            precisions: vec!["f32", "bf16"],
+        }
+    }
+}
+
+struct ManifestBuilder {
+    dir: PathBuf,
+    entries: Vec<String>,
+}
+
+impl ManifestBuilder {
+    fn artifact(
+        &mut self,
+        name: &str,
+        kind: &str,
+        inputs: &[&[usize]],
+        n_outputs: usize,
+        params: &[(&str, String)],
+        body: &str,
+    ) -> Result<()> {
+        let file = format!("{name}.hostsim.txt");
+        std::fs::write(self.dir.join(&file), body)?;
+        let mut inputs_json = String::new();
+        for (i, dims) in inputs.iter().enumerate() {
+            if i > 0 {
+                inputs_json.push(',');
+            }
+            let dims_json: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+            let _ = write!(
+                inputs_json,
+                r#"{{"shape": [{}], "dtype": "f32"}}"#,
+                dims_json.join(",")
+            );
+        }
+        let mut params_json = String::new();
+        for (i, (k, v)) in params.iter().enumerate() {
+            if i > 0 {
+                params_json.push(',');
+            }
+            let quoted = if v.parse::<f64>().is_ok() {
+                v.clone()
+            } else {
+                format!("\"{v}\"")
+            };
+            let _ = write!(params_json, "\"{k}\": {quoted}");
+        }
+        self.entries.push(format!(
+            r#"{{"name": "{name}", "kind": "{kind}", "file": "{file}", "n_outputs": {n_outputs}, "inputs": [{inputs_json}], "params": {{{params_json}}}}}"#
+        ));
+        Ok(())
+    }
+}
+
+/// Write a hostsim bundle (manifest + op files) under `dir`.
+pub fn write_bundle(dir: impl AsRef<Path>, spec: &HostsimSpec) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let l = spec.lonum;
+    let mut mb = ManifestBuilder {
+        dir: dir.to_path_buf(),
+        entries: Vec::new(),
+    };
+
+    for &prec in &spec.precisions {
+        for &n in &spec.dense_sizes {
+            mb.artifact(
+                &format!("dense_n{n}_{prec}"),
+                "dense",
+                &[&[n, n], &[n, n]],
+                1,
+                &[
+                    ("n", n.to_string()),
+                    ("precision", prec.to_string()),
+                ],
+                &format!(
+                    "hostsim v1\nkind = dense\nm = {n}\nk = {n}\nn = {n}\nprecision = {prec}\n"
+                ),
+            )?;
+        }
+        for &b in &spec.tilegemm_batches {
+            mb.artifact(
+                &format!("tilegemm_l{l}_b{b}_{prec}"),
+                "tilegemm",
+                &[&[b, l, l], &[b, l, l]],
+                1,
+                &[
+                    ("batch", b.to_string()),
+                    ("lonum", l.to_string()),
+                    ("precision", prec.to_string()),
+                ],
+                &format!(
+                    "hostsim v1\nkind = tilegemm\nbatch = {b}\nlonum = {l}\nprecision = {prec}\n"
+                ),
+            )?;
+        }
+    }
+    for &n in &spec.getnorm_sizes {
+        mb.artifact(
+            &format!("getnorm_n{n}_l{l}"),
+            "getnorm",
+            &[&[n, n]],
+            1,
+            &[("n", n.to_string()), ("lonum", l.to_string())],
+            &format!("hostsim v1\nkind = getnorm\nn = {n}\nlonum = {l}\n"),
+        )?;
+        mb.artifact(
+            &format!("getnorm_mxu_n{n}_l{l}"),
+            "getnorm",
+            &[&[n, n]],
+            1,
+            &[("n", n.to_string()), ("lonum", l.to_string())],
+            &format!("hostsim v1\nkind = getnorm\nn = {n}\nlonum = {l}\nmxu = true\n"),
+        )?;
+    }
+    for &b in &spec.tune_bdims {
+        mb.artifact(
+            &format!("tune_b{b}"),
+            "tune",
+            &[&[b, b], &[b, b], &[]],
+            2,
+            &[("bdim", b.to_string())],
+            &format!("hostsim v1\nkind = tune\nbdim = {b}\n"),
+        )?;
+    }
+    for &n in &spec.fused_sizes {
+        mb.artifact(
+            &format!("spamm_fused_n{n}_f32"),
+            "spamm_fused",
+            &[&[n, n], &[n, n], &[]],
+            1,
+            &[
+                ("n", n.to_string()),
+                ("lonum", l.to_string()),
+                ("precision", "f32".to_string()),
+            ],
+            &format!("hostsim v1\nkind = spamm_fused\nn = {n}\nlonum = {l}\nprecision = f32\n"),
+        )?;
+    }
+
+    let manifest = format!(
+        r#"{{"lonum": {l}, "version": 1, "artifacts": [{}]}}"#,
+        mb.entries.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(())
+}
+
+/// Locate a real AOT artifact bundle — `CUSPAMM_ARTIFACTS`, then
+/// `artifacts/`, then `../artifacts/` — falling back to the synthesized
+/// hostsim bundle when none exists.  The single bundle-discovery path
+/// for tests and benches.
+pub fn find_or_test_bundle() -> Result<ArtifactBundle> {
+    let candidates = [
+        std::env::var("CUSPAMM_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        "../artifacts".to_string(),
+    ];
+    for c in candidates.iter().filter(|c| !c.is_empty()) {
+        if Path::new(c).join("manifest.json").exists() {
+            return ArtifactBundle::load(c);
+        }
+    }
+    test_bundle()
+}
+
+/// Load (writing on first use in this process) the default hostsim bundle
+/// for tests and benches that have no real artifact directory.  A failed
+/// synthesis is remembered as the failure it was — every caller gets the
+/// root cause, not a confusing partial-bundle load error.
+pub fn test_bundle() -> Result<ArtifactBundle> {
+    static DIR: std::sync::OnceLock<std::result::Result<PathBuf, String>> =
+        std::sync::OnceLock::new();
+    let outcome = DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("cuspamm_hostsim_{}", std::process::id()));
+        write_bundle(&dir, &HostsimSpec::default())
+            .map(|_| dir)
+            .map_err(|e| e.to_string())
+    });
+    match outcome {
+        Ok(dir) => ArtifactBundle::load(dir),
+        Err(e) => Err(crate::error::Error::Artifact(format!(
+            "hostsim bundle synthesis failed: {e}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn bundle_loads_and_resolves_grid() {
+        let b = test_bundle().unwrap();
+        assert_eq!(b.lonum, 32);
+        assert!(b.dense(256, "f32").is_ok());
+        assert!(b.dense(256, "bf16").is_ok());
+        assert!(b.getnorm(256, 32, false).is_ok());
+        assert!(b.getnorm(256, 32, true).is_ok());
+        assert!(b.tune(16).is_ok());
+        assert!(b.spamm_fused(256, "f32").is_ok());
+        assert_eq!(b.tilegemm_buckets(32, "f32"), vec![16, 64, 256]);
+        assert_eq!(b.dense_sizes(), vec![256, 512]);
+    }
+
+    #[test]
+    fn dense_artifact_executes_on_simulator() {
+        let b = test_bundle().unwrap();
+        let rt = Runtime::new(&b).unwrap();
+        let a = Matrix::randn(256, 256, 1);
+        let c = rt.dense(&a, &Matrix::eye(256), "f32").unwrap();
+        assert!(a.error_fnorm(&c).unwrap() < 1e-6);
+    }
+}

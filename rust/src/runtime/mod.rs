@@ -10,6 +10,7 @@
 pub mod artifact;
 pub mod client;
 pub mod devicesim;
+pub mod hostsim;
 pub mod literal;
 
 pub use artifact::{ArtifactBundle, ArtifactMeta};

@@ -1,0 +1,410 @@
+//! Norm/schedule caching for the execution pipeline (§3.3/§3.4 reuse).
+//!
+//! The get-norm and schedule-compaction phases depend only on the operand
+//! *contents*, the tile size, and τ — inside `power`/`purification` loops
+//! (and for repeated service requests on the same operands) they are pure
+//! recomputation.  [`NormCache`] memoizes normmaps keyed on a 128-bit
+//! content fingerprint of the padded operand; [`ScheduleCache`] memoizes
+//! compacted schedules keyed on both operand fingerprints plus the exact
+//! τ bits.  Hit/miss counts are surfaced through
+//! [`MultiplyStats`](crate::spamm::MultiplyStats) and the global
+//! [`telemetry`](crate::telemetry) counters.
+//!
+//! Both caches are interior-mutable (engines take `&self`) and bounded
+//! with LRU eviction (a hit refreshes recency, so the constant operand
+//! of a long power chain survives arbitrarily many intermediate
+//! inserts); fingerprints are two independent FNV-1a streams
+//! over the f32 bit patterns, so a collision needs ~2⁶⁴ distinct operands
+//! in flight — far beyond any cache capacity here.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::matrix::tiling::PaddedMatrix;
+use crate::matrix::Matrix;
+use crate::spamm::executor::MultiplyStats;
+use crate::spamm::schedule::Schedule;
+use crate::telemetry;
+
+/// 128-bit content fingerprint of a padded operand (dims + lonum + data).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub u64, pub u64);
+
+struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new(seed: u64) -> Fnv {
+        Fnv(Self::OFFSET ^ seed)
+    }
+
+    #[inline]
+    fn mix(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+}
+
+/// Fingerprint a padded matrix: one pass over the data, two FNV streams.
+pub fn fingerprint(p: &PaddedMatrix) -> Fingerprint {
+    let mut h1 = Fnv::new(0x5bd1_e995_0000_0001);
+    let mut h2 = Fnv::new(0x9e37_79b9_7f4a_7c15);
+    for h in [&mut h1, &mut h2] {
+        h.mix(p.logical_rows as u64);
+        h.mix(p.logical_cols as u64);
+        h.mix(p.lonum as u64);
+    }
+    let data = p.inner.data();
+    let mut chunks = data.chunks_exact(2);
+    for pair in &mut chunks {
+        let v = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        h1.mix(v);
+        h2.mix(v.rotate_left(17));
+    }
+    if let [last] = chunks.remainder() {
+        let v = last.to_bits() as u64;
+        h1.mix(v);
+        h2.mix(v.rotate_left(17));
+    }
+    Fingerprint(h1.0, h2.0)
+}
+
+/// Bounded LRU map shared by both caches (`order` front = least
+/// recently used).
+struct BoundedMap<K, V> {
+    cap: usize,
+    map: HashMap<K, V>,
+    order: VecDeque<K>,
+}
+
+impl<K: Clone + Eq + std::hash::Hash, V: Clone> BoundedMap<K, V> {
+    fn new(cap: usize) -> Self {
+        BoundedMap {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+        }
+    }
+
+    /// Move `key` to the most-recently-used position.
+    fn touch(&mut self, key: &K) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            if let Some(k) = self.order.remove(pos) {
+                self.order.push_back(k);
+            }
+        }
+    }
+
+    fn get(&mut self, key: &K) -> Option<V> {
+        let hit = self.map.get(key).cloned();
+        if hit.is_some() {
+            self.touch(key);
+        }
+        hit
+    }
+
+    fn insert(&mut self, key: K, value: V) {
+        if self.map.contains_key(&key) {
+            self.touch(&key);
+            self.map.insert(key, value);
+            return;
+        }
+        while self.order.len() >= self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.order.push_back(key.clone());
+        self.map.insert(key, value);
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Memoized normmaps keyed on operand fingerprints.
+pub struct NormCache {
+    inner: Mutex<BoundedMap<Fingerprint, Arc<Matrix>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl NormCache {
+    pub fn new(cap: usize) -> NormCache {
+        NormCache {
+            inner: Mutex::new(BoundedMap::new(cap)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the normmap for `key`, computing (outside the lock) on miss.
+    /// Returns the normmap and whether this was a hit.
+    pub fn get_or_compute(
+        &self,
+        key: Fingerprint,
+        compute: impl FnOnce() -> Result<Matrix>,
+    ) -> Result<(Arc<Matrix>, bool)> {
+        if let Some(hit) = self.inner.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().add("spamm.norm_cache.hits", 1);
+            return Ok((hit, true));
+        }
+        let value = Arc::new(compute()?);
+        self.inner.lock().unwrap().insert(key, value.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.norm_cache.misses", 1);
+        Ok((value, false))
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Key of a compacted schedule: both operand fingerprints + exact τ bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ScheduleKey {
+    pub a: Fingerprint,
+    pub b: Fingerprint,
+    pub tau_bits: u32,
+}
+
+/// Memoized compacted schedules.
+pub struct ScheduleCache {
+    inner: Mutex<BoundedMap<ScheduleKey, Arc<Schedule>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScheduleCache {
+    pub fn new(cap: usize) -> ScheduleCache {
+        ScheduleCache {
+            inner: Mutex::new(BoundedMap::new(cap)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get_or_compute(
+        &self,
+        key: ScheduleKey,
+        compute: impl FnOnce() -> Result<Schedule>,
+    ) -> Result<(Arc<Schedule>, bool)> {
+        if let Some(hit) = self.inner.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().add("spamm.schedule_cache.hits", 1);
+            return Ok((hit, true));
+        }
+        let value = Arc::new(compute()?);
+        self.inner.lock().unwrap().insert(key, value.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.schedule_cache.misses", 1);
+        Ok((value, false))
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// The cache pair every executor front-end (engine, coordinator) owns.
+pub struct ExecCaches {
+    pub norms: NormCache,
+    pub schedules: ScheduleCache,
+}
+
+/// Default capacity of the norm cache (operands in flight).
+pub const NORM_CACHE_CAP: usize = 32;
+/// Default capacity of the schedule cache ((A, B, τ) triples).
+pub const SCHEDULE_CACHE_CAP: usize = 64;
+
+impl Default for ExecCaches {
+    fn default() -> Self {
+        ExecCaches {
+            norms: NormCache::new(NORM_CACHE_CAP),
+            schedules: ScheduleCache::new(SCHEDULE_CACHE_CAP),
+        }
+    }
+}
+
+impl ExecCaches {
+    pub fn new() -> ExecCaches {
+        ExecCaches::default()
+    }
+
+    /// Cached normmap of a padded operand: fingerprint + norm-cache
+    /// lookup, computing via `compute` on a miss.  `enabled = false`
+    /// bypasses the cache entirely (no fingerprinting, no counter
+    /// bumps).  Hit/miss counts land in `stats`.
+    pub fn normmap_via(
+        &self,
+        enabled: bool,
+        p: &PaddedMatrix,
+        stats: &mut MultiplyStats,
+        compute: impl FnOnce() -> Result<Matrix>,
+    ) -> Result<(Arc<Matrix>, Option<Fingerprint>)> {
+        if !enabled {
+            return Ok((Arc::new(compute()?), None));
+        }
+        let fp = fingerprint(p);
+        let (nm, hit) = self.norms.get_or_compute(fp, compute)?;
+        if hit {
+            stats.norm_cache_hits += 1;
+        } else {
+            stats.norm_cache_misses += 1;
+        }
+        Ok((nm, Some(fp)))
+    }
+
+    /// Cached compacted schedule for (A, B, τ): consults the schedule
+    /// cache when both operand fingerprints are present, building
+    /// directly otherwise (caching disabled upstream).  Hit/miss counts
+    /// land in `stats`.
+    pub fn schedule_via(
+        &self,
+        fa: Option<Fingerprint>,
+        fb: Option<Fingerprint>,
+        tau: f32,
+        na: &Matrix,
+        nb: &Matrix,
+        stats: &mut MultiplyStats,
+    ) -> Result<Arc<Schedule>> {
+        let (Some(a), Some(b)) = (fa, fb) else {
+            return Ok(Arc::new(Schedule::build(na, nb, tau)?));
+        };
+        let key = ScheduleKey {
+            a,
+            b,
+            tau_bits: tau.to_bits(),
+        };
+        let (sched, hit) = self
+            .schedules
+            .get_or_compute(key, || Schedule::build(na, nb, tau))?;
+        if hit {
+            stats.schedule_cache_hits += 1;
+        } else {
+            stats.schedule_cache_misses += 1;
+        }
+        Ok(sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_content_and_shape() {
+        let a = Matrix::randn(16, 16, 1);
+        let b = Matrix::randn(16, 16, 2);
+        let pa = PaddedMatrix::new(&a, 8);
+        let pb = PaddedMatrix::new(&b, 8);
+        assert_eq!(fingerprint(&pa), fingerprint(&pa));
+        assert_ne!(fingerprint(&pa), fingerprint(&pb));
+        // Same content, different tile size → different key.
+        let pa16 = PaddedMatrix::new(&a, 16);
+        assert_ne!(fingerprint(&pa), fingerprint(&pa16));
+    }
+
+    #[test]
+    fn norm_cache_hits_and_bounds() {
+        let cache = NormCache::new(2);
+        let key = |i: u64| Fingerprint(i, i.wrapping_mul(31));
+        let (_, hit) = cache
+            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        assert!(!hit);
+        let (_, hit) = cache
+            .get_or_compute(key(1), || panic!("must not recompute"))
+            .unwrap();
+        assert!(hit);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        // Eviction beyond capacity 2: key 1 is least recently used.
+        cache
+            .get_or_compute(key(2), || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        cache
+            .get_or_compute(key(3), || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        let (_, hit) = cache
+            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        assert!(!hit, "least-recently-used entry must have been evicted");
+    }
+
+    #[test]
+    fn lru_hit_refreshes_recency() {
+        // The power-chain pattern: a constant operand hit on every
+        // iteration must survive arbitrarily many one-shot inserts.
+        let cache = NormCache::new(2);
+        let key = |i: u64| Fingerprint(i, !i);
+        cache
+            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        for i in 2..10 {
+            // Hit the hot key, then insert a fresh one-shot key.
+            let (_, hit) = cache
+                .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+                .unwrap();
+            assert!(hit, "hot key evicted at iteration {i}");
+            cache
+                .get_or_compute(key(i), || Ok(Matrix::zeros(1, 1)))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn schedule_cache_keys_on_tau() {
+        let cache = ScheduleCache::new(4);
+        let fp = Fingerprint(7, 11);
+        let na = Matrix::zeros(2, 2);
+        let mk = |tau: f32| ScheduleKey {
+            a: fp,
+            b: fp,
+            tau_bits: tau.to_bits(),
+        };
+        let build = || Schedule::build(&na, &na, 0.5);
+        let (_, h1) = cache.get_or_compute(mk(0.5), build).unwrap();
+        let (_, h2) = cache.get_or_compute(mk(0.5), build).unwrap();
+        let (_, h3) = cache.get_or_compute(mk(0.25), build).unwrap();
+        assert!(!h1 && h2 && !h3);
+    }
+
+    #[test]
+    fn error_is_not_cached() {
+        let cache = NormCache::new(4);
+        let key = Fingerprint(1, 2);
+        let r = cache.get_or_compute(key, || {
+            Err(crate::error::Error::Shape("boom".into()))
+        });
+        assert!(r.is_err());
+        let (_, hit) = cache
+            .get_or_compute(key, || Ok(Matrix::zeros(1, 1)))
+            .unwrap();
+        assert!(!hit);
+    }
+}

@@ -1,14 +1,29 @@
 //! Single-device SpAMM executor: the paper's two-kernel pipeline driven
 //! from Rust — get-norm (host or device), τ tuning, schedule compaction,
-//! and batched tile-GEMM execution with genuine work skipping.
+//! and *stage-pipelined* batched tile-GEMM execution with genuine work
+//! skipping.
+//!
+//! Two levels of reuse/overlap (§3.3 blocking, §3.4 pipeline):
+//!
+//! * **Caching** — normmaps and compacted schedules are memoized in
+//!   [`ExecCaches`] keyed on operand content fingerprints + τ, so
+//!   `power`/`purification` loops and repeated service requests skip the
+//!   get-norm and schedule phases entirely on hits.
+//! * **Pipelining** — [`execute_products`] double-buffers chunk
+//!   execution: a gather worker stages chunk *i+1* while this thread runs
+//!   tile-GEMM on chunk *i*, and a scatter worker drains finished
+//!   products from a channel.  With overlap, the per-stage second sums in
+//!   [`MultiplyStats`] exceed the `exec_span_secs` wall clock.
 
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::config::{Precision, SpammConfig};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
 use crate::matrix::Matrix;
 use crate::runtime::{ArtifactBundle, Runtime};
+use crate::spamm::cache::{ExecCaches, Fingerprint};
 use crate::spamm::normmap::normmap;
 use crate::spamm::schedule::{ProductRef, Schedule};
 use crate::spamm::tuner::{self, TuneParams};
@@ -23,17 +38,47 @@ pub struct MultiplyStats {
     pub valid_ratio: f64,
     pub norm_secs: f64,
     pub schedule_secs: f64,
+    /// Seconds inside the gather stage (overlaps exec when pipelined).
     pub gather_secs: f64,
+    /// Seconds inside tile-GEMM execution.
     pub exec_secs: f64,
+    /// Seconds inside the scatter-accumulate stage (overlaps exec).
     pub scatter_secs: f64,
+    /// Wall-clock span of the pipelined gather/exec/scatter loop.  With
+    /// overlap, `gather_secs + exec_secs + scatter_secs > exec_span_secs`.
+    pub exec_span_secs: f64,
     pub total_secs: f64,
     pub batches: usize,
+    /// Pipeline depth (in-flight chunks) used by the executor.
+    pub pipeline_depth: usize,
+    /// Norm-cache hits/misses for this call's operands.
+    pub norm_cache_hits: usize,
+    pub norm_cache_misses: usize,
+    /// Schedule-cache hits/misses for this call's (A, B, τ) key.
+    pub schedule_cache_hits: usize,
+    pub schedule_cache_misses: usize,
+}
+
+impl MultiplyStats {
+    /// Fold another record's pipeline-stage measurements into this one —
+    /// used to aggregate per-device worker stats into a multi-device
+    /// report.  Cache and schedule-phase fields are left untouched (they
+    /// belong to the front-end, not the device workers).
+    pub fn absorb_stages(&mut self, other: &MultiplyStats) {
+        self.gather_secs += other.gather_secs;
+        self.exec_secs += other.exec_secs;
+        self.scatter_secs += other.scatter_secs;
+        self.exec_span_secs += other.exec_span_secs;
+        self.batches += other.batches;
+        self.pipeline_depth = self.pipeline_depth.max(other.pipeline_depth);
+    }
 }
 
 /// Single-device SpAMM engine.
 pub struct SpammEngine {
     rt: Runtime,
     cfg: SpammConfig,
+    caches: ExecCaches,
 }
 
 impl SpammEngine {
@@ -42,6 +87,7 @@ impl SpammEngine {
         Ok(SpammEngine {
             rt: Runtime::new(bundle)?,
             cfg,
+            caches: ExecCaches::new(),
         })
     }
 
@@ -51,6 +97,11 @@ impl SpammEngine {
 
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// The engine's norm/schedule caches (hit/miss inspection).
+    pub fn caches(&self) -> &ExecCaches {
+        &self.caches
     }
 
     /// normmap of a padded matrix — on-device (get-norm artifact) when
@@ -74,12 +125,25 @@ impl SpammEngine {
         Ok(normmap(p))
     }
 
+    /// Cached normmap: fingerprint the operand and consult the norm cache
+    /// (bypassed entirely when `cache_enabled` is off).
+    fn cached_normmap(
+        &self,
+        p: &PaddedMatrix,
+        stats: &mut MultiplyStats,
+    ) -> Result<(Arc<Matrix>, Option<Fingerprint>)> {
+        self.caches
+            .normmap_via(self.cfg.cache_enabled, p, stats, || self.normmap_of(p))
+    }
+
     /// Tune τ for a target valid ratio (§3.5.2; host twin of tune.py).
     pub fn tune_tau(&self, a: &Matrix, b: &Matrix, target: f64) -> Result<TuneResult> {
+        check_inner_dims("tune_tau", a, b)?;
         let pa = PaddedMatrix::new(a, self.cfg.lonum);
         let pb = PaddedMatrix::new(b, self.cfg.lonum);
-        let na = self.normmap_of(&pa)?;
-        let nb = self.normmap_of(&pb)?;
+        let mut scratch = MultiplyStats::default();
+        let (na, _) = self.cached_normmap(&pa, &mut scratch)?;
+        let (nb, _) = self.cached_normmap(&pb, &mut scratch)?;
         tuner::tune_tau(&na, &nb, target, TuneParams::default())
     }
 
@@ -95,6 +159,7 @@ impl SpammEngine {
         b: &Matrix,
         tau: f32,
     ) -> Result<(Matrix, MultiplyStats)> {
+        check_inner_dims("multiply", a, b)?;
         let t_total = Instant::now();
         let mut stats = MultiplyStats::default();
 
@@ -102,12 +167,14 @@ impl SpammEngine {
         let pb = PaddedMatrix::new(b, self.cfg.lonum);
 
         let t = Instant::now();
-        let na = self.normmap_of(&pa)?;
-        let nb = self.normmap_of(&pb)?;
+        let (na, fa) = self.cached_normmap(&pa, &mut stats)?;
+        let (nb, fb) = self.cached_normmap(&pb, &mut stats)?;
         stats.norm_secs = t.elapsed().as_secs_f64();
 
         let t = Instant::now();
-        let sched = Schedule::build(&na, &nb, tau)?;
+        let sched = self
+            .caches
+            .schedule_via(fa, fb, tau, &na, &nb, &mut stats)?;
         stats.schedule_secs = t.elapsed().as_secs_f64();
         stats.valid_products = sched.valid_products();
         stats.total_products = sched.total_products();
@@ -134,6 +201,7 @@ impl SpammEngine {
 
     /// Dense baseline (cuBLAS stand-in) on the same runtime.
     pub fn dense(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        check_inner_dims("dense", a, b)?;
         self.rt.dense(a, b, self.cfg.precision.as_str())
     }
 
@@ -148,7 +216,7 @@ impl SpammEngine {
         c: &Matrix,
     ) -> Result<Matrix> {
         if c.rows() != a.rows() || c.cols() != b.cols() {
-            return Err(crate::error::Error::Shape(format!(
+            return Err(Error::Shape(format!(
                 "axpby: C is {}x{}, want {}x{}",
                 c.rows(),
                 c.cols(),
@@ -166,25 +234,43 @@ impl SpammEngine {
     /// Fused single-call SpAMM (on-device normmaps + masked multiply) —
     /// the numerics oracle path; requires a `spamm_fused_n{N}` artifact.
     pub fn multiply_fused(&self, a: &Matrix, b: &Matrix, tau: f32) -> Result<Matrix> {
+        check_inner_dims("multiply_fused", a, b)?;
         self.rt
             .spamm_fused(a, b, tau, self.cfg.precision.as_str())
     }
+}
+
+/// Validate the inner dimensions of A·B.  Mismatches that pad to the same
+/// tile count (e.g. 17 vs 20 at lonum 32) would otherwise silently produce
+/// garbage — the schedule only sees tile grids.
+pub fn check_inner_dims(op: &str, a: &Matrix, b: &Matrix) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "{op}: inner dimensions disagree: A is {}x{}, B is {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
 }
 
 /// Greedy bucket packing: take the largest full bucket that fits the
 /// remainder; the final partial chunk uses the smallest covering bucket.
 /// Keeps zero-padding waste on the tail only (e.g. 153 products over
 /// buckets {16,64,256} → 64+64+16+16 with 4.6% padding, instead of one
-/// padded 256-call with 67% padding).
+/// padded 256-call with 67% padding).  Every chunk — including the
+/// sub-smallest-bucket tail — respects `cfg.max_tile_batch`.
 pub fn pack_chunks<'a>(
-    bundle: &crate::runtime::ArtifactBundle,
+    bundle: &ArtifactBundle,
     cfg: &SpammConfig,
     products: &'a [ProductRef],
 ) -> Result<Vec<&'a [ProductRef]>> {
     let precision = cfg.precision.as_str();
     let buckets = bundle.tilegemm_buckets(cfg.lonum, precision);
     if buckets.is_empty() {
-        return Err(crate::error::Error::Artifact(format!(
+        return Err(Error::Artifact(format!(
             "no tilegemm artifacts for lonum {} precision {precision}",
             cfg.lonum
         )));
@@ -198,7 +284,10 @@ pub fn pack_chunks<'a>(
             .rev()
             .find(|&&b| b <= rest.len() && b <= cap_limit)
             .copied()
-            .unwrap_or(rest.len()) // below the smallest bucket
+            // Below the smallest bucket: still clamp the tail to the
+            // configured cap (the unclamped fallback was a bug — a tail
+            // larger than max_tile_batch leaked through).
+            .unwrap_or_else(|| rest.len().min(cap_limit))
             .min(rest.len());
         let (head, tail) = rest.split_at(take);
         chunks.push(head);
@@ -207,49 +296,343 @@ pub fn pack_chunks<'a>(
     Ok(chunks)
 }
 
+/// Where executed tile products land.  The single-device engine scatters
+/// into the padded output matrix; the coordinator's per-device workers
+/// accumulate into their owned-tile map.
+pub trait ScatterSink: Send {
+    fn scatter(&mut self, c_ids: &[(usize, usize)], products: &[f32]) -> Result<()>;
+}
+
+impl ScatterSink for PaddedMatrix {
+    fn scatter(&mut self, c_ids: &[(usize, usize)], products: &[f32]) -> Result<()> {
+        scatter_accumulate(self, c_ids, products)
+    }
+}
+
+/// Per-tile accumulator for coordinator device workers: only owned output
+/// tiles are accepted.
+pub struct TileAccumulator {
+    lonum: usize,
+    acc: std::collections::BTreeMap<(usize, usize), Vec<f32>>,
+}
+
+impl TileAccumulator {
+    pub fn new(lonum: usize, owned: impl IntoIterator<Item = (usize, usize)>) -> TileAccumulator {
+        let l2 = lonum * lonum;
+        TileAccumulator {
+            lonum,
+            acc: owned.into_iter().map(|t| (t, vec![0.0f32; l2])).collect(),
+        }
+    }
+
+    /// Consume the accumulator into (tile coords, data) pairs.
+    pub fn into_tiles(self) -> Vec<((usize, usize), Vec<f32>)> {
+        self.acc.into_iter().collect()
+    }
+}
+
+impl ScatterSink for TileAccumulator {
+    fn scatter(&mut self, c_ids: &[(usize, usize)], products: &[f32]) -> Result<()> {
+        let l2 = self.lonum * self.lonum;
+        for (slot, c) in c_ids.iter().enumerate() {
+            let dst = self.acc.get_mut(c).ok_or_else(|| {
+                Error::Coordinator(format!("product for unowned tile {c:?}"))
+            })?;
+            for (d, s) in dst.iter_mut().zip(&products[slot * l2..(slot + 1) * l2]) {
+                *d += s;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One gathered chunk traveling from the gather worker to the exec stage.
+struct GatheredChunk {
+    cap: usize,
+    a_buf: Vec<f32>,
+    b_buf: Vec<f32>,
+    c_ids: Vec<(usize, usize)>,
+}
+
 /// Execute the surviving products of `tiles` in batched tile-GEMM calls,
-/// scatter-accumulating into `pc`.  Shared by the single-device engine and
-/// the per-device workers of the coordinator.
+/// scatter-accumulating into `sink`.  Shared by the single-device engine
+/// and the per-device workers of the coordinator.
+///
+/// Stage-pipelined (§3.4): a gather worker stages chunk *i+1* while this
+/// thread (which owns the non-`Send` PJRT runtime) executes chunk *i*, and
+/// a scatter worker drains finished products.  `cfg.pipeline_depth` bounds
+/// the in-flight chunks per channel.  Returns the executed product count.
 #[allow(clippy::too_many_arguments)]
-pub fn execute_products(
+pub fn execute_products<S: ScatterSink>(
     rt: &Runtime,
     cfg: &SpammConfig,
     pa: &PaddedMatrix,
     pb: &PaddedMatrix,
-    pc: &mut PaddedMatrix,
+    sink: &mut S,
     sched: &Schedule,
     tiles: &[(usize, usize)],
     stats: &mut MultiplyStats,
-) -> Result<()> {
+) -> Result<usize> {
     let products: Vec<ProductRef> = sched
         .products_for_tiles(tiles.iter().copied())
         .collect();
+    let executed = products.len();
+    stats.pipeline_depth = cfg.pipeline_depth.max(1);
+    if products.is_empty() {
+        // Zero surviving products (huge τ): the output is exactly the
+        // sink's current contents — no kernel launches at all.
+        return Ok(0);
+    }
     let precision = cfg.precision.as_str();
     let chunks = pack_chunks(rt.bundle(), cfg, &products)?;
-    let mut a_buf = Vec::new();
-    let mut b_buf = Vec::new();
-    for chunk in chunks {
-        // Pick the smallest compiled batch bucket that fits this chunk.
+    // Resolve each chunk's compiled batch capacity up front so the gather
+    // worker never touches the artifact registry.
+    let mut caps = Vec::with_capacity(chunks.len());
+    for chunk in &chunks {
         let meta = rt.bundle().tilegemm(chunk.len(), cfg.lonum, precision)?;
         let cap = meta.param_usize("batch").unwrap_or(chunk.len());
         debug_assert!(cap >= chunk.len());
+        caps.push(cap);
+    }
+    let depth = cfg.pipeline_depth.max(1);
+    let work: Vec<(&[ProductRef], usize)> = chunks.into_iter().zip(caps).collect();
 
+    // A single chunk has nothing to overlap with — run the stages
+    // inline and skip the worker spawn/channel setup entirely.
+    if work.len() == 1 {
+        let span = Instant::now();
+        let (chunk, cap) = work[0];
         let t = Instant::now();
         let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
         let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
+        let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
+        let mut a_buf = Vec::new();
+        let mut b_buf = Vec::new();
         gather_tiles(pa, &a_ids, cap, &mut a_buf)?;
         gather_tiles(pb, &b_ids, cap, &mut b_buf)?;
         stats.gather_secs += t.elapsed().as_secs_f64();
-
         let t = Instant::now();
         let out = rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision)?;
         stats.exec_secs += t.elapsed().as_secs_f64();
-
-        let t = Instant::now();
-        let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
-        scatter_accumulate(pc, &c_ids, &out)?;
-        stats.scatter_secs += t.elapsed().as_secs_f64();
         stats.batches += 1;
+        let t = Instant::now();
+        sink.scatter(&c_ids, &out)?;
+        stats.scatter_secs += t.elapsed().as_secs_f64();
+        stats.exec_span_secs += span.elapsed().as_secs_f64();
+        return Ok(executed);
     }
-    Ok(())
+
+    let span = Instant::now();
+    let result = std::thread::scope(|scope| -> Result<()> {
+        let (gather_tx, gather_rx) = mpsc::sync_channel::<GatheredChunk>(depth);
+        let (scatter_tx, scatter_rx) =
+            mpsc::sync_channel::<(Vec<(usize, usize)>, Vec<f32>)>(depth);
+        // Exec returns spent staging buffers to the gather worker so the
+        // hot loop reuses allocations instead of mallocing per chunk.
+        let (recycle_tx, recycle_rx) = mpsc::channel::<(Vec<f32>, Vec<f32>)>();
+
+        // Stage 1: gather worker (reads pa/pb, stages contiguous buffers).
+        let gather_worker = scope.spawn(move || -> Result<f64> {
+            let mut secs = 0.0f64;
+            for (chunk, cap) in work {
+                let (mut a_buf, mut b_buf) = recycle_rx.try_recv().unwrap_or_default();
+                let t = Instant::now();
+                let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
+                let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
+                let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
+                gather_tiles(pa, &a_ids, cap, &mut a_buf)?;
+                gather_tiles(pb, &b_ids, cap, &mut b_buf)?;
+                secs += t.elapsed().as_secs_f64();
+                let staged = GatheredChunk {
+                    cap,
+                    a_buf,
+                    b_buf,
+                    c_ids,
+                };
+                if gather_tx.send(staged).is_err() {
+                    break; // exec stage bailed out; stop producing
+                }
+            }
+            Ok(secs)
+        });
+
+        // Stage 3: scatter worker (owns the sink for the span).
+        let scatter_worker = scope.spawn(move || -> Result<f64> {
+            let mut secs = 0.0f64;
+            for (c_ids, out) in scatter_rx {
+                let t = Instant::now();
+                sink.scatter(&c_ids, &out)?;
+                secs += t.elapsed().as_secs_f64();
+            }
+            Ok(secs)
+        });
+
+        // Stage 2: tile-GEMM execution on this thread (the PJRT client is
+        // not Send; it never crosses threads).
+        let mut exec_err: Option<Error> = None;
+        for staged in gather_rx {
+            let GatheredChunk {
+                cap,
+                a_buf,
+                b_buf,
+                c_ids,
+            } = staged;
+            let t = Instant::now();
+            match rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision) {
+                Ok(out) => {
+                    stats.exec_secs += t.elapsed().as_secs_f64();
+                    stats.batches += 1;
+                    // Hand the buffers back for reuse (gather may already
+                    // be gone; that's fine).
+                    let _ = recycle_tx.send((a_buf, b_buf));
+                    if scatter_tx.send((c_ids, out)).is_err() {
+                        exec_err =
+                            Some(Error::Coordinator("scatter stage terminated early".into()));
+                        break;
+                    }
+                }
+                Err(e) => {
+                    exec_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(scatter_tx);
+
+        let gather_res = gather_worker
+            .join()
+            .map_err(|_| Error::Coordinator("gather worker panicked".into()))?;
+        let scatter_res = scatter_worker
+            .join()
+            .map_err(|_| Error::Coordinator("scatter worker panicked".into()))?;
+        // Report errors in pipeline order; a genuine scatter error beats
+        // the synthetic channel-closed error it caused upstream.
+        match gather_res {
+            Ok(secs) => stats.gather_secs += secs,
+            Err(e) => return Err(e),
+        }
+        match scatter_res {
+            Ok(secs) => stats.scatter_secs += secs,
+            Err(e) => return Err(e),
+        }
+        if let Some(e) = exec_err {
+            return Err(e);
+        }
+        Ok(())
+    });
+    stats.exec_span_secs += span.elapsed().as_secs_f64();
+    result?;
+    Ok(executed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tilegemm-only hostsim bundle with buckets {16, 64, 256} — written
+    /// through `runtime::hostsim` so the manifest/op schema has a single
+    /// owner, into a pid-suffixed dir so concurrent test runs can't race.
+    fn bucket_bundle(tag: &str) -> ArtifactBundle {
+        use crate::runtime::hostsim::{write_bundle, HostsimSpec};
+        let dir = std::env::temp_dir().join(format!("{tag}_{}", std::process::id()));
+        let spec = HostsimSpec {
+            lonum: 32,
+            dense_sizes: vec![],
+            getnorm_sizes: vec![],
+            tilegemm_batches: vec![16, 64, 256],
+            tune_bdims: vec![],
+            fused_sizes: vec![],
+            precisions: vec!["f32"],
+        };
+        write_bundle(&dir, &spec).unwrap();
+        ArtifactBundle::load(&dir).unwrap()
+    }
+
+    fn product(i: usize) -> ProductRef {
+        ProductRef {
+            a: (0, i),
+            b: (i, 0),
+            c: (0, 0),
+        }
+    }
+
+    #[test]
+    fn pack_chunks_empty_products() {
+        let bundle = bucket_bundle("cuspamm_pack_empty");
+        let cfg = SpammConfig::default();
+        let chunks = pack_chunks(&bundle, &cfg, &[]).unwrap();
+        assert!(chunks.is_empty());
+    }
+
+    #[test]
+    fn pack_chunks_greedy_buckets() {
+        let bundle = bucket_bundle("cuspamm_pack_greedy");
+        let cfg = SpammConfig::default(); // max_tile_batch 1024 > largest
+        let products: Vec<ProductRef> = (0..153).map(product).collect();
+        let chunks = pack_chunks(&bundle, &cfg, &products).unwrap();
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![64, 64, 16, 9]);
+        assert_eq!(sizes.iter().sum::<usize>(), 153);
+    }
+
+    #[test]
+    fn pack_chunks_cap_smaller_than_smallest_bucket() {
+        // Regression: the sub-smallest-bucket tail used to bypass
+        // max_tile_batch via the unclamped fallback.
+        let bundle = bucket_bundle("cuspamm_pack_cap");
+        let mut cfg = SpammConfig::default();
+        cfg.max_tile_batch = 10; // below the smallest bucket (16)
+        let products: Vec<ProductRef> = (0..25).map(product).collect();
+        let chunks = pack_chunks(&bundle, &cfg, &products).unwrap();
+        assert!(
+            chunks.iter().all(|c| c.len() <= 10),
+            "chunk exceeded cap: {:?}",
+            chunks.iter().map(|c| c.len()).collect::<Vec<_>>()
+        );
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 25);
+    }
+
+    #[test]
+    fn pack_chunks_tail_below_smallest_bucket() {
+        let bundle = bucket_bundle("cuspamm_pack_tail");
+        let cfg = SpammConfig::default();
+        let products: Vec<ProductRef> = (0..7).map(product).collect();
+        let chunks = pack_chunks(&bundle, &cfg, &products).unwrap();
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 7);
+    }
+
+    #[test]
+    fn pack_chunks_respects_cap_above_bucket() {
+        let bundle = bucket_bundle("cuspamm_pack_mid");
+        let mut cfg = SpammConfig::default();
+        cfg.max_tile_batch = 64;
+        let products: Vec<ProductRef> = (0..300).map(product).collect();
+        let chunks = pack_chunks(&bundle, &cfg, &products).unwrap();
+        assert!(chunks.iter().all(|c| c.len() <= 64));
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn tile_accumulator_rejects_unowned() {
+        let mut acc = TileAccumulator::new(2, [(0usize, 0usize)]);
+        let tile = vec![1.0f32; 4];
+        acc.scatter(&[(0, 0)], &tile).unwrap();
+        assert!(acc.scatter(&[(1, 1)], &tile).is_err());
+        let tiles = acc.into_tiles();
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].1, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn check_inner_dims_catches_padded_equal_grids() {
+        // 17 and 20 both pad to one 32-tile: the tile grids agree, the
+        // logical shapes do not.
+        let a = Matrix::zeros(16, 17);
+        let b = Matrix::zeros(20, 8);
+        assert!(check_inner_dims("multiply", &a, &b).is_err());
+        let ok = Matrix::zeros(17, 20);
+        let b2 = Matrix::zeros(20, 8);
+        assert!(check_inner_dims("multiply", &ok, &b2).is_ok());
+    }
 }

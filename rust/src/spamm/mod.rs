@@ -4,6 +4,7 @@
 //! in [`crate::coordinator`].
 
 pub mod balance;
+pub mod cache;
 pub mod error_analysis;
 pub mod executor;
 pub mod normmap;
@@ -13,6 +14,7 @@ pub mod reference;
 pub mod schedule;
 pub mod tuner;
 
+pub use cache::{ExecCaches, NormCache, ScheduleCache};
 pub use executor::{MultiplyStats, SpammEngine};
 pub use schedule::Schedule;
 pub use tuner::{tune_tau, TuneParams, TuneResult};

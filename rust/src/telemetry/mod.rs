@@ -49,6 +49,14 @@ pub fn init_logging() {
     });
 }
 
+/// Process-wide counter set: executor caches and other subsystems record
+/// hit/miss/throughput counters here so operators can snapshot them
+/// without threading a `Counters` handle through every layer.
+pub fn global() -> &'static Counters {
+    static GLOBAL: std::sync::OnceLock<Counters> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Counters::new)
+}
+
 /// A named monotonically-increasing counter set (thread-safe).
 #[derive(Default)]
 pub struct Counters {
@@ -152,6 +160,13 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         assert!(clock.secs() >= 0.004);
+    }
+
+    #[test]
+    fn global_counters_shared() {
+        let before = global().get("test.telemetry.global");
+        global().add("test.telemetry.global", 2);
+        assert_eq!(global().get("test.telemetry.global"), before + 2);
     }
 
     #[test]

@@ -2,18 +2,12 @@
 
 use cuspamm::runtime::ArtifactBundle;
 
-/// Locate the artifact bundle whether tests run from the workspace root or
-/// the package dir (honors CUSPAMM_ARTIFACTS).
+/// Locate the artifact bundle whether tests run from the workspace root
+/// or the package dir (honors CUSPAMM_ARTIFACTS).  When no real AOT
+/// bundle exists (the python/JAX `make artifacts` step needs a toolchain
+/// this environment may not have), a hostsim bundle is synthesized —
+/// same manifest schema and artifact grid, interpreted by the offline
+/// PJRT simulator — so the whole request path still runs end-to-end.
 pub fn bundle() -> ArtifactBundle {
-    let candidates = [
-        std::env::var("CUSPAMM_ARTIFACTS").unwrap_or_default(),
-        "artifacts".to_string(),
-        "../artifacts".to_string(),
-    ];
-    for c in candidates.iter().filter(|c| !c.is_empty()) {
-        if std::path::Path::new(c).join("manifest.json").exists() {
-            return ArtifactBundle::load(c).expect("manifest parse");
-        }
-    }
-    panic!("artifact bundle not found — run `make artifacts` first");
+    cuspamm::runtime::hostsim::find_or_test_bundle().expect("artifact bundle")
 }

@@ -1,0 +1,192 @@
+//! Integration tests for the stage-pipelined executor and the
+//! normmap/schedule caches (the PR-1 execution-layer redesign).
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::Matrix;
+use cuspamm::spamm::power::spamm_power;
+use cuspamm::spamm::reference::spamm_flat_host;
+use cuspamm::spamm::SpammEngine;
+
+use common::bundle;
+
+#[test]
+fn repeated_multiply_hits_caches_and_is_bit_identical() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 51);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 52);
+    let tau = 1e-4f32;
+
+    let (c_cold, s_cold) = engine.multiply_with_stats(&a, &x, tau).unwrap();
+    assert_eq!(s_cold.norm_cache_hits, 0);
+    assert_eq!(s_cold.norm_cache_misses, 2);
+    assert_eq!(s_cold.schedule_cache_misses, 1);
+
+    let (c_warm, s_warm) = engine.multiply_with_stats(&a, &x, tau).unwrap();
+    assert_eq!(s_warm.norm_cache_hits, 2, "both operand normmaps must hit");
+    assert_eq!(s_warm.norm_cache_misses, 0);
+    assert_eq!(s_warm.schedule_cache_hits, 1);
+    assert_eq!(s_warm.schedule_cache_misses, 0);
+
+    // Cache hits must not change a single bit of the result.
+    assert_eq!(c_cold.data(), c_warm.data());
+
+    // Engine-level counters agree.
+    assert!(engine.caches().norms.hits() >= 2);
+    assert!(engine.caches().schedules.hits() >= 1);
+}
+
+#[test]
+fn tau_change_rebuilds_schedule_but_reuses_norms() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 53);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 54);
+    engine.multiply(&a, &x, 1e-4).unwrap();
+    let (_, s) = engine.multiply_with_stats(&a, &x, 1e-3).unwrap();
+    assert_eq!(s.norm_cache_hits, 2);
+    assert_eq!(s.schedule_cache_hits, 0, "different τ is a different key");
+    assert_eq!(s.schedule_cache_misses, 1);
+}
+
+#[test]
+fn no_cache_flag_bypasses_caches() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.cache_enabled = false;
+    let engine = SpammEngine::new(&b, cfg).unwrap();
+    let a = Matrix::decay_exponential(96, 1.0, 0.5, 55);
+    for _ in 0..2 {
+        let (_, s) = engine.multiply_with_stats(&a, &a, 1e-4).unwrap();
+        assert_eq!(s.norm_cache_hits + s.norm_cache_misses, 0);
+        assert_eq!(s.schedule_cache_hits + s.schedule_cache_misses, 0);
+    }
+    assert_eq!(engine.caches().norms.hits() + engine.caches().norms.misses(), 0);
+}
+
+#[test]
+fn cached_and_uncached_paths_agree_bitwise() {
+    let b = bundle();
+    let cached = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let mut cfg = SpammConfig::default();
+    cfg.cache_enabled = false;
+    let uncached = SpammEngine::new(&b, cfg).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 56);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 57);
+    for tau in [0.0f32, 1e-4] {
+        let c1 = cached.multiply(&a, &x, tau).unwrap();
+        let c2 = cached.multiply(&a, &x, tau).unwrap(); // cache hit
+        let c3 = uncached.multiply(&a, &x, tau).unwrap();
+        assert_eq!(c1.data(), c2.data());
+        assert_eq!(c1.data(), c3.data());
+    }
+}
+
+#[test]
+fn zero_surviving_products_returns_exact_zeros() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::randn(96, 96, 58);
+    let (c, stats) = engine.multiply_with_stats(&a, &a, f32::MAX).unwrap();
+    assert_eq!(stats.valid_products, 0);
+    assert_eq!(stats.batches, 0, "no kernel launches for an empty schedule");
+    assert_eq!(c.fnorm(), 0.0);
+    assert!(c.data().iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn pipelined_execution_matches_host_reference() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.pipeline_depth = 3;
+    let engine = SpammEngine::new(&b, cfg).unwrap();
+    let a = Matrix::decay_exponential(256, 1.0, 0.5, 59);
+    let x = Matrix::decay_exponential(256, 1.0, 0.5, 60);
+    let tau = engine.tune_tau(&a, &x, 0.3).unwrap().tau;
+    let (c, stats) = engine.multiply_with_stats(&a, &x, tau).unwrap();
+    let want = spamm_flat_host(&a, &x, tau, b.lonum).unwrap();
+    let rel = c.error_fnorm(&want).unwrap() / want.fnorm().max(1e-30);
+    assert!(rel < 1e-5, "rel err {rel}");
+    assert_eq!(stats.pipeline_depth, 3);
+    assert!(stats.batches >= 1);
+    assert!(stats.exec_span_secs > 0.0);
+    assert!(stats.exec_span_secs <= stats.total_secs + 1e-9);
+}
+
+#[test]
+fn pipeline_depth_does_not_change_results() {
+    let b = bundle();
+    let mut results = Vec::new();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 61);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 62);
+    for depth in [1usize, 2, 4] {
+        let mut cfg = SpammConfig::default();
+        cfg.pipeline_depth = depth;
+        let engine = SpammEngine::new(&b, cfg).unwrap();
+        results.push(engine.multiply(&a, &x, 1e-4).unwrap());
+    }
+    assert_eq!(results[0].data(), results[1].data());
+    assert_eq!(results[0].data(), results[2].data());
+}
+
+#[test]
+fn engine_rejects_mismatched_inner_dims_that_pad_alike() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    // 17 and 20 both pad to a single 32-tile, so the tile grids agree and
+    // the old code silently produced garbage.
+    let a = Matrix::randn(16, 17, 63);
+    let x = Matrix::randn(20, 8, 64);
+    assert!(engine.multiply(&a, &x, 0.0).is_err());
+    assert!(engine.multiply_with_stats(&a, &x, 0.0).is_err());
+    assert!(engine.tune_tau(&a, &x, 0.1).is_err());
+}
+
+#[test]
+fn coordinator_rejects_mismatched_inner_dims() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 2;
+    let coord = Coordinator::new(&b, cfg).unwrap();
+    let a = Matrix::randn(16, 17, 65);
+    let x = Matrix::randn(20, 8, 66);
+    assert!(coord.multiply(&a, &x, 0.0).is_err());
+    assert!(coord.tune_tau(&a, &x, 0.1).is_err());
+}
+
+#[test]
+fn power_chain_reuses_cached_operand_norms() {
+    let b = bundle();
+    let coord = Coordinator::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(96, 1.0, 0.5, 67);
+    let r = spamm_power(&coord, &a, 4, 1e-5).unwrap();
+    assert_eq!(r.steps.len(), 3);
+    // The constant right-hand operand A must hit the norm cache on every
+    // iteration after the first.
+    assert!(
+        coord.caches().norms.hits() >= 2,
+        "expected ≥2 norm-cache hits, saw {}",
+        coord.caches().norms.hits()
+    );
+}
+
+#[test]
+fn coordinator_cached_multiply_is_bit_identical() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 2;
+    let coord = Coordinator::new(&b, cfg).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.55, 68);
+    let x = Matrix::decay_exponential(128, 1.0, 0.55, 69);
+    let r1 = coord.multiply(&a, &x, 1e-4).unwrap();
+    let r2 = coord.multiply(&a, &x, 1e-4).unwrap();
+    assert_eq!(r1.c.data(), r2.c.data());
+    assert!(coord.caches().schedules.hits() >= 1);
+    // Per-device pipeline-stage clocks are aggregated into the report.
+    assert!(r1.stage.batches >= 1);
+    assert!(r1.stage.exec_span_secs > 0.0);
+    assert!(r1.stage.exec_secs > 0.0);
+}

@@ -1,0 +1,659 @@
+//! Offline PJRT simulator with the `xla-rs` API surface cuspamm uses.
+//!
+//! The real build of this system AOT-compiles JAX/Pallas kernels to HLO
+//! text and executes them through PJRT.  This vendored stand-in keeps the
+//! exact client API (`PjRtClient` → `compile` → `execute` → `Literal`) but
+//! "compiles" a self-describing *hostsim* artifact format instead of HLO:
+//!
+//! ```text
+//! hostsim v1
+//! kind = tilegemm
+//! batch = 64
+//! lonum = 32
+//! precision = f32
+//! ```
+//!
+//! Each artifact kind is interpreted with the same numeric contract as the
+//! corresponding Pallas kernel (f32 accumulation; bf16 operand rounding
+//! with round-to-nearest-even for the MXU variants).  Genuine HLO text is
+//! rejected at compile time with a clear error, mirroring where a real
+//! PJRT stack would fail on a corrupt module.
+//!
+//! Like the real `xla-rs`, the client is intentionally `!Send`: one client
+//! per device thread is the honest model of one context per GPU.
+
+use std::borrow::Borrow;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error` (message-only here).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of literals (f32 is the only one this build moves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host literal: an f32 array or a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal(Repr);
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Array { dims: Vec<usize>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+/// Element types extractable from a literal via [`Literal::to_vec`].
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn collect_from(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn collect_from(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.0 {
+            Repr::Array { data, .. } => Ok(data.clone()),
+            Repr::Tuple(_) => Err(Error::new("to_vec on a tuple literal")),
+        }
+    }
+}
+
+impl Literal {
+    /// Build an array literal from raw bytes (native endianness), the
+    /// layout `literal_f32` produces.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let ElementType::F32 = ty;
+        if data.len() % 4 != 0 {
+            return Err(Error::new("untyped f32 data not a multiple of 4 bytes"));
+        }
+        let count: usize = dims.iter().product::<usize>().max(1);
+        let values: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|b| f32::from_ne_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        if values.len() != count {
+            return Err(Error::new(format!(
+                "shape {dims:?} needs {count} f32 values, got {}",
+                values.len()
+            )));
+        }
+        Ok(Literal(Repr::Array {
+            dims: dims.to_vec(),
+            data: values,
+        }))
+    }
+
+    fn array(dims: Vec<usize>, data: Vec<f32>) -> Literal {
+        debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len().max(1));
+        Literal(Repr::Array { dims, data })
+    }
+
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal(Repr::Tuple(parts))
+    }
+
+    /// Shape of an array literal (tuples have no array shape).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { dims, .. } => Ok(ArrayShape {
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            }),
+            Repr::Tuple(_) => Err(Error::new("array_shape on a tuple literal")),
+        }
+    }
+
+    /// Copy the elements out of an array literal.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::collect_from(self)
+    }
+
+    /// Split a tuple literal into its parts (consumes the contents).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.0 {
+            Repr::Tuple(parts) => Ok(std::mem::take(parts)),
+            Repr::Array { .. } => Err(Error::new("decompose_tuple on an array literal")),
+        }
+    }
+
+    fn dims_and_data(&self) -> Result<(&[usize], &[f32])> {
+        match &self.0 {
+            Repr::Array { dims, data } => Ok((dims, data)),
+            Repr::Tuple(_) => Err(Error::new("expected an array literal, got a tuple")),
+        }
+    }
+}
+
+/// Parsed module text (HLO in the real stack, hostsim here).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("{}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            text: proto.text.clone(),
+        }
+    }
+}
+
+/// The per-device client.  `!Send` on purpose (`Rc` marker), matching the
+/// real binding: one client per device thread.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// A CPU-backed client (the only backend of the simulator).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: Rc::new(()) })
+    }
+
+    /// "Compile" a computation: parse the hostsim spec.  Non-hostsim text
+    /// (e.g. real or corrupt HLO) fails here, like a PJRT compile would.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let spec = OpSpec::parse(&comp.text)?;
+        Ok(PjRtLoadedExecutable {
+            spec,
+            _not_send: Rc::new(()),
+        })
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled (interpretable) executable.
+pub struct PjRtLoadedExecutable {
+    spec: OpSpec,
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals.  Returns per-device, per-output buffers
+    /// like the real API; the root output is always a tuple literal.
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let inputs: Vec<&Literal> = args.iter().map(|l| l.borrow()).collect();
+        let outputs = self.spec.run(&inputs)?;
+        Ok(vec![vec![PjRtBuffer {
+            literal: Literal::tuple(outputs),
+        }]])
+    }
+}
+
+// ---- hostsim interpreter ---------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum OpSpec {
+    /// C[m,n] = A[m,k] · B[k,n].
+    Dense { m: usize, k: usize, n: usize, bf16: bool },
+    /// Per-slot C[b] = A[b] · B[b] over `batch` lonum×lonum tiles.
+    TileGemm { batch: usize, lonum: usize, bf16: bool },
+    /// Tile Frobenius norms of an n×n matrix.
+    GetNorm { n: usize, lonum: usize, bf16: bool },
+    /// τ search over normmap products for a target valid ratio.
+    Tune { bdim: usize },
+    /// Fused SpAMM: normmaps + masked tile multiply in one call.
+    SpammFused { n: usize, lonum: usize, bf16: bool },
+}
+
+fn parse_usize(kv: &BTreeMap<String, String>, key: &str) -> Result<usize> {
+    kv.get(key)
+        .ok_or_else(|| Error::new(format!("hostsim spec missing '{key}'")))?
+        .parse()
+        .map_err(|_| Error::new(format!("hostsim spec: bad integer for '{key}'")))
+}
+
+fn parse_bf16(kv: &BTreeMap<String, String>) -> bool {
+    matches!(kv.get("precision").map(String::as_str), Some("bf16"))
+}
+
+impl OpSpec {
+    fn parse(text: &str) -> Result<OpSpec> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("").trim();
+        if !header.starts_with("hostsim") {
+            return Err(Error::new(
+                "not a hostsim artifact (this offline simulator cannot compile raw HLO)",
+            ));
+        }
+        let mut kv = BTreeMap::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::new(format!("hostsim spec: bad line '{line}'")))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        match kv.get("kind").map(String::as_str) {
+            Some("dense") => Ok(OpSpec::Dense {
+                m: parse_usize(&kv, "m")?,
+                k: parse_usize(&kv, "k")?,
+                n: parse_usize(&kv, "n")?,
+                bf16: parse_bf16(&kv),
+            }),
+            Some("tilegemm") => Ok(OpSpec::TileGemm {
+                batch: parse_usize(&kv, "batch")?,
+                lonum: parse_usize(&kv, "lonum")?,
+                bf16: parse_bf16(&kv),
+            }),
+            Some("getnorm") => Ok(OpSpec::GetNorm {
+                n: parse_usize(&kv, "n")?,
+                lonum: parse_usize(&kv, "lonum")?,
+                bf16: matches!(kv.get("mxu").map(String::as_str), Some("true"))
+                    || parse_bf16(&kv),
+            }),
+            Some("tune") => Ok(OpSpec::Tune {
+                bdim: parse_usize(&kv, "bdim")?,
+            }),
+            Some("spamm_fused") => Ok(OpSpec::SpammFused {
+                n: parse_usize(&kv, "n")?,
+                lonum: parse_usize(&kv, "lonum")?,
+                bf16: parse_bf16(&kv),
+            }),
+            Some(other) => Err(Error::new(format!("hostsim spec: unknown kind '{other}'"))),
+            None => Err(Error::new("hostsim spec missing 'kind'")),
+        }
+    }
+
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        match *self {
+            OpSpec::Dense { m, k, n, bf16 } => {
+                let a = expect_input(inputs, 0, &[m, k])?;
+                let b = expect_input(inputs, 1, &[k, n])?;
+                expect_arity(inputs, 2)?;
+                let (a, b) = maybe_quantize2(a, b, bf16);
+                Ok(vec![Literal::array(vec![m, n], matmul(&a, &b, m, k, n))])
+            }
+            OpSpec::TileGemm { batch, lonum, bf16 } => {
+                let a = expect_input(inputs, 0, &[batch, lonum, lonum])?;
+                let b = expect_input(inputs, 1, &[batch, lonum, lonum])?;
+                expect_arity(inputs, 2)?;
+                let (a, b) = maybe_quantize2(a, b, bf16);
+                let l2 = lonum * lonum;
+                let mut out = vec![0.0f32; batch * l2];
+                for s in 0..batch {
+                    tile_matmul(
+                        &a[s * l2..(s + 1) * l2],
+                        &b[s * l2..(s + 1) * l2],
+                        &mut out[s * l2..(s + 1) * l2],
+                        lonum,
+                    );
+                }
+                Ok(vec![Literal::array(vec![batch, lonum, lonum], out)])
+            }
+            OpSpec::GetNorm { n, lonum, bf16 } => {
+                let m = expect_input(inputs, 0, &[n, n])?;
+                expect_arity(inputs, 1)?;
+                let m = maybe_quantize(m, bf16);
+                let bdim = n / lonum;
+                Ok(vec![Literal::array(
+                    vec![bdim, bdim],
+                    normmap(&m, n, lonum),
+                )])
+            }
+            OpSpec::Tune { bdim } => {
+                let na = expect_input(inputs, 0, &[bdim, bdim])?;
+                let nb = expect_input(inputs, 1, &[bdim, bdim])?;
+                let target = expect_scalar(inputs, 2)?;
+                expect_arity(inputs, 3)?;
+                let (tau, ratio) = tune(na, nb, bdim, target);
+                Ok(vec![
+                    Literal::array(vec![], vec![tau]),
+                    Literal::array(vec![], vec![ratio]),
+                ])
+            }
+            OpSpec::SpammFused { n, lonum, bf16 } => {
+                let a = expect_input(inputs, 0, &[n, n])?;
+                let b = expect_input(inputs, 1, &[n, n])?;
+                let tau = expect_scalar(inputs, 2)?;
+                expect_arity(inputs, 3)?;
+                let (a, b) = maybe_quantize2(a, b, bf16);
+                Ok(vec![Literal::array(
+                    vec![n, n],
+                    spamm_fused(&a, &b, tau, n, lonum),
+                )])
+            }
+        }
+    }
+}
+
+fn expect_arity(inputs: &[&Literal], want: usize) -> Result<()> {
+    if inputs.len() != want {
+        return Err(Error::new(format!(
+            "expected {want} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    Ok(())
+}
+
+fn expect_input<'a>(inputs: &[&'a Literal], idx: usize, dims: &[usize]) -> Result<&'a [f32]> {
+    let lit = inputs
+        .get(idx)
+        .ok_or_else(|| Error::new(format!("missing input {idx}")))?;
+    let (got_dims, data) = lit.dims_and_data()?;
+    if got_dims != dims {
+        return Err(Error::new(format!(
+            "input {idx}: shape {got_dims:?} does not match compiled shape {dims:?}"
+        )));
+    }
+    Ok(data)
+}
+
+fn expect_scalar(inputs: &[&Literal], idx: usize) -> Result<f32> {
+    let lit = inputs
+        .get(idx)
+        .ok_or_else(|| Error::new(format!("missing input {idx}")))?;
+    let (dims, data) = lit.dims_and_data()?;
+    if !dims.is_empty() || data.len() != 1 {
+        return Err(Error::new(format!(
+            "input {idx}: expected a scalar, got shape {dims:?}"
+        )));
+    }
+    Ok(data[0])
+}
+
+/// bf16 round-to-nearest-even (XLA convert semantics).
+fn bf16_quantize(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return f32::from_bits((bits >> 16 << 16) | 0x0040_0000);
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+    f32::from_bits(rounded >> 16 << 16)
+}
+
+fn maybe_quantize(data: &[f32], bf16: bool) -> Vec<f32> {
+    if bf16 {
+        data.iter().map(|&x| bf16_quantize(x)).collect()
+    } else {
+        data.to_vec()
+    }
+}
+
+fn maybe_quantize2(a: &[f32], b: &[f32], bf16: bool) -> (Vec<f32>, Vec<f32>) {
+    (maybe_quantize(a, bf16), maybe_quantize(b, bf16))
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let crow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn tile_matmul(a: &[f32], b: &[f32], c: &mut [f32], l: usize) {
+    c.fill(0.0);
+    for i in 0..l {
+        for k in 0..l {
+            let av = a[i * l + k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[k * l..(k + 1) * l];
+            let crow = &mut c[i * l..(i + 1) * l];
+            for j in 0..l {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Tile Frobenius norms, f64 accumulation → f32 result (kernel contract).
+fn normmap(m: &[f32], n: usize, lonum: usize) -> Vec<f32> {
+    let bdim = n / lonum;
+    let mut out = vec![0.0f32; bdim * bdim];
+    for ti in 0..bdim {
+        for tj in 0..bdim {
+            let mut acc = 0.0f64;
+            for r in 0..lonum {
+                let row = &m[(ti * lonum + r) * n + tj * lonum..][..lonum];
+                for &x in row {
+                    acc += (x as f64) * (x as f64);
+                }
+            }
+            out[ti * bdim + tj] = acc.sqrt() as f32;
+        }
+    }
+    out
+}
+
+/// Quantile-based τ search: the (1 − target)-quantile of the norm-product
+/// distribution hits the target valid ratio exactly up to count
+/// quantization — same contract as the on-device tuning graph.
+fn tune(na: &[f32], nb: &[f32], bdim: usize, target: f32) -> (f32, f32) {
+    let mut products = Vec::with_capacity(bdim * bdim * bdim);
+    for i in 0..bdim {
+        for k in 0..bdim {
+            let av = na[i * bdim + k];
+            for j in 0..bdim {
+                products.push(av * nb[k * bdim + j]);
+            }
+        }
+    }
+    if products.is_empty() {
+        return (0.0, 1.0);
+    }
+    products.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let total = products.len();
+    let keep = ((target as f64) * total as f64).round() as usize;
+    let tau = if keep == 0 {
+        products[0] * 2.0 + 1.0
+    } else {
+        products[keep.min(total) - 1]
+    };
+    let count = products.iter().filter(|&&p| p >= tau).count();
+    (tau, count as f32 / total as f32)
+}
+
+/// Fused SpAMM with the flat-host contract: mask on f32 norm products,
+/// per-tile f32 matmuls accumulated in ascending k.
+fn spamm_fused(a: &[f32], b: &[f32], tau: f32, n: usize, lonum: usize) -> Vec<f32> {
+    let bdim = n / lonum;
+    let na = normmap(a, n, lonum);
+    let nb = normmap(b, n, lonum);
+    let l2 = lonum * lonum;
+    let mut ta = vec![0.0f32; l2];
+    let mut tb = vec![0.0f32; l2];
+    let mut tc = vec![0.0f32; l2];
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..bdim {
+        for j in 0..bdim {
+            for k in 0..bdim {
+                if na[i * bdim + k] * nb[k * bdim + j] < tau {
+                    continue;
+                }
+                copy_tile(a, n, i, k, lonum, &mut ta);
+                copy_tile(b, n, k, j, lonum, &mut tb);
+                tile_matmul(&ta, &tb, &mut tc, lonum);
+                add_tile(&mut out, n, i, j, lonum, &tc);
+            }
+        }
+    }
+    out
+}
+
+fn copy_tile(m: &[f32], n: usize, ti: usize, tj: usize, l: usize, dst: &mut [f32]) {
+    for r in 0..l {
+        let src = &m[(ti * l + r) * n + tj * l..][..l];
+        dst[r * l..(r + 1) * l].copy_from_slice(src);
+    }
+}
+
+fn add_tile(m: &mut [f32], n: usize, ti: usize, tj: usize, l: usize, src: &[f32]) {
+    for r in 0..l {
+        let dst = &mut m[(ti * l + r) * n + tj * l..][..l];
+        for (d, s) in dst.iter_mut().zip(&src[r * l..(r + 1) * l]) {
+            *d += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(dims: &[usize], data: &[f32]) -> Literal {
+        Literal::array(dims.to_vec(), data.to_vec())
+    }
+
+    fn run(text: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto {
+            text: text.to_string(),
+        };
+        let exe = client.compile(&XlaComputation::from_proto(&proto))?;
+        let bufs = exe.execute::<Literal>(inputs)?;
+        let mut root = bufs[0][0].to_literal_sync()?;
+        root.decompose_tuple()
+    }
+
+    #[test]
+    fn rejects_raw_hlo() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto {
+            text: "HloModule bad\nthis is not hlo".to_string(),
+        };
+        assert!(client.compile(&XlaComputation::from_proto(&proto)).is_err());
+    }
+
+    #[test]
+    fn dense_identity() {
+        let spec = "hostsim v1\nkind = dense\nm = 2\nk = 2\nn = 2\nprecision = f32";
+        let a = lit(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let eye = lit(&[2, 2], &[1.0, 0.0, 0.0, 1.0]);
+        let out = run(spec, &[a, eye]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_rejects_wrong_shape() {
+        let spec = "hostsim v1\nkind = dense\nm = 2\nk = 2\nn = 2\nprecision = f32";
+        let a = lit(&[3, 3], &[0.0; 9]);
+        assert!(run(spec, &[a.clone(), a]).is_err());
+    }
+
+    #[test]
+    fn tilegemm_pads_zero() {
+        let spec = "hostsim v1\nkind = tilegemm\nbatch = 2\nlonum = 2\nprecision = f32";
+        let a = lit(&[2, 2, 2], &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        let b = lit(&[2, 2, 2], &[5.0, 6.0, 7.0, 8.0, 1.0, 1.0, 1.0, 1.0]);
+        let out = run(spec, &[a, b]).unwrap();
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(&v[..4], &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(&v[4..], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn getnorm_single_tile() {
+        let spec = "hostsim v1\nkind = getnorm\nn = 2\nlonum = 2";
+        let a = lit(&[2, 2], &[3.0, 0.0, 0.0, 4.0]);
+        let out = run(spec, &[a]).unwrap();
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn tune_hits_target() {
+        let spec = "hostsim v1\nkind = tune\nbdim = 4";
+        let na: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let nb: Vec<f32> = (1..=16).map(|i| (17 - i) as f32).collect();
+        let out = run(
+            spec,
+            &[lit(&[4, 4], &na), lit(&[4, 4], &nb), lit(&[], &[0.25])],
+        )
+        .unwrap();
+        let ratio = out[1].to_vec::<f32>().unwrap()[0];
+        assert!((ratio - 0.25).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bf16_dense_quantizes() {
+        let spec = "hostsim v1\nkind = dense\nm = 1\nk = 1\nn = 1\nprecision = bf16";
+        let a = lit(&[1, 1], &[1.001]);
+        let b = lit(&[1, 1], &[1.0]);
+        let out = run(spec, &[a, b]).unwrap();
+        let v = out[0].to_vec::<f32>().unwrap()[0];
+        assert_ne!(v, 1.001, "bf16 must quantize");
+        assert!((v - 1.0).abs() < 0.01);
+    }
+}
