@@ -1,8 +1,13 @@
 //! Execution-pipeline bench: repeated multiplies in the power-iteration
 //! shape (same A, same τ) to measure (a) the norm+schedule phase saved by
-//! the content-fingerprint caches and (b) the gather/exec/scatter overlap
-//! of the stage-pipelined executor (per-stage second sums vs the
-//! pipelined wall-clock span).
+//! the content-fingerprint caches, (b) the gather/exec/scatter overlap of
+//! the stage-pipelined executor (per-stage second sums vs the pipelined
+//! wall-clock span), and (c) the host→device bytes the device-resident
+//! tile pool saves once the operands are warm (transfer reduction and
+//! reuse factor).
+//!
+//! `cargo bench --bench pipeline_cache -- --smoke` runs a one-iteration
+//! test-mode pass (the CI smoke invocation keeping this bench honest).
 
 use cuspamm::bench_harness::{fmt_secs, Table};
 use cuspamm::config::SpammConfig;
@@ -11,9 +16,10 @@ use cuspamm::runtime::hostsim;
 use cuspamm::spamm::SpammEngine;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
     let bundle = hostsim::find_or_test_bundle().expect("artifact bundle");
-    let n = 512usize;
-    let iters = 10usize;
+    let n = if smoke { 256usize } else { 512 };
+    let iters = if smoke { 1usize } else { 10 };
     let a = Matrix::decay_exponential(n, 1.0, 0.5, 7);
     let b = Matrix::decay_exponential(n, 1.0, 0.5, 8);
 
@@ -25,7 +31,8 @@ fn main() {
     };
     let engine = SpammEngine::new(&bundle, SpammConfig::default()).expect("engine");
 
-    // Cold call: norm + schedule phases computed from scratch.
+    // Cold call: norm + schedule phases computed from scratch, every
+    // operand tile uploaded (residency-pool misses).
     let (_, cold) = engine.multiply_with_stats(&a, &b, tau).expect("cold");
     let cold_phase = cold.norm_secs + cold.schedule_secs;
 
@@ -34,14 +41,19 @@ fn main() {
     let mut warm_hits = 0usize;
     let mut stage_sum = 0.0f64;
     let mut span_sum = 0.0f64;
+    let mut warm_transfer = 0u64;
+    let mut warm_saved = 0u64;
     for _ in 0..iters {
         let (_, s) = engine.multiply_with_stats(&a, &b, tau).expect("warm");
         warm_phase += s.norm_secs + s.schedule_secs;
         warm_hits += s.norm_cache_hits + s.schedule_cache_hits;
         stage_sum += s.gather_secs + s.exec_secs + s.scatter_secs;
         span_sum += s.exec_span_secs;
+        warm_transfer += s.transfer_bytes;
+        warm_saved += s.transfer_saved_bytes;
     }
     warm_phase /= iters as f64;
+    let warm_transfer_avg = warm_transfer / iters as u64;
 
     let mut table = Table::new(
         "Execution pipeline — cache reuse and stage overlap",
@@ -76,8 +88,68 @@ fn main() {
         format!("{:.2}", stage_sum / span_sum.max(1e-12)),
     ]);
     table.emit("pipeline_cache");
+
+    // ---- residency scenario: transfer bytes saved by the warm pool ------
+    let pool = engine.residency().expect("residency on by default");
+    let ps = pool.stats();
+    // Reuse factor: share of operand-tile references served without a
+    // host→device transfer (pool hits + within-chunk dedup).  Computed
+    // from the per-call MultiplyStats aggregates — pool counters alone
+    // miss the within-chunk dedup, which never reaches the pool.
+    let total_uploaded = cold.transfer_bytes + warm_transfer;
+    let total_saved = cold.transfer_saved_bytes + warm_saved;
+    let reuse = total_saved as f64 / (total_uploaded + total_saved).max(1) as f64;
+    let reduction = cold.transfer_bytes as f64 / warm_transfer_avg.max(1) as f64;
+
+    let mut rtable = Table::new(
+        "Residency — device-resident operand tiles",
+        &["metric", "value"],
+    );
+    rtable.row(vec![
+        "transfer bytes, cold multiply".into(),
+        format!("{} KiB", cold.transfer_bytes / 1024),
+    ]);
+    rtable.row(vec![
+        format!("transfer bytes, warm multiply (avg of {iters})"),
+        format!("{} KiB", warm_transfer_avg / 1024),
+    ]);
+    rtable.row(vec![
+        "warm transfer reduction".into(),
+        if warm_transfer_avg == 0 {
+            "∞ (zero warm transfers)".to_string()
+        } else {
+            format!("{reduction:.1}x")
+        },
+    ]);
+    rtable.row(vec![
+        "bytes saved across run".into(),
+        format!("{} KiB", total_saved / 1024),
+    ]);
+    rtable.row(vec![
+        "reuse factor (saved / referenced)".into(),
+        format!("{:.1}%", reuse * 100.0),
+    ]);
+    rtable.row(vec![
+        "pool hits / misses / evictions".into(),
+        format!("{} / {} / {}", ps.hits, ps.misses, ps.evictions),
+    ]);
+    rtable.row(vec![
+        "resident tiles (bytes)".into(),
+        format!("{} ({} KiB)", ps.resident_tiles, ps.resident_bytes / 1024),
+    ]);
+    rtable.emit("pipeline_cache_residency");
+
+    let pass = warm_transfer_avg * 4 <= cold.transfer_bytes;
+    println!(
+        "(acceptance: warm multiply transfers ≥4x fewer bytes than cold — {})",
+        if pass { "PASS" } else { "FAIL" }
+    );
     println!(
         "(phase speedup ≥5x and overlap factor >1.0 are the PR-1 acceptance \
          targets; overlap >1 means gather/scatter ran concurrently with exec)"
     );
+    if smoke {
+        assert!(pass, "smoke mode: warm residency must cut transfers ≥4x");
+        println!("smoke mode: one iteration, residency acceptance asserted — OK");
+    }
 }

@@ -66,6 +66,14 @@ pub struct SpammConfig {
     /// Memoize normmaps and compacted schedules across multiplies keyed on
     /// operand content fingerprints + τ (`--no-cache` turns this off).
     pub cache_enabled: bool,
+    /// Keep operand tiles device-resident across chunks, batches, and
+    /// multiplies (per-device pool keyed on content fingerprint + tile
+    /// coordinate; `--no-residency` turns this off).
+    pub residency_enabled: bool,
+    /// Byte budget of each device's resident-tile pool (LRU eviction;
+    /// pinned tiles are never evicted).  0 = unlimited.  Accepts `k`/`m`/
+    /// `g` suffixes in config files and on the CLI.
+    pub device_mem_budget: usize,
     /// Load-balance strategy.
     pub balance: Balance,
     /// Compute normmaps on-device (get-norm artifact) or on the host.
@@ -89,6 +97,8 @@ impl Default for SpammConfig {
             max_tile_batch: 1024,
             pipeline_depth: 2,
             cache_enabled: true,
+            residency_enabled: true,
+            device_mem_budget: 256 * 1024 * 1024,
             balance: Balance::Strided(4),
             device_normmap: false,
             sequential_devices: false,
@@ -107,6 +117,8 @@ impl SpammConfig {
             "max_tile_batch" => self.max_tile_batch = parse_num(key, value)?,
             "pipeline_depth" => self.pipeline_depth = parse_num(key, value)?,
             "cache_enabled" => self.cache_enabled = parse_bool(key, value)?,
+            "residency_enabled" => self.residency_enabled = parse_bool(key, value)?,
+            "device_mem_budget" => self.device_mem_budget = parse_bytes(key, value)?,
             "device_normmap" => {
                 self.device_normmap = parse_bool(key, value)?;
             }
@@ -170,6 +182,31 @@ fn parse_num(key: &str, value: &str) -> Result<usize> {
         .trim()
         .parse()
         .map_err(|_| Error::Config(format!("{key}: expected integer, got '{value}'")))
+}
+
+/// Parse a byte count with an optional `k`/`m`/`g` (KiB/MiB/GiB) suffix,
+/// e.g. `device_mem_budget = 256m`.
+fn parse_bytes(key: &str, value: &str) -> Result<usize> {
+    let v = value.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = v.strip_suffix('k') {
+        (d, 1usize << 10)
+    } else if let Some(d) = v.strip_suffix('m') {
+        (d, 1 << 20)
+    } else if let Some(d) = v.strip_suffix('g') {
+        (d, 1 << 30)
+    } else {
+        (v.as_str(), 1)
+    };
+    digits
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "{key}: expected bytes (integer, optional k/m/g suffix), got '{value}'"
+            ))
+        })
 }
 
 fn parse_bool(key: &str, value: &str) -> Result<bool> {
@@ -243,6 +280,28 @@ mod tests {
         c.validate().unwrap();
         c.pipeline_depth = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn residency_keys_and_byte_suffixes() {
+        let mut c = SpammConfig::default();
+        assert!(c.residency_enabled);
+        assert_eq!(c.device_mem_budget, 256 << 20);
+        c.apply("residency_enabled", "false").unwrap();
+        assert!(!c.residency_enabled);
+        for (v, want) in [
+            ("4096", 4096usize),
+            ("64k", 64 << 10),
+            ("256m", 256 << 20),
+            ("2g", 2 << 30),
+            ("0", 0),
+        ] {
+            c.apply("device_mem_budget", v).unwrap();
+            assert_eq!(c.device_mem_budget, want, "value '{v}'");
+        }
+        assert!(c.apply("device_mem_budget", "lots").is_err());
+        assert!(c.apply("device_mem_budget", "1.5m").is_err());
+        c.validate().unwrap();
     }
 
     #[test]

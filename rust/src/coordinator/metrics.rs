@@ -22,6 +22,9 @@ pub struct MultiDeviceReport {
     /// Seconds each device spent compiling executables (excluded from
     /// wall_secs via the warmup barrier).
     pub compile_secs: Vec<f64>,
+    /// Seconds each device's transfer queue spent resolving/uploading
+    /// operand tiles (the gather stage; overlaps compute when pipelined).
+    pub device_transfer_secs: Vec<f64>,
     /// Pipeline-stage seconds summed over the device workers
     /// (gather/exec/scatter/span + batch count); with stage overlap,
     /// `gather_secs + exec_secs + scatter_secs > exec_span_secs`.
@@ -44,7 +47,8 @@ impl MultiDeviceReport {
 
     pub fn summary_line(&self) -> String {
         format!(
-            "wall {:.3}s, busy {:?}, valid {}/{} ({:.1}%), imbalance {:.2}, eff {:.0}%",
+            "wall {:.3}s, busy {:?}, valid {}/{} ({:.1}%), imbalance {:.2}, eff {:.0}%, \
+             transfers {} KiB ({} KiB saved)",
             self.wall_secs,
             self.device_busy
                 .iter()
@@ -54,7 +58,9 @@ impl MultiDeviceReport {
             self.total_products,
             self.valid_ratio * 100.0,
             self.imbalance,
-            self.efficiency() * 100.0
+            self.efficiency() * 100.0,
+            self.stage.transfer_bytes / 1024,
+            self.stage.transfer_saved_bytes / 1024
         )
     }
 }
@@ -74,6 +80,7 @@ mod tests {
             valid_ratio: 0.5,
             imbalance: 1.0,
             compile_secs: vec![0.0, 0.0],
+            device_transfer_secs: vec![0.0, 0.0],
             stage: MultiplyStats::default(),
         }
     }

@@ -5,8 +5,10 @@
 //! blocks by default, the §3.5.1 strided policy optionally), B is logically
 //! broadcast (shared read-only here), per-device work is processed in P
 //! pipeline batches, and each device is a worker thread owning its own
-//! PJRT client (the one-context-per-GPU model).  Stream-level sync maps to
-//! the per-batch joins, host-level sync to the final join.
+//! PJRT client (the one-context-per-GPU model) plus its own
+//! [`crate::runtime::residency::ResidencyPool`] and transfer queue.  The
+//! P batches stream through one per-device pipeline — batch *i+1*'s
+//! uploads overlap batch *i*'s compute; host-level sync is the final join.
 
 pub mod metrics;
 pub mod partition;

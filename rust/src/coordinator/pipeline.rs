@@ -1,14 +1,18 @@
 //! Algorithm 4 execution: per-device worker threads, each owning a PJRT
 //! client, processing its tile partition in P pipeline batches.
 //!
-//! Each device batch now runs through the shared stage-pipelined executor
-//! ([`crate::spamm::executor::execute_products`]): gather is double
-//! buffered against tile-GEMM execution and scatter-accumulate drains
-//! from a channel, so per-device busy clocks reflect overlapped stages —
-//! the §3.4 transfer/compute overlap.  Normmaps and the compacted
-//! schedule are memoized in the coordinator's [`ExecCaches`], so repeated
-//! multiplies on the same operands (power chains, purification, service
-//! traffic) skip the get-norm and schedule phases entirely.
+//! Each device worker runs **one** stage pipeline across all of its P
+//! batches ([`crate::spamm::executor::execute_batches`]): an independent
+//! per-device *transfer queue* (the gather worker) streams operand-tile
+//! handles — uploading residency-pool misses — while the worker thread
+//! runs tile-GEMM and a scatter worker accumulates, so batch *i+1*'s
+//! uploads overlap batch *i*'s compute instead of joining at a per-batch
+//! stream-level sync.  Operand tiles live in a per-device
+//! [`ResidencyPool`] that persists across multiplies: power chains,
+//! purification, and repeated service requests skip phase-3 transfers on
+//! warm operands, the §3.3 A-block reuse.  Normmaps and the compacted
+//! schedule are memoized in the coordinator's [`ExecCaches`], covering
+//! phases 1–2 the same way.
 //!
 //! Timing protocol: every worker first compiles/warms its executables,
 //! then waits on a barrier; the wall clock runs from that barrier to the
@@ -22,10 +26,11 @@ use crate::config::SpammConfig;
 use crate::error::{Error, Result};
 use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
+use crate::runtime::residency::ResidencyPool;
 use crate::runtime::{ArtifactBundle, Runtime};
-use crate::spamm::cache::{ExecCaches, Fingerprint};
+use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
-    check_inner_dims, execute_products, MultiplyStats, TileAccumulator,
+    check_inner_dims, execute_batches, MultiplyStats, Operand, TileAccumulator,
 };
 use crate::spamm::normmap::normmap;
 use crate::spamm::schedule::Schedule;
@@ -39,6 +44,9 @@ pub struct Coordinator {
     bundle: ArtifactBundle,
     cfg: SpammConfig,
     caches: ExecCaches,
+    /// One operand-tile pool per device (empty under `--no-residency`).
+    /// Device memory is per-GPU, so pools are never shared across workers.
+    pools: Vec<Arc<ResidencyPool>>,
 }
 
 /// What one device worker returns: its owned output tiles and clocks.
@@ -56,10 +64,18 @@ struct DeviceResult {
 impl Coordinator {
     pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<Coordinator> {
         cfg.validate()?;
+        let pools = if cfg.residency_enabled {
+            (0..cfg.devices)
+                .map(|_| Arc::new(ResidencyPool::new(cfg.device_mem_budget)))
+                .collect()
+        } else {
+            Vec::new()
+        };
         Ok(Coordinator {
             bundle: bundle.clone(),
             cfg,
             caches: ExecCaches::new(),
+            pools,
         })
     }
 
@@ -70,6 +86,15 @@ impl Coordinator {
     /// The coordinator's norm/schedule caches (hit/miss inspection).
     pub fn caches(&self) -> &ExecCaches {
         &self.caches
+    }
+
+    /// Per-device residency pools (empty under `--no-residency`).
+    pub fn residency_pools(&self) -> &[Arc<ResidencyPool>] {
+        &self.pools
+    }
+
+    fn pool_of(&self, device: usize) -> Option<&ResidencyPool> {
+        self.pools.get(device).map(|p| p.as_ref())
     }
 
     /// Cached host normmap of a padded operand (hit/miss lands in
@@ -106,8 +131,8 @@ impl Coordinator {
         // stats.
         let mut front = MultiplyStats::default();
         let t = Instant::now();
-        let (na, fa) = self.cached_normmap(&pa, &mut front)?;
-        let (nb, fb) = self.cached_normmap(&pb, &mut front)?;
+        let (na, mut fa) = self.cached_normmap(&pa, &mut front)?;
+        let (nb, mut fb) = self.cached_normmap(&pb, &mut front)?;
         front.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
         let sched = self
@@ -115,6 +140,12 @@ impl Coordinator {
             .schedule_via(fa, fb, tau, &na, &nb, &mut front)?;
         front.schedule_secs = t.elapsed().as_secs_f64();
         let sched: &Schedule = &sched;
+        // Residency keys on content fingerprints; compute them here even
+        // when the norm cache (which normally provides them) is off.
+        if !self.pools.is_empty() {
+            fa = fa.or_else(|| Some(fingerprint(&pa)));
+            fb = fb.or_else(|| Some(fingerprint(&pb)));
+        }
         let work = partition(sched, self.cfg.devices, self.cfg.balance, self.cfg.pipeline_batches);
 
         let device_load: Vec<usize> = work
@@ -141,8 +172,9 @@ impl Coordinator {
                 results.push(Some(run_device(
                     &self.bundle,
                     &self.cfg,
-                    &pa,
-                    &pb,
+                    self.pool_of(w.device),
+                    Operand::new(&pa, fa),
+                    Operand::new(&pb, fb),
                     sched,
                     w,
                     &solo,
@@ -158,9 +190,19 @@ impl Coordinator {
                 let barrier = &barrier;
                 let bundle = &self.bundle;
                 let cfg = &self.cfg;
+                let pool = self.pool_of(w.device);
                 let (pa, pb) = (&pa, &pb);
                 handles.push(scope.spawn(move || -> Result<DeviceResult> {
-                    run_device(bundle, cfg, pa, pb, sched, w, barrier)
+                    run_device(
+                        bundle,
+                        cfg,
+                        pool,
+                        Operand::new(pa, fa),
+                        Operand::new(pb, fb),
+                        sched,
+                        w,
+                        barrier,
+                    )
                 }));
             }
             // Release the workers together once they are all warmed up,
@@ -198,12 +240,16 @@ impl Coordinator {
         let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), lonum);
         let mut device_busy = vec![0.0; self.cfg.devices];
         let mut compile_secs = vec![0.0; self.cfg.devices];
+        let mut device_transfer_secs = vec![0.0; self.cfg.devices];
         // Stage stats: the front-end's cache counters + the per-device
         // workers' pipeline clocks.
         let mut stage = front;
         for r in results.into_iter().flatten() {
             device_busy[r.device] = r.busy_secs;
             compile_secs[r.device] = r.compile_secs;
+            // The gather stage *is* the device's transfer queue: handle
+            // resolution plus residency-miss uploads.
+            device_transfer_secs[r.device] = r.stats.gather_secs;
             stage.absorb_stages(&r.stats);
             for ((i, j), data) in r.tiles {
                 pc.inner.add_block(i * lonum, j * lonum, lonum, &data);
@@ -219,6 +265,7 @@ impl Coordinator {
             valid_ratio: sched.valid_ratio(),
             imbalance,
             compile_secs,
+            device_transfer_secs,
             stage,
         })
     }
@@ -251,19 +298,23 @@ impl Coordinator {
             valid_ratio: 1.0,
             imbalance: 1.0,
             compile_secs: vec![0.0],
+            device_transfer_secs: vec![0.0],
             stage: MultiplyStats::default(),
         })
     }
 }
 
-/// One device's pipeline: warm up, wait at the barrier, then process the
-/// P tile batches through the shared stage-pipelined executor
-/// (gather ∥ tile-GEMM ∥ scatter into the owned-tile accumulator).
+/// One device's pipeline: warm up, wait at the barrier, then stream *all*
+/// P tile batches through one gather ∥ tile-GEMM ∥ scatter pipeline (the
+/// per-device transfer queue keeps uploading the next batch's tiles while
+/// this batch computes — no per-batch stream-level sync).
+#[allow(clippy::too_many_arguments)]
 fn run_device(
     bundle: &ArtifactBundle,
     cfg: &SpammConfig,
-    pa: &PaddedMatrix,
-    pb: &PaddedMatrix,
+    pool: Option<&ResidencyPool>,
+    pa: Operand<'_>,
+    pb: Operand<'_>,
     sched: &Schedule,
     work: &DeviceWork,
     barrier: &Barrier,
@@ -288,13 +339,10 @@ fn run_device(
 
     barrier.wait();
     let t0 = Instant::now();
-    let mut products_done = 0usize;
-    for batch in &work.tile_batches {
-        // Alg. 4: per pipeline batch, run the batch's surviving products
-        // through the overlapped gather/exec/scatter stages.
-        products_done += execute_products(&rt, cfg, pa, pb, &mut sink, sched, batch, &mut stats)?;
-        // stream-level synchronize: the per-batch pipeline joins here.
-    }
+    let batches: Vec<&[(usize, usize)]> =
+        work.tile_batches.iter().map(|b| b.as_slice()).collect();
+    let products_done =
+        execute_batches(&rt, cfg, pool, pa, pb, &mut sink, sched, &batches, &mut stats)?;
     let busy = t0.elapsed().as_secs_f64();
 
     Ok(DeviceResult {

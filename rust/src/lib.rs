@@ -21,9 +21,10 @@
 //! ([`runtime::hostsim`]) with the same manifest schema and numeric
 //! contract, so the full request path stays testable.
 //!
-//! ## Execution pipeline & caching
+//! ## Execution pipeline, caching & residency
 //!
-//! The execution layer is stage-pipelined and cache-aware:
+//! The execution layer is stage-pipelined, cache-aware, and keeps
+//! operand tiles device-resident:
 //!
 //! * **Norm/schedule caches** ([`spamm::cache`]) — normmaps are memoized
 //!   keyed on a 128-bit content fingerprint of the padded operand
@@ -35,18 +36,30 @@
 //!   [`telemetry`] counters (`spamm.norm_cache.*`,
 //!   `spamm.schedule_cache.*`); `--no-cache` (CLI) or
 //!   `cache_enabled = false` (config) bypasses both caches.
-//! * **Stage overlap** ([`spamm::executor::execute_products`]) — chunk
-//!   execution is double-buffered: a gather worker stages chunk *i+1*
+//! * **Tile residency** ([`runtime::residency`]) — each device owns a
+//!   pool of resident operand tiles keyed on content fingerprint + tile
+//!   coordinate (the paper's §3.3 A-block reuse).  The gather stage
+//!   resolves refcounted handles; only pool misses transfer bytes, a
+//!   tile referenced k times in one chunk is staged once, and warm
+//!   operands (power chains, purification, repeated service calls) skip
+//!   phase-3 transfers entirely.  LRU eviction under
+//!   `device_mem_budget`; pinned (in-flight) tiles are never evicted.
+//!   `--no-residency` disables the pools.
+//! * **Stage overlap** ([`spamm::executor::execute_batches`]) — chunk
+//!   execution is double-buffered: a transfer worker stages chunk *i+1*
 //!   while the engine thread (which owns the non-`Send` PJRT client)
 //!   runs tile-GEMM on chunk *i*, and a scatter worker drains finished
-//!   products from a bounded channel.  `--pipeline-depth` / the
-//!   `pipeline_depth` config key bound the in-flight chunks.  With
-//!   overlap, `gather_secs + exec_secs + scatter_secs` exceeds the
+//!   products from a bounded channel.  Coordinator device workers
+//!   stream all P pipeline batches through one pipeline (no per-batch
+//!   join), overlapping batch *i+1*'s uploads with batch *i*'s compute.
+//!   `--pipeline-depth` / the `pipeline_depth` config key bound the
+//!   in-flight chunks.  With overlap,
+//!   `gather_secs + exec_secs + scatter_secs` exceeds the
 //!   `exec_span_secs` wall clock in [`spamm::MultiplyStats`].
 //!
 //! Both the single-device [`spamm::SpammEngine`] and the multi-device
 //! [`coordinator::Coordinator`] (whose per-device workers share the same
-//! executor) go through this path.
+//! executor, each with its own residency pool) go through this path.
 //!
 //! ## Quick start
 //!

@@ -54,6 +54,15 @@ fn common(spec: Spec) -> Spec {
             "no-cache",
             "disable normmap/schedule caching across multiplies",
         )
+        .flag(
+            "no-residency",
+            "disable the device-resident operand-tile pools",
+        )
+        .opt(
+            "device-mem-budget",
+            "256m",
+            "per-device resident-tile byte budget (k/m/g suffixes; 0 = unlimited)",
+        )
         .opt("config", "", "optional config file (key = value)")
 }
 
@@ -73,6 +82,7 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
         ("precision", "precision"),
         ("balance", "balance"),
         ("pipeline-depth", "pipeline_depth"),
+        ("device-mem-budget", "device_mem_budget"),
     ] {
         if a.provided(opt) || !from_file {
             cfg.apply(key, a.get(opt))?;
@@ -80,6 +90,9 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
     }
     if a.flag("no-cache") {
         cfg.cache_enabled = false;
+    }
+    if a.flag("no-residency") {
+        cfg.residency_enabled = false;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -184,6 +197,15 @@ fn cmd_run(args: &[String]) -> Result<()> {
         t.get("spamm.norm_cache.misses"),
         t.get("spamm.schedule_cache.hits"),
         t.get("spamm.schedule_cache.misses")
+    );
+    // All five figures share the same scope: the SpAMM multiply above.
+    println!(
+        "residency: {} hit / {} miss / {} evicted, {} KiB uploaded, {} KiB saved",
+        report.stage.residency_hits,
+        report.stage.residency_misses,
+        report.stage.residency_evictions,
+        report.stage.transfer_bytes / 1024,
+        report.stage.transfer_saved_bytes / 1024
     );
     Ok(())
 }

@@ -166,6 +166,30 @@ impl ArtifactBundle {
         self.get(&format!("dense_n{n}_{precision}"))
     }
 
+    /// Dense GEMM variant for an (m×k)·(k×n) product of any shape,
+    /// resolved by the compiled input shapes — covers both the square
+    /// `dense_n{N}` grid and the rectangular CNN-layer artifacts.
+    pub fn dense_shaped(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        precision: &str,
+    ) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|a| {
+                a.kind == "dense"
+                    && a.param("precision") == Some(precision)
+                    && a.input_shapes == [vec![m, k], vec![k, n]]
+            })
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no dense artifact for {m}x{k}x{n} {precision}"
+                ))
+            })
+    }
+
     /// Smallest tile-GEMM batch variant at tile size `lonum` with capacity
     /// ≥ want (or the largest available if none fits; caller chunks).
     pub fn tilegemm(&self, want: usize, lonum: usize, precision: &str) -> Result<&ArtifactMeta> {

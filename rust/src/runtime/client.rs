@@ -83,11 +83,19 @@ impl Runtime {
     /// Execute the named artifact on literal inputs; returns the flattened
     /// output tuple (python lowers everything with return_tuple=True).
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.execute_refs(name, &refs)
+    }
+
+    /// Execute on *borrowed* literals — the buffer-handle path: callers
+    /// holding device-resident buffers (e.g. the devicesim staging store)
+    /// execute without copying them into owned inputs first.
+    pub fn execute_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.executable(name)?;
         let cache = self.cache.borrow();
         let exe = cache.get(name).unwrap();
         let t = Instant::now();
-        let result = exe.execute::<xla::Literal>(inputs)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
         let root = result
             .first()
             .and_then(|d| d.first())
@@ -117,30 +125,17 @@ impl Runtime {
         literal_to_matrix(&out[0])
     }
 
-    /// Dense baseline: C = A·B via the XLA dense artifact.
+    /// Dense baseline: C = A·B via the XLA dense artifact.  Square sizes
+    /// resolve by name; anything else (the rectangular CNN-layer GEMMs)
+    /// resolves by compiled input shape.
     pub fn dense(&self, a: &Matrix, b: &Matrix, precision: &str) -> Result<Matrix> {
         let name = if a.rows() == a.cols() && a.rows() == b.rows() && b.rows() == b.cols() {
             self.bundle.dense(a.rows(), precision)?.name.clone()
         } else {
-            // rectangular (CNN) variants are named by shape
-            let found = self
-                .bundle
-                .names()
-                .find(|n| {
-                    n.starts_with("dense_")
-                        && n.contains(&format!("{}x{}x{}", a.rows(), a.cols(), b.cols()))
-                        && n.ends_with(precision)
-                })
-                .map(|s| s.to_string())
-                .ok_or_else(|| {
-                    Error::Artifact(format!(
-                        "no dense artifact for {}x{}x{} {precision}",
-                        a.rows(),
-                        a.cols(),
-                        b.cols()
-                    ))
-                })?;
-            found
+            self.bundle
+                .dense_shaped(a.rows(), a.cols(), b.cols(), precision)?
+                .name
+                .clone()
         };
         let out = self.execute(&name, &[matrix_to_literal(a)?, matrix_to_literal(b)?])?;
         literal_to_matrix(&out[0])

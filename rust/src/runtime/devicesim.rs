@@ -3,9 +3,20 @@
 //! own PJRT CPU client + executable cache (the `xla` crate's client is not
 //! `Send`, and one-context-per-device is also the honest GPU model).
 //!
-//! Requests carry plain host tensors across the channel; the worker builds
-//! literals, executes, and replies.  Bounded channels provide the
-//! backpressure that the paper's P-batched UM transfers provide on CUDA.
+//! Requests carry either plain host tensors (uploaded per call) or
+//! [`BufferId`] handles to tensors staged on the device beforehand with
+//! [`DevicePool::upload`] — the buffer-handle API that lets a caller pay
+//! the host→device transfer once and reference the resident buffer in any
+//! number of later executions.  Bounded channels provide the backpressure
+//! that the paper's P-batched UM transfers provide on CUDA; per-device
+//! busy and transfer clocks are kept separately.
+//!
+//! The SpAMM executor manages tile residency itself (see
+//! [`crate::runtime::residency`], which keys on operand content and
+//! packs batch buffers host-side); the staged-buffer API here is the
+//! request-level counterpart for `DevicePool` users — currently
+//! exercised by the integration suite, intended for SUMMA-style panel
+//! broadcasts that re-reference whole staged operands.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -20,17 +31,46 @@ use crate::runtime::literal::{literal_f32, literal_to_vec};
 /// A shape + flat f32 payload (what crosses thread boundaries).
 pub type HostTensor = (Vec<usize>, Vec<f32>);
 
+/// Handle to a tensor staged in one device's buffer store.  Carries the
+/// issuing device so use on any other device is an error, never a silent
+/// alias of that device's unrelated buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BufferId {
+    dev: u32,
+    id: u64,
+}
+
+/// One execution input: a host tensor to upload with the call, or a
+/// handle to a buffer already resident on the device.
+pub enum ExecInput {
+    Host(HostTensor),
+    Buffer(BufferId),
+}
+
 /// One execution request for a device worker.
 pub struct ExecRequest {
     pub artifact: String,
-    pub inputs: Vec<HostTensor>,
+    pub inputs: Vec<ExecInput>,
     pub reply: mpsc::Sender<Result<Vec<HostTensor>>>,
 }
 
+/// Everything a device worker can be asked to do.
+enum Command {
+    Exec(ExecRequest),
+    /// Stage a tensor device-resident; replies with its handle.
+    Upload {
+        tensor: HostTensor,
+        reply: mpsc::Sender<Result<BufferId>>,
+    },
+    /// Drop a staged buffer (missing ids are ignored).
+    Free(BufferId),
+}
+
 struct Worker {
-    sender: mpsc::SyncSender<ExecRequest>,
+    sender: mpsc::SyncSender<Command>,
     handle: Option<JoinHandle<()>>,
     busy_nanos: Arc<AtomicU64>,
+    transfer_nanos: Arc<AtomicU64>,
 }
 
 /// A pool of M simulated devices.
@@ -45,10 +85,12 @@ impl DevicePool {
     pub fn new(bundle: &ArtifactBundle, devices: usize, queue_depth: usize) -> Result<DevicePool> {
         let mut workers = Vec::with_capacity(devices);
         for dev in 0..devices {
-            let (tx, rx) = mpsc::sync_channel::<ExecRequest>(queue_depth.max(1));
+            let (tx, rx) = mpsc::sync_channel::<Command>(queue_depth.max(1));
             let bundle = bundle.clone();
             let busy = Arc::new(AtomicU64::new(0));
             let busy_w = busy.clone();
+            let transfer = Arc::new(AtomicU64::new(0));
+            let transfer_w = transfer.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cuspamm-dev{dev}"))
                 .spawn(move || {
@@ -57,22 +99,59 @@ impl DevicePool {
                         Err(e) => {
                             log::error!("device {dev}: client init failed: {e}");
                             // Drain, failing every request.
-                            for req in rx {
-                                let _ = req
-                                    .reply
-                                    .send(Err(Error::Coordinator(format!(
-                                        "device {dev} failed to initialize"
-                                    ))));
+                            for cmd in rx {
+                                let msg =
+                                    format!("device {dev} failed to initialize");
+                                match cmd {
+                                    Command::Exec(req) => {
+                                        let _ = req.reply.send(Err(Error::Coordinator(msg)));
+                                    }
+                                    Command::Upload { reply, .. } => {
+                                        let _ = reply.send(Err(Error::Coordinator(msg)));
+                                    }
+                                    Command::Free(_) => {}
+                                }
                             }
                             return;
                         }
                     };
-                    for req in rx {
-                        let t = std::time::Instant::now();
-                        let result = Self::run_one(&rt, &req);
-                        busy_w.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        // Receiver may have given up; ignore send failure.
-                        let _ = req.reply.send(result);
+                    // The device's staged-buffer store ("device memory").
+                    let mut buffers: std::collections::BTreeMap<u64, xla::Literal> =
+                        std::collections::BTreeMap::new();
+                    let mut next_id = 0u64;
+                    for cmd in rx {
+                        match cmd {
+                            Command::Exec(req) => {
+                                let t = std::time::Instant::now();
+                                let result = Self::run_one(&rt, dev, &req, &buffers);
+                                busy_w.fetch_add(
+                                    t.elapsed().as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                // Receiver may have given up; ignore send failure.
+                                let _ = req.reply.send(result);
+                            }
+                            Command::Upload { tensor, reply } => {
+                                let t = std::time::Instant::now();
+                                let result = literal_f32(&tensor.0, &tensor.1).map(|lit| {
+                                    let id = next_id;
+                                    next_id += 1;
+                                    buffers.insert(id, lit);
+                                    BufferId {
+                                        dev: dev as u32,
+                                        id,
+                                    }
+                                });
+                                transfer_w.fetch_add(
+                                    t.elapsed().as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                let _ = reply.send(result);
+                            }
+                            Command::Free(buf) => {
+                                buffers.remove(&buf.id);
+                            }
+                        }
                     }
                 })
                 .map_err(|e| Error::Coordinator(format!("spawn device {dev}: {e}")))?;
@@ -80,17 +159,46 @@ impl DevicePool {
                 sender: tx,
                 handle: Some(handle),
                 busy_nanos: busy,
+                transfer_nanos: transfer,
             });
         }
         Ok(DevicePool { workers })
     }
 
-    fn run_one(rt: &Runtime, req: &ExecRequest) -> Result<Vec<HostTensor>> {
-        let mut literals = Vec::with_capacity(req.inputs.len());
-        for (dims, data) in &req.inputs {
-            literals.push(literal_f32(dims, data)?);
+    fn run_one(
+        rt: &Runtime,
+        dev: usize,
+        req: &ExecRequest,
+        buffers: &std::collections::BTreeMap<u64, xla::Literal>,
+    ) -> Result<Vec<HostTensor>> {
+        // Host inputs are uploaded with the call; buffer inputs execute
+        // in place from the staging store.
+        let mut uploaded = Vec::new();
+        for input in &req.inputs {
+            if let ExecInput::Host((dims, data)) = input {
+                uploaded.push(Some(literal_f32(dims, data)?));
+            } else {
+                uploaded.push(None);
+            }
         }
-        let outs = rt.execute(&req.artifact, &literals)?;
+        let mut literals: Vec<&xla::Literal> = Vec::with_capacity(req.inputs.len());
+        for (input, up) in req.inputs.iter().zip(&uploaded) {
+            match input {
+                ExecInput::Host(_) => literals.push(up.as_ref().unwrap()),
+                ExecInput::Buffer(buf) => {
+                    if buf.dev as usize != dev {
+                        return Err(Error::Coordinator(format!(
+                            "buffer {} belongs to device {}, not device {dev}",
+                            buf.id, buf.dev
+                        )));
+                    }
+                    literals.push(buffers.get(&buf.id).ok_or_else(|| {
+                        Error::Coordinator(format!("unknown device buffer id {}", buf.id))
+                    })?);
+                }
+            }
+        }
+        let outs = rt.execute_refs(&req.artifact, &literals)?;
         outs.iter().map(literal_to_vec).collect()
     }
 
@@ -98,24 +206,71 @@ impl DevicePool {
         self.workers.len()
     }
 
-    /// Submit a request to device `dev`; blocks if its queue is full
-    /// (backpressure, like a full CUDA stream).
+    fn send(&self, dev: usize, cmd: Command) -> Result<()> {
+        self.workers[dev]
+            .sender
+            .send(cmd)
+            .map_err(|_| Error::Coordinator(format!("device {dev} is gone")))
+    }
+
+    /// Stage a tensor on device `dev`; the returned handle stays valid
+    /// until [`DevicePool::free`] (one transfer, any number of uses).
+    pub fn upload(&self, dev: usize, tensor: HostTensor) -> Result<BufferId> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(
+            dev,
+            Command::Upload {
+                tensor,
+                reply: reply_tx,
+            },
+        )?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator(format!("device {dev} dropped reply")))?
+    }
+
+    /// Drop a staged buffer (unknown ids are a no-op).  The handle knows
+    /// its device, so frees are always routed to the right store.
+    pub fn free(&self, id: BufferId) -> Result<()> {
+        let dev = id.dev as usize;
+        if dev >= self.workers.len() {
+            return Err(Error::Coordinator(format!(
+                "buffer {} belongs to unknown device {dev}",
+                id.id
+            )));
+        }
+        self.send(dev, Command::Free(id))
+    }
+
+    /// Submit a request mixing host tensors and staged-buffer handles to
+    /// device `dev`; blocks if its queue is full (backpressure, like a
+    /// full CUDA stream).
+    pub fn submit_inputs(
+        &self,
+        dev: usize,
+        artifact: &str,
+        inputs: Vec<ExecInput>,
+    ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(
+            dev,
+            Command::Exec(ExecRequest {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            }),
+        )?;
+        Ok(reply_rx)
+    }
+
+    /// Submit host-tensor inputs (uploaded with the call).
     pub fn submit(
         &self,
         dev: usize,
         artifact: &str,
         inputs: Vec<HostTensor>,
     ) -> Result<mpsc::Receiver<Result<Vec<HostTensor>>>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.workers[dev]
-            .sender
-            .send(ExecRequest {
-                artifact: artifact.to_string(),
-                inputs,
-                reply: reply_tx,
-            })
-            .map_err(|_| Error::Coordinator(format!("device {dev} is gone")))?;
-        Ok(reply_rx)
+        self.submit_inputs(dev, artifact, inputs.into_iter().map(ExecInput::Host).collect())
     }
 
     /// Submit and wait (single round trip).
@@ -130,6 +285,18 @@ impl DevicePool {
             .map_err(|_| Error::Coordinator(format!("device {dev} dropped reply")))?
     }
 
+    /// Submit mixed inputs and wait.
+    pub fn call_inputs(
+        &self,
+        dev: usize,
+        artifact: &str,
+        inputs: Vec<ExecInput>,
+    ) -> Result<Vec<HostTensor>> {
+        self.submit_inputs(dev, artifact, inputs)?
+            .recv()
+            .map_err(|_| Error::Coordinator(format!("device {dev} dropped reply")))?
+    }
+
     /// Modeled device-busy seconds per device (the "GPU time" metric).
     pub fn busy_secs(&self) -> Vec<f64> {
         self.workers
@@ -138,9 +305,18 @@ impl DevicePool {
             .collect()
     }
 
+    /// Seconds each device spent staging uploads (kept out of `busy`).
+    pub fn transfer_secs(&self) -> Vec<f64> {
+        self.workers
+            .iter()
+            .map(|w| w.transfer_nanos.load(Ordering::Relaxed) as f64 / 1e9)
+            .collect()
+    }
+
     pub fn reset_busy(&self) {
         for w in &self.workers {
             w.busy_nanos.store(0, Ordering::Relaxed);
+            w.transfer_nanos.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -150,8 +326,8 @@ impl Drop for DevicePool {
         for w in &mut self.workers {
             if let Some(h) = w.handle.take() {
                 // Swap the real sender out and drop it so the worker's
-                // `for req in rx` loop terminates, then join.
-                let (dummy_tx, _dummy_rx) = mpsc::sync_channel::<ExecRequest>(1);
+                // `for cmd in rx` loop terminates, then join.
+                let (dummy_tx, _dummy_rx) = mpsc::sync_channel::<Command>(1);
                 drop(std::mem::replace(&mut w.sender, dummy_tx));
                 let _ = h.join();
             }

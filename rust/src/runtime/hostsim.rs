@@ -25,6 +25,10 @@ pub struct HostsimSpec {
     pub lonum: usize,
     /// Square sizes with dense baselines (per precision).
     pub dense_sizes: Vec<usize>,
+    /// Rectangular (m, k, n) dense baselines (per precision) — the
+    /// CNN-shaped im2col GEMMs, so conv layers resolve a device artifact
+    /// instead of falling back to host GEMM when no real bundle exists.
+    pub dense_rect: Vec<(usize, usize, usize)>,
     /// Square sizes with get-norm artifacts (host + MXU variants).
     pub getnorm_sizes: Vec<usize>,
     /// Tile-GEMM batch buckets (per precision).
@@ -42,6 +46,8 @@ impl Default for HostsimSpec {
         HostsimSpec {
             lonum: 32,
             dense_sizes: vec![256, 512],
+            // im2col shapes of small conv layers: (C_out, C_in·9, N·H·W).
+            dense_rect: vec![(64, 288, 256), (128, 576, 64)],
             getnorm_sizes: vec![256, 512],
             tilegemm_batches: vec![16, 64, 256],
             tune_bdims: vec![8, 16],
@@ -122,6 +128,27 @@ pub fn write_bundle(dir: impl AsRef<Path>, spec: &HostsimSpec) -> Result<()> {
                 ],
                 &format!(
                     "hostsim v1\nkind = dense\nm = {n}\nk = {n}\nn = {n}\nprecision = {prec}\n"
+                ),
+            )?;
+        }
+        for &(m, k, n) in &spec.dense_rect {
+            // Same naming scheme as the python AOT grid's CNN GEMMs
+            // (`dense_{layer}_{m}x{k}x{n}_{prec}`); the `layer` param
+            // keeps them out of the square-size bench grids.
+            mb.artifact(
+                &format!("dense_sim_{m}x{k}x{n}_{prec}"),
+                "dense",
+                &[&[m, k], &[k, n]],
+                1,
+                &[
+                    ("m", m.to_string()),
+                    ("k", k.to_string()),
+                    ("n", n.to_string()),
+                    ("precision", prec.to_string()),
+                    ("layer", "sim".to_string()),
+                ],
+                &format!(
+                    "hostsim v1\nkind = dense\nm = {m}\nk = {k}\nn = {n}\nprecision = {prec}\n"
                 ),
             )?;
         }
@@ -259,5 +286,24 @@ mod tests {
         let a = Matrix::randn(256, 256, 1);
         let c = rt.dense(&a, &Matrix::eye(256), "f32").unwrap();
         assert!(a.error_fnorm(&c).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn rectangular_dense_resolves_and_executes() {
+        let b = test_bundle().unwrap();
+        // The rect grid resolves by compiled input shape, not by name.
+        assert!(b.dense_shaped(64, 288, 256, "f32").is_ok());
+        assert!(b.dense_shaped(64, 288, 256, "bf16").is_ok());
+        assert!(b.dense_shaped(64, 288, 999, "f32").is_err());
+        // Rect artifacts carry a `layer` param and must stay out of the
+        // square-size bench grid.
+        assert_eq!(b.dense_sizes(), vec![256, 512]);
+
+        let rt = Runtime::new(&b).unwrap();
+        let a = Matrix::randn(64, 288, 2);
+        let x = Matrix::randn(288, 256, 3);
+        let c = rt.dense(&a, &x, "f32").unwrap();
+        let want = a.matmul(&x).unwrap();
+        assert!(c.error_fnorm(&want).unwrap() / want.fnorm().max(1e-30) < 1e-5);
     }
 }

@@ -12,7 +12,9 @@ pub mod client;
 pub mod devicesim;
 pub mod hostsim;
 pub mod literal;
+pub mod residency;
 
 pub use artifact::{ArtifactBundle, ArtifactMeta};
 pub use client::Runtime;
-pub use devicesim::{DevicePool, ExecRequest, HostTensor};
+pub use devicesim::{BufferId, DevicePool, ExecInput, ExecRequest, HostTensor};
+pub use residency::{ResidencyPool, TileHandle, TileKey};

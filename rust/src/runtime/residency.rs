@@ -1,0 +1,417 @@
+//! Device-resident operand-tile pool — the §3.3 A-block reuse, made
+//! explicit.
+//!
+//! The paper's blocking strategy keeps A-blocks on the GPU across the many
+//! B-tiles (and across power/purification iterations) that reuse them.
+//! Here every padded-operand tile uploaded to a device lands in that
+//! device's [`ResidencyPool`], keyed on the operand's 128-bit content
+//! fingerprint plus the tile coordinate.  The executor's gather stage asks
+//! the pool for *handles* instead of copying tile data:
+//!
+//! * **hit** — the tile is already device-resident; no host→device
+//!   transfer happens, only a refcount bump.
+//! * **miss** — the tile is uploaded once (one `LoNum²·4`-byte copy) and
+//!   becomes resident for every later product, chunk, batch, and multiply
+//!   that references the same operand content.
+//!
+//! The pool is bounded by a byte budget (`device_mem_budget`); inserts
+//! evict least-recently-used tiles first.  A tile is *pinned* while any
+//! [`TileHandle`] to it is alive (the gather/exec pipeline holds handles
+//! for in-flight chunks) and pinned tiles are never evicted — if every
+//! resident tile is pinned the pool overflows its budget instead, exactly
+//! like a real allocator that cannot free memory the kernels are reading.
+//!
+//! One pool per device: the engine owns one, the coordinator owns one per
+//! device worker.  The pool is `Sync` (a worker's transfer thread acquires
+//! handles while the exec thread reads them), but never shared *across*
+//! devices — device memory is not.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::spamm::cache::Fingerprint;
+use crate::telemetry;
+
+/// One device-resident tile: the "device memory" copy of a LoNum² block.
+#[derive(Debug)]
+pub struct DeviceTile {
+    pub data: Vec<f32>,
+}
+
+/// Refcounted handle to a resident tile.  Holding it pins the tile
+/// (eviction skips pinned entries); dropping it unpins.
+pub type TileHandle = Arc<DeviceTile>;
+
+/// Pool key: which operand content + which tile of it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    /// Content fingerprint of the padded operand matrix.
+    pub op: Fingerprint,
+    /// (tile row, tile col) within the operand's tile grid.
+    pub tile: (u32, u32),
+}
+
+impl TileKey {
+    pub fn new(op: Fingerprint, tile: (usize, usize)) -> TileKey {
+        TileKey {
+            op,
+            tile: (tile.0 as u32, tile.1 as u32),
+        }
+    }
+}
+
+/// Outcome of one [`ResidencyPool::acquire`] call.
+pub struct Acquired {
+    pub handle: TileHandle,
+    /// Whether the tile was already resident (no upload happened).
+    pub hit: bool,
+    /// Tiles evicted to make room for this insert (0 on hits).
+    pub evicted: usize,
+}
+
+/// Monotonic counters snapshot of a pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes uploaded host→device (misses · tile bytes).
+    pub uploaded_bytes: u64,
+    /// Bytes *not* transferred thanks to residency hits.
+    pub saved_bytes: u64,
+    /// Currently resident bytes (may exceed the budget only while every
+    /// tile is pinned).
+    pub resident_bytes: u64,
+    pub resident_tiles: u64,
+}
+
+/// A resident tile plus the sequence number of its latest use.
+struct Slot {
+    handle: TileHandle,
+    seq: u64,
+}
+
+/// One recency record.  The queue uses lazy deletion: a record is *live*
+/// only while its `seq` matches the slot's current `seq`; stale records
+/// are discarded when they surface at the front.  This keeps every touch
+/// O(1) (push + counter bump) instead of an O(n) scan — the default byte
+/// budget admits tens of thousands of resident tiles, and touches are the
+/// warm gather stage's hot path.
+struct Recency {
+    key: TileKey,
+    seq: u64,
+}
+
+struct Inner {
+    map: HashMap<TileKey, Slot>,
+    /// Front ≈ least recently used (modulo stale records).
+    queue: VecDeque<Recency>,
+    next_seq: u64,
+    bytes: usize,
+    stats: PoolStats,
+}
+
+impl Inner {
+    /// Mark `key` most-recently-used (O(1) amortized).
+    fn touch(&mut self, key: TileKey) {
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.seq = seq;
+        }
+        self.queue.push_back(Recency { key, seq });
+        self.compact_if_bloated();
+    }
+
+    /// Drop stale recency records once the queue outgrows the live set —
+    /// keeps the lazy-deletion queue amortized O(1) per touch.
+    fn compact_if_bloated(&mut self) {
+        if self.queue.len() > 2 * self.map.len() + 8 {
+            let map = &self.map;
+            self.queue
+                .retain(|r| map.get(&r.key).is_some_and(|s| s.seq == r.seq));
+        }
+    }
+}
+
+/// Per-device operand-tile pool (see module docs).
+pub struct ResidencyPool {
+    inner: Mutex<Inner>,
+    /// Byte budget; `usize::MAX` means unlimited.
+    budget: usize,
+}
+
+impl ResidencyPool {
+    /// `budget_bytes == 0` means unlimited.
+    pub fn new(budget_bytes: usize) -> ResidencyPool {
+        ResidencyPool {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                queue: VecDeque::new(),
+                next_seq: 0,
+                bytes: 0,
+                stats: PoolStats::default(),
+            }),
+            budget: if budget_bytes == 0 {
+                usize::MAX
+            } else {
+                budget_bytes
+            },
+        }
+    }
+
+    /// The configured byte budget (`usize::MAX` = unlimited).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Fetch the resident tile for `key`, uploading via `fill` on a miss.
+    /// `tile_elems` is the f32 element count of one tile (LoNum²).
+    pub fn acquire(
+        &self,
+        key: TileKey,
+        tile_elems: usize,
+        fill: impl FnOnce(&mut [f32]),
+    ) -> Acquired {
+        let bytes = tile_elems * std::mem::size_of::<f32>();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(handle) = inner.map.get(&key).map(|s| s.handle.clone()) {
+            inner.touch(key);
+            inner.stats.hits += 1;
+            inner.stats.saved_bytes += bytes as u64;
+            telemetry::global().add("spamm.residency.hits", 1);
+            return Acquired {
+                handle,
+                hit: true,
+                evicted: 0,
+            };
+        }
+        // Miss: upload (the one host→device copy this tile will ever see
+        // while resident), then insert under the byte budget.
+        let mut data = vec![0.0f32; tile_elems];
+        fill(&mut data);
+        let handle: TileHandle = Arc::new(DeviceTile { data });
+        let evicted = evict_for(&mut inner, self.budget, bytes);
+        inner.map.insert(
+            key,
+            Slot {
+                handle: handle.clone(),
+                seq: 0,
+            },
+        );
+        inner.touch(key);
+        inner.bytes += bytes;
+        inner.stats.misses += 1;
+        inner.stats.uploaded_bytes += bytes as u64;
+        inner.stats.resident_bytes = inner.bytes as u64;
+        inner.stats.resident_tiles = inner.map.len() as u64;
+        telemetry::global().add("spamm.residency.misses", 1);
+        telemetry::global().add("spamm.transfer.uploaded_bytes", bytes as u64);
+        Acquired {
+            handle,
+            hit: false,
+            evicted,
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = inner.stats;
+        s.resident_bytes = inner.bytes as u64;
+        s.resident_tiles = inner.map.len() as u64;
+        s
+    }
+
+    pub fn resident_tiles(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Drop every unpinned tile — operator surface for long-running
+    /// services that want to release device memory between unrelated
+    /// workloads without waiting for LRU churn.  Pinned tiles survive:
+    /// their handles are still in flight.
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let keep: Vec<TileKey> = inner
+            .map
+            .iter()
+            .filter(|(_, s)| Arc::strong_count(&s.handle) > 1)
+            .map(|(k, _)| *k)
+            .collect();
+        let mut bytes = 0usize;
+        let mut map = HashMap::new();
+        for k in &keep {
+            if let Some(s) = inner.map.remove(k) {
+                bytes += s.handle.data.len() * std::mem::size_of::<f32>();
+                map.insert(*k, s);
+            }
+        }
+        inner.map = map;
+        inner.queue.clear();
+        inner.bytes = bytes;
+        for k in keep {
+            inner.touch(k);
+        }
+    }
+}
+
+/// Evict LRU-first unpinned tiles until `incoming` fits the budget.
+/// Returns the eviction count.  Pinned tiles surfacing at the queue front
+/// are re-queued as recently used (they *are* in use); if everything
+/// resident is pinned the pool is allowed to overflow — a real allocator
+/// cannot free memory the kernels are reading either.
+fn evict_for(inner: &mut Inner, budget: usize, incoming: usize) -> usize {
+    let mut evicted = 0usize;
+    let mut requeued = 0usize;
+    while inner.bytes.saturating_add(incoming) > budget {
+        let Some(front) = inner.queue.pop_front() else {
+            break;
+        };
+        let live = inner
+            .map
+            .get(&front.key)
+            .is_some_and(|s| s.seq == front.seq);
+        if !live {
+            continue; // stale lazy-deletion record
+        }
+        let is_pinned = inner
+            .map
+            .get(&front.key)
+            .is_some_and(|s| Arc::strong_count(&s.handle) > 1);
+        if is_pinned {
+            inner.queue.push_back(front);
+            requeued += 1;
+            if requeued > inner.queue.len() {
+                break; // every resident tile is pinned
+            }
+            continue;
+        }
+        if let Some(s) = inner.map.remove(&front.key) {
+            inner.bytes -= s.handle.data.len() * std::mem::size_of::<f32>();
+        }
+        evicted += 1;
+        requeued = 0;
+    }
+    if evicted > 0 {
+        inner.stats.evictions += evicted as u64;
+        telemetry::global().add("spamm.residency.evictions", evicted as u64);
+    }
+    evicted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(i: u64) -> Fingerprint {
+        Fingerprint(i, !i)
+    }
+
+    fn key(op: u64, t: (usize, usize)) -> TileKey {
+        TileKey::new(fp(op), t)
+    }
+
+    /// 4 f32 per tile → 16 bytes per tile in every test below.
+    const ELEMS: usize = 4;
+    const TILE_BYTES: u64 = 16;
+
+    #[test]
+    fn miss_uploads_then_hits_skip_transfer() {
+        let pool = ResidencyPool::new(0);
+        let a = pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(2.0));
+        assert!(!a.hit);
+        assert_eq!(a.handle.data, vec![2.0; ELEMS]);
+        let b = pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!("must not re-upload"));
+        assert!(b.hit);
+        assert_eq!(b.handle.data, vec![2.0; ELEMS]);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.uploaded_bytes, TILE_BYTES);
+        assert_eq!(s.saved_bytes, TILE_BYTES);
+        assert_eq!(s.resident_tiles, 1);
+    }
+
+    #[test]
+    fn distinct_operands_do_not_collide() {
+        let pool = ResidencyPool::new(0);
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        let b = pool.acquire(key(2, (0, 0)), ELEMS, |d| d.fill(2.0));
+        assert!(!b.hit, "same coordinate, different operand content");
+        assert_eq!(pool.resident_tiles(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        // Budget of two tiles; third insert evicts the least recently used.
+        let pool = ResidencyPool::new(2 * TILE_BYTES as usize);
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        pool.acquire(key(1, (0, 1)), ELEMS, |d| d.fill(2.0));
+        // Touch (0,0) so (0,1) becomes LRU.
+        pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!("hit expected"));
+        let c = pool.acquire(key(1, (0, 2)), ELEMS, |d| d.fill(3.0));
+        assert_eq!(c.evicted, 1);
+        assert_eq!(pool.resident_bytes(), 2 * TILE_BYTES as usize);
+        // (0,1) was evicted, (0,0) survived.
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0)).hit);
+        assert!(!pool.acquire(key(1, (0, 1)), ELEMS, |d| d.fill(2.0)).hit);
+        assert!(pool.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn pinned_tiles_are_never_evicted() {
+        let pool = ResidencyPool::new(TILE_BYTES as usize); // one-tile budget
+        let held = pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        // Second insert cannot evict the pinned tile: the pool overflows.
+        let b = pool.acquire(key(1, (0, 1)), ELEMS, |d| d.fill(2.0));
+        assert_eq!(b.evicted, 0, "pinned tile must not be evicted");
+        assert!(pool.resident_bytes() > pool.budget_bytes());
+        // The held handle still reads the original data.
+        assert_eq!(held.handle.data, vec![1.0; ELEMS]);
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
+        drop(held);
+        drop(b);
+        // Unpinned now: the next insert can evict down toward the budget.
+        let c = pool.acquire(key(1, (0, 2)), ELEMS, |d| d.fill(3.0));
+        assert!(c.evicted >= 1);
+        assert!(pool.resident_bytes() <= pool.budget_bytes());
+    }
+
+    #[test]
+    fn clear_keeps_pinned_tiles() {
+        let pool = ResidencyPool::new(0);
+        let held = pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        pool.acquire(key(1, (0, 1)), ELEMS, |d| d.fill(2.0));
+        pool.clear();
+        assert_eq!(pool.resident_tiles(), 1, "only the pinned tile survives");
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
+        drop(held);
+    }
+
+    #[test]
+    fn pool_is_sync_across_threads() {
+        let pool = std::sync::Arc::new(ResidencyPool::new(0));
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    for i in 0..64usize {
+                        pool.acquire(key(t % 2, (i, 0)), ELEMS, |d| d.fill(i as f32));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 2 operands × 64 tiles resident; every later acquire is a hit.
+        assert_eq!(pool.resident_tiles(), 128);
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, 256);
+        assert_eq!(s.misses, 128);
+    }
+}

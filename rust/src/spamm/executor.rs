@@ -3,18 +3,26 @@
 //! and *stage-pipelined* batched tile-GEMM execution with genuine work
 //! skipping.
 //!
-//! Two levels of reuse/overlap (§3.3 blocking, §3.4 pipeline):
+//! Three levels of reuse/overlap (§3.3 blocking, §3.4 pipeline):
 //!
 //! * **Caching** — normmaps and compacted schedules are memoized in
 //!   [`ExecCaches`] keyed on operand content fingerprints + τ, so
 //!   `power`/`purification` loops and repeated service requests skip the
 //!   get-norm and schedule phases entirely on hits.
-//! * **Pipelining** — [`execute_products`] double-buffers chunk
-//!   execution: a gather worker stages chunk *i+1* while this thread runs
-//!   tile-GEMM on chunk *i*, and a scatter worker drains finished
-//!   products from a channel.  With overlap, the per-stage second sums in
-//!   [`MultiplyStats`] exceed the `exec_span_secs` wall clock.
+//! * **Residency** — operand tiles are uploaded once into a per-device
+//!   [`ResidencyPool`] keyed on content fingerprint + tile coordinate; the
+//!   gather stage resolves refcounted *handles* and only cache misses
+//!   transfer bytes.  Repeated multiplies on warm operands skip phase-3
+//!   transfers entirely, and a tile referenced by k products of one chunk
+//!   is staged once, not k times.
+//! * **Pipelining** — [`execute_batches`] runs one gather∥exec∥scatter
+//!   pipeline across *all* pipeline batches: the transfer worker stages
+//!   batch *i+1*'s chunks while this thread runs tile-GEMM on batch *i*'s
+//!   (no per-batch join), and a scatter worker drains finished products.
+//!   With overlap, the per-stage second sums in [`MultiplyStats`] exceed
+//!   the `exec_span_secs` wall clock.
 
+use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -22,11 +30,13 @@ use crate::config::{Precision, SpammConfig};
 use crate::error::{Error, Result};
 use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
 use crate::matrix::Matrix;
+use crate::runtime::residency::{ResidencyPool, TileHandle, TileKey};
 use crate::runtime::{ArtifactBundle, Runtime};
-use crate::spamm::cache::{ExecCaches, Fingerprint};
+use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::normmap::normmap;
 use crate::spamm::schedule::{ProductRef, Schedule};
 use crate::spamm::tuner::{self, TuneParams};
+use crate::telemetry;
 
 pub use crate::spamm::tuner::TuneResult;
 
@@ -38,9 +48,11 @@ pub struct MultiplyStats {
     pub valid_ratio: f64,
     pub norm_secs: f64,
     pub schedule_secs: f64,
-    /// Seconds inside the gather stage (overlaps exec when pipelined).
+    /// Seconds inside the gather/transfer stage (overlaps exec when
+    /// pipelined): handle resolution plus cache-miss uploads.
     pub gather_secs: f64,
-    /// Seconds inside tile-GEMM execution.
+    /// Seconds inside tile-GEMM execution (includes the device-side pack
+    /// of resident tiles into the batch buffer).
     pub exec_secs: f64,
     /// Seconds inside the scatter-accumulate stage (overlaps exec).
     pub scatter_secs: f64,
@@ -57,6 +69,16 @@ pub struct MultiplyStats {
     /// Schedule-cache hits/misses for this call's (A, B, τ) key.
     pub schedule_cache_hits: usize,
     pub schedule_cache_misses: usize,
+    /// Residency-pool hits/misses/evictions for this call's operand tiles
+    /// (all zero when residency is disabled).
+    pub residency_hits: usize,
+    pub residency_misses: usize,
+    pub residency_evictions: usize,
+    /// Bytes actually uploaded host→device by the gather stage.
+    pub transfer_bytes: u64,
+    /// Bytes *not* uploaded thanks to residency hits and within-chunk
+    /// operand-tile deduplication.
+    pub transfer_saved_bytes: u64,
 }
 
 impl MultiplyStats {
@@ -71,6 +93,27 @@ impl MultiplyStats {
         self.exec_span_secs += other.exec_span_secs;
         self.batches += other.batches;
         self.pipeline_depth = self.pipeline_depth.max(other.pipeline_depth);
+        self.residency_hits += other.residency_hits;
+        self.residency_misses += other.residency_misses;
+        self.residency_evictions += other.residency_evictions;
+        self.transfer_bytes += other.transfer_bytes;
+        self.transfer_saved_bytes += other.transfer_saved_bytes;
+    }
+}
+
+/// A padded operand plus its content fingerprint — the identity the
+/// residency pool keys device-resident tiles on.  `fp == None` (caching
+/// and residency both disabled) downgrades the gather stage to plain
+/// copies.
+#[derive(Clone, Copy)]
+pub struct Operand<'a> {
+    pub padded: &'a PaddedMatrix,
+    pub fp: Option<Fingerprint>,
+}
+
+impl<'a> Operand<'a> {
+    pub fn new(padded: &'a PaddedMatrix, fp: Option<Fingerprint>) -> Operand<'a> {
+        Operand { padded, fp }
     }
 }
 
@@ -79,15 +122,21 @@ pub struct SpammEngine {
     rt: Runtime,
     cfg: SpammConfig,
     caches: ExecCaches,
+    /// Device-resident operand-tile pool (None under `--no-residency`).
+    pool: Option<Arc<ResidencyPool>>,
 }
 
 impl SpammEngine {
     pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<SpammEngine> {
         cfg.validate()?;
+        let pool = cfg
+            .residency_enabled
+            .then(|| Arc::new(ResidencyPool::new(cfg.device_mem_budget)));
         Ok(SpammEngine {
             rt: Runtime::new(bundle)?,
             cfg,
             caches: ExecCaches::new(),
+            pool,
         })
     }
 
@@ -102,6 +151,12 @@ impl SpammEngine {
     /// The engine's norm/schedule caches (hit/miss inspection).
     pub fn caches(&self) -> &ExecCaches {
         &self.caches
+    }
+
+    /// The engine's device-resident tile pool (None under
+    /// `--no-residency`).
+    pub fn residency(&self) -> Option<&ResidencyPool> {
+        self.pool.as_deref()
     }
 
     /// normmap of a padded matrix — on-device (get-norm artifact) when
@@ -167,8 +222,8 @@ impl SpammEngine {
         let pb = PaddedMatrix::new(b, self.cfg.lonum);
 
         let t = Instant::now();
-        let (na, fa) = self.cached_normmap(&pa, &mut stats)?;
-        let (nb, fb) = self.cached_normmap(&pb, &mut stats)?;
+        let (na, mut fa) = self.cached_normmap(&pa, &mut stats)?;
+        let (nb, mut fb) = self.cached_normmap(&pb, &mut stats)?;
         stats.norm_secs = t.elapsed().as_secs_f64();
 
         let t = Instant::now();
@@ -180,18 +235,26 @@ impl SpammEngine {
         stats.total_products = sched.total_products();
         stats.valid_ratio = sched.valid_ratio();
 
+        // Residency keys on content fingerprints; compute them here even
+        // when the norm cache (which normally provides them) is off.
+        if self.pool.is_some() {
+            fa = fa.or_else(|| Some(fingerprint(&pa)));
+            fb = fb.or_else(|| Some(fingerprint(&pb)));
+        }
+
         let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), self.cfg.lonum);
         let all_tiles: Vec<(usize, usize)> = (0..sched.tile_rows)
             .flat_map(|i| (0..sched.tile_cols).map(move |j| (i, j)))
             .collect();
-        execute_products(
+        execute_batches(
             &self.rt,
             &self.cfg,
-            &pa,
-            &pb,
+            self.pool.as_deref(),
+            Operand::new(&pa, fa),
+            Operand::new(&pb, fb),
             &mut pc,
             &sched,
-            &all_tiles,
+            &[all_tiles.as_slice()],
             &mut stats,
         )?;
 
@@ -296,6 +359,20 @@ pub fn pack_chunks<'a>(
     Ok(chunks)
 }
 
+/// Order a pipeline batch's products for residency: a stable sort by
+/// A-tile coordinate packs the products that share an A-tile into the
+/// same chunk, so the §3.3 A-block is staged/uploaded once per chunk
+/// instead of once per product.
+///
+/// Bitwise-safe: every product belongs to exactly one output tile, and
+/// for a fixed output tile (i, j) the products' A-tiles are (i, k) with
+/// strictly increasing k — a stable sort keyed on the A coordinate
+/// preserves each output tile's accumulation order exactly, so the f32
+/// sums are unchanged down to the last bit.
+fn order_for_residency(products: &mut [ProductRef]) {
+    products.sort_by_key(|p| p.a);
+}
+
 /// Where executed tile products land.  The single-device engine scatters
 /// into the padded output matrix; the coordinator's per-device workers
 /// accumulate into their owned-tile map.
@@ -346,73 +423,234 @@ impl ScatterSink for TileAccumulator {
     }
 }
 
-/// One gathered chunk traveling from the gather worker to the exec stage.
-struct GatheredChunk {
-    cap: usize,
-    a_buf: Vec<f32>,
-    b_buf: Vec<f32>,
-    c_ids: Vec<(usize, usize)>,
+/// Transfer-stage counters accumulated by the gather worker and folded
+/// into [`MultiplyStats`] after the pipeline joins.
+#[derive(Default)]
+struct TransferCounters {
+    secs: f64,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+    uploaded_bytes: u64,
+    saved_bytes: u64,
 }
 
-/// Execute the surviving products of `tiles` in batched tile-GEMM calls,
-/// scatter-accumulating into `sink`.  Shared by the single-device engine
-/// and the per-device workers of the coordinator.
+impl TransferCounters {
+    fn fold_into(&self, stats: &mut MultiplyStats) {
+        stats.gather_secs += self.secs;
+        stats.residency_hits += self.hits;
+        stats.residency_misses += self.misses;
+        stats.residency_evictions += self.evictions;
+        stats.transfer_bytes += self.uploaded_bytes;
+        stats.transfer_saved_bytes += self.saved_bytes;
+    }
+}
+
+/// One operand's staging for a chunk: the *unique* tiles (as device
+/// handles) plus a per-product slot map into them.  A tile referenced by
+/// k products appears once in `tiles` and k times in `slots`.
+struct StagedOperand {
+    tiles: Vec<TileHandle>,
+    slots: Vec<u32>,
+}
+
+/// Resolve a chunk's tile ids into deduplicated pool handles: a tile
+/// referenced k times stages once, tiles already resident cost a refcount
+/// bump, and only pool misses upload.
+fn stage_operand(
+    pool: &ResidencyPool,
+    fp: Fingerprint,
+    p: &PaddedMatrix,
+    ids: &[(usize, usize)],
+    ctr: &mut TransferCounters,
+) -> Result<StagedOperand> {
+    let l2 = p.lonum * p.lonum;
+    let tile_bytes = (l2 * std::mem::size_of::<f32>()) as u64;
+    let mut index: HashMap<(usize, usize), u32> = HashMap::with_capacity(ids.len());
+    let mut tiles: Vec<TileHandle> = Vec::new();
+    let mut slots: Vec<u32> = Vec::with_capacity(ids.len());
+    for &(ti, tj) in ids {
+        if ti >= p.tile_rows() || tj >= p.tile_cols() {
+            return Err(Error::Shape(format!(
+                "gather: tile ({ti},{tj}) out of {}x{} grid",
+                p.tile_rows(),
+                p.tile_cols()
+            )));
+        }
+        if let Some(&slot) = index.get(&(ti, tj)) {
+            // Within-chunk dedup: the tile is already staged for this
+            // chunk — no second copy, no second upload.
+            ctr.saved_bytes += tile_bytes;
+            slots.push(slot);
+            continue;
+        }
+        let got = pool.acquire(TileKey::new(fp, (ti, tj)), l2, |dst| {
+            p.copy_tile(ti, tj, dst)
+        });
+        if got.hit {
+            ctr.hits += 1;
+            ctr.saved_bytes += tile_bytes;
+        } else {
+            ctr.misses += 1;
+            ctr.uploaded_bytes += tile_bytes;
+        }
+        ctr.evictions += got.evicted;
+        let slot = tiles.len() as u32;
+        tiles.push(got.handle);
+        index.insert((ti, tj), slot);
+        slots.push(slot);
+    }
+    Ok(StagedOperand { tiles, slots })
+}
+
+/// Assemble the contiguous `(cap, L, L)` batch buffer the tile-GEMM
+/// artifacts expect from a staged operand's handles — the device-side
+/// pack (resident tiles → batch buffer; no host transfer).
+fn pack_staged(staged: &StagedOperand, cap: usize, l2: usize, buf: &mut Vec<f32>) {
+    buf.clear();
+    buf.resize(cap * l2, 0.0);
+    for (slot, &t) in staged.slots.iter().enumerate() {
+        buf[slot * l2..(slot + 1) * l2].copy_from_slice(&staged.tiles[t as usize].data);
+    }
+}
+
+/// One gathered chunk traveling from the transfer worker to the exec
+/// stage.
+enum GatheredChunk {
+    /// Handle-based staging (residency pool active): deduplicated
+    /// operand-tile handles plus the per-product slot maps.
+    Resident {
+        cap: usize,
+        a: StagedOperand,
+        b: StagedOperand,
+        c_ids: Vec<(usize, usize)>,
+    },
+    /// Raw per-slot copies straight into (recycled) batch buffers — the
+    /// `--no-residency` path, byte-for-byte the pre-residency gather.
+    Raw {
+        cap: usize,
+        a_buf: Vec<f32>,
+        b_buf: Vec<f32>,
+        c_ids: Vec<(usize, usize)>,
+    },
+}
+
+/// Execute the surviving products of a sequence of pipeline batches in
+/// batched tile-GEMM calls, scatter-accumulating into `sink`.  Shared by
+/// the single-device engine (one batch of all tiles) and the per-device
+/// workers of the coordinator (the paper's P batches).
 ///
-/// Stage-pipelined (§3.4): a gather worker stages chunk *i+1* while this
-/// thread (which owns the non-`Send` PJRT runtime) executes chunk *i*, and
-/// a scatter worker drains finished products.  `cfg.pipeline_depth` bounds
-/// the in-flight chunks per channel.  Returns the executed product count.
+/// Stage-pipelined (§3.4) across *all* batches: a transfer worker
+/// resolves chunk *i+1*'s tile handles (uploading residency misses into
+/// `pool`) while this thread (which owns the non-`Send` PJRT runtime)
+/// executes chunk *i*, and a scatter worker drains finished products.
+/// Chunks stream across batch boundaries — batch *i+1*'s uploads overlap
+/// batch *i*'s tile-GEMM instead of joining at a per-batch stream sync.
+/// `cfg.pipeline_depth` bounds the in-flight chunks per channel.  Returns
+/// the executed product count.
 #[allow(clippy::too_many_arguments)]
-pub fn execute_products<S: ScatterSink>(
+pub fn execute_batches<S: ScatterSink>(
     rt: &Runtime,
     cfg: &SpammConfig,
-    pa: &PaddedMatrix,
-    pb: &PaddedMatrix,
+    pool: Option<&ResidencyPool>,
+    pa: Operand<'_>,
+    pb: Operand<'_>,
     sink: &mut S,
     sched: &Schedule,
-    tiles: &[(usize, usize)],
+    batches: &[&[(usize, usize)]],
     stats: &mut MultiplyStats,
 ) -> Result<usize> {
-    let products: Vec<ProductRef> = sched
-        .products_for_tiles(tiles.iter().copied())
-        .collect();
-    let executed = products.len();
+    let residency = pool.is_some() && pa.fp.is_some() && pb.fp.is_some();
+    let pool = if residency { pool } else { None };
+    let mut batch_products: Vec<Vec<ProductRef>> = Vec::with_capacity(batches.len());
+    for tiles in batches {
+        let mut products: Vec<ProductRef> =
+            sched.products_for_tiles(tiles.iter().copied()).collect();
+        if residency {
+            order_for_residency(&mut products);
+        }
+        batch_products.push(products);
+    }
+    let executed: usize = batch_products.iter().map(|b| b.len()).sum();
     stats.pipeline_depth = cfg.pipeline_depth.max(1);
-    if products.is_empty() {
+    if executed == 0 {
         // Zero surviving products (huge τ): the output is exactly the
         // sink's current contents — no kernel launches at all.
         return Ok(0);
     }
     let precision = cfg.precision.as_str();
-    let chunks = pack_chunks(rt.bundle(), cfg, &products)?;
-    // Resolve each chunk's compiled batch capacity up front so the gather
-    // worker never touches the artifact registry.
-    let mut caps = Vec::with_capacity(chunks.len());
-    for chunk in &chunks {
-        let meta = rt.bundle().tilegemm(chunk.len(), cfg.lonum, precision)?;
-        let cap = meta.param_usize("batch").unwrap_or(chunk.len());
-        debug_assert!(cap >= chunk.len());
-        caps.push(cap);
+    // Chunk every batch and resolve each chunk's compiled batch capacity
+    // up front so the transfer worker never touches the artifact registry.
+    let mut work: Vec<(&[ProductRef], usize)> = Vec::new();
+    for products in &batch_products {
+        for chunk in pack_chunks(rt.bundle(), cfg, products)? {
+            let meta = rt.bundle().tilegemm(chunk.len(), cfg.lonum, precision)?;
+            let cap = meta.param_usize("batch").unwrap_or(chunk.len());
+            debug_assert!(cap >= chunk.len());
+            work.push((chunk, cap));
+        }
     }
     let depth = cfg.pipeline_depth.max(1);
-    let work: Vec<(&[ProductRef], usize)> = chunks.into_iter().zip(caps).collect();
+    let l2 = cfg.lonum * cfg.lonum;
+    let tile_bytes = (l2 * std::mem::size_of::<f32>()) as u64;
+
+    // Stage one chunk: handle-based when the pool is active, raw copies
+    // into `bufs` (reused across chunks) otherwise.
+    let stage_chunk = |chunk: &[ProductRef],
+                       cap: usize,
+                       bufs: (Vec<f32>, Vec<f32>),
+                       ctr: &mut TransferCounters|
+     -> Result<GatheredChunk> {
+        let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
+        let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
+        let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
+        if let (Some(pool), Some(fpa), Some(fpb)) = (pool, pa.fp, pb.fp) {
+            let a = stage_operand(pool, fpa, pa.padded, &a_ids, ctr)?;
+            let b = stage_operand(pool, fpb, pb.padded, &b_ids, ctr)?;
+            Ok(GatheredChunk::Resident { cap, a, b, c_ids })
+        } else {
+            let (mut a_buf, mut b_buf) = bufs;
+            gather_tiles(pa.padded, &a_ids, cap, &mut a_buf)?;
+            gather_tiles(pb.padded, &b_ids, cap, &mut b_buf)?;
+            // Every slot is a fresh host→device copy on this path.
+            let moved = 2 * chunk.len() as u64 * tile_bytes;
+            ctr.uploaded_bytes += moved;
+            telemetry::global().add("spamm.transfer.uploaded_bytes", moved);
+            Ok(GatheredChunk::Raw {
+                cap,
+                a_buf,
+                b_buf,
+                c_ids,
+            })
+        }
+    };
 
     // A single chunk has nothing to overlap with — run the stages
     // inline and skip the worker spawn/channel setup entirely.
     if work.len() == 1 {
         let span = Instant::now();
         let (chunk, cap) = work[0];
+        let mut ctr = TransferCounters::default();
         let t = Instant::now();
-        let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
-        let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
-        let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
-        let mut a_buf = Vec::new();
-        let mut b_buf = Vec::new();
-        gather_tiles(pa, &a_ids, cap, &mut a_buf)?;
-        gather_tiles(pb, &b_ids, cap, &mut b_buf)?;
-        stats.gather_secs += t.elapsed().as_secs_f64();
+        let staged = stage_chunk(chunk, cap, Default::default(), &mut ctr)?;
+        ctr.secs = t.elapsed().as_secs_f64();
+        ctr.fold_into(stats);
         let t = Instant::now();
-        let out = rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision)?;
+        let mut a_scratch = Vec::new();
+        let mut b_scratch = Vec::new();
+        let (c_ids, out) = match staged {
+            GatheredChunk::Resident { cap, a, b, c_ids } => {
+                pack_staged(&a, cap, l2, &mut a_scratch);
+                pack_staged(&b, cap, l2, &mut b_scratch);
+                (c_ids, rt.tile_gemm(&a_scratch, &b_scratch, cap, cfg.lonum, precision)?)
+            }
+            GatheredChunk::Raw {
+                cap,
+                a_buf,
+                b_buf,
+                c_ids,
+            } => (c_ids, rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision)?),
+        };
         stats.exec_secs += t.elapsed().as_secs_f64();
         stats.batches += 1;
         let t = Instant::now();
@@ -423,37 +661,33 @@ pub fn execute_products<S: ScatterSink>(
     }
 
     let span = Instant::now();
+    let mut exec_secs = 0.0f64;
+    let mut exec_batches = 0usize;
     let result = std::thread::scope(|scope| -> Result<()> {
         let (gather_tx, gather_rx) = mpsc::sync_channel::<GatheredChunk>(depth);
         let (scatter_tx, scatter_rx) =
             mpsc::sync_channel::<(Vec<(usize, usize)>, Vec<f32>)>(depth);
-        // Exec returns spent staging buffers to the gather worker so the
-        // hot loop reuses allocations instead of mallocing per chunk.
+        // Exec returns spent raw-path buffers to the transfer worker so
+        // the `--no-residency` hot loop reuses allocations.
         let (recycle_tx, recycle_rx) = mpsc::channel::<(Vec<f32>, Vec<f32>)>();
 
-        // Stage 1: gather worker (reads pa/pb, stages contiguous buffers).
-        let gather_worker = scope.spawn(move || -> Result<f64> {
-            let mut secs = 0.0f64;
-            for (chunk, cap) in work {
-                let (mut a_buf, mut b_buf) = recycle_rx.try_recv().unwrap_or_default();
+        // Stage 1: transfer worker — the device's transfer queue.  Streams
+        // handle resolution (and residency-miss uploads) across every
+        // chunk of every batch with no per-batch join.
+        let work_feed = work;
+        let stage_chunk = &stage_chunk;
+        let gather_worker = scope.spawn(move || -> Result<TransferCounters> {
+            let mut ctr = TransferCounters::default();
+            for (chunk, cap) in work_feed {
+                let bufs = recycle_rx.try_recv().unwrap_or_default();
                 let t = Instant::now();
-                let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
-                let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
-                let c_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.c).collect();
-                gather_tiles(pa, &a_ids, cap, &mut a_buf)?;
-                gather_tiles(pb, &b_ids, cap, &mut b_buf)?;
-                secs += t.elapsed().as_secs_f64();
-                let staged = GatheredChunk {
-                    cap,
-                    a_buf,
-                    b_buf,
-                    c_ids,
-                };
+                let staged = stage_chunk(chunk, cap, bufs, &mut ctr)?;
+                ctr.secs += t.elapsed().as_secs_f64();
                 if gather_tx.send(staged).is_err() {
                     break; // exec stage bailed out; stop producing
                 }
             }
-            Ok(secs)
+            Ok(ctr)
         });
 
         // Stage 3: scatter worker (owns the sink for the span).
@@ -468,23 +702,43 @@ pub fn execute_products<S: ScatterSink>(
         });
 
         // Stage 2: tile-GEMM execution on this thread (the PJRT client is
-        // not Send; it never crosses threads).
+        // not Send; it never crosses threads).  The scratch pack buffers
+        // live here and are reused across chunks.
         let mut exec_err: Option<Error> = None;
+        let mut a_scratch: Vec<f32> = Vec::new();
+        let mut b_scratch: Vec<f32> = Vec::new();
         for staged in gather_rx {
-            let GatheredChunk {
-                cap,
-                a_buf,
-                b_buf,
-                c_ids,
-            } = staged;
             let t = Instant::now();
-            match rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision) {
-                Ok(out) => {
-                    stats.exec_secs += t.elapsed().as_secs_f64();
-                    stats.batches += 1;
+            let (c_ids, gemm) = match staged {
+                GatheredChunk::Resident { cap, a, b, c_ids } => {
+                    pack_staged(&a, cap, l2, &mut a_scratch);
+                    pack_staged(&b, cap, l2, &mut b_scratch);
+                    // Handles drop here: the tiles stay resident in the
+                    // pool but become evictable once no in-flight chunk
+                    // pins them.
+                    drop((a, b));
+                    (
+                        c_ids,
+                        rt.tile_gemm(&a_scratch, &b_scratch, cap, cfg.lonum, precision),
+                    )
+                }
+                GatheredChunk::Raw {
+                    cap,
+                    a_buf,
+                    b_buf,
+                    c_ids,
+                } => {
+                    let gemm = rt.tile_gemm(&a_buf, &b_buf, cap, cfg.lonum, precision);
                     // Hand the buffers back for reuse (gather may already
                     // be gone; that's fine).
                     let _ = recycle_tx.send((a_buf, b_buf));
+                    (c_ids, gemm)
+                }
+            };
+            match gemm {
+                Ok(out) => {
+                    exec_secs += t.elapsed().as_secs_f64();
+                    exec_batches += 1;
                     if scatter_tx.send((c_ids, out)).is_err() {
                         exec_err =
                             Some(Error::Coordinator("scatter stage terminated early".into()));
@@ -501,14 +755,14 @@ pub fn execute_products<S: ScatterSink>(
 
         let gather_res = gather_worker
             .join()
-            .map_err(|_| Error::Coordinator("gather worker panicked".into()))?;
+            .map_err(|_| Error::Coordinator("transfer worker panicked".into()))?;
         let scatter_res = scatter_worker
             .join()
             .map_err(|_| Error::Coordinator("scatter worker panicked".into()))?;
         // Report errors in pipeline order; a genuine scatter error beats
         // the synthetic channel-closed error it caused upstream.
         match gather_res {
-            Ok(secs) => stats.gather_secs += secs,
+            Ok(ctr) => ctr.fold_into(stats),
             Err(e) => return Err(e),
         }
         match scatter_res {
@@ -520,6 +774,8 @@ pub fn execute_products<S: ScatterSink>(
         }
         Ok(())
     });
+    stats.exec_secs += exec_secs;
+    stats.batches += exec_batches;
     stats.exec_span_secs += span.elapsed().as_secs_f64();
     result?;
     Ok(executed)
@@ -538,6 +794,7 @@ mod tests {
         let spec = HostsimSpec {
             lonum: 32,
             dense_sizes: vec![],
+            dense_rect: vec![],
             getnorm_sizes: vec![],
             tilegemm_batches: vec![16, 64, 256],
             tune_bdims: vec![],
@@ -634,5 +891,85 @@ mod tests {
         let ok = Matrix::zeros(17, 20);
         let b2 = Matrix::zeros(20, 8);
         assert!(check_inner_dims("multiply", &ok, &b2).is_ok());
+    }
+
+    #[test]
+    fn residency_ordering_preserves_per_output_tile_k_order() {
+        // Products of several output tiles in one row share A-tiles; the
+        // residency sort must group them by A-tile while keeping every
+        // output tile's k order ascending (the bitwise-identity invariant).
+        let mut products = vec![
+            ProductRef { a: (0, 0), b: (0, 0), c: (0, 0) },
+            ProductRef { a: (0, 1), b: (1, 0), c: (0, 0) },
+            ProductRef { a: (0, 0), b: (0, 1), c: (0, 1) },
+            ProductRef { a: (0, 1), b: (1, 1), c: (0, 1) },
+        ];
+        order_for_residency(&mut products);
+        // Grouped by A-tile: both (0,0)-A products first.
+        assert_eq!(products[0].a, (0, 0));
+        assert_eq!(products[1].a, (0, 0));
+        assert_eq!(products[2].a, (0, 1));
+        assert_eq!(products[3].a, (0, 1));
+        // Per-output-tile k order unchanged (k=0 before k=1 for both).
+        for c in [(0usize, 0usize), (0, 1)] {
+            let ks: Vec<usize> = products
+                .iter()
+                .filter(|p| p.c == c)
+                .map(|p| p.a.1)
+                .collect();
+            assert_eq!(ks, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn stage_operand_dedupes_within_chunk() {
+        let m = Matrix::randn(64, 64, 9);
+        let p = PaddedMatrix::new(&m, 32);
+        let fp = fingerprint(&p);
+        let pool = ResidencyPool::new(0);
+        let ids = [(0usize, 0usize), (0, 1), (0, 0), (0, 0), (1, 1)];
+        let mut ctr = TransferCounters::default();
+        let staged = stage_operand(&pool, fp, &p, &ids, &mut ctr).unwrap();
+        assert_eq!(staged.tiles.len(), 3, "3 unique tiles");
+        assert_eq!(staged.slots, vec![0, 1, 0, 0, 2]);
+        let tile_bytes = (32 * 32 * 4) as u64;
+        assert_eq!(ctr.misses, 3);
+        assert_eq!(ctr.uploaded_bytes, 3 * tile_bytes);
+        assert_eq!(ctr.saved_bytes, 2 * tile_bytes, "2 duplicate refs saved");
+        // Packing replicates the deduped tile into every slot.
+        let mut buf = Vec::new();
+        pack_staged(&staged, 8, 32 * 32, &mut buf);
+        assert_eq!(buf.len(), 8 * 32 * 32);
+        assert_eq!(buf[..1024], buf[2 * 1024..3 * 1024]);
+        assert_eq!(buf[..1024], buf[3 * 1024..4 * 1024]);
+        assert!(buf[5 * 1024..].iter().all(|&x| x == 0.0), "padded tail zero");
+    }
+
+    #[test]
+    fn stage_operand_pool_uploads_once_across_chunks() {
+        let m = Matrix::randn(64, 64, 10);
+        let p = PaddedMatrix::new(&m, 32);
+        let fp = fingerprint(&p);
+        let pool = ResidencyPool::new(0);
+        let ids = [(0usize, 0usize), (0, 1)];
+        let mut ctr = TransferCounters::default();
+        stage_operand(&pool, fp, &p, &ids, &mut ctr).unwrap();
+        assert_eq!(ctr.misses, 2);
+        assert_eq!(ctr.hits, 0);
+        // A second chunk touching the same tiles transfers nothing.
+        let mut ctr2 = TransferCounters::default();
+        stage_operand(&pool, fp, &p, &ids, &mut ctr2).unwrap();
+        assert_eq!(ctr2.misses, 0);
+        assert_eq!(ctr2.hits, 2);
+        assert_eq!(ctr2.uploaded_bytes, 0);
+    }
+
+    #[test]
+    fn stage_operand_bounds_checked() {
+        let p = PaddedMatrix::new(&Matrix::zeros(32, 32), 32);
+        let pool = ResidencyPool::new(0);
+        let mut ctr = TransferCounters::default();
+        let fp = fingerprint(&p);
+        assert!(stage_operand(&pool, fp, &p, &[(1, 0)], &mut ctr).is_err());
     }
 }

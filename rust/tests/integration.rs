@@ -254,6 +254,56 @@ fn device_pool_executes() {
 }
 
 #[test]
+fn device_pool_staged_buffers_execute_in_place() {
+    use cuspamm::runtime::{DevicePool, ExecInput};
+    let b = bundle();
+    let pool = DevicePool::new(&b, 2, 4).unwrap();
+    let a = Matrix::decay_algebraic(256, 0.1, 0.1, 27);
+    let x = Matrix::decay_algebraic(256, 0.1, 0.1, 28);
+    let want = a.matmul(&x).unwrap();
+
+    // Upload A once; reference the staged buffer across repeated calls
+    // mixing resident and per-call inputs.
+    let a_buf = pool
+        .upload(0, (vec![256, 256], a.data().to_vec()))
+        .unwrap();
+    for _ in 0..2 {
+        let out = pool
+            .call_inputs(
+                0,
+                "dense_n256_f32",
+                vec![
+                    ExecInput::Buffer(a_buf),
+                    ExecInput::Host((vec![256, 256], x.data().to_vec())),
+                ],
+            )
+            .unwrap();
+        let got = Matrix::from_vec(256, 256, out[0].1.clone()).unwrap();
+        assert!(rel_err(&got, &want) < 1e-5);
+    }
+    // Upload time is a transfer, not busy time.
+    assert!(pool.transfer_secs()[0] > 0.0);
+    assert_eq!(pool.transfer_secs()[1], 0.0);
+
+    // Buffers are device-scoped: device 1 must reject device 0's handle.
+    assert!(pool
+        .call_inputs(1, "dense_n256_f32", vec![
+            ExecInput::Buffer(a_buf),
+            ExecInput::Host((vec![256, 256], x.data().to_vec())),
+        ])
+        .is_err());
+
+    // Freed buffers are gone (the handle routes the free to its device).
+    pool.free(a_buf).unwrap();
+    assert!(pool
+        .call_inputs(0, "dense_n256_f32", vec![
+            ExecInput::Buffer(a_buf),
+            ExecInput::Host((vec![256, 256], x.data().to_vec())),
+        ])
+        .is_err());
+}
+
+#[test]
 fn cnn_loads_and_matches_buildtime_accuracy() {
     let b = bundle();
     // Environment gap, not a library bug: the CNN export (weights + frozen

@@ -1,0 +1,205 @@
+//! Integration tests for the device-resident tile pool: bitwise identity
+//! of the resident and `--no-residency` paths across iterative workloads,
+//! warm-pool transfer savings, and eviction behavior under tiny budgets.
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
+use cuspamm::matrix::Matrix;
+use cuspamm::proptest::{forall_ok, gen, PropConfig};
+use cuspamm::spamm::power::spamm_power;
+use cuspamm::spamm::purification::{initial_density, mcweeny_purify};
+use cuspamm::spamm::SpammEngine;
+
+use common::bundle;
+
+fn cfg_residency(on: bool) -> SpammConfig {
+    let mut cfg = SpammConfig::default();
+    cfg.residency_enabled = on;
+    cfg
+}
+
+#[test]
+fn resident_and_no_residency_agree_bitwise_on_power_and_purification() {
+    // The ISSUE's property: across power iteration + purification, the
+    // resident path must produce bit-identical results to --no-residency.
+    let b = bundle();
+    forall_ok(
+        PropConfig { cases: 4, seed: 0xBEEF },
+        |rng| {
+            (
+                gen::pow2_in(rng, 64, 128),
+                gen::usize_in(rng, 1, 1_000_000) as u64,
+                gen::f32_in(rng, 1e-5, 1e-3),
+            )
+        },
+        |&(n, seed, tau)| {
+            let with = Coordinator::new(&b, cfg_residency(true)).map_err(|e| e.to_string())?;
+            let without = Coordinator::new(&b, cfg_residency(false)).map_err(|e| e.to_string())?;
+
+            let a = Matrix::decay_exponential(n, 1.0, 0.5, seed);
+            let p1 = spamm_power(&with, &a, 3, tau).map_err(|e| e.to_string())?;
+            let p2 = spamm_power(&without, &a, 3, tau).map_err(|e| e.to_string())?;
+            if p1.value.data() != p2.value.data() {
+                return Err(format!("power(n={n}, τ={tau}) differs between paths"));
+            }
+
+            let p0 = initial_density(n, seed);
+            let r1 = mcweeny_purify(&with, &p0, tau, 2, 0.0).map_err(|e| e.to_string())?;
+            let r2 = mcweeny_purify(&without, &p0, tau, 2, 0.0).map_err(|e| e.to_string())?;
+            if r1.p.data() != r2.p.data() {
+                return Err(format!("purification(n={n}, τ={tau}) differs between paths"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn warm_pool_skips_transfers_on_repeated_multiply() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 101);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 102);
+    let tau = 1e-4f32;
+
+    let (c_cold, cold) = engine.multiply_with_stats(&a, &x, tau).unwrap();
+    assert!(cold.transfer_bytes > 0, "cold call must upload tiles");
+    // (A cold call can still *hit* tiles a previous chunk of the same call
+    // uploaded — only misses are guaranteed here.)
+    assert!(cold.residency_misses > 0);
+
+    let (c_warm, warm) = engine.multiply_with_stats(&a, &x, tau).unwrap();
+    // The acceptance criterion: a warm pool transfers ≥ 4x fewer bytes.
+    assert!(
+        warm.transfer_bytes * 4 <= cold.transfer_bytes,
+        "warm transfers {} vs cold {}",
+        warm.transfer_bytes,
+        cold.transfer_bytes
+    );
+    assert!(warm.residency_hits > 0);
+    assert_eq!(warm.residency_misses, 0, "every operand tile is resident");
+    assert!(warm.transfer_saved_bytes >= cold.transfer_bytes);
+    assert_eq!(c_cold.data(), c_warm.data());
+
+    // Pool-level counters agree with the per-call stats.
+    let pool = engine.residency().expect("residency on by default");
+    let s = pool.stats();
+    assert_eq!(s.misses as usize, cold.residency_misses);
+    assert!(s.hits as usize >= warm.residency_hits);
+    assert_eq!(s.uploaded_bytes, cold.transfer_bytes);
+}
+
+#[test]
+fn no_residency_flag_disables_pool() {
+    let b = bundle();
+    let engine = SpammEngine::new(&b, cfg_residency(false)).unwrap();
+    assert!(engine.residency().is_none());
+    let a = Matrix::decay_exponential(96, 1.0, 0.5, 103);
+    for _ in 0..2 {
+        let (_, s) = engine.multiply_with_stats(&a, &a, 1e-4).unwrap();
+        assert_eq!(s.residency_hits, 0);
+        assert_eq!(s.residency_misses, 0);
+        // Every call re-uploads: nothing is resident across calls.
+        assert!(s.transfer_bytes > 0);
+    }
+}
+
+#[test]
+fn eviction_under_tiny_budget_stays_correct() {
+    let b = bundle();
+    let tile_bytes = 32 * 32 * 4;
+    let mut cfg = SpammConfig::default();
+    cfg.device_mem_budget = 3 * tile_bytes; // far fewer than the operands' tiles
+    cfg.max_tile_batch = 16; // many small chunks → constant pool churn
+    let tiny = SpammEngine::new(&b, cfg).unwrap();
+    let roomy = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+
+    // τ = 0 keeps all 8·8·8 products → 32 sixteen-product chunks; channel
+    // backpressure guarantees later chunks stage after earlier chunks'
+    // pins dropped, so the 3-tile budget must evict continuously.
+    let a = Matrix::decay_exponential(256, 1.0, 0.5, 104);
+    let x = Matrix::decay_exponential(256, 1.0, 0.5, 105);
+    let (c_tiny, _) = tiny.multiply_with_stats(&a, &x, 0.0).unwrap();
+    let (c_roomy, _) = roomy.multiply_with_stats(&a, &x, 0.0).unwrap();
+    assert_eq!(c_tiny.data(), c_roomy.data(), "eviction must not change results");
+    // A second call still works (tiles churn through the tiny pool).
+    let (c2, _) = tiny.multiply_with_stats(&a, &x, 0.0).unwrap();
+    assert_eq!(c2.data(), c_roomy.data());
+    let s = tiny.residency().unwrap().stats();
+    assert!(
+        s.evictions > 0,
+        "a 3-tile budget over an 8x8 tile grid must evict, stats {s:?}"
+    );
+}
+
+#[test]
+fn coordinator_reports_per_device_transfer_clocks_and_warm_reuse() {
+    let b = bundle();
+    let mut cfg = SpammConfig::default();
+    cfg.devices = 2;
+    let coord = Coordinator::new(&b, cfg).unwrap();
+    assert_eq!(coord.residency_pools().len(), 2);
+
+    let a = Matrix::decay_exponential(128, 1.0, 0.55, 106);
+    let x = Matrix::decay_exponential(128, 1.0, 0.55, 107);
+    let r1 = coord.multiply(&a, &x, 1e-4).unwrap();
+    assert_eq!(r1.device_transfer_secs.len(), 2);
+    assert!(r1.stage.transfer_bytes > 0);
+
+    // Second multiply on the same operands: per-device pools are warm, so
+    // phase-3 transfers vanish entirely.
+    let r2 = coord.multiply(&a, &x, 1e-4).unwrap();
+    assert_eq!(r1.c.data(), r2.c.data());
+    assert!(
+        r2.stage.transfer_bytes * 4 <= r1.stage.transfer_bytes,
+        "warm device pools must cut transfers ≥4x: {} vs {}",
+        r2.stage.transfer_bytes,
+        r1.stage.transfer_bytes
+    );
+    assert!(r2.stage.residency_hits > 0);
+    assert!(r1.summary_line().contains("transfers"));
+}
+
+#[test]
+fn power_chain_reuses_constant_operand_tiles() {
+    // A^k keeps multiplying by the constant A: its tiles must stay
+    // resident across iterations (the §3.3 A-block reuse across repeats).
+    let b = bundle();
+    let coord = Coordinator::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(96, 1.0, 0.5, 108);
+    spamm_power(&coord, &a, 4, 1e-5).unwrap();
+    let pool = &coord.residency_pools()[0];
+    let s = pool.stats();
+    assert!(
+        s.hits > 0,
+        "constant operand tiles must hit the pool across the chain"
+    );
+    assert!(s.saved_bytes > 0);
+}
+
+#[test]
+fn within_chunk_duplicate_tiles_are_staged_once() {
+    // τ = 0 on a decay matrix keeps every product: each A-tile of a row
+    // appears in every output tile of that row, so the gather stage must
+    // dedupe heavily even on the very first (all-miss) call.
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 109);
+    let (_, s) = engine.multiply_with_stats(&a, &a, 0.0).unwrap();
+    // 4x4 tile grid, 64 products, ≤ 2·16 unique operand tiles (A ≡ B here
+    // contributes per-operand entries): far fewer uploads than slots.
+    let tile_bytes = (32 * 32 * 4) as u64;
+    let slots_bytes = 2 * 64 * tile_bytes; // 64 products × two operands
+    assert!(
+        s.transfer_bytes + s.transfer_saved_bytes >= slots_bytes,
+        "accounting covers every slot reference"
+    );
+    assert!(
+        s.transfer_bytes <= 2 * 16 * tile_bytes,
+        "uploads bounded by unique tiles, got {}",
+        s.transfer_bytes
+    );
+    assert!(s.transfer_saved_bytes > 0);
+}
