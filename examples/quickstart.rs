@@ -1,10 +1,13 @@
-//! Quickstart: the minimal cuspamm workflow.
+//! Quickstart: the cuspamm serving lifecycle — put → prepare → submit →
+//! wait.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 //!
-//! Generates an algebraic-decay matrix pair (the paper's synthesized
-//! dataset), tunes τ for a 10% valid ratio, runs SpAMM, and compares time
-//! and error against the dense XLA baseline (the cuBLAS stand-in).
+//! Registers an algebraic-decay matrix pair (the paper's synthesized
+//! dataset) in a `SpammSession`, prepares a plan tuned for a 10% valid
+//! ratio, executes it repeatedly to show the cold-vs-warm contrast the
+//! session exists for, and compares time and error against the dense
+//! XLA baseline (the cuBLAS stand-in).
 
 use cuspamm::prelude::*;
 
@@ -13,50 +16,64 @@ fn main() -> Result<()> {
     let bundle = ArtifactBundle::load("artifacts")?;
     let mut cfg = SpammConfig::default();
     cfg.lonum = 128; // MXU-native tile; best tile-GEMM throughput on this runtime
-    let engine = SpammEngine::new(&bundle, cfg.clone())?;
+    let session = SpammSession::new(&bundle, cfg.clone())?;
 
     let n = 1024;
     println!("== cuspamm quickstart (N = {n}, LoNum = {}) ==", cfg.lonum);
-    let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
-    let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
 
-    // 1. Tune τ for a target valid ratio (§3.5.2).
-    let tuned = engine.tune_tau(&a, &b, 0.10)?;
-    println!(
-        "tuned τ = {:.5e} → valid ratio {:.2}% in {} iterations",
-        tuned.tau,
-        tuned.achieved_ratio * 100.0,
-        tuned.iters
-    );
+    // 1. Register the operands once (content-deduplicated, refcounted).
+    let a = session.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 7))?;
+    let b = session.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 8))?;
 
-    // 2. SpAMM multiply (skips ~90% of tile products).
-    engine.multiply(&a, &b, tuned.tau)?; // warm (compile executables)
-    let (c, stats) = engine.multiply_with_stats(&a, &b, tuned.tau)?;
-    println!(
-        "spamm:  {:.3}s  ({} of {} tile products executed, {} batches)",
-        stats.total_secs, stats.valid_products, stats.total_products, stats.batches
-    );
-    println!(
-        "        norm {:.1}ms | schedule {:.1}ms | gather {:.1}ms | exec {:.1}ms | scatter {:.1}ms",
-        stats.norm_secs * 1e3,
-        stats.schedule_secs * 1e3,
-        stats.gather_secs * 1e3,
-        stats.exec_secs * 1e3,
-        stats.scatter_secs * 1e3
-    );
+    // 2. Prepare once: τ tuned for a 10% valid ratio (§3.5.2), schedule
+    //    compacted and pinned, operand tiles pinned in the device pool.
+    let plan = session.prepare(a, b, Approx::ValidRatio(0.10))?;
+    let (tau, rows, cols) = session.plan_info(plan)?;
+    println!("prepared plan: τ = {tau:.5e}, output {rows}x{cols}");
 
-    // 3. Dense baseline on the same runtime (warm, then timed).
-    engine.dense(&a, &b)?;
+    // 3. Execute asynchronously.  The first request is cold (it is
+    //    charged the prepare phases, the operand upload, and the
+    //    executable compile); the rest ride the caches, the resident
+    //    runtime, and the device tile pool.
+    let tickets: Vec<Ticket> = (0..4)
+        .map(|_| session.submit(plan))
+        .collect::<Result<_>>()?;
+    let mut last = None;
+    for t in tickets {
+        let done = session.wait(t)?;
+        println!(
+            "req {:2}: {:.3}s  ({} of {} products, {} batches; norm {:.1}ms | \
+             schedule {:.1}ms | gather {:.1}ms | exec {:.1}ms | {} KiB uploaded)",
+            done.ticket.raw(),
+            done.compute_secs,
+            done.stats.valid_products,
+            done.stats.total_products,
+            done.stats.batches,
+            done.stats.norm_secs * 1e3,
+            done.stats.schedule_secs * 1e3,
+            done.stats.gather_secs * 1e3,
+            done.stats.exec_secs * 1e3,
+            done.stats.transfer_bytes / 1024,
+        );
+        last = Some(done);
+    }
+    let warm = last.expect("four completions");
+
+    // 4. Dense baseline on the same runtime (warm, then timed) and the
+    //    paper's Eq. 5 accuracy criterion.
+    let engine = SpammEngine::new(&bundle, cfg)?;
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+    engine.dense(&ma, &mb)?;
     let t = std::time::Instant::now();
-    let dense = engine.dense(&a, &b)?;
+    let dense = engine.dense(&ma, &mb)?;
     let dense_secs = t.elapsed().as_secs_f64();
     println!("dense:  {dense_secs:.3}s");
 
-    // 4. Accuracy report (the paper's Eq. 5 criterion).
-    let err = c.error_fnorm(&dense)?;
+    let err = warm.c.error_fnorm(&dense)?;
     println!(
-        "speedup {:.2}x   ‖E‖_F = {:.4e}   ‖E‖_F/‖C‖_F = {:.2e}",
-        dense_secs / stats.total_secs,
+        "speedup {:.2}x (warm request)   ‖E‖_F = {:.4e}   ‖E‖_F/‖C‖_F = {:.2e}",
+        dense_secs / warm.compute_secs,
         err,
         err / dense.fnorm()
     );

@@ -176,6 +176,12 @@ impl Args {
             .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{}'", self.get(key))))
     }
 
+    /// Byte-sized option with optional `k`/`m`/`g` suffix, e.g.
+    /// `--store-budget 512m`.
+    pub fn bytes(&self, key: &str) -> Result<usize> {
+        crate::config::parse_byte_size(&format!("--{key}"), self.get(key))
+    }
+
     pub fn f64(&self, key: &str) -> Result<f64> {
         self.get(key)
             .parse()
@@ -245,6 +251,17 @@ mod tests {
     fn positionals_collected() {
         let a = spec().parse(&args(&["pos1", "--ratio", "0.1", "pos2"])).unwrap();
         assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn bytes_accepts_suffixes() {
+        let s = Spec::new("t", "").opt("budget", "256m", "byte budget");
+        let a = s.parse(&args(&[])).unwrap();
+        assert_eq!(a.bytes("budget").unwrap(), 256 << 20);
+        let a = s.parse(&args(&["--budget", "4k"])).unwrap();
+        assert_eq!(a.bytes("budget").unwrap(), 4 << 10);
+        let a = s.parse(&args(&["--budget", "nope"])).unwrap();
+        assert!(a.bytes("budget").is_err());
     }
 
     #[test]

@@ -71,9 +71,21 @@ pub struct SpammConfig {
     /// coordinate; `--no-residency` turns this off).
     pub residency_enabled: bool,
     /// Byte budget of each device's resident-tile pool (LRU eviction;
-    /// pinned tiles are never evicted).  0 = unlimited.  Accepts `k`/`m`/
-    /// `g` suffixes in config files and on the CLI.
+    /// pinned tiles are never evicted).  Historically `0` meant
+    /// "unlimited", but real device memory never is — an unbounded pool
+    /// on a GPU is an OOM waiting for traffic — so configs must now size
+    /// the budget explicitly (or disable residency); the raw
+    /// `ResidencyPool::new(0)` escape hatch remains for tests.  Accepts
+    /// `k`/`m`/`g` suffixes in config files and on the CLI.
     pub device_mem_budget: usize,
+    /// Bounded admission depth of the session queue: `submit` fails once
+    /// this many jobs are queued (backpressure instead of unbounded
+    /// buffering).
+    pub queue_depth: usize,
+    /// Byte budget of the session operand store (registered padded
+    /// operands; LRU eviction of released, unpinned entries).
+    /// 0 = unlimited.  Accepts `k`/`m`/`g` suffixes.
+    pub store_budget: usize,
     /// Load-balance strategy.
     pub balance: Balance,
     /// Compute normmaps on-device (get-norm artifact) or on the host.
@@ -99,6 +111,8 @@ impl Default for SpammConfig {
             cache_enabled: true,
             residency_enabled: true,
             device_mem_budget: 256 * 1024 * 1024,
+            queue_depth: 64,
+            store_budget: 1024 * 1024 * 1024,
             balance: Balance::Strided(4),
             device_normmap: false,
             sequential_devices: false,
@@ -119,6 +133,8 @@ impl SpammConfig {
             "cache_enabled" => self.cache_enabled = parse_bool(key, value)?,
             "residency_enabled" => self.residency_enabled = parse_bool(key, value)?,
             "device_mem_budget" => self.device_mem_budget = parse_bytes(key, value)?,
+            "queue_depth" => self.queue_depth = parse_num(key, value)?,
+            "store_budget" => self.store_budget = parse_bytes(key, value)?,
             "device_normmap" => {
                 self.device_normmap = parse_bool(key, value)?;
             }
@@ -173,8 +189,25 @@ impl SpammConfig {
         if let Balance::Strided(0) = self.balance {
             return Err(Error::Config("stride must be ≥ 1".into()));
         }
+        if self.residency_enabled && self.device_mem_budget == 0 {
+            return Err(Error::Config(
+                "device_mem_budget must be non-zero while residency is enabled — device \
+                 memory is finite, so size the pool explicitly (e.g. 256m) or disable it \
+                 with residency_enabled = false / --no-residency"
+                    .into(),
+            ));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("queue_depth must be ≥ 1".into()));
+        }
         Ok(())
     }
+}
+
+/// Parse a byte count with an optional `k`/`m`/`g` suffix — the public
+/// twin of the config-file parser, for CLI byte-valued options.
+pub fn parse_byte_size(key: &str, value: &str) -> Result<usize> {
+    parse_bytes(key, value)
 }
 
 fn parse_num(key: &str, value: &str) -> Result<usize> {
@@ -294,13 +327,39 @@ mod tests {
             ("64k", 64 << 10),
             ("256m", 256 << 20),
             ("2g", 2 << 30),
-            ("0", 0),
         ] {
             c.apply("device_mem_budget", v).unwrap();
             assert_eq!(c.device_mem_budget, want, "value '{v}'");
         }
         assert!(c.apply("device_mem_budget", "lots").is_err());
         assert!(c.apply("device_mem_budget", "1.5m").is_err());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_device_budget_requires_residency_off() {
+        let mut c = SpammConfig::default();
+        c.apply("device_mem_budget", "0").unwrap();
+        assert!(c.validate().is_err(), "0 budget with residency enabled");
+        c.apply("residency_enabled", "false").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn session_keys_and_validation() {
+        let mut c = SpammConfig::default();
+        assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.store_budget, 1 << 30);
+        c.apply("queue_depth", "8").unwrap();
+        c.apply("store_budget", "64m").unwrap();
+        assert_eq!(c.queue_depth, 8);
+        assert_eq!(c.store_budget, 64 << 20);
+        c.validate().unwrap();
+        c.queue_depth = 0;
+        assert!(c.validate().is_err());
+        // store_budget 0 = unlimited is fine.
+        c.queue_depth = 1;
+        c.store_budget = 0;
         c.validate().unwrap();
     }
 

@@ -14,9 +14,13 @@ pub mod metrics;
 pub mod partition;
 pub mod pipeline;
 pub mod service;
+pub mod session;
 pub mod summa;
 
 pub use metrics::MultiDeviceReport;
 pub use pipeline::Coordinator;
-pub use service::{Approx, SpammService};
+pub use service::Approx;
+#[allow(deprecated)]
+pub use service::SpammService;
+pub use session::{Completion, OperandId, PlanId, Priority, SpammSession, StoreStats, Ticket};
 pub use summa::SummaCoordinator;

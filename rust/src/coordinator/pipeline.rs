@@ -43,7 +43,7 @@ use super::partition::{partition, DeviceWork};
 pub struct Coordinator {
     bundle: ArtifactBundle,
     cfg: SpammConfig,
-    caches: ExecCaches,
+    caches: Arc<ExecCaches>,
     /// One operand-tile pool per device (empty under `--no-residency`).
     /// Device memory is per-GPU, so pools are never shared across workers.
     pools: Vec<Arc<ResidencyPool>>,
@@ -63,18 +63,42 @@ struct DeviceResult {
 
 impl Coordinator {
     pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<Coordinator> {
+        Coordinator::with_shared(bundle, cfg, Arc::new(ExecCaches::new()), None)
+    }
+
+    /// Construct a coordinator over externally-owned caches and residency
+    /// pools.  The session front-end uses this: `prepare` runs on the
+    /// caller thread against the same [`ExecCaches`] the worker's
+    /// coordinator executes through, and the operand store pins/unpins
+    /// tiles in the same per-device pools.  `pools: None` builds fresh
+    /// pools from the config (what [`Coordinator::new`] does).
+    pub fn with_shared(
+        bundle: &ArtifactBundle,
+        cfg: SpammConfig,
+        caches: Arc<ExecCaches>,
+        pools: Option<Vec<Arc<ResidencyPool>>>,
+    ) -> Result<Coordinator> {
         cfg.validate()?;
-        let pools = if cfg.residency_enabled {
+        let pools = if !cfg.residency_enabled {
+            Vec::new()
+        } else if let Some(p) = pools {
+            if p.len() != cfg.devices {
+                return Err(Error::Coordinator(format!(
+                    "{} residency pools for {} devices",
+                    p.len(),
+                    cfg.devices
+                )));
+            }
+            p
+        } else {
             (0..cfg.devices)
                 .map(|_| Arc::new(ResidencyPool::new(cfg.device_mem_budget)))
                 .collect()
-        } else {
-            Vec::new()
         };
         Ok(Coordinator {
             bundle: bundle.clone(),
             cfg,
-            caches: ExecCaches::new(),
+            caches,
             pools,
         })
     }
@@ -83,12 +107,19 @@ impl Coordinator {
         &self.cfg
     }
 
+    pub fn bundle(&self) -> &ArtifactBundle {
+        &self.bundle
+    }
+
     /// The coordinator's norm/schedule caches (hit/miss inspection).
     pub fn caches(&self) -> &ExecCaches {
         &self.caches
     }
 
     /// Per-device residency pools (empty under `--no-residency`).
+    /// Operand-level pin/unpin lives on the pools themselves
+    /// ([`ResidencyPool::pin_operand`]); the session front-end drives it
+    /// directly from its operand store.
     pub fn residency_pools(&self) -> &[Arc<ResidencyPool>] {
         &self.pools
     }
@@ -146,6 +177,90 @@ impl Coordinator {
             fa = fa.or_else(|| Some(fingerprint(&pa)));
             fb = fb.or_else(|| Some(fingerprint(&pb)));
         }
+        self.run_scheduled(&pa, &pb, fa, fb, sched, front, a.rows(), b.cols(), None)
+    }
+
+    /// Execute a *prepared* multiply: operands already padded and
+    /// fingerprinted (registered in a session's operand store) and the
+    /// compacted schedule already built and pinned by `prepare` — the
+    /// get-norm and scheduling phases are skipped entirely.
+    pub fn multiply_prepared(
+        &self,
+        pa: &PaddedMatrix,
+        pb: &PaddedMatrix,
+        fa: Fingerprint,
+        fb: Fingerprint,
+        sched: &Schedule,
+    ) -> Result<MultiDeviceReport> {
+        self.multiply_prepared_on(None, pa, pb, fa, fb, sched)
+    }
+
+    /// [`Coordinator::multiply_prepared`] with an optional long-lived
+    /// runtime (session worker, `devices == 1` only): compiled executables
+    /// persist across requests, so warm requests also skip the per-call
+    /// compile/warm-up a fresh runtime pays.
+    pub fn multiply_prepared_on(
+        &self,
+        resident: Option<&Runtime>,
+        pa: &PaddedMatrix,
+        pb: &PaddedMatrix,
+        fa: Fingerprint,
+        fb: Fingerprint,
+        sched: &Schedule,
+    ) -> Result<MultiDeviceReport> {
+        if pa.logical_cols != pb.logical_rows {
+            return Err(Error::Shape(format!(
+                "prepared multiply: inner dimensions disagree: A is {}x{}, B is {}x{}",
+                pa.logical_rows, pa.logical_cols, pb.logical_rows, pb.logical_cols
+            )));
+        }
+        if sched.tile_rows != pa.tile_rows()
+            || sched.tile_k != pa.tile_cols()
+            || sched.tile_cols != pb.tile_cols()
+        {
+            return Err(Error::Shape(format!(
+                "prepared multiply: schedule grid {}x{}x{} does not match operands \
+                 ({}x{} · {}x{} tiles)",
+                sched.tile_rows,
+                sched.tile_k,
+                sched.tile_cols,
+                pa.tile_rows(),
+                pa.tile_cols(),
+                pb.tile_rows(),
+                pb.tile_cols()
+            )));
+        }
+        self.run_scheduled(
+            pa,
+            pb,
+            Some(fa),
+            Some(fb),
+            sched,
+            MultiplyStats::default(),
+            pa.logical_rows,
+            pb.logical_cols,
+            resident,
+        )
+    }
+
+    /// Phase 2 (Alg. 4 lines 10–11): partition the schedule's output
+    /// tiles over devices and run the per-device pipelines.  Shared by the
+    /// full multiply (front phases just computed) and the prepared path
+    /// (front phases skipped).  `resident` reuses a caller-owned runtime
+    /// for the single-device case instead of building one per call.
+    #[allow(clippy::too_many_arguments)]
+    fn run_scheduled(
+        &self,
+        pa: &PaddedMatrix,
+        pb: &PaddedMatrix,
+        fa: Option<Fingerprint>,
+        fb: Option<Fingerprint>,
+        sched: &Schedule,
+        front: MultiplyStats,
+        out_rows: usize,
+        out_cols: usize,
+        resident: Option<&Runtime>,
+    ) -> Result<MultiDeviceReport> {
         let work = partition(sched, self.cfg.devices, self.cfg.balance, self.cfg.pipeline_batches);
 
         let device_load: Vec<usize> = work
@@ -163,25 +278,71 @@ impl Coordinator {
         // Phase 2 (lines 10–11): per-device pipelines.
         let mut results: Vec<Option<DeviceResult>> = Vec::new();
         let mut wall_secs = 0.0f64;
-        if self.cfg.sequential_devices {
-            // Modeled-device mode: run pipelines back-to-back so each busy
-            // clock is contention-free (see SpammConfig::sequential_devices).
+        if let Some(rt) = resident {
+            // Serving mode: the caller (a session worker) owns one
+            // long-lived runtime whose compiled executables persist across
+            // requests — only legal single-device, since a runtime cannot
+            // cross threads.
+            if self.cfg.devices != 1 {
+                return Err(Error::Coordinator(
+                    "resident runtime execution requires devices == 1".into(),
+                ));
+            }
             let solo = Barrier::new(1);
             let t0 = Instant::now();
             for w in &work {
                 results.push(Some(run_device(
-                    &self.bundle,
+                    rt,
                     &self.cfg,
                     self.pool_of(w.device),
-                    Operand::new(&pa, fa),
-                    Operand::new(&pb, fb),
+                    Operand::new(pa, fa),
+                    Operand::new(pb, fb),
                     sched,
                     w,
                     &solo,
                 )?));
             }
             wall_secs = t0.elapsed().as_secs_f64();
-            return self.finish(a, b, sched, device_load, imbalance, results, wall_secs, front);
+            return self.finish(
+                out_rows,
+                out_cols,
+                sched,
+                device_load,
+                imbalance,
+                results,
+                wall_secs,
+                front,
+            );
+        }
+        if self.cfg.sequential_devices {
+            // Modeled-device mode: run pipelines back-to-back so each busy
+            // clock is contention-free (see SpammConfig::sequential_devices).
+            let solo = Barrier::new(1);
+            let t0 = Instant::now();
+            for w in &work {
+                let rt = Runtime::new(&self.bundle)?;
+                results.push(Some(run_device(
+                    &rt,
+                    &self.cfg,
+                    self.pool_of(w.device),
+                    Operand::new(pa, fa),
+                    Operand::new(pb, fb),
+                    sched,
+                    w,
+                    &solo,
+                )?));
+            }
+            wall_secs = t0.elapsed().as_secs_f64();
+            return self.finish(
+                out_rows,
+                out_cols,
+                sched,
+                device_load,
+                imbalance,
+                results,
+                wall_secs,
+                front,
+            );
         }
         let barrier = Barrier::new(self.cfg.devices + 1);
         std::thread::scope(|scope| -> Result<()> {
@@ -191,10 +352,10 @@ impl Coordinator {
                 let bundle = &self.bundle;
                 let cfg = &self.cfg;
                 let pool = self.pool_of(w.device);
-                let (pa, pb) = (&pa, &pb);
                 handles.push(scope.spawn(move || -> Result<DeviceResult> {
+                    let rt = Runtime::new(bundle)?;
                     run_device(
-                        bundle,
+                        &rt,
                         cfg,
                         pool,
                         Operand::new(pa, fa),
@@ -219,7 +380,16 @@ impl Coordinator {
             results = collected;
             Ok(())
         })?;
-        self.finish(a, b, sched, device_load, imbalance, results, wall_secs, front)
+        self.finish(
+            out_rows,
+            out_cols,
+            sched,
+            device_load,
+            imbalance,
+            results,
+            wall_secs,
+            front,
+        )
     }
 
     /// Merge device results into the final report (each output tile has
@@ -227,8 +397,8 @@ impl Coordinator {
     #[allow(clippy::too_many_arguments)]
     fn finish(
         &self,
-        a: &Matrix,
-        b: &Matrix,
+        out_rows: usize,
+        out_cols: usize,
         sched: &Schedule,
         device_load: Vec<usize>,
         imbalance: f64,
@@ -237,7 +407,7 @@ impl Coordinator {
         front: MultiplyStats,
     ) -> Result<MultiDeviceReport> {
         let lonum = self.cfg.lonum;
-        let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), lonum);
+        let mut pc = PaddedMatrix::new(&Matrix::zeros(out_rows, out_cols), lonum);
         let mut device_busy = vec![0.0; self.cfg.devices];
         let mut compile_secs = vec![0.0; self.cfg.devices];
         let mut device_transfer_secs = vec![0.0; self.cfg.devices];
@@ -308,9 +478,13 @@ impl Coordinator {
 /// P tile batches through one gather ∥ tile-GEMM ∥ scatter pipeline (the
 /// per-device transfer queue keeps uploading the next batch's tiles while
 /// this batch computes — no per-batch stream-level sync).
+///
+/// The runtime is caller-owned: per-multiply workers build a fresh one,
+/// the session's resident worker reuses one across requests (warm-up is a
+/// no-op once its executables are compiled).
 #[allow(clippy::too_many_arguments)]
 fn run_device(
-    bundle: &ArtifactBundle,
+    rt: &Runtime,
     cfg: &SpammConfig,
     pool: Option<&ResidencyPool>,
     pa: Operand<'_>,
@@ -319,10 +493,11 @@ fn run_device(
     work: &DeviceWork,
     barrier: &Barrier,
 ) -> Result<DeviceResult> {
-    let rt = Runtime::new(bundle)?;
+    let compile0 = rt.compile_secs();
     let precision = cfg.precision.as_str();
     // Warm up every tile-GEMM bucket this device may use.
-    let buckets: Vec<String> = bundle
+    let buckets: Vec<String> = rt
+        .bundle()
         .names()
         .filter(|n| {
             n.starts_with(&format!("tilegemm_l{}_", cfg.lonum)) && n.ends_with(precision)
@@ -342,14 +517,15 @@ fn run_device(
     let batches: Vec<&[(usize, usize)]> =
         work.tile_batches.iter().map(|b| b.as_slice()).collect();
     let products_done =
-        execute_batches(&rt, cfg, pool, pa, pb, &mut sink, sched, &batches, &mut stats)?;
+        execute_batches(rt, cfg, pool, pa, pb, &mut sink, sched, &batches, &mut stats)?;
     let busy = t0.elapsed().as_secs_f64();
 
     Ok(DeviceResult {
         device: work.device,
         tiles: sink.into_tiles(),
         busy_secs: busy,
-        compile_secs: rt.compile_secs(),
+        // Compile delta of *this* call: zero on a warm resident runtime.
+        compile_secs: rt.compile_secs() - compile0,
         products: products_done,
         stats,
     })

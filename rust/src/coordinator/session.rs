@@ -1,0 +1,1222 @@
+//! Session front-end: the serving shape of the library.
+//!
+//! The paper's win is *reuse* — normmaps, compacted schedules, and
+//! device-resident operand tiles amortized across repeated multiplies —
+//! but a one-shot `multiply(&a, &b, τ)` API rediscovers all of it per
+//! call.  [`SpammSession`] encodes the split the serving workload wants:
+//!
+//! * **register** — [`SpammSession::put`] stores an operand once and
+//!   returns an [`OperandId`].  The store deduplicates by content
+//!   fingerprint (two `put`s of identical data share one entry), is
+//!   refcounted ([`SpammSession::release`]), and evicts released
+//!   operands LRU-first under a byte budget (`store_budget`).  Operands
+//!   referenced by prepared plans are pinned: never evicted.
+//! * **prepare** — [`SpammSession::prepare`] resolves τ (running the
+//!   §3.5.2 tuner once for valid-ratio targets), builds the compacted
+//!   schedule through the shared [`ExecCaches`], pins it in the returned
+//!   plan, records the expected shapes, and pins the operands' tiles in
+//!   the device residency pools.  All host-side: no device round-trip.
+//! * **execute** — [`SpammSession::submit`] enqueues a prepared plan
+//!   (priority classes, bounded admission queue) and returns a
+//!   [`Ticket`].  A background worker thread owns the [`Coordinator`]
+//!   (the non-`Send` PJRT runtime never crosses threads) plus — single
+//!   device — one *resident* runtime whose compiled executables persist
+//!   across requests.  Completions are retrieved out of order via
+//!   [`SpammSession::try_recv`] / [`SpammSession::wait`], each carrying
+//!   its per-job [`MultiplyStats`].
+//!
+//! A warm request therefore skips get-norm, scheduling, τ tuning,
+//! operand upload, *and* executable compilation — it pays for tile-GEMM
+//! on the surviving products and nothing else.
+
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SpammConfig;
+use crate::coordinator::pipeline::report_to_stats;
+use crate::coordinator::service::Approx;
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::matrix::tiling::PaddedMatrix;
+use crate::matrix::Matrix;
+use crate::runtime::residency::ResidencyPool;
+use crate::runtime::{ArtifactBundle, Runtime};
+use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
+use crate::spamm::executor::MultiplyStats;
+use crate::spamm::normmap::normmap;
+use crate::spamm::schedule::Schedule;
+use crate::spamm::tuner::{self, TuneParams};
+use crate::util::prng::Rng;
+
+/// Handle of a registered operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OperandId(u64);
+
+impl OperandId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Handle of a prepared multiply plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanId(u64);
+
+impl PlanId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Handle of a submitted job; redeem with [`SpammSession::wait`] or
+/// [`SpammSession::try_recv`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ticket(u64);
+
+impl Ticket {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Admission priority class.  Higher classes are dequeued first; within a
+/// class the queue is FIFO.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            _ => Err(Error::Config(format!(
+                "unknown priority '{s}' (low | normal | high)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// One finished job.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub ticket: Ticket,
+    pub plan: PlanId,
+    pub priority: Priority,
+    /// The (cropped) product matrix.
+    pub c: Matrix,
+    /// τ the plan executed with (tuned once at prepare time for
+    /// valid-ratio targets).
+    pub tau: f32,
+    pub valid_ratio: f64,
+    /// Seconds from submit to completion (queueing + compute).
+    pub latency_secs: f64,
+    /// Worker-side wall seconds of the multiply (includes compile only on
+    /// cold requests — a warm resident runtime has nothing to compile).
+    pub compute_secs: f64,
+    /// Modeled per-device busy seconds (time inside PJRT execute).
+    pub device_busy: Vec<f64>,
+    /// Per-job pipeline/cache/residency breakdown.
+    pub stats: MultiplyStats,
+}
+
+/// Monotonic operand-store counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Total `put` calls.
+    pub puts: u64,
+    /// `put`s answered by an existing entry (content dedup).
+    pub dedup_hits: u64,
+    /// Entries evicted under the byte budget.
+    pub evictions: u64,
+    /// Currently-held bytes (padded operand data).
+    pub resident_bytes: u64,
+    pub resident_operands: u64,
+}
+
+// ---------------------------------------------------------------------
+// Operand store
+// ---------------------------------------------------------------------
+
+struct OperandEntry {
+    padded: Arc<PaddedMatrix>,
+    fp: Fingerprint,
+    bytes: usize,
+    /// Live `put` acquisitions minus `release` calls.
+    refs: u32,
+    /// Prepared plans referencing this operand (never evicted while > 0).
+    pins: u32,
+    /// LRU stamp.
+    last_use: u64,
+}
+
+struct OperandStore {
+    entries: HashMap<u64, OperandEntry>,
+    by_fp: HashMap<Fingerprint, u64>,
+    bytes: usize,
+    /// Byte budget (`usize::MAX` = unlimited).
+    budget: usize,
+    clock: u64,
+    next_id: u64,
+    stats: StoreStats,
+}
+
+impl OperandStore {
+    fn new(budget_bytes: usize) -> OperandStore {
+        OperandStore {
+            entries: HashMap::new(),
+            by_fp: HashMap::new(),
+            bytes: 0,
+            budget: if budget_bytes == 0 {
+                usize::MAX
+            } else {
+                budget_bytes
+            },
+            clock: 0,
+            next_id: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    fn touch(&mut self, id: u64) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_use = clock;
+        }
+    }
+
+    /// Evict released, unpinned entries LRU-first until `incoming` fits
+    /// the budget.  Everything referenced stays — like the residency
+    /// pool, the store overflows rather than invalidating live handles.
+    /// An operand larger than the whole budget can never fit: it is
+    /// admitted in overflow without pointlessly flushing the warm cache.
+    fn evict_for(&mut self, incoming: usize) {
+        if incoming > self.budget {
+            return;
+        }
+        while self.bytes.saturating_add(incoming) > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refs == 0 && e.pins == 0)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { break };
+            if let Some(e) = self.entries.remove(&id) {
+                self.by_fp.remove(&e.fp);
+                self.bytes -= e.bytes;
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    fn put(&mut self, m: &Matrix, lonum: usize) -> OperandId {
+        self.stats.puts += 1;
+        let padded = PaddedMatrix::new(m, lonum);
+        let fp = fingerprint(&padded);
+        if let Some(&id) = self.by_fp.get(&fp) {
+            self.stats.dedup_hits += 1;
+            if let Some(e) = self.entries.get_mut(&id) {
+                e.refs += 1;
+            }
+            self.touch(id);
+            return OperandId(id);
+        }
+        let bytes = padded.inner.data().len() * std::mem::size_of::<f32>();
+        self.evict_for(bytes);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.clock += 1;
+        self.entries.insert(
+            id,
+            OperandEntry {
+                padded: Arc::new(padded),
+                fp,
+                bytes,
+                refs: 1,
+                pins: 0,
+                last_use: self.clock,
+            },
+        );
+        self.by_fp.insert(fp, id);
+        self.bytes += bytes;
+        OperandId(id)
+    }
+
+    fn get(&mut self, id: OperandId) -> Result<(Arc<PaddedMatrix>, Fingerprint)> {
+        self.touch(id.0);
+        self.entries
+            .get(&id.0)
+            .map(|e| (e.padded.clone(), e.fp))
+            .ok_or_else(|| {
+                Error::Session(format!("operand {} not registered (released or evicted)", id.0))
+            })
+    }
+
+    fn release(&mut self, id: OperandId) -> Result<()> {
+        let e = self
+            .entries
+            .get_mut(&id.0)
+            .ok_or_else(|| Error::Session(format!("operand {} not registered", id.0)))?;
+        if e.refs == 0 {
+            return Err(Error::Session(format!("operand {} already released", id.0)));
+        }
+        e.refs -= 1;
+        // A fully-released entry stays cached (a later `put` of the same
+        // content hits it) until budget pressure evicts it.
+        self.evict_for(0);
+        Ok(())
+    }
+
+    fn pin(&mut self, id: OperandId, on: bool) {
+        if let Some(e) = self.entries.get_mut(&id.0) {
+            if on {
+                e.pins += 1;
+            } else {
+                e.pins = e.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    fn stats(&self) -> StoreStats {
+        let mut s = self.stats;
+        s.resident_bytes = self.bytes as u64;
+        s.resident_operands = self.entries.len() as u64;
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plans
+// ---------------------------------------------------------------------
+
+/// Content key of a plan: which operands at which approximation level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum ApproxKey {
+    Tau(u32),
+    Ratio(u64),
+}
+
+fn approx_key(a: Approx) -> ApproxKey {
+    match a {
+        Approx::Tau(t) => ApproxKey::Tau(t.to_bits()),
+        Approx::ValidRatio(r) => ApproxKey::Ratio(r.to_bits()),
+    }
+}
+
+struct Plan {
+    id: u64,
+    a: OperandId,
+    b: OperandId,
+    /// The padded operands themselves: a queued job is self-contained,
+    /// so releasing the plan (or even evicting the store entries) can
+    /// never fail a job that was already admitted.
+    pa: Arc<PaddedMatrix>,
+    pb: Arc<PaddedMatrix>,
+    fa: Fingerprint,
+    fb: Fingerprint,
+    tau: f32,
+    /// The compacted schedule, pinned for the plan's lifetime (cache
+    /// eviction cannot un-prepare a plan).
+    schedule: Arc<Schedule>,
+    /// Expected output shape.
+    rows: usize,
+    cols: usize,
+    dedup: (OperandId, OperandId, ApproxKey),
+    /// One-time analysis cost (normmaps, τ tuning, schedule compaction)
+    /// paid at `prepare`.  Charged to the *first* job that executes the
+    /// plan, so per-request `MultiplyStats` honestly show the cold
+    /// request paying the front phases and warm requests skipping them.
+    prepare_secs: f64,
+    /// Front-phase breakdown (norm/schedule timings + cache counters)
+    /// recorded at `prepare`, folded into the cold job's stats.
+    front: MultiplyStats,
+    /// Whether a job has already been charged the prepare cost.
+    cold_charged: std::sync::atomic::AtomicBool,
+}
+
+/// A prepared plan plus its handle refcount: `prepare` returning an
+/// existing plan hands out another reference, so one holder's
+/// `release_plan` cannot invalidate another's handle.
+struct PlanEntry {
+    plan: Arc<Plan>,
+    refs: u32,
+}
+
+#[derive(Default)]
+struct PlanTable {
+    plans: HashMap<u64, PlanEntry>,
+    dedup: HashMap<(OperandId, OperandId, ApproxKey), u64>,
+    next_id: u64,
+}
+
+// ---------------------------------------------------------------------
+// Queue / completions
+// ---------------------------------------------------------------------
+
+struct QueuedJob {
+    priority: Priority,
+    /// Admission order; FIFO tie-break within a priority class.
+    seq: u64,
+    ticket: u64,
+    plan: Arc<Plan>,
+    submitted: Instant,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedJob {}
+
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher priority first, then earlier seq.
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct QueueState {
+    heap: BinaryHeap<QueuedJob>,
+    closed: bool,
+    /// Jobs popped by the worker but not yet completed.
+    inflight: usize,
+}
+
+type JobOutcome = Result<Completion>;
+
+struct DoneState {
+    map: HashMap<u64, JobOutcome>,
+    /// Tickets submitted but not yet redeemed — lets `wait` distinguish
+    /// "still coming" from "unknown or already received" without
+    /// guessing from queue emptiness.
+    outstanding: HashSet<u64>,
+    /// The worker thread has exited (graceful close or death); waiters
+    /// must not block on tickets that can never complete.
+    dead: bool,
+}
+
+struct Shared {
+    cfg: SpammConfig,
+    caches: Arc<ExecCaches>,
+    pools: Vec<Arc<ResidencyPool>>,
+    store: Mutex<OperandStore>,
+    plans: Mutex<PlanTable>,
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    done: Mutex<DoneState>,
+    done_cv: Condvar,
+}
+
+/// Marks the worker dead on *any* exit path (including a panic) so
+/// session-side waiters wake up instead of hanging.
+struct DeadFlag(Arc<Shared>);
+
+impl Drop for DeadFlag {
+    fn drop(&mut self) {
+        self.0.done.lock().unwrap().dead = true;
+        self.0.done_cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session
+// ---------------------------------------------------------------------
+
+/// Registered-operand, prepared-plan, async-ticketed SpAMM serving
+/// front-end (see module docs for the lifecycle).
+pub struct SpammSession {
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_ticket: AtomicU64,
+    next_seq: AtomicU64,
+}
+
+impl SpammSession {
+    pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<SpammSession> {
+        cfg.validate()?;
+        let caches = Arc::new(ExecCaches::new());
+        let pools: Vec<Arc<ResidencyPool>> = if cfg.residency_enabled {
+            (0..cfg.devices)
+                .map(|_| Arc::new(ResidencyPool::new(cfg.device_mem_budget)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // The coordinator is constructed here (errors surface to the
+        // caller) and moved into the worker thread, which it never
+        // leaves: the non-`Send` PJRT runtimes it builds stay put.
+        let shared_pools = (!pools.is_empty()).then(|| pools.clone());
+        let coord = Coordinator::with_shared(bundle, cfg.clone(), caches.clone(), shared_pools)?;
+        let store_budget = cfg.store_budget;
+        let shared = Arc::new(Shared {
+            cfg,
+            caches,
+            pools,
+            store: Mutex::new(OperandStore::new(store_budget)),
+            plans: Mutex::new(PlanTable::default()),
+            queue: Mutex::new(QueueState {
+                heap: BinaryHeap::new(),
+                closed: false,
+                inflight: 0,
+            }),
+            queue_cv: Condvar::new(),
+            done: Mutex::new(DoneState {
+                map: HashMap::new(),
+                outstanding: HashSet::new(),
+                dead: false,
+            }),
+            done_cv: Condvar::new(),
+        });
+        let worker_shared = shared.clone();
+        let worker = std::thread::Builder::new()
+            .name("spamm-session".into())
+            .spawn(move || worker_loop(coord, worker_shared))?;
+        Ok(SpammSession {
+            shared,
+            worker: Some(worker),
+            next_ticket: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &SpammConfig {
+        &self.shared.cfg
+    }
+
+    /// The shared norm/schedule caches (hit/miss inspection).
+    pub fn caches(&self) -> &ExecCaches {
+        &self.shared.caches
+    }
+
+    /// The per-device residency pools (empty under `--no-residency`).
+    pub fn residency_pools(&self) -> &[Arc<ResidencyPool>] {
+        &self.shared.pools
+    }
+
+    // -- register ------------------------------------------------------
+
+    /// Register an operand; content-identical `put`s return the same
+    /// handle (and bump its refcount).
+    pub fn put(&self, m: &Matrix) -> Result<OperandId> {
+        if m.rows() == 0 || m.cols() == 0 {
+            return Err(Error::Shape("put: empty operand".into()));
+        }
+        Ok(self.shared.store.lock().unwrap().put(m, self.shared.cfg.lonum))
+    }
+
+    /// Drop one reference to a registered operand.  The entry stays
+    /// cached for future `put`s of the same content until the store
+    /// budget evicts it; operands pinned by prepared plans are never
+    /// evicted.
+    pub fn release(&self, id: OperandId) -> Result<()> {
+        self.shared.store.lock().unwrap().release(id)
+    }
+
+    /// Operand-store counters.
+    pub fn store_stats(&self) -> StoreStats {
+        self.shared.store.lock().unwrap().stats()
+    }
+
+    // -- prepare -------------------------------------------------------
+
+    /// Prepare a multiply: resolve τ (tuner for valid-ratio targets),
+    /// build + pin the compacted schedule, record expected shapes, pin
+    /// the operands (store + device residency pools).  Identical
+    /// `(a, b, approx)` triples return the same plan.
+    pub fn prepare(&self, a: OperandId, b: OperandId, approx: Approx) -> Result<PlanId> {
+        approx.validate()?;
+        let key = (a, b, approx_key(approx));
+        {
+            let mut plans = self.shared.plans.lock().unwrap();
+            if let Some(&id) = plans.dedup.get(&key) {
+                if let Some(e) = plans.plans.get_mut(&id) {
+                    e.refs += 1;
+                }
+                return Ok(PlanId(id));
+            }
+        }
+        let (pa, fa, pb, fb) = {
+            let mut store = self.shared.store.lock().unwrap();
+            let (pa, fa) = store.get(a)?;
+            let (pb, fb) = store.get(b)?;
+            (pa, fa, pb, fb)
+        };
+        if pa.logical_cols != pb.logical_rows {
+            return Err(Error::Shape(format!(
+                "prepare: inner dimensions disagree: A is {}x{}, B is {}x{}",
+                pa.logical_rows, pa.logical_cols, pb.logical_rows, pb.logical_cols
+            )));
+        }
+        // Host-side analysis — deliberately outside the plan-table lock so
+        // a slow cold prepare cannot stall submits of unrelated warm
+        // plans.  Normmaps go through the shared caches keyed on the
+        // store's fingerprints (no re-hash); the schedule is keyed on
+        // (fa, fb, τ).  `--no-cache` computes without memoizing either.
+        let t_prepare = Instant::now();
+        let mut front = MultiplyStats::default();
+        let t = Instant::now();
+        let (na, nb) = if self.shared.cfg.cache_enabled {
+            (
+                self.shared.caches.normmap_keyed(fa, &mut front, || Ok(normmap(&pa)))?,
+                self.shared.caches.normmap_keyed(fb, &mut front, || Ok(normmap(&pb)))?,
+            )
+        } else {
+            (Arc::new(normmap(&pa)), Arc::new(normmap(&pb)))
+        };
+        let tau = match approx {
+            Approx::Tau(t) => t,
+            Approx::ValidRatio(r) => {
+                tuner::tune_tau(&na, &nb, r, TuneParams::default())?.tau
+            }
+        };
+        // Norm phase of the plan's front stats spans normmaps + τ
+        // resolution (MultiplyStats has no separate tuner clock).
+        front.norm_secs = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let schedule = if self.shared.cfg.cache_enabled {
+            self.shared
+                .caches
+                .schedule_via(Some(fa), Some(fb), tau, &na, &nb, &mut front)?
+        } else {
+            Arc::new(Schedule::build(&na, &nb, tau)?)
+        };
+        front.schedule_secs = t.elapsed().as_secs_f64();
+        let prepare_secs = t_prepare.elapsed().as_secs_f64();
+        // Double-checked insert: a concurrent prepare of the same triple
+        // may have won while we computed — take a reference on its plan
+        // and drop ours (no pins were taken yet).
+        let mut plans = self.shared.plans.lock().unwrap();
+        if let Some(&id) = plans.dedup.get(&key) {
+            if let Some(e) = plans.plans.get_mut(&id) {
+                e.refs += 1;
+            }
+            return Ok(PlanId(id));
+        }
+        {
+            let mut store = self.shared.store.lock().unwrap();
+            store.pin(a, true);
+            store.pin(b, true);
+        }
+        for p in &self.shared.pools {
+            p.pin_operand(fa);
+            p.pin_operand(fb);
+        }
+        let id = plans.next_id;
+        plans.next_id += 1;
+        plans.plans.insert(
+            id,
+            PlanEntry {
+                plan: Arc::new(Plan {
+                    id,
+                    a,
+                    b,
+                    rows: pa.logical_rows,
+                    cols: pb.logical_cols,
+                    pa,
+                    pb,
+                    fa,
+                    fb,
+                    tau,
+                    schedule,
+                    dedup: key,
+                    prepare_secs,
+                    front,
+                    cold_charged: std::sync::atomic::AtomicBool::new(false),
+                }),
+                refs: 1,
+            },
+        );
+        plans.dedup.insert(key, id);
+        Ok(PlanId(id))
+    }
+
+    /// The τ a prepared plan resolved to, and its expected output shape.
+    pub fn plan_info(&self, id: PlanId) -> Result<(f32, usize, usize)> {
+        let plans = self.shared.plans.lock().unwrap();
+        plans
+            .plans
+            .get(&id.0)
+            .map(|e| (e.plan.tau, e.plan.rows, e.plan.cols))
+            .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))
+    }
+
+    /// Drop one reference to a prepared plan.  Plan handles are
+    /// refcounted (`prepare` of an identical triple returns another
+    /// reference to the same plan); the plan itself — and its operand
+    /// pins in the store and residency pools — goes away when the last
+    /// reference is released.  In-flight jobs always complete: they hold
+    /// the plan's data independently.
+    pub fn release_plan(&self, id: PlanId) -> Result<()> {
+        let plan = {
+            let mut plans = self.shared.plans.lock().unwrap();
+            let entry = plans
+                .plans
+                .get_mut(&id.0)
+                .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))?;
+            entry.refs -= 1;
+            if entry.refs > 0 {
+                return Ok(());
+            }
+            let entry = plans.plans.remove(&id.0).expect("entry exists under the lock");
+            plans.dedup.remove(&entry.plan.dedup);
+            entry.plan
+        };
+        {
+            let mut store = self.shared.store.lock().unwrap();
+            store.pin(plan.a, false);
+            store.pin(plan.b, false);
+        }
+        for p in &self.shared.pools {
+            p.unpin_operand(plan.fa);
+            p.unpin_operand(plan.fb);
+        }
+        Ok(())
+    }
+
+    // -- execute -------------------------------------------------------
+
+    /// Enqueue a prepared plan at [`Priority::Normal`].
+    pub fn submit(&self, plan: PlanId) -> Result<Ticket> {
+        self.submit_with(plan, Priority::Normal)
+    }
+
+    /// Enqueue a prepared plan at an explicit priority class.  Fails when
+    /// the admission queue is at `queue_depth`.
+    pub fn submit_with(&self, plan: PlanId, priority: Priority) -> Result<Ticket> {
+        let plan = {
+            let plans = self.shared.plans.lock().unwrap();
+            plans
+                .plans
+                .get(&plan.0)
+                .map(|e| e.plan.clone())
+                .ok_or_else(|| Error::Session(format!("plan {} not prepared", plan.0)))?
+        };
+        // Lock order is done → queue everywhere; `done` is held across
+        // the push so the ticket lands in `outstanding` atomically with
+        // its admission.
+        let mut d = self.shared.done.lock().unwrap();
+        if d.dead {
+            return Err(Error::Session("session is shut down".into()));
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closed {
+            return Err(Error::Session("session is shut down".into()));
+        }
+        if q.heap.len() >= self.shared.cfg.queue_depth {
+            return Err(Error::Session(format!(
+                "admission queue full ({} queued, depth {})",
+                q.heap.len(),
+                self.shared.cfg.queue_depth
+            )));
+        }
+        let ticket = self.next_ticket.fetch_add(1, AtomicOrdering::Relaxed);
+        let seq = self.next_seq.fetch_add(1, AtomicOrdering::Relaxed);
+        q.heap.push(QueuedJob {
+            priority,
+            seq,
+            ticket,
+            plan,
+            submitted: Instant::now(),
+        });
+        d.outstanding.insert(ticket);
+        drop(q);
+        drop(d);
+        self.shared.queue_cv.notify_all();
+        Ok(Ticket(ticket))
+    }
+
+    /// `prepare` + `submit` in one call (plans deduplicate, so repeated
+    /// identical requests share one warm plan).  Each call takes a plan
+    /// reference the session keeps until `release_plan`; fire-and-forget
+    /// callers simply let the session own the plan for its lifetime.
+    pub fn submit_once(&self, a: OperandId, b: OperandId, approx: Approx) -> Result<Ticket> {
+        let plan = self.prepare(a, b, approx)?;
+        self.submit(plan)
+    }
+
+    /// Jobs admitted but not yet completed (queued + in flight).
+    pub fn pending(&self) -> usize {
+        let q = self.shared.queue.lock().unwrap();
+        q.heap.len() + q.inflight
+    }
+
+    /// Completions ready to be received.
+    pub fn completed(&self) -> usize {
+        self.shared.done.lock().unwrap().map.len()
+    }
+
+    /// Non-blocking: any finished job, in no particular order (use
+    /// [`SpammSession::wait`] to redeem a specific ticket).  Completions
+    /// are retained until redeemed — a caller that submits and never
+    /// receives should drain here, or its results accumulate.  Each
+    /// completion is delivered exactly once, to whichever receiver takes
+    /// it first: don't race this against a `wait` on the same ticket.
+    pub fn try_recv(&self) -> Option<Result<Completion>> {
+        let mut d = self.shared.done.lock().unwrap();
+        let k = *d.map.keys().next()?;
+        d.outstanding.remove(&k);
+        d.map.remove(&k)
+    }
+
+    /// Block until `ticket`'s job completes and return it.  A ticket
+    /// that was never issued or was already redeemed errors immediately.
+    pub fn wait(&self, ticket: Ticket) -> Result<Completion> {
+        let mut d = self.shared.done.lock().unwrap();
+        loop {
+            if let Some(out) = d.map.remove(&ticket.0) {
+                d.outstanding.remove(&ticket.0);
+                return out;
+            }
+            if !d.outstanding.contains(&ticket.0) {
+                return Err(Error::Session(format!(
+                    "ticket {} is unknown or was already received",
+                    ticket.0
+                )));
+            }
+            if d.dead {
+                return Err(Error::Session(format!(
+                    "session worker terminated before ticket {} completed",
+                    ticket.0
+                )));
+            }
+            let (guard, _) = self
+                .shared
+                .done_cv
+                .wait_timeout(d, Duration::from_millis(50))
+                .unwrap();
+            d = guard;
+        }
+    }
+
+    /// Block until every admitted job has completed; returns the
+    /// completions in ticket order.  If any job errored, the first error
+    /// (by ticket) is returned and the successful completions stay
+    /// redeemable via `wait`/`try_recv`.
+    ///
+    /// Like `try_recv`, this consumes completions: each is delivered
+    /// exactly once, to whichever receiver takes it first — don't mix
+    /// `wait_all`/`try_recv` with a concurrent `wait` on a specific
+    /// ticket unless some other coordination decides who redeems it.
+    pub fn wait_all(&self) -> Result<Vec<Completion>> {
+        loop {
+            {
+                let q = self.shared.queue.lock().unwrap();
+                if q.heap.is_empty() && q.inflight == 0 {
+                    break;
+                }
+            }
+            let d = self.shared.done.lock().unwrap();
+            if d.dead {
+                return Err(Error::Session(
+                    "session worker terminated with jobs pending".into(),
+                ));
+            }
+            let _ = self
+                .shared
+                .done_cv
+                .wait_timeout(d, Duration::from_millis(50))
+                .unwrap();
+        }
+        let mut d = self.shared.done.lock().unwrap();
+        let mut tickets: Vec<u64> = d.map.keys().copied().collect();
+        tickets.sort_unstable();
+        // Surface the first error without consuming the successes — they
+        // stay in the done map for later wait/try_recv.
+        let bad = tickets
+            .iter()
+            .find(|t| matches!(d.map.get(t), Some(Err(_))))
+            .copied();
+        if let Some(bad) = bad {
+            d.outstanding.remove(&bad);
+            match d.map.remove(&bad) {
+                Some(Err(e)) => return Err(e),
+                _ => unreachable!("error outcome vanished under the lock"),
+            }
+        }
+        let mut out = Vec::with_capacity(tickets.len());
+        for t in tickets {
+            d.outstanding.remove(&t);
+            match d.map.remove(&t) {
+                Some(Ok(c)) => out.push(c),
+                Some(Err(_)) => unreachable!("first error was removed above"),
+                None => unreachable!("ticket key vanished under the lock"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for SpammSession {
+    /// Cancels still-queued jobs (their results could never be
+    /// received), lets the in-flight job finish, and joins the worker.
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.queue_cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------
+
+fn worker_loop(coord: Coordinator, shared: Arc<Shared>) {
+    let _dead = DeadFlag(shared.clone());
+    // Single device: one long-lived runtime whose compiled executables
+    // persist across requests.  Multi-device coordinators keep the
+    // per-multiply worker threads (a runtime cannot cross threads).
+    let resident = if coord.config().devices == 1 {
+        match Runtime::new(coord.bundle()) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                log::warn!(
+                    "session worker: resident runtime unavailable ({e}); \
+                     falling back to per-request runtimes (compile is re-paid per job)"
+                );
+                None
+            }
+        }
+    } else {
+        None
+    };
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // Close wins over backlog: a dropped session abandons its
+                // queued jobs (nobody can receive them) instead of
+                // executing the whole heap inside Drop.
+                if q.closed {
+                    q.heap.clear();
+                    break None;
+                }
+                if let Some(j) = q.heap.pop() {
+                    q.inflight += 1;
+                    break Some(j);
+                }
+                q = shared.queue_cv.wait(q).unwrap();
+            }
+        };
+        let Some(job) = job else { break };
+        let outcome = run_job(&coord, resident.as_ref(), &job);
+        {
+            let mut d = shared.done.lock().unwrap();
+            d.map.insert(job.ticket, outcome);
+        }
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.inflight -= 1;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+fn run_job(
+    coord: &Coordinator,
+    resident: Option<&Runtime>,
+    job: &QueuedJob,
+) -> Result<Completion> {
+    let plan = &job.plan;
+    let t0 = Instant::now();
+    let rep = coord.multiply_prepared_on(
+        resident,
+        &plan.pa,
+        &plan.pb,
+        plan.fa,
+        plan.fb,
+        &plan.schedule,
+    )?;
+    let mut compute = t0.elapsed().as_secs_f64();
+    let mut stats = report_to_stats(&rep);
+    // The plan's one-time analysis cost (normmaps, τ tuning, schedule
+    // compaction) is charged to the cold first job; warm jobs carry
+    // zeroed front phases — the reuse the session exists to expose.
+    if !plan.cold_charged.swap(true, AtomicOrdering::Relaxed) {
+        compute += plan.prepare_secs;
+        stats.norm_secs += plan.front.norm_secs;
+        stats.schedule_secs += plan.front.schedule_secs;
+        stats.norm_cache_hits += plan.front.norm_cache_hits;
+        stats.norm_cache_misses += plan.front.norm_cache_misses;
+        stats.schedule_cache_hits += plan.front.schedule_cache_hits;
+        stats.schedule_cache_misses += plan.front.schedule_cache_misses;
+    }
+    stats.total_secs = compute;
+    Ok(Completion {
+        ticket: Ticket(job.ticket),
+        plan: PlanId(plan.id),
+        priority: job.priority,
+        c: rep.c,
+        tau: plan.tau,
+        valid_ratio: rep.valid_ratio,
+        latency_secs: job.submitted.elapsed().as_secs_f64(),
+        compute_secs: compute,
+        device_busy: rep.device_busy,
+        stats,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Session-aware workload generator
+// ---------------------------------------------------------------------
+
+/// One request of a session trace: indices into the trace's operand
+/// pool, plus approximation and priority class.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRequest {
+    pub a: usize,
+    pub b: usize,
+    pub approx: Approx,
+    pub priority: Priority,
+}
+
+/// Session-aware workload: a pool of reusable operands plus a request
+/// stream referencing them.
+pub struct SessionTrace {
+    pub operands: Vec<Matrix>,
+    pub requests: Vec<TraceRequest>,
+}
+
+/// Generate a session workload with Zipf-distributed operand popularity
+/// (exponent `zipf_s`; higher = a few hot matrices dominate, the pattern
+/// behind model weights and Hamiltonian chains) and mixed priorities
+/// (~20% high, ~60% normal, ~20% low).  Requests on the same operand
+/// pair share the same approximation target, so they share one prepared
+/// plan.  Deterministic in `seed`.
+pub fn synthetic_session_trace(
+    requests: usize,
+    operands: usize,
+    n: usize,
+    zipf_s: f64,
+    seed: u64,
+) -> SessionTrace {
+    let operands = operands.max(1);
+    let mut rng = Rng::new(seed);
+    let pool: Vec<Matrix> = (0..operands)
+        .map(|i| {
+            let s = seed.wrapping_add(i as u64 * 131).wrapping_add(1);
+            if i % 2 == 0 {
+                Matrix::decay_algebraic(n, 0.1, 0.1, s)
+            } else {
+                Matrix::decay_exponential(n, 1.0, 0.9, s)
+            }
+        })
+        .collect();
+    let weights: Vec<f64> = (0..operands)
+        .map(|k| 1.0 / ((k + 1) as f64).powf(zipf_s))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let draw = |rng: &mut Rng| -> usize {
+        let u = rng.next_f32() as f64 * total;
+        let mut acc = 0.0;
+        for (k, w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return k;
+            }
+        }
+        operands - 1
+    };
+    let reqs: Vec<TraceRequest> = (0..requests)
+        .map(|_| {
+            let a = draw(&mut rng);
+            let b = draw(&mut rng);
+            // Per-pair approximation target: repeated (a, b) pairs share
+            // a plan, which is the reuse the session exists to exploit.
+            let pair = ((a as u64) << 32) | b as u64;
+            let mut pr = Rng::new(seed ^ pair.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let approx = if pr.next_f32() < 0.5 {
+                Approx::ValidRatio(pr.range_f32(0.05, 0.3) as f64)
+            } else {
+                Approx::Tau(pr.range_f32(1e-6, 1e-2))
+            };
+            let x = rng.next_f32();
+            let priority = if x < 0.2 {
+                Priority::High
+            } else if x < 0.8 {
+                Priority::Normal
+            } else {
+                Priority::Low
+            };
+            TraceRequest {
+                a,
+                b,
+                approx,
+                priority,
+            }
+        })
+        .collect();
+    SessionTrace {
+        operands: pool,
+        requests: reqs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_dedups_and_refcounts() {
+        let mut store = OperandStore::new(0);
+        let m = Matrix::randn(32, 32, 1);
+        let a = store.put(&m, 32);
+        // Same seed → bit-identical content, independently generated.
+        let b = store.put(&Matrix::randn(32, 32, 1), 32);
+        assert_eq!(a, b, "identical content must dedup to one entry");
+        let s = store.stats();
+        assert_eq!(s.puts, 2);
+        assert_eq!(s.dedup_hits, 1);
+        assert_eq!(s.resident_operands, 1);
+        store.release(a).unwrap();
+        // Still one live ref: the entry must survive even at budget 0...
+        assert!(store.get(a).is_ok());
+        store.release(a).unwrap();
+        assert!(store.release(a).is_err(), "double release");
+    }
+
+    #[test]
+    fn store_evicts_released_lru_under_budget() {
+        let m1 = Matrix::randn(32, 32, 1);
+        let m2 = Matrix::randn(32, 32, 2);
+        let m3 = Matrix::randn(32, 32, 3);
+        let bytes = 32 * 32 * 4;
+        let mut store = OperandStore::new(2 * bytes);
+        let a = store.put(&m1, 32);
+        let b = store.put(&m2, 32);
+        store.release(a).unwrap();
+        store.release(b).unwrap();
+        // Touch a so b is LRU, then insert m3: b must go.
+        store.get(a).unwrap();
+        let _c = store.put(&m3, 32);
+        assert!(store.get(a).is_ok());
+        assert!(store.get(b).is_err(), "LRU released entry evicted");
+        assert_eq!(store.stats().evictions, 1);
+    }
+
+    #[test]
+    fn store_never_evicts_referenced_or_pinned() {
+        let bytes = 32 * 32 * 4;
+        let mut store = OperandStore::new(bytes);
+        let a = store.put(&Matrix::randn(32, 32, 1), 32);
+        // Referenced: overflows instead of evicting.
+        let b = store.put(&Matrix::randn(32, 32, 2), 32);
+        assert!(store.get(a).is_ok());
+        assert!(store.get(b).is_ok());
+        // Released but pinned by a plan: still never evicted.
+        store.pin(a, true);
+        store.release(a).unwrap();
+        let _d = store.put(&Matrix::randn(32, 32, 4), 32);
+        assert!(store.get(a).is_ok(), "pinned operand evicted");
+    }
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        let zeros = Arc::new(PaddedMatrix::new(&Matrix::zeros(1, 1), 1));
+        let mk = |priority, seq| QueuedJob {
+            priority,
+            seq,
+            ticket: seq,
+            plan: Arc::new(Plan {
+                id: 0,
+                a: OperandId(0),
+                b: OperandId(0),
+                pa: zeros.clone(),
+                pb: zeros.clone(),
+                fa: Fingerprint(0, 0),
+                fb: Fingerprint(0, 0),
+                tau: 0.0,
+                schedule: Arc::new(Schedule {
+                    tile_rows: 0,
+                    tile_cols: 0,
+                    tile_k: 0,
+                    valid_k: Vec::new(),
+                }),
+                rows: 0,
+                cols: 0,
+                dedup: (OperandId(0), OperandId(0), ApproxKey::Tau(0)),
+                prepare_secs: 0.0,
+                front: MultiplyStats::default(),
+                cold_charged: std::sync::atomic::AtomicBool::new(false),
+            }),
+            submitted: Instant::now(),
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(Priority::Low, 0));
+        heap.push(mk(Priority::High, 1));
+        heap.push(mk(Priority::Normal, 2));
+        heap.push(mk(Priority::High, 3));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|j| j.seq)).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn zipf_trace_is_deterministic_and_skewed() {
+        let t1 = synthetic_session_trace(64, 8, 32, 1.2, 9);
+        let t2 = synthetic_session_trace(64, 8, 32, 1.2, 9);
+        assert_eq!(t1.operands.len(), 8);
+        assert_eq!(t1.requests.len(), 64);
+        for (r1, r2) in t1.requests.iter().zip(&t2.requests) {
+            assert_eq!((r1.a, r1.b), (r2.a, r2.b));
+        }
+        // Rank 0 must be the hottest operand by a clear margin.
+        let mut counts = vec![0usize; 8];
+        for r in &t1.requests {
+            counts[r.a] += 1;
+            counts[r.b] += 1;
+        }
+        assert!(counts[0] > counts[7], "zipf skew: {counts:?}");
+        // Same operand pair → same approximation (one shared plan).
+        let mut seen: HashMap<(usize, usize), ApproxKey> = HashMap::new();
+        for r in &t1.requests {
+            let k = approx_key(r.approx);
+            if let Some(&prev) = seen.get(&(r.a, r.b)) {
+                assert_eq!(prev, k);
+            } else {
+                seen.insert((r.a, r.b), k);
+            }
+        }
+        // Mixed priorities appear.
+        assert!(t1.requests.iter().any(|r| r.priority == Priority::High));
+        assert!(t1.requests.iter().any(|r| r.priority == Priority::Normal));
+    }
+
+    #[test]
+    fn priority_ordering_is_low_normal_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::parse("high").unwrap(), Priority::High);
+        assert!(Priority::parse("urgent").is_err());
+    }
+}

@@ -32,6 +32,10 @@ pub enum Error {
     /// closed unexpectedly).
     Coordinator(String),
 
+    /// Session front-end failure (admission rejected, unknown handle,
+    /// worker terminated).
+    Session(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -46,6 +50,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::TensorIo(m) => write!(f, "tensorio error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Session(m) => write!(f, "session error: {m}"),
             Error::Io(e) => e.fmt(f),
         }
     }

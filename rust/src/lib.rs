@@ -61,7 +61,49 @@
 //! [`coordinator::Coordinator`] (whose per-device workers share the same
 //! executor, each with its own residency pool) go through this path.
 //!
+//! ## Serving sessions
+//!
+//! The request-path API is [`coordinator::SpammSession`]: **register**
+//! operands once, **prepare** plans once, **execute** cheaply many
+//! times.  A session's operand store deduplicates by content
+//! fingerprint (refcounted, byte-budgeted LRU), `prepare` resolves τ
+//! (tuner for valid-ratio targets) and pins the compacted schedule, and
+//! a background worker — owning the coordinator plus, single-device, a
+//! long-lived runtime with persistent compiled executables — drains a
+//! priority queue asynchronously.  Warm requests skip get-norm,
+//! scheduling, τ tuning, operand upload, and compilation entirely.
+//! The old `SpammService` (submit whole matrices per call, blocking
+//! FIFO drain) is deprecated and now a thin shim over the session.
+//!
 //! ## Quick start
+//!
+//! The serving lifecycle — put → prepare → submit → wait:
+//!
+//! ```no_run
+//! use cuspamm::prelude::*;
+//!
+//! let bundle = ArtifactBundle::load("artifacts").unwrap();
+//! let session = SpammSession::new(&bundle, SpammConfig::default()).unwrap();
+//!
+//! // Register operands once (content-deduplicated, refcounted).
+//! let a = session.put(&Matrix::decay_algebraic(1024, 0.1, 0.1, 7)).unwrap();
+//! let b = session.put(&Matrix::decay_algebraic(1024, 0.1, 0.1, 8)).unwrap();
+//!
+//! // Prepare once: τ tuned for a 10% valid ratio, schedule compacted
+//! // and pinned, operand tiles pinned in the device pools.
+//! let plan = session.prepare(a, b, Approx::ValidRatio(0.10)).unwrap();
+//!
+//! // Execute many times — warm requests ride the caches and the
+//! // resident runtime.  Completions arrive out of order, by ticket.
+//! let tickets: Vec<Ticket> =
+//!     (0..8).map(|_| session.submit_with(plan, Priority::High).unwrap()).collect();
+//! for t in tickets {
+//!     let done = session.wait(t).unwrap();
+//!     println!("‖C‖_F = {} in {:.4}s", done.c.fnorm(), done.compute_secs);
+//! }
+//! ```
+//!
+//! For one-shot library use the [`spamm::SpammEngine`] remains:
 //!
 //! ```no_run
 //! use cuspamm::prelude::*;
@@ -93,7 +135,10 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::config::SpammConfig;
-    pub use crate::coordinator::{Coordinator, MultiDeviceReport};
+    pub use crate::coordinator::{
+        Approx, Completion, Coordinator, MultiDeviceReport, OperandId, PlanId, Priority,
+        SpammSession, Ticket,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::matrix::Matrix;
     pub use crate::runtime::{ArtifactBundle, Runtime};

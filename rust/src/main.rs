@@ -4,6 +4,9 @@
 //!   cuspamm run   --n 1024 --ratio 0.10   tuned SpAMM vs dense, with stats
 //!   cuspamm tune  --n 1024 --ratio 0.10   τ search only (§3.5.2)
 //!   cuspamm cnn   --tau 2.5 --layer conv2 case-study CNN accuracy probe
+//!   cuspamm serve --requests 64           session serving bench (Zipf-hot
+//!                                         operands, priorities; --smoke for
+//!                                         the CI warm-plan assertion)
 //!
 //! Global options: --artifacts <dir>, --devices, --precision, --balance,
 //! --config <file> (key = value overrides, see config::SpammConfig).
@@ -61,7 +64,7 @@ fn common(spec: Spec) -> Spec {
         .opt(
             "device-mem-budget",
             "256m",
-            "per-device resident-tile byte budget (k/m/g suffixes; 0 = unlimited)",
+            "per-device resident-tile byte budget (k/m/g suffixes; non-zero while residency is on)",
         )
         .opt("config", "", "optional config file (key = value)")
 }
@@ -113,8 +116,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  subcommands:\n  info   list the artifact bundle\n  run    \
                  tuned SpAMM vs dense baseline\n  tune   τ search for a valid \
                  ratio\n  cnn    case-study CNN accuracy probe\n  serve  \
-                 process a synthetic request trace with service stats\n\nUse \
-                 `cuspamm <cmd> --help` for options."
+                 session serving bench: registered operands, prepared plans, \
+                 priority queue\n\nUse `cuspamm <cmd> --help` for options."
             );
             Ok(())
         }
@@ -234,22 +237,214 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use cuspamm::coordinator::service::{synthetic_trace, SpammService};
-
     let spec = common(Spec::new(
         "cuspamm serve",
-        "drain a synthetic SpAMM request trace, report service stats",
+        "run a synthetic session workload (Zipf-hot registered operands, mixed \
+         priorities) through the SpammSession front-end and report serving stats",
     ))
-    .opt("requests", "8", "number of requests in the trace")
-    .opt("n", "512", "matrix size per request")
-    .opt("seed", "7", "trace seed");
+    .opt("requests", "24", "number of requests in the trace")
+    .opt("operands", "6", "registered operand pool size")
+    .opt("n", "256", "matrix size per operand")
+    .opt("zipf", "1.1", "Zipf exponent of operand popularity (higher = hotter head)")
+    .opt("ratio", "0.01", "valid-ratio target for the smoke bench plan")
+    .opt("seed", "7", "trace seed")
+    .opt("queue-depth", "64", "session admission-queue depth (defaults to the config's)")
+    .opt("store-budget", "1g", "operand-store byte budget (defaults to the config's)")
+    .flag(
+        "smoke",
+        "CI smoke bench: one registered operand, 8 repeated multiplies; asserts \
+         warm plans ≥2x cheaper than the cold request and bitwise identity with \
+         the one-shot coordinator path",
+    )
+    .flag("legacy", "drive the deprecated SpammService shim instead of the session");
     let a = spec.parse(args)?;
-    let cfg = build_config(&a)?;
-    let bundle = ArtifactBundle::load(a.get("artifacts"))?;
-    let mut svc = SpammService::new(&bundle, cfg)?;
-    for (ma, mb, approx) in
-        synthetic_trace(a.usize("requests")?, a.usize("n")?, a.usize("seed")? as u64)
-    {
+    let mut cfg = build_config(&a)?;
+    for (opt, key) in [("queue-depth", "queue_depth"), ("store-budget", "store_budget")] {
+        if a.provided(opt) {
+            cfg.apply(key, a.get(opt))?;
+        }
+    }
+    cfg.validate()?;
+    // The serve path is exercised in CI on every push, where no AOT
+    // bundle exists: fall back to the synthesized hostsim bundle unless
+    // the caller pointed at a real one.
+    let bundle = match ArtifactBundle::load(a.get("artifacts")) {
+        Ok(b) => b,
+        Err(e) if !a.provided("artifacts") => {
+            log::info!("no artifact bundle ({e}); using the offline hostsim bundle");
+            cuspamm::runtime::hostsim::find_or_test_bundle()?
+        }
+        Err(e) => return Err(e),
+    };
+    if a.flag("smoke") {
+        return serve_smoke(&bundle, cfg, a.f64("ratio")?);
+    }
+    if a.flag("legacy") {
+        return serve_legacy(
+            &bundle,
+            cfg,
+            a.usize("requests")?,
+            a.usize("n")?,
+            a.usize("seed")? as u64,
+        );
+    }
+    serve_session(
+        &bundle,
+        cfg,
+        a.usize("requests")?,
+        a.usize("operands")?,
+        a.usize("n")?,
+        a.f64("zipf")?,
+        a.usize("seed")? as u64,
+    )
+}
+
+/// The session serving bench: put a Zipf-hot operand pool, prepare plans
+/// per distinct (a, b, approx), submit with mixed priorities under the
+/// admission depth, and report cold-vs-warm per-plan compute.
+fn serve_session(
+    bundle: &ArtifactBundle,
+    cfg: SpammConfig,
+    requests: usize,
+    operands: usize,
+    n: usize,
+    zipf: f64,
+    seed: u64,
+) -> Result<()> {
+    use cuspamm::coordinator::session::synthetic_session_trace;
+    use cuspamm::coordinator::{Completion, SpammSession};
+    use cuspamm::util::stats::Summary;
+
+    let trace = synthetic_session_trace(requests, operands, n, zipf, seed);
+    let session = SpammSession::new(bundle, cfg)?;
+    let t0 = std::time::Instant::now();
+    let ids = trace
+        .operands
+        .iter()
+        .map(|m| session.put(m))
+        .collect::<Result<Vec<_>>>()?;
+    let depth = session.config().queue_depth;
+    let mut completions: Vec<Completion> = Vec::with_capacity(requests);
+    for r in &trace.requests {
+        // Backpressure: drain a completion when the admission window is
+        // full instead of letting submit fail.
+        while session.pending() >= depth {
+            match session.try_recv() {
+                Some(done) => completions.push(done?),
+                None => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+        let plan = session.prepare(ids[r.a], ids[r.b], r.approx)?;
+        session.submit_with(plan, r.priority)?;
+    }
+    completions.extend(session.wait_all()?);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Cold-vs-warm: per plan, the first job pays compile/τ/upload; the
+    // rest ride the caches, the resident runtime, and the tile pools.
+    let mut by_plan: std::collections::BTreeMap<u64, Vec<&Completion>> =
+        std::collections::BTreeMap::new();
+    for c in &completions {
+        by_plan.entry(c.plan.raw()).or_default().push(c);
+    }
+    let mut cold = Vec::new();
+    let mut warm = Vec::new();
+    for jobs in by_plan.values() {
+        // The cold job is whichever executed first and was charged the
+        // plan's prepare phases (under priorities that is not always the
+        // lowest ticket) — it is the one carrying nonzero front clocks.
+        let charged = jobs
+            .iter()
+            .position(|c| c.stats.norm_secs + c.stats.schedule_secs > 0.0)
+            .unwrap_or(0);
+        for (i, c) in jobs.iter().enumerate() {
+            if i == charged {
+                cold.push(c.compute_secs);
+            } else {
+                warm.push(c.compute_secs);
+            }
+        }
+    }
+    println!(
+        "completed {} requests over {} operands ({} distinct plans) in {:.3}s — {:.2} req/s",
+        completions.len(),
+        trace.operands.len(),
+        by_plan.len(),
+        wall,
+        completions.len() as f64 / wall.max(1e-12)
+    );
+    for pr in ["high", "normal", "low"] {
+        let lat: Vec<f64> = completions
+            .iter()
+            .filter(|c| c.priority.as_str() == pr)
+            .map(|c| c.latency_secs)
+            .collect();
+        if !lat.is_empty() {
+            let s = Summary::from(&lat);
+            println!(
+                "  {pr:6}: {:3} jobs, latency p50 {:.4}s p95 {:.4}s",
+                lat.len(),
+                s.median,
+                s.p95
+            );
+        }
+    }
+    if !cold.is_empty() && !warm.is_empty() {
+        let cold_mean = cold.iter().sum::<f64>() / cold.len() as f64;
+        let warm_mean = warm.iter().sum::<f64>() / warm.len() as f64;
+        println!(
+            "  compute: cold (first of plan) mean {:.4}s over {} plans, warm mean {:.4}s \
+             over {} jobs — {:.1}x",
+            cold_mean,
+            cold.len(),
+            warm_mean,
+            warm.len(),
+            cold_mean / warm_mean.max(1e-12)
+        );
+    }
+    let store = session.store_stats();
+    println!(
+        "  store: {} puts ({} dedup hits), {} operands / {} KiB resident, {} evicted",
+        store.puts,
+        store.dedup_hits,
+        store.resident_operands,
+        store.resident_bytes / 1024,
+        store.evictions
+    );
+    println!(
+        "  caches: norm {} hit / {} miss, schedule {} hit / {} miss",
+        session.caches().norms.hits(),
+        session.caches().norms.misses(),
+        session.caches().schedules.hits(),
+        session.caches().schedules.misses()
+    );
+    for (d, pool) in session.residency_pools().iter().enumerate() {
+        let s = pool.stats();
+        println!(
+            "  residency[{d}]: {} hit / {} miss / {} evicted, {} KiB uploaded, {} KiB saved",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.uploaded_bytes / 1024,
+            s.saved_bytes / 1024
+        );
+    }
+    Ok(())
+}
+
+/// Legacy shim path (`--legacy`): the deprecated blocking FIFO facade.
+#[allow(deprecated)]
+fn serve_legacy(
+    bundle: &ArtifactBundle,
+    cfg: SpammConfig,
+    requests: usize,
+    n: usize,
+    seed: u64,
+) -> Result<()> {
+    use cuspamm::coordinator::service::{synthetic_trace, SpammService};
+
+    let mut svc = SpammService::new(bundle, cfg)?;
+    for (ma, mb, approx) in synthetic_trace(requests, n, seed) {
         svc.submit(ma, mb, approx);
     }
     println!("draining {} requests ...", svc.pending());
@@ -267,13 +462,93 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if responses.len() > 5 {
         println!("  ... ({} more)", responses.len() - 5);
     }
+    match stats.latency {
+        Some(lat) => println!(
+            "completed {} in {:.3}s — {:.2} req/s, latency p50 {:.3}s p95 {:.3}s",
+            stats.completed, stats.wall_secs, stats.throughput_rps, lat.median, lat.p95
+        ),
+        None => println!("completed 0 requests (empty trace)"),
+    }
+    Ok(())
+}
+
+/// CI smoke bench (`--smoke`): one registered operand, one prepared plan,
+/// 8 repeated multiplies — the repeated-operand serving pattern.  Asserts
+/// the session's headline contract: warm requests at least 2x cheaper
+/// than the cold first request, zero warm transfer bytes, and bitwise
+/// identity with the one-shot `Coordinator::multiply` path.
+fn serve_smoke(bundle: &ArtifactBundle, cfg: SpammConfig, ratio: f64) -> Result<()> {
+    use cuspamm::coordinator::{Approx, SpammSession};
+
+    const REPEATS: usize = 8;
+    let n = 512;
+    let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let session = SpammSession::new(bundle, cfg.clone())?;
+    let aid = session.put(&a)?;
+    let plan = session.prepare(aid, aid, Approx::ValidRatio(ratio))?;
+    let (tau, rows, cols) = session.plan_info(plan)?;
+    println!("smoke: n={n} τ={tau:.4e} (ratio target {ratio}), output {rows}x{cols}");
+    let tickets: Vec<_> = (0..REPEATS)
+        .map(|_| session.submit(plan))
+        .collect::<Result<Vec<_>>>()?;
+    let mut jobs = Vec::with_capacity(REPEATS);
+    for t in tickets {
+        jobs.push(session.wait(t)?);
+    }
+    let cold = &jobs[0];
+    let warm_min = jobs[1..]
+        .iter()
+        .map(|c| c.compute_secs)
+        .fold(f64::MAX, f64::min);
+    let warm_mean =
+        jobs[1..].iter().map(|c| c.compute_secs).sum::<f64>() / (REPEATS - 1) as f64;
     println!(
-        "completed {} in {:.3}s — {:.2} req/s, latency p50 {:.3}s p95 {:.3}s",
-        stats.completed,
-        stats.wall_secs,
-        stats.throughput_rps,
-        stats.latency.median,
-        stats.latency.p95
+        "smoke: cold {:.4}s, warm min {:.4}s / mean {:.4}s — {:.1}x",
+        cold.compute_secs,
+        warm_min,
+        warm_mean,
+        cold.compute_secs / warm_min.max(1e-12)
+    );
+    for (i, c) in jobs.iter().enumerate().skip(1) {
+        assert_eq!(
+            c.stats.transfer_bytes, 0,
+            "warm request {i} uploaded operand bytes"
+        );
+        assert!(
+            c.stats.residency_hits > 0,
+            "warm request {i} saw no residency hits"
+        );
+        // Warm plans skip the front phases entirely — the prepare cost
+        // was charged to the cold first job.
+        assert_eq!(
+            c.stats.norm_secs, 0.0,
+            "warm request {i} recomputed normmaps"
+        );
+        assert_eq!(
+            c.stats.schedule_secs, 0.0,
+            "warm request {i} rebuilt the schedule"
+        );
+    }
+    // Bitwise identity with the legacy one-shot path on a fresh
+    // coordinator (cold caches, same schedule math).
+    let coord = cuspamm::coordinator::Coordinator::new(bundle, cfg)?;
+    let reference = coord.multiply(&a, &a, tau)?;
+    for (i, c) in jobs.iter().enumerate() {
+        assert_eq!(
+            c.c.data(),
+            reference.c.data(),
+            "session result {i} diverged from Coordinator::multiply"
+        );
+    }
+    assert!(
+        cold.compute_secs >= 2.0 * warm_min,
+        "warm plans must be ≥2x cheaper: cold {:.4}s vs warm min {:.4}s",
+        cold.compute_secs,
+        warm_min
+    );
+    println!(
+        "smoke: OK — warm plans ≥2x cheaper, zero warm transfers, bitwise-identical \
+         to the one-shot path"
     );
     Ok(())
 }

@@ -109,6 +109,17 @@ struct Inner {
     next_seq: u64,
     bytes: usize,
     stats: PoolStats,
+    /// Operand fingerprints pinned by the session's operand store (value =
+    /// pin count: one per prepared plan referencing the operand).  Every
+    /// tile of a pinned operand is exempt from eviction, whether it is
+    /// resident already or uploaded later.
+    pinned_ops: HashMap<Fingerprint, u32>,
+}
+
+impl Inner {
+    fn op_pinned(&self, fp: &Fingerprint) -> bool {
+        self.pinned_ops.contains_key(fp)
+    }
 }
 
 impl Inner {
@@ -151,6 +162,7 @@ impl ResidencyPool {
                 next_seq: 0,
                 bytes: 0,
                 stats: PoolStats::default(),
+                pinned_ops: HashMap::new(),
             }),
             budget: if budget_bytes == 0 {
                 usize::MAX
@@ -214,6 +226,37 @@ impl ResidencyPool {
         }
     }
 
+    /// Pin every tile of operand `fp` — resident now or uploaded later —
+    /// against eviction.  Store-driven: the session's operand store pins
+    /// the operands of every prepared plan so request churn cannot evict
+    /// a plan's working set.  Pins are counted (one per plan); returns the
+    /// operand's currently-resident tile count.
+    pub fn pin_operand(&self, fp: Fingerprint) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.pinned_ops.entry(fp).or_insert(0) += 1;
+        inner.map.keys().filter(|k| k.op == fp).count()
+    }
+
+    /// Drop one pin of operand `fp` (tiles become evictable again once the
+    /// last pin is released).  Returns whether the operand is still pinned.
+    pub fn unpin_operand(&self, fp: Fingerprint) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(n) = inner.pinned_ops.get_mut(&fp) {
+            *n -= 1;
+            if *n == 0 {
+                inner.pinned_ops.remove(&fp);
+                return false;
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Number of distinct pinned operand fingerprints.
+    pub fn pinned_operands(&self) -> usize {
+        self.inner.lock().unwrap().pinned_ops.len()
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> PoolStats {
         let inner = self.inner.lock().unwrap();
@@ -234,13 +277,16 @@ impl ResidencyPool {
     /// Drop every unpinned tile — operator surface for long-running
     /// services that want to release device memory between unrelated
     /// workloads without waiting for LRU churn.  Pinned tiles survive:
-    /// their handles are still in flight.
+    /// their handles are still in flight, or their operand is pinned by
+    /// the store.
     pub fn clear(&self) {
         let mut inner = self.inner.lock().unwrap();
         let keep: Vec<TileKey> = inner
             .map
             .iter()
-            .filter(|(_, s)| Arc::strong_count(&s.handle) > 1)
+            .filter(|(k, s)| {
+                Arc::strong_count(&s.handle) > 1 || inner.op_pinned(&k.op)
+            })
             .map(|(k, _)| *k)
             .collect();
         let mut bytes = 0usize;
@@ -279,10 +325,11 @@ fn evict_for(inner: &mut Inner, budget: usize, incoming: usize) -> usize {
         if !live {
             continue; // stale lazy-deletion record
         }
-        let is_pinned = inner
-            .map
-            .get(&front.key)
-            .is_some_and(|s| Arc::strong_count(&s.handle) > 1);
+        let is_pinned = inner.op_pinned(&front.key.op)
+            || inner
+                .map
+                .get(&front.key)
+                .is_some_and(|s| Arc::strong_count(&s.handle) > 1);
         if is_pinned {
             inner.queue.push_back(front);
             requeued += 1;
@@ -390,6 +437,51 @@ mod tests {
         assert_eq!(pool.resident_tiles(), 1, "only the pinned tile survives");
         assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
         drop(held);
+    }
+
+    #[test]
+    fn pinned_operand_tiles_are_never_evicted() {
+        // One-tile budget; the pinned operand's tiles survive arbitrary
+        // churn from other operands even with no live handles.
+        let pool = ResidencyPool::new(TILE_BYTES as usize);
+        pool.pin_operand(fp(1));
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        for i in 0..4usize {
+            pool.acquire(key(2, (i, 0)), ELEMS, |d| d.fill(2.0));
+        }
+        assert!(
+            pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!("evicted")).hit,
+            "pinned operand must stay resident"
+        );
+        // Unpin: now it is ordinary LRU prey.
+        assert!(!pool.unpin_operand(fp(1)), "last pin released");
+        pool.acquire(key(2, (9, 0)), ELEMS, |d| d.fill(3.0));
+        pool.acquire(key(2, (10, 0)), ELEMS, |d| d.fill(3.0));
+        assert!(!pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0)).hit);
+    }
+
+    #[test]
+    fn operand_pins_are_counted() {
+        let pool = ResidencyPool::new(0);
+        pool.pin_operand(fp(7));
+        pool.pin_operand(fp(7));
+        assert_eq!(pool.pinned_operands(), 1);
+        assert!(pool.unpin_operand(fp(7)), "one pin left");
+        assert!(!pool.unpin_operand(fp(7)));
+        assert_eq!(pool.pinned_operands(), 0);
+        // Unpinning an unpinned operand is a no-op.
+        assert!(!pool.unpin_operand(fp(8)));
+    }
+
+    #[test]
+    fn clear_keeps_pinned_operands() {
+        let pool = ResidencyPool::new(0);
+        pool.pin_operand(fp(1));
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        pool.acquire(key(2, (0, 0)), ELEMS, |d| d.fill(2.0));
+        pool.clear();
+        assert_eq!(pool.resident_tiles(), 1);
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
     }
 
     #[test]

@@ -278,6 +278,26 @@ impl ExecCaches {
         Ok((nm, Some(fp)))
     }
 
+    /// Cached normmap of an operand whose fingerprint is *already known*
+    /// (a registered session operand): the norm-cache lookup happens
+    /// directly on `fp`, skipping the O(N²) re-hash `normmap_via` pays on
+    /// every call.  This is the fingerprint-by-id entry point the session
+    /// front-end uses.
+    pub fn normmap_keyed(
+        &self,
+        fp: Fingerprint,
+        stats: &mut MultiplyStats,
+        compute: impl FnOnce() -> Result<Matrix>,
+    ) -> Result<Arc<Matrix>> {
+        let (nm, hit) = self.norms.get_or_compute(fp, compute)?;
+        if hit {
+            stats.norm_cache_hits += 1;
+        } else {
+            stats.norm_cache_misses += 1;
+        }
+        Ok(nm)
+    }
+
     /// Cached compacted schedule for (A, B, τ): consults the schedule
     /// cache when both operand fingerprints are present, building
     /// directly otherwise (caching disabled upstream).  Hit/miss counts
@@ -392,6 +412,28 @@ mod tests {
         let (_, h2) = cache.get_or_compute(mk(0.5), build).unwrap();
         let (_, h3) = cache.get_or_compute(mk(0.25), build).unwrap();
         assert!(!h1 && h2 && !h3);
+    }
+
+    #[test]
+    fn keyed_normmap_skips_hashing_and_shares_entries() {
+        // A keyed lookup and a hashed lookup of the same operand must hit
+        // the same cache entry (the session's by-id path and the legacy
+        // by-content path are views of one cache).
+        let caches = ExecCaches::new();
+        let m = Matrix::randn(16, 16, 3);
+        let p = PaddedMatrix::new(&m, 8);
+        let fp = fingerprint(&p);
+        let mut stats = MultiplyStats::default();
+        let via = caches
+            .normmap_via(true, &p, &mut stats, || Ok(crate::spamm::normmap::normmap(&p)))
+            .unwrap();
+        assert_eq!(via.1, Some(fp));
+        let keyed = caches
+            .normmap_keyed(fp, &mut stats, || panic!("must hit the shared entry"))
+            .unwrap();
+        assert_eq!(keyed.data(), via.0.data());
+        assert_eq!(stats.norm_cache_hits, 1);
+        assert_eq!(stats.norm_cache_misses, 1);
     }
 
     #[test]

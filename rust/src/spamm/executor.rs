@@ -242,7 +242,87 @@ impl SpammEngine {
             fb = fb.or_else(|| Some(fingerprint(&pb)));
         }
 
-        let mut pc = PaddedMatrix::new(&Matrix::zeros(a.rows(), b.cols()), self.cfg.lonum);
+        let c = self.execute_all_tiles(
+            Operand::new(&pa, fa),
+            Operand::new(&pb, fb),
+            &sched,
+            a.rows(),
+            b.cols(),
+            &mut stats,
+        )?;
+        stats.total_secs = t_total.elapsed().as_secs_f64();
+        Ok((c, stats))
+    }
+
+    /// Multiply operands whose padded form and content fingerprints are
+    /// *already known* (registered session handles): the norm and
+    /// schedule caches are consulted by id — no O(N²) re-hash per call —
+    /// and the residency pool keys on the same fingerprints.  The
+    /// fingerprint-by-id twin of [`SpammEngine::multiply_with_stats`].
+    pub fn multiply_prepared_with_stats(
+        &self,
+        pa: &PaddedMatrix,
+        fa: Fingerprint,
+        pb: &PaddedMatrix,
+        fb: Fingerprint,
+        tau: f32,
+    ) -> Result<(Matrix, MultiplyStats)> {
+        if pa.logical_cols != pb.logical_rows {
+            return Err(Error::Shape(format!(
+                "multiply_prepared: inner dimensions disagree: A is {}x{}, B is {}x{}",
+                pa.logical_rows, pa.logical_cols, pb.logical_rows, pb.logical_cols
+            )));
+        }
+        let t_total = Instant::now();
+        let mut stats = MultiplyStats::default();
+        let cached = self.cfg.cache_enabled;
+        let t = Instant::now();
+        let (na, nb) = if cached {
+            (
+                self.caches.normmap_keyed(fa, &mut stats, || self.normmap_of(pa))?,
+                self.caches.normmap_keyed(fb, &mut stats, || self.normmap_of(pb))?,
+            )
+        } else {
+            (Arc::new(self.normmap_of(pa)?), Arc::new(self.normmap_of(pb)?))
+        };
+        stats.norm_secs = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let sched = if cached {
+            self.caches
+                .schedule_via(Some(fa), Some(fb), tau, &na, &nb, &mut stats)?
+        } else {
+            Arc::new(Schedule::build(&na, &nb, tau)?)
+        };
+        stats.schedule_secs = t.elapsed().as_secs_f64();
+        stats.valid_products = sched.valid_products();
+        stats.total_products = sched.total_products();
+        stats.valid_ratio = sched.valid_ratio();
+
+        let c = self.execute_all_tiles(
+            Operand::new(pa, Some(fa)),
+            Operand::new(pb, Some(fb)),
+            &sched,
+            pa.logical_rows,
+            pb.logical_cols,
+            &mut stats,
+        )?;
+        stats.total_secs = t_total.elapsed().as_secs_f64();
+        Ok((c, stats))
+    }
+
+    /// Shared execution tail of both multiply entry points: allocate the
+    /// padded output, run every output tile of the schedule through
+    /// [`execute_batches`], crop to the logical shape.
+    fn execute_all_tiles(
+        &self,
+        pa: Operand<'_>,
+        pb: Operand<'_>,
+        sched: &Schedule,
+        out_rows: usize,
+        out_cols: usize,
+        stats: &mut MultiplyStats,
+    ) -> Result<Matrix> {
+        let mut pc = PaddedMatrix::new(&Matrix::zeros(out_rows, out_cols), self.cfg.lonum);
         let all_tiles: Vec<(usize, usize)> = (0..sched.tile_rows)
             .flat_map(|i| (0..sched.tile_cols).map(move |j| (i, j)))
             .collect();
@@ -250,16 +330,14 @@ impl SpammEngine {
             &self.rt,
             &self.cfg,
             self.pool.as_deref(),
-            Operand::new(&pa, fa),
-            Operand::new(&pb, fb),
+            pa,
+            pb,
             &mut pc,
-            &sched,
+            sched,
             &[all_tiles.as_slice()],
-            &mut stats,
+            stats,
         )?;
-
-        stats.total_secs = t_total.elapsed().as_secs_f64();
-        Ok((pc.crop(), stats))
+        Ok(pc.crop())
     }
 
     /// Dense baseline (cuBLAS stand-in) on the same runtime.

@@ -86,6 +86,29 @@ fn cached_and_uncached_paths_agree_bitwise() {
 }
 
 #[test]
+fn fingerprint_keyed_multiply_matches_hashed_path() {
+    use cuspamm::matrix::tiling::PaddedMatrix;
+    use cuspamm::spamm::cache::fingerprint;
+
+    let b = bundle();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let a = Matrix::decay_exponential(128, 1.0, 0.5, 70);
+    let x = Matrix::decay_exponential(128, 1.0, 0.5, 71);
+    let (c_hashed, _) = engine.multiply_with_stats(&a, &x, 1e-4).unwrap();
+    // The by-id entry point: operands pre-padded, fingerprints known —
+    // identical bits, and the norm cache hits without re-hashing.
+    let pa = PaddedMatrix::new(&a, 32);
+    let px = PaddedMatrix::new(&x, 32);
+    let (fa, fx) = (fingerprint(&pa), fingerprint(&px));
+    let (c_keyed, stats) = engine
+        .multiply_prepared_with_stats(&pa, fa, &px, fx, 1e-4)
+        .unwrap();
+    assert_eq!(c_hashed.data(), c_keyed.data());
+    assert_eq!(stats.norm_cache_hits, 2, "keyed lookups must hit the shared cache");
+    assert_eq!(stats.schedule_cache_hits, 1);
+}
+
+#[test]
 fn zero_surviving_products_returns_exact_zeros() {
     let b = bundle();
     let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();

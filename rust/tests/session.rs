@@ -1,0 +1,273 @@
+//! Integration tests for the `SpammSession` front-end: registered
+//! operands, prepared plans, the async ticketed queue, and the legacy
+//! `SpammService` shim.
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, Coordinator, Priority, SpammSession};
+use cuspamm::matrix::Matrix;
+
+use common::bundle;
+
+fn session(cfg: SpammConfig) -> SpammSession {
+    SpammSession::new(&bundle(), cfg).unwrap()
+}
+
+#[test]
+fn put_dedups_identical_content() {
+    let s = session(SpammConfig::default());
+    let m = Matrix::decay_algebraic(96, 0.1, 0.1, 11);
+    let a = s.put(&m).unwrap();
+    // Identical content, independently generated.
+    let b = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 11)).unwrap();
+    assert_eq!(a, b, "two puts of identical data must share one entry");
+    let stats = s.store_stats();
+    assert_eq!(stats.puts, 2);
+    assert_eq!(stats.dedup_hits, 1);
+    assert_eq!(stats.resident_operands, 1);
+    // Two refs: both releases succeed, a third errors.
+    s.release(a).unwrap();
+    s.release(b).unwrap();
+    assert!(s.release(a).is_err());
+    // Different content is a different entry.
+    let c = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 12)).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn store_eviction_spares_plan_pinned_operands() {
+    let n = 64usize;
+    let bytes = n * n * 4; // n is a lonum multiple: padded == logical
+    let mut cfg = SpammConfig::default();
+    cfg.store_budget = bytes; // room for a single operand
+    let s = session(cfg);
+    let a = s.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 1)).unwrap();
+    let plan = s.prepare(a, a, Approx::Tau(1e-4)).unwrap();
+    s.release(a).unwrap();
+    // Churn: registered-and-released operands blow through the budget...
+    for seed in 10..14u64 {
+        let x = s.put(&Matrix::decay_algebraic(n, 0.1, 0.1, seed)).unwrap();
+        s.release(x).unwrap();
+    }
+    assert!(s.store_stats().evictions >= 3, "churn must evict");
+    // ...but the plan-pinned operand survives: preparing against it still
+    // resolves (an evicted handle would error), and the plan still runs.
+    let t = s.submit(plan).unwrap();
+    let done = s.wait(t).unwrap();
+    assert_eq!(done.c.rows(), n);
+    // Release the plan: the operand unpins and budget pressure may now
+    // evict it.
+    s.release_plan(plan).unwrap();
+    let x = s.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 99)).unwrap();
+    assert!(
+        s.prepare(a, x, Approx::Tau(1e-4)).is_err(),
+        "unpinned released operand should have been evicted by now"
+    );
+}
+
+#[test]
+fn tickets_complete_out_of_order_with_priorities() {
+    let s = session(SpammConfig::default());
+    // A hefty head-of-line job keeps the worker busy while the small
+    // low/high pair is queued behind it.
+    let big = s.put(&Matrix::decay_algebraic(512, 0.1, 0.1, 2)).unwrap();
+    let small = s.put(&Matrix::decay_algebraic(128, 0.1, 0.1, 3)).unwrap();
+    let p_big = s.prepare(big, big, Approx::ValidRatio(0.3)).unwrap();
+    let p_small = s.prepare(small, small, Approx::Tau(1e-5)).unwrap();
+    let t_head = s.submit(p_big).unwrap();
+    let t_low = s.submit_with(p_small, Priority::Low).unwrap();
+    let t_high = s.submit_with(p_small, Priority::High).unwrap();
+    // Out-of-order retrieval: redeem the last ticket first.
+    let high = s.wait(t_high).unwrap();
+    let low = s.wait(t_low).unwrap();
+    let head = s.wait(t_head).unwrap();
+    assert_eq!(head.c.rows(), 512);
+    assert_eq!(high.priority, Priority::High);
+    // Both were queued while the head job ran; the high-priority one must
+    // have been dequeued first, so it spent less time waiting.
+    assert!(
+        high.latency_secs <= low.latency_secs,
+        "high {:.6}s vs low {:.6}s",
+        high.latency_secs,
+        low.latency_secs
+    );
+}
+
+#[test]
+fn admission_queue_is_bounded() {
+    let mut cfg = SpammConfig::default();
+    cfg.queue_depth = 1;
+    let s = session(cfg);
+    let big = s.put(&Matrix::decay_algebraic(512, 0.1, 0.1, 4)).unwrap();
+    let plan = s.prepare(big, big, Approx::ValidRatio(0.3)).unwrap();
+    let _head = s.submit(plan).unwrap();
+    // The worker needs a moment to dequeue the head job; retry until the
+    // depth-1 window admits the second submit, then the third must be
+    // rejected while the (long) head job still runs.
+    let _queued = loop {
+        match s.submit(plan) {
+            Ok(t) => break t,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
+        }
+    };
+    let overflow = s.submit(plan);
+    assert!(
+        overflow.is_err(),
+        "third submit must hit the depth-1 admission bound"
+    );
+    let done = s.wait_all().unwrap();
+    assert_eq!(done.len(), 2);
+}
+
+#[test]
+fn repeated_operand_trace_shows_warm_plan_reuse() {
+    // The acceptance trace: one registered A across 8 multiplies of one
+    // prepared plan.
+    const REPEATS: usize = 8;
+    let s = session(SpammConfig::default());
+    let a = s.put(&Matrix::decay_algebraic(256, 0.1, 0.1, 7)).unwrap();
+    let plan = s.prepare(a, a, Approx::ValidRatio(0.1)).unwrap();
+    let tickets: Vec<_> = (0..REPEATS).map(|_| s.submit(plan).unwrap()).collect();
+    let jobs: Vec<_> = tickets.into_iter().map(|t| s.wait(t).unwrap()).collect();
+    assert_eq!(jobs.len(), REPEATS);
+
+    // Cold job: charged the prepare phases (normmaps + tuning +
+    // scheduling) and the operand upload.
+    let cold = &jobs[0];
+    assert!(cold.stats.norm_secs > 0.0, "cold job must carry norm phase");
+    assert!(cold.stats.schedule_secs > 0.0);
+    assert!(cold.stats.transfer_bytes > 0, "cold job uploads tiles");
+
+    // Warm jobs: front phases skipped entirely, zero operand bytes
+    // moved, every tile a residency hit.
+    for (i, c) in jobs.iter().enumerate().skip(1) {
+        assert_eq!(c.stats.norm_secs, 0.0, "warm job {i} recomputed norms");
+        assert_eq!(c.stats.schedule_secs, 0.0, "warm job {i} rescheduled");
+        assert_eq!(c.stats.transfer_bytes, 0, "warm job {i} uploaded bytes");
+        assert!(c.stats.residency_hits > 0, "warm job {i} missed the pool");
+        assert!(
+            c.stats.transfer_saved_bytes > 0,
+            "warm job {i} must report saved transfers"
+        );
+    }
+    // All eight results are bitwise identical to each other and to the
+    // one-shot coordinator path at the same τ.
+    let coord = Coordinator::new(&bundle(), SpammConfig::default()).unwrap();
+    let reference = coord
+        .multiply(
+            &Matrix::decay_algebraic(256, 0.1, 0.1, 7),
+            &Matrix::decay_algebraic(256, 0.1, 0.1, 7),
+            cold.tau,
+        )
+        .unwrap();
+    for c in &jobs {
+        assert_eq!(c.c.data(), reference.c.data());
+    }
+    // The warm speedup itself is asserted in `serve --smoke` (a timing
+    // claim has no place in a unit test); here just record that cold did
+    // strictly more work.
+    let warm_min = jobs[1..]
+        .iter()
+        .map(|c| c.compute_secs)
+        .fold(f64::MAX, f64::min);
+    println!(
+        "cold {:.5}s vs warm min {:.5}s ({:.2}x)",
+        cold.compute_secs,
+        warm_min,
+        cold.compute_secs / warm_min.max(1e-12)
+    );
+}
+
+#[test]
+fn prepare_dedups_plans_and_validates() {
+    let s = session(SpammConfig::default());
+    let a = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 21)).unwrap();
+    let b = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 22)).unwrap();
+    let p1 = s.prepare(a, b, Approx::Tau(1e-4)).unwrap();
+    let p2 = s.prepare(a, b, Approx::Tau(1e-4)).unwrap();
+    assert_eq!(p1, p2, "identical (a, b, approx) must share a plan");
+    let p3 = s.prepare(a, b, Approx::Tau(1e-3)).unwrap();
+    assert_ne!(p1, p3);
+    // Shape and target validation.
+    let rect = s.put(&Matrix::randn(96, 64, 23)).unwrap();
+    assert!(s.prepare(rect, rect, Approx::Tau(1e-4)).is_err(), "64 ≠ 96");
+    assert!(s.prepare(a, b, Approx::ValidRatio(0.0)).is_err());
+    assert!(s.prepare(a, b, Approx::Tau(-1.0)).is_err());
+    // Rectangular chains with agreeing inner dims are fine.
+    let tall = s.put(&Matrix::randn(64, 96, 24)).unwrap();
+    let plan = s.prepare(tall, rect, Approx::Tau(0.0)).unwrap();
+    let (_, rows, cols) = s.plan_info(plan).unwrap();
+    assert_eq!((rows, cols), (64, 64));
+    let done = s.wait(s.submit(plan).unwrap()).unwrap();
+    assert_eq!((done.c.rows(), done.c.cols()), (64, 64));
+}
+
+#[test]
+fn released_plan_rejects_submit() {
+    let s = session(SpammConfig::default());
+    let a = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 31)).unwrap();
+    let plan = s.prepare(a, a, Approx::Tau(1e-4)).unwrap();
+    s.release_plan(plan).unwrap();
+    assert!(s.submit(plan).is_err());
+    assert!(s.release_plan(plan).is_err(), "double release");
+}
+
+#[test]
+fn wait_on_bogus_ticket_errors_when_idle() {
+    let s = session(SpammConfig::default());
+    let a = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 41)).unwrap();
+    let plan = s.prepare(a, a, Approx::Tau(1e-4)).unwrap();
+    let t = s.submit(plan).unwrap();
+    let done = s.wait(t).unwrap();
+    // Re-waiting a redeemed ticket errors instead of hanging.
+    assert!(s.wait(t).is_err());
+    assert_eq!(done.ticket, t);
+}
+
+#[test]
+#[allow(deprecated)]
+fn shim_and_session_agree_bitwise_on_the_same_trace() {
+    use cuspamm::coordinator::service::{synthetic_trace, SpammService};
+
+    let trace = synthetic_trace(4, 96, 5);
+    // Legacy path: the deprecated shim.
+    let mut svc = SpammService::new(&bundle(), SpammConfig::default()).unwrap();
+    for (a, b, ap) in synthetic_trace(4, 96, 5) {
+        svc.submit(a, b, ap);
+    }
+    let (legacy, stats) = svc.drain().unwrap();
+    assert_eq!(stats.completed, 4);
+    assert!(stats.latency.is_some());
+
+    // Session path: register, prepare, submit, wait.
+    let s = session(SpammConfig::default());
+    for ((a, b, ap), old) in trace.into_iter().zip(&legacy) {
+        let (ida, idb) = (s.put(&a).unwrap(), s.put(&b).unwrap());
+        let t = s.submit_once(ida, idb, ap).unwrap();
+        let done = s.wait(t).unwrap();
+        assert_eq!(
+            done.c.data(),
+            old.c.data(),
+            "session and shim must be bitwise identical"
+        );
+        assert_eq!(done.tau.to_bits(), old.tau.to_bits(), "τ resolution must agree");
+    }
+}
+
+#[test]
+fn wait_all_returns_ticket_order() {
+    let s = session(SpammConfig::default());
+    let a = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 51)).unwrap();
+    let b = s.put(&Matrix::decay_algebraic(96, 0.1, 0.1, 52)).unwrap();
+    let p1 = s.prepare(a, a, Approx::Tau(1e-4)).unwrap();
+    let p2 = s.prepare(a, b, Approx::Tau(1e-4)).unwrap();
+    let t1 = s.submit_with(p1, Priority::Low).unwrap();
+    let t2 = s.submit_with(p2, Priority::High).unwrap();
+    let done = s.wait_all().unwrap();
+    assert_eq!(done.len(), 2);
+    // Returned in ticket order regardless of execution order.
+    assert_eq!(done[0].ticket, t1);
+    assert_eq!(done[1].ticket, t2);
+    assert_eq!(s.pending(), 0);
+}
