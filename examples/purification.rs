@@ -4,12 +4,18 @@
 //! engine at several τ and shows that purification converges while most
 //! tile products are skipped — SpAMM's self-correcting sweet spot.
 //!
+//! The driver is the expression-graph path: each iteration runs as one
+//! graph (P², P³, the 3P²−2P³ combine, and the idempotency probe all
+//! device-side) and the iterate chains between iterations as a
+//! device-resident value — compare the pool transfer counters against
+//! the `mcweeny_purify_loop` baseline printed at the end.
+//!
 //!   cargo run --release --example purification -- [n] [devices]
 
 use cuspamm::config::SpammConfig;
 use cuspamm::coordinator::Coordinator;
 use cuspamm::prelude::*;
-use cuspamm::spamm::purification::{initial_density, mcweeny_purify};
+use cuspamm::spamm::purification::{initial_density, mcweeny_purify, mcweeny_purify_loop};
 
 fn main() -> Result<()> {
     cuspamm::telemetry::init_logging();
@@ -54,6 +60,30 @@ fn main() -> Result<()> {
                 s.wall_secs
             );
         }
+    }
+    if let Some(pool) = coord.residency_pools().first() {
+        let s = pool.stats();
+        println!(
+            "\nexpr path transfers: {} KiB uploaded, {} KiB saved \
+             (iterates never re-uploaded)",
+            s.uploaded_bytes / 1024,
+            s.saved_bytes / 1024
+        );
+    }
+    // A/B: the legacy per-multiply loop re-uploads the iterate each
+    // iteration — same bits, more bus traffic.
+    let mut cfg_loop = SpammConfig::default();
+    cfg_loop.lonum = if n >= 512 { 128 } else { 32 };
+    cfg_loop.devices = devices;
+    let coord_loop = Coordinator::new(&bundle, cfg_loop)?;
+    let r = mcweeny_purify_loop(&coord_loop, &p0, 1e-8, 25, 1e-6)?;
+    if let Some(pool) = coord_loop.residency_pools().first() {
+        let s = pool.stats();
+        println!(
+            "loop path transfers at τ=1e-8: {} KiB uploaded over {} iterations",
+            s.uploaded_bytes / 1024,
+            r.steps.len()
+        );
     }
     println!(
         "\n(purification is self-correcting: SpAMM's skipped mass does not \

@@ -11,8 +11,10 @@
 
 use cuspamm::bench_harness::{fmt_secs, Table};
 use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::Coordinator;
 use cuspamm::matrix::Matrix;
 use cuspamm::runtime::hostsim;
+use cuspamm::spamm::power::{spamm_power, spamm_power_loop};
 use cuspamm::spamm::SpammEngine;
 
 fn main() {
@@ -148,8 +150,80 @@ fn main() {
         "(phase speedup ≥5x and overlap factor >1.0 are the PR-1 acceptance \
          targets; overlap >1 means gather/scatter ran concurrently with exec)"
     );
+
+    // ---- expression graphs: one A^4 chain plan vs the per-step loop ----
+    // The loop path re-uploads and host-re-norms every intermediate; the
+    // expression path keeps them device-resident under derived
+    // fingerprints and refreshes norms from the scattered tiles.
+    let kp = 4usize;
+    let ptau = 1e-5f32;
+    let base = Matrix::decay_exponential(n, 1.0, 0.5, 9);
+    let c_loop = Coordinator::new(&bundle, SpammConfig::default()).expect("loop coord");
+    let c_expr = Coordinator::new(&bundle, SpammConfig::default()).expect("expr coord");
+    let t = std::time::Instant::now();
+    let rl = spamm_power_loop(&c_loop, &base, kp, ptau).expect("loop power");
+    let loop_wall = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    let re = spamm_power(&c_expr, &base, kp, ptau).expect("expr power");
+    let expr_wall = t.elapsed().as_secs_f64();
+    assert_eq!(
+        re.value.data(),
+        rl.value.data(),
+        "expr path must be bitwise identical to the loop path"
+    );
+    let up_loop = c_loop.residency_pools()[0].stats().uploaded_bytes;
+    let up_expr = c_expr.residency_pools()[0].stats().uploaded_bytes;
+    let mut etable = Table::new(
+        "Expression graph — A^4 chain (one plan) vs per-step loop",
+        &["metric", "loop", "expr"],
+    );
+    etable.row(vec![
+        "uploaded (KiB)".into(),
+        format!("{}", up_loop / 1024),
+        format!("{}", up_expr / 1024),
+    ]);
+    etable.row(vec![
+        "transfer bytes saved vs loop".into(),
+        "—".into(),
+        format!(
+            "{} KiB ({:.1}x less)",
+            (up_loop.saturating_sub(up_expr)) / 1024,
+            up_loop as f64 / up_expr.max(1) as f64
+        ),
+    ]);
+    etable.row(vec![
+        "host round-trips for intermediates".into(),
+        format!("{}", kp - 2),
+        "0 (resident, freed at retirement)".into(),
+    ]);
+    etable.row(vec![
+        "host norm recomputes (cache misses)".into(),
+        format!("{}", c_loop.caches().norms.misses()),
+        format!(
+            "{} (device-side refresh instead)",
+            c_expr.caches().norms.misses()
+        ),
+    ]);
+    etable.row(vec![
+        "wall secs (incl. prepare)".into(),
+        fmt_secs(loop_wall),
+        fmt_secs(expr_wall),
+    ]);
+    etable.emit("pipeline_cache_expr");
+
     if smoke {
         assert!(pass, "smoke mode: warm residency must cut transfers ≥4x");
-        println!("smoke mode: one iteration, residency acceptance asserted — OK");
+        assert!(
+            up_expr * 2 <= up_loop,
+            "smoke mode: expr chain must upload ≤ half the loop's bytes \
+             ({up_expr} vs {up_loop})"
+        );
+        assert!(
+            c_expr.caches().norms.misses() <= 1,
+            "smoke mode: expr chain must not host-recompute intermediate norms"
+        );
+        println!(
+            "smoke mode: residency + expr-vs-loop acceptance asserted — OK"
+        );
     }
 }

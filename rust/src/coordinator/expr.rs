@@ -1,0 +1,1428 @@
+//! Expression graphs: chained SpAMM plans with device-resident
+//! intermediates and norm propagation.
+//!
+//! The paper's headline applications are *iterated* products — matrix
+//! powers for the ergo decay matrices (§4.3.1) and density-matrix
+//! purification — yet a `multiply`-per-step driver scatters every
+//! intermediate back to host, re-fingerprints it, recomputes its normmap,
+//! and re-uploads the very tiles the previous step just produced on
+//! device.  An [`ExprGraph`] turns the whole iteration into one prepared
+//! plan:
+//!
+//! * **Device-resident intermediates** — a `spamm` node's output tiles
+//!   scatter straight into the device [`ResidencyPool`] under a *derived*
+//!   content fingerprint ([`Fingerprint::derive`]: hash of the input
+//!   fingerprints + op + τ), and the consuming node's gather resolves
+//!   them as pool hits — zero transfer bytes.  An intermediate's tiles
+//!   are freed the moment its last consumer retires.
+//! * **Norm propagation** — schedules for step *k+1* are built without
+//!   pulling step *k* to host.  At prepare time, norm *upper bounds*
+//!   flow through the graph (‖C_ij‖_F ≤ Σ_k ‖A_ik‖·‖B_kj‖ over the
+//!   compacted schedule — [`Schedule::bound_normmap`]); they resolve τ
+//!   (the §3.5.2 tuner for valid-ratio targets) and pin schedules for
+//!   every node whose bound is already exact (leaf-fed nodes, τ = 0
+//!   nodes, where pruning cannot differ).  Only when a τ > 0 node
+//!   consumes a computed intermediate are *exact* norms needed — and they
+//!   are refreshed lazily from the device-resident output tiles at
+//!   scatter time (the device-side get-norm), bitwise identical to the
+//!   host normmap, with no host round-trip and no re-hash.
+//! * **Device-side combine** — [`ExprGraph::axpby`] (α·X + β·Y, e.g.
+//!   McWeeny's 3P² − 2P³) runs as a batched tile kernel (the `axpby`
+//!   artifact; hostsim + real bundles alike), so purification never
+//!   leaves the pool.  `scale` and `add_diag` are the same idea for
+//!   α·X and X + σI.
+//!
+//! Because the executor ([`execute_batches`]) and its product ordering
+//! are shared with the one-`multiply`-per-step loop path, an expression
+//! run is **bitwise identical** to the loop at the same τ — the
+//! integration suite asserts this for `spamm_power` and
+//! `mcweeny_purify`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::SpammConfig;
+use crate::coordinator::service::Approx;
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::matrix::tiling::PaddedMatrix;
+use crate::matrix::Matrix;
+use crate::runtime::residency::{ResidencyPool, ResidentOperand, TileKey};
+use crate::runtime::Runtime;
+use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
+use crate::spamm::executor::{
+    execute_batches, MultiplyStats, Operand, TileAccumulator, TileSource,
+};
+use crate::spamm::normmap::normmap;
+use crate::spamm::schedule::Schedule;
+use crate::spamm::tuner::{self, TuneParams};
+
+/// Handle of a node inside one [`ExprGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub(crate) usize);
+
+impl NodeId {
+    pub fn raw(self) -> usize {
+        self.0
+    }
+}
+
+/// One graph node (inputs refer to earlier nodes, so the vector order is
+/// already topological).
+#[derive(Clone, Copy, Debug)]
+enum NodeKind {
+    /// Graph input `slot` (bound at prepare time).
+    Operand { slot: usize },
+    /// SpAMM product A·B at the node's approximation level.
+    Spamm { a: NodeId, b: NodeId, approx: Approx },
+    /// Element-wise α·X + β·Y (same shape).
+    Axpby {
+        alpha: f32,
+        x: NodeId,
+        beta: f32,
+        y: NodeId,
+    },
+    /// Element-wise s·X.
+    Scale { s: f32, x: NodeId },
+    /// X + σ·I (square X).
+    AddDiag { shift: f32, x: NodeId },
+    /// Scalar ‖X − Y‖_F (convergence probes, e.g. idempotency residual).
+    DiffNorm { x: NodeId, y: NodeId },
+}
+
+/// Lazy expression DAG builder.
+///
+/// ```no_run
+/// use cuspamm::coordinator::{Approx, ExprGraph};
+/// let mut g = ExprGraph::new();
+/// let a = g.operand();                               // input slot 0
+/// let a2 = g.spamm(a, a, Approx::Tau(1e-4));         // A²
+/// let a3 = g.spamm(a2, a, Approx::Tau(1e-4));        // A³ — A² never
+/// g.output(a3);                                      //     leaves device
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ExprGraph {
+    nodes: Vec<NodeKind>,
+    root: Option<NodeId>,
+    keeps: Vec<NodeId>,
+    n_slots: usize,
+}
+
+impl ExprGraph {
+    pub fn new() -> ExprGraph {
+        ExprGraph::default()
+    }
+
+    fn push(&mut self, kind: NodeKind) -> NodeId {
+        self.nodes.push(kind);
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// A node must exist and carry a matrix (DiffNorm is a scalar).
+    fn check_matrix_input(&self, id: NodeId, what: &str) {
+        assert!(id.0 < self.nodes.len(), "{what}: unknown node {:?}", id);
+        assert!(
+            !matches!(self.nodes[id.0], NodeKind::DiffNorm { .. }),
+            "{what}: scalar node {:?} used as a matrix",
+            id
+        );
+    }
+
+    /// Declare the next graph input; inputs are bound positionally at
+    /// [`ExprGraph::prepare`].
+    pub fn operand(&mut self) -> NodeId {
+        let slot = self.n_slots;
+        self.n_slots += 1;
+        self.push(NodeKind::Operand { slot })
+    }
+
+    /// SpAMM product of two earlier nodes at `approx` (τ is resolved once
+    /// at prepare; valid-ratio targets run the §3.5.2 tuner over the
+    /// propagated norm bounds).
+    pub fn spamm(&mut self, a: NodeId, b: NodeId, approx: Approx) -> NodeId {
+        self.check_matrix_input(a, "spamm");
+        self.check_matrix_input(b, "spamm");
+        self.push(NodeKind::Spamm { a, b, approx })
+    }
+
+    /// Element-wise α·X + β·Y (device-side tiled kernel).
+    pub fn axpby(&mut self, alpha: f32, x: NodeId, beta: f32, y: NodeId) -> NodeId {
+        self.check_matrix_input(x, "axpby");
+        self.check_matrix_input(y, "axpby");
+        self.push(NodeKind::Axpby { alpha, x, beta, y })
+    }
+
+    /// Element-wise s·X.
+    pub fn scale(&mut self, s: f32, x: NodeId) -> NodeId {
+        self.check_matrix_input(x, "scale");
+        self.push(NodeKind::Scale { s, x })
+    }
+
+    /// X + σ·I (X must be square).
+    pub fn add_diag(&mut self, shift: f32, x: NodeId) -> NodeId {
+        self.check_matrix_input(x, "add_diag");
+        self.push(NodeKind::AddDiag { shift, x })
+    }
+
+    /// Scalar ‖X − Y‖_F, summed in row-major order — bitwise identical
+    /// to `Matrix::error_fnorm` of the downloaded values, computed from
+    /// the resident tiles without a host round-trip.
+    pub fn diff_fnorm(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.check_matrix_input(x, "diff_fnorm");
+        self.check_matrix_input(y, "diff_fnorm");
+        self.push(NodeKind::DiffNorm { x, y })
+    }
+
+    /// Designate the graph's result (must be a computed matrix node).
+    pub fn output(&mut self, n: NodeId) {
+        self.check_matrix_input(n, "output");
+        assert!(
+            !matches!(self.nodes[n.0], NodeKind::Operand { .. }),
+            "output: the graph result must be a computed node"
+        );
+        self.root = Some(n);
+    }
+
+    /// Keep an interior node's value device-resident past execution (it
+    /// is returned alongside the root instead of being freed at
+    /// retirement).
+    pub fn keep(&mut self, n: NodeId) {
+        self.check_matrix_input(n, "keep");
+        if !self.keeps.contains(&n) {
+            self.keeps.push(n);
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn input_count(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Prepare this graph over concrete inputs: resolve shapes and τ,
+    /// propagate norm bounds, derive intermediate fingerprints, and pin
+    /// schedules wherever the bound is already exact.  Host-side only —
+    /// no device work, no transfer.  `caches`/`cfg` come from the
+    /// executing front-end ([`Coordinator::prepare_expr`] /
+    /// `SpammSession::prepare_expr` pass their own).
+    pub fn prepare(
+        &self,
+        caches: &ExecCaches,
+        cfg: &SpammConfig,
+        inputs: &[ExprSource<'_>],
+    ) -> Result<ExprPlan> {
+        let t_prepare = Instant::now();
+        let root = self.root.ok_or_else(|| {
+            Error::Coordinator("expression graph has no output node".into())
+        })?;
+        if inputs.len() != self.n_slots {
+            return Err(Error::Coordinator(format!(
+                "expression graph has {} input slots, got {} bindings",
+                self.n_slots,
+                inputs.len()
+            )));
+        }
+        let lonum = cfg.lonum;
+        let mut front = MultiplyStats::default();
+
+        // Bind inputs: padded form, content fingerprint, exact normmap.
+        let t = Instant::now();
+        let mut bound_inputs: Vec<PlannedInput> = Vec::with_capacity(inputs.len());
+        let mut input_norms: Vec<Arc<Matrix>> = Vec::with_capacity(inputs.len());
+        for src in inputs {
+            match src {
+                ExprSource::Host(m) => {
+                    if m.rows() == 0 || m.cols() == 0 {
+                        return Err(Error::Shape("expr input: empty operand".into()));
+                    }
+                    let padded = PaddedMatrix::new(m, lonum);
+                    let (nm, fp) = caches.normmap_via(cfg.cache_enabled, &padded, &mut front, || {
+                        Ok(normmap(&padded))
+                    })?;
+                    let fp = fp.unwrap_or_else(|| fingerprint(&padded));
+                    input_norms.push(nm);
+                    bound_inputs.push(PlannedInput::Host {
+                        padded: Arc::new(padded),
+                        fp,
+                    });
+                }
+                ExprSource::Padded(padded, fp) => {
+                    let nm = if cfg.cache_enabled {
+                        caches.normmap_keyed(*fp, &mut front, || Ok(normmap(padded)))?
+                    } else {
+                        Arc::new(normmap(padded))
+                    };
+                    input_norms.push(nm);
+                    bound_inputs.push(PlannedInput::Host {
+                        padded: padded.clone(),
+                        fp: *fp,
+                    });
+                }
+                ExprSource::Resident(v) => {
+                    // A previous execution's device-resident result: its
+                    // exact normmap was computed at scatter time — no
+                    // host norm work at all.
+                    front.norms_refreshed += 1;
+                    input_norms.push(v.inner.normmap().clone());
+                    bound_inputs.push(PlannedInput::Resident(v.clone()));
+                }
+            }
+        }
+        front.norm_secs = t.elapsed().as_secs_f64();
+
+        // Consumer counts (root/keeps count as one extra use so their
+        // values survive execution).
+        let mut uses = vec![0usize; self.nodes.len()];
+        for kind in &self.nodes {
+            match *kind {
+                NodeKind::Operand { .. } => {}
+                NodeKind::Spamm { a, b, .. } => {
+                    uses[a.0] += 1;
+                    uses[b.0] += 1;
+                }
+                NodeKind::Axpby { x, y, .. } | NodeKind::DiffNorm { x, y } => {
+                    uses[x.0] += 1;
+                    uses[y.0] += 1;
+                }
+                NodeKind::Scale { x, .. } | NodeKind::AddDiag { x, .. } => uses[x.0] += 1,
+            }
+        }
+        uses[root.0] += 1;
+        for k in &self.keeps {
+            uses[k.0] += 1;
+        }
+
+        // Walk the (already topological) node list propagating shapes,
+        // fingerprints, and norm bounds.
+        let t_sched = Instant::now();
+        let mut planned: Vec<PlannedNode> = Vec::with_capacity(self.nodes.len());
+        for (idx, kind) in self.nodes.iter().enumerate() {
+            let node = match *kind {
+                NodeKind::Operand { slot } => {
+                    let (fp, rows, cols, tr, tc) = match &bound_inputs[slot] {
+                        PlannedInput::Host { padded, fp } => (
+                            *fp,
+                            padded.logical_rows,
+                            padded.logical_cols,
+                            padded.tile_rows(),
+                            padded.tile_cols(),
+                        ),
+                        PlannedInput::Resident(v) => {
+                            let r = v.inner.as_ref();
+                            if r.lonum() != lonum {
+                                return Err(Error::Shape(format!(
+                                    "expr input: resident value has lonum {}, config wants {lonum}",
+                                    r.lonum()
+                                )));
+                            }
+                            (
+                                r.fingerprint(),
+                                r.logical_rows(),
+                                r.logical_cols(),
+                                r.tile_rows(),
+                                r.tile_cols(),
+                            )
+                        }
+                    };
+                    PlannedNode {
+                        kind: *kind,
+                        fp,
+                        rows,
+                        cols,
+                        tile_rows: tr,
+                        tile_cols: tc,
+                        tau: 0.0,
+                        bound: Some(input_norms[slot].clone()),
+                        sched: None,
+                        uses: uses[idx],
+                    }
+                }
+                NodeKind::Spamm { a, b, approx } => {
+                    approx.validate()?;
+                    let (pa, pb) = (&planned[a.0], &planned[b.0]);
+                    if pa.cols != pb.rows {
+                        return Err(Error::Shape(format!(
+                            "expr spamm: inner dimensions disagree: A is {}x{}, B is {}x{}",
+                            pa.rows, pa.cols, pb.rows, pb.cols
+                        )));
+                    }
+                    let na = pa.bound.as_ref().expect("matrix node").clone();
+                    let nb = pb.bound.as_ref().expect("matrix node").clone();
+                    let tau = match approx {
+                        Approx::Tau(t) => t,
+                        // Valid-ratio targets tune over the propagated
+                        // bounds — exact for leaf-fed nodes, conservative
+                        // (τ errs low, keeping more work) downstream.
+                        Approx::ValidRatio(r) => {
+                            tuner::tune_tau(&na, &nb, r, TuneParams::default())?.tau
+                        }
+                    };
+                    let fp = Fingerprint::derive("spamm", &[pa.fp, pb.fp], &[tau]);
+                    // The bound is exact — hence the schedule final — when
+                    // both inputs carry exact norms (operand leaves) or
+                    // τ = 0 prunes nothing.  Downstream τ > 0 schedules
+                    // are provisional: execution refreshes exact norms
+                    // from the resident tiles and rebuilds (cache-keyed
+                    // on the derived fingerprints, so re-submits hit).
+                    let inputs_exact = matches!(
+                        (&planned[a.0].kind, &planned[b.0].kind),
+                        (NodeKind::Operand { .. }, NodeKind::Operand { .. })
+                    );
+                    let pinned = inputs_exact || tau == 0.0;
+                    let sched = if pinned && cfg.cache_enabled {
+                        caches.schedule_via(
+                            Some(pa.fp),
+                            Some(pb.fp),
+                            tau,
+                            &na,
+                            &nb,
+                            &mut front,
+                        )?
+                    } else {
+                        Arc::new(Schedule::build(&na, &nb, tau)?)
+                    };
+                    let bound = Arc::new(sched.bound_normmap(&na, &nb));
+                    PlannedNode {
+                        kind: *kind,
+                        fp,
+                        rows: pa.rows,
+                        cols: pb.cols,
+                        tile_rows: pa.tile_rows,
+                        tile_cols: pb.tile_cols,
+                        tau,
+                        bound: Some(bound),
+                        sched: pinned.then_some(sched),
+                        uses: uses[idx],
+                    }
+                }
+                NodeKind::Axpby { alpha, x, beta, y } => {
+                    let (px, py) = (&planned[x.0], &planned[y.0]);
+                    if px.rows != py.rows || px.cols != py.cols {
+                        return Err(Error::Shape(format!(
+                            "expr axpby: {}x{} vs {}x{}",
+                            px.rows, px.cols, py.rows, py.cols
+                        )));
+                    }
+                    let (nx, ny) = (
+                        px.bound.as_ref().expect("matrix node"),
+                        py.bound.as_ref().expect("matrix node"),
+                    );
+                    let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
+                    for i in 0..px.tile_rows {
+                        for j in 0..px.tile_cols {
+                            bound[(i, j)] =
+                                alpha.abs() * nx[(i, j)] + beta.abs() * ny[(i, j)];
+                        }
+                    }
+                    PlannedNode {
+                        kind: *kind,
+                        fp: Fingerprint::derive("axpby", &[px.fp, py.fp], &[alpha, beta]),
+                        rows: px.rows,
+                        cols: px.cols,
+                        tile_rows: px.tile_rows,
+                        tile_cols: px.tile_cols,
+                        tau: 0.0,
+                        bound: Some(Arc::new(bound)),
+                        sched: None,
+                        uses: uses[idx],
+                    }
+                }
+                NodeKind::Scale { s, x } => {
+                    let px = &planned[x.0];
+                    let nx = px.bound.as_ref().expect("matrix node");
+                    let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
+                    for i in 0..px.tile_rows {
+                        for j in 0..px.tile_cols {
+                            bound[(i, j)] = s.abs() * nx[(i, j)];
+                        }
+                    }
+                    PlannedNode {
+                        kind: *kind,
+                        fp: Fingerprint::derive("scale", &[px.fp], &[s]),
+                        rows: px.rows,
+                        cols: px.cols,
+                        tile_rows: px.tile_rows,
+                        tile_cols: px.tile_cols,
+                        tau: 0.0,
+                        bound: Some(Arc::new(bound)),
+                        sched: None,
+                        uses: uses[idx],
+                    }
+                }
+                NodeKind::AddDiag { shift, x } => {
+                    let px = &planned[x.0];
+                    if px.rows != px.cols {
+                        return Err(Error::Shape(format!(
+                            "expr add_diag: matrix must be square, got {}x{}",
+                            px.rows, px.cols
+                        )));
+                    }
+                    let nx = px.bound.as_ref().expect("matrix node");
+                    let l = lonum;
+                    let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
+                    for i in 0..px.tile_rows {
+                        for j in 0..px.tile_cols {
+                            let mut v = nx[(i, j)];
+                            if i == j {
+                                // ‖σ·I restricted to this tile‖_F.
+                                let d = px.rows.min((i + 1) * l).saturating_sub(i * l);
+                                v += shift.abs() * (d as f32).sqrt();
+                            }
+                            bound[(i, j)] = v;
+                        }
+                    }
+                    PlannedNode {
+                        kind: *kind,
+                        fp: Fingerprint::derive("add_diag", &[px.fp], &[shift]),
+                        rows: px.rows,
+                        cols: px.cols,
+                        tile_rows: px.tile_rows,
+                        tile_cols: px.tile_cols,
+                        tau: 0.0,
+                        bound: Some(Arc::new(bound)),
+                        sched: None,
+                        uses: uses[idx],
+                    }
+                }
+                NodeKind::DiffNorm { x, y } => {
+                    let (px, py) = (&planned[x.0], &planned[y.0]);
+                    if px.rows != py.rows || px.cols != py.cols {
+                        return Err(Error::Shape(format!(
+                            "expr diff_fnorm: {}x{} vs {}x{}",
+                            px.rows, px.cols, py.rows, py.cols
+                        )));
+                    }
+                    PlannedNode {
+                        kind: *kind,
+                        fp: Fingerprint::derive("diff_fnorm", &[px.fp, py.fp], &[]),
+                        rows: px.rows,
+                        cols: px.cols,
+                        tile_rows: px.tile_rows,
+                        tile_cols: px.tile_cols,
+                        tau: 0.0,
+                        bound: None,
+                        sched: None,
+                        uses: uses[idx],
+                    }
+                }
+            };
+            planned.push(node);
+        }
+        front.schedule_secs = t_sched.elapsed().as_secs_f64();
+
+        Ok(ExprPlan {
+            lonum,
+            nodes: planned,
+            root: root.0,
+            keeps: self.keeps.iter().map(|k| k.0).collect(),
+            inputs: bound_inputs,
+            front,
+            prepare_secs: t_prepare.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One bound graph input.
+pub enum ExprSource<'a> {
+    /// A host matrix — padded and fingerprinted at prepare.
+    Host(&'a Matrix),
+    /// An already padded + fingerprinted operand (a session store entry):
+    /// no re-pad, no re-hash.
+    Padded(Arc<PaddedMatrix>, Fingerprint),
+    /// A previous execution's device-resident result — the chaining hook:
+    /// fingerprint and exact normmap ride along, zero host work.
+    Resident(&'a ExprValue),
+}
+
+/// A device-resident expression result: refcounted tile handles plus the
+/// exact tile-norm map, never materialized on host until
+/// [`ExprValue::to_matrix`].  Cloning shares the underlying tiles.
+#[derive(Clone)]
+pub struct ExprValue {
+    pub(crate) inner: Arc<ResidentOperand>,
+}
+
+impl ExprValue {
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+
+    /// Logical (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.inner.logical_rows(), self.inner.logical_cols())
+    }
+
+    /// ‖·‖_F computed from the resident tiles (bitwise identical to
+    /// `Matrix::fnorm` of the downloaded matrix).
+    pub fn fnorm(&self) -> f64 {
+        self.inner.fnorm()
+    }
+
+    /// Device bytes held by this value's tiles.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
+    }
+
+    /// Download to host, cropped to the logical shape — the one transfer
+    /// an expression result pays, at the very end.
+    pub fn to_matrix(&self) -> Matrix {
+        self.inner.to_matrix()
+    }
+}
+
+enum PlannedInput {
+    Host {
+        padded: Arc<PaddedMatrix>,
+        fp: Fingerprint,
+    },
+    Resident(ExprValue),
+}
+
+struct PlannedNode {
+    kind: NodeKind,
+    fp: Fingerprint,
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    /// Resolved τ (spamm nodes; 0.0 elsewhere).
+    tau: f32,
+    /// Propagated tile-norm upper bound (exact for leaves; None for
+    /// scalar nodes).
+    bound: Option<Arc<Matrix>>,
+    /// Pinned schedule when the bound is already exact (leaf-fed or
+    /// τ = 0) — cache eviction cannot un-prepare those nodes.
+    sched: Option<Arc<Schedule>>,
+    /// Consumers + root/keep references; execution frees an
+    /// intermediate's tiles when this many uses have retired.
+    uses: usize,
+}
+
+/// A prepared expression: shapes resolved, τ fixed, bounds propagated,
+/// derived fingerprints assigned.  Execute with
+/// [`Coordinator::execute_expr`] (any number of times — warm re-submits
+/// ride the schedule cache and the residency pool).
+pub struct ExprPlan {
+    lonum: usize,
+    nodes: Vec<PlannedNode>,
+    root: usize,
+    keeps: Vec<usize>,
+    inputs: Vec<PlannedInput>,
+    front: MultiplyStats,
+    prepare_secs: f64,
+}
+
+impl ExprPlan {
+    /// One-time host-side analysis cost of `prepare`.
+    pub fn prepare_secs(&self) -> f64 {
+        self.prepare_secs
+    }
+
+    /// Prepare-phase counters (leaf norm cache hits/misses, bound and
+    /// schedule clocks).
+    pub fn front(&self) -> &MultiplyStats {
+        &self.front
+    }
+
+    /// The τ the *root-producing* spamm chain resolved to: τ of the last
+    /// spamm node in the plan (None for spamm-free graphs).
+    pub fn final_tau(&self) -> Option<f32> {
+        self.nodes
+            .iter()
+            .rev()
+            .find(|n| matches!(n.kind, NodeKind::Spamm { .. }))
+            .map(|n| n.tau)
+    }
+
+    /// Logical shape of the root output.
+    pub fn output_shape(&self) -> (usize, usize) {
+        (self.nodes[self.root].rows, self.nodes[self.root].cols)
+    }
+
+    /// Fingerprints of the bound inputs (session pin bookkeeping).
+    pub fn input_fingerprints(&self) -> Vec<Fingerprint> {
+        self.inputs
+            .iter()
+            .map(|i| match i {
+                PlannedInput::Host { fp, .. } => *fp,
+                PlannedInput::Resident(v) => v.fingerprint(),
+            })
+            .collect()
+    }
+}
+
+/// Per-node execution record.
+#[derive(Clone, Debug)]
+pub struct ExprNodeReport {
+    pub node: NodeId,
+    /// "spamm" | "axpby" | "scale" | "add_diag" | "diff_fnorm".
+    pub op: &'static str,
+    /// Schedule valid ratio (spamm nodes; 1.0 elsewhere).
+    pub valid_ratio: f64,
+    pub wall_secs: f64,
+    /// ‖result‖_F from the resident tiles (0.0 for scalar nodes).
+    pub result_fnorm: f64,
+    pub stats: MultiplyStats,
+}
+
+/// Result of one expression execution.
+///
+/// The root output stays device-resident in [`ExprReport::value`];
+/// download it with [`ExprReport::to_matrix`] when (and only when) a
+/// host copy is needed — chained drivers that feed `value` into the
+/// next graph never pay the transfer.
+pub struct ExprReport {
+    /// Root output, still device-resident — feed it back as
+    /// [`ExprSource::Resident`] to chain without a host round-trip.
+    pub value: ExprValue,
+    /// Values of nodes retained with [`ExprGraph::keep`].
+    pub kept: Vec<(NodeId, ExprValue)>,
+    /// Scalar node results ([`ExprGraph::diff_fnorm`]).
+    pub scalars: Vec<(NodeId, f64)>,
+    /// Per-node breakdown, in execution order (compute nodes only).
+    pub nodes: Vec<ExprNodeReport>,
+    /// Aggregate over all nodes (stages, caches, residency, transfer).
+    pub stats: MultiplyStats,
+    /// Wall clock of the node loop (compile/warm-up excluded, like the
+    /// coordinator's timing protocol).
+    pub wall_secs: f64,
+    pub compile_secs: f64,
+}
+
+impl ExprReport {
+    /// Download the root output to host, cropped to the logical shape —
+    /// the run's one (optional, caller-triggered) result transfer.
+    pub fn to_matrix(&self) -> Matrix {
+        self.value.to_matrix()
+    }
+
+    pub fn scalar(&self, id: NodeId) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| *n == id).map(|(_, v)| *v)
+    }
+
+    pub fn kept_value(&self, id: NodeId) -> Option<&ExprValue> {
+        self.kept.iter().find(|(n, _)| *n == id).map(|(_, v)| v)
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&ExprNodeReport> {
+        self.nodes.iter().find(|r| r.node == id)
+    }
+}
+
+/// A runtime value flowing between nodes.
+#[derive(Clone)]
+enum RunVal {
+    Host {
+        padded: Arc<PaddedMatrix>,
+        fp: Fingerprint,
+    },
+    Resident(ExprValue),
+}
+
+impl RunVal {
+    fn as_operand(&self) -> (TileSource<'_>, Fingerprint) {
+        match self {
+            RunVal::Host { padded, fp } => (TileSource::Host(padded.as_ref()), *fp),
+            RunVal::Resident(v) => (TileSource::Resident(v.inner.as_ref()), v.fingerprint()),
+        }
+    }
+
+    /// One padded row segment: tile row `ti`, in-tile row `r`, tile
+    /// column `tj`.
+    fn row_segment(&self, ti: usize, r: usize, tj: usize, l: usize) -> &[f32] {
+        match self {
+            RunVal::Host { padded, .. } => {
+                let cols = padded.inner.cols();
+                &padded.inner.data()[(ti * l + r) * cols + tj * l..][..l]
+            }
+            RunVal::Resident(v) => v.inner.row_segment(ti, r, tj),
+        }
+    }
+}
+
+/// Resolve one input tile through the pool (hits for resident tiles,
+/// upload-once for host leaves), falling back to a direct copy when
+/// residency is off.
+fn stage_tile(
+    pool: Option<&ResidencyPool>,
+    src: TileSource<'_>,
+    fp: Fingerprint,
+    ti: usize,
+    tj: usize,
+    dst: &mut [f32],
+    stats: &mut MultiplyStats,
+) {
+    let l2 = src.lonum() * src.lonum();
+    let tile_bytes = (l2 * std::mem::size_of::<f32>()) as u64;
+    match pool {
+        Some(pool) => {
+            let got = pool.acquire(TileKey::new(fp, (ti, tj)), l2, |d| {
+                src.copy_tile(ti, tj, d)
+            });
+            dst[..l2].copy_from_slice(&got.handle.data);
+            if got.hit {
+                stats.residency_hits += 1;
+                stats.transfer_saved_bytes += tile_bytes;
+            } else {
+                stats.residency_misses += 1;
+                stats.transfer_bytes += tile_bytes;
+            }
+            stats.residency_evictions += got.evicted;
+        }
+        None => src.copy_tile(ti, tj, dst),
+    }
+}
+
+/// Fold a node's stats (stages + cache counters + product counts) into
+/// the aggregate.
+fn fold_stats(agg: &mut MultiplyStats, s: &MultiplyStats) {
+    agg.absorb_stages(s);
+    agg.norm_secs += s.norm_secs;
+    agg.schedule_secs += s.schedule_secs;
+    agg.norm_cache_hits += s.norm_cache_hits;
+    agg.norm_cache_misses += s.norm_cache_misses;
+    agg.schedule_cache_hits += s.schedule_cache_hits;
+    agg.schedule_cache_misses += s.schedule_cache_misses;
+    agg.valid_products += s.valid_products;
+    agg.total_products += s.total_products;
+}
+
+impl Coordinator {
+    /// Prepare an expression graph over concrete inputs (host-side: τ
+    /// resolution, bound propagation, schedule pinning — no device work).
+    pub fn prepare_expr(
+        &self,
+        g: &ExprGraph,
+        inputs: &[ExprSource<'_>],
+    ) -> Result<ExprPlan> {
+        g.prepare(self.caches(), self.config(), inputs)
+    }
+
+    /// Execute a prepared expression with device-resident intermediates.
+    /// Runs on device 0's pool and a fresh runtime; the session worker
+    /// passes its long-lived runtime via
+    /// [`Coordinator::execute_expr_on`].
+    pub fn execute_expr(&self, plan: &ExprPlan) -> Result<ExprReport> {
+        self.execute_expr_on(None, plan)
+    }
+
+    /// [`Coordinator::execute_expr`] with an optional caller-owned
+    /// resident runtime (compiled executables persist across calls).
+    pub fn execute_expr_on(
+        &self,
+        resident: Option<&Runtime>,
+        plan: &ExprPlan,
+    ) -> Result<ExprReport> {
+        let cfg = self.config();
+        if plan.lonum != cfg.lonum {
+            return Err(Error::Config(format!(
+                "expr plan was prepared at lonum {}, config wants {}",
+                plan.lonum, cfg.lonum
+            )));
+        }
+        let lonum = plan.lonum;
+        let l2 = lonum * lonum;
+        let pool = self.residency_pools().first().map(|p| p.as_ref());
+
+        let owned;
+        let rt: &Runtime = match resident {
+            Some(rt) => rt,
+            None => {
+                owned = Runtime::new(self.bundle())?;
+                &owned
+            }
+        };
+        // Warm up every tile-GEMM and axpby bucket the plan may use —
+        // compile time is excluded from node walls, the coordinator's
+        // timing protocol.
+        let compile0 = rt.compile_secs();
+        let precision = cfg.precision.as_str();
+        let warm: Vec<String> = rt
+            .bundle()
+            .names()
+            .filter(|n| {
+                (n.starts_with(&format!("tilegemm_l{lonum}_")) && n.ends_with(precision))
+                    || n.starts_with(&format!("axpby_l{lonum}_"))
+            })
+            .map(|s| s.to_string())
+            .collect();
+        for name in &warm {
+            rt.warmup(&[name.as_str()])?;
+        }
+        let axpby_buckets = rt.bundle().axpby_buckets(lonum);
+
+        let span = Instant::now();
+        let mut uses: Vec<usize> = plan.nodes.iter().map(|n| n.uses).collect();
+        let mut values: Vec<Option<RunVal>> = (0..plan.nodes.len()).map(|_| None).collect();
+        let mut scalars: Vec<(NodeId, f64)> = Vec::new();
+        let mut reports: Vec<ExprNodeReport> = Vec::new();
+        let mut agg = MultiplyStats::default();
+
+        for idx in 0..plan.nodes.len() {
+            let node = &plan.nodes[idx];
+            match node.kind {
+                NodeKind::Operand { slot } => {
+                    values[idx] = Some(match &plan.inputs[slot] {
+                        PlannedInput::Host { padded, fp } => RunVal::Host {
+                            padded: padded.clone(),
+                            fp: *fp,
+                        },
+                        PlannedInput::Resident(v) => RunVal::Resident(v.clone()),
+                    });
+                }
+                NodeKind::Spamm { a, b, .. } => {
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let va = values[a.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: spamm input value missing".into())
+                    })?;
+                    let vb = values[b.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: spamm input value missing".into())
+                    })?;
+                    let tau = node.tau;
+                    let (src_a, fa) = va.as_operand();
+                    let (src_b, fb) = vb.as_operand();
+                    // Schedule: pinned (exact at prepare) where possible,
+                    // otherwise rebuilt from exact norms — leaf norms via
+                    // the keyed cache, intermediate norms refreshed from
+                    // the resident tiles (no host recompute).
+                    let t = Instant::now();
+                    let sched: Arc<Schedule> = match &node.sched {
+                        Some(s) => {
+                            nstats.norms_propagated += 1;
+                            s.clone()
+                        }
+                        None => {
+                            let na = self.exact_norm(&va, &plan.nodes[a.0], &mut nstats)?;
+                            let nb = self.exact_norm(&vb, &plan.nodes[b.0], &mut nstats)?;
+                            let t_s = Instant::now();
+                            let sched = if cfg.cache_enabled {
+                                self.caches().schedule_via(
+                                    Some(fa),
+                                    Some(fb),
+                                    tau,
+                                    &na,
+                                    &nb,
+                                    &mut nstats,
+                                )?
+                            } else {
+                                Arc::new(Schedule::build(&na, &nb, tau)?)
+                            };
+                            nstats.schedule_secs = t_s.elapsed().as_secs_f64();
+                            sched
+                        }
+                    };
+                    nstats.norm_secs = t.elapsed().as_secs_f64() - nstats.schedule_secs;
+                    nstats.valid_products = sched.valid_products();
+                    nstats.total_products = sched.total_products();
+                    nstats.valid_ratio = sched.valid_ratio();
+
+                    let all_tiles: Vec<(usize, usize)> = (0..node.tile_rows)
+                        .flat_map(|i| (0..node.tile_cols).map(move |j| (i, j)))
+                        .collect();
+                    let mut sink = TileAccumulator::new(lonum, all_tiles.iter().copied());
+                    execute_batches(
+                        rt,
+                        cfg,
+                        pool,
+                        Operand {
+                            src: src_a,
+                            fp: Some(fa),
+                        },
+                        Operand {
+                            src: src_b,
+                            fp: Some(fb),
+                        },
+                        &mut sink,
+                        &sched,
+                        &[all_tiles.as_slice()],
+                        &mut nstats,
+                    )?;
+                    // Scatter lands straight in the pool under the derived
+                    // fingerprint; the exact tile norms are computed here
+                    // (device-side get-norm) for downstream schedules.
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        sink.into_tiles(),
+                        pool,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "spamm",
+                        valid_ratio: sched.valid_ratio(),
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::Axpby { alpha, x, beta, y } => {
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: axpby input value missing".into())
+                    })?;
+                    let vy = values[y.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: axpby input value missing".into())
+                    })?;
+                    let tiles = self.run_axpby(
+                        rt,
+                        pool,
+                        &axpby_buckets,
+                        alpha,
+                        &vx,
+                        beta,
+                        &vy,
+                        node,
+                        lonum,
+                        &mut nstats,
+                    )?;
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        tiles,
+                        pool,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.valid_ratio = 1.0;
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "axpby",
+                        valid_ratio: 1.0,
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::Scale { s, x } | NodeKind::AddDiag { shift: s, x } => {
+                    let is_scale = matches!(node.kind, NodeKind::Scale { .. });
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: input value missing".into())
+                    })?;
+                    let (src, fp) = vx.as_operand();
+                    let mut tiles = Vec::with_capacity(node.tile_rows * node.tile_cols);
+                    for ti in 0..node.tile_rows {
+                        for tj in 0..node.tile_cols {
+                            // Stage straight into the output tile (one
+                            // copy), then apply the elementwise op.
+                            let mut out = vec![0.0f32; l2];
+                            stage_tile(pool, src, fp, ti, tj, &mut out, &mut nstats);
+                            if is_scale {
+                                for v in &mut out {
+                                    *v *= s;
+                                }
+                            } else if ti == tj {
+                                // X + σI: only diagonal tiles change.
+                                for r in 0..lonum {
+                                    if ti * lonum + r >= node.rows {
+                                        break;
+                                    }
+                                    out[r * lonum + r] += s;
+                                }
+                            }
+                            tiles.push(((ti, tj), out));
+                        }
+                    }
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        tiles,
+                        pool,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.valid_ratio = 1.0;
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: if is_scale { "scale" } else { "add_diag" },
+                        valid_ratio: 1.0,
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::DiffNorm { x, y } => {
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: diff_fnorm input value missing".into())
+                    })?;
+                    let vy = values[y.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: diff_fnorm input value missing".into())
+                    })?;
+                    // Padded row-major traversal: padding contributes
+                    // exact 0.0 terms, so the sum is bitwise identical to
+                    // `Matrix::error_fnorm` over the logical matrices.
+                    let mut acc = 0.0f64;
+                    for ti in 0..node.tile_rows {
+                        for r in 0..lonum {
+                            for tj in 0..node.tile_cols {
+                                let xs = vx.row_segment(ti, r, tj, lonum);
+                                let ys = vy.row_segment(ti, r, tj, lonum);
+                                for (xv, yv) in xs.iter().zip(ys) {
+                                    let d = (xv - yv) as f64;
+                                    acc += d * d;
+                                }
+                            }
+                        }
+                    }
+                    let out = acc.sqrt();
+                    scalars.push((NodeId(idx), out));
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "diff_fnorm",
+                        valid_ratio: 1.0,
+                        wall_secs: t_node.elapsed().as_secs_f64(),
+                        result_fnorm: 0.0,
+                        stats: MultiplyStats::default(),
+                    });
+                }
+            }
+
+            // Retire inputs whose last consumer just ran: drop the value
+            // (releasing its pin) and free an interior intermediate's
+            // tiles from the pool immediately.
+            let retire = |dep: NodeId,
+                          uses: &mut Vec<usize>,
+                          values: &mut Vec<Option<RunVal>>| {
+                uses[dep.0] -= 1;
+                if uses[dep.0] > 0 {
+                    return;
+                }
+                let interior = !matches!(plan.nodes[dep.0].kind, NodeKind::Operand { .. });
+                if let Some(RunVal::Resident(v)) = values[dep.0].take() {
+                    let fp = v.fingerprint();
+                    drop(v);
+                    if interior {
+                        if let Some(pool) = pool {
+                            pool.remove_operand(fp);
+                        }
+                    }
+                }
+            };
+            match plan.nodes[idx].kind {
+                NodeKind::Operand { .. } => {}
+                NodeKind::Spamm { a, b, .. } => {
+                    retire(a, &mut uses, &mut values);
+                    retire(b, &mut uses, &mut values);
+                }
+                NodeKind::Axpby { x, y, .. } | NodeKind::DiffNorm { x, y } => {
+                    retire(x, &mut uses, &mut values);
+                    retire(y, &mut uses, &mut values);
+                }
+                NodeKind::Scale { x, .. } | NodeKind::AddDiag { x, .. } => {
+                    retire(x, &mut uses, &mut values);
+                }
+            }
+        }
+
+        for r in &reports {
+            fold_stats(&mut agg, &r.stats);
+        }
+        if agg.total_products > 0 {
+            agg.valid_ratio = agg.valid_products as f64 / agg.total_products as f64;
+        }
+        agg.total_secs = span.elapsed().as_secs_f64();
+
+        let value = match values[plan.root].clone() {
+            Some(RunVal::Resident(v)) => v,
+            _ => {
+                return Err(Error::Coordinator(
+                    "expr: root value missing after execution".into(),
+                ))
+            }
+        };
+        let kept = plan
+            .keeps
+            .iter()
+            .filter_map(|&k| match values[k].clone() {
+                Some(RunVal::Resident(v)) => Some((NodeId(k), v)),
+                _ => None,
+            })
+            .collect();
+        Ok(ExprReport {
+            value,
+            kept,
+            scalars,
+            nodes: reports,
+            stats: agg,
+            wall_secs: span.elapsed().as_secs_f64(),
+            compile_secs: rt.compile_secs() - compile0,
+        })
+    }
+
+    /// Drop a chained value's tiles from the device pools.  Only tiles
+    /// with no other live handle are freed, so it is always safe; call
+    /// after the value's last use to reclaim device memory eagerly
+    /// instead of waiting for LRU churn.
+    pub fn evict_value(&self, v: ExprValue) {
+        let fp = v.fingerprint();
+        drop(v);
+        for p in self.residency_pools() {
+            p.remove_operand(fp);
+        }
+    }
+
+    /// Exact tile norms of a spamm input: leaves go through the keyed
+    /// norm cache (hits after prepare), intermediates carry the norms
+    /// refreshed from their resident tiles — never a host recompute.
+    fn exact_norm(
+        &self,
+        val: &RunVal,
+        node: &PlannedNode,
+        stats: &mut MultiplyStats,
+    ) -> Result<Arc<Matrix>> {
+        match val {
+            RunVal::Host { padded, fp } => {
+                if self.config().cache_enabled {
+                    self.caches()
+                        .normmap_keyed(*fp, stats, || Ok(normmap(padded)))
+                } else {
+                    // Leaf bounds are exact normmaps, recorded at prepare.
+                    Ok(node.bound.clone().expect("leaf bound is its normmap"))
+                }
+            }
+            RunVal::Resident(v) => {
+                stats.norms_refreshed += 1;
+                Ok(v.inner.normmap().clone())
+            }
+        }
+    }
+
+    /// Batched device-side α·X + β·Y over the full tile grid, chunked by
+    /// the bundle's axpby buckets (element-wise, so chunking cannot
+    /// change the result); bundles without axpby artifacts fall back to
+    /// the same arithmetic on the staged tiles.
+    #[allow(clippy::too_many_arguments)]
+    fn run_axpby(
+        &self,
+        rt: &Runtime,
+        pool: Option<&ResidencyPool>,
+        buckets: &[usize],
+        alpha: f32,
+        vx: &RunVal,
+        beta: f32,
+        vy: &RunVal,
+        node: &PlannedNode,
+        lonum: usize,
+        stats: &mut MultiplyStats,
+    ) -> Result<Vec<((usize, usize), Vec<f32>)>> {
+        let l2 = lonum * lonum;
+        let (src_x, fpx) = vx.as_operand();
+        let (src_y, fpy) = vy.as_operand();
+        let ids: Vec<(usize, usize)> = (0..node.tile_rows)
+            .flat_map(|i| (0..node.tile_cols).map(move |j| (i, j)))
+            .collect();
+        let mut tiles: Vec<((usize, usize), Vec<f32>)> = Vec::with_capacity(ids.len());
+        let mut rest: &[(usize, usize)] = &ids;
+        while !rest.is_empty() {
+            let take = buckets
+                .iter()
+                .rev()
+                .find(|&&b| b <= rest.len())
+                .copied()
+                .unwrap_or(rest.len())
+                .min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            rest = tail;
+            if buckets.is_empty() {
+                // No device kernel in this bundle: identical arithmetic
+                // on the staged tiles (still zero host round-trips for
+                // resident inputs).
+                let mut xb = vec![0.0f32; l2];
+                let mut yb = vec![0.0f32; l2];
+                for &(ti, tj) in chunk {
+                    stage_tile(pool, src_x, fpx, ti, tj, &mut xb, stats);
+                    stage_tile(pool, src_y, fpy, ti, tj, &mut yb, stats);
+                    let out: Vec<f32> = xb
+                        .iter()
+                        .zip(&yb)
+                        .map(|(&xv, &yv)| alpha * xv + beta * yv)
+                        .collect();
+                    tiles.push(((ti, tj), out));
+                }
+                continue;
+            }
+            let cap = rt
+                .bundle()
+                .axpby(chunk.len(), lonum)?
+                .param_usize("batch")
+                .unwrap_or(chunk.len());
+            let mut xb = vec![0.0f32; cap * l2];
+            let mut yb = vec![0.0f32; cap * l2];
+            for (slot, &(ti, tj)) in chunk.iter().enumerate() {
+                stage_tile(
+                    pool,
+                    src_x,
+                    fpx,
+                    ti,
+                    tj,
+                    &mut xb[slot * l2..(slot + 1) * l2],
+                    stats,
+                );
+                stage_tile(
+                    pool,
+                    src_y,
+                    fpy,
+                    ti,
+                    tj,
+                    &mut yb[slot * l2..(slot + 1) * l2],
+                    stats,
+                );
+            }
+            let t = Instant::now();
+            let out = rt.tile_axpby(&xb, &yb, alpha, beta, cap, lonum)?;
+            stats.exec_secs += t.elapsed().as_secs_f64();
+            stats.batches += 1;
+            for (slot, &(ti, tj)) in chunk.iter().enumerate() {
+                tiles.push(((ti, tj), out[slot * l2..(slot + 1) * l2].to_vec()));
+            }
+        }
+        Ok(tiles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_builder_tracks_slots_and_uses() {
+        let mut g = ExprGraph::new();
+        let a = g.operand();
+        let p2 = g.spamm(a, a, Approx::Tau(0.0));
+        let p3 = g.spamm(p2, a, Approx::Tau(0.0));
+        let next = g.axpby(3.0, p2, -2.0, p3);
+        let idem = g.diff_fnorm(p2, a);
+        g.keep(p2);
+        g.keep(p2); // duplicate keep is a no-op
+        g.output(next);
+        let _ = idem;
+        assert_eq!(g.input_count(), 1);
+        assert_eq!(g.node_count(), 5);
+        assert_eq!(g.keeps.len(), 1);
+        assert_eq!(g.root, Some(next));
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar node")]
+    fn scalar_nodes_cannot_feed_matrix_ops() {
+        let mut g = ExprGraph::new();
+        let a = g.operand();
+        let d = g.diff_fnorm(a, a);
+        g.spamm(d, a, Approx::Tau(0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "computed node")]
+    fn output_must_be_computed() {
+        let mut g = ExprGraph::new();
+        let a = g.operand();
+        g.output(a);
+    }
+
+    #[test]
+    fn prepare_rejects_missing_output_and_bad_arity() {
+        let caches = ExecCaches::new();
+        let cfg = SpammConfig::default();
+        let mut g = ExprGraph::new();
+        let a = g.operand();
+        let _ = g.spamm(a, a, Approx::Tau(0.0));
+        let m = Matrix::decay_exponential(64, 1.0, 0.5, 1);
+        // No output node.
+        assert!(g.prepare(&caches, &cfg, &[ExprSource::Host(&m)]).is_err());
+        let mut g2 = ExprGraph::new();
+        let a2 = g2.operand();
+        let p = g2.spamm(a2, a2, Approx::Tau(0.0));
+        g2.output(p);
+        // Arity mismatch.
+        assert!(g2.prepare(&caches, &cfg, &[]).is_err());
+        // Shape mismatch inside the graph.
+        let mut g3 = ExprGraph::new();
+        let x = g3.operand();
+        let y = g3.operand();
+        let p3 = g3.spamm(x, y, Approx::Tau(0.0));
+        g3.output(p3);
+        let rect = Matrix::randn(64, 96, 2);
+        let err = g3.prepare(
+            &caches,
+            &cfg,
+            &[ExprSource::Host(&rect), ExprSource::Host(&rect)],
+        );
+        assert!(err.is_err(), "inner dims 96 vs 64 must be rejected");
+    }
+
+    #[test]
+    fn prepare_propagates_bounds_and_derives_fingerprints() {
+        let caches = ExecCaches::new();
+        let cfg = SpammConfig::default();
+        let mut g = ExprGraph::new();
+        let a = g.operand();
+        let p2 = g.spamm(a, a, Approx::Tau(1e-4));
+        let p3 = g.spamm(p2, a, Approx::Tau(1e-4));
+        g.output(p3);
+        let m = Matrix::decay_exponential(96, 1.0, 0.5, 3);
+        let plan = g
+            .prepare(&caches, &cfg, &[ExprSource::Host(&m)])
+            .unwrap();
+        assert_eq!(plan.output_shape(), (96, 96));
+        assert_eq!(plan.final_tau(), Some(1e-4));
+        // Derived fingerprints are distinct from the leaf and each other.
+        let fps: Vec<Fingerprint> = plan.nodes.iter().map(|n| n.fp).collect();
+        assert_ne!(fps[0], fps[1]);
+        assert_ne!(fps[1], fps[2]);
+        assert_ne!(fps[0], fps[2]);
+        // Leaf-fed node pins its schedule; the downstream τ>0 node
+        // (intermediate input) stays provisional for the exact refresh.
+        assert!(plan.nodes[1].sched.is_some());
+        assert!(plan.nodes[2].sched.is_none());
+        // Same graph re-prepared → identical derived fingerprints (the
+        // property that makes warm re-submits cache-sound).
+        let plan2 = g
+            .prepare(&caches, &cfg, &[ExprSource::Host(&m)])
+            .unwrap();
+        for (n1, n2) in plan.nodes.iter().zip(&plan2.nodes) {
+            assert_eq!(n1.fp, n2.fp);
+        }
+        // τ = 0 downstream nodes pin too (bound pruning cannot differ).
+        let mut g0 = ExprGraph::new();
+        let a0 = g0.operand();
+        let q2 = g0.spamm(a0, a0, Approx::Tau(0.0));
+        let q3 = g0.spamm(q2, a0, Approx::Tau(0.0));
+        g0.output(q3);
+        let plan0 = g0
+            .prepare(&caches, &cfg, &[ExprSource::Host(&m)])
+            .unwrap();
+        assert!(plan0.nodes[2].sched.is_some());
+    }
+}

@@ -10,6 +10,7 @@
 //! P batches stream through one per-device pipeline — batch *i+1*'s
 //! uploads overlap batch *i*'s compute; host-level sync is the final join.
 
+pub mod expr;
 pub mod metrics;
 pub mod partition;
 pub mod pipeline;
@@ -17,10 +18,16 @@ pub mod service;
 pub mod session;
 pub mod summa;
 
+pub use expr::{
+    ExprGraph, ExprNodeReport, ExprPlan, ExprReport, ExprSource, ExprValue, NodeId,
+};
 pub use metrics::MultiDeviceReport;
 pub use pipeline::Coordinator;
 pub use service::Approx;
 #[allow(deprecated)]
 pub use service::SpammService;
-pub use session::{Completion, OperandId, PlanId, Priority, SpammSession, StoreStats, Ticket};
+pub use session::{
+    Completion, ExprPlanId, ExprTicket, OperandId, PlanId, Priority, SpammSession, StoreStats,
+    Ticket,
+};
 pub use summa::SummaCoordinator;

@@ -18,6 +18,11 @@
 //! then waits on a barrier; the wall clock runs from that barrier to the
 //! last worker's completion — compile time is excluded, exactly like the
 //! paper excludes warmup (§4.1 "the execution time ignores ... warmup").
+//!
+//! Chained workloads (powers, purification) should prefer the
+//! expression-graph front-end ([`crate::coordinator::expr`]), which runs
+//! whole iteration chains through this same executor with
+//! device-resident intermediates instead of one `multiply` per step.
 
 use std::sync::{Arc, Barrier};
 use std::time::Instant;

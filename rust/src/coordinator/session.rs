@@ -35,6 +35,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::SpammConfig;
+use crate::coordinator::expr::{ExprGraph, ExprNodeReport, ExprPlan, ExprSource};
 use crate::coordinator::pipeline::report_to_stats;
 use crate::coordinator::service::Approx;
 use crate::coordinator::Coordinator;
@@ -70,10 +71,25 @@ impl PlanId {
     }
 }
 
+/// Handle of a prepared expression plan ([`SpammSession::prepare_expr`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExprPlanId(u64);
+
+impl ExprPlanId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
 /// Handle of a submitted job; redeem with [`SpammSession::wait`] or
 /// [`SpammSession::try_recv`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Ticket(u64);
+
+/// Tickets of submitted expression graphs share the session's ticket
+/// namespace — an expression is one queue job, redeemed exactly like a
+/// multiply (its [`Completion`] additionally carries per-node reports).
+pub type ExprTicket = Ticket;
 
 impl Ticket {
     pub fn raw(self) -> u64 {
@@ -116,6 +132,10 @@ impl Priority {
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub ticket: Ticket,
+    /// The producing plan's id.  Multiply and expression plans share one
+    /// id namespace, so this is unique across both; for expression jobs
+    /// it carries the [`ExprPlanId`]'s raw id (redeem expression plans
+    /// with [`SpammSession::release_expr_plan`], not `release_plan`).
     pub plan: PlanId,
     pub priority: Priority,
     /// The (cropped) product matrix.
@@ -133,6 +153,9 @@ pub struct Completion {
     pub device_busy: Vec<f64>,
     /// Per-job pipeline/cache/residency breakdown.
     pub stats: MultiplyStats,
+    /// Per-node reports when this job was an expression graph
+    /// ([`SpammSession::submit_expr`]); empty for plain multiplies.
+    pub nodes: Vec<ExprNodeReport>,
 }
 
 /// Monotonic operand-store counters.
@@ -359,23 +382,49 @@ struct PlanEntry {
     refs: u32,
 }
 
+/// A prepared expression graph: the coordinator-level plan (shapes, τ,
+/// bounds, derived fingerprints — self-contained, including the padded
+/// operands) plus the pin bookkeeping mirrored from multiply plans.
+struct ExprJob {
+    id: u64,
+    plan: ExprPlan,
+    /// Store handles pinned for the plan's lifetime.
+    operands: Vec<OperandId>,
+    /// Operand fingerprints pinned in the device residency pools.
+    fps: Vec<Fingerprint>,
+    /// Whether a job has been charged the prepare cost (cold first job).
+    cold_charged: std::sync::atomic::AtomicBool,
+}
+
 #[derive(Default)]
 struct PlanTable {
     plans: HashMap<u64, PlanEntry>,
     dedup: HashMap<(OperandId, OperandId, ApproxKey), u64>,
+    /// Shared by multiply and expression plans, so the raw id a
+    /// [`Completion`] carries is unique across both tables — a
+    /// `release_plan` on an expression completion's id errors instead of
+    /// silently releasing an unrelated multiply plan.
     next_id: u64,
+    exprs: HashMap<u64, Arc<ExprJob>>,
 }
 
 // ---------------------------------------------------------------------
 // Queue / completions
 // ---------------------------------------------------------------------
 
+/// What a queued job executes: a prepared multiply or a whole prepared
+/// expression graph (one queue slot either way).
+enum JobPayload {
+    Multiply(Arc<Plan>),
+    Expr(Arc<ExprJob>),
+}
+
 struct QueuedJob {
     priority: Priority,
     /// Admission order; FIFO tie-break within a priority class.
     seq: u64,
     ticket: u64,
-    plan: Arc<Plan>,
+    payload: JobPayload,
     submitted: Instant,
 }
 
@@ -718,6 +767,12 @@ impl SpammSession {
                 .map(|e| e.plan.clone())
                 .ok_or_else(|| Error::Session(format!("plan {} not prepared", plan.0)))?
         };
+        self.enqueue(JobPayload::Multiply(plan), priority)
+    }
+
+    /// Shared admission tail of [`SpammSession::submit_with`] and
+    /// [`SpammSession::submit_expr_with`].
+    fn enqueue(&self, payload: JobPayload, priority: Priority) -> Result<Ticket> {
         // Lock order is done → queue everywhere; `done` is held across
         // the push so the ticket lands in `outstanding` atomically with
         // its admission.
@@ -742,7 +797,7 @@ impl SpammSession {
             priority,
             seq,
             ticket,
-            plan,
+            payload,
             submitted: Instant::now(),
         });
         d.outstanding.insert(ticket);
@@ -759,6 +814,115 @@ impl SpammSession {
     pub fn submit_once(&self, a: OperandId, b: OperandId, approx: Approx) -> Result<Ticket> {
         let plan = self.prepare(a, b, approx)?;
         self.submit(plan)
+    }
+
+    // -- expression graphs ---------------------------------------------
+
+    /// Prepare an expression graph over registered operands (bound
+    /// positionally to the graph's input slots).  The plan is
+    /// self-contained — padded operands ride along, so store churn can
+    /// never fail an admitted job — and pins its operands in the store
+    /// and the device residency pools until
+    /// [`SpammSession::release_expr_plan`].  All host-side: τ resolution,
+    /// norm-bound propagation, schedule pinning ([`ExprGraph::prepare`]).
+    pub fn prepare_expr(&self, g: &ExprGraph, inputs: &[OperandId]) -> Result<ExprPlanId> {
+        let resolved: Vec<(Arc<PaddedMatrix>, Fingerprint)> = {
+            let mut store = self.shared.store.lock().unwrap();
+            inputs
+                .iter()
+                .map(|id| store.get(*id))
+                .collect::<Result<Vec<_>>>()?
+        };
+        let sources: Vec<ExprSource<'_>> = resolved
+            .iter()
+            .map(|(p, fp)| ExprSource::Padded(p.clone(), *fp))
+            .collect();
+        let plan = g.prepare(&self.shared.caches, &self.shared.cfg, &sources)?;
+        let fps = plan.input_fingerprints();
+        {
+            let mut store = self.shared.store.lock().unwrap();
+            for id in inputs {
+                store.pin(*id, true);
+            }
+        }
+        for pool in &self.shared.pools {
+            for fp in &fps {
+                pool.pin_operand(*fp);
+            }
+        }
+        let mut plans = self.shared.plans.lock().unwrap();
+        let id = plans.next_id;
+        plans.next_id += 1;
+        plans.exprs.insert(
+            id,
+            Arc::new(ExprJob {
+                id,
+                plan,
+                operands: inputs.to_vec(),
+                fps,
+                cold_charged: std::sync::atomic::AtomicBool::new(false),
+            }),
+        );
+        Ok(ExprPlanId(id))
+    }
+
+    /// τ of the plan's final spamm node (None for spamm-free graphs) and
+    /// the root output shape.
+    pub fn expr_plan_info(&self, id: ExprPlanId) -> Result<(Option<f32>, usize, usize)> {
+        let plans = self.shared.plans.lock().unwrap();
+        plans
+            .exprs
+            .get(&id.0)
+            .map(|e| {
+                let (r, c) = e.plan.output_shape();
+                (e.plan.final_tau(), r, c)
+            })
+            .ok_or_else(|| Error::Session(format!("expr plan {} not prepared", id.0)))
+    }
+
+    /// Enqueue a prepared expression graph at [`Priority::Normal`].  A
+    /// graph is one queue job; its [`Completion`] carries the root
+    /// output, aggregate stats, and per-node reports (`Completion::plan`
+    /// holds the expression plan's raw id).
+    pub fn submit_expr(&self, plan: ExprPlanId) -> Result<ExprTicket> {
+        self.submit_expr_with(plan, Priority::Normal)
+    }
+
+    /// [`SpammSession::submit_expr`] at an explicit priority class.
+    pub fn submit_expr_with(&self, plan: ExprPlanId, priority: Priority) -> Result<ExprTicket> {
+        let job = {
+            let plans = self.shared.plans.lock().unwrap();
+            plans.exprs.get(&plan.0).cloned().ok_or_else(|| {
+                Error::Session(format!("expr plan {} not prepared", plan.0))
+            })?
+        };
+        self.enqueue(JobPayload::Expr(job), priority)
+    }
+
+    /// Release a prepared expression plan, unpinning its operands in the
+    /// store and the residency pools.  Unlike multiply plans, expression
+    /// plans are not deduplicated, so each `prepare_expr` handle is
+    /// released exactly once.  In-flight jobs hold the plan independently
+    /// and always complete.
+    pub fn release_expr_plan(&self, id: ExprPlanId) -> Result<()> {
+        let job = {
+            let mut plans = self.shared.plans.lock().unwrap();
+            plans.exprs.remove(&id.0).ok_or_else(|| {
+                Error::Session(format!("expr plan {} not prepared", id.0))
+            })?
+        };
+        {
+            let mut store = self.shared.store.lock().unwrap();
+            for op in &job.operands {
+                store.pin(*op, false);
+            }
+        }
+        for pool in &self.shared.pools {
+            for fp in &job.fps {
+                pool.unpin_operand(*fp);
+            }
+        }
+        Ok(())
     }
 
     /// Jobs admitted but not yet completed (queued + in flight).
@@ -948,7 +1112,18 @@ fn run_job(
     resident: Option<&Runtime>,
     job: &QueuedJob,
 ) -> Result<Completion> {
-    let plan = &job.plan;
+    match &job.payload {
+        JobPayload::Multiply(plan) => run_multiply_job(coord, resident, job, plan),
+        JobPayload::Expr(e) => run_expr_job(coord, resident, job, e),
+    }
+}
+
+fn run_multiply_job(
+    coord: &Coordinator,
+    resident: Option<&Runtime>,
+    job: &QueuedJob,
+    plan: &Plan,
+) -> Result<Completion> {
     let t0 = Instant::now();
     let rep = coord.multiply_prepared_on(
         resident,
@@ -984,6 +1159,54 @@ fn run_job(
         compute_secs: compute,
         device_busy: rep.device_busy,
         stats,
+        nodes: Vec::new(),
+    })
+}
+
+/// Execute one expression-graph job: the whole graph runs as a single
+/// queue slot with device-resident intermediates; per-node
+/// [`MultiplyStats`] ride back on the completion.
+fn run_expr_job(
+    coord: &Coordinator,
+    resident: Option<&Runtime>,
+    job: &QueuedJob,
+    e: &ExprJob,
+) -> Result<Completion> {
+    let t0 = Instant::now();
+    let rep = coord.execute_expr_on(resident, &e.plan)?;
+    let mut compute = t0.elapsed().as_secs_f64();
+    let mut stats = rep.stats.clone();
+    // Like multiply plans, the one-time prepare cost (leaf normmaps, τ
+    // resolution, bound propagation) is charged to the cold first job.
+    if !e.cold_charged.swap(true, AtomicOrdering::Relaxed) {
+        compute += e.plan.prepare_secs();
+        let front = e.plan.front();
+        stats.norm_secs += front.norm_secs;
+        stats.schedule_secs += front.schedule_secs;
+        stats.norm_cache_hits += front.norm_cache_hits;
+        stats.norm_cache_misses += front.norm_cache_misses;
+        stats.schedule_cache_hits += front.schedule_cache_hits;
+        stats.schedule_cache_misses += front.schedule_cache_misses;
+    }
+    stats.total_secs = compute;
+    let valid_ratio = rep.stats.valid_ratio;
+    Ok(Completion {
+        ticket: Ticket(job.ticket),
+        plan: PlanId(e.id),
+        priority: job.priority,
+        // The completion crosses back to the caller as a host matrix —
+        // this download is the job's one result transfer.
+        c: rep.to_matrix(),
+        tau: e.plan.final_tau().unwrap_or(0.0),
+        valid_ratio,
+        latency_secs: job.submitted.elapsed().as_secs_f64(),
+        compute_secs: compute,
+        // Time inside kernel execution across all nodes — comparable to
+        // the multiply path's per-device busy clocks (the expr wall also
+        // contains host-side scheduling/gather, which is not "busy").
+        device_busy: vec![rep.stats.exec_secs],
+        stats,
+        nodes: rep.nodes,
     })
 }
 
@@ -1148,7 +1371,7 @@ mod tests {
             priority,
             seq,
             ticket: seq,
-            plan: Arc::new(Plan {
+            payload: JobPayload::Multiply(Arc::new(Plan {
                 id: 0,
                 a: OperandId(0),
                 b: OperandId(0),
@@ -1169,7 +1392,7 @@ mod tests {
                 prepare_secs: 0.0,
                 front: MultiplyStats::default(),
                 cold_charged: std::sync::atomic::AtomicBool::new(false),
-            }),
+            })),
             submitted: Instant::now(),
         };
         let mut heap = BinaryHeap::new();

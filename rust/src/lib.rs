@@ -75,6 +75,67 @@
 //! The old `SpammService` (submit whole matrices per call, blocking
 //! FIFO drain) is deprecated and now a thin shim over the session.
 //!
+//! ## Expression graphs
+//!
+//! Iterated workloads — matrix powers (§4.3.1), McWeeny purification —
+//! chain products, and a `multiply`-per-step driver round-trips every
+//! intermediate through the host.  [`coordinator::expr::ExprGraph`]
+//! turns the whole chain into **one prepared plan** with
+//! device-resident intermediates:
+//!
+//! ```text
+//!  host:    A ──put/prepare──┐                         ┌──► C = A⁴ (one download)
+//!                            ▼                         │
+//!  device:  [A tiles]──spamm──►[A² tiles]──spamm──►[A³ tiles]──spamm──►[A⁴]
+//!            pool hit          derived fp ▲            │ freed when last
+//!                              + exact norms at scatter┘ consumer retires
+//! ```
+//!
+//! A spamm node's output tiles scatter straight into the
+//! [`runtime::residency::ResidencyPool`] under a *derived* fingerprint
+//! (hash of input fingerprints + op + τ), the consuming node gathers
+//! them with zero transfer bytes, and step *k+1*'s schedule is built
+//! without pulling step *k* to host: norm upper bounds propagate
+//! through the graph at prepare; exact norms refresh lazily from the
+//! resident output tiles (device-side get-norm) only when τ-pruning
+//! needs them.  `axpby`/`scale`/`add_diag` run as tiled device ops, so
+//! purification's 3P²−2P³ never leaves the pool, and `diff_fnorm`
+//! probes convergence device-side.  The expression path is **bitwise
+//! identical** to the loop path at the same τ.
+//!
+//! Migrating a power/purify loop:
+//!
+//! ```no_run
+//! use cuspamm::prelude::*;
+//!
+//! let bundle = ArtifactBundle::load("artifacts").unwrap();
+//! let coord = Coordinator::new(&bundle, SpammConfig::default()).unwrap();
+//! let a = Matrix::decay_algebraic(1024, 0.1, 0.1, 7);
+//!
+//! // Before: one multiply per step (A² and A³ bounce through host).
+//! // let c2 = coord.multiply(&a, &a, 1e-4).unwrap().c;
+//! // let c3 = coord.multiply(&c2, &a, 1e-4).unwrap().c;
+//! // let c4 = coord.multiply(&c3, &a, 1e-4).unwrap().c;
+//!
+//! // After: one graph, intermediates stay on device.
+//! let mut g = ExprGraph::new();
+//! let leaf = g.operand();
+//! let c2 = g.spamm(leaf, leaf, Approx::Tau(1e-4));
+//! let c3 = g.spamm(c2, leaf, Approx::Tau(1e-4));
+//! let c4 = g.spamm(c3, leaf, Approx::Tau(1e-4));
+//! g.output(c4);
+//! let plan = coord.prepare_expr(&g, &[ExprSource::Host(&a)]).unwrap();
+//! let rep = coord.execute_expr(&plan).unwrap();
+//! println!("‖A⁴‖_F = {} ({} B uploaded)", rep.to_matrix().fnorm(), rep.stats.transfer_bytes);
+//! ```
+//!
+//! `spamm::power::spamm_power` and `spamm::purification::mcweeny_purify`
+//! are thin builders over this API (their `*_loop` twins keep the old
+//! driver as the A/B baseline), sessions queue whole graphs via
+//! `SpammSession::prepare_expr`/`submit_expr` (one ticket per graph,
+//! per-node stats on the completion), and the `power`/`purify` CLI
+//! subcommands expose `--expr` vs `--loop`.
+//!
 //! ## Quick start
 //!
 //! The serving lifecycle — put → prepare → submit → wait:
@@ -136,8 +197,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::SpammConfig;
     pub use crate::coordinator::{
-        Approx, Completion, Coordinator, MultiDeviceReport, OperandId, PlanId, Priority,
-        SpammSession, Ticket,
+        Approx, Completion, Coordinator, ExprGraph, ExprPlanId, ExprReport, ExprSource,
+        ExprTicket, ExprValue, MultiDeviceReport, OperandId, PlanId, Priority, SpammSession,
+        Ticket,
     };
     pub use crate::error::{Error, Result};
     pub use crate::matrix::Matrix;

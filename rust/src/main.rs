@@ -3,6 +3,10 @@
 //!   cuspamm info                          list artifacts + platform
 //!   cuspamm run   --n 1024 --ratio 0.10   tuned SpAMM vs dense, with stats
 //!   cuspamm tune  --n 1024 --ratio 0.10   τ search only (§3.5.2)
+//!   cuspamm power --n 512 --k 4 --expr    A^k chain: expression graph vs
+//!                                         per-step loop (--smoke for the CI
+//!                                         transfer/identity assertion)
+//!   cuspamm purify --n 256 --expr         McWeeny purification, same A/B
 //!   cuspamm cnn   --tau 2.5 --layer conv2 case-study CNN accuracy probe
 //!   cuspamm serve --requests 64           session serving bench (Zipf-hot
 //!                                         operands, priorities; --smoke for
@@ -108,6 +112,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "info" => cmd_info(rest),
         "run" => cmd_run(rest),
         "tune" => cmd_tune(rest),
+        "power" => cmd_power(rest),
+        "purify" => cmd_purify(rest),
         "cnn" => cmd_cnn(rest),
         "serve" => cmd_serve(rest),
         "help" | "--help" | "-h" => {
@@ -115,7 +121,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
                  subcommands:\n  info   list the artifact bundle\n  run    \
                  tuned SpAMM vs dense baseline\n  tune   τ search for a valid \
-                 ratio\n  cnn    case-study CNN accuracy probe\n  serve  \
+                 ratio\n  power  A^k chain — expression graph vs per-step \
+                 loop (--expr/--loop)\n  purify McWeeny purification, same \
+                 A/B\n  cnn    case-study CNN accuracy probe\n  serve  \
                  session serving bench: registered operands, prepared plans, \
                  priority queue\n\nUse `cuspamm <cmd> --help` for options."
             );
@@ -236,6 +244,213 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Load the artifact bundle, falling back to the synthesized offline
+/// hostsim bundle when the default directory is absent (the CI path) —
+/// an explicitly passed `--artifacts` must exist.
+fn load_bundle_or_hostsim(a: &cuspamm::cli::Args) -> Result<ArtifactBundle> {
+    match ArtifactBundle::load(a.get("artifacts")) {
+        Ok(b) => Ok(b),
+        Err(e) if !a.provided("artifacts") => {
+            log::info!("no artifact bundle ({e}); using the offline hostsim bundle");
+            cuspamm::runtime::hostsim::find_or_test_bundle()
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn expr_or_loop(a: &cuspamm::cli::Args) -> Result<bool> {
+    if a.flag("expr") && a.flag("loop") {
+        return Err(Error::Config("pick one of --expr / --loop".into()));
+    }
+    Ok(a.flag("loop"))
+}
+
+fn cmd_power(args: &[String]) -> Result<()> {
+    use cuspamm::spamm::power::{spamm_power, spamm_power_loop};
+
+    let spec = common(Spec::new(
+        "cuspamm power",
+        "A^k power chain — expression graph (device-resident intermediates, \
+         propagated norms) vs the legacy one-multiply-per-step loop",
+    ))
+    .opt("n", "256", "matrix size")
+    .opt("k", "4", "power to compute (k ≥ 2 for a chain)")
+    .opt("tau", "0.0", "SpAMM threshold τ")
+    .opt("seed", "7", "workload seed")
+    .flag("expr", "run the expression-graph path (default)")
+    .flag("loop", "run the legacy one-multiply-per-step path")
+    .flag(
+        "smoke",
+        "CI assertion: run both paths, assert bitwise identity, ≥2x fewer \
+         uploaded bytes on the expr path, and zero host norm recomputes for \
+         intermediates",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let n = a.usize("n")?;
+    let k = a.usize("k")?;
+    let tau = a.f64("tau")? as f32;
+    let m = Matrix::decay_exponential(n, 1.0, 0.5, a.usize("seed")? as u64);
+    if a.flag("smoke") {
+        return power_smoke(&bundle, cfg, &m, k, tau);
+    }
+    let use_loop = expr_or_loop(&a)?;
+    let coord = Coordinator::new(&bundle, cfg)?;
+    let r = if use_loop {
+        spamm_power_loop(&coord, &m, k, tau)?
+    } else {
+        spamm_power(&coord, &m, k, tau)?
+    };
+    println!(
+        "== A^{k} (n={n}, τ={tau:.1e}) via the {} path ==",
+        if use_loop { "loop" } else { "expression" }
+    );
+    println!("  power   valid%    wall(s)    ‖A^p‖_F");
+    for s in &r.steps {
+        println!(
+            "  {:5}   {:6.2}   {:8.4}   {:.4e}",
+            s.power,
+            s.valid_ratio * 100.0,
+            s.wall_secs,
+            s.result_fnorm
+        );
+    }
+    if let Some(pool) = coord.residency_pools().first() {
+        let ps = pool.stats();
+        println!(
+            "  transfers: {} KiB uploaded, {} KiB saved ({} hits / {} misses)",
+            ps.uploaded_bytes / 1024,
+            ps.saved_bytes / 1024,
+            ps.hits,
+            ps.misses
+        );
+    }
+    println!(
+        "  norm cache: {} hit / {} miss (loop pays one miss per intermediate; \
+         expr refreshes norms device-side)",
+        coord.caches().norms.hits(),
+        coord.caches().norms.misses()
+    );
+    Ok(())
+}
+
+/// CI smoke for `power` (`--smoke`): both paths on fresh coordinators —
+/// bitwise identity, the expr path uploads ≤ half the bytes (it never
+/// re-uploads intermediates), and its norm cache sees only the leaf.
+fn power_smoke(
+    bundle: &ArtifactBundle,
+    cfg: SpammConfig,
+    a: &Matrix,
+    k: usize,
+    tau: f32,
+) -> Result<()> {
+    use cuspamm::spamm::power::{spamm_power, spamm_power_loop};
+
+    if !cfg.residency_enabled {
+        return Err(Error::Config(
+            "power --smoke measures pool transfers; run without --no-residency".into(),
+        ));
+    }
+    if k < 3 {
+        return Err(Error::Config(
+            "power --smoke needs k ≥ 3 (at least two chained intermediates)".into(),
+        ));
+    }
+    let c_loop = Coordinator::new(bundle, cfg.clone())?;
+    let c_expr = Coordinator::new(bundle, cfg)?;
+    let looped = spamm_power_loop(&c_loop, a, k, tau)?;
+    let expr = spamm_power(&c_expr, a, k, tau)?;
+    assert_eq!(
+        expr.value.data(),
+        looped.value.data(),
+        "expression path diverged from the loop path"
+    );
+    let up_loop = c_loop.residency_pools()[0].stats().uploaded_bytes;
+    let up_expr = c_expr.residency_pools()[0].stats().uploaded_bytes;
+    println!(
+        "smoke: loop uploaded {} KiB, expr uploaded {} KiB ({:.1}x less)",
+        up_loop / 1024,
+        up_expr / 1024,
+        up_loop as f64 / up_expr.max(1) as f64
+    );
+    assert!(
+        up_expr * 2 <= up_loop,
+        "expr path must upload ≤ half the loop's bytes: {up_expr} vs {up_loop}"
+    );
+    let miss = c_expr.caches().norms.misses();
+    assert!(
+        miss <= 1,
+        "expr path host-recomputed intermediate normmaps ({miss} misses; only \
+         the leaf may miss)"
+    );
+    println!(
+        "smoke: OK — bitwise identical to the loop, ≥2x fewer uploaded bytes, \
+         intermediate norms never recomputed on host"
+    );
+    Ok(())
+}
+
+fn cmd_purify(args: &[String]) -> Result<()> {
+    use cuspamm::spamm::purification::{initial_density, mcweeny_purify, mcweeny_purify_loop};
+
+    let spec = common(Spec::new(
+        "cuspamm purify",
+        "McWeeny purification P ← 3P²−2P³ — expression graph (resident \
+         iterate, device-side combine) vs the per-multiply loop",
+    ))
+    .opt("n", "256", "matrix size")
+    .opt("tau", "1e-6", "SpAMM threshold τ")
+    .opt("iters", "8", "maximum iterations")
+    .opt("tol", "1e-6", "idempotency tolerance ‖P²−P‖_F")
+    .opt("seed", "7", "workload seed")
+    .flag("expr", "run the expression-graph path (default)")
+    .flag("loop", "run the legacy per-multiply path");
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let n = a.usize("n")?;
+    let tau = a.f64("tau")? as f32;
+    let use_loop = expr_or_loop(&a)?;
+    let p0 = initial_density(n, a.usize("seed")? as u64);
+    let coord = Coordinator::new(&bundle, cfg)?;
+    let r = if use_loop {
+        mcweeny_purify_loop(&coord, &p0, tau, a.usize("iters")?, a.f64("tol")?)?
+    } else {
+        mcweeny_purify(&coord, &p0, tau, a.usize("iters")?, a.f64("tol")?)?
+    };
+    println!(
+        "== McWeeny purification (n={n}, τ={tau:.1e}) via the {} path: {} \
+         iterations, converged = {} ==",
+        if use_loop { "loop" } else { "expression" },
+        r.steps.len(),
+        r.converged
+    );
+    println!("  iter   ‖P²−P‖_F    valid% (P²/P³)   wall(s)   combine(s)");
+    for s in &r.steps {
+        println!(
+            "  {:4}   {:.3e}   {:6.2} / {:6.2}   {:7.4}   {:8.5}",
+            s.iter,
+            s.idempotency_err,
+            s.valid_ratio_p2 * 100.0,
+            s.valid_ratio_p3 * 100.0,
+            s.wall_secs,
+            s.combine_secs
+        );
+    }
+    if let Some(pool) = coord.residency_pools().first() {
+        let ps = pool.stats();
+        println!(
+            "  transfers: {} KiB uploaded, {} KiB saved ({} hits / {} misses)",
+            ps.uploaded_bytes / 1024,
+            ps.saved_bytes / 1024,
+            ps.hits,
+            ps.misses
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let spec = common(Spec::new(
         "cuspamm serve",
@@ -268,14 +483,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // The serve path is exercised in CI on every push, where no AOT
     // bundle exists: fall back to the synthesized hostsim bundle unless
     // the caller pointed at a real one.
-    let bundle = match ArtifactBundle::load(a.get("artifacts")) {
-        Ok(b) => b,
-        Err(e) if !a.provided("artifacts") => {
-            log::info!("no artifact bundle ({e}); using the offline hostsim bundle");
-            cuspamm::runtime::hostsim::find_or_test_bundle()?
-        }
-        Err(e) => return Err(e),
-    };
+    let bundle = load_bundle_or_hostsim(&a)?;
     if a.flag("smoke") {
         return serve_smoke(&bundle, cfg, a.f64("ratio")?);
     }

@@ -234,6 +234,44 @@ impl ArtifactBundle {
         v
     }
 
+    /// Smallest batched tile-axpby variant at tile size `lonum` with
+    /// capacity ≥ want (largest available if none fits; caller chunks) —
+    /// the expression graphs' device-side α·X + β·Y combine.
+    pub fn axpby(&self, want: usize, lonum: usize) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == "axpby" && a.param_usize("lonum") == Some(lonum))
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::Artifact(format!(
+                "no axpby artifacts for lonum {lonum}"
+            )));
+        }
+        candidates.sort_by_key(|a| a.param_usize("batch").unwrap_or(0));
+        for a in &candidates {
+            if a.param_usize("batch").unwrap_or(0) >= want {
+                return Ok(a);
+            }
+        }
+        Ok(candidates.last().unwrap())
+    }
+
+    /// Sorted batch capacities of the axpby buckets for `lonum` (empty
+    /// when the bundle carries none — callers fall back to the host-side
+    /// combine).
+    pub fn axpby_buckets(&self, lonum: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == "axpby" && a.param_usize("lonum") == Some(lonum))
+            .filter_map(|a| a.param_usize("batch"))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// τ-tuner for a BDIM×BDIM normmap.
     pub fn tune(&self, bdim: usize) -> Result<&ArtifactMeta> {
         self.get(&format!("tune_b{bdim}"))

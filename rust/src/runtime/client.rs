@@ -160,6 +160,33 @@ impl Runtime {
         Ok(data)
     }
 
+    /// Batched tile linear combination C[b] = α·X[b] + β·Y[b] on
+    /// pre-gathered (batch·L², padded) buffers — the device-side combine
+    /// expression graphs use (e.g. McWeeny's 3P² − 2P³) so chained
+    /// iterations never leave the device.
+    pub fn tile_axpby(
+        &self,
+        x_tiles: &[f32],
+        y_tiles: &[f32],
+        alpha: f32,
+        beta: f32,
+        batch: usize,
+        lonum: usize,
+    ) -> Result<Vec<f32>> {
+        let dims = [batch, lonum, lonum];
+        let out = self.execute(
+            &self.bundle.axpby(batch, lonum)?.name.clone(),
+            &[
+                literal_f32(&dims, x_tiles)?,
+                literal_f32(&dims, y_tiles)?,
+                literal_scalar(alpha)?,
+                literal_scalar(beta)?,
+            ],
+        )?;
+        let (_, data) = literal_to_vec(&out[0])?;
+        Ok(data)
+    }
+
     /// On-device τ search (§3.5.2): normmaps + target ratio → (τ, ratio).
     pub fn tune(&self, na: &Matrix, nb: &Matrix, target: f32) -> Result<(f32, f32)> {
         let bdim = na.rows();

@@ -33,6 +33,9 @@ pub struct HostsimSpec {
     pub getnorm_sizes: Vec<usize>,
     /// Tile-GEMM batch buckets (per precision).
     pub tilegemm_batches: Vec<usize>,
+    /// Batched tile-axpby buckets (f32; the expression graphs' device-side
+    /// α·X + β·Y combine).
+    pub axpby_batches: Vec<usize>,
     /// Normmap BDIMs with an on-device τ tuner.
     pub tune_bdims: Vec<usize>,
     /// Square sizes with a fused single-call SpAMM (f32 only).
@@ -50,6 +53,7 @@ impl Default for HostsimSpec {
             dense_rect: vec![(64, 288, 256), (128, 576, 64)],
             getnorm_sizes: vec![256, 512],
             tilegemm_batches: vec![16, 64, 256],
+            axpby_batches: vec![16, 64, 256],
             tune_bdims: vec![8, 16],
             fused_sizes: vec![256],
             precisions: vec!["f32", "bf16"],
@@ -169,6 +173,23 @@ pub fn write_bundle(dir: impl AsRef<Path>, spec: &HostsimSpec) -> Result<()> {
             )?;
         }
     }
+    for &b in &spec.axpby_batches {
+        // Element-wise linear combination is precision-agnostic here:
+        // one f32 variant per bucket (bf16 rounding happens, as on real
+        // hardware, in the GEMM operands — not in the accumulate/combine).
+        mb.artifact(
+            &format!("axpby_l{l}_b{b}_f32"),
+            "axpby",
+            &[&[b, l, l], &[b, l, l], &[], &[]],
+            1,
+            &[
+                ("batch", b.to_string()),
+                ("lonum", l.to_string()),
+                ("precision", "f32".to_string()),
+            ],
+            &format!("hostsim v1\nkind = axpby\nbatch = {b}\nlonum = {l}\n"),
+        )?;
+    }
     for &n in &spec.getnorm_sizes {
         mb.artifact(
             &format!("getnorm_n{n}_l{l}"),
@@ -276,6 +297,9 @@ mod tests {
         assert!(b.tune(16).is_ok());
         assert!(b.spamm_fused(256, "f32").is_ok());
         assert_eq!(b.tilegemm_buckets(32, "f32"), vec![16, 64, 256]);
+        assert_eq!(b.axpby_buckets(32), vec![16, 64, 256]);
+        assert!(b.axpby(10, 32).is_ok());
+        assert!(b.axpby(10, 64).is_err());
         assert_eq!(b.dense_sizes(), vec![256, 512]);
     }
 

@@ -17,4 +17,4 @@ pub mod residency;
 pub use artifact::{ArtifactBundle, ArtifactMeta};
 pub use client::Runtime;
 pub use devicesim::{BufferId, DevicePool, ExecInput, ExecRequest, HostTensor};
-pub use residency::{ResidencyPool, TileHandle, TileKey};
+pub use residency::{ResidencyPool, ResidentOperand, TileHandle, TileKey};

@@ -29,7 +29,10 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
 use crate::spamm::cache::Fingerprint;
+use crate::spamm::normmap::tile_fnorm;
 use crate::telemetry;
 
 /// One device-resident tile: the "device memory" copy of a LoNum² block.
@@ -226,6 +229,62 @@ impl ResidencyPool {
         }
     }
 
+    /// Register a *device-produced* tile (a scatter-accumulated expression
+    /// intermediate): the data was computed on this device, so no
+    /// host→device transfer happened and the miss/upload counters stay
+    /// untouched — only resident bytes (and, under budget pressure,
+    /// evictions of other tiles) move.  An existing entry under the same
+    /// key is replaced.  Returns the handle, which pins the tile while
+    /// held.
+    pub fn insert(&self, key: TileKey, data: Vec<f32>) -> TileHandle {
+        let bytes = data.len() * std::mem::size_of::<f32>();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.handle.data.len() * std::mem::size_of::<f32>();
+        }
+        evict_for(&mut inner, self.budget, bytes);
+        let handle: TileHandle = Arc::new(DeviceTile { data });
+        inner.map.insert(
+            key,
+            Slot {
+                handle: handle.clone(),
+                seq: 0,
+            },
+        );
+        inner.touch(key);
+        inner.bytes += bytes;
+        inner.stats.resident_bytes = inner.bytes as u64;
+        inner.stats.resident_tiles = inner.map.len() as u64;
+        handle
+    }
+
+    /// Drop every currently-unpinned tile of operand `fp` — the
+    /// expression executor's retirement path: when an intermediate's last
+    /// consumer finishes, its tiles are freed immediately instead of
+    /// lingering as LRU prey.  Tiles with live handles or a store pin
+    /// survive.  Returns the freed tile count.
+    pub fn remove_operand(&self, fp: Fingerprint) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.op_pinned(&fp) {
+            return 0;
+        }
+        let victims: Vec<TileKey> = inner
+            .map
+            .iter()
+            .filter(|(k, s)| k.op == fp && Arc::strong_count(&s.handle) == 1)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in &victims {
+            if let Some(s) = inner.map.remove(k) {
+                inner.bytes -= s.handle.data.len() * std::mem::size_of::<f32>();
+            }
+        }
+        // Stale recency records are lazily discarded by eviction/compact.
+        inner.stats.resident_bytes = inner.bytes as u64;
+        inner.stats.resident_tiles = inner.map.len() as u64;
+        victims.len()
+    }
+
     /// Pin every tile of operand `fp` — resident now or uploaded later —
     /// against eviction.  Store-driven: the session's operand store pins
     /// the operands of every prepared plan so request churn cannot evict
@@ -303,6 +362,174 @@ impl ResidencyPool {
         for k in keep {
             inner.touch(k);
         }
+    }
+}
+
+/// A matrix that lives entirely on one device: the output of an
+/// expression-graph node, held as refcounted tile handles under a
+/// *derived* content fingerprint, never materialized on the host.
+///
+/// Holding the operand pins every tile (handles keep the refcount above
+/// one, and pinned tiles are never evicted), so a consumer's gather
+/// stage is guaranteed pool hits — zero transfer bytes.  The exact
+/// tile-norm map is computed at construction from the freshly
+/// accumulated tiles (the device-side get-norm): bitwise identical to
+/// the host `normmap` of the same content, with no host round-trip.
+pub struct ResidentOperand {
+    fp: Fingerprint,
+    lonum: usize,
+    logical_rows: usize,
+    logical_cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    /// Row-major (tile_rows × tile_cols) handles.
+    tiles: Vec<TileHandle>,
+    /// Exact tile Frobenius norms (device-side get-norm at scatter time).
+    normmap: Arc<Matrix>,
+}
+
+impl ResidentOperand {
+    /// Build from scatter-accumulated output tiles (the executor's
+    /// `TileAccumulator::into_tiles` order: sorted row-major, complete
+    /// grid).  Each tile is registered in `pool` under `fp` (when a pool
+    /// exists) so consuming nodes gather with zero transfer; without a
+    /// pool the handles themselves are the storage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_tiles(
+        fp: Fingerprint,
+        lonum: usize,
+        logical_rows: usize,
+        logical_cols: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        tiles: Vec<((usize, usize), Vec<f32>)>,
+        pool: Option<&ResidencyPool>,
+    ) -> Result<ResidentOperand> {
+        if tiles.len() != tile_rows * tile_cols {
+            return Err(Error::Coordinator(format!(
+                "resident operand: {} tiles for a {}x{} grid",
+                tiles.len(),
+                tile_rows,
+                tile_cols
+            )));
+        }
+        let mut normmap = Matrix::zeros(tile_rows, tile_cols);
+        let mut handles = Vec::with_capacity(tiles.len());
+        for (idx, ((ti, tj), data)) in tiles.into_iter().enumerate() {
+            if (ti * tile_cols + tj) != idx || data.len() != lonum * lonum {
+                return Err(Error::Coordinator(format!(
+                    "resident operand: tile ({ti},{tj}) out of order or mis-sized"
+                )));
+            }
+            normmap[(ti, tj)] = tile_fnorm(&data);
+            let handle = match pool {
+                Some(p) => p.insert(TileKey::new(fp, (ti, tj)), data),
+                None => Arc::new(DeviceTile { data }),
+            };
+            handles.push(handle);
+        }
+        Ok(ResidentOperand {
+            fp,
+            lonum,
+            logical_rows,
+            logical_cols,
+            tile_rows,
+            tile_cols,
+            tiles: handles,
+            normmap: Arc::new(normmap),
+        })
+    }
+
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.fp
+    }
+
+    pub fn lonum(&self) -> usize {
+        self.lonum
+    }
+
+    pub fn logical_rows(&self) -> usize {
+        self.logical_rows
+    }
+
+    pub fn logical_cols(&self) -> usize {
+        self.logical_cols
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols
+    }
+
+    /// Exact tile-norm map (computed device-side at construction).
+    pub fn normmap(&self) -> &Arc<Matrix> {
+        &self.normmap
+    }
+
+    /// Resident bytes held by this operand's tiles.
+    pub fn resident_bytes(&self) -> usize {
+        self.tiles.len() * self.lonum * self.lonum * std::mem::size_of::<f32>()
+    }
+
+    /// Copy tile (ti, tj) into `dst` (row-major lonum²) — the gather
+    /// stage's fill for this source (device-side copy, no host data).
+    pub fn copy_tile(&self, ti: usize, tj: usize, dst: &mut [f32]) {
+        let data = &self.tiles[ti * self.tile_cols + tj].data;
+        dst[..data.len()].copy_from_slice(data);
+    }
+
+    /// One row segment of tile row `ti`, in-tile row `r`, tile column
+    /// `tj` — the building block of padded-row-major traversals.
+    pub fn row_segment(&self, ti: usize, r: usize, tj: usize) -> &[f32] {
+        &self.tiles[ti * self.tile_cols + tj].data[r * self.lonum..(r + 1) * self.lonum]
+    }
+
+    /// ‖·‖_F over the logical matrix, summed in padded row-major order.
+    /// Padding is exactly zero (products of zero-padded operands, axpby
+    /// of zero padding), and adding 0.0 to a non-negative f64 is exact —
+    /// so this equals `Matrix::fnorm` of the downloaded matrix bitwise.
+    pub fn fnorm(&self) -> f64 {
+        let l = self.lonum;
+        let mut acc = 0.0f64;
+        for ti in 0..self.tile_rows {
+            for r in 0..l {
+                for tj in 0..self.tile_cols {
+                    for &x in self.row_segment(ti, r, tj) {
+                        acc += (x as f64) * (x as f64);
+                    }
+                }
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Download to a host matrix, cropped to the logical shape — the one
+    /// host transfer an expression result pays, at the very end.
+    pub fn to_matrix(&self) -> Matrix {
+        let l = self.lonum;
+        let mut out = Matrix::zeros(self.logical_rows, self.logical_cols);
+        for ti in 0..self.tile_rows {
+            for tj in 0..self.tile_cols {
+                let data = &self.tiles[ti * self.tile_cols + tj].data;
+                for r in 0..l {
+                    let gr = ti * l + r;
+                    if gr >= self.logical_rows {
+                        break;
+                    }
+                    let c0 = tj * l;
+                    if c0 >= self.logical_cols {
+                        break;
+                    }
+                    let w = l.min(self.logical_cols - c0);
+                    out.data_mut()[gr * self.logical_cols + c0..][..w]
+                        .copy_from_slice(&data[r * l..r * l + w]);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -482,6 +709,91 @@ mod tests {
         pool.clear();
         assert_eq!(pool.resident_tiles(), 1);
         assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
+    }
+
+    #[test]
+    fn insert_registers_without_upload_counters() {
+        let pool = ResidencyPool::new(0);
+        let h = pool.insert(key(1, (0, 0)), vec![2.0; ELEMS]);
+        assert_eq!(h.data, vec![2.0; ELEMS]);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "device-produced tile: no transfer");
+        assert_eq!(s.uploaded_bytes, 0);
+        assert_eq!(s.resident_tiles, 1);
+        // A later acquire of the same key is a zero-transfer hit.
+        let a = pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!("must hit"));
+        assert!(a.hit);
+        assert_eq!(a.handle.data, vec![2.0; ELEMS]);
+        // Replacing updates the content and keeps bytes balanced.
+        drop((h, a));
+        pool.insert(key(1, (0, 0)), vec![3.0; ELEMS]);
+        assert_eq!(pool.resident_bytes(), TILE_BYTES as usize);
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).handle.data[0] == 3.0);
+    }
+
+    #[test]
+    fn remove_operand_frees_unpinned_tiles_only() {
+        let pool = ResidencyPool::new(0);
+        let held = pool.insert(key(1, (0, 0)), vec![1.0; ELEMS]);
+        pool.insert(key(1, (0, 1)), vec![1.0; ELEMS]);
+        pool.acquire(key(2, (0, 0)), ELEMS, |d| d.fill(2.0));
+        // One tile of operand 1 is pinned by the live handle.
+        assert_eq!(pool.remove_operand(fp(1)), 1);
+        assert_eq!(pool.resident_tiles(), 2);
+        assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).hit);
+        drop(held);
+        // Now fully unpinned: both remaining operand-1 tiles go.
+        assert_eq!(pool.remove_operand(fp(1)), 1);
+        assert_eq!(pool.resident_tiles(), 1, "operand 2 untouched");
+        // Store-pinned operands are never removed.
+        pool.pin_operand(fp(2));
+        assert_eq!(pool.remove_operand(fp(2)), 0);
+        assert_eq!(pool.resident_tiles(), 1);
+    }
+
+    #[test]
+    fn resident_operand_roundtrips_and_norms() {
+        use crate::matrix::tiling::PaddedMatrix;
+        use crate::spamm::normmap::normmap;
+
+        let m = Matrix::randn(40, 70, 12); // padded 64x96: 2x3 tile grid
+        let p = PaddedMatrix::new(&m, 32);
+        let mut tiles = Vec::new();
+        let mut buf = vec![0.0f32; 32 * 32];
+        for ti in 0..p.tile_rows() {
+            for tj in 0..p.tile_cols() {
+                p.copy_tile(ti, tj, &mut buf);
+                tiles.push(((ti, tj), buf.clone()));
+            }
+        }
+        let pool = ResidencyPool::new(0);
+        let r = ResidentOperand::from_tiles(
+            fp(9),
+            32,
+            m.rows(),
+            m.cols(),
+            p.tile_rows(),
+            p.tile_cols(),
+            tiles,
+            Some(&pool),
+        )
+        .unwrap();
+        assert_eq!(pool.resident_tiles(), 6);
+        // Download equals the source bitwise; fnorm matches Matrix::fnorm.
+        let back = r.to_matrix();
+        assert_eq!(back.data(), m.data());
+        assert_eq!(r.fnorm().to_bits(), m.fnorm().to_bits());
+        // Device-side norms equal the host normmap bitwise.
+        let nm = normmap(&p);
+        for ti in 0..2 {
+            for tj in 0..3 {
+                assert_eq!(r.normmap()[(ti, tj)].to_bits(), nm[(ti, tj)].to_bits());
+            }
+        }
+        // Retirement: drop the operand, then the pool can free its tiles.
+        drop(r);
+        assert_eq!(pool.remove_operand(fp(9)), 6);
+        assert_eq!(pool.resident_tiles(), 0);
     }
 
     #[test]

@@ -32,6 +32,45 @@ use crate::telemetry;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Fingerprint(pub u64, pub u64);
 
+impl Fingerprint {
+    /// Derive the fingerprint of an *operation result* from its input
+    /// fingerprints — the content identity of a value that never
+    /// materializes on the host (an expression-graph intermediate).
+    ///
+    /// The derivation folds the op tag, every input fingerprint in order,
+    /// and the op's numeric parameters (τ for `spamm`, α/β for `axpby`,
+    /// the exact f32 bits in all cases) into both FNV streams, so any
+    /// variation — different op, different operand order, different τ —
+    /// yields a different key.  Determinism is what makes derived keys
+    /// sound cache/residency keys: the pipeline's tile products are
+    /// bitwise-reproducible for fixed inputs and τ, so equal derived
+    /// fingerprints imply equal tile contents.
+    pub fn derive(op: &str, inputs: &[Fingerprint], params: &[f32]) -> Fingerprint {
+        let mut h1 = Fnv::new(0xa076_1d64_78bd_642f);
+        let mut h2 = Fnv::new(0xe703_7ed1_a0b4_28db);
+        for h in [&mut h1, &mut h2] {
+            h.mix(op.len() as u64);
+            for b in op.as_bytes() {
+                h.mix(*b as u64);
+            }
+            h.mix(inputs.len() as u64);
+            h.mix(params.len() as u64);
+        }
+        for f in inputs {
+            h1.mix(f.0);
+            h1.mix(f.1);
+            h2.mix(f.1.rotate_left(29));
+            h2.mix(f.0.rotate_left(11));
+        }
+        for p in params {
+            let bits = p.to_bits() as u64;
+            h1.mix(bits);
+            h2.mix(bits.rotate_left(17));
+        }
+        Fingerprint(h1.0, h2.0)
+    }
+}
+
 struct Fnv(u64);
 
 impl Fnv {
@@ -346,6 +385,40 @@ mod tests {
         // Same content, different tile size → different key.
         let pa16 = PaddedMatrix::new(&a, 16);
         assert_ne!(fingerprint(&pa), fingerprint(&pa16));
+    }
+
+    #[test]
+    fn derived_fingerprints_are_deterministic_and_collision_free() {
+        let a = Fingerprint(1, 2);
+        let b = Fingerprint(3, 4);
+        let base = Fingerprint::derive("spamm", &[a, b], &[1e-4]);
+        // Deterministic.
+        assert_eq!(base, Fingerprint::derive("spamm", &[a, b], &[1e-4]));
+        // Op tag, operand order, operand identity, and τ all matter.
+        assert_ne!(base, Fingerprint::derive("axpby", &[a, b], &[1e-4]));
+        assert_ne!(base, Fingerprint::derive("spamm", &[b, a], &[1e-4]));
+        assert_ne!(base, Fingerprint::derive("spamm", &[a, a], &[1e-4]));
+        assert_ne!(base, Fingerprint::derive("spamm", &[a, b], &[2e-4]));
+        assert_ne!(base, Fingerprint::derive("spamm", &[a, b], &[0.0]));
+        // Exact bit sensitivity: τ and -τ, 0.0 and -0.0 differ.
+        assert_ne!(
+            Fingerprint::derive("spamm", &[a, b], &[0.0]),
+            Fingerprint::derive("spamm", &[a, b], &[-0.0])
+        );
+        // A derived key never collides with its own inputs.
+        assert_ne!(base, a);
+        assert_ne!(base, b);
+        // Multi-parameter ops: α/β variations separate.
+        let x = Fingerprint::derive("axpby", &[a, b], &[3.0, -2.0]);
+        assert_ne!(x, Fingerprint::derive("axpby", &[a, b], &[-2.0, 3.0]));
+        assert_ne!(x, Fingerprint::derive("axpby", &[a, b], &[3.0]));
+        // Chained derivation (a power chain) keeps every step distinct.
+        let c2 = Fingerprint::derive("spamm", &[a, a], &[1e-4]);
+        let c3 = Fingerprint::derive("spamm", &[c2, a], &[1e-4]);
+        let c4 = Fingerprint::derive("spamm", &[c3, a], &[1e-4]);
+        assert_ne!(c2, c3);
+        assert_ne!(c3, c4);
+        assert_ne!(c2, c4);
     }
 
     #[test]

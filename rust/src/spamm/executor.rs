@@ -30,7 +30,7 @@ use crate::config::{Precision, SpammConfig};
 use crate::error::{Error, Result};
 use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
 use crate::matrix::Matrix;
-use crate::runtime::residency::{ResidencyPool, TileHandle, TileKey};
+use crate::runtime::residency::{ResidencyPool, ResidentOperand, TileHandle, TileKey};
 use crate::runtime::{ArtifactBundle, Runtime};
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::normmap::normmap;
@@ -74,6 +74,15 @@ pub struct MultiplyStats {
     pub residency_hits: usize,
     pub residency_misses: usize,
     pub residency_evictions: usize,
+    /// Expression-graph norm accounting: schedules built directly from
+    /// *propagated* norm upper bounds (no norm computation at all), and
+    /// exact intermediate normmaps *refreshed* from device-resident
+    /// output tiles (no host recomputation, no transfer).  Host norm
+    /// recomputations of intermediates would show up as
+    /// `norm_cache_misses` instead — the expression path keeps that at
+    /// zero.
+    pub norms_propagated: usize,
+    pub norms_refreshed: usize,
     /// Bytes actually uploaded host→device by the gather stage.
     pub transfer_bytes: u64,
     /// Bytes *not* uploaded thanks to residency hits and within-chunk
@@ -96,24 +105,82 @@ impl MultiplyStats {
         self.residency_hits += other.residency_hits;
         self.residency_misses += other.residency_misses;
         self.residency_evictions += other.residency_evictions;
+        self.norms_propagated += other.norms_propagated;
+        self.norms_refreshed += other.norms_refreshed;
         self.transfer_bytes += other.transfer_bytes;
         self.transfer_saved_bytes += other.transfer_saved_bytes;
     }
 }
 
-/// A padded operand plus its content fingerprint — the identity the
-/// residency pool keys device-resident tiles on.  `fp == None` (caching
-/// and residency both disabled) downgrades the gather stage to plain
-/// copies.
+/// Where an operand's tiles come from.
+///
+/// `Host` is the classic padded host matrix — the gather stage uploads
+/// pool misses from it.  `Resident` is an expression-graph intermediate
+/// living entirely in the device pool: its tiles were produced by a
+/// previous node's scatter, so gathers are guaranteed pool hits (the
+/// holder's handles pin them) and transfer zero bytes; the fill fallback
+/// copies from the held handles, never from host data.
+#[derive(Clone, Copy)]
+pub enum TileSource<'a> {
+    Host(&'a PaddedMatrix),
+    Resident(&'a ResidentOperand),
+}
+
+impl<'a> TileSource<'a> {
+    pub fn lonum(&self) -> usize {
+        match self {
+            TileSource::Host(p) => p.lonum,
+            TileSource::Resident(r) => r.lonum(),
+        }
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        match self {
+            TileSource::Host(p) => p.tile_rows(),
+            TileSource::Resident(r) => r.tile_rows(),
+        }
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        match self {
+            TileSource::Host(p) => p.tile_cols(),
+            TileSource::Resident(r) => r.tile_cols(),
+        }
+    }
+
+    pub fn copy_tile(&self, ti: usize, tj: usize, dst: &mut [f32]) {
+        match self {
+            TileSource::Host(p) => p.copy_tile(ti, tj, dst),
+            TileSource::Resident(r) => r.copy_tile(ti, tj, dst),
+        }
+    }
+}
+
+/// An operand (tile source) plus its content fingerprint — the identity
+/// the residency pool keys device-resident tiles on.  `fp == None`
+/// (caching and residency both disabled) downgrades the gather stage to
+/// plain copies.
 #[derive(Clone, Copy)]
 pub struct Operand<'a> {
-    pub padded: &'a PaddedMatrix,
+    pub src: TileSource<'a>,
     pub fp: Option<Fingerprint>,
 }
 
 impl<'a> Operand<'a> {
     pub fn new(padded: &'a PaddedMatrix, fp: Option<Fingerprint>) -> Operand<'a> {
-        Operand { padded, fp }
+        Operand {
+            src: TileSource::Host(padded),
+            fp,
+        }
+    }
+
+    /// An expression intermediate: device tiles under a derived
+    /// fingerprint, no host backing.
+    pub fn resident(r: &'a ResidentOperand) -> Operand<'a> {
+        Operand {
+            src: TileSource::Resident(r),
+            fp: Some(r.fingerprint()),
+        }
     }
 }
 
@@ -534,25 +601,27 @@ struct StagedOperand {
 
 /// Resolve a chunk's tile ids into deduplicated pool handles: a tile
 /// referenced k times stages once, tiles already resident cost a refcount
-/// bump, and only pool misses upload.
+/// bump, and only pool misses upload.  For a [`TileSource::Resident`]
+/// operand every acquire is a hit by construction (the holder's handles
+/// pin the tiles), so intermediates gather with zero transfer bytes.
 fn stage_operand(
     pool: &ResidencyPool,
     fp: Fingerprint,
-    p: &PaddedMatrix,
+    src: TileSource<'_>,
     ids: &[(usize, usize)],
     ctr: &mut TransferCounters,
 ) -> Result<StagedOperand> {
-    let l2 = p.lonum * p.lonum;
+    let l2 = src.lonum() * src.lonum();
     let tile_bytes = (l2 * std::mem::size_of::<f32>()) as u64;
     let mut index: HashMap<(usize, usize), u32> = HashMap::with_capacity(ids.len());
     let mut tiles: Vec<TileHandle> = Vec::new();
     let mut slots: Vec<u32> = Vec::with_capacity(ids.len());
     for &(ti, tj) in ids {
-        if ti >= p.tile_rows() || tj >= p.tile_cols() {
+        if ti >= src.tile_rows() || tj >= src.tile_cols() {
             return Err(Error::Shape(format!(
                 "gather: tile ({ti},{tj}) out of {}x{} grid",
-                p.tile_rows(),
-                p.tile_cols()
+                src.tile_rows(),
+                src.tile_cols()
             )));
         }
         if let Some(&slot) = index.get(&(ti, tj)) {
@@ -563,7 +632,7 @@ fn stage_operand(
             continue;
         }
         let got = pool.acquire(TileKey::new(fp, (ti, tj)), l2, |dst| {
-            p.copy_tile(ti, tj, dst)
+            src.copy_tile(ti, tj, dst)
         });
         if got.hit {
             ctr.hits += 1;
@@ -579,6 +648,41 @@ fn stage_operand(
         slots.push(slot);
     }
     Ok(StagedOperand { tiles, slots })
+}
+
+/// Raw gather of a tile source into a `(cap, L, L)` batch buffer — the
+/// `--no-residency` path.  Host sources go through
+/// [`gather_tiles`] byte-for-byte; resident sources copy from the held
+/// device handles with the same layout and bounds checks.
+fn gather_source(
+    src: TileSource<'_>,
+    ids: &[(usize, usize)],
+    cap: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if let TileSource::Host(p) = src {
+        return gather_tiles(p, ids, cap, out);
+    }
+    if ids.len() > cap {
+        return Err(Error::Shape(format!(
+            "gather: {} tiles > batch cap {cap}",
+            ids.len()
+        )));
+    }
+    let l2 = src.lonum() * src.lonum();
+    out.clear();
+    out.resize(cap * l2, 0.0);
+    for (slot, &(ti, tj)) in ids.iter().enumerate() {
+        if ti >= src.tile_rows() || tj >= src.tile_cols() {
+            return Err(Error::Shape(format!(
+                "gather: tile ({ti},{tj}) out of {}x{} grid",
+                src.tile_rows(),
+                src.tile_cols()
+            )));
+        }
+        src.copy_tile(ti, tj, &mut out[slot * l2..(slot + 1) * l2]);
+    }
+    Ok(())
 }
 
 /// Assemble the contiguous `(cap, L, L)` batch buffer the tile-GEMM
@@ -683,15 +787,21 @@ pub fn execute_batches<S: ScatterSink>(
         let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
         let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
         if let (Some(pool), Some(fpa), Some(fpb)) = (pool, pa.fp, pb.fp) {
-            let a = stage_operand(pool, fpa, pa.padded, &a_ids, ctr)?;
-            let b = stage_operand(pool, fpb, pb.padded, &b_ids, ctr)?;
+            let a = stage_operand(pool, fpa, pa.src, &a_ids, ctr)?;
+            let b = stage_operand(pool, fpb, pb.src, &b_ids, ctr)?;
             Ok(GatheredChunk::Resident { cap, a, b, c_ids })
         } else {
             let (mut a_buf, mut b_buf) = bufs;
-            gather_tiles(pa.padded, &a_ids, cap, &mut a_buf)?;
-            gather_tiles(pb.padded, &b_ids, cap, &mut b_buf)?;
-            // Every slot is a fresh host→device copy on this path.
-            let moved = 2 * chunk.len() as u64 * tile_bytes;
+            gather_source(pa.src, &a_ids, cap, &mut a_buf)?;
+            gather_source(pb.src, &b_ids, cap, &mut b_buf)?;
+            // Every *host-backed* slot is a fresh host→device copy on
+            // this path; resident intermediates were produced on device
+            // and move no bus bytes even without a pool.
+            let host_ops = [&pa, &pb]
+                .iter()
+                .filter(|o| matches!(o.src, TileSource::Host(_)))
+                .count() as u64;
+            let moved = host_ops * chunk.len() as u64 * tile_bytes;
             ctr.uploaded_bytes += moved;
             telemetry::global().add("spamm.transfer.uploaded_bytes", moved);
             Ok(GatheredChunk::Raw {
@@ -875,6 +985,7 @@ mod tests {
             dense_rect: vec![],
             getnorm_sizes: vec![],
             tilegemm_batches: vec![16, 64, 256],
+            axpby_batches: vec![],
             tune_bdims: vec![],
             fused_sizes: vec![],
             precisions: vec!["f32"],
@@ -1007,7 +1118,7 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let ids = [(0usize, 0usize), (0, 1), (0, 0), (0, 0), (1, 1)];
         let mut ctr = TransferCounters::default();
-        let staged = stage_operand(&pool, fp, &p, &ids, &mut ctr).unwrap();
+        let staged = stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr).unwrap();
         assert_eq!(staged.tiles.len(), 3, "3 unique tiles");
         assert_eq!(staged.slots, vec![0, 1, 0, 0, 2]);
         let tile_bytes = (32 * 32 * 4) as u64;
@@ -1031,12 +1142,12 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let ids = [(0usize, 0usize), (0, 1)];
         let mut ctr = TransferCounters::default();
-        stage_operand(&pool, fp, &p, &ids, &mut ctr).unwrap();
+        stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr).unwrap();
         assert_eq!(ctr.misses, 2);
         assert_eq!(ctr.hits, 0);
         // A second chunk touching the same tiles transfers nothing.
         let mut ctr2 = TransferCounters::default();
-        stage_operand(&pool, fp, &p, &ids, &mut ctr2).unwrap();
+        stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr2).unwrap();
         assert_eq!(ctr2.misses, 0);
         assert_eq!(ctr2.hits, 2);
         assert_eq!(ctr2.uploaded_bytes, 0);
@@ -1048,6 +1159,6 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let mut ctr = TransferCounters::default();
         let fp = fingerprint(&p);
-        assert!(stage_operand(&pool, fp, &p, &[(1, 0)], &mut ctr).is_err());
+        assert!(stage_operand(&pool, fp, TileSource::Host(&p), &[(1, 0)], &mut ctr).is_err());
     }
 }

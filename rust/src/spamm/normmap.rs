@@ -6,6 +6,20 @@
 use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
 
+/// Frobenius norm of one row-major tile buffer (f64 accumulation, f32
+/// result) — the per-tile kernel both [`normmap`] and the expression
+/// graph's device-side norm refresh share.  Summation runs in buffer
+/// (row-major) order, exactly like [`normmap`]'s inner loop, so a norm
+/// computed from a scatter-accumulated output tile is bitwise identical
+/// to the host normmap of the same content.
+pub fn tile_fnorm(tile: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &x in tile {
+        acc += (x as f64) * (x as f64);
+    }
+    acc.sqrt() as f32
+}
+
 /// normmap[i, j] = ‖tile(i, j)‖_F (f64 accumulation, f32 result — same
 /// contract as the kernel, which accumulates the reduce in f32 over ≤128²
 /// elements; the difference is below f32 epsilon·k).
@@ -49,6 +63,22 @@ mod tests {
         let nm = normmap(&p);
         let total: f64 = nm.data().iter().map(|&x| (x as f64).powi(2)).sum();
         assert!((total - m.fnorm().powi(2)).abs() / total < 1e-6);
+    }
+
+    #[test]
+    fn tile_fnorm_matches_normmap_bitwise() {
+        // The device-side refresh path sums in the same order as the host
+        // normmap, so the two must agree to the last bit per tile.
+        let m = Matrix::randn(96, 64, 5);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap(&p);
+        let mut buf = vec![0.0f32; 32 * 32];
+        for ti in 0..p.tile_rows() {
+            for tj in 0..p.tile_cols() {
+                p.copy_tile(ti, tj, &mut buf);
+                assert_eq!(tile_fnorm(&buf).to_bits(), nm[(ti, tj)].to_bits());
+            }
+        }
     }
 
     #[test]

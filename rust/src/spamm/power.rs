@@ -6,8 +6,19 @@
 //! Computes A^k by repeated SpAMM with per-step error accounting: products
 //! of decay matrices lose decay slowly, so τ can stay fixed while the
 //! valid ratio drifts — the tracker reports both.
+//!
+//! [`spamm_power`] builds the whole chain as **one expression graph**
+//! ([`crate::coordinator::expr`]): every intermediate power stays
+//! device-resident, step *k+1*'s schedule comes from step *k*'s
+//! device-side norms (no host normmap recompute, no re-upload), and the
+//! result is bitwise identical to the one-multiply-per-step
+//! [`spamm_power_loop`] at the same τ — the A/B baseline the
+//! `power --expr/--loop` CLI and the `pipeline_cache` bench compare.
 
-use crate::coordinator::Coordinator;
+use std::borrow::Cow;
+
+use crate::coordinator::expr::{ExprGraph, ExprSource};
+use crate::coordinator::{Approx, Coordinator};
 use crate::error::Result;
 use crate::matrix::Matrix;
 
@@ -23,24 +34,84 @@ pub struct PowerStep {
 }
 
 /// Result of a power computation.
-pub struct PowerResult {
-    pub value: Matrix,
+pub struct PowerResult<'a> {
+    /// A^k.  For `k == 1` this is `Cow::Borrowed(a)` — no multiply runs
+    /// and no deep clone is paid; call `into_owned()` when an owned
+    /// matrix is needed.  For `k ≥ 2` it is owned.
+    pub value: Cow<'a, Matrix>,
+    /// Per-step records; **empty for `k == 1`** (A¹ involves no product).
     pub steps: Vec<PowerStep>,
 }
 
-/// Compute A^k (k ≥ 1) with SpAMM at fixed τ via iterated multiplication.
+/// Compute A^k (k ≥ 1) with SpAMM at fixed τ via iterated multiplication,
+/// as one prepared expression graph with device-resident intermediates.
 ///
 /// Uses plain left-to-right iteration (k−1 multiplies) rather than
 /// binary powering: the intermediate *decay structure* is what SpAMM
 /// exploits, and A^(2^j) chains lose decay faster than A^j·A — matching
 /// how electronic-structure codes iterate.
-pub fn spamm_power(
+pub fn spamm_power<'a>(
     coord: &Coordinator,
-    a: &Matrix,
+    a: &'a Matrix,
     k: usize,
     tau: f32,
-) -> Result<PowerResult> {
+) -> Result<PowerResult<'a>> {
     assert!(k >= 1, "k must be ≥ 1");
+    if k == 1 {
+        return Ok(PowerResult {
+            value: Cow::Borrowed(a),
+            steps: Vec::new(),
+        });
+    }
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let mut cur = leaf;
+    let mut spamm_nodes = Vec::with_capacity(k - 1);
+    for _ in 2..=k {
+        cur = g.spamm(cur, leaf, Approx::Tau(tau));
+        spamm_nodes.push(cur);
+    }
+    g.output(cur);
+    let plan = coord.prepare_expr(&g, &[ExprSource::Host(a)])?;
+    let rep = coord.execute_expr(&plan)?;
+    let steps = spamm_nodes
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let nr = rep.node(*id).expect("every spamm node is reported");
+            PowerStep {
+                power: i + 2,
+                valid_ratio: nr.valid_ratio,
+                wall_secs: nr.wall_secs,
+                result_fnorm: nr.result_fnorm,
+            }
+        })
+        .collect();
+    let value = rep.value.to_matrix(); // the chain's one download
+    coord.evict_value(rep.value);
+    Ok(PowerResult {
+        value: Cow::Owned(value),
+        steps,
+    })
+}
+
+/// The pre-expression driver: one [`Coordinator::multiply`] per step,
+/// every intermediate scattered to host, re-fingerprinted, re-normed, and
+/// re-uploaded.  Kept as the A/B baseline — bitwise identical to
+/// [`spamm_power`] at the same τ, just slower and chattier on the bus.
+pub fn spamm_power_loop<'a>(
+    coord: &Coordinator,
+    a: &'a Matrix,
+    k: usize,
+    tau: f32,
+) -> Result<PowerResult<'a>> {
+    assert!(k >= 1, "k must be ≥ 1");
+    if k == 1 {
+        return Ok(PowerResult {
+            value: Cow::Borrowed(a),
+            steps: Vec::new(),
+        });
+    }
     let mut value = a.clone();
     let mut steps = Vec::new();
     for p in 2..=k {
@@ -53,7 +124,10 @@ pub fn spamm_power(
         });
         value = rep.c;
     }
-    Ok(PowerResult { value, steps })
+    Ok(PowerResult {
+        value: Cow::Owned(value),
+        steps,
+    })
 }
 
 #[cfg(test)]
@@ -73,8 +147,14 @@ mod tests {
         let coord = Coordinator::new(&b, SpammConfig::default()).unwrap();
         let a = Matrix::decay_exponential(64, 1.0, 0.5, 1);
         let r = spamm_power(&coord, &a, 1, 0.0).unwrap();
-        assert_eq!(r.value, a);
-        assert!(r.steps.is_empty());
+        assert_eq!(*r.value, a);
+        assert!(
+            matches!(r.value, Cow::Borrowed(_)),
+            "k = 1 must borrow, not deep-clone"
+        );
+        assert!(r.steps.is_empty(), "k = 1 runs no products");
+        let rl = spamm_power_loop(&coord, &a, 1, 0.0).unwrap();
+        assert!(matches!(rl.value, Cow::Borrowed(_)));
     }
 
     #[test]
@@ -92,11 +172,38 @@ mod tests {
     }
 
     #[test]
+    fn expr_and_loop_paths_agree_bitwise() {
+        let Some(b) = bundle() else { return };
+        for tau in [0.0f32, 1e-4] {
+            // Fresh coordinators per path: no shared cache/pool state.
+            let c1 = Coordinator::new(&b, SpammConfig::default()).unwrap();
+            let c2 = Coordinator::new(&b, SpammConfig::default()).unwrap();
+            let a = Matrix::decay_exponential(96, 1.0, 0.5, 5);
+            let expr = spamm_power(&c1, &a, 4, tau).unwrap();
+            let looped = spamm_power_loop(&c2, &a, 4, tau).unwrap();
+            assert_eq!(
+                expr.value.data(),
+                looped.value.data(),
+                "expr vs loop diverged at τ={tau}"
+            );
+            for (se, sl) in expr.steps.iter().zip(&looped.steps) {
+                assert_eq!(se.power, sl.power);
+                assert_eq!(se.valid_ratio, sl.valid_ratio, "τ={tau}");
+                assert_eq!(
+                    se.result_fnorm.to_bits(),
+                    sl.result_fnorm.to_bits(),
+                    "step fnorm diverged at τ={tau}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn approximation_error_stays_controlled() {
         let Some(b) = bundle() else { return };
         let coord = Coordinator::new(&b, SpammConfig::default()).unwrap();
         let a = Matrix::decay_exponential(96, 1.0, 0.45, 3);
-        let exact = spamm_power(&coord, &a, 3, 0.0).unwrap().value;
+        let exact = spamm_power(&coord, &a, 3, 0.0).unwrap().value.into_owned();
         let approx = spamm_power(&coord, &a, 3, 1e-4).unwrap();
         let rel = approx.value.error_fnorm(&exact).unwrap() / exact.fnorm().max(1e-30);
         assert!(rel < 1e-2, "rel err {rel}");

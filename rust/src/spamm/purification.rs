@@ -7,8 +7,19 @@
 //! decay-matrix products — exactly SpAMM's sweet spot — and purification is
 //! self-correcting, so per-step SpAMM error is tolerated (the same
 //! robustness the paper exploits for CNNs in §4.3.2).
+//!
+//! [`mcweeny_purify`] drives each iteration as an expression graph
+//! ([`crate::coordinator::expr`]): P², P³, the 3P²−2P³ combine, and the
+//! idempotency residual all run device-side, and the iterate chains into
+//! the next iteration as a device-resident value — P never round-trips
+//! through the host until the final download.  The pre-expression driver
+//! survives as [`mcweeny_purify_loop`], the bitwise-identical A/B
+//! baseline.
 
-use crate::coordinator::Coordinator;
+use std::time::Instant;
+
+use crate::coordinator::expr::{ExprGraph, ExprSource, ExprValue};
+use crate::coordinator::{Approx, Coordinator};
 use crate::error::Result;
 use crate::matrix::Matrix;
 
@@ -18,9 +29,20 @@ pub struct PurifyStep {
     pub iter: usize,
     /// Idempotency residual ‖P² − P‖_F (convergence measure).
     pub idempotency_err: f64,
-    /// Valid ratio of the P·P product this iteration.
+    /// Headline ratio of the iteration: the *minimum* of the two
+    /// products' valid ratios (both recorded below — the old field
+    /// silently reported only the P·P product).
     pub valid_ratio: f64,
+    /// Valid ratio of the P·P product.
+    pub valid_ratio_p2: f64,
+    /// Valid ratio of the P²·P product.
+    pub valid_ratio_p3: f64,
+    /// Full iteration wall: both multiplies **plus** the 3P²−2P³ combine
+    /// (the old field omitted the combine).
     pub wall_secs: f64,
+    /// Seconds inside the combine alone (host elementwise on the loop
+    /// path, device-side axpby on the expression path).
+    pub combine_secs: f64,
 }
 
 /// Result of a purification run.
@@ -67,8 +89,92 @@ pub fn initial_density(n: usize, seed: u64) -> Matrix {
     p
 }
 
-/// Run McWeeny purification with SpAMM products at threshold τ.
+/// Run McWeeny purification with SpAMM products at threshold τ, one
+/// expression graph per iteration with the iterate chained
+/// device-resident between iterations.
 pub fn mcweeny_purify(
+    coord: &Coordinator,
+    p0: &Matrix,
+    tau: f32,
+    max_iters: usize,
+    tol: f64,
+) -> Result<PurifyResult> {
+    // One graph shape serves every iteration; only the input binding
+    // changes (host P₀ cold, resident iterate thereafter).
+    let mut g = ExprGraph::new();
+    let p = g.operand();
+    let p2 = g.spamm(p, p, Approx::Tau(tau));
+    let idem = g.diff_fnorm(p2, p); // ‖P² − P‖_F, device-side
+    let p3 = g.spamm(p2, p, Approx::Tau(tau));
+    let next = g.axpby(3.0, p2, -2.0, p3); // P ← 3P² − 2P³
+    g.output(next);
+
+    let mut steps = Vec::new();
+    let mut value: Option<ExprValue> = None;
+    for iter in 0..max_iters {
+        let rep = {
+            // The plan (holding a pin on the chained input) drops right
+            // after execution so the superseded iterate can be evicted.
+            let plan = match &value {
+                None => coord.prepare_expr(&g, &[ExprSource::Host(p0)])?,
+                Some(v) => coord.prepare_expr(&g, &[ExprSource::Resident(v)])?,
+            };
+            coord.execute_expr(&plan)?
+        };
+        let idem_v = rep.scalar(idem).expect("diff node is always reported");
+        let r2 = rep.node(p2).expect("P² node is always reported");
+        let r3 = rep.node(p3).expect("P³ node is always reported");
+        let rc = rep.node(next).expect("combine node is always reported");
+        steps.push(PurifyStep {
+            iter,
+            idempotency_err: idem_v,
+            valid_ratio: r2.valid_ratio.min(r3.valid_ratio),
+            valid_ratio_p2: r2.valid_ratio,
+            valid_ratio_p3: r3.valid_ratio,
+            wall_secs: r2.wall_secs + r3.wall_secs + rc.wall_secs,
+            combine_secs: rc.wall_secs,
+        });
+        // The superseded iterate retires here — free its device tiles
+        // eagerly instead of leaving them as LRU prey.
+        if let Some(old) = value.take() {
+            coord.evict_value(old);
+        }
+        if idem_v < tol {
+            let p = rep.value.to_matrix(); // the run's one download
+            coord.evict_value(rep.value);
+            return Ok(PurifyResult {
+                p,
+                steps,
+                converged: true,
+            });
+        }
+        value = Some(rep.value);
+    }
+    let converged = steps
+        .last()
+        .map(|s| s.idempotency_err < tol * 10.0)
+        .unwrap_or(false);
+    let p = match &value {
+        Some(v) => v.to_matrix(),
+        None => p0.clone(), // max_iters == 0
+    };
+    if let Some(v) = value.take() {
+        coord.evict_value(v);
+    }
+    Ok(PurifyResult {
+        p,
+        steps,
+        converged,
+    })
+}
+
+/// The pre-expression driver: one `Coordinator::multiply` per product,
+/// every iterate pulled to host, combined element-wise on the CPU, and
+/// re-uploaded next iteration.  Kept as the A/B baseline — bitwise
+/// identical to [`mcweeny_purify`] at the same τ (including the
+/// idempotency residuals, so the two paths take identical convergence
+/// decisions).
+pub fn mcweeny_purify_loop(
     coord: &Coordinator,
     p0: &Matrix,
     tau: f32,
@@ -84,7 +190,8 @@ pub fn mcweeny_purify(
         let idem = p2.error_fnorm(&p)?;
         let rep3 = coord.multiply(&p2, &p, tau)?; // P³
         let p3 = rep3.c;
-        // P ← 3P² − 2P³
+        // P ← 3P² − 2P³ (host combine — timed, unlike the old driver).
+        let t_combine = Instant::now();
         let mut next = p2.clone();
         for ((nx, &a), &b) in next
             .data_mut()
@@ -94,11 +201,15 @@ pub fn mcweeny_purify(
         {
             *nx = 3.0 * a - 2.0 * b;
         }
+        let combine_secs = t_combine.elapsed().as_secs_f64();
         steps.push(PurifyStep {
             iter,
             idempotency_err: idem,
-            valid_ratio: rep2.valid_ratio,
-            wall_secs: rep2.wall_secs + rep3.wall_secs,
+            valid_ratio: rep2.valid_ratio.min(rep3.valid_ratio),
+            valid_ratio_p2: rep2.valid_ratio,
+            valid_ratio_p3: rep3.valid_ratio,
+            wall_secs: rep2.wall_secs + rep3.wall_secs + combine_secs,
+            combine_secs,
         });
         p = next;
         if idem < tol {
@@ -156,6 +267,40 @@ mod tests {
             last < first,
             "purification must make progress: {first} → {last}"
         );
+        // Both products' ratios are recorded and the combine is timed.
+        for s in &r.steps {
+            assert!(s.valid_ratio <= s.valid_ratio_p2.min(s.valid_ratio_p3) + 1e-12);
+            assert!(s.wall_secs >= s.combine_secs);
+        }
+    }
+
+    #[test]
+    fn expr_and_loop_paths_agree_bitwise() {
+        let Some(b) = bundle() else { return };
+        for tau in [0.0f32, 1e-5] {
+            let c1 = Coordinator::new(&b, SpammConfig::default()).unwrap();
+            let c2 = Coordinator::new(&b, SpammConfig::default()).unwrap();
+            let p0 = initial_density(96, 4);
+            let expr = mcweeny_purify(&c1, &p0, tau, 4, 0.0).unwrap();
+            let looped = mcweeny_purify_loop(&c2, &p0, tau, 4, 0.0).unwrap();
+            assert_eq!(
+                expr.p.data(),
+                looped.p.data(),
+                "expr vs loop diverged at τ={tau}"
+            );
+            assert_eq!(expr.steps.len(), looped.steps.len());
+            for (se, sl) in expr.steps.iter().zip(&looped.steps) {
+                // Residuals match bitwise → identical convergence control
+                // flow even for tol > 0.
+                assert_eq!(
+                    se.idempotency_err.to_bits(),
+                    sl.idempotency_err.to_bits(),
+                    "idempotency residual diverged at τ={tau}"
+                );
+                assert_eq!(se.valid_ratio_p2, sl.valid_ratio_p2);
+                assert_eq!(se.valid_ratio_p3, sl.valid_ratio_p3);
+            }
+        }
     }
 
     #[test]

@@ -94,6 +94,28 @@ impl Schedule {
         &self.valid_k[i * self.tile_cols + j]
     }
 
+    /// Propagated norm upper bound of the product this schedule computes:
+    /// bound[i, j] = Σ_{k surviving} ‖A[i,k]‖·‖B[k,j]‖ ≥ ‖C[i,j]‖_F (the
+    /// triangle inequality over the compacted k-list, with Frobenius
+    /// submultiplicativity per term).  The expression planner uses this to
+    /// carry tile-norm information through a graph *without* computing the
+    /// intermediate — τ resolution and schedule estimates for step k+1
+    /// come from step k's bound; exact norms are refreshed from the
+    /// device-resident output tiles only when τ-pruning demands them.
+    pub fn bound_normmap(&self, na: &Matrix, nb: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.tile_rows, self.tile_cols);
+        for i in 0..self.tile_rows {
+            for j in 0..self.tile_cols {
+                let mut acc = 0.0f64;
+                for &k in self.ks(i, j) {
+                    acc += (na[(i, k as usize)] as f64) * (nb[(k as usize, j)] as f64);
+                }
+                out[(i, j)] = acc as f32;
+            }
+        }
+        out
+    }
+
     /// Flatten a subset of output tiles into a (a_tile, b_tile, c_tile)
     /// product list — the batch feed for tile-GEMM execution.
     pub fn products_for_tiles<'a>(
@@ -202,6 +224,33 @@ mod tests {
         for p in all {
             assert!(na[(p.a.0, p.a.1)] * nb[(p.b.0, p.b.1)] >= 1.0);
             assert_eq!(p.a.1, p.b.0);
+        }
+    }
+
+    #[test]
+    fn bound_normmap_dominates_exact_product_norms() {
+        use crate::matrix::tiling::PaddedMatrix;
+        use crate::spamm::normmap::normmap;
+
+        let a = Matrix::decay_exponential(128, 1.0, 0.5, 6);
+        let b = Matrix::decay_exponential(128, 1.0, 0.5, 7);
+        let pa = PaddedMatrix::new(&a, 32);
+        let pb = PaddedMatrix::new(&b, 32);
+        let (na, nb) = (normmap(&pa), normmap(&pb));
+        let s = Schedule::build(&na, &nb, 0.0).unwrap();
+        let bound = s.bound_normmap(&na, &nb);
+        // Exact norms of the actual product C = A·B.
+        let c = a.matmul(&b).unwrap();
+        let nc = normmap(&PaddedMatrix::new(&c, 32));
+        for i in 0..nc.rows() {
+            for j in 0..nc.cols() {
+                assert!(
+                    bound[(i, j)] >= nc[(i, j)] * (1.0 - 1e-5),
+                    "bound {} < exact {} at ({i},{j})",
+                    bound[(i, j)],
+                    nc[(i, j)]
+                );
+            }
         }
     }
 

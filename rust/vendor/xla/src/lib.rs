@@ -252,6 +252,10 @@ enum OpSpec {
     Dense { m: usize, k: usize, n: usize, bf16: bool },
     /// Per-slot C[b] = A[b] · B[b] over `batch` lonum×lonum tiles.
     TileGemm { batch: usize, lonum: usize, bf16: bool },
+    /// Per-slot C[b] = α·X[b] + β·Y[b] over `batch` lonum×lonum tiles —
+    /// the tiled linear-combination kernel expression graphs use for
+    /// McWeeny's 3P² − 2P³ combine without leaving the device.
+    Axpby { batch: usize, lonum: usize },
     /// Tile Frobenius norms of an n×n matrix.
     GetNorm { n: usize, lonum: usize, bf16: bool },
     /// τ search over normmap products for a target valid ratio.
@@ -303,6 +307,10 @@ impl OpSpec {
                 lonum: parse_usize(&kv, "lonum")?,
                 bf16: parse_bf16(&kv),
             }),
+            Some("axpby") => Ok(OpSpec::Axpby {
+                batch: parse_usize(&kv, "batch")?,
+                lonum: parse_usize(&kv, "lonum")?,
+            }),
             Some("getnorm") => Ok(OpSpec::GetNorm {
                 n: parse_usize(&kv, "n")?,
                 lonum: parse_usize(&kv, "lonum")?,
@@ -346,6 +354,19 @@ impl OpSpec {
                         lonum,
                     );
                 }
+                Ok(vec![Literal::array(vec![batch, lonum, lonum], out)])
+            }
+            OpSpec::Axpby { batch, lonum } => {
+                let x = expect_input(inputs, 0, &[batch, lonum, lonum])?;
+                let y = expect_input(inputs, 1, &[batch, lonum, lonum])?;
+                let alpha = expect_scalar(inputs, 2)?;
+                let beta = expect_scalar(inputs, 3)?;
+                expect_arity(inputs, 4)?;
+                let out: Vec<f32> = x
+                    .iter()
+                    .zip(y)
+                    .map(|(&xv, &yv)| alpha * xv + beta * yv)
+                    .collect();
                 Ok(vec![Literal::array(vec![batch, lonum, lonum], out)])
             }
             OpSpec::GetNorm { n, lonum, bf16 } => {
@@ -622,6 +643,21 @@ mod tests {
         let v = out[0].to_vec::<f32>().unwrap();
         assert_eq!(&v[..4], &[5.0, 6.0, 7.0, 8.0]);
         assert_eq!(&v[4..], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn axpby_combines_tiles() {
+        let spec = "hostsim v1\nkind = axpby\nbatch = 2\nlonum = 2";
+        let x = lit(&[2, 2, 2], &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        let y = lit(&[2, 2, 2], &[1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+        let out = run(
+            spec,
+            &[x, y, lit(&[], &[3.0]), lit(&[], &[-2.0])],
+        )
+        .unwrap();
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(&v[..4], &[1.0, 4.0, 7.0, 10.0]);
+        assert_eq!(&v[4..], &[-4.0, -4.0, -4.0, -4.0]);
     }
 
     #[test]
