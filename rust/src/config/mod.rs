@@ -42,6 +42,15 @@ pub enum Balance {
     /// {w, w+s, w+2s, ...} in row-major tile order, spreading the
     /// diagonal-heavy load of decay matrices evenly.
     Strided(usize),
+    /// Residency- and memory-aware assignment: output tiles whose A/B
+    /// operand tiles are already resident in a device's pool stay on
+    /// that device (zero transfer), the rest are placed greedily by
+    /// valid-product load with transfer bytes as the tie-break, keeping
+    /// each device's working set under its `device_mem_budget`.  With
+    /// residency disabled (or operand fingerprints unavailable) the
+    /// policy degrades to its cold greedy fill — a load-balanced (LPT)
+    /// partition, not row blocks.
+    ResidencyAware,
 }
 
 /// Full engine/coordinator configuration.
@@ -144,11 +153,14 @@ impl SpammConfig {
             "balance" => {
                 self.balance = if value == "rowblock" {
                     Balance::RowBlock
+                } else if value == "residency-aware" || value == "residency_aware" {
+                    Balance::ResidencyAware
                 } else if let Some(s) = value.strip_prefix("strided:") {
                     Balance::Strided(parse_num(key, s)?)
                 } else {
                     return Err(Error::Config(format!(
-                        "balance must be 'rowblock' or 'strided:<s>', got '{value}'"
+                        "balance must be 'rowblock', 'strided:<s>', or 'residency-aware', \
+                         got '{value}'"
                     )));
                 };
             }
@@ -299,6 +311,10 @@ mod tests {
         assert_eq!(c.devices, 8);
         assert_eq!(c.precision, Precision::Bf16);
         assert_eq!(c.balance, Balance::Strided(2));
+        c.apply("balance", "residency-aware").unwrap();
+        assert_eq!(c.balance, Balance::ResidencyAware);
+        c.apply("balance", "residency_aware").unwrap();
+        assert_eq!(c.balance, Balance::ResidencyAware);
         c.validate().unwrap();
     }
 

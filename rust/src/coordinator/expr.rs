@@ -32,16 +32,28 @@
 //!   leaves the pool.  `scale` and `add_diag` are the same idea for
 //!   α·X and X + σI.
 //!
+//! * **Multi-device fan-out** — every compute node carries a tile→device
+//!   placement map resolved at prepare (the balance policy;
+//!   `residency-aware` scores candidate owners by the bytes already
+//!   resident in each device's pool).  Execution drives all device
+//!   workers per node: each device scatters its owned output tiles into
+//!   its *own* pool, and a consumer device staging a tile produced
+//!   elsewhere takes a host bounce, counted as
+//!   [`MultiplyStats::cross_device_bytes`].
+//!
 //! Because the executor ([`execute_batches`]) and its product ordering
-//! are shared with the one-`multiply`-per-step loop path, an expression
-//! run is **bitwise identical** to the loop at the same τ — the
-//! integration suite asserts this for `spamm_power` and
-//! `mcweeny_purify`.
+//! are shared with the one-`multiply`-per-step loop path — and tile
+//! ownership is exclusive with per-tile k-order accumulation — an
+//! expression run is **bitwise identical** to the loop at the same τ,
+//! at any device count — the integration suite asserts this for
+//! `spamm_power` and `mcweeny_purify`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
-use crate::config::SpammConfig;
+use crate::config::{Balance, SpammConfig};
+use crate::coordinator::partition::{batches_of, DeviceWork, PartitionCtx};
+use crate::coordinator::pipeline::{run_device, DeviceResult};
 use crate::coordinator::service::Approx;
 use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
@@ -49,6 +61,7 @@ use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
 use crate::runtime::residency::{ResidencyPool, ResidentOperand, TileKey};
 use crate::runtime::Runtime;
+use crate::spamm::balance::{rowblock_owner, Assignment};
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
     execute_batches, MultiplyStats, Operand, TileAccumulator, TileSource,
@@ -206,11 +219,29 @@ impl ExprGraph {
     /// schedules wherever the bound is already exact.  Host-side only —
     /// no device work, no transfer.  `caches`/`cfg` come from the
     /// executing front-end ([`Coordinator::prepare_expr`] /
-    /// `SpammSession::prepare_expr` pass their own).
+    /// `SpammSession::prepare_expr` pass their own).  Node placement
+    /// uses cold residency views; pass the executing pools through
+    /// [`ExprGraph::prepare_placed`] for residency-aware placement.
     pub fn prepare(
         &self,
         caches: &ExecCaches,
         cfg: &SpammConfig,
+        inputs: &[ExprSource<'_>],
+    ) -> Result<ExprPlan> {
+        self.prepare_placed(caches, cfg, &[], inputs)
+    }
+
+    /// [`ExprGraph::prepare`] with the executing front-end's residency
+    /// pools: every compute node's output tiles are assigned to devices
+    /// at prepare ([`crate::config::Balance::ResidencyAware`] consults
+    /// the pools, the baseline policies ignore them), so execution fans
+    /// each node out across all device workers and the session can pin
+    /// operands only where they will actually be used.
+    pub fn prepare_placed(
+        &self,
+        caches: &ExecCaches,
+        cfg: &SpammConfig,
+        pools: &[Arc<ResidencyPool>],
         inputs: &[ExprSource<'_>],
     ) -> Result<ExprPlan> {
         let t_prepare = Instant::now();
@@ -336,6 +367,7 @@ impl ExprGraph {
                         tau: 0.0,
                         bound: Some(input_norms[slot].clone()),
                         sched: None,
+                        owner: None,
                         uses: uses[idx],
                     }
                 }
@@ -384,6 +416,52 @@ impl ExprGraph {
                         Arc::new(Schedule::build(&na, &nb, tau)?)
                     };
                     let bound = Arc::new(sched.bound_normmap(&na, &nb));
+                    // Place this node's output tiles across the devices.
+                    // The residency-aware policy scores candidate owners
+                    // by the input tiles already resident in each pool
+                    // PLUS the *planned* placement of computed inputs —
+                    // an intermediate is never pool-resident at prepare
+                    // time, but its owner map says exactly which device
+                    // will hold each of its tiles, so chained spamm
+                    // nodes stay producer-aligned instead of bouncing
+                    // through the host.  For provisional (exact-refresh)
+                    // nodes the bound-derived schedule is a placement
+                    // estimate — the map covers the full grid either way.
+                    let tile_bytes = lonum * lonum * std::mem::size_of::<f32>();
+                    let owner = if cfg.balance == Balance::ResidencyAware {
+                        let ctx = PartitionCtx {
+                            pools,
+                            fa: Some(pa.fp),
+                            fb: Some(pb.fp),
+                            tile_bytes,
+                        };
+                        let mut views = ctx.views(cfg.devices);
+                        if let Some(o) = &pa.owner {
+                            for (t, &d) in o.iter().enumerate() {
+                                views[d]
+                                    .a_resident
+                                    .insert((t / pa.tile_cols, t % pa.tile_cols));
+                            }
+                        }
+                        if let Some(o) = &pb.owner {
+                            for (t, &d) in o.iter().enumerate() {
+                                views[d]
+                                    .b_resident
+                                    .insert((t / pb.tile_cols, t % pb.tile_cols));
+                            }
+                        }
+                        Arc::new(
+                            Assignment::build_residency_aware(
+                                &sched,
+                                cfg.devices,
+                                &views,
+                                tile_bytes,
+                            )
+                            .owner,
+                        )
+                    } else {
+                        Arc::new(Assignment::build(&sched, cfg.devices, cfg.balance).owner)
+                    };
                     PlannedNode {
                         kind: *kind,
                         fp,
@@ -394,6 +472,7 @@ impl ExprGraph {
                         tau,
                         bound: Some(bound),
                         sched: pinned.then_some(sched),
+                        owner: Some(owner),
                         uses: uses[idx],
                     }
                 }
@@ -426,6 +505,9 @@ impl ExprGraph {
                         tau: 0.0,
                         bound: Some(Arc::new(bound)),
                         sched: None,
+                        // Element-wise: inherit X's placement so each
+                        // output tile combines device-local inputs.
+                        owner: inherit_owner(px, cfg.devices),
                         uses: uses[idx],
                     }
                 }
@@ -448,6 +530,7 @@ impl ExprGraph {
                         tau: 0.0,
                         bound: Some(Arc::new(bound)),
                         sched: None,
+                        owner: inherit_owner(px, cfg.devices),
                         uses: uses[idx],
                     }
                 }
@@ -483,6 +566,7 @@ impl ExprGraph {
                         tau: 0.0,
                         bound: Some(Arc::new(bound)),
                         sched: None,
+                        owner: inherit_owner(px, cfg.devices),
                         uses: uses[idx],
                     }
                 }
@@ -504,6 +588,7 @@ impl ExprGraph {
                         tau: 0.0,
                         bound: None,
                         sched: None,
+                        owner: None,
                         uses: uses[idx],
                     }
                 }
@@ -514,6 +599,7 @@ impl ExprGraph {
 
         Ok(ExprPlan {
             lonum,
+            devices: cfg.devices,
             nodes: planned,
             root: root.0,
             keeps: self.keeps.iter().map(|k| k.0).collect(),
@@ -580,6 +666,15 @@ enum PlannedInput {
     Resident(ExprValue),
 }
 
+/// Element-wise placement: inherit the input node's map (its tiles are
+/// device-local there) or fall back to the canonical row-block map
+/// ([`crate::spamm::balance::rowblock_owner`]) for leaf inputs.
+fn inherit_owner(px: &PlannedNode, devices: usize) -> Option<Arc<Vec<usize>>> {
+    px.owner.clone().or_else(|| {
+        Some(Arc::new(rowblock_owner(px.tile_rows, px.tile_cols, devices)))
+    })
+}
+
 struct PlannedNode {
     kind: NodeKind,
     fp: Fingerprint,
@@ -595,6 +690,10 @@ struct PlannedNode {
     /// Pinned schedule when the bound is already exact (leaf-fed or
     /// τ = 0) — cache eviction cannot un-prepare those nodes.
     sched: Option<Arc<Schedule>>,
+    /// Tile→device placement of this node's output (compute nodes only).
+    /// Multi-device execution fans the node out per this map; each
+    /// device scatters its owned tiles into its *own* pool.
+    owner: Option<Arc<Vec<usize>>>,
     /// Consumers + root/keep references; execution frees an
     /// intermediate's tiles when this many uses have retired.
     uses: usize,
@@ -606,6 +705,9 @@ struct PlannedNode {
 /// ride the schedule cache and the residency pool).
 pub struct ExprPlan {
     lonum: usize,
+    /// Device count the placement maps were built for (must match the
+    /// executing coordinator's).
+    devices: usize,
     nodes: Vec<PlannedNode>,
     root: usize,
     keeps: Vec<usize>,
@@ -651,6 +753,29 @@ impl ExprPlan {
             })
             .collect()
     }
+
+    /// Device count the plan's placement maps target.
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Sorted devices that own at least one tile of some compute node —
+    /// the pools worth pinning operands into (session bookkeeping).
+    /// `[0]` for a plan with no placed nodes.
+    pub fn devices_used(&self) -> Vec<usize> {
+        let mut used: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter_map(|n| n.owner.as_ref())
+            .flat_map(|o| o.iter().copied())
+            .collect();
+        used.sort_unstable();
+        used.dedup();
+        if used.is_empty() {
+            used.push(0);
+        }
+        used
+    }
 }
 
 /// Per-node execution record.
@@ -684,7 +809,15 @@ pub struct ExprReport {
     /// Per-node breakdown, in execution order (compute nodes only).
     pub nodes: Vec<ExprNodeReport>,
     /// Aggregate over all nodes (stages, caches, residency, transfer).
+    /// `stats.cross_device_bytes` is the multi-device host-bounce
+    /// traffic (device-produced tiles consumed on another device).
     pub stats: MultiplyStats,
+    /// Per-device seconds inside the spamm pipelines (one entry per
+    /// configured device; a single-device run has one entry).
+    pub device_busy: Vec<f64>,
+    /// Tile products each device executed across all spamm nodes — the
+    /// "every device did work" witness for multi-device graphs.
+    pub device_products: Vec<usize>,
     /// Wall clock of the node loop (compile/warm-up excluded, like the
     /// coordinator's timing protocol).
     pub wall_secs: f64,
@@ -744,13 +877,16 @@ impl RunVal {
 
 /// Resolve one input tile through the pool (hits for resident tiles,
 /// upload-once for host leaves), falling back to a direct copy when
-/// residency is off.
+/// residency is off.  `cross` (multi-device runs only) counts a miss on
+/// a device-produced tile as a cross-device host bounce.
+#[allow(clippy::too_many_arguments)]
 fn stage_tile(
     pool: Option<&ResidencyPool>,
     src: TileSource<'_>,
     fp: Fingerprint,
     ti: usize,
     tj: usize,
+    cross: bool,
     dst: &mut [f32],
     stats: &mut MultiplyStats,
 ) {
@@ -768,6 +904,11 @@ fn stage_tile(
             } else {
                 stats.residency_misses += 1;
                 stats.transfer_bytes += tile_bytes;
+                if cross && matches!(src, TileSource::Resident(_)) {
+                    // Device-produced tile consumed by a device that does
+                    // not hold it: a host bounce.
+                    stats.cross_device_bytes += tile_bytes;
+                }
             }
             stats.residency_evictions += got.evicted;
         }
@@ -791,25 +932,31 @@ fn fold_stats(agg: &mut MultiplyStats, s: &MultiplyStats) {
 
 impl Coordinator {
     /// Prepare an expression graph over concrete inputs (host-side: τ
-    /// resolution, bound propagation, schedule pinning — no device work).
+    /// resolution, bound propagation, schedule pinning, per-node device
+    /// placement against this coordinator's pools — no device work).
     pub fn prepare_expr(
         &self,
         g: &ExprGraph,
         inputs: &[ExprSource<'_>],
     ) -> Result<ExprPlan> {
-        g.prepare(self.caches(), self.config(), inputs)
+        g.prepare_placed(self.caches(), self.config(), self.residency_pools(), inputs)
     }
 
     /// Execute a prepared expression with device-resident intermediates.
-    /// Runs on device 0's pool and a fresh runtime; the session worker
-    /// passes its long-lived runtime via
-    /// [`Coordinator::execute_expr_on`].
+    /// Single-device configurations run inline on device 0's pool and a
+    /// fresh runtime (the session worker passes its long-lived runtime
+    /// via [`Coordinator::execute_expr_on`]); multi-device
+    /// configurations fan every compute node out across all device
+    /// workers per the plan's placement maps.
     pub fn execute_expr(&self, plan: &ExprPlan) -> Result<ExprReport> {
         self.execute_expr_on(None, plan)
     }
 
     /// [`Coordinator::execute_expr`] with an optional caller-owned
-    /// resident runtime (compiled executables persist across calls).
+    /// resident runtime (compiled executables persist across calls,
+    /// `devices == 1` only).  Multi-device configurations fan every
+    /// compute node out across all device workers per the plan's
+    /// placement maps.
     pub fn execute_expr_on(
         &self,
         resident: Option<&Runtime>,
@@ -821,6 +968,20 @@ impl Coordinator {
                 "expr plan was prepared at lonum {}, config wants {}",
                 plan.lonum, cfg.lonum
             )));
+        }
+        if plan.devices != cfg.devices {
+            return Err(Error::Config(format!(
+                "expr plan was placed for {} devices, config wants {}",
+                plan.devices, cfg.devices
+            )));
+        }
+        if cfg.devices > 1 {
+            if resident.is_some() {
+                return Err(Error::Coordinator(
+                    "resident runtime execution requires devices == 1".into(),
+                ));
+            }
+            return self.execute_expr_multi(plan);
         }
         let lonum = plan.lonum;
         let l2 = lonum * lonum;
@@ -977,6 +1138,9 @@ impl Coordinator {
                     let vy = values[y.0].clone().ok_or_else(|| {
                         Error::Coordinator("expr: axpby input value missing".into())
                     })?;
+                    let ids: Vec<(usize, usize)> = (0..node.tile_rows)
+                        .flat_map(|i| (0..node.tile_cols).map(move |j| (i, j)))
+                        .collect();
                     let tiles = self.run_axpby(
                         rt,
                         pool,
@@ -985,8 +1149,9 @@ impl Coordinator {
                         &vx,
                         beta,
                         &vy,
-                        node,
+                        &ids,
                         lonum,
+                        false,
                         &mut nstats,
                     )?;
                     let resop = ResidentOperand::from_tiles(
@@ -1029,7 +1194,7 @@ impl Coordinator {
                             // Stage straight into the output tile (one
                             // copy), then apply the elementwise op.
                             let mut out = vec![0.0f32; l2];
-                            stage_tile(pool, src, fp, ti, tj, &mut out, &mut nstats);
+                            stage_tile(pool, src, fp, ti, tj, false, &mut out, &mut nstats);
                             if is_scale {
                                 for v in &mut out {
                                     *v *= s;
@@ -1170,14 +1335,458 @@ impl Coordinator {
                 _ => None,
             })
             .collect();
+        let device_busy = vec![agg.exec_secs];
+        let device_products = vec![agg.valid_products];
         Ok(ExprReport {
             value,
             kept,
             scalars,
             nodes: reports,
             stats: agg,
+            device_busy,
+            device_products,
             wall_secs: span.elapsed().as_secs_f64(),
             compile_secs: rt.compile_secs() - compile0,
+        })
+    }
+
+    /// Multi-device expression execution: every spamm node fans out
+    /// across all device workers per the plan's placement map — each
+    /// device runs the shared per-device pipeline
+    /// ([`crate::coordinator::pipeline`]'s `run_device`) over its owned
+    /// output tiles and scatters them into its *own* pool under the
+    /// node's derived fingerprint.  A host-side mirror of each
+    /// intermediate backs cross-device consumption: a consumer device
+    /// staging a tile another device produced takes a pool miss filled
+    /// from the mirror — the host bounce, counted in
+    /// [`MultiplyStats::cross_device_bytes`].  Element-wise nodes stage
+    /// per owned tile through the owning device's pool.  Results are
+    /// bitwise identical to the single-device path: tile ownership is
+    /// exclusive and every output tile accumulates its products in the
+    /// same k order regardless of the partition.
+    fn execute_expr_multi(&self, plan: &ExprPlan) -> Result<ExprReport> {
+        let cfg = self.config();
+        let devices = cfg.devices;
+        let lonum = plan.lonum;
+        let l2 = lonum * lonum;
+        let pools = self.residency_pools();
+        let pool_of = |d: usize| pools.get(d).map(|p| p.as_ref());
+
+        // Orchestrator runtime: element-wise tile kernels only; spamm
+        // nodes run on per-device worker runtimes below.
+        let rt = Runtime::new(self.bundle())?;
+        let compile0 = rt.compile_secs();
+        let warm: Vec<String> = rt
+            .bundle()
+            .names()
+            .filter(|n| n.starts_with(&format!("axpby_l{lonum}_")))
+            .map(|s| s.to_string())
+            .collect();
+        for name in &warm {
+            rt.warmup(&[name.as_str()])?;
+        }
+        let axpby_buckets = rt.bundle().axpby_buckets(lonum);
+        let mut worker_compile = 0.0f64;
+
+        let span = Instant::now();
+        let mut uses: Vec<usize> = plan.nodes.iter().map(|n| n.uses).collect();
+        let mut values: Vec<Option<RunVal>> = (0..plan.nodes.len()).map(|_| None).collect();
+        let mut scalars: Vec<(NodeId, f64)> = Vec::new();
+        let mut reports: Vec<ExprNodeReport> = Vec::new();
+        let mut agg = MultiplyStats::default();
+        let mut device_busy = vec![0.0f64; devices];
+        let mut device_products = vec![0usize; devices];
+
+        for idx in 0..plan.nodes.len() {
+            let node = &plan.nodes[idx];
+            match node.kind {
+                NodeKind::Operand { slot } => {
+                    values[idx] = Some(match &plan.inputs[slot] {
+                        PlannedInput::Host { padded, fp } => RunVal::Host {
+                            padded: padded.clone(),
+                            fp: *fp,
+                        },
+                        PlannedInput::Resident(v) => RunVal::Resident(v.clone()),
+                    });
+                }
+                NodeKind::Spamm { a, b, .. } => {
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let va = values[a.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: spamm input value missing".into())
+                    })?;
+                    let vb = values[b.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: spamm input value missing".into())
+                    })?;
+                    let tau = node.tau;
+                    let (src_a, fa) = va.as_operand();
+                    let (src_b, fb) = vb.as_operand();
+                    // Schedule: pinned where the prepare-time bound was
+                    // exact, otherwise rebuilt from exact norms (leaf
+                    // norms via the keyed cache, intermediates refreshed
+                    // from the mirror's scatter-time normmap).
+                    let t = Instant::now();
+                    let sched: Arc<Schedule> = match &node.sched {
+                        Some(s) => {
+                            nstats.norms_propagated += 1;
+                            s.clone()
+                        }
+                        None => {
+                            let na = self.exact_norm(&va, &plan.nodes[a.0], &mut nstats)?;
+                            let nb = self.exact_norm(&vb, &plan.nodes[b.0], &mut nstats)?;
+                            let t_s = Instant::now();
+                            let sched = if cfg.cache_enabled {
+                                self.caches().schedule_via(
+                                    Some(fa),
+                                    Some(fb),
+                                    tau,
+                                    &na,
+                                    &nb,
+                                    &mut nstats,
+                                )?
+                            } else {
+                                Arc::new(Schedule::build(&na, &nb, tau)?)
+                            };
+                            nstats.schedule_secs = t_s.elapsed().as_secs_f64();
+                            sched
+                        }
+                    };
+                    nstats.norm_secs = t.elapsed().as_secs_f64() - nstats.schedule_secs;
+                    nstats.valid_products = sched.valid_products();
+                    nstats.total_products = sched.total_products();
+                    nstats.valid_ratio = sched.valid_ratio();
+
+                    let owner = node
+                        .owner
+                        .clone()
+                        .ok_or_else(|| Error::Coordinator("expr: unplaced spamm node".into()))?;
+                    let assignment = Assignment {
+                        devices,
+                        owner: owner.as_ref().clone(),
+                    };
+                    let work = batches_of(&sched, &assignment, cfg.pipeline_batches);
+                    let active: Vec<&DeviceWork> =
+                        work.iter().filter(|w| w.tile_count() > 0).collect();
+                    let barrier = Barrier::new(active.len());
+                    let mut results: Vec<DeviceResult> = Vec::with_capacity(active.len());
+                    std::thread::scope(|scope| -> Result<()> {
+                        let mut handles = Vec::new();
+                        for &w in &active {
+                            let barrier = &barrier;
+                            let bundle = self.bundle();
+                            let pool = pool_of(w.device);
+                            let sched: &Schedule = &sched;
+                            handles.push(scope.spawn(move || -> Result<DeviceResult> {
+                                let rt = Runtime::new(bundle)?;
+                                run_device(
+                                    &rt,
+                                    cfg,
+                                    pool,
+                                    Operand {
+                                        src: src_a,
+                                        fp: Some(fa),
+                                    },
+                                    Operand {
+                                        src: src_b,
+                                        fp: Some(fb),
+                                    },
+                                    sched,
+                                    w,
+                                    barrier,
+                                )
+                            }));
+                        }
+                        for h in handles {
+                            results.push(h.join().map_err(|_| {
+                                Error::Coordinator("expr device worker panicked".into())
+                            })??);
+                        }
+                        Ok(())
+                    })?;
+
+                    // Merge: each device's tiles land in its own pool
+                    // under the derived fingerprint (device-produced —
+                    // no upload counters), and in the host mirror that
+                    // backs cross-device gathers and norm refreshes.
+                    let mut all: Vec<((usize, usize), Vec<f32>)> =
+                        Vec::with_capacity(node.tile_rows * node.tile_cols);
+                    for r in results {
+                        device_busy[r.device] += r.busy_secs;
+                        device_products[r.device] += r.products;
+                        worker_compile += r.compile_secs;
+                        nstats.absorb_stages(&r.stats);
+                        for ((i, j), data) in r.tiles {
+                            if let Some(p) = pool_of(r.device) {
+                                p.insert(TileKey::new(node.fp, (i, j)), data.clone());
+                            }
+                            all.push(((i, j), data));
+                        }
+                    }
+                    all.sort_by_key(|t| t.0);
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        all,
+                        None,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "spamm",
+                        valid_ratio: sched.valid_ratio(),
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::Axpby { alpha, x, beta, y } => {
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: axpby input value missing".into())
+                    })?;
+                    let vy = values[y.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: axpby input value missing".into())
+                    })?;
+                    let owner = node
+                        .owner
+                        .clone()
+                        .ok_or_else(|| Error::Coordinator("expr: unplaced axpby node".into()))?;
+                    // Per device: combine its owned tiles through its own
+                    // pool (element-wise, so the device grouping cannot
+                    // change the result), then insert them there.
+                    let mut all: Vec<((usize, usize), Vec<f32>)> =
+                        Vec::with_capacity(node.tile_rows * node.tile_cols);
+                    for d in 0..devices {
+                        let ids: Vec<(usize, usize)> = (0..node.tile_rows)
+                            .flat_map(|i| (0..node.tile_cols).map(move |j| (i, j)))
+                            .filter(|&(i, j)| owner[i * node.tile_cols + j] == d)
+                            .collect();
+                        if ids.is_empty() {
+                            continue;
+                        }
+                        let tiles = self.run_axpby(
+                            &rt,
+                            pool_of(d),
+                            &axpby_buckets,
+                            alpha,
+                            &vx,
+                            beta,
+                            &vy,
+                            &ids,
+                            lonum,
+                            true,
+                            &mut nstats,
+                        )?;
+                        for ((i, j), data) in tiles {
+                            if let Some(p) = pool_of(d) {
+                                p.insert(TileKey::new(node.fp, (i, j)), data.clone());
+                            }
+                            all.push(((i, j), data));
+                        }
+                    }
+                    all.sort_by_key(|t| t.0);
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        all,
+                        None,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.valid_ratio = 1.0;
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "axpby",
+                        valid_ratio: 1.0,
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::Scale { s, x } | NodeKind::AddDiag { shift: s, x } => {
+                    let is_scale = matches!(node.kind, NodeKind::Scale { .. });
+                    let mut nstats = MultiplyStats::default();
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: input value missing".into())
+                    })?;
+                    let owner = node
+                        .owner
+                        .clone()
+                        .ok_or_else(|| Error::Coordinator("expr: unplaced node".into()))?;
+                    let (src, fp) = vx.as_operand();
+                    let mut tiles = Vec::with_capacity(node.tile_rows * node.tile_cols);
+                    for ti in 0..node.tile_rows {
+                        for tj in 0..node.tile_cols {
+                            let d = owner[ti * node.tile_cols + tj];
+                            let pool_t = pool_of(d);
+                            let mut out = vec![0.0f32; l2];
+                            stage_tile(pool_t, src, fp, ti, tj, true, &mut out, &mut nstats);
+                            if is_scale {
+                                for v in &mut out {
+                                    *v *= s;
+                                }
+                            } else if ti == tj {
+                                for r in 0..lonum {
+                                    if ti * lonum + r >= node.rows {
+                                        break;
+                                    }
+                                    out[r * lonum + r] += s;
+                                }
+                            }
+                            if let Some(p) = pool_t {
+                                p.insert(TileKey::new(node.fp, (ti, tj)), out.clone());
+                            }
+                            tiles.push(((ti, tj), out));
+                        }
+                    }
+                    let resop = ResidentOperand::from_tiles(
+                        node.fp,
+                        lonum,
+                        node.rows,
+                        node.cols,
+                        node.tile_rows,
+                        node.tile_cols,
+                        tiles,
+                        None,
+                    )?;
+                    let value = ExprValue {
+                        inner: Arc::new(resop),
+                    };
+                    let fnorm = value.fnorm();
+                    nstats.valid_ratio = 1.0;
+                    nstats.total_secs = t_node.elapsed().as_secs_f64();
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: if is_scale { "scale" } else { "add_diag" },
+                        valid_ratio: 1.0,
+                        wall_secs: nstats.total_secs,
+                        result_fnorm: fnorm,
+                        stats: nstats,
+                    });
+                    values[idx] = Some(RunVal::Resident(value));
+                }
+                NodeKind::DiffNorm { x, y } => {
+                    let t_node = Instant::now();
+                    let vx = values[x.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: diff_fnorm input value missing".into())
+                    })?;
+                    let vy = values[y.0].clone().ok_or_else(|| {
+                        Error::Coordinator("expr: diff_fnorm input value missing".into())
+                    })?;
+                    let mut acc = 0.0f64;
+                    for ti in 0..node.tile_rows {
+                        for r in 0..lonum {
+                            for tj in 0..node.tile_cols {
+                                let xs = vx.row_segment(ti, r, tj, lonum);
+                                let ys = vy.row_segment(ti, r, tj, lonum);
+                                for (xv, yv) in xs.iter().zip(ys) {
+                                    let d = (xv - yv) as f64;
+                                    acc += d * d;
+                                }
+                            }
+                        }
+                    }
+                    scalars.push((NodeId(idx), acc.sqrt()));
+                    reports.push(ExprNodeReport {
+                        node: NodeId(idx),
+                        op: "diff_fnorm",
+                        valid_ratio: 1.0,
+                        wall_secs: t_node.elapsed().as_secs_f64(),
+                        result_fnorm: 0.0,
+                        stats: MultiplyStats::default(),
+                    });
+                }
+            }
+
+            // Retire inputs whose last consumer just ran; an interior
+            // intermediate's tiles are freed from *every* device pool.
+            let retire = |dep: NodeId,
+                          uses: &mut Vec<usize>,
+                          values: &mut Vec<Option<RunVal>>| {
+                uses[dep.0] -= 1;
+                if uses[dep.0] > 0 {
+                    return;
+                }
+                let interior = !matches!(plan.nodes[dep.0].kind, NodeKind::Operand { .. });
+                if let Some(RunVal::Resident(v)) = values[dep.0].take() {
+                    let fp = v.fingerprint();
+                    drop(v);
+                    if interior {
+                        for p in pools {
+                            p.remove_operand(fp);
+                        }
+                    }
+                }
+            };
+            match plan.nodes[idx].kind {
+                NodeKind::Operand { .. } => {}
+                NodeKind::Spamm { a, b, .. } => {
+                    retire(a, &mut uses, &mut values);
+                    retire(b, &mut uses, &mut values);
+                }
+                NodeKind::Axpby { x, y, .. } | NodeKind::DiffNorm { x, y } => {
+                    retire(x, &mut uses, &mut values);
+                    retire(y, &mut uses, &mut values);
+                }
+                NodeKind::Scale { x, .. } | NodeKind::AddDiag { x, .. } => {
+                    retire(x, &mut uses, &mut values);
+                }
+            }
+        }
+
+        for r in &reports {
+            fold_stats(&mut agg, &r.stats);
+        }
+        if agg.total_products > 0 {
+            agg.valid_ratio = agg.valid_products as f64 / agg.total_products as f64;
+        }
+        agg.total_secs = span.elapsed().as_secs_f64();
+
+        let value = match values[plan.root].clone() {
+            Some(RunVal::Resident(v)) => v,
+            _ => {
+                return Err(Error::Coordinator(
+                    "expr: root value missing after execution".into(),
+                ))
+            }
+        };
+        let kept = plan
+            .keeps
+            .iter()
+            .filter_map(|&k| match values[k].clone() {
+                Some(RunVal::Resident(v)) => Some((NodeId(k), v)),
+                _ => None,
+            })
+            .collect();
+        Ok(ExprReport {
+            value,
+            kept,
+            scalars,
+            nodes: reports,
+            stats: agg,
+            device_busy,
+            device_products,
+            wall_secs: span.elapsed().as_secs_f64(),
+            compile_secs: rt.compile_secs() - compile0 + worker_compile,
         })
     }
 
@@ -1219,7 +1828,8 @@ impl Coordinator {
         }
     }
 
-    /// Batched device-side α·X + β·Y over the full tile grid, chunked by
+    /// Batched device-side α·X + β·Y over `ids` (one device's owned
+    /// tiles; the single-device path passes the full grid), chunked by
     /// the bundle's axpby buckets (element-wise, so chunking cannot
     /// change the result); bundles without axpby artifacts fall back to
     /// the same arithmetic on the staged tiles.
@@ -1233,18 +1843,16 @@ impl Coordinator {
         vx: &RunVal,
         beta: f32,
         vy: &RunVal,
-        node: &PlannedNode,
+        ids: &[(usize, usize)],
         lonum: usize,
+        cross: bool,
         stats: &mut MultiplyStats,
     ) -> Result<Vec<((usize, usize), Vec<f32>)>> {
         let l2 = lonum * lonum;
         let (src_x, fpx) = vx.as_operand();
         let (src_y, fpy) = vy.as_operand();
-        let ids: Vec<(usize, usize)> = (0..node.tile_rows)
-            .flat_map(|i| (0..node.tile_cols).map(move |j| (i, j)))
-            .collect();
         let mut tiles: Vec<((usize, usize), Vec<f32>)> = Vec::with_capacity(ids.len());
-        let mut rest: &[(usize, usize)] = &ids;
+        let mut rest: &[(usize, usize)] = ids;
         while !rest.is_empty() {
             let take = buckets
                 .iter()
@@ -1262,8 +1870,8 @@ impl Coordinator {
                 let mut xb = vec![0.0f32; l2];
                 let mut yb = vec![0.0f32; l2];
                 for &(ti, tj) in chunk {
-                    stage_tile(pool, src_x, fpx, ti, tj, &mut xb, stats);
-                    stage_tile(pool, src_y, fpy, ti, tj, &mut yb, stats);
+                    stage_tile(pool, src_x, fpx, ti, tj, cross, &mut xb, stats);
+                    stage_tile(pool, src_y, fpy, ti, tj, cross, &mut yb, stats);
                     let out: Vec<f32> = xb
                         .iter()
                         .zip(&yb)
@@ -1287,6 +1895,7 @@ impl Coordinator {
                     fpx,
                     ti,
                     tj,
+                    cross,
                     &mut xb[slot * l2..(slot + 1) * l2],
                     stats,
                 );
@@ -1296,6 +1905,7 @@ impl Coordinator {
                     fpy,
                     ti,
                     tj,
+                    cross,
                     &mut yb[slot * l2..(slot + 1) * l2],
                     stats,
                 );

@@ -25,6 +25,15 @@ pub struct MultiDeviceReport {
     /// Seconds each device's transfer queue spent resolving/uploading
     /// operand tiles (the gather stage; overlaps compute when pipelined).
     pub device_transfer_secs: Vec<f64>,
+    /// Bytes each device's gather stage actually uploaded host→device
+    /// (residency misses; zero for a fully warm device).
+    pub device_transfer_bytes: Vec<u64>,
+    /// Bytes resident in each device's pool after the multiply (empty
+    /// under `--no-residency`).
+    pub device_resident_bytes: Vec<u64>,
+    /// Bytes of device-produced tiles each device pulled through a host
+    /// bounce (multi-device expression intermediates produced elsewhere).
+    pub device_cross_bytes: Vec<u64>,
     /// Pipeline-stage seconds summed over the device workers
     /// (gather/exec/scatter/span + batch count); with stage overlap,
     /// `gather_secs + exec_secs + scatter_secs > exec_span_secs`.
@@ -48,7 +57,7 @@ impl MultiDeviceReport {
     pub fn summary_line(&self) -> String {
         format!(
             "wall {:.3}s, busy {:?}, valid {}/{} ({:.1}%), imbalance {:.2}, eff {:.0}%, \
-             transfers {} KiB ({} KiB saved)",
+             transfers {} KiB ({} KiB saved, {} KiB cross-device)",
             self.wall_secs,
             self.device_busy
                 .iter()
@@ -60,7 +69,8 @@ impl MultiDeviceReport {
             self.imbalance,
             self.efficiency() * 100.0,
             self.stage.transfer_bytes / 1024,
-            self.stage.transfer_saved_bytes / 1024
+            self.stage.transfer_saved_bytes / 1024,
+            self.stage.cross_device_bytes / 1024
         )
     }
 }
@@ -81,6 +91,9 @@ mod tests {
             imbalance: 1.0,
             compile_secs: vec![0.0, 0.0],
             device_transfer_secs: vec![0.0, 0.0],
+            device_transfer_bytes: vec![0, 0],
+            device_resident_bytes: vec![0, 0],
+            device_cross_bytes: vec![0, 0],
             stage: MultiplyStats::default(),
         }
     }

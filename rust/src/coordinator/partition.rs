@@ -1,9 +1,22 @@
 //! Work partitioning for Algorithm 4: each device owns a set of output
 //! tiles (via [`crate::spamm::balance::Assignment`]) and processes them in
 //! P pipeline batches.
+//!
+//! [`partition_ctx`] is the full entry point: given a residency context
+//! (per-device pools + operand fingerprints) the
+//! [`Balance::ResidencyAware`] policy scores candidate owners by the
+//! bytes already resident on each device
+//! ([`crate::runtime::residency::ResidencyPool::resident_bytes_of`]) and
+//! by the device's memory budget, so warm devices keep their tiles and
+//! each device's A/B working set fits its pool.  Without a context the
+//! policy degrades to its cold greedy fill.
+
+use std::sync::Arc;
 
 use crate::config::Balance;
-use crate::spamm::balance::Assignment;
+use crate::runtime::residency::ResidencyPool;
+use crate::spamm::balance::{Assignment, DeviceView};
+use crate::spamm::cache::Fingerprint;
 use crate::spamm::schedule::Schedule;
 
 /// Per-device work description.
@@ -25,6 +38,58 @@ impl DeviceWork {
     }
 }
 
+/// Residency context for [`partition_ctx`]: where the operands' tiles
+/// currently live and how big one tile is on device.
+pub struct PartitionCtx<'a> {
+    /// Per-device pools (may be shorter than the device count).
+    pub pools: &'a [Arc<ResidencyPool>],
+    /// Content fingerprint of the A operand (None disables affinity).
+    pub fa: Option<Fingerprint>,
+    /// Content fingerprint of the B operand.
+    pub fb: Option<Fingerprint>,
+    /// Device bytes of one operand tile (LoNum²·4).
+    pub tile_bytes: usize,
+}
+
+impl PartitionCtx<'_> {
+    /// Snapshot the pools into per-device [`DeviceView`]s (one lock per
+    /// pool per operand; no LRU perturbation).
+    pub fn views(&self, devices: usize) -> Vec<DeviceView> {
+        (0..devices)
+            .map(|d| {
+                let mut view = DeviceView::default();
+                if let Some(pool) = self.pools.get(d) {
+                    view.budget_bytes = pool.budget_bytes();
+                    if let Some(fa) = self.fa {
+                        view.a_resident = pool.resident_tiles_of(fa).into_iter().collect();
+                    }
+                    if let Some(fb) = self.fb {
+                        view.b_resident = pool.resident_tiles_of(fb).into_iter().collect();
+                    }
+                }
+                view
+            })
+            .collect()
+    }
+}
+
+/// Build the tile→device assignment for the schedule under `policy`,
+/// consulting the residency context for [`Balance::ResidencyAware`].
+pub fn assignment_ctx(
+    sched: &Schedule,
+    devices: usize,
+    policy: Balance,
+    ctx: Option<&PartitionCtx<'_>>,
+) -> Assignment {
+    match (policy, ctx) {
+        (Balance::ResidencyAware, Some(ctx)) if !ctx.pools.is_empty() => {
+            let views = ctx.views(devices);
+            Assignment::build_residency_aware(sched, devices, &views, ctx.tile_bytes)
+        }
+        _ => Assignment::build(sched, devices, policy),
+    }
+}
+
 /// Partition the schedule's output tiles across `devices` workers using the
 /// balance policy, then split each device's list into `p` pipeline batches.
 pub fn partition(
@@ -33,8 +98,28 @@ pub fn partition(
     policy: Balance,
     p: usize,
 ) -> Vec<DeviceWork> {
-    let assignment = Assignment::build(sched, devices, policy);
-    (0..devices)
+    partition_ctx(sched, devices, policy, p, None)
+}
+
+/// [`partition`] with a residency context (the [`Balance::ResidencyAware`]
+/// policy needs pool state; the others ignore it).
+pub fn partition_ctx(
+    sched: &Schedule,
+    devices: usize,
+    policy: Balance,
+    p: usize,
+    ctx: Option<&PartitionCtx<'_>>,
+) -> Vec<DeviceWork> {
+    let assignment = assignment_ctx(sched, devices, policy, ctx);
+    batches_of(sched, &assignment, p)
+}
+
+/// Split an assignment's per-device tile lists into P pipeline batches.
+/// A device with no tiles gets zero batches — the executor treats an
+/// empty batch list as zero work (see the `devices > tiles` regression
+/// tests).
+pub fn batches_of(sched: &Schedule, assignment: &Assignment, p: usize) -> Vec<DeviceWork> {
+    (0..assignment.devices)
         .map(|d| {
             let tiles = assignment.tiles_of(sched, d);
             let p_eff = p.clamp(1, tiles.len().max(1));
@@ -53,6 +138,8 @@ mod tests {
     use super::*;
     use crate::matrix::tiling::PaddedMatrix;
     use crate::matrix::Matrix;
+    use crate::runtime::residency::TileKey;
+    use crate::spamm::cache::fingerprint;
     use crate::spamm::normmap::normmap;
 
     fn sched(n: usize) -> Schedule {
@@ -64,17 +151,19 @@ mod tests {
     #[test]
     fn covers_all_tiles_once() {
         let s = sched(256);
-        for devices in [1, 2, 3, 8] {
-            for p in [1, 4, 100] {
-                let work = partition(&s, devices, Balance::RowBlock, p);
-                assert_eq!(work.len(), devices);
-                let mut seen = std::collections::BTreeSet::new();
-                for w in &work {
-                    for t in w.tiles() {
-                        assert!(seen.insert(t), "tile {t:?} duplicated");
+        for policy in [Balance::RowBlock, Balance::ResidencyAware] {
+            for devices in [1, 2, 3, 8] {
+                for p in [1, 4, 100] {
+                    let work = partition(&s, devices, policy, p);
+                    assert_eq!(work.len(), devices);
+                    let mut seen = std::collections::BTreeSet::new();
+                    for w in &work {
+                        for t in w.tiles() {
+                            assert!(seen.insert(t), "tile {t:?} duplicated");
+                        }
                     }
+                    assert_eq!(seen.len(), s.tile_rows * s.tile_cols);
                 }
-                assert_eq!(seen.len(), s.tile_rows * s.tile_cols);
             }
         }
     }
@@ -96,5 +185,43 @@ mod tests {
         let work = partition(&s, 8, Balance::RowBlock, 2);
         let total: usize = work.iter().map(|w| w.tile_count()).sum();
         assert_eq!(total, 4);
+        // The six idle devices carry zero batches, not empty batches —
+        // the shape `execute_batches` must tolerate (regression:
+        // devices > tiles).
+        assert!(work.iter().skip(1).any(|w| w.tile_batches.is_empty()));
+        for w in &work {
+            assert!(w.tile_batches.iter().all(|b| !b.is_empty()));
+        }
+    }
+
+    #[test]
+    fn residency_ctx_prefers_warm_device() {
+        let s = sched(64); // 2x2 tiles, full schedule at τ=0
+        let a = Matrix::decay_algebraic(64, 0.1, 0.1, 1);
+        let pa = PaddedMatrix::new(&a, 32);
+        let fp = fingerprint(&pa);
+        // Warm device 1 with every tile of the operand (A and B are the
+        // same matrix here).
+        let pools: Vec<Arc<ResidencyPool>> =
+            (0..2).map(|_| Arc::new(ResidencyPool::new(0))).collect();
+        for ti in 0..2 {
+            for tj in 0..2 {
+                pools[1].insert(TileKey::new(fp, (ti, tj)), vec![0.0; 32 * 32]);
+            }
+        }
+        let ctx = PartitionCtx {
+            pools: &pools,
+            fa: Some(fp),
+            fb: Some(fp),
+            tile_bytes: 32 * 32 * 4,
+        };
+        let asg = assignment_ctx(&s, 2, Balance::ResidencyAware, Some(&ctx));
+        // Every output tile's operands are fully resident on device 1.
+        assert!(asg.owner.iter().all(|&d| d == 1), "owners: {:?}", asg.owner);
+        // Without the context the policy falls back to a cold partition
+        // that uses both devices.
+        let cold = assignment_ctx(&s, 2, Balance::ResidencyAware, None);
+        assert!(cold.owner.iter().any(|&d| d == 0));
+        assert!(cold.owner.iter().any(|&d| d == 1));
     }
 }

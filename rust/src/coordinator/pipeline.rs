@@ -41,8 +41,10 @@ use crate::spamm::normmap::normmap;
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams, TuneResult};
 
+use crate::spamm::balance::Assignment;
+
 use super::metrics::MultiDeviceReport;
-use super::partition::{partition, DeviceWork};
+use super::partition::{batches_of, partition_ctx, DeviceWork, PartitionCtx};
 
 /// Multi-device SpAMM coordinator.
 pub struct Coordinator {
@@ -55,15 +57,18 @@ pub struct Coordinator {
 }
 
 /// What one device worker returns: its owned output tiles and clocks.
-struct DeviceResult {
-    device: usize,
+/// Shared with the multi-device expression executor
+/// ([`crate::coordinator::expr`]), which runs the same per-device
+/// pipeline per graph node.
+pub(crate) struct DeviceResult {
+    pub(crate) device: usize,
     /// (tile coords, accumulated LoNum² data) per owned tile.
-    tiles: Vec<((usize, usize), Vec<f32>)>,
-    busy_secs: f64,
-    compile_secs: f64,
-    products: usize,
+    pub(crate) tiles: Vec<((usize, usize), Vec<f32>)>,
+    pub(crate) busy_secs: f64,
+    pub(crate) compile_secs: f64,
+    pub(crate) products: usize,
     /// Pipeline-stage breakdown of this worker's batches.
-    stats: MultiplyStats,
+    pub(crate) stats: MultiplyStats,
 }
 
 impl Coordinator {
@@ -182,7 +187,7 @@ impl Coordinator {
             fa = fa.or_else(|| Some(fingerprint(&pa)));
             fb = fb.or_else(|| Some(fingerprint(&pb)));
         }
-        self.run_scheduled(&pa, &pb, fa, fb, sched, front, a.rows(), b.cols(), None)
+        self.run_scheduled(&pa, &pb, fa, fb, sched, front, a.rows(), b.cols(), None, None)
     }
 
     /// Execute a *prepared* multiply: operands already padded and
@@ -197,13 +202,18 @@ impl Coordinator {
         fb: Fingerprint,
         sched: &Schedule,
     ) -> Result<MultiDeviceReport> {
-        self.multiply_prepared_on(None, pa, pb, fa, fb, sched)
+        self.multiply_prepared_on(None, pa, pb, fa, fb, sched, None)
     }
 
     /// [`Coordinator::multiply_prepared`] with an optional long-lived
     /// runtime (session worker, `devices == 1` only): compiled executables
     /// persist across requests, so warm requests also skip the per-call
-    /// compile/warm-up a fresh runtime pays.
+    /// compile/warm-up a fresh runtime pays.  `placed` pins the
+    /// tile→device assignment resolved at plan-prepare time — the devices
+    /// the session pinned the operands into are exactly the devices that
+    /// execute, even if pool residency shifted since (a live re-partition
+    /// could otherwise land on unpinned devices).
+    #[allow(clippy::too_many_arguments)]
     pub fn multiply_prepared_on(
         &self,
         resident: Option<&Runtime>,
@@ -212,6 +222,7 @@ impl Coordinator {
         fa: Fingerprint,
         fb: Fingerprint,
         sched: &Schedule,
+        placed: Option<&Assignment>,
     ) -> Result<MultiDeviceReport> {
         if pa.logical_cols != pb.logical_rows {
             return Err(Error::Shape(format!(
@@ -245,6 +256,7 @@ impl Coordinator {
             pa.logical_rows,
             pb.logical_cols,
             resident,
+            placed,
         )
     }
 
@@ -265,8 +277,35 @@ impl Coordinator {
         out_rows: usize,
         out_cols: usize,
         resident: Option<&Runtime>,
+        placed: Option<&Assignment>,
     ) -> Result<MultiDeviceReport> {
-        let work = partition(sched, self.cfg.devices, self.cfg.balance, self.cfg.pipeline_batches);
+        // A prepared plan pins its placement (the devices its operands
+        // were pinned into must be the devices that execute); otherwise
+        // partition live.  The residency context tells the
+        // residency-aware policy where A/B tiles currently live.
+        let work = match placed {
+            Some(a)
+                if a.devices == self.cfg.devices
+                    && a.owner.len() == sched.tile_rows * sched.tile_cols =>
+            {
+                batches_of(sched, a, self.cfg.pipeline_batches)
+            }
+            _ => {
+                let ctx = PartitionCtx {
+                    pools: &self.pools,
+                    fa,
+                    fb,
+                    tile_bytes: self.cfg.lonum * self.cfg.lonum * std::mem::size_of::<f32>(),
+                };
+                partition_ctx(
+                    sched,
+                    self.cfg.devices,
+                    self.cfg.balance,
+                    self.cfg.pipeline_batches,
+                    Some(&ctx),
+                )
+            }
+        };
 
         let device_load: Vec<usize> = work
             .iter()
@@ -416,6 +455,8 @@ impl Coordinator {
         let mut device_busy = vec![0.0; self.cfg.devices];
         let mut compile_secs = vec![0.0; self.cfg.devices];
         let mut device_transfer_secs = vec![0.0; self.cfg.devices];
+        let mut device_transfer_bytes = vec![0u64; self.cfg.devices];
+        let mut device_cross_bytes = vec![0u64; self.cfg.devices];
         // Stage stats: the front-end's cache counters + the per-device
         // workers' pipeline clocks.
         let mut stage = front;
@@ -425,11 +466,18 @@ impl Coordinator {
             // The gather stage *is* the device's transfer queue: handle
             // resolution plus residency-miss uploads.
             device_transfer_secs[r.device] = r.stats.gather_secs;
+            device_transfer_bytes[r.device] = r.stats.transfer_bytes;
+            device_cross_bytes[r.device] = r.stats.cross_device_bytes;
             stage.absorb_stages(&r.stats);
             for ((i, j), data) in r.tiles {
                 pc.inner.add_block(i * lonum, j * lonum, lonum, &data);
             }
         }
+        let device_resident_bytes = self
+            .pools
+            .iter()
+            .map(|p| p.resident_bytes() as u64)
+            .collect();
         Ok(MultiDeviceReport {
             c: pc.crop(),
             wall_secs,
@@ -441,6 +489,9 @@ impl Coordinator {
             imbalance,
             compile_secs,
             device_transfer_secs,
+            device_transfer_bytes,
+            device_resident_bytes,
+            device_cross_bytes,
             stage,
         })
     }
@@ -474,6 +525,9 @@ impl Coordinator {
             imbalance: 1.0,
             compile_secs: vec![0.0],
             device_transfer_secs: vec![0.0],
+            device_transfer_bytes: vec![0],
+            device_resident_bytes: Vec::new(),
+            device_cross_bytes: vec![0],
             stage: MultiplyStats::default(),
         })
     }
@@ -488,7 +542,7 @@ impl Coordinator {
 /// the session's resident worker reuses one across requests (warm-up is a
 /// no-op once its executables are compiled).
 #[allow(clippy::too_many_arguments)]
-fn run_device(
+pub(crate) fn run_device(
     rt: &Runtime,
     cfg: &SpammConfig,
     pool: Option<&ResidencyPool>,

@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SpammConfig;
 use crate::coordinator::expr::{ExprGraph, ExprNodeReport, ExprPlan, ExprSource};
+use crate::coordinator::partition::{assignment_ctx, PartitionCtx};
 use crate::coordinator::pipeline::report_to_stats;
 use crate::coordinator::service::Approx;
 use crate::coordinator::Coordinator;
@@ -44,6 +45,7 @@ use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
 use crate::runtime::residency::ResidencyPool;
 use crate::runtime::{ArtifactBundle, Runtime};
+use crate::spamm::balance::Assignment;
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::MultiplyStats;
 use crate::spamm::normmap::normmap;
@@ -370,6 +372,15 @@ struct Plan {
     /// Front-phase breakdown (norm/schedule timings + cache counters)
     /// recorded at `prepare`, folded into the cold job's stats.
     front: MultiplyStats,
+    /// Devices whose pools the plan pinned its operands into — the
+    /// devices the prepare-time partition assigns work to.  A device
+    /// with no tiles of this plan keeps its pool churn-free.
+    pin_devices: Vec<usize>,
+    /// The prepare-time tile→device assignment, pinned like the
+    /// schedule: execution runs exactly this placement, so the pinned
+    /// pools are exactly the pools that get used even when residency
+    /// shifts between prepare and submit.
+    assignment: Assignment,
     /// Whether a job has already been charged the prepare cost.
     cold_charged: std::sync::atomic::AtomicBool,
 }
@@ -392,6 +403,10 @@ struct ExprJob {
     operands: Vec<OperandId>,
     /// Operand fingerprints pinned in the device residency pools.
     fps: Vec<Fingerprint>,
+    /// Devices whose pools the fps were pinned into — the devices the
+    /// plan's placement maps assign work to (regression: pinning used
+    /// to hit every pool even for devices the graph never touches).
+    pin_devices: Vec<usize>,
     /// Whether a job has been charged the prepare cost (cold first job).
     cold_charged: std::sync::atomic::AtomicBool,
 }
@@ -673,9 +688,30 @@ impl SpammSession {
             store.pin(a, true);
             store.pin(b, true);
         }
-        for p in &self.shared.pools {
-            p.pin_operand(fa);
-            p.pin_operand(fb);
+        // Pin the operands only in the pools of the devices the
+        // prepare-time partition actually assigns tiles to — idle
+        // devices (devices > tiles, or a residency-aware partition that
+        // concentrates this plan elsewhere) keep their pools unpinned.
+        // The assignment itself is pinned in the plan, so execution runs
+        // exactly this placement.
+        let assignment = {
+            let cfg = &self.shared.cfg;
+            let ctx = PartitionCtx {
+                pools: &self.shared.pools,
+                fa: Some(fa),
+                fb: Some(fb),
+                tile_bytes: cfg.lonum * cfg.lonum * std::mem::size_of::<f32>(),
+            };
+            assignment_ctx(&schedule, cfg.devices, cfg.balance, Some(&ctx))
+        };
+        let pin_devices: Vec<usize> = (0..self.shared.cfg.devices)
+            .filter(|&d| assignment.owner.iter().any(|&o| o == d))
+            .collect();
+        for &d in &pin_devices {
+            if let Some(p) = self.shared.pools.get(d) {
+                p.pin_operand(fa);
+                p.pin_operand(fb);
+            }
         }
         let id = plans.next_id;
         plans.next_id += 1;
@@ -697,6 +733,8 @@ impl SpammSession {
                     dedup: key,
                     prepare_secs,
                     front,
+                    pin_devices,
+                    assignment,
                     cold_charged: std::sync::atomic::AtomicBool::new(false),
                 }),
                 refs: 1,
@@ -742,9 +780,11 @@ impl SpammSession {
             store.pin(plan.a, false);
             store.pin(plan.b, false);
         }
-        for p in &self.shared.pools {
-            p.unpin_operand(plan.fa);
-            p.unpin_operand(plan.fb);
+        for &d in &plan.pin_devices {
+            if let Some(p) = self.shared.pools.get(d) {
+                p.unpin_operand(plan.fa);
+                p.unpin_operand(plan.fb);
+            }
         }
         Ok(())
     }
@@ -837,7 +877,12 @@ impl SpammSession {
             .iter()
             .map(|(p, fp)| ExprSource::Padded(p.clone(), *fp))
             .collect();
-        let plan = g.prepare(&self.shared.caches, &self.shared.cfg, &sources)?;
+        let plan = g.prepare_placed(
+            &self.shared.caches,
+            &self.shared.cfg,
+            &self.shared.pools,
+            &sources,
+        )?;
         let fps = plan.input_fingerprints();
         {
             let mut store = self.shared.store.lock().unwrap();
@@ -845,9 +890,14 @@ impl SpammSession {
                 store.pin(*id, true);
             }
         }
-        for pool in &self.shared.pools {
-            for fp in &fps {
-                pool.pin_operand(*fp);
+        // Pin the leaves only where the plan's placement maps put work —
+        // not blindly in device 0's pool (nor in every pool).
+        let pin_devices = plan.devices_used();
+        for &d in &pin_devices {
+            if let Some(pool) = self.shared.pools.get(d) {
+                for fp in &fps {
+                    pool.pin_operand(*fp);
+                }
             }
         }
         let mut plans = self.shared.plans.lock().unwrap();
@@ -860,6 +910,7 @@ impl SpammSession {
                 plan,
                 operands: inputs.to_vec(),
                 fps,
+                pin_devices,
                 cold_charged: std::sync::atomic::AtomicBool::new(false),
             }),
         );
@@ -917,9 +968,11 @@ impl SpammSession {
                 store.pin(*op, false);
             }
         }
-        for pool in &self.shared.pools {
-            for fp in &job.fps {
-                pool.unpin_operand(*fp);
+        for &d in &job.pin_devices {
+            if let Some(pool) = self.shared.pools.get(d) {
+                for fp in &job.fps {
+                    pool.unpin_operand(*fp);
+                }
             }
         }
         Ok(())
@@ -1132,6 +1185,7 @@ fn run_multiply_job(
         plan.fa,
         plan.fb,
         &plan.schedule,
+        Some(&plan.assignment),
     )?;
     let mut compute = t0.elapsed().as_secs_f64();
     let mut stats = report_to_stats(&rep);
@@ -1201,10 +1255,10 @@ fn run_expr_job(
         valid_ratio,
         latency_secs: job.submitted.elapsed().as_secs_f64(),
         compute_secs: compute,
-        // Time inside kernel execution across all nodes — comparable to
+        // Per-device time inside the spamm pipelines — comparable to
         // the multiply path's per-device busy clocks (the expr wall also
         // contains host-side scheduling/gather, which is not "busy").
-        device_busy: vec![rep.stats.exec_secs],
+        device_busy: rep.device_busy,
         stats,
         nodes: rep.nodes,
     })
@@ -1391,6 +1445,11 @@ mod tests {
                 dedup: (OperandId(0), OperandId(0), ApproxKey::Tau(0)),
                 prepare_secs: 0.0,
                 front: MultiplyStats::default(),
+                pin_devices: Vec::new(),
+                assignment: Assignment {
+                    devices: 1,
+                    owner: Vec::new(),
+                },
                 cold_charged: std::sync::atomic::AtomicBool::new(false),
             })),
             submitted: Instant::now(),

@@ -136,6 +136,30 @@
 //! per-node stats on the completion), and the `power`/`purify` CLI
 //! subcommands expose `--expr` vs `--loop`.
 //!
+//! ## Multi-device
+//!
+//! `devices = M` is a first-class path for every API: multiplies,
+//! prepared session plans, and expression graphs all partition output
+//! tiles across M device workers.  Tile ownership is exclusive and
+//! per-tile accumulation order is schedule-fixed, so every placement is
+//! **bitwise identical** — placement moves time and bytes, never bits.
+//! Three `balance` policies: `rowblock`, `strided:<s>` (§3.5.1), and
+//! `residency-aware`, which models communication per partition: tiles
+//! whose A/B operand tiles are already resident in a device's
+//! [`runtime::residency::ResidencyPool`] stay on that device (probed
+//! via `ResidencyPool::resident_bytes_of` — warm devices keep their
+//! tiles), the rest fill greedily by load with transfer bytes as the
+//! tie-break under each device's `device_mem_budget`.  Expression plans
+//! carry per-node tile→device maps ([`coordinator::expr::ExprGraph`]
+//! `::prepare_placed`); each device scatters its owned node-output
+//! tiles into its own pool, and cross-device consumption bounces
+//! through a host mirror, reported as
+//! `MultiplyStats::cross_device_bytes`.  [`coordinator::MultiDeviceReport`]
+//! adds per-device transferred/resident/cross bytes and the imbalance
+//! metric; the `coordinate` CLI subcommand prints the per-device table
+//! and `coordinate --smoke` asserts the warm-pool ≥2x transfer cut vs
+//! `rowblock` in CI.
+//!
 //! ## Quick start
 //!
 //! The serving lifecycle — put → prepare → submit → wait:

@@ -47,11 +47,12 @@ fn common(spec: Spec) -> Spec {
     let balance = match d.balance {
         cuspamm::config::Balance::RowBlock => "rowblock".to_string(),
         cuspamm::config::Balance::Strided(s) => format!("strided:{s}"),
+        cuspamm::config::Balance::ResidencyAware => "residency-aware".to_string(),
     };
     spec.opt("artifacts", "artifacts", "artifact bundle directory")
         .opt("devices", &d.devices.to_string(), "simulated device count")
         .opt("precision", d.precision.as_str(), "f32 | bf16")
-        .opt("balance", &balance, "rowblock | strided:<s>")
+        .opt("balance", &balance, "rowblock | strided:<s> | residency-aware")
         .opt(
             "pipeline-depth",
             &d.pipeline_depth.to_string(),
@@ -116,6 +117,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "purify" => cmd_purify(rest),
         "cnn" => cmd_cnn(rest),
         "serve" => cmd_serve(rest),
+        "coordinate" => cmd_coordinate(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
@@ -125,7 +127,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  loop (--expr/--loop)\n  purify McWeeny purification, same \
                  A/B\n  cnn    case-study CNN accuracy probe\n  serve  \
                  session serving bench: registered operands, prepared plans, \
-                 priority queue\n\nUse `cuspamm <cmd> --help` for options."
+                 priority queue\n  coordinate  multi-device partition bench: \
+                 per-device transfer/busy table, residency-aware vs rowblock \
+                 (--smoke)\n\nUse `cuspamm <cmd> --help` for options."
             );
             Ok(())
         }
@@ -316,16 +320,7 @@ fn cmd_power(args: &[String]) -> Result<()> {
             s.result_fnorm
         );
     }
-    if let Some(pool) = coord.residency_pools().first() {
-        let ps = pool.stats();
-        println!(
-            "  transfers: {} KiB uploaded, {} KiB saved ({} hits / {} misses)",
-            ps.uploaded_bytes / 1024,
-            ps.saved_bytes / 1024,
-            ps.hits,
-            ps.misses
-        );
-    }
+    print_pool_transfers(&coord);
     println!(
         "  norm cache: {} hit / {} miss (loop pays one miss per intermediate; \
          expr refreshes norms device-side)",
@@ -333,6 +328,34 @@ fn cmd_power(args: &[String]) -> Result<()> {
         coord.caches().norms.misses()
     );
     Ok(())
+}
+
+/// Transfer totals aggregated over every device pool (`devices > 1`
+/// reports the whole fleet, not just device 0).
+fn print_pool_transfers(coord: &Coordinator) {
+    let pools = coord.residency_pools();
+    if pools.is_empty() {
+        return;
+    }
+    let mut up = 0u64;
+    let mut sv = 0u64;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for p in pools {
+        let s = p.stats();
+        up += s.uploaded_bytes;
+        sv += s.saved_bytes;
+        hits += s.hits;
+        misses += s.misses;
+    }
+    println!(
+        "  transfers ({} device pools): {} KiB uploaded, {} KiB saved ({} hits / {} misses)",
+        pools.len(),
+        up / 1024,
+        sv / 1024,
+        hits,
+        misses
+    );
 }
 
 /// CI smoke for `power` (`--smoke`): both paths on fresh coordinators —
@@ -438,16 +461,7 @@ fn cmd_purify(args: &[String]) -> Result<()> {
             s.combine_secs
         );
     }
-    if let Some(pool) = coord.residency_pools().first() {
-        let ps = pool.stats();
-        println!(
-            "  transfers: {} KiB uploaded, {} KiB saved ({} hits / {} misses)",
-            ps.uploaded_bytes / 1024,
-            ps.saved_bytes / 1024,
-            ps.hits,
-            ps.misses
-        );
-    }
+    print_pool_transfers(&coord);
     Ok(())
 }
 
@@ -757,6 +771,180 @@ fn serve_smoke(bundle: &ArtifactBundle, cfg: SpammConfig, ratio: f64) -> Result<
     println!(
         "smoke: OK — warm plans ≥2x cheaper, zero warm transfers, bitwise-identical \
          to the one-shot path"
+    );
+    Ok(())
+}
+
+fn cmd_coordinate(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new(
+        "cuspamm coordinate",
+        "multi-device partition bench: per-device load/busy/transfer table \
+         under the configured balance policy; --smoke asserts the \
+         residency-aware policy beats rowblock on a warm pool",
+    ))
+    .opt("n", "512", "matrix size")
+    .opt("ratio", "0.20", "target valid ratio")
+    .opt("seed", "7", "workload seed")
+    .flag(
+        "smoke",
+        "CI assertion: pools warmed by a strided(2) run; residency-aware \
+         re-partitioning must transfer ≥2x fewer bytes than rowblock, \
+         bitwise-identically, and a 4-device expr power chain must use \
+         every device",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let n = a.usize("n")?;
+    let seed = a.usize("seed")? as u64;
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1);
+    if a.flag("smoke") {
+        return coordinate_smoke(&bundle, cfg, &ma, &mb, a.f64("ratio")?);
+    }
+    let coord = Coordinator::new(&bundle, cfg.clone())?;
+    let tuned = coord.tune_tau(&ma, &mb, a.f64("ratio")?)?;
+    let rep = coord.multiply(&ma, &mb, tuned.tau)?;
+    println!(
+        "== coordinate: n={n} τ={:.4e} devices={} balance={:?} ==",
+        tuned.tau, cfg.devices, cfg.balance
+    );
+    println!("spamm: {}", rep.summary_line());
+    println!("  device   load   busy(s)  xfer(s)  uploaded(KiB)  resident(KiB)  cross(KiB)");
+    for d in 0..cfg.devices {
+        println!(
+            "  {:6} {:6} {:9.4} {:8.4} {:14} {:14} {:11}",
+            d,
+            rep.device_load.get(d).copied().unwrap_or(0),
+            rep.device_busy.get(d).copied().unwrap_or(0.0),
+            rep.device_transfer_secs.get(d).copied().unwrap_or(0.0),
+            rep.device_transfer_bytes.get(d).copied().unwrap_or(0) / 1024,
+            rep.device_resident_bytes.get(d).copied().unwrap_or(0) / 1024,
+            rep.device_cross_bytes.get(d).copied().unwrap_or(0) / 1024
+        );
+    }
+    Ok(())
+}
+
+/// CI smoke for `coordinate` (`--smoke`): pools warmed by a previous
+/// workload under a *different* placement (strided(2)); on the warm
+/// pools the residency-aware policy keeps every tile on its warm device
+/// (zero uploads) while rowblock re-partitions by contiguous rows and
+/// re-uploads what moved — ≥2x fewer transferred bytes, bitwise
+/// identical.  Then a 4-device expression power chain must report
+/// nonzero work on every device.
+fn coordinate_smoke(
+    bundle: &ArtifactBundle,
+    mut cfg: SpammConfig,
+    ma: &Matrix,
+    mb: &Matrix,
+    ratio: f64,
+) -> Result<()> {
+    use cuspamm::config::Balance;
+    use cuspamm::runtime::residency::ResidencyPool;
+    use cuspamm::spamm::cache::ExecCaches;
+    use std::sync::Arc;
+
+    if !cfg.residency_enabled {
+        return Err(Error::Config(
+            "coordinate --smoke measures pool transfers; run without --no-residency".into(),
+        ));
+    }
+    if cfg.devices < 2 {
+        cfg.devices = 4;
+    }
+    let tau = Coordinator::new(bundle, cfg.clone())?
+        .tune_tau(ma, mb, ratio)?
+        .tau;
+
+    // Two identically-warmed pool sets: each is warmed by a strided(2)
+    // run (the "previous workload" that placed the tiles), then one is
+    // re-partitioned by rowblock, the other by residency-aware.
+    let run = |balance: Balance| -> Result<(cuspamm::coordinator::MultiDeviceReport, u64)> {
+        let pools: Vec<Arc<ResidencyPool>> = (0..cfg.devices)
+            .map(|_| Arc::new(ResidencyPool::new(cfg.device_mem_budget)))
+            .collect();
+        let mut warm_cfg = cfg.clone();
+        warm_cfg.balance = Balance::Strided(2);
+        let warm = Coordinator::with_shared(
+            bundle,
+            warm_cfg,
+            Arc::new(ExecCaches::new()),
+            Some(pools.clone()),
+        )?;
+        warm.multiply(ma, mb, tau)?;
+        let warmed: u64 = pools.iter().map(|p| p.stats().uploaded_bytes).sum();
+
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.balance = balance;
+        let coord = Coordinator::with_shared(
+            bundle,
+            cold_cfg,
+            Arc::new(ExecCaches::new()),
+            Some(pools.clone()),
+        )?;
+        let rep = coord.multiply(ma, mb, tau)?;
+        let total: u64 = pools.iter().map(|p| p.stats().uploaded_bytes).sum();
+        Ok((rep, total - warmed))
+    };
+    let (rep_rb, up_rb) = run(Balance::RowBlock)?;
+    let (rep_ra, up_ra) = run(Balance::ResidencyAware)?;
+    assert_eq!(
+        rep_ra.c.data(),
+        rep_rb.c.data(),
+        "residency-aware partition changed the result bits"
+    );
+    println!(
+        "smoke: warm re-partition uploaded — rowblock {} KiB, residency-aware {} KiB",
+        up_rb / 1024,
+        up_ra / 1024
+    );
+    assert!(up_rb > 0, "rowblock re-partition moved no bytes; scenario broken");
+    assert!(
+        up_ra * 2 <= up_rb,
+        "residency-aware must transfer ≥2x fewer bytes than rowblock on a warm \
+         pool: {up_ra} vs {up_rb}"
+    );
+
+    // Multi-device expression graphs: an A³ chain must fan out — every
+    // device reports nonzero tile products.
+    use cuspamm::coordinator::{Approx, ExprGraph, ExprSource};
+    let coord = Coordinator::new(bundle, cfg.clone())?;
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let p2 = g.spamm(leaf, leaf, Approx::Tau(tau));
+    let p3 = g.spamm(p2, leaf, Approx::Tau(tau));
+    g.output(p3);
+    let plan = coord.prepare_expr(&g, &[ExprSource::Host(ma)])?;
+    let rep = coord.execute_expr(&plan)?;
+    println!(
+        "smoke: expr A^3 on {} devices — products {:?}, cross-device {} KiB",
+        cfg.devices,
+        rep.device_products,
+        rep.stats.cross_device_bytes / 1024
+    );
+    assert_eq!(rep.device_products.len(), cfg.devices);
+    assert!(
+        rep.device_products.iter().all(|&p| p > 0),
+        "every device must execute expr work: {:?}",
+        rep.device_products
+    );
+    // Single-device reference: the multi-device expr path is bitwise
+    // identical.
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.devices = 1;
+    let solo = Coordinator::new(bundle, solo_cfg)?;
+    let solo_plan = solo.prepare_expr(&g, &[ExprSource::Host(ma)])?;
+    let solo_rep = solo.execute_expr(&solo_plan)?;
+    assert_eq!(
+        rep.to_matrix().data(),
+        solo_rep.to_matrix().data(),
+        "multi-device expr diverged from the single-device path"
+    );
+    println!(
+        "smoke: OK — ≥2x fewer warm-pool transfer bytes than rowblock, bitwise \
+         identity, and all {} devices executed expr work",
+        cfg.devices
     );
     Ok(())
 }

@@ -97,19 +97,36 @@ pub fn load_tensor(path: &Path) -> Result<Tensor> {
     }
 }
 
-/// Save a f32 tensor (test fixtures / results).
-pub fn save_tensor_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
-    if dims.iter().product::<usize>().max(1) != data.len().max(1) {
+/// One encoding of the CSTN header (magic | version | dtype | ndim |
+/// dims) shared by both writers — and, implicitly, the loader above.
+fn header(dtype: u32, dims: &[usize], payload_len: usize) -> Result<Vec<u8>> {
+    if dims.iter().product::<usize>().max(1) != payload_len.max(1) {
         return Err(Error::TensorIo("dims/product mismatch".into()));
     }
-    let mut out = Vec::with_capacity(16 + 4 * dims.len() + 4 * data.len());
+    let mut out = Vec::with_capacity(16 + 4 * dims.len() + 4 * payload_len);
     out.extend_from_slice(b"CSTN");
     out.extend_from_slice(&1u32.to_le_bytes());
-    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&dtype.to_le_bytes());
     out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
     for &d in dims {
         out.extend_from_slice(&(d as u32).to_le_bytes());
     }
+    Ok(out)
+}
+
+/// Save a f32 tensor (test fixtures / results), dtype id 0.
+pub fn save_tensor_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+    let mut out = header(0, dims, data.len())?;
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Save an i32 tensor (labels of frozen fixtures), dtype id 1.
+pub fn save_tensor_i32(path: &Path, dims: &[usize], data: &[i32]) -> Result<()> {
+    let mut out = header(1, dims, data.len())?;
     for &x in data {
         out.extend_from_slice(&x.to_le_bytes());
     }
@@ -131,6 +148,19 @@ mod tests {
         let t = load_tensor(&p).unwrap();
         let (dims, got) = t.as_f32().unwrap();
         assert_eq!(dims, &[2, 3, 4]);
+        assert_eq!(got, &data[..]);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let dir = std::env::temp_dir().join("cuspamm_tensorio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels.cstn");
+        let data: Vec<i32> = vec![3, -1, 0, 7];
+        save_tensor_i32(&p, &[4], &data).unwrap();
+        let t = load_tensor(&p).unwrap();
+        let (dims, got) = t.as_i32().unwrap();
+        assert_eq!(dims, &[4]);
         assert_eq!(got, &data[..]);
     }
 

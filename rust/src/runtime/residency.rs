@@ -333,6 +333,32 @@ impl ResidencyPool {
         self.inner.lock().unwrap().bytes
     }
 
+    /// Bytes of operand `fp`'s tiles among `tiles` that are resident
+    /// right now — the cheap placement probe the residency-aware
+    /// partitioner scores candidate owners with.  One lock, no touches:
+    /// probing residency must not perturb the LRU order.
+    pub fn resident_bytes_of(&self, fp: Fingerprint, tiles: &[(usize, usize)]) -> usize {
+        let inner = self.inner.lock().unwrap();
+        tiles
+            .iter()
+            .filter_map(|&t| inner.map.get(&TileKey::new(fp, t)))
+            .map(|s| s.handle.data.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Tile coordinates of operand `fp` resident right now (one lock, no
+    /// LRU touches) — the bulk snapshot behind
+    /// [`ResidencyPool::resident_bytes_of`] for full-grid placement.
+    pub fn resident_tiles_of(&self, fp: Fingerprint) -> Vec<(usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .keys()
+            .filter(|k| k.op == fp)
+            .map(|k| (k.tile.0 as usize, k.tile.1 as usize))
+            .collect()
+    }
+
     /// Drop every unpinned tile — operator surface for long-running
     /// services that want to release device memory between unrelated
     /// workloads without waiting for LRU churn.  Pinned tiles survive:
@@ -794,6 +820,25 @@ mod tests {
         drop(r);
         assert_eq!(pool.remove_operand(fp(9)), 6);
         assert_eq!(pool.resident_tiles(), 0);
+    }
+
+    #[test]
+    fn residency_probes_report_without_touching_lru() {
+        let pool = ResidencyPool::new(2 * TILE_BYTES as usize);
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        pool.acquire(key(1, (0, 1)), ELEMS, |d| d.fill(2.0));
+        // Probe (0,0): must report it without marking it recently used.
+        assert_eq!(
+            pool.resident_bytes_of(fp(1), &[(0, 0), (7, 7)]),
+            TILE_BYTES as usize
+        );
+        let mut tiles = pool.resident_tiles_of(fp(1));
+        tiles.sort_unstable();
+        assert_eq!(tiles, vec![(0, 0), (0, 1)]);
+        assert!(pool.resident_tiles_of(fp(2)).is_empty());
+        // (0,0) is still LRU despite the probes: the next insert evicts it.
+        pool.acquire(key(1, (0, 2)), ELEMS, |d| d.fill(3.0));
+        assert!(!pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0)).hit);
     }
 
     #[test]

@@ -5,9 +5,69 @@
 //! devices holding off-diagonal stripes idle.  The paper's fix assigns each
 //! worker `s` sub-matrices at equal stride; we implement both policies and
 //! an imbalance metric so the ablation bench can quantify the gain.
+//!
+//! The third policy, [`Assignment::build_residency_aware`], models
+//! *communication* per partition rather than tile counts alone (the
+//! SUMMA-style analysis of Yang/Buluç/Owens, arXiv:1803.08601): an output
+//! tile whose A/B operand tiles are already resident in a device's
+//! [`crate::runtime::residency::ResidencyPool`] is kept on that device
+//! (zero transfer); the rest are placed greedily by valid-product load
+//! with estimated transfer bytes as the tie-break, and each device's
+//! distinct-operand-tile working set is kept under its memory budget when
+//! a feasible placement exists.
+
+use std::collections::HashSet;
 
 use crate::config::Balance;
 use crate::spamm::schedule::Schedule;
+
+/// One device's residency/budget view for the residency-aware policy —
+/// a snapshot taken from the device's pool right before partitioning
+/// (via [`crate::runtime::residency::ResidencyPool::resident_tiles_of`] /
+/// `resident_bytes_of`).
+#[derive(Clone, Debug)]
+pub struct DeviceView {
+    /// A-operand tiles (coords in A's tile grid) resident on the device.
+    pub a_resident: HashSet<(usize, usize)>,
+    /// B-operand tiles resident on the device.
+    pub b_resident: HashSet<(usize, usize)>,
+    /// Working-set byte budget (`usize::MAX` = unlimited).
+    pub budget_bytes: usize,
+}
+
+impl Default for DeviceView {
+    fn default() -> Self {
+        DeviceView {
+            a_resident: HashSet::new(),
+            b_resident: HashSet::new(),
+            budget_bytes: usize::MAX,
+        }
+    }
+}
+
+/// Tag distinguishing A-operand from B-operand tiles in working sets.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Op {
+    A,
+    B,
+}
+
+/// Row-block tile→device map over a bare grid (Algorithm 4's default:
+/// device d owns tile rows [d·TR/M, (d+1)·TR/M)) — the one canonical
+/// formula, shared by [`Assignment::build`] and the expression planner's
+/// element-wise placement fallback.
+pub fn rowblock_owner(tile_rows: usize, tile_cols: usize, devices: usize) -> Vec<usize> {
+    let mut owner = vec![0usize; tile_rows * tile_cols];
+    if devices > 1 {
+        for i in 0..tile_rows {
+            let d = (i * devices / tile_rows.max(1)).min(devices - 1);
+            for j in 0..tile_cols {
+                owner[i * tile_cols + j] = d;
+            }
+        }
+    }
+    owner
+}
 
 /// Assignment of every output tile (row-major index) to a device.
 #[derive(Clone, Debug)]
@@ -24,13 +84,7 @@ impl Assignment {
         let mut owner = vec![0usize; tiles];
         match policy {
             Balance::RowBlock => {
-                // Algorithm 4: device d owns tile rows [d·TR/M, (d+1)·TR/M).
-                for i in 0..s.tile_rows {
-                    let d = i * devices / s.tile_rows.max(1);
-                    for j in 0..s.tile_cols {
-                        owner[i * s.tile_cols + j] = d.min(devices - 1);
-                    }
-                }
+                owner = rowblock_owner(s.tile_rows, s.tile_cols, devices);
             }
             Balance::Strided(stride) => {
                 // §3.5.1 generalized: walk tiles in row-major order jumping
@@ -49,8 +103,178 @@ impl Assignment {
                     }
                 }
             }
+            Balance::ResidencyAware => {
+                // Residency needs pool views; without them (this cold
+                // builder) the policy degrades to its cold greedy fill.
+                return Assignment::build_residency_aware(s, devices, &[], 1);
+            }
         }
         Assignment { devices, owner }
+    }
+
+    /// Residency- and memory-aware assignment (see module docs).
+    ///
+    /// Two deterministic phases over the output tiles:
+    ///
+    /// 1. **Warm affinity** — a tile whose needed A/B operand tiles are
+    ///    *all* resident on some device stays on that device (ties:
+    ///    least load, then lowest device index).  Adding it moves zero
+    ///    bytes, so warm devices keep their tiles.
+    /// 2. **Greedy fill** — remaining tiles, in descending valid-product
+    ///    order (LPT), go to the budget-feasible device with the least
+    ///    load; estimated new transfer bytes (needed tiles not resident
+    ///    and not already in the device's accumulated working set) break
+    ///    ties, then the device index.  When no device is feasible the
+    ///    budget is ignored for that tile — like the pool itself, the
+    ///    partition overflows rather than dropping work.
+    ///
+    /// `views.len()` may be shorter than `devices` (missing devices are
+    /// treated as cold and unbounded).  `tile_bytes` is the device
+    /// memory footprint of one operand tile (LoNum²·4).
+    pub fn build_residency_aware(
+        s: &Schedule,
+        devices: usize,
+        views: &[DeviceView],
+        tile_bytes: usize,
+    ) -> Assignment {
+        let tiles = s.tile_rows * s.tile_cols;
+        let mut owner = vec![0usize; tiles];
+        if devices <= 1 || tiles == 0 {
+            return Assignment { devices, owner };
+        }
+        let cold = DeviceView::default();
+        let view = |d: usize| views.get(d).unwrap_or(&cold);
+
+        // Output tiles in descending valid-product order (stable on the
+        // row-major index) — the LPT order both phases walk.
+        let mut order: Vec<usize> = (0..tiles).collect();
+        order.sort_by_key(|&t| {
+            let (i, j) = (t / s.tile_cols, t % s.tile_cols);
+            (std::cmp::Reverse(s.v(i, j)), t)
+        });
+
+        // Needed operand tiles of output tile t: A row-i tiles and
+        // B column-j tiles at the schedule's surviving k.
+        let needed = |t: usize| -> Vec<(Op, (usize, usize))> {
+            let (i, j) = (t / s.tile_cols, t % s.tile_cols);
+            let mut v = Vec::with_capacity(2 * s.v(i, j));
+            for &k in s.ks(i, j) {
+                v.push((Op::A, (i, k as usize)));
+                v.push((Op::B, (k as usize, j)));
+            }
+            v
+        };
+        let is_resident = |d: usize, op: Op, tile: (usize, usize)| match op {
+            Op::A => view(d).a_resident.contains(&tile),
+            Op::B => view(d).b_resident.contains(&tile),
+        };
+
+        // Per-device accumulated state: valid-product load and the
+        // distinct-operand-tile working set (resident or not — resident
+        // tiles occupy device memory too, so they count toward budget).
+        let mut load = vec![0usize; devices];
+        let mut ws: Vec<HashSet<(Op, (usize, usize))>> =
+            (0..devices).map(|_| HashSet::new()).collect();
+        let mut ws_bytes = vec![0usize; devices];
+        let mut assigned = vec![false; tiles];
+
+        let mut place = |t: usize,
+                         d: usize,
+                         load: &mut Vec<usize>,
+                         ws: &mut Vec<HashSet<(Op, (usize, usize))>>,
+                         ws_bytes: &mut Vec<usize>| {
+            let (i, j) = (t / s.tile_cols, t % s.tile_cols);
+            owner[t] = d;
+            load[d] += s.v(i, j);
+            for item in needed(t) {
+                if ws[d].insert(item) {
+                    ws_bytes[d] += tile_bytes;
+                }
+            }
+        };
+
+        // Phase 1: warm affinity.  Tiles with zero valid products have
+        // nothing to transfer and carry no load — leave them to phase 2.
+        if views.iter().any(|v| !v.a_resident.is_empty() || !v.b_resident.is_empty()) {
+            for &t in &order {
+                let (i, j) = (t / s.tile_cols, t % s.tile_cols);
+                if s.v(i, j) == 0 {
+                    continue;
+                }
+                let need = needed(t);
+                let home = (0..devices)
+                    .filter(|&d| need.iter().all(|&(op, tile)| is_resident(d, op, tile)))
+                    .min_by_key(|&d| (load[d], d));
+                if let Some(d) = home {
+                    assigned[t] = true;
+                    place(t, d, &mut load, &mut ws, &mut ws_bytes);
+                }
+            }
+        }
+
+        // Phase 2: greedy fill of everything else.
+        for &t in &order {
+            if assigned[t] {
+                continue;
+            }
+            let need = needed(t);
+            let new_bytes = |d: usize| -> usize {
+                need.iter()
+                    .filter(|&&(op, tile)| {
+                        !is_resident(d, op, tile) && !ws[d].contains(&(op, tile))
+                    })
+                    .count()
+                    * tile_bytes
+            };
+            let ws_growth = |d: usize| -> usize {
+                need.iter().filter(|item| !ws[d].contains(*item)).count() * tile_bytes
+            };
+            let pick = (0..devices)
+                .filter(|&d| {
+                    ws_bytes[d].saturating_add(ws_growth(d)) <= view(d).budget_bytes
+                })
+                .min_by_key(|&d| (load[d], new_bytes(d), d))
+                // No device can fit this tile's working set: ignore the
+                // budget for it (the pool's LRU absorbs the overflow).
+                .unwrap_or_else(|| {
+                    (0..devices)
+                        .min_by_key(|&d| (load[d], new_bytes(d), d))
+                        .expect("devices >= 1")
+                });
+            place(t, pick, &mut load, &mut ws, &mut ws_bytes);
+        }
+        Assignment { devices, owner }
+    }
+
+    /// Estimated transfer bytes of this assignment against the given
+    /// residency views: for each device, its distinct needed operand
+    /// tiles that are *not* resident there.  The partition-level cost the
+    /// residency-aware policy minimizes; reported for diagnostics.
+    pub fn transfer_bytes(
+        &self,
+        s: &Schedule,
+        views: &[DeviceView],
+        tile_bytes: usize,
+    ) -> u64 {
+        let cold = DeviceView::default();
+        let mut total = 0u64;
+        for d in 0..self.devices {
+            let view = views.get(d).unwrap_or(&cold);
+            let mut seen: HashSet<(Op, (usize, usize))> = HashSet::new();
+            for (i, j) in self.tiles_of(s, d) {
+                for &k in s.ks(i, j) {
+                    let a = (Op::A, (i, k as usize));
+                    if seen.insert(a) && !view.a_resident.contains(&(i, k as usize)) {
+                        total += tile_bytes as u64;
+                    }
+                    let b = (Op::B, (k as usize, j));
+                    if seen.insert(b) && !view.b_resident.contains(&(k as usize, j)) {
+                        total += tile_bytes as u64;
+                    }
+                }
+            }
+        }
+        total
     }
 
     /// Tiles owned by device d, as (i, j) pairs in row-major order.
@@ -153,5 +377,112 @@ mod tests {
         let s = decay_schedule(128, f32::MAX);
         let a = Assignment::build(&s, 4, Balance::RowBlock);
         assert_eq!(a.imbalance(&s), 1.0);
+    }
+
+    /// Working set of one device under an assignment: distinct (operand,
+    /// tile) pairs its output tiles need.
+    fn working_set_bytes(a: &Assignment, s: &Schedule, d: usize, tile_bytes: usize) -> usize {
+        let mut set = std::collections::HashSet::new();
+        for (i, j) in a.tiles_of(s, d) {
+            for &k in s.ks(i, j) {
+                set.insert((0u8, i, k as usize));
+                set.insert((1u8, k as usize, j));
+            }
+        }
+        set.len() * tile_bytes
+    }
+
+    #[test]
+    fn residency_aware_is_a_partition_and_balances_cold() {
+        let s = decay_schedule(512, 5e-1);
+        for devices in [1usize, 2, 3, 4, 8] {
+            let a = Assignment::build_residency_aware(&s, devices, &[], 4096);
+            assert_eq!(a.owner.len(), s.tile_rows * s.tile_cols);
+            assert!(a.owner.iter().all(|&d| d < devices));
+        }
+        // Cold pools: the greedy LPT fill must balance at least as well
+        // as contiguous row blocks on a diagonal-heavy decay schedule.
+        let rb = Assignment::build(&s, 4, Balance::RowBlock).imbalance(&s);
+        let ra = Assignment::build_residency_aware(&s, 4, &[], 4096).imbalance(&s);
+        assert!(ra <= rb + 1e-9, "residency-aware {ra:.3} vs rowblock {rb:.3}");
+    }
+
+    #[test]
+    fn residency_aware_keeps_fully_resident_tiles_home() {
+        let s = decay_schedule(256, 1e-3);
+        let devices = 4;
+        // Warm device 2 with everything an existing strided partition
+        // staged there; every tile of that partition must stay on 2.
+        let strided = Assignment::build(&s, devices, Balance::Strided(4));
+        let mut views: Vec<DeviceView> = (0..devices).map(|_| DeviceView::default()).collect();
+        for (i, j) in strided.tiles_of(&s, 2) {
+            for &k in s.ks(i, j) {
+                views[2].a_resident.insert((i, k as usize));
+                views[2].b_resident.insert((k as usize, j));
+            }
+        }
+        let a = Assignment::build_residency_aware(&s, devices, &views, 4096);
+        for (i, j) in strided.tiles_of(&s, 2) {
+            if s.v(i, j) == 0 {
+                continue;
+            }
+            assert_eq!(
+                a.owner[i * s.tile_cols + j],
+                2,
+                "tile ({i},{j}) moved off its fully-resident device"
+            );
+        }
+        // And a fully warm snapshot yields zero estimated transfer.
+        let mut full: Vec<DeviceView> = (0..devices).map(|_| DeviceView::default()).collect();
+        for d in 0..devices {
+            for (i, j) in strided.tiles_of(&s, d) {
+                for &k in s.ks(i, j) {
+                    full[d].a_resident.insert((i, k as usize));
+                    full[d].b_resident.insert((k as usize, j));
+                }
+            }
+        }
+        let warm = Assignment::build_residency_aware(&s, devices, &full, 4096);
+        assert_eq!(warm.transfer_bytes(&s, &full, 4096), 0);
+        assert!(
+            Assignment::build(&s, devices, Balance::RowBlock).transfer_bytes(&s, &full, 4096) > 0,
+            "row blocks must actually move tiles off the strided-warm devices"
+        );
+    }
+
+    #[test]
+    fn residency_aware_respects_working_set_budget() {
+        // Hand-traceable 2×2 output grid, tile_k = 2, every product valid:
+        // each output tile needs 2 A-tiles + 2 B-tiles; 8 distinct operand
+        // tiles total.  With a 6-tile budget per device the greedy fill
+        // must split row-wise (ws = 6 tiles each), never overflowing.
+        let ones = Matrix::from_vec(2, 2, vec![1.0; 4]).unwrap();
+        let s = Schedule::build(&ones, &ones, 0.5).unwrap();
+        assert_eq!(s.valid_products(), 8);
+        let tb = 4096usize;
+        let views: Vec<DeviceView> = (0..2)
+            .map(|_| DeviceView {
+                budget_bytes: 6 * tb,
+                ..DeviceView::default()
+            })
+            .collect();
+        let a = Assignment::build_residency_aware(&s, 2, &views, tb);
+        for d in 0..2 {
+            let ws = working_set_bytes(&a, &s, d, tb);
+            assert!(ws <= 6 * tb, "device {d}: working set {ws} > budget {}", 6 * tb);
+        }
+        // Load is perfectly balanced (4 valid products each).
+        assert_eq!(a.load(&s), vec![4, 4]);
+        // An impossible budget (below one tile's own needs) falls back to
+        // overflow instead of leaving tiles unassigned.
+        let tight: Vec<DeviceView> = (0..2)
+            .map(|_| DeviceView {
+                budget_bytes: tb,
+                ..DeviceView::default()
+            })
+            .collect();
+        let b = Assignment::build_residency_aware(&s, 2, &tight, tb);
+        assert_eq!(b.owner.len(), 4);
+        assert!(b.owner.iter().all(|&d| d < 2));
     }
 }

@@ -88,6 +88,14 @@ pub struct MultiplyStats {
     /// Bytes *not* uploaded thanks to residency hits and within-chunk
     /// operand-tile deduplication.
     pub transfer_saved_bytes: u64,
+    /// Bytes of *device-produced* tiles (expression intermediates) that
+    /// had to bounce through the host because the consuming device did
+    /// not have them resident — the multi-device expression graphs'
+    /// cross-device traffic.  A subset of `transfer_bytes`; always zero
+    /// on single-device runs (an eviction-forced re-stage there is not a
+    /// bounce), and on multi-device runs it includes eviction-forced
+    /// re-bounces alongside true producer/consumer mismatches.
+    pub cross_device_bytes: u64,
 }
 
 impl MultiplyStats {
@@ -109,6 +117,7 @@ impl MultiplyStats {
         self.norms_refreshed += other.norms_refreshed;
         self.transfer_bytes += other.transfer_bytes;
         self.transfer_saved_bytes += other.transfer_saved_bytes;
+        self.cross_device_bytes += other.cross_device_bytes;
     }
 }
 
@@ -578,6 +587,8 @@ struct TransferCounters {
     evictions: usize,
     uploaded_bytes: u64,
     saved_bytes: u64,
+    /// Misses on device-produced (resident-source) tiles: host bounces.
+    cross_bytes: u64,
 }
 
 impl TransferCounters {
@@ -588,6 +599,7 @@ impl TransferCounters {
         stats.residency_evictions += self.evictions;
         stats.transfer_bytes += self.uploaded_bytes;
         stats.transfer_saved_bytes += self.saved_bytes;
+        stats.cross_device_bytes += self.cross_bytes;
     }
 }
 
@@ -602,13 +614,16 @@ struct StagedOperand {
 /// Resolve a chunk's tile ids into deduplicated pool handles: a tile
 /// referenced k times stages once, tiles already resident cost a refcount
 /// bump, and only pool misses upload.  For a [`TileSource::Resident`]
-/// operand every acquire is a hit by construction (the holder's handles
-/// pin the tiles), so intermediates gather with zero transfer bytes.
+/// operand on a single device every acquire is a hit by construction
+/// (the holder's handles pin the tiles), so intermediates gather with
+/// zero transfer bytes; on multi-device runs (`cross` true) a miss on a
+/// resident-source tile is a cross-device host bounce.
 fn stage_operand(
     pool: &ResidencyPool,
     fp: Fingerprint,
     src: TileSource<'_>,
     ids: &[(usize, usize)],
+    cross: bool,
     ctr: &mut TransferCounters,
 ) -> Result<StagedOperand> {
     let l2 = src.lonum() * src.lonum();
@@ -640,6 +655,13 @@ fn stage_operand(
         } else {
             ctr.misses += 1;
             ctr.uploaded_bytes += tile_bytes;
+            if cross && matches!(src, TileSource::Resident(_)) {
+                // The tile was produced on *some* device but is not
+                // resident here: it bounces through the host mirror —
+                // the multi-device expression path's cross-device
+                // traffic.
+                ctr.cross_bytes += tile_bytes;
+            }
         }
         ctr.evictions += got.evicted;
         let slot = tiles.len() as u32;
@@ -775,6 +797,9 @@ pub fn execute_batches<S: ScatterSink>(
     let depth = cfg.pipeline_depth.max(1);
     let l2 = cfg.lonum * cfg.lonum;
     let tile_bytes = (l2 * std::mem::size_of::<f32>()) as u64;
+    // Cross-device accounting only makes sense with more than one
+    // device; a single-device eviction re-stage is not a host bounce.
+    let cross = cfg.devices > 1;
 
     // Stage one chunk: handle-based when the pool is active, raw copies
     // into `bufs` (reused across chunks) otherwise.
@@ -787,8 +812,8 @@ pub fn execute_batches<S: ScatterSink>(
         let a_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.a).collect();
         let b_ids: Vec<(usize, usize)> = chunk.iter().map(|p| p.b).collect();
         if let (Some(pool), Some(fpa), Some(fpb)) = (pool, pa.fp, pb.fp) {
-            let a = stage_operand(pool, fpa, pa.src, &a_ids, ctr)?;
-            let b = stage_operand(pool, fpb, pb.src, &b_ids, ctr)?;
+            let a = stage_operand(pool, fpa, pa.src, &a_ids, cross, ctr)?;
+            let b = stage_operand(pool, fpb, pb.src, &b_ids, cross, ctr)?;
             Ok(GatheredChunk::Resident { cap, a, b, c_ids })
         } else {
             let (mut a_buf, mut b_buf) = bufs;
@@ -989,6 +1014,7 @@ mod tests {
             tune_bdims: vec![],
             fused_sizes: vec![],
             precisions: vec!["f32"],
+            cnn: false,
         };
         write_bundle(&dir, &spec).unwrap();
         ArtifactBundle::load(&dir).unwrap()
@@ -1118,7 +1144,8 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let ids = [(0usize, 0usize), (0, 1), (0, 0), (0, 0), (1, 1)];
         let mut ctr = TransferCounters::default();
-        let staged = stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr).unwrap();
+        let staged =
+            stage_operand(&pool, fp, TileSource::Host(&p), &ids, false, &mut ctr).unwrap();
         assert_eq!(staged.tiles.len(), 3, "3 unique tiles");
         assert_eq!(staged.slots, vec![0, 1, 0, 0, 2]);
         let tile_bytes = (32 * 32 * 4) as u64;
@@ -1142,12 +1169,12 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let ids = [(0usize, 0usize), (0, 1)];
         let mut ctr = TransferCounters::default();
-        stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr).unwrap();
+        stage_operand(&pool, fp, TileSource::Host(&p), &ids, false, &mut ctr).unwrap();
         assert_eq!(ctr.misses, 2);
         assert_eq!(ctr.hits, 0);
         // A second chunk touching the same tiles transfers nothing.
         let mut ctr2 = TransferCounters::default();
-        stage_operand(&pool, fp, TileSource::Host(&p), &ids, &mut ctr2).unwrap();
+        stage_operand(&pool, fp, TileSource::Host(&p), &ids, false, &mut ctr2).unwrap();
         assert_eq!(ctr2.misses, 0);
         assert_eq!(ctr2.hits, 2);
         assert_eq!(ctr2.uploaded_bytes, 0);
@@ -1159,6 +1186,8 @@ mod tests {
         let pool = ResidencyPool::new(0);
         let mut ctr = TransferCounters::default();
         let fp = fingerprint(&p);
-        assert!(stage_operand(&pool, fp, TileSource::Host(&p), &[(1, 0)], &mut ctr).is_err());
+        assert!(
+            stage_operand(&pool, fp, TileSource::Host(&p), &[(1, 0)], false, &mut ctr).is_err()
+        );
     }
 }

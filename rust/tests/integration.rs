@@ -306,10 +306,10 @@ fn device_pool_staged_buffers_execute_in_place() {
 #[test]
 fn cnn_loads_and_matches_buildtime_accuracy() {
     let b = bundle();
-    // Environment gap, not a library bug: the CNN export (weights + frozen
-    // test set) only exists after the python/JAX training step of `make
-    // artifacts`; the hostsim bundle cannot synthesize it.  Skip when the
-    // bundle carries no CNN metadata.
+    // The hostsim bundle now synthesizes-and-freezes a deterministic CNN
+    // fixture (weights + frozen test set + recorded accuracy), so this
+    // path runs without the python/JAX toolchain.  A real AOT bundle
+    // that predates its CNN export still skips gracefully.
     let Some(meta) = b.cnn.clone() else {
         eprintln!("SKIPPED cnn_loads_and_matches_buildtime_accuracy: no CNN export in bundle");
         return;
@@ -328,7 +328,9 @@ fn cnn_loads_and_matches_buildtime_accuracy() {
 #[test]
 fn cnn_spamm_tau_zero_preserves_accuracy() {
     let b = bundle();
-    // Same environment gap as above — needs the trained CNN export.
+    // Runs against the frozen hostsim fixture (margin-filtered labels,
+    // so τ = 0's reordering-level numeric differences cannot flip an
+    // argmax); skips only for a real bundle without a CNN export.
     let Some(meta) = b.cnn.clone() else {
         eprintln!("SKIPPED cnn_spamm_tau_zero_preserves_accuracy: no CNN export in bundle");
         return;
@@ -340,4 +342,33 @@ fn cnn_spamm_tau_zero_preserves_accuracy() {
     modes.insert("conv2".to_string(), cuspamm::cnn::GemmMode::Spamm { tau: 0.0 });
     let with0 = cnn.accuracy(&modes, Some(&engine), 100, Some(100)).unwrap();
     assert_eq!(base, with0);
+}
+
+#[test]
+fn cnn_tau_sweep_degrades_monotonically_from_fixture_accuracy() {
+    // The Table 5 shape: as τ grows, a substituted conv layer prunes
+    // more products and end-task accuracy can only stay or drop from
+    // the frozen fixture's recorded value.
+    let b = bundle();
+    let Some(meta) = b.cnn.clone() else {
+        eprintln!("SKIPPED cnn_tau_sweep: no CNN export in bundle");
+        return;
+    };
+    let cnn = cuspamm::cnn::Cnn::load(&meta).unwrap();
+    let engine = SpammEngine::new(&b, SpammConfig::default()).unwrap();
+    let mut modes = std::collections::BTreeMap::new();
+    modes.insert("conv2".to_string(), cuspamm::cnn::GemmMode::Spamm { tau: 0.0 });
+    let exact = cnn.accuracy(&modes, Some(&engine), 100, None).unwrap();
+    assert_eq!(exact, meta.test_accuracy, "τ=0 must reproduce the fixture");
+    // A τ far beyond every tile-norm product prunes the whole layer; the
+    // network degrades (or, degenerately, ties) but never improves.
+    modes.insert(
+        "conv2".to_string(),
+        cuspamm::cnn::GemmMode::Spamm { tau: 1e6 },
+    );
+    let pruned = cnn.accuracy(&modes, Some(&engine), 100, None).unwrap();
+    assert!(
+        pruned <= exact,
+        "pruning conv2 entirely cannot beat the exact layer: {pruned} > {exact}"
+    );
 }

@@ -1,0 +1,339 @@
+//! Cross-device conformance harness: every public execution path must be
+//! **bitwise identical** across device counts {1, 2, 4} and balance
+//! policies {RowBlock, Strided, ResidencyAware} — partitioning assigns
+//! each output tile to exactly one device and per-tile accumulation
+//! order is fixed by the schedule, so the partition must never change a
+//! single bit.  Covered paths: `Coordinator::multiply`, prepared-plan
+//! session submits, and expression graphs (power + purification),
+//! including tiny-budget eviction pressure and `--no-residency`.
+
+mod common;
+
+use cuspamm::config::{Balance, SpammConfig};
+use cuspamm::coordinator::{Approx, Coordinator, SpammSession};
+use cuspamm::matrix::Matrix;
+use cuspamm::spamm::power::spamm_power;
+use cuspamm::spamm::purification::{initial_density, mcweeny_purify};
+
+use common::bundle;
+
+const DEVICES: [usize; 3] = [1, 2, 4];
+const POLICIES: [Balance; 3] = [
+    Balance::RowBlock,
+    Balance::Strided(2),
+    Balance::ResidencyAware,
+];
+
+fn cfg_with(devices: usize, balance: Balance) -> SpammConfig {
+    let mut cfg = SpammConfig::default();
+    cfg.devices = devices;
+    cfg.balance = balance;
+    cfg
+}
+
+#[test]
+fn multiply_is_bitwise_identical_across_devices_and_policies() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(192, 1.0, 0.5, 31);
+    let x = Matrix::decay_exponential(192, 1.0, 0.5, 32);
+    let tau = 1e-4f32;
+    let reference = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, tau)
+        .unwrap();
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let coord = Coordinator::new(&b, cfg_with(devices, policy)).unwrap();
+            let rep = coord.multiply(&a, &x, tau).unwrap();
+            assert_eq!(
+                rep.c.data(),
+                reference.c.data(),
+                "multiply diverged at devices={devices} policy={policy:?}"
+            );
+            // A second multiply on the now-warm pools must not change
+            // bits either (the residency-aware policy re-partitions
+            // against warm views here).
+            let warm = coord.multiply(&a, &x, tau).unwrap();
+            assert_eq!(
+                warm.c.data(),
+                reference.c.data(),
+                "warm multiply diverged at devices={devices} policy={policy:?}"
+            );
+            assert_eq!(rep.device_transfer_bytes.len(), devices);
+            assert_eq!(rep.device_cross_bytes.len(), devices);
+        }
+    }
+}
+
+#[test]
+fn session_prepared_plans_are_bitwise_identical_across_devices_and_policies() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 33);
+    let x = Matrix::decay_exponential(160, 1.0, 0.5, 34);
+    let tau = 1e-4f32;
+    let reference = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, tau)
+        .unwrap();
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let s = SpammSession::new(&b, cfg_with(devices, policy)).unwrap();
+            let ida = s.put(&a).unwrap();
+            let idx = s.put(&x).unwrap();
+            let plan = s.prepare(ida, idx, Approx::Tau(tau)).unwrap();
+            // Two submits: the second rides warm pools and caches.
+            let t1 = s.submit(plan).unwrap();
+            let t2 = s.submit(plan).unwrap();
+            let cold = s.wait(t1).unwrap();
+            let warm = s.wait(t2).unwrap();
+            for (tag, c) in [("cold", &cold), ("warm", &warm)] {
+                assert_eq!(
+                    c.c.data(),
+                    reference.c.data(),
+                    "session {tag} submit diverged at devices={devices} policy={policy:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn expr_power_and_purify_are_bitwise_identical_across_devices_and_policies() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 35);
+    let p0 = initial_density(128, 36);
+    let tau = 1e-5f32;
+    let ref_power = spamm_power(
+        &Coordinator::new(&b, cfg_with(1, Balance::RowBlock)).unwrap(),
+        &a,
+        4,
+        tau,
+    )
+    .unwrap()
+    .value
+    .into_owned();
+    let ref_purify = mcweeny_purify(
+        &Coordinator::new(&b, cfg_with(1, Balance::RowBlock)).unwrap(),
+        &p0,
+        tau,
+        3,
+        0.0,
+    )
+    .unwrap()
+    .p;
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let coord = Coordinator::new(&b, cfg_with(devices, policy)).unwrap();
+            let power = spamm_power(&coord, &a, 4, tau).unwrap();
+            assert_eq!(
+                power.value.data(),
+                ref_power.data(),
+                "expr power diverged at devices={devices} policy={policy:?}"
+            );
+            let purify = mcweeny_purify(&coord, &p0, tau, 3, 0.0).unwrap();
+            assert_eq!(
+                purify.p.data(),
+                ref_purify.data(),
+                "expr purify diverged at devices={devices} policy={policy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn expr_fans_out_to_every_device() {
+    // τ = 0 (full schedules): with more tiles than devices, every device
+    // must report nonzero tile products for an expression chain.
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 37); // 5x5 tiles
+    for devices in [2usize, 4] {
+        for policy in POLICIES {
+            let coord = Coordinator::new(&b, cfg_with(devices, policy)).unwrap();
+            use cuspamm::coordinator::{ExprGraph, ExprSource};
+            let mut g = ExprGraph::new();
+            let leaf = g.operand();
+            let p2 = g.spamm(leaf, leaf, Approx::Tau(0.0));
+            let p3 = g.spamm(p2, leaf, Approx::Tau(0.0));
+            g.output(p3);
+            let plan = coord.prepare_expr(&g, &[ExprSource::Host(&a)]).unwrap();
+            let rep = coord.execute_expr(&plan).unwrap();
+            assert_eq!(rep.device_products.len(), devices);
+            assert!(
+                rep.device_products.iter().all(|&p| p > 0),
+                "idle device at devices={devices} policy={policy:?}: {:?}",
+                rep.device_products
+            );
+        }
+    }
+}
+
+#[test]
+fn tiny_budget_eviction_pressure_keeps_results_identical() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 38);
+    let x = Matrix::decay_exponential(160, 1.0, 0.5, 39);
+    let tau = 1e-4f32;
+    let reference = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, tau)
+        .unwrap();
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let mut cfg = cfg_with(devices, policy);
+            // Room for two tiles per device: constant eviction churn.
+            cfg.device_mem_budget = 2 * 32 * 32 * 4;
+            let coord = Coordinator::new(&b, cfg).unwrap();
+            let rep = coord.multiply(&a, &x, tau).unwrap();
+            assert_eq!(
+                rep.c.data(),
+                reference.c.data(),
+                "tiny-budget multiply diverged at devices={devices} policy={policy:?}"
+            );
+            assert!(
+                rep.stage.residency_evictions > 0,
+                "a two-tile budget must actually evict (devices={devices})"
+            );
+            // Expression chain under the same pressure.
+            let power = spamm_power(&coord, &a, 3, tau).unwrap();
+            let ref_power = spamm_power(
+                &Coordinator::new(&b, cfg_with(1, Balance::RowBlock)).unwrap(),
+                &a,
+                3,
+                tau,
+            )
+            .unwrap();
+            assert_eq!(
+                power.value.data(),
+                ref_power.value.data(),
+                "tiny-budget expr power diverged at devices={devices} policy={policy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn no_residency_keeps_results_identical() {
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 40);
+    let x = Matrix::decay_exponential(160, 1.0, 0.5, 41);
+    let tau = 1e-4f32;
+    let reference = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, tau)
+        .unwrap();
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let mut cfg = cfg_with(devices, policy);
+            cfg.residency_enabled = false; // residency-aware falls back
+            let coord = Coordinator::new(&b, cfg).unwrap();
+            let rep = coord.multiply(&a, &x, tau).unwrap();
+            assert_eq!(
+                rep.c.data(),
+                reference.c.data(),
+                "--no-residency multiply diverged at devices={devices} policy={policy:?}"
+            );
+            assert_eq!(rep.stage.residency_hits, 0);
+            let power = spamm_power(&coord, &a, 3, tau).unwrap();
+            let ref_power = spamm_power(
+                &Coordinator::new(&b, cfg_with(1, Balance::RowBlock)).unwrap(),
+                &a,
+                3,
+                tau,
+            )
+            .unwrap();
+            assert_eq!(
+                power.value.data(),
+                ref_power.value.data(),
+                "--no-residency expr power diverged at devices={devices} policy={policy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn more_devices_than_tiles_execute_everywhere() {
+    // Regression: a 64×64 matrix is a 2×2 tile grid; 8 devices leave six
+    // workers with zero batches, which the executor must tolerate on
+    // every path.
+    let b = bundle();
+    let a = Matrix::decay_exponential(64, 1.0, 0.5, 42);
+    let x = Matrix::decay_exponential(64, 1.0, 0.5, 43);
+    let reference = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, 0.0)
+        .unwrap();
+    for policy in POLICIES {
+        let coord = Coordinator::new(&b, cfg_with(8, policy)).unwrap();
+        let rep = coord.multiply(&a, &x, 0.0).unwrap();
+        assert_eq!(
+            rep.c.data(),
+            reference.c.data(),
+            "devices>tiles multiply diverged at policy={policy:?}"
+        );
+        // The expression path tolerates idle devices too.
+        let power = spamm_power(&coord, &a, 3, 0.0).unwrap();
+        let ref_power = spamm_power(
+            &Coordinator::new(&b, cfg_with(1, Balance::RowBlock)).unwrap(),
+            &a,
+            3,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(power.value.data(), ref_power.value.data());
+    }
+}
+
+#[test]
+fn session_plans_pin_only_the_devices_that_use_them() {
+    // Regression: plan pinning used to hit every pool (and expr pinning
+    // only device 0) regardless of where the partition put the work.
+    let b = bundle();
+    // 2×2 tile grid, 8 devices, RowBlock: only devices 0 and 4 own rows.
+    let mut cfg = cfg_with(8, Balance::RowBlock);
+    cfg.queue_depth = 8;
+    let s = SpammSession::new(&b, cfg).unwrap();
+    let a = s.put(&Matrix::decay_exponential(64, 1.0, 0.5, 44)).unwrap();
+    let x = s.put(&Matrix::decay_exponential(64, 1.0, 0.5, 45)).unwrap();
+    let plan = s.prepare(a, x, Approx::Tau(0.0)).unwrap();
+    let pools = s.residency_pools();
+    assert_eq!(pools.len(), 8);
+    for (d, p) in pools.iter().enumerate() {
+        let want = usize::from(d == 0 || d == 4) * 2;
+        assert_eq!(
+            p.pinned_operands(),
+            want,
+            "device {d}: multiply plan must pin exactly the owning devices"
+        );
+    }
+    s.release_plan(plan).unwrap();
+    for (d, p) in pools.iter().enumerate() {
+        assert_eq!(p.pinned_operands(), 0, "device {d}: release must unpin");
+    }
+
+    // Expression plans pin every device their placement maps use — not
+    // just device 0.
+    let two = SpammSession::new(&b, cfg_with(2, Balance::RowBlock)).unwrap();
+    let m = two
+        .put(&Matrix::decay_exponential(128, 1.0, 0.5, 46))
+        .unwrap();
+    use cuspamm::coordinator::ExprGraph;
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let sq = g.spamm(leaf, leaf, Approx::Tau(0.0));
+    g.output(sq);
+    let eplan = two.prepare_expr(&g, &[m]).unwrap();
+    for (d, p) in two.residency_pools().iter().enumerate() {
+        assert_eq!(
+            p.pinned_operands(),
+            1,
+            "device {d}: expr plan must pin the leaf in every used pool"
+        );
+    }
+    // The plan still executes correctly with the narrowed pinning.
+    let done = two.wait(two.submit_expr(eplan).unwrap()).unwrap();
+    assert_eq!(done.c.rows(), 128);
+    two.release_expr_plan(eplan).unwrap();
+    for p in two.residency_pools() {
+        assert_eq!(p.pinned_operands(), 0);
+    }
+}

@@ -2,11 +2,13 @@
 //! mini property-testing framework.  These pin the invariants DESIGN.md §7
 //! lists.
 
+use std::collections::HashSet;
+
 use cuspamm::config::Balance;
 use cuspamm::matrix::tiling::PaddedMatrix;
 use cuspamm::matrix::Matrix;
 use cuspamm::proptest::{forall_ok, gen, PropConfig};
-use cuspamm::spamm::balance::Assignment;
+use cuspamm::spamm::balance::{Assignment, DeviceView};
 use cuspamm::spamm::normmap::normmap;
 use cuspamm::spamm::reference::{spamm_flat_host, spamm_recursive};
 use cuspamm::spamm::schedule::Schedule;
@@ -150,6 +152,175 @@ fn prop_schedule_counts_consistent() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Distinct operand tiles device `d` needs under assignment `a`.
+fn working_set(a: &Assignment, s: &Schedule, d: usize) -> HashSet<(u8, usize, usize)> {
+    let mut set = HashSet::new();
+    for (i, j) in a.tiles_of(s, d) {
+        for &k in s.ks(i, j) {
+            set.insert((0u8, i, k as usize));
+            set.insert((1u8, k as usize, j));
+        }
+    }
+    set
+}
+
+#[test]
+fn prop_residency_aware_owns_every_tile_exactly_once() {
+    forall_ok(
+        cfg(25),
+        |rng: &mut Rng| {
+            let tr = gen::usize_in(rng, 1, 14);
+            let tk = gen::usize_in(rng, 1, 10);
+            let tc = gen::usize_in(rng, 1, 14);
+            let devices = gen::usize_in(rng, 1, 9);
+            (tr, tk, tc, devices, rng.next_u64(), gen::f32_in(rng, 0.0, 1.5))
+        },
+        |&(tr, tk, tc, devices, seed, tau)| {
+            let mut na = Matrix::randn(tr, tk, seed);
+            let mut nb = Matrix::randn(tk, tc, seed ^ 17);
+            for v in na.data_mut().iter_mut().chain(nb.data_mut()) {
+                *v = v.abs();
+            }
+            let s = Schedule::build(&na, &nb, tau).unwrap();
+            let a = Assignment::build_residency_aware(&s, devices, &[], 4096);
+            if a.owner.len() != tr * tc {
+                return Err("owner map size".into());
+            }
+            if a.owner.iter().any(|&d| d >= devices) {
+                return Err("owner out of range".into());
+            }
+            let mut seen = vec![false; tr * tc];
+            for d in 0..devices {
+                for (i, j) in a.tiles_of(&s, d) {
+                    let idx = i * tc + j;
+                    if seen[idx] {
+                        return Err(format!("tile ({i},{j}) owned twice"));
+                    }
+                    seen[idx] = true;
+                }
+            }
+            if seen.iter().any(|&x| !x) {
+                return Err("unowned tile".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_residency_aware_fits_budget_when_every_tile_fits() {
+    // When every single output tile's own working set fits the budget
+    // and the budget admits the worst-case per-device accumulation
+    // (here: total distinct tiles), the greedy fill must keep every
+    // device's working set under budget — an always-feasible regime.
+    forall_ok(
+        cfg(15),
+        |rng: &mut Rng| {
+            let t = gen::usize_in(rng, 2, 8);
+            let devices = gen::usize_in(rng, 2, 4);
+            (t, devices, rng.next_u64())
+        },
+        |&(t, devices, seed)| {
+            let mut na = Matrix::randn(t, t, seed);
+            let mut nb = Matrix::randn(t, t, seed ^ 23);
+            for v in na.data_mut().iter_mut().chain(nb.data_mut()) {
+                *v = v.abs();
+            }
+            let s = Schedule::build(&na, &nb, 0.0).unwrap();
+            let tile_bytes = 4096usize;
+            // Budget = the whole distinct working set: always feasible.
+            let everything = {
+                let one = Assignment::build_residency_aware(&s, 1, &[], tile_bytes);
+                working_set(&one, &s, 0).len() * tile_bytes
+            };
+            let views: Vec<DeviceView> = (0..devices)
+                .map(|_| DeviceView {
+                    budget_bytes: everything,
+                    ..DeviceView::default()
+                })
+                .collect();
+            let a = Assignment::build_residency_aware(&s, devices, &views, tile_bytes);
+            for d in 0..devices {
+                let ws = working_set(&a, &s, d).len() * tile_bytes;
+                if ws > everything {
+                    return Err(format!("device {d}: ws {ws} > budget {everything}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_residency_aware_never_moves_fully_resident_tiles() {
+    forall_ok(
+        cfg(12),
+        |rng: &mut Rng| {
+            let t = gen::usize_in(rng, 2, 10);
+            let devices = gen::usize_in(rng, 2, 4);
+            let home = gen::usize_in(rng, 0, devices - 1);
+            (t, devices, home, rng.next_u64(), gen::f32_in(rng, 0.0, 1.0))
+        },
+        |&(t, devices, home, seed, tau)| {
+            let mut na = Matrix::randn(t, t, seed);
+            let mut nb = Matrix::randn(t, t, seed ^ 29);
+            for v in na.data_mut().iter_mut().chain(nb.data_mut()) {
+                *v = v.abs();
+            }
+            let s = Schedule::build(&na, &nb, tau).unwrap();
+            // Warm `home` with everything a strided partition put there.
+            let strided = Assignment::build(&s, devices, Balance::Strided(2));
+            let mut views: Vec<DeviceView> =
+                (0..devices).map(|_| DeviceView::default()).collect();
+            for (i, j) in strided.tiles_of(&s, home) {
+                for &k in s.ks(i, j) {
+                    views[home].a_resident.insert((i, k as usize));
+                    views[home].b_resident.insert((k as usize, j));
+                }
+            }
+            let a = Assignment::build_residency_aware(&s, devices, &views, 4096);
+            for (i, j) in strided.tiles_of(&s, home) {
+                if s.v(i, j) == 0 {
+                    continue; // no work, nothing to keep warm
+                }
+                if a.owner[i * t + j] != home {
+                    return Err(format!(
+                        "tile ({i},{j}) moved off device {home} despite full residency"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_residency_aware_imbalance_beats_rowblock_on_decay() {
+    forall_ok(
+        cfg(8),
+        |rng: &mut Rng| {
+            (
+                gen::pow2_in(rng, 256, 512),
+                gen::usize_in(rng, 2, 6),
+                rng.next_u64(),
+            )
+        },
+        |&(n, devices, seed)| {
+            let m = Matrix::decay_exponential(n, 1.0, 0.55, seed);
+            let nm = normmap(&PaddedMatrix::new(&m, 32));
+            let s = Schedule::build(&nm, &nm, 5e-1).unwrap();
+            let rb = Assignment::build(&s, devices, Balance::RowBlock).imbalance(&s);
+            let ra = Assignment::build_residency_aware(&s, devices, &[], 4096).imbalance(&s);
+            if ra > rb + 1e-9 {
+                return Err(format!(
+                    "n={n} devices={devices}: residency-aware {ra:.4} > rowblock {rb:.4}"
+                ));
             }
             Ok(())
         },
