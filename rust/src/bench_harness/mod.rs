@@ -1,9 +1,15 @@
 //! Benchmark harness substrate (criterion is not in the offline crate
-//! set): warmup + repeated timing, summary statistics, and the markdown /
-//! CSV table renderers the paper-table benches use.
+//! set): warmup + repeated timing, summary statistics, the markdown /
+//! CSV table renderers the paper-table benches use, and the
+//! machine-readable `BENCH_<suite>.json` records CI diffs against
+//! committed baselines.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::error::{Error, Result};
+use crate::json::Value;
 use crate::runtime::ArtifactBundle;
 use crate::util::stats::Summary;
 
@@ -153,6 +159,100 @@ impl Table {
     }
 }
 
+/// One machine-readable benchmark record, written as
+/// `BENCH_<name>.json`.  Two sections with different contracts:
+///
+/// * `deterministic` — counts and exact figures (product totals, format
+///   mixes, cache hit counts) that must reproduce bit-for-bit on any
+///   machine.  CI regenerates the record and diffs this section against
+///   the committed baseline; a drift is a behavior change someone must
+///   either fix or re-baseline deliberately.
+/// * `info` — timings and machine-dependent figures, recorded for eyes
+///   only and never compared.
+///
+/// The baseline diff is subset-based: every key present in the baseline's
+/// `deterministic` object must match the regenerated value, so a baseline
+/// may pin fewer fields than the generator emits (and grow over time).
+pub struct BenchRecord {
+    pub name: String,
+    deterministic: BTreeMap<String, f64>,
+    info: BTreeMap<String, f64>,
+}
+
+impl BenchRecord {
+    pub fn new(name: &str) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            deterministic: BTreeMap::new(),
+            info: BTreeMap::new(),
+        }
+    }
+
+    /// Add a deterministic (CI-diffed) field.
+    pub fn det(&mut self, key: &str, value: f64) -> &mut Self {
+        self.deterministic.insert(key.to_string(), value);
+        self
+    }
+
+    /// Add an informational (never-diffed) field.
+    pub fn info(&mut self, key: &str, value: f64) -> &mut Self {
+        self.info.insert(key.to_string(), value);
+        self
+    }
+
+    pub fn to_value(&self) -> Value {
+        let section = |m: &BTreeMap<String, f64>| {
+            Value::Object(
+                m.iter()
+                    .map(|(k, v)| (k.clone(), Value::Number(*v)))
+                    .collect(),
+            )
+        };
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Value::String(self.name.clone()));
+        top.insert("deterministic".to_string(), section(&self.deterministic));
+        top.insert("info".to_string(), section(&self.info));
+        Value::Object(top)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`, returning the path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Config(format!("bench out dir {}: {e}", dir.display())))?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_value().to_json())
+            .map_err(|e| Error::Config(format!("write {}: {e}", path.display())))?;
+        Ok(path)
+    }
+
+    /// Diff this record's deterministic section against a committed
+    /// baseline file.  Returns the list of mismatches (empty = pass);
+    /// keys only in the regenerated record are fine, keys only in the
+    /// baseline are failures (the pinned behavior disappeared).
+    pub fn check_against(&self, baseline: &Path) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(baseline)
+            .map_err(|e| Error::Config(format!("baseline {}: {e}", baseline.display())))?;
+        let doc = Value::parse(&text)?;
+        let pinned = doc.get("deterministic")?.as_object()?;
+        let mut mismatches = Vec::new();
+        for (key, want) in pinned {
+            let want = want.as_f64()?;
+            match self.deterministic.get(key) {
+                Some(&got) if got == want => {}
+                Some(&got) => mismatches.push(format!(
+                    "{}: {key} = {got} (baseline pins {want})",
+                    self.name
+                )),
+                None => mismatches.push(format!(
+                    "{}: {key} missing (baseline pins {want})",
+                    self.name
+                )),
+            }
+        }
+        Ok(mismatches)
+    }
+}
+
 /// Format seconds for tables (μs/ms/s autoscale).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -207,6 +307,34 @@ mod tests {
         let mut t = Table::new("t", &["a"]);
         t.row(vec!["x,y".into()]);
         assert_eq!(t.to_csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    fn bench_record_round_trips_and_diffs() {
+        let dir = std::env::temp_dir().join(format!("cuspamm_benchjson_{}", std::process::id()));
+        let mut r = BenchRecord::new("unit");
+        r.det("products", 64.0).det("dense", 0.0);
+        r.info("wall_secs", 0.123);
+        let path = r.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        // Same record vs its own emission: clean.
+        assert!(r.check_against(&path).unwrap().is_empty());
+        // Baseline pinning a different value: flagged.
+        std::fs::write(
+            &path,
+            r#"{"bench":"unit","deterministic":{"products":65,"gone":1},"info":{}}"#,
+        )
+        .unwrap();
+        let bad = r.check_against(&path).unwrap();
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        // Subset semantics: a baseline pinning fewer keys still passes.
+        std::fs::write(
+            &path,
+            r#"{"bench":"unit","deterministic":{"dense":0},"info":{}}"#,
+        )
+        .unwrap();
+        assert!(r.check_against(&path).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

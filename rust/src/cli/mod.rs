@@ -182,6 +182,12 @@ impl Args {
         crate::config::parse_byte_size(&format!("--{key}"), self.get(key))
     }
 
+    /// Unit-interval option (density thresholds, valid ratios): parses
+    /// as f32 and rejects NaN / infinities / anything outside [0, 1].
+    pub fn unit_interval(&self, key: &str) -> Result<f32> {
+        crate::config::parse_unit_interval(&format!("--{key}"), self.get(key))
+    }
+
     pub fn f64(&self, key: &str) -> Result<f64> {
         self.get(key)
             .parse()
@@ -262,6 +268,21 @@ mod tests {
         assert_eq!(a.bytes("budget").unwrap(), 4 << 10);
         let a = s.parse(&args(&["--budget", "nope"])).unwrap();
         assert!(a.bytes("budget").is_err());
+    }
+
+    #[test]
+    fn unit_interval_validates() {
+        let s = Spec::new("t", "").opt("density-threshold", "0.0", "format knob");
+        let a = s.parse(&args(&[])).unwrap();
+        assert_eq!(a.unit_interval("density-threshold").unwrap(), 0.0);
+        for ok in ["0.25", "1", "1.0"] {
+            let a = s.parse(&args(&["--density-threshold", ok])).unwrap();
+            assert!(a.unit_interval("density-threshold").is_ok(), "{ok}");
+        }
+        for bad in ["-0.1", "1.5", "NaN", "inf", "-inf", "lots"] {
+            let a = s.parse(&args(&["--density-threshold", bad])).unwrap();
+            assert!(a.unit_interval("density-threshold").is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -99,6 +99,14 @@ pub struct SpammConfig {
     pub balance: Balance,
     /// Compute normmaps on-device (get-norm artifact) or on the host.
     pub device_normmap: bool,
+    /// Per-tile density threshold in [0, 1] for the adaptive format
+    /// selector: a surviving product whose A *and* B tile densities
+    /// (fraction of entries above the census floor) are strictly below
+    /// this runs through the sparse COO path; runs of sparse products
+    /// fuse into packed dispatches.  `0.0` (the default) disables the
+    /// selector — every product takes the dense tile-GEMM path, bitwise
+    /// identical to the pre-adaptive executor.
+    pub density_threshold: f32,
     /// Run device pipelines one after another instead of concurrently.
     /// On a testbed whose simulated devices share physical cores the
     /// concurrent mode inflates each device's busy clock with contention;
@@ -123,6 +131,7 @@ impl Default for SpammConfig {
             queue_depth: 64,
             store_budget: 1024 * 1024 * 1024,
             balance: Balance::Strided(4),
+            density_threshold: 0.0,
             device_normmap: false,
             sequential_devices: false,
         }
@@ -144,6 +153,7 @@ impl SpammConfig {
             "device_mem_budget" => self.device_mem_budget = parse_bytes(key, value)?,
             "queue_depth" => self.queue_depth = parse_num(key, value)?,
             "store_budget" => self.store_budget = parse_bytes(key, value)?,
+            "density_threshold" => self.density_threshold = parse_unit_interval(key, value)?,
             "device_normmap" => {
                 self.device_normmap = parse_bool(key, value)?;
             }
@@ -212,8 +222,31 @@ impl SpammConfig {
         if self.queue_depth == 0 {
             return Err(Error::Config("queue_depth must be ≥ 1".into()));
         }
+        if !(0.0..=1.0).contains(&self.density_threshold) {
+            // NaN fails the range test too: NaN comparisons are false.
+            return Err(Error::Config(format!(
+                "density_threshold must be in [0, 1], got {}",
+                self.density_threshold
+            )));
+        }
         Ok(())
     }
+}
+
+/// Parse an f32 in the closed unit interval [0, 1]; rejects NaN,
+/// infinities, and out-of-range values.  Public for CLI flags that share
+/// the constraint (`--density-threshold`).
+pub fn parse_unit_interval(key: &str, value: &str) -> Result<f32> {
+    let x: f32 = value
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("{key}: expected number in [0, 1], got '{value}'")))?;
+    if !(0.0..=1.0).contains(&x) {
+        return Err(Error::Config(format!(
+            "{key}: expected number in [0, 1], got '{value}'"
+        )));
+    }
+    Ok(x)
 }
 
 /// Parse a byte count with an optional `k`/`m`/`g` suffix — the public
@@ -376,6 +409,25 @@ mod tests {
         // store_budget 0 = unlimited is fine.
         c.queue_depth = 1;
         c.store_budget = 0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn density_threshold_key_and_bounds() {
+        let mut c = SpammConfig::default();
+        assert_eq!(c.density_threshold, 0.0);
+        c.apply("density_threshold", "0.25").unwrap();
+        assert_eq!(c.density_threshold, 0.25);
+        c.validate().unwrap();
+        for bad in ["-0.1", "1.5", "NaN", "inf", "lots"] {
+            assert!(c.apply("density_threshold", bad).is_err(), "accepted '{bad}'");
+        }
+        // Out-of-range values set directly still fail validation.
+        c.density_threshold = f32::NAN;
+        assert!(c.validate().is_err());
+        c.density_threshold = 2.0;
+        assert!(c.validate().is_err());
+        c.density_threshold = 1.0;
         c.validate().unwrap();
     }
 

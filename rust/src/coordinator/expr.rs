@@ -66,7 +66,7 @@ use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
     execute_batches, MultiplyStats, Operand, TileAccumulator, TileSource,
 };
-use crate::spamm::normmap::normmap;
+use crate::spamm::normmap::{normmap_with_density, NormMap};
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams};
 
@@ -261,7 +261,7 @@ impl ExprGraph {
         // Bind inputs: padded form, content fingerprint, exact normmap.
         let t = Instant::now();
         let mut bound_inputs: Vec<PlannedInput> = Vec::with_capacity(inputs.len());
-        let mut input_norms: Vec<Arc<Matrix>> = Vec::with_capacity(inputs.len());
+        let mut input_norms: Vec<Arc<NormMap>> = Vec::with_capacity(inputs.len());
         for src in inputs {
             match src {
                 ExprSource::Host(m) => {
@@ -270,7 +270,7 @@ impl ExprGraph {
                     }
                     let padded = PaddedMatrix::new(m, lonum);
                     let (nm, fp) = caches.normmap_via(cfg.cache_enabled, &padded, &mut front, || {
-                        Ok(normmap(&padded))
+                        Ok(normmap_with_density(&padded))
                     })?;
                     let fp = fp.unwrap_or_else(|| fingerprint(&padded));
                     input_norms.push(nm);
@@ -281,9 +281,9 @@ impl ExprGraph {
                 }
                 ExprSource::Padded(padded, fp) => {
                     let nm = if cfg.cache_enabled {
-                        caches.normmap_keyed(*fp, &mut front, || Ok(normmap(padded)))?
+                        caches.normmap_keyed(*fp, &mut front, || Ok(normmap_with_density(padded)))?
                     } else {
-                        Arc::new(normmap(padded))
+                        Arc::new(normmap_with_density(padded))
                     };
                     input_norms.push(nm);
                     bound_inputs.push(PlannedInput::Host {
@@ -296,7 +296,11 @@ impl ExprGraph {
                     // exact normmap was computed at scatter time — no
                     // host norm work at all.
                     front.norms_refreshed += 1;
-                    input_norms.push(v.inner.normmap().clone());
+                    // Scatter-time norms carry no density census: treat
+                    // resident tiles as dense (never selects sparse).
+                    input_norms.push(Arc::new(NormMap::dense_like(
+                        (**v.inner.normmap()).clone(),
+                    )));
                     bound_inputs.push(PlannedInput::Resident(v.clone()));
                 }
             }
@@ -388,7 +392,7 @@ impl ExprGraph {
                         // bounds — exact for leaf-fed nodes, conservative
                         // (τ errs low, keeping more work) downstream.
                         Approx::ValidRatio(r) => {
-                            tuner::tune_tau(&na, &nb, r, TuneParams::default())?.tau
+                            tuner::tune_tau(&na.norms, &nb.norms, r, TuneParams::default())?.tau
                         }
                     };
                     let fp = Fingerprint::derive("spamm", &[pa.fp, pb.fp], &[tau]);
@@ -408,14 +412,25 @@ impl ExprGraph {
                             Some(pa.fp),
                             Some(pb.fp),
                             tau,
+                            cfg.density_threshold,
                             &na,
                             &nb,
                             &mut front,
                         )?
                     } else {
-                        Arc::new(Schedule::build(&na, &nb, tau)?)
+                        Arc::new(Schedule::build_adaptive(
+                            &na,
+                            &nb,
+                            tau,
+                            cfg.density_threshold,
+                        )?)
                     };
-                    let bound = Arc::new(sched.bound_normmap(&na, &nb));
+                    // Propagated bounds carry no density census — dense
+                    // downstream, so provisional nodes never pick sparse
+                    // off an inexact bound.
+                    let bound = Arc::new(NormMap::dense_like(
+                        sched.bound_normmap(&na.norms, &nb.norms),
+                    ));
                     // Place this node's output tiles across the devices.
                     // The residency-aware policy scores candidate owners
                     // by the input tiles already resident in each pool
@@ -491,8 +506,8 @@ impl ExprGraph {
                     let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
                     for i in 0..px.tile_rows {
                         for j in 0..px.tile_cols {
-                            bound[(i, j)] =
-                                alpha.abs() * nx[(i, j)] + beta.abs() * ny[(i, j)];
+                            bound[(i, j)] = alpha.abs() * nx.norms[(i, j)]
+                                + beta.abs() * ny.norms[(i, j)];
                         }
                     }
                     PlannedNode {
@@ -503,7 +518,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
-                        bound: Some(Arc::new(bound)),
+                        bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         // Element-wise: inherit X's placement so each
                         // output tile combines device-local inputs.
@@ -517,7 +532,7 @@ impl ExprGraph {
                     let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
                     for i in 0..px.tile_rows {
                         for j in 0..px.tile_cols {
-                            bound[(i, j)] = s.abs() * nx[(i, j)];
+                            bound[(i, j)] = s.abs() * nx.norms[(i, j)];
                         }
                     }
                     PlannedNode {
@@ -528,7 +543,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
-                        bound: Some(Arc::new(bound)),
+                        bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         owner: inherit_owner(px, cfg.devices),
                         uses: uses[idx],
@@ -547,7 +562,7 @@ impl ExprGraph {
                     let mut bound = Matrix::zeros(px.tile_rows, px.tile_cols);
                     for i in 0..px.tile_rows {
                         for j in 0..px.tile_cols {
-                            let mut v = nx[(i, j)];
+                            let mut v = nx.norms[(i, j)];
                             if i == j {
                                 // ‖σ·I restricted to this tile‖_F.
                                 let d = px.rows.min((i + 1) * l).saturating_sub(i * l);
@@ -564,7 +579,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
-                        bound: Some(Arc::new(bound)),
+                        bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         owner: inherit_owner(px, cfg.devices),
                         uses: uses[idx],
@@ -685,8 +700,9 @@ struct PlannedNode {
     /// Resolved τ (spamm nodes; 0.0 elsewhere).
     tau: f32,
     /// Propagated tile-norm upper bound (exact for leaves; None for
-    /// scalar nodes).
-    bound: Option<Arc<Matrix>>,
+    /// scalar nodes).  Leaves carry the real density census; computed
+    /// bounds are density-dense so downstream nodes stay conservative.
+    bound: Option<Arc<NormMap>>,
     /// Pinned schedule when the bound is already exact (leaf-fed or
     /// τ = 0) — cache eviction cannot un-prepare those nodes.
     sched: Option<Arc<Schedule>>,
@@ -1064,12 +1080,18 @@ impl Coordinator {
                                     Some(fa),
                                     Some(fb),
                                     tau,
+                                    cfg.density_threshold,
                                     &na,
                                     &nb,
                                     &mut nstats,
                                 )?
                             } else {
-                                Arc::new(Schedule::build(&na, &nb, tau)?)
+                                Arc::new(Schedule::build_adaptive(
+                                    &na,
+                                    &nb,
+                                    tau,
+                                    cfg.density_threshold,
+                                )?)
                             };
                             nstats.schedule_secs = t_s.elapsed().as_secs_f64();
                             sched
@@ -1440,12 +1462,18 @@ impl Coordinator {
                                     Some(fa),
                                     Some(fb),
                                     tau,
+                                    cfg.density_threshold,
                                     &na,
                                     &nb,
                                     &mut nstats,
                                 )?
                             } else {
-                                Arc::new(Schedule::build(&na, &nb, tau)?)
+                                Arc::new(Schedule::build_adaptive(
+                                    &na,
+                                    &nb,
+                                    tau,
+                                    cfg.density_threshold,
+                                )?)
                             };
                             nstats.schedule_secs = t_s.elapsed().as_secs_f64();
                             sched
@@ -1810,12 +1838,12 @@ impl Coordinator {
         val: &RunVal,
         node: &PlannedNode,
         stats: &mut MultiplyStats,
-    ) -> Result<Arc<Matrix>> {
+    ) -> Result<Arc<NormMap>> {
         match val {
             RunVal::Host { padded, fp } => {
                 if self.config().cache_enabled {
                     self.caches()
-                        .normmap_keyed(*fp, stats, || Ok(normmap(padded)))
+                        .normmap_keyed(*fp, stats, || Ok(normmap_with_density(padded)))
                 } else {
                     // Leaf bounds are exact normmaps, recorded at prepare.
                     Ok(node.bound.clone().expect("leaf bound is its normmap"))
@@ -1823,7 +1851,11 @@ impl Coordinator {
             }
             RunVal::Resident(v) => {
                 stats.norms_refreshed += 1;
-                Ok(v.inner.normmap().clone())
+                // Scatter-time norms have no density census — dense, so
+                // refreshed intermediates never pick the sparse path.
+                Ok(Arc::new(NormMap::dense_like(
+                    (**v.inner.normmap()).clone(),
+                )))
             }
         }
     }

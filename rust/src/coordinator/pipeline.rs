@@ -37,7 +37,7 @@ use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
     check_inner_dims, execute_batches, MultiplyStats, Operand, TileAccumulator,
 };
-use crate::spamm::normmap::normmap;
+use crate::spamm::normmap::{normmap_with_density, NormMap};
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams, TuneResult};
 
@@ -144,9 +144,11 @@ impl Coordinator {
         &self,
         p: &PaddedMatrix,
         stats: &mut MultiplyStats,
-    ) -> Result<(Arc<Matrix>, Option<Fingerprint>)> {
+    ) -> Result<(Arc<NormMap>, Option<Fingerprint>)> {
         self.caches
-            .normmap_via(self.cfg.cache_enabled, p, stats, || Ok(normmap(p)))
+            .normmap_via(self.cfg.cache_enabled, p, stats, || {
+                Ok(normmap_with_density(p))
+            })
     }
 
     /// Tune τ for a target valid ratio (host normmaps — the tuning kernel
@@ -156,7 +158,7 @@ impl Coordinator {
         let mut scratch = MultiplyStats::default();
         let (na, _) = self.cached_normmap(&PaddedMatrix::new(a, self.cfg.lonum), &mut scratch)?;
         let (nb, _) = self.cached_normmap(&PaddedMatrix::new(b, self.cfg.lonum), &mut scratch)?;
-        tuner::tune_tau(&na, &nb, target, TuneParams::default())
+        tuner::tune_tau(&na.norms, &nb.norms, target, TuneParams::default())
     }
 
     /// Multi-device SpAMM multiply per Algorithm 4.
@@ -176,9 +178,15 @@ impl Coordinator {
         let (nb, mut fb) = self.cached_normmap(&pb, &mut front)?;
         front.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let sched = self
-            .caches
-            .schedule_via(fa, fb, tau, &na, &nb, &mut front)?;
+        let sched = self.caches.schedule_via(
+            fa,
+            fb,
+            tau,
+            self.cfg.density_threshold,
+            &na,
+            &nb,
+            &mut front,
+        )?;
         front.schedule_secs = t.elapsed().as_secs_f64();
         let sched: &Schedule = &sched;
         // Residency keys on content fingerprints; compute them here even

@@ -48,7 +48,7 @@ use crate::runtime::{ArtifactBundle, Runtime};
 use crate::spamm::balance::Assignment;
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::MultiplyStats;
-use crate::spamm::normmap::normmap;
+use crate::spamm::normmap::normmap_with_density;
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams};
 use crate::util::prng::Rng;
@@ -648,28 +648,42 @@ impl SpammSession {
         let t = Instant::now();
         let (na, nb) = if self.shared.cfg.cache_enabled {
             (
-                self.shared.caches.normmap_keyed(fa, &mut front, || Ok(normmap(&pa)))?,
-                self.shared.caches.normmap_keyed(fb, &mut front, || Ok(normmap(&pb)))?,
+                self.shared
+                    .caches
+                    .normmap_keyed(fa, &mut front, || Ok(normmap_with_density(&pa)))?,
+                self.shared
+                    .caches
+                    .normmap_keyed(fb, &mut front, || Ok(normmap_with_density(&pb)))?,
             )
         } else {
-            (Arc::new(normmap(&pa)), Arc::new(normmap(&pb)))
+            (
+                Arc::new(normmap_with_density(&pa)),
+                Arc::new(normmap_with_density(&pb)),
+            )
         };
         let tau = match approx {
             Approx::Tau(t) => t,
             Approx::ValidRatio(r) => {
-                tuner::tune_tau(&na, &nb, r, TuneParams::default())?.tau
+                tuner::tune_tau(&na.norms, &nb.norms, r, TuneParams::default())?.tau
             }
         };
         // Norm phase of the plan's front stats spans normmaps + τ
         // resolution (MultiplyStats has no separate tuner clock).
         front.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
+        let density_threshold = self.shared.cfg.density_threshold;
         let schedule = if self.shared.cfg.cache_enabled {
-            self.shared
-                .caches
-                .schedule_via(Some(fa), Some(fb), tau, &na, &nb, &mut front)?
+            self.shared.caches.schedule_via(
+                Some(fa),
+                Some(fb),
+                tau,
+                density_threshold,
+                &na,
+                &nb,
+                &mut front,
+            )?
         } else {
-            Arc::new(Schedule::build(&na, &nb, tau)?)
+            Arc::new(Schedule::build_adaptive(&na, &nb, tau, density_threshold)?)
         };
         front.schedule_secs = t.elapsed().as_secs_f64();
         let prepare_secs = t_prepare.elapsed().as_secs_f64();

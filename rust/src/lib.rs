@@ -136,6 +136,30 @@
 //! per-node stats on the completion), and the `power`/`purify` CLI
 //! subcommands expose `--expr` vs `--loop`.
 //!
+//! ## Tile formats & mixed-precision paths
+//!
+//! τ-culling picks *which* tile products run; the density-adaptive
+//! format selector picks *how*.  [`spamm::normmap`]'s pass performs a
+//! per-tile density census alongside the norms
+//! ([`spamm::NormMap`]`{ norms, density }`), and
+//! [`spamm::Schedule::build_adaptive`] tags each surviving product with
+//! a [`spamm::TileStrategy`]: `Dense` (classic batched tile-GEMM),
+//! `Sparse` (both operand tiles strictly below `density_threshold`:
+//! staged as a COO payload via [`sparse::pack_tile`] — bitwise
+//! invertible at a zero floor — so pools store and account compressed
+//! bytes, the savings reported as
+//! [`spamm::MultiplyStats`]`::format_saved_bytes`), and `Packed` (runs
+//! of ≥2 consecutive sparse products fused into one wider `sptile`
+//! dispatch, counted by `sparse_dispatches`).  Selection is
+//! schedule-driven, so the format mix is partition-independent;
+//! `density_threshold = 0` (the default) disables routing and is
+//! bitwise identical to the classic executor on every path
+//! (`tests/multidevice.rs`).  Expression-graph leaves carry the census;
+//! computed intermediates and propagated bounds are density-unknown and
+//! conservatively stay dense.  Schedule-cache keys include the
+//! threshold bits.  bf16 precision applies to dense tile uploads only —
+//! sparse payloads keep exact f32 indices — so the two axes compose.
+//!
 //! ## Multi-device
 //!
 //! `devices = M` is a first-class path for every API: multiplies,

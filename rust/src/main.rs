@@ -71,6 +71,13 @@ fn common(spec: Spec) -> Spec {
             "256m",
             "per-device resident-tile byte budget (k/m/g suffixes; non-zero while residency is on)",
         )
+        .opt(
+            "density-threshold",
+            &d.density_threshold.to_string(),
+            "per-tile format selector in [0, 1]: surviving products whose operand \
+             tiles are both below this density run on the sparse/packed path \
+             (0 = always dense, bitwise-identical to the classic executor)",
+        )
         .opt("config", "", "optional config file (key = value)")
 }
 
@@ -91,6 +98,7 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
         ("balance", "balance"),
         ("pipeline-depth", "pipeline_depth"),
         ("device-mem-budget", "device_mem_budget"),
+        ("density-threshold", "density_threshold"),
     ] {
         if a.provided(opt) || !from_file {
             cfg.apply(key, a.get(opt))?;
@@ -112,24 +120,30 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd {
         "info" => cmd_info(rest),
         "run" => cmd_run(rest),
+        "multiply" => cmd_multiply(rest),
         "tune" => cmd_tune(rest),
         "power" => cmd_power(rest),
         "purify" => cmd_purify(rest),
         "cnn" => cmd_cnn(rest),
         "serve" => cmd_serve(rest),
         "coordinate" => cmd_coordinate(rest),
+        "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
                  subcommands:\n  info   list the artifact bundle\n  run    \
-                 tuned SpAMM vs dense baseline\n  tune   τ search for a valid \
+                 tuned SpAMM vs dense baseline\n  multiply  density-adaptive \
+                 tile-format multiply (--smoke for the CI format assertion)\n  \
+                 tune   τ search for a valid \
                  ratio\n  power  A^k chain — expression graph vs per-step \
                  loop (--expr/--loop)\n  purify McWeeny purification, same \
                  A/B\n  cnn    case-study CNN accuracy probe\n  serve  \
                  session serving bench: registered operands, prepared plans, \
                  priority queue\n  coordinate  multi-device partition bench: \
                  per-device transfer/busy table, residency-aware vs rowblock \
-                 (--smoke)\n\nUse `cuspamm <cmd> --help` for options."
+                 (--smoke)\n  bench  machine-readable BENCH_<suite>.json \
+                 records (--check diffs deterministic fields vs committed \
+                 baselines)\n\nUse `cuspamm <cmd> --help` for options."
             );
             Ok(())
         }
@@ -221,6 +235,174 @@ fn cmd_run(args: &[String]) -> Result<()> {
         report.stage.residency_evictions,
         report.stage.transfer_bytes / 1024,
         report.stage.transfer_saved_bytes / 1024
+    );
+    print_format_mix(&report.stage);
+    Ok(())
+}
+
+/// Per-tile format mix of one multiply (density-adaptive executor).
+fn print_format_mix(s: &cuspamm::spamm::executor::MultiplyStats) {
+    println!(
+        "formats: {} dense / {} sparse / {} packed products ({} sparse dispatches, \
+         {} KiB saved vs dense staging)",
+        s.dense_products,
+        s.sparse_products,
+        s.packed_products,
+        s.sparse_dispatches,
+        s.format_saved_bytes / 1024
+    );
+}
+
+/// One multiply at an explicit τ with the density-adaptive executor —
+/// the format-mix probe (`run` tunes τ from a valid-ratio target; this
+/// command takes τ and the density threshold directly).
+fn cmd_multiply(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new(
+        "cuspamm multiply",
+        "density-adaptive multiply: per-tile dense/sparse/packed format \
+         selection below --density-threshold",
+    ))
+    .opt("n", "256", "matrix size (tiles of the bundle's LoNum)")
+    .opt("tau", "0.0", "SpAMM threshold τ")
+    .opt("seed", "7", "workload seed")
+    .opt(
+        "spikes",
+        "8",
+        "nonzeros per tile of the scattered-sparse workload (smoke/default \
+         workload; high-norm, low-density tiles)",
+    )
+    .flag(
+        "smoke",
+        "CI assertion: threshold 0 is bitwise-identical to the default \
+         executor; a positive threshold selects sparse/packed formats on a \
+         scattered-sparse workload, uploads ≥2x fewer bytes, and agrees with \
+         the all-dense result",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let n = a.usize("n")?;
+    let tau = a.f64("tau")? as f32;
+    let seed = a.usize("seed")? as u64;
+    let spikes = a.usize("spikes")?;
+    let ma = scattered_sparse(n, bundle.lonum, spikes, seed);
+    let mb = scattered_sparse(n, bundle.lonum, spikes, seed + 1);
+    if a.flag("smoke") {
+        return multiply_smoke(&bundle, cfg, &ma, &mb, tau);
+    }
+    let coord = Coordinator::new(&bundle, cfg.clone())?;
+    let rep = coord.multiply(&ma, &mb, tau)?;
+    println!(
+        "== multiply: n={n} τ={tau:.1e} density-threshold={} ==",
+        cfg.density_threshold
+    );
+    println!("spamm: {}", rep.summary_line());
+    print_format_mix(&rep.stage);
+    Ok(())
+}
+
+/// Scattered-sparse workload: every tile holds `spikes` large entries at
+/// seeded random positions — low density but high norm, so τ keeps the
+/// products while the density threshold reroutes them off the dense path.
+/// (Decay matrices can't exercise this: their low-density tiles are also
+/// low-norm, so τ prunes them before format selection matters.)
+fn scattered_sparse(n: usize, lonum: usize, spikes: usize, seed: u64) -> Matrix {
+    let mut rng = cuspamm::util::prng::Rng::new(seed);
+    let mut m = Matrix::zeros(n, n);
+    let tiles = n.div_ceil(lonum);
+    for ti in 0..tiles {
+        for tj in 0..tiles {
+            for _ in 0..spikes {
+                let i = (ti * lonum + rng.below(lonum)).min(n - 1);
+                let j = (tj * lonum + rng.below(lonum)).min(n - 1);
+                let mag = rng.range_f32(0.25, 1.0);
+                m[(i, j)] = if rng.next_u64() & 1 == 0 { mag } else { -mag };
+            }
+        }
+    }
+    m
+}
+
+/// CI smoke for `multiply` (`--smoke`): the density-adaptive executor's
+/// three headline contracts on a scattered-sparse workload.
+fn multiply_smoke(
+    bundle: &ArtifactBundle,
+    cfg: SpammConfig,
+    ma: &Matrix,
+    mb: &Matrix,
+    tau: f32,
+) -> Result<()> {
+    const THRESHOLD: f32 = 0.5;
+
+    // 1. Threshold 0 (explicit) is bitwise-identical to the default
+    //    config's executor: the adaptive plumbing at 0 must be inert.
+    let mut cfg0 = cfg.clone();
+    cfg0.density_threshold = 0.0;
+    let c0 = Coordinator::new(bundle, cfg0.clone())?;
+    let rep0 = c0.multiply(ma, mb, tau)?;
+    let cd = Coordinator::new(bundle, SpammConfig::default())?;
+    let repd = cd.multiply(ma, mb, tau)?;
+    assert_eq!(
+        rep0.c.data(),
+        repd.c.data(),
+        "threshold 0 diverged from the default executor"
+    );
+    assert_eq!(
+        rep0.stage.sparse_products + rep0.stage.packed_products,
+        0,
+        "threshold 0 must never select a sparse format"
+    );
+
+    // 2. A positive threshold selects sparse/packed formats and stages
+    //    measurably fewer bytes (packed payloads instead of full tiles).
+    let mut cfg1 = cfg;
+    cfg1.density_threshold = THRESHOLD;
+    let c1 = Coordinator::new(bundle, cfg1)?;
+    let rep1 = c1.multiply(ma, mb, tau)?;
+    let routed = rep1.stage.sparse_products + rep1.stage.packed_products;
+    println!(
+        "smoke: threshold {THRESHOLD} routed {routed} of {} products off the dense \
+         path ({} sparse dispatches)",
+        rep1.stage.valid_products, rep1.stage.sparse_dispatches
+    );
+    assert!(
+        routed > 0,
+        "low-density tiles were not routed to the sparse/packed path"
+    );
+    assert!(
+        rep1.stage.sparse_dispatches > 0,
+        "sparse products selected but never dispatched"
+    );
+    println!(
+        "smoke: uploaded — all-dense {} KiB, adaptive {} KiB ({} KiB saved vs \
+         dense staging)",
+        rep0.stage.transfer_bytes / 1024,
+        rep1.stage.transfer_bytes / 1024,
+        rep1.stage.format_saved_bytes / 1024
+    );
+    assert!(
+        rep1.stage.transfer_bytes * 2 <= rep0.stage.transfer_bytes,
+        "adaptive path must upload ≤ half the dense bytes: {} vs {}",
+        rep1.stage.transfer_bytes,
+        rep0.stage.transfer_bytes
+    );
+    assert!(
+        rep1.stage.format_saved_bytes > 0,
+        "packed staging reported no bytes saved"
+    );
+
+    // 3. The mixed-format result agrees with the all-dense result: the
+    //    sparse path computes the same products exactly, so only the
+    //    accumulation order may differ.
+    let err = rep1.c.error_fnorm(&rep0.c)?;
+    let scale = rep0.c.fnorm().max(1.0);
+    assert!(
+        err <= 1e-5 * scale,
+        "mixed-format result drifted: ‖E‖_F = {err:.3e} vs ‖C‖_F = {scale:.3e}"
+    );
+    println!(
+        "smoke: OK — threshold 0 bitwise-inert, sparse/packed selected with ≥2x \
+         fewer uploaded bytes, mixed-format ‖E‖_F = {err:.3e}"
     );
     Ok(())
 }
@@ -947,6 +1129,177 @@ fn coordinate_smoke(
         cfg.devices
     );
     Ok(())
+}
+
+/// `cuspamm bench`: regenerate the machine-readable benchmark records
+/// (`BENCH_multiply.json`, `BENCH_serve.json`, `BENCH_expr.json`) on small
+/// deterministic hostsim workloads, and optionally diff their
+/// deterministic sections against committed baselines (`--check`).
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new(
+        "cuspamm bench",
+        "emit BENCH_<suite>.json records; --check <dir> diffs the \
+         deterministic fields (counts, format mixes, cache behavior) \
+         against committed baselines",
+    ))
+    .opt("suite", "all", "all | multiply | serve | expr")
+    .opt("out", "bench_results", "output directory for BENCH_*.json")
+    .opt(
+        "check",
+        "",
+        "baseline directory to diff against (empty = just emit)",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let suite = a.get("suite").to_string();
+    let pick = |name: &str| suite == "all" || suite == name;
+    let mut records = Vec::new();
+    if pick("multiply") {
+        records.push(bench_multiply(&bundle, &cfg)?);
+    }
+    if pick("serve") {
+        records.push(bench_serve(&bundle, &cfg)?);
+    }
+    if pick("expr") {
+        records.push(bench_expr(&bundle, &cfg)?);
+    }
+    if records.is_empty() {
+        return Err(Error::Config(format!(
+            "unknown suite '{suite}' (all | multiply | serve | expr)"
+        )));
+    }
+    let out = std::path::Path::new(a.get("out"));
+    for r in &records {
+        let path = r.write(out)?;
+        println!("wrote {}", path.display());
+    }
+    if !a.get("check").is_empty() {
+        let dir = std::path::Path::new(a.get("check"));
+        let mut mismatches = Vec::new();
+        for r in &records {
+            let baseline = dir.join(format!("BENCH_{}.json", r.name));
+            mismatches.extend(r.check_against(&baseline)?);
+        }
+        if !mismatches.is_empty() {
+            return Err(Error::Config(format!(
+                "bench baselines drifted ({}):\n  {}\n(re-baseline deliberately by \
+                 copying the regenerated files over {})",
+                mismatches.len(),
+                mismatches.join("\n  "),
+                dir.display()
+            )));
+        }
+        println!("baselines OK ({} records)", records.len());
+    }
+    Ok(())
+}
+
+/// Multiply suite: the density-adaptive format mix on the scattered-sparse
+/// workload, against the all-dense threshold-0 run.
+fn bench_multiply(
+    bundle: &ArtifactBundle,
+    cfg: &SpammConfig,
+) -> Result<cuspamm::bench_harness::BenchRecord> {
+    use cuspamm::bench_harness::BenchRecord;
+
+    let l = bundle.lonum;
+    let n = 4 * l;
+    let ma = scattered_sparse(n, l, 8, 11);
+    let mb = scattered_sparse(n, l, 8, 12);
+    let mut cfg0 = cfg.clone();
+    cfg0.density_threshold = 0.0;
+    let rep0 = Coordinator::new(bundle, cfg0)?.multiply(&ma, &mb, 0.0)?;
+    let mut cfg1 = cfg.clone();
+    cfg1.density_threshold = 0.5;
+    let rep1 = Coordinator::new(bundle, cfg1)?.multiply(&ma, &mb, 0.0)?;
+
+    let mut r = BenchRecord::new("multiply");
+    r.det("n", n as f64)
+        .det("total_products", rep1.stage.total_products as f64)
+        .det("valid_products", rep1.stage.valid_products as f64)
+        .det("dense_products", rep1.stage.dense_products as f64)
+        .det("sparse_products", rep1.stage.sparse_products as f64)
+        .det("packed_products", rep1.stage.packed_products as f64)
+        .det("sparse_dispatches", rep1.stage.sparse_dispatches as f64)
+        .det(
+            "all_dense_products_at_zero_threshold",
+            rep0.stage.dense_products as f64,
+        )
+        .det(
+            "routed_at_zero_threshold",
+            (rep0.stage.sparse_products + rep0.stage.packed_products) as f64,
+        );
+    r.info("wall_secs_dense", rep0.wall_secs)
+        .info("wall_secs_adaptive", rep1.wall_secs)
+        .info("uploaded_bytes_dense", rep0.stage.transfer_bytes as f64)
+        .info("uploaded_bytes_adaptive", rep1.stage.transfer_bytes as f64)
+        .info("format_saved_bytes", rep1.stage.format_saved_bytes as f64);
+    Ok(r)
+}
+
+/// Serve suite: warm prepared-plan requests ride the caches and the
+/// residency pools — zero warm transfers, zero warm norm recomputes.
+fn bench_serve(
+    bundle: &ArtifactBundle,
+    cfg: &SpammConfig,
+) -> Result<cuspamm::bench_harness::BenchRecord> {
+    use cuspamm::bench_harness::BenchRecord;
+    use cuspamm::coordinator::{Approx, SpammSession};
+
+    const REQUESTS: usize = 4;
+    let n = 4 * bundle.lonum;
+    let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let session = SpammSession::new(bundle, cfg.clone())?;
+    let aid = session.put(&a)?;
+    let plan = session.prepare(aid, aid, Approx::Tau(0.0))?;
+    let mut jobs = Vec::with_capacity(REQUESTS);
+    for _ in 0..REQUESTS {
+        let t = session.submit(plan)?;
+        jobs.push(session.wait(t)?);
+    }
+    let warm = &jobs[1..];
+    let mut r = BenchRecord::new("serve");
+    r.det("requests", REQUESTS as f64)
+        .det("warm_requests", warm.len() as f64)
+        .det("valid_products", jobs[0].stats.valid_products as f64)
+        .det(
+            "warm_transfer_bytes",
+            warm.iter().map(|c| c.stats.transfer_bytes).sum::<u64>() as f64,
+        )
+        .det(
+            "warm_norm_recomputes",
+            warm.iter().filter(|c| c.stats.norm_secs > 0.0).count() as f64,
+        );
+    r.info("cold_compute_secs", jobs[0].compute_secs).info(
+        "warm_compute_secs_mean",
+        warm.iter().map(|c| c.compute_secs).sum::<f64>() / warm.len() as f64,
+    );
+    Ok(r)
+}
+
+/// Expr suite: the A³ power chain — device-resident intermediates mean
+/// exactly one host norm computation (the leaf), fully valid at τ = 0.
+fn bench_expr(
+    bundle: &ArtifactBundle,
+    cfg: &SpammConfig,
+) -> Result<cuspamm::bench_harness::BenchRecord> {
+    use cuspamm::bench_harness::BenchRecord;
+    use cuspamm::spamm::power::spamm_power;
+
+    let n = 4 * bundle.lonum;
+    let m = Matrix::decay_exponential(n, 1.0, 0.5, 7);
+    let coord = Coordinator::new(bundle, cfg.clone())?;
+    let r0 = spamm_power(&coord, &m, 3, 0.0)?;
+    let mut r = BenchRecord::new("expr");
+    r.det("steps", r0.steps.len() as f64)
+        .det(
+            "fully_valid_steps",
+            r0.steps.iter().filter(|s| s.valid_ratio == 1.0).count() as f64,
+        )
+        .det("leaf_norm_misses", coord.caches().norms.misses() as f64);
+    r.info("wall_secs", r0.steps.iter().map(|s| s.wall_secs).sum::<f64>());
+    Ok(r)
 }
 
 fn cmd_cnn(args: &[String]) -> Result<()> {

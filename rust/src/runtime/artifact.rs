@@ -272,6 +272,44 @@ impl ArtifactBundle {
         v
     }
 
+    /// Sparse-tile kernel with run width ≥ `run` at tile size `lonum`:
+    /// smallest bucket that fits, like [`ArtifactBundle::tilegemm`]
+    /// (callers split runs wider than the largest bucket).
+    pub fn sptile(&self, run: usize, lonum: usize) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == "sptile" && a.param_usize("lonum") == Some(lonum))
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::Artifact(format!(
+                "no sptile artifacts for lonum {lonum}"
+            )));
+        }
+        candidates.sort_by_key(|a| a.param_usize("run").unwrap_or(0));
+        for a in &candidates {
+            if a.param_usize("run").unwrap_or(0) >= run {
+                return Ok(a);
+            }
+        }
+        Ok(*candidates.last().unwrap())
+    }
+
+    /// Sorted run widths of the sparse-tile buckets for `lonum` (empty
+    /// when the bundle carries none — callers fall back to the host-side
+    /// sparse kernel).
+    pub fn sptile_runs(&self, lonum: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == "sptile" && a.param_usize("lonum") == Some(lonum))
+            .filter_map(|a| a.param_usize("run"))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// τ-tuner for a BDIM×BDIM normmap.
     pub fn tune(&self, bdim: usize) -> Result<&ArtifactMeta> {
         self.get(&format!("tune_b{bdim}"))

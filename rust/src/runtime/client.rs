@@ -187,6 +187,64 @@ impl Runtime {
         Ok(data)
     }
 
+    /// Sparse tile product over COO entry lists: C[l,l] = A·B where A is
+    /// l×(run·l) and B is (run·l)×l, entries given as parallel
+    /// (linear-index, value) arrays in row-major scan order.  The run
+    /// width must match an artifact bucket exactly — index encoding
+    /// depends on the contraction width, so callers pick the bucket (via
+    /// [`ArtifactBundle::sptile_runs`]) *before* packing indices.  Arrays
+    /// are zero-padded to the artifact capacity here; live counts travel
+    /// in the 2-entry meta input.
+    pub fn sptile(
+        &self,
+        a_idx: &[f32],
+        a_vals: &[f32],
+        b_idx: &[f32],
+        b_vals: &[f32],
+        run: usize,
+        lonum: usize,
+    ) -> Result<Vec<f32>> {
+        let meta = self.bundle.sptile(run, lonum)?;
+        let name = meta.name.clone();
+        let art_run = meta.param_usize("run").unwrap_or(0);
+        let cap = meta.param_usize("cap").unwrap_or(0);
+        if art_run != run {
+            return Err(Error::Artifact(format!(
+                "sptile: no exact bucket for run {run} at lonum {lonum} (closest {art_run})"
+            )));
+        }
+        if a_vals.len() != a_idx.len() || b_vals.len() != b_idx.len() {
+            return Err(Error::Shape(
+                "sptile: values/indices length mismatch".into(),
+            ));
+        }
+        if a_vals.len() > cap || b_vals.len() > cap {
+            return Err(Error::Shape(format!(
+                "sptile: nnz ({}, {}) exceeds capacity {cap}",
+                a_vals.len(),
+                b_vals.len()
+            )));
+        }
+        let pad = |src: &[f32]| {
+            let mut v = vec![0.0f32; cap];
+            v[..src.len()].copy_from_slice(src);
+            v
+        };
+        let counts = [a_vals.len() as f32, b_vals.len() as f32];
+        let out = self.execute(
+            &name,
+            &[
+                literal_f32(&[cap], &pad(a_vals))?,
+                literal_f32(&[cap], &pad(a_idx))?,
+                literal_f32(&[cap], &pad(b_vals))?,
+                literal_f32(&[cap], &pad(b_idx))?,
+                literal_f32(&[2], &counts)?,
+            ],
+        )?;
+        let (_, data) = literal_to_vec(&out[0])?;
+        Ok(data)
+    }
+
     /// On-device τ search (§3.5.2): normmaps + target ratio → (τ, ratio).
     pub fn tune(&self, na: &Matrix, nb: &Matrix, target: f32) -> Result<(f32, f32)> {
         let bdim = na.rows();

@@ -36,6 +36,10 @@ pub struct HostsimSpec {
     /// Batched tile-axpby buckets (f32; the expression graphs' device-side
     /// α·X + β·Y combine).
     pub axpby_batches: Vec<usize>,
+    /// Sparse-tile run widths (f32): `sptile_l{L}_r{R}` executes one
+    /// C[l,l] += A[l,R·l]·B[R·l,l] product over COO-packed operands —
+    /// R = 1 is the single sparse product, R > 1 the packed fused run.
+    pub sptile_runs: Vec<usize>,
     /// Normmap BDIMs with an on-device τ tuner.
     pub tune_bdims: Vec<usize>,
     /// Square sizes with a fused single-call SpAMM (f32 only).
@@ -58,6 +62,7 @@ impl Default for HostsimSpec {
             getnorm_sizes: vec![256, 512],
             tilegemm_batches: vec![16, 64, 256],
             axpby_batches: vec![16, 64, 256],
+            sptile_runs: vec![1, 2, 4],
             tune_bdims: vec![8, 16],
             fused_sizes: vec![256],
             precisions: vec!["f32", "bf16"],
@@ -211,6 +216,25 @@ pub fn write_bundle(dir: impl AsRef<Path>, spec: &HostsimSpec) -> Result<()> {
             1,
             &[("n", n.to_string()), ("lonum", l.to_string())],
             &format!("hostsim v1\nkind = getnorm\nn = {n}\nlonum = {l}\nmxu = true\n"),
+        )?;
+    }
+    for &r in &spec.sptile_runs {
+        // COO-packed sparse tile product: padded value/index arrays of
+        // capacity r·l² (the dense nnz bound of an l×(r·l) block) plus a
+        // 2-entry (a_nnz, b_nnz) meta array.
+        let cap = r * l * l;
+        mb.artifact(
+            &format!("sptile_l{l}_r{r}_f32"),
+            "sptile",
+            &[&[cap], &[cap], &[cap], &[cap], &[2]],
+            1,
+            &[
+                ("lonum", l.to_string()),
+                ("run", r.to_string()),
+                ("cap", cap.to_string()),
+                ("precision", "f32".to_string()),
+            ],
+            &format!("hostsim v1\nkind = sptile\nlonum = {l}\nrun = {r}\ncap = {cap}\n"),
         )?;
     }
     for &b in &spec.tune_bdims {
@@ -445,6 +469,12 @@ mod tests {
         assert!(b.spamm_fused(256, "f32").is_ok());
         assert_eq!(b.tilegemm_buckets(32, "f32"), vec![16, 64, 256]);
         assert_eq!(b.axpby_buckets(32), vec![16, 64, 256]);
+        assert_eq!(b.sptile_runs(32), vec![1, 2, 4]);
+        assert_eq!(b.sptile(1, 32).unwrap().param_usize("run"), Some(1));
+        assert_eq!(b.sptile(3, 32).unwrap().param_usize("run"), Some(4));
+        // Over-wide runs fall back to the largest bucket (caller splits).
+        assert_eq!(b.sptile(9, 32).unwrap().param_usize("run"), Some(4));
+        assert!(b.sptile(1, 64).is_err());
         assert!(b.axpby(10, 32).is_ok());
         assert!(b.axpby(10, 64).is_err());
         assert_eq!(b.dense_sizes(), vec![256, 512]);

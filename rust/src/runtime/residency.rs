@@ -45,13 +45,28 @@ pub struct DeviceTile {
 /// (eviction skips pinned entries); dropping it unpins.
 pub type TileHandle = Arc<DeviceTile>;
 
-/// Pool key: which operand content + which tile of it.
+/// On-device payload layout of a resident tile.  A tile's packed form is
+/// packed at floor 0.0 ([`crate::sparse::pack_tile`]), so both layouts are
+/// pure functions of the operand content and the key stays
+/// content-addressed — the same tile may be resident in both formats at
+/// once (e.g. one consumer runs dense, another sparse) without colliding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileFormat {
+    /// Full row-major LoNum² buffer.
+    Dense,
+    /// COO entry list `[nnz, idx, val, …]` (variable length).
+    Packed,
+}
+
+/// Pool key: which operand content + which tile of it + payload format.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TileKey {
     /// Content fingerprint of the padded operand matrix.
     pub op: Fingerprint,
     /// (tile row, tile col) within the operand's tile grid.
     pub tile: (u32, u32),
+    /// Payload layout resident under this key.
+    pub fmt: TileFormat,
 }
 
 impl TileKey {
@@ -59,6 +74,16 @@ impl TileKey {
         TileKey {
             op,
             tile: (tile.0 as u32, tile.1 as u32),
+            fmt: TileFormat::Dense,
+        }
+    }
+
+    /// Key for the COO-packed payload of the same tile content.
+    pub fn packed(op: Fingerprint, tile: (usize, usize)) -> TileKey {
+        TileKey {
+            op,
+            tile: (tile.0 as u32, tile.1 as u32),
+            fmt: TileFormat::Packed,
         }
     }
 }
@@ -229,6 +254,51 @@ impl ResidencyPool {
         }
     }
 
+    /// Variable-length sibling of [`ResidencyPool::acquire`] for payloads
+    /// whose size is data-dependent (COO-packed tiles): `build` produces
+    /// the full payload on a miss, and byte accounting — uploads, savings,
+    /// residency — follows the *actual* payload length, so compressed
+    /// staging is visible as fewer uploaded bytes than the dense path.
+    pub fn acquire_with(&self, key: TileKey, build: impl FnOnce() -> Vec<f32>) -> Acquired {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(handle) = inner.map.get(&key).map(|s| s.handle.clone()) {
+            let bytes = handle.data.len() * std::mem::size_of::<f32>();
+            inner.touch(key);
+            inner.stats.hits += 1;
+            inner.stats.saved_bytes += bytes as u64;
+            telemetry::global().add("spamm.residency.hits", 1);
+            return Acquired {
+                handle,
+                hit: true,
+                evicted: 0,
+            };
+        }
+        let data = build();
+        let bytes = data.len() * std::mem::size_of::<f32>();
+        let handle: TileHandle = Arc::new(DeviceTile { data });
+        let evicted = evict_for(&mut inner, self.budget, bytes);
+        inner.map.insert(
+            key,
+            Slot {
+                handle: handle.clone(),
+                seq: 0,
+            },
+        );
+        inner.touch(key);
+        inner.bytes += bytes;
+        inner.stats.misses += 1;
+        inner.stats.uploaded_bytes += bytes as u64;
+        inner.stats.resident_bytes = inner.bytes as u64;
+        inner.stats.resident_tiles = inner.map.len() as u64;
+        telemetry::global().add("spamm.residency.misses", 1);
+        telemetry::global().add("spamm.transfer.uploaded_bytes", bytes as u64);
+        Acquired {
+            handle,
+            hit: false,
+            evicted,
+        }
+    }
+
     /// Register a *device-produced* tile (a scatter-accumulated expression
     /// intermediate): the data was computed on this device, so no
     /// host→device transfer happened and the miss/upload counters stay
@@ -354,7 +424,7 @@ impl ResidencyPool {
         inner
             .map
             .keys()
-            .filter(|k| k.op == fp)
+            .filter(|k| k.op == fp && k.fmt == TileFormat::Dense)
             .map(|k| (k.tile.0 as usize, k.tile.1 as usize))
             .collect()
     }
@@ -755,6 +825,25 @@ mod tests {
         pool.insert(key(1, (0, 0)), vec![3.0; ELEMS]);
         assert_eq!(pool.resident_bytes(), TILE_BYTES as usize);
         assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).handle.data[0] == 3.0);
+    }
+
+    #[test]
+    fn packed_format_keys_do_not_collide_and_account_actual_bytes() {
+        let pool = ResidencyPool::new(0);
+        pool.acquire(key(1, (0, 0)), ELEMS, |d| d.fill(1.0));
+        // Same operand + tile, packed layout: distinct entry, 3-word payload.
+        let p = pool.acquire_with(TileKey::packed(fp(1), (0, 0)), || vec![1.0, 0.0, 5.0]);
+        assert!(!p.hit, "packed payload is a separate resident entry");
+        assert_eq!(pool.resident_tiles(), 2);
+        let s = pool.stats();
+        assert_eq!(s.uploaded_bytes, TILE_BYTES + 12, "packed upload = payload len · 4");
+        // Re-acquire hits and credits the packed (not dense) size.
+        let q = pool.acquire_with(TileKey::packed(fp(1), (0, 0)), || panic!("must hit"));
+        assert!(q.hit);
+        assert_eq!(q.handle.data, vec![1.0, 0.0, 5.0]);
+        assert_eq!(pool.stats().saved_bytes, 12);
+        // Placement probes count only dense-layout tiles.
+        assert_eq!(pool.resident_tiles_of(fp(1)), vec![(0, 0)]);
     }
 
     #[test]

@@ -23,8 +23,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::Result;
 use crate::matrix::tiling::PaddedMatrix;
-use crate::matrix::Matrix;
 use crate::spamm::executor::MultiplyStats;
+use crate::spamm::normmap::NormMap;
 use crate::spamm::schedule::Schedule;
 use crate::telemetry;
 
@@ -166,9 +166,9 @@ impl<K: Clone + Eq + std::hash::Hash, V: Clone> BoundedMap<K, V> {
     }
 }
 
-/// Memoized normmaps keyed on operand fingerprints.
+/// Memoized norm+density maps keyed on operand fingerprints.
 pub struct NormCache {
-    inner: Mutex<BoundedMap<Fingerprint, Arc<Matrix>>>,
+    inner: Mutex<BoundedMap<Fingerprint, Arc<NormMap>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -187,8 +187,8 @@ impl NormCache {
     pub fn get_or_compute(
         &self,
         key: Fingerprint,
-        compute: impl FnOnce() -> Result<Matrix>,
-    ) -> Result<(Arc<Matrix>, bool)> {
+        compute: impl FnOnce() -> Result<NormMap>,
+    ) -> Result<(Arc<NormMap>, bool)> {
         if let Some(hit) = self.inner.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             telemetry::global().add("spamm.norm_cache.hits", 1);
@@ -218,12 +218,16 @@ impl NormCache {
     }
 }
 
-/// Key of a compacted schedule: both operand fingerprints + exact τ bits.
+/// Key of a compacted schedule: both operand fingerprints + exact τ bits
+/// + exact density-threshold bits (adaptive strategies change the
+/// schedule's per-product format tags, so two thresholds must never share
+/// an entry).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ScheduleKey {
     pub a: Fingerprint,
     pub b: Fingerprint,
     pub tau_bits: u32,
+    pub density_bits: u32,
 }
 
 /// Memoized compacted schedules.
@@ -302,8 +306,8 @@ impl ExecCaches {
         enabled: bool,
         p: &PaddedMatrix,
         stats: &mut MultiplyStats,
-        compute: impl FnOnce() -> Result<Matrix>,
-    ) -> Result<(Arc<Matrix>, Option<Fingerprint>)> {
+        compute: impl FnOnce() -> Result<NormMap>,
+    ) -> Result<(Arc<NormMap>, Option<Fingerprint>)> {
         if !enabled {
             return Ok((Arc::new(compute()?), None));
         }
@@ -326,8 +330,8 @@ impl ExecCaches {
         &self,
         fp: Fingerprint,
         stats: &mut MultiplyStats,
-        compute: impl FnOnce() -> Result<Matrix>,
-    ) -> Result<Arc<Matrix>> {
+        compute: impl FnOnce() -> Result<NormMap>,
+    ) -> Result<Arc<NormMap>> {
         let (nm, hit) = self.norms.get_or_compute(fp, compute)?;
         if hit {
             stats.norm_cache_hits += 1;
@@ -337,30 +341,40 @@ impl ExecCaches {
         Ok(nm)
     }
 
-    /// Cached compacted schedule for (A, B, τ): consults the schedule
-    /// cache when both operand fingerprints are present, building
-    /// directly otherwise (caching disabled upstream).  Hit/miss counts
-    /// land in `stats`.
+    /// Cached compacted schedule for (A, B, τ, density threshold):
+    /// consults the schedule cache when both operand fingerprints are
+    /// present, building directly otherwise (caching disabled upstream).
+    /// The build is density-adaptive; a zero threshold yields the
+    /// historical all-dense schedule.  Hit/miss counts land in `stats`.
     pub fn schedule_via(
         &self,
         fa: Option<Fingerprint>,
         fb: Option<Fingerprint>,
         tau: f32,
-        na: &Matrix,
-        nb: &Matrix,
+        density_threshold: f32,
+        na: &NormMap,
+        nb: &NormMap,
         stats: &mut MultiplyStats,
     ) -> Result<Arc<Schedule>> {
         let (Some(a), Some(b)) = (fa, fb) else {
-            return Ok(Arc::new(Schedule::build(na, nb, tau)?));
+            return Ok(Arc::new(Schedule::build_adaptive(
+                na,
+                nb,
+                tau,
+                density_threshold,
+            )?));
         };
         let key = ScheduleKey {
             a,
             b,
             tau_bits: tau.to_bits(),
+            density_bits: density_threshold.to_bits(),
         };
         let (sched, hit) = self
             .schedules
-            .get_or_compute(key, || Schedule::build(na, nb, tau))?;
+            .get_or_compute(key, || {
+                Schedule::build_adaptive(na, nb, tau, density_threshold)
+            })?;
         if hit {
             stats.schedule_cache_hits += 1;
         } else {
@@ -373,6 +387,11 @@ impl ExecCaches {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::Matrix;
+
+    fn nmz(rows: usize, cols: usize) -> NormMap {
+        NormMap::dense_like(Matrix::zeros(rows, cols))
+    }
 
     #[test]
     fn fingerprint_distinguishes_content_and_shape() {
@@ -426,7 +445,7 @@ mod tests {
         let cache = NormCache::new(2);
         let key = |i: u64| Fingerprint(i, i.wrapping_mul(31));
         let (_, hit) = cache
-            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key(1), || Ok(nmz(1, 1)))
             .unwrap();
         assert!(!hit);
         let (_, hit) = cache
@@ -437,14 +456,14 @@ mod tests {
         assert_eq!(cache.misses(), 1);
         // Eviction beyond capacity 2: key 1 is least recently used.
         cache
-            .get_or_compute(key(2), || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key(2), || Ok(nmz(1, 1)))
             .unwrap();
         cache
-            .get_or_compute(key(3), || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key(3), || Ok(nmz(1, 1)))
             .unwrap();
         assert_eq!(cache.len(), 2);
         let (_, hit) = cache
-            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key(1), || Ok(nmz(1, 1)))
             .unwrap();
         assert!(!hit, "least-recently-used entry must have been evicted");
     }
@@ -456,16 +475,16 @@ mod tests {
         let cache = NormCache::new(2);
         let key = |i: u64| Fingerprint(i, !i);
         cache
-            .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key(1), || Ok(nmz(1, 1)))
             .unwrap();
         for i in 2..10 {
             // Hit the hot key, then insert a fresh one-shot key.
             let (_, hit) = cache
-                .get_or_compute(key(1), || Ok(Matrix::zeros(1, 1)))
+                .get_or_compute(key(1), || Ok(nmz(1, 1)))
                 .unwrap();
             assert!(hit, "hot key evicted at iteration {i}");
             cache
-                .get_or_compute(key(i), || Ok(Matrix::zeros(1, 1)))
+                .get_or_compute(key(i), || Ok(nmz(1, 1)))
                 .unwrap();
         }
     }
@@ -475,16 +494,19 @@ mod tests {
         let cache = ScheduleCache::new(4);
         let fp = Fingerprint(7, 11);
         let na = Matrix::zeros(2, 2);
-        let mk = |tau: f32| ScheduleKey {
+        let mk = |tau: f32, dt: f32| ScheduleKey {
             a: fp,
             b: fp,
             tau_bits: tau.to_bits(),
+            density_bits: dt.to_bits(),
         };
         let build = || Schedule::build(&na, &na, 0.5);
-        let (_, h1) = cache.get_or_compute(mk(0.5), build).unwrap();
-        let (_, h2) = cache.get_or_compute(mk(0.5), build).unwrap();
-        let (_, h3) = cache.get_or_compute(mk(0.25), build).unwrap();
-        assert!(!h1 && h2 && !h3);
+        let (_, h1) = cache.get_or_compute(mk(0.5, 0.0), build).unwrap();
+        let (_, h2) = cache.get_or_compute(mk(0.5, 0.0), build).unwrap();
+        let (_, h3) = cache.get_or_compute(mk(0.25, 0.0), build).unwrap();
+        // Same τ, different density threshold: a distinct entry.
+        let (_, h4) = cache.get_or_compute(mk(0.5, 0.25), build).unwrap();
+        assert!(!h1 && h2 && !h3 && !h4);
     }
 
     #[test]
@@ -498,13 +520,15 @@ mod tests {
         let fp = fingerprint(&p);
         let mut stats = MultiplyStats::default();
         let via = caches
-            .normmap_via(true, &p, &mut stats, || Ok(crate::spamm::normmap::normmap(&p)))
+            .normmap_via(true, &p, &mut stats, || {
+                Ok(crate::spamm::normmap::normmap_with_density(&p))
+            })
             .unwrap();
         assert_eq!(via.1, Some(fp));
         let keyed = caches
             .normmap_keyed(fp, &mut stats, || panic!("must hit the shared entry"))
             .unwrap();
-        assert_eq!(keyed.data(), via.0.data());
+        assert_eq!(keyed.norms.data(), via.0.norms.data());
         assert_eq!(stats.norm_cache_hits, 1);
         assert_eq!(stats.norm_cache_misses, 1);
     }
@@ -518,7 +542,7 @@ mod tests {
         });
         assert!(r.is_err());
         let (_, hit) = cache
-            .get_or_compute(key, || Ok(Matrix::zeros(1, 1)))
+            .get_or_compute(key, || Ok(nmz(1, 1)))
             .unwrap();
         assert!(!hit);
     }

@@ -30,11 +30,12 @@ use crate::config::{Precision, SpammConfig};
 use crate::error::{Error, Result};
 use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
 use crate::matrix::Matrix;
-use crate::runtime::residency::{ResidencyPool, ResidentOperand, TileHandle, TileKey};
+use crate::runtime::residency::{DeviceTile, ResidencyPool, ResidentOperand, TileHandle, TileKey};
 use crate::runtime::{ArtifactBundle, Runtime};
+use crate::sparse::{pack_tile, packed_to_coo, spgemm};
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
-use crate::spamm::normmap::normmap;
-use crate::spamm::schedule::{ProductRef, Schedule};
+use crate::spamm::normmap::{normmap_with_density, NormMap};
+use crate::spamm::schedule::{ProductRef, Schedule, TileStrategy};
 use crate::spamm::tuner::{self, TuneParams};
 use crate::telemetry;
 
@@ -88,6 +89,20 @@ pub struct MultiplyStats {
     /// Bytes *not* uploaded thanks to residency hits and within-chunk
     /// operand-tile deduplication.
     pub transfer_saved_bytes: u64,
+    /// Surviving products executed through the dense tile-GEMM path.
+    pub dense_products: usize,
+    /// Surviving products whose tile pair fell below the density
+    /// threshold and ran through the sparse (COO sptile) path singly.
+    pub sparse_products: usize,
+    /// Sparse products fused into multi-tile packed dispatches.
+    pub packed_products: usize,
+    /// sptile kernel dispatches issued (each covers ≥1 sparse/packed
+    /// products of one output tile).
+    pub sparse_dispatches: usize,
+    /// Bytes *not* uploaded because sparse-strategy tiles staged in
+    /// packed COO layout instead of full LoNum² buffers — the
+    /// density-adaptive format win, disjoint from residency-hit savings.
+    pub format_saved_bytes: u64,
     /// Bytes of *device-produced* tiles (expression intermediates) that
     /// had to bounce through the host because the consuming device did
     /// not have them resident — the multi-device expression graphs'
@@ -115,6 +130,11 @@ impl MultiplyStats {
         self.residency_evictions += other.residency_evictions;
         self.norms_propagated += other.norms_propagated;
         self.norms_refreshed += other.norms_refreshed;
+        self.dense_products += other.dense_products;
+        self.sparse_products += other.sparse_products;
+        self.packed_products += other.packed_products;
+        self.sparse_dispatches += other.sparse_dispatches;
+        self.format_saved_bytes += other.format_saved_bytes;
         self.transfer_bytes += other.transfer_bytes;
         self.transfer_saved_bytes += other.transfer_saved_bytes;
         self.cross_device_bytes += other.cross_device_bytes;
@@ -236,8 +256,12 @@ impl SpammEngine {
     }
 
     /// normmap of a padded matrix — on-device (get-norm artifact) when
-    /// configured and available, host otherwise.
-    pub fn normmap_of(&self, p: &PaddedMatrix) -> Result<Matrix> {
+    /// configured and available, host otherwise.  The host pass also
+    /// takes the per-tile density census (near-free: same traversal); the
+    /// device get-norm artifact reports norms only, so its result is
+    /// marked fully dense — device-normed operands never select the
+    /// sparse path, which is conservative, never wrong.
+    pub fn normmap_of(&self, p: &PaddedMatrix) -> Result<NormMap> {
         if self.cfg.device_normmap && p.inner.rows() == p.inner.cols() {
             let mxu = self.cfg.precision == Precision::Bf16;
             if self
@@ -246,14 +270,16 @@ impl SpammEngine {
                 .getnorm(p.inner.rows(), self.cfg.lonum, mxu)
                 .is_ok()
             {
-                return self.rt.getnorm(&p.inner, self.cfg.lonum, mxu);
+                return Ok(NormMap::dense_like(
+                    self.rt.getnorm(&p.inner, self.cfg.lonum, mxu)?,
+                ));
             }
             log::debug!(
                 "no get-norm artifact for n={}, falling back to host",
                 p.inner.rows()
             );
         }
-        Ok(normmap(p))
+        Ok(normmap_with_density(p))
     }
 
     /// Cached normmap: fingerprint the operand and consult the norm cache
@@ -262,7 +288,7 @@ impl SpammEngine {
         &self,
         p: &PaddedMatrix,
         stats: &mut MultiplyStats,
-    ) -> Result<(Arc<Matrix>, Option<Fingerprint>)> {
+    ) -> Result<(Arc<NormMap>, Option<Fingerprint>)> {
         self.caches
             .normmap_via(self.cfg.cache_enabled, p, stats, || self.normmap_of(p))
     }
@@ -275,7 +301,7 @@ impl SpammEngine {
         let mut scratch = MultiplyStats::default();
         let (na, _) = self.cached_normmap(&pa, &mut scratch)?;
         let (nb, _) = self.cached_normmap(&pb, &mut scratch)?;
-        tuner::tune_tau(&na, &nb, target, TuneParams::default())
+        tuner::tune_tau(&na.norms, &nb.norms, target, TuneParams::default())
     }
 
     /// SpAMM multiply: C ≈ A·B skipping tile products under τ.
@@ -303,9 +329,15 @@ impl SpammEngine {
         stats.norm_secs = t.elapsed().as_secs_f64();
 
         let t = Instant::now();
-        let sched = self
-            .caches
-            .schedule_via(fa, fb, tau, &na, &nb, &mut stats)?;
+        let sched = self.caches.schedule_via(
+            fa,
+            fb,
+            tau,
+            self.cfg.density_threshold,
+            &na,
+            &nb,
+            &mut stats,
+        )?;
         stats.schedule_secs = t.elapsed().as_secs_f64();
         stats.valid_products = sched.valid_products();
         stats.total_products = sched.total_products();
@@ -364,10 +396,22 @@ impl SpammEngine {
         stats.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
         let sched = if cached {
-            self.caches
-                .schedule_via(Some(fa), Some(fb), tau, &na, &nb, &mut stats)?
+            self.caches.schedule_via(
+                Some(fa),
+                Some(fb),
+                tau,
+                self.cfg.density_threshold,
+                &na,
+                &nb,
+                &mut stats,
+            )?
         } else {
-            Arc::new(Schedule::build(&na, &nb, tau)?)
+            Arc::new(Schedule::build_adaptive(
+                &na,
+                &nb,
+                tau,
+                self.cfg.density_threshold,
+            )?)
         };
         stats.schedule_secs = t.elapsed().as_secs_f64();
         stats.valid_products = sched.valid_products();
@@ -766,21 +810,70 @@ pub fn execute_batches<S: ScatterSink>(
 ) -> Result<usize> {
     let residency = pool.is_some() && pa.fp.is_some() && pb.fp.is_some();
     let pool = if residency { pool } else { None };
+    // Split every batch by tile strategy: dense products flow through the
+    // unchanged tile-GEMM pipeline below (bitwise identical to the
+    // all-dense executor), sparse/packed products are pulled out into
+    // per-output-tile groups for the COO sptile path.  A group is a
+    // maximal run of non-dense products of one output tile — the
+    // schedule's `Packed` runs arrive consecutive by construction, so a
+    // group maps to one fused dispatch.
     let mut batch_products: Vec<Vec<ProductRef>> = Vec::with_capacity(batches.len());
+    let mut sparse_groups: Vec<((usize, usize), Vec<ProductRef>)> = Vec::new();
+    let (mut n_dense, mut n_sparse, mut n_packed) = (0usize, 0usize, 0usize);
     for tiles in batches {
-        let mut products: Vec<ProductRef> =
-            sched.products_for_tiles(tiles.iter().copied()).collect();
-        if residency {
-            order_for_residency(&mut products);
+        let mut dense: Vec<ProductRef> = Vec::new();
+        let mut run: Vec<ProductRef> = Vec::new();
+        for p in sched.products_for_tiles(tiles.iter().copied()) {
+            match p.strategy {
+                TileStrategy::Dense => {
+                    n_dense += 1;
+                    if !run.is_empty() {
+                        sparse_groups.push((run[0].c, std::mem::take(&mut run)));
+                    }
+                    dense.push(p);
+                }
+                TileStrategy::Sparse | TileStrategy::Packed => {
+                    if p.strategy == TileStrategy::Sparse {
+                        n_sparse += 1;
+                    } else {
+                        n_packed += 1;
+                    }
+                    if run.last().is_some_and(|last| last.c != p.c) {
+                        sparse_groups.push((run[0].c, std::mem::take(&mut run)));
+                    }
+                    run.push(p);
+                }
+            }
         }
-        batch_products.push(products);
+        if !run.is_empty() {
+            sparse_groups.push((run[0].c, std::mem::take(&mut run)));
+        }
+        if residency {
+            order_for_residency(&mut dense);
+        }
+        batch_products.push(dense);
     }
-    let executed: usize = batch_products.iter().map(|b| b.len()).sum();
+    stats.dense_products += n_dense;
+    stats.sparse_products += n_sparse;
+    stats.packed_products += n_packed;
+    if n_sparse + n_packed > 0 {
+        telemetry::global().add("spamm.format.sparse_products", n_sparse as u64);
+        telemetry::global().add("spamm.format.packed_products", n_packed as u64);
+    }
+    telemetry::global().add("spamm.format.dense_products", n_dense as u64);
+    let executed: usize = batch_products.iter().map(|b| b.len()).sum::<usize>()
+        + sparse_groups.iter().map(|(_, g)| g.len()).sum::<usize>();
     stats.pipeline_depth = cfg.pipeline_depth.max(1);
     if executed == 0 {
         // Zero surviving products (huge τ): the output is exactly the
         // sink's current contents — no kernel launches at all.
         return Ok(0);
+    }
+    if !sparse_groups.is_empty() {
+        execute_sparse_groups(rt, cfg, pool, pa, pb, sink, &sparse_groups, stats)?;
+        if batch_products.iter().all(|b| b.is_empty()) {
+            return Ok(executed);
+        }
     }
     let precision = cfg.precision.as_str();
     // Chunk every batch and resolve each chunk's compiled batch capacity
@@ -994,6 +1087,155 @@ pub fn execute_batches<S: ScatterSink>(
     Ok(executed)
 }
 
+/// Stage one operand tile in packed COO layout (`[nnz, idx, val, …]`,
+/// packed at floor 0.0 so the payload is exact).  With a pool the payload
+/// is content-addressed under [`TileKey::packed`] — hits skip the
+/// pack+upload entirely; misses upload only the *actual* payload bytes
+/// and credit the dense-vs-packed difference to `fmt_saved`.
+fn stage_packed_tile(
+    pool: Option<&ResidencyPool>,
+    fp: Option<Fingerprint>,
+    src: TileSource<'_>,
+    (ti, tj): (usize, usize),
+    l: usize,
+    ctr: &mut TransferCounters,
+    fmt_saved: &mut u64,
+) -> Result<TileHandle> {
+    if ti >= src.tile_rows() || tj >= src.tile_cols() {
+        return Err(Error::Shape(format!(
+            "sparse gather: tile ({ti},{tj}) out of {}x{} grid",
+            src.tile_rows(),
+            src.tile_cols()
+        )));
+    }
+    let dense_bytes = (l * l * std::mem::size_of::<f32>()) as u64;
+    let build = || {
+        let mut buf = vec![0.0f32; l * l];
+        src.copy_tile(ti, tj, &mut buf);
+        pack_tile(&buf, l, 0.0)
+    };
+    match (pool, fp) {
+        (Some(pool), Some(fp)) => {
+            let got = pool.acquire_with(TileKey::packed(fp, (ti, tj)), build);
+            let bytes = (got.handle.data.len() * std::mem::size_of::<f32>()) as u64;
+            if got.hit {
+                ctr.hits += 1;
+                ctr.saved_bytes += bytes;
+            } else {
+                ctr.misses += 1;
+                ctr.uploaded_bytes += bytes;
+                *fmt_saved += dense_bytes.saturating_sub(bytes);
+            }
+            ctr.evictions += got.evicted;
+            Ok(got.handle)
+        }
+        _ => {
+            let data = build();
+            let bytes = (data.len() * std::mem::size_of::<f32>()) as u64;
+            ctr.uploaded_bytes += bytes;
+            *fmt_saved += dense_bytes.saturating_sub(bytes);
+            telemetry::global().add("spamm.transfer.uploaded_bytes", bytes);
+            Ok(Arc::new(DeviceTile { data }))
+        }
+    }
+}
+
+/// Execute the sparse/packed product groups of a multiply: each group —
+/// ≥1 consecutive below-threshold products of one output tile — becomes
+/// one fused `sptile` dispatch over COO-packed operands, block-
+/// concatenated along the contraction axis (C[i,j] += [A_ik1…A_ikn] ·
+/// [B_k1j; …; B_knj]).  Groups wider than the largest compiled run
+/// bucket split; when the bundle carries no sptile artifacts at all
+/// (external artifact dirs) the host CSR SpGEMM computes the same
+/// contraction per product — `sparse::spgemm` as the sparse kernel.
+#[allow(clippy::too_many_arguments)]
+fn execute_sparse_groups<S: ScatterSink>(
+    rt: &Runtime,
+    cfg: &SpammConfig,
+    pool: Option<&ResidencyPool>,
+    pa: Operand<'_>,
+    pb: Operand<'_>,
+    sink: &mut S,
+    groups: &[((usize, usize), Vec<ProductRef>)],
+    stats: &mut MultiplyStats,
+) -> Result<()> {
+    let l = cfg.lonum;
+    let l2 = l * l;
+    let runs = rt.bundle().sptile_runs(l);
+    let max_run = runs.last().copied().unwrap_or(0);
+    let mut ctr = TransferCounters::default();
+    let mut fmt_saved = 0u64;
+    let mut dispatches = 0u64;
+    let span = Instant::now();
+    for (c, members) in groups {
+        for chunk in members.chunks(if max_run == 0 { members.len() } else { max_run }) {
+            // Gather: stage both operands of every member in packed form.
+            let t = Instant::now();
+            let mut staged: Vec<(TileHandle, TileHandle)> = Vec::with_capacity(chunk.len());
+            for p in chunk {
+                let a = stage_packed_tile(pool, pa.fp, pa.src, p.a, l, &mut ctr, &mut fmt_saved)?;
+                let b = stage_packed_tile(pool, pb.fp, pb.src, p.b, l, &mut ctr, &mut fmt_saved)?;
+                staged.push((a, b));
+            }
+            ctr.secs += t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let out = if max_run == 0 {
+                // Host fallback: per-member CSR SpGEMM, accumulated.
+                let mut acc = vec![0.0f32; l2];
+                for (a, b) in &staged {
+                    let ac = packed_to_coo(&a.data, l, l)?.to_csr();
+                    let bc = packed_to_coo(&b.data, l, l)?.to_csr();
+                    let prod = spgemm(&ac, &bc)?;
+                    for r in 0..l {
+                        for i in prod.indptr[r]..prod.indptr[r + 1] {
+                            acc[r * l + prod.indices[i]] += prod.values[i];
+                        }
+                    }
+                }
+                acc
+            } else {
+                // Fused dispatch: re-index each member's entries into the
+                // block-concatenated l×(run·l) / (run·l)×l coordinates.
+                let run = runs
+                    .iter()
+                    .find(|&&r| r >= chunk.len())
+                    .copied()
+                    .unwrap_or(max_run);
+                let kw = run * l;
+                let (mut a_idx, mut a_vals) = (Vec::new(), Vec::new());
+                let (mut b_idx, mut b_vals) = (Vec::new(), Vec::new());
+                for (m, (a, b)) in staged.iter().enumerate() {
+                    for e in 0..crate::sparse::packed_nnz(&a.data) {
+                        let idx = a.data[1 + 2 * e] as usize;
+                        let (r, k) = (idx / l, idx % l);
+                        a_idx.push((r * kw + m * l + k) as f32);
+                        a_vals.push(a.data[2 + 2 * e]);
+                    }
+                    for e in 0..crate::sparse::packed_nnz(&b.data) {
+                        let idx = b.data[1 + 2 * e] as usize;
+                        let (k, col) = (idx / l, idx % l);
+                        b_idx.push(((m * l + k) * l + col) as f32);
+                        b_vals.push(b.data[2 + 2 * e]);
+                    }
+                }
+                rt.sptile(&a_idx, &a_vals, &b_idx, &b_vals, run, l)?
+            };
+            stats.exec_secs += t.elapsed().as_secs_f64();
+            stats.sparse_dispatches += 1;
+            dispatches += 1;
+            let t = Instant::now();
+            sink.scatter(&[*c], &out)?;
+            stats.scatter_secs += t.elapsed().as_secs_f64();
+        }
+    }
+    stats.exec_span_secs += span.elapsed().as_secs_f64();
+    ctr.fold_into(stats);
+    stats.format_saved_bytes += fmt_saved;
+    telemetry::global().add("spamm.format.saved_bytes", fmt_saved);
+    telemetry::global().add("spamm.format.sparse_dispatches", dispatches);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1025,6 +1267,7 @@ mod tests {
             a: (0, i),
             b: (i, 0),
             c: (0, 0),
+            strategy: TileStrategy::Dense,
         }
     }
 
@@ -1113,11 +1356,12 @@ mod tests {
         // Products of several output tiles in one row share A-tiles; the
         // residency sort must group them by A-tile while keeping every
         // output tile's k order ascending (the bitwise-identity invariant).
+        let d = TileStrategy::Dense;
         let mut products = vec![
-            ProductRef { a: (0, 0), b: (0, 0), c: (0, 0) },
-            ProductRef { a: (0, 1), b: (1, 0), c: (0, 0) },
-            ProductRef { a: (0, 0), b: (0, 1), c: (0, 1) },
-            ProductRef { a: (0, 1), b: (1, 1), c: (0, 1) },
+            ProductRef { a: (0, 0), b: (0, 0), c: (0, 0), strategy: d },
+            ProductRef { a: (0, 1), b: (1, 0), c: (0, 0), strategy: d },
+            ProductRef { a: (0, 0), b: (0, 1), c: (0, 1), strategy: d },
+            ProductRef { a: (0, 1), b: (1, 1), c: (0, 1), strategy: d },
         ];
         order_for_residency(&mut products);
         // Grouped by A-tile: both (0,0)-A products first.

@@ -16,5 +16,6 @@ pub mod tuner;
 
 pub use cache::{ExecCaches, NormCache, ScheduleCache};
 pub use executor::{MultiplyStats, SpammEngine};
-pub use schedule::Schedule;
+pub use normmap::NormMap;
+pub use schedule::{Schedule, TileStrategy};
 pub use tuner::{tune_tau, TuneParams, TuneResult};

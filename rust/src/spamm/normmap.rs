@@ -6,6 +6,53 @@
 use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
 
+/// Magnitude floor for the per-tile density census: an entry counts as
+/// structurally nonzero only when `|x| > DENSITY_FLOOR`.  Decay-dominated
+/// operands (the paper's core workload, `exp(-0.5·d)` off a diagonal) fall
+/// below this floor a few tens of entries out, so their surviving tiles
+/// report low density while gaussian tiles report ≈ 1.0.
+pub const DENSITY_FLOOR: f32 = 1e-6;
+
+/// Per-tile norm *and* density map of one padded operand — the Layer-1
+/// get-norm output extended with the near-free density census that the
+/// adaptive scheduler keys tile-format selection on.
+///
+/// `norms[(i,j)]` is ‖tile(i,j)‖_F exactly as [`normmap`] computes it;
+/// `density[(i,j)]` is the fraction of the tile's `LoNum²` entries with
+/// magnitude above [`DENSITY_FLOOR`].  Both are produced by one pass over
+/// the operand ([`normmap_with_density`]); the norm accumulation order is
+/// bitwise identical to [`normmap`] / [`tile_fnorm`].
+#[derive(Clone, Debug)]
+pub struct NormMap {
+    pub norms: Matrix,
+    pub density: Matrix,
+}
+
+impl NormMap {
+    /// Wrap a bare norm map with an all-dense density (1.0 everywhere).
+    /// Used for device-side get-norm results, propagated norm *bounds*,
+    /// and device-resident intermediates — sources with no host census.
+    /// Such operands never select the sparse path, which keeps staging
+    /// decisions conservative (dense is always correct).
+    pub fn dense_like(norms: Matrix) -> NormMap {
+        let density = Matrix::from_vec(
+            norms.rows(),
+            norms.cols(),
+            vec![1.0; norms.rows() * norms.cols()],
+        )
+        .expect("dense_like: shape");
+        NormMap { norms, density }
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        self.norms.rows()
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        self.norms.cols()
+    }
+}
+
 /// Frobenius norm of one row-major tile buffer (f64 accumulation, f32
 /// result) — the per-tile kernel both [`normmap`] and the expression
 /// graph's device-side norm refresh share.  Summation runs in buffer
@@ -24,23 +71,38 @@ pub fn tile_fnorm(tile: &[f32]) -> f32 {
 /// contract as the kernel, which accumulates the reduce in f32 over ≤128²
 /// elements; the difference is below f32 epsilon·k).
 pub fn normmap(p: &PaddedMatrix) -> Matrix {
+    normmap_with_density(p).norms
+}
+
+/// One pass over the padded operand producing both the tile Frobenius
+/// norms (bitwise identical to the historical [`normmap`], which now
+/// delegates here) and the per-tile density census: the fraction of each
+/// tile's `LoNum²` entries with `|x| > DENSITY_FLOOR`.  The census rides
+/// the same cache-friendly row traversal the norm pass already pays for,
+/// so density is near-free.
+pub fn normmap_with_density(p: &PaddedMatrix) -> NormMap {
     let (tr, tc, l) = (p.tile_rows(), p.tile_cols(), p.lonum);
     let cols = p.inner.cols();
     let data = p.inner.data();
-    let mut out = Matrix::zeros(tr, tc);
+    let mut norms = Matrix::zeros(tr, tc);
+    let mut density = Matrix::zeros(tr, tc);
+    let inv_elems = 1.0f32 / (l * l) as f32;
     for ti in 0..tr {
         for tj in 0..tc {
             let mut acc = 0.0f64;
+            let mut nnz = 0usize;
             for r in 0..l {
                 let row = &data[(ti * l + r) * cols + tj * l..][..l];
                 for &x in row {
                     acc += (x as f64) * (x as f64);
+                    nnz += (x.abs() > DENSITY_FLOOR) as usize;
                 }
             }
-            out[(ti, tj)] = acc.sqrt() as f32;
+            norms[(ti, tj)] = acc.sqrt() as f32;
+            density[(ti, tj)] = nnz as f32 * inv_elems;
         }
     }
-    out
+    NormMap { norms, density }
 }
 
 #[cfg(test)]
@@ -77,6 +139,38 @@ mod tests {
             for tj in 0..p.tile_cols() {
                 p.copy_tile(ti, tj, &mut buf);
                 assert_eq!(tile_fnorm(&buf).to_bits(), nm[(ti, tj)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn density_census_rides_norm_pass() {
+        // Half the tile above the floor, half exactly zero.
+        let mut m = Matrix::zeros(32, 32);
+        for r in 0..16 {
+            for c in 0..32 {
+                m[(r, c)] = 1.0 + r as f32;
+            }
+        }
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap_with_density(&p);
+        assert_eq!(nm.norms[(0, 0)].to_bits(), normmap(&p)[(0, 0)].to_bits());
+        assert!((nm.density[(0, 0)] - 0.5).abs() < 1e-6);
+        // Sub-floor magnitudes do not count as nonzero.
+        let tiny = Matrix::from_vec(8, 8, vec![DENSITY_FLOOR * 0.5; 64]).unwrap();
+        let pt = PaddedMatrix::new(&tiny, 8);
+        assert_eq!(normmap_with_density(&pt).density[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn dense_like_reports_full_density() {
+        let m = Matrix::randn(64, 64, 7);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = NormMap::dense_like(normmap(&p));
+        assert_eq!((nm.tile_rows(), nm.tile_cols()), (2, 2));
+        for ti in 0..2 {
+            for tj in 0..2 {
+                assert_eq!(nm.density[(ti, tj)], 1.0);
             }
         }
     }

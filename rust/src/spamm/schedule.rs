@@ -10,6 +10,24 @@
 
 use crate::error::{Error, Result};
 use crate::matrix::Matrix;
+use crate::spamm::normmap::NormMap;
+
+/// Execution strategy of one surviving tile product, chosen from the
+/// operand tiles' density census (see [`NormMap`]).
+///
+/// * `Dense` — the historical batched tile-GEMM path; always correct.
+/// * `Sparse` — both operand tiles fall below the density threshold, so
+///   the product stages COO-compressed payloads and runs the sparse tile
+///   kernel (`sparse::spgemm` semantics).
+/// * `Packed` — a run of ≥ 2 consecutive `Sparse` products of the same
+///   output tile, fused into a single wider sparse dispatch
+///   (`C[i,j] += [A_ik…]·[B_kj…]` as one (L×nL)·(nL×L) product).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileStrategy {
+    Dense,
+    Sparse,
+    Packed,
+}
 
 /// Compacted SpAMM schedule for C = A·B with BDIM-tiled operands.
 #[derive(Clone, Debug)]
@@ -20,11 +38,17 @@ pub struct Schedule {
     pub tile_k: usize,
     /// Per output tile (row-major), the compacted list of surviving k.
     pub valid_k: Vec<Vec<u32>>,
+    /// Parallel to `valid_k`: the strategy of each surviving product.
+    /// `Schedule::build` fills all-`Dense`; `build_adaptive` assigns
+    /// `Sparse`/`Packed` from the operands' density census.
+    pub strategies: Vec<Vec<TileStrategy>>,
 }
 
 impl Schedule {
     /// Build from normmaps: na is (tile_rows × tile_k), nb is
-    /// (tile_k × tile_cols).
+    /// (tile_k × tile_cols).  Every product gets the `Dense` strategy —
+    /// this is the historical all-dense schedule, bitwise identical to
+    /// `build_adaptive` with a zero density threshold.
     pub fn build(na: &Matrix, nb: &Matrix, tau: f32) -> Result<Schedule> {
         if na.cols() != nb.rows() {
             return Err(Error::Shape(format!(
@@ -50,12 +74,90 @@ impl Schedule {
                 valid_k.push(ks);
             }
         }
+        let strategies = valid_k
+            .iter()
+            .map(|ks| vec![TileStrategy::Dense; ks.len()])
+            .collect();
         Ok(Schedule {
             tile_rows: tr,
             tile_cols: tc,
             tile_k: tk,
             valid_k,
+            strategies,
         })
+    }
+
+    /// Build with density-adaptive per-product strategies.  τ-culling is
+    /// identical to [`Schedule::build`] over `na.norms`/`nb.norms`; on top
+    /// of it a product A[i,k]·B[k,j] goes `Sparse` when **both** operand
+    /// tiles' densities fall *strictly below* `density_threshold` (strict,
+    /// so a zero threshold never selects sparse and the schedule is
+    /// bitwise the all-dense one), and runs of ≥ 2 consecutive `Sparse`
+    /// products in one output tile's k-list are promoted to `Packed`.
+    pub fn build_adaptive(
+        na: &NormMap,
+        nb: &NormMap,
+        tau: f32,
+        density_threshold: f32,
+    ) -> Result<Schedule> {
+        let mut s = Schedule::build(&na.norms, &nb.norms, tau)?;
+        if density_threshold <= 0.0 {
+            return Ok(s);
+        }
+        for i in 0..s.tile_rows {
+            for j in 0..s.tile_cols {
+                let slot = i * s.tile_cols + j;
+                let ks = &s.valid_k[slot];
+                let strat = &mut s.strategies[slot];
+                for (pos, &k) in ks.iter().enumerate() {
+                    let k = k as usize;
+                    if na.density[(i, k)] < density_threshold
+                        && nb.density[(k, j)] < density_threshold
+                    {
+                        strat[pos] = TileStrategy::Sparse;
+                    }
+                }
+                // Promote runs of ≥2 consecutive Sparse to Packed.
+                let mut pos = 0;
+                while pos < strat.len() {
+                    if strat[pos] != TileStrategy::Sparse {
+                        pos += 1;
+                        continue;
+                    }
+                    let mut end = pos + 1;
+                    while end < strat.len() && strat[end] == TileStrategy::Sparse {
+                        end += 1;
+                    }
+                    if end - pos >= 2 {
+                        for s in &mut strat[pos..end] {
+                            *s = TileStrategy::Packed;
+                        }
+                    }
+                    pos = end;
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// (dense, sparse, packed) product counts over the whole schedule.
+    pub fn strategy_counts(&self) -> (usize, usize, usize) {
+        let (mut d, mut s, mut p) = (0, 0, 0);
+        for strat in &self.strategies {
+            for t in strat {
+                match t {
+                    TileStrategy::Dense => d += 1,
+                    TileStrategy::Sparse => s += 1,
+                    TileStrategy::Packed => p += 1,
+                }
+            }
+        }
+        (d, s, p)
+    }
+
+    /// The strategies parallel to `ks(i, j)`.
+    pub fn strategies_for(&self, i: usize, j: usize) -> &[TileStrategy] {
+        &self.strategies[i * self.tile_cols + j]
     }
 
     /// The paper's *valid multiplication* count v for tile (i, j) (§3.5.1).
@@ -123,11 +225,15 @@ impl Schedule {
         tiles: impl IntoIterator<Item = (usize, usize)> + 'a,
     ) -> impl Iterator<Item = ProductRef> + 'a {
         tiles.into_iter().flat_map(move |(i, j)| {
-            self.ks(i, j).iter().map(move |&k| ProductRef {
-                a: (i, k as usize),
-                b: (k as usize, j),
-                c: (i, j),
-            })
+            self.ks(i, j)
+                .iter()
+                .zip(self.strategies_for(i, j))
+                .map(move |(&k, &strategy)| ProductRef {
+                    a: (i, k as usize),
+                    b: (k as usize, j),
+                    c: (i, j),
+                    strategy,
+                })
         })
     }
 }
@@ -138,6 +244,8 @@ pub struct ProductRef {
     pub a: (usize, usize),
     pub b: (usize, usize),
     pub c: (usize, usize),
+    /// How the executor should stage and run this product.
+    pub strategy: TileStrategy,
 }
 
 #[cfg(test)]
@@ -259,5 +367,73 @@ mod tests {
         let na = nm(2, 3, |_, _| 1.0);
         let nb = nm(2, 2, |_, _| 1.0);
         assert!(Schedule::build(&na, &nb, 0.0).is_err());
+    }
+
+    #[test]
+    fn adaptive_zero_threshold_matches_dense_build() {
+        let norms_a = nm(3, 4, |i, k| (i + k) as f32 + 0.5);
+        let norms_b = nm(4, 3, |k, j| (k * j) as f32 + 0.25);
+        // Low density everywhere: would go sparse at any positive threshold.
+        let na = NormMap {
+            norms: norms_a.clone(),
+            density: nm(3, 4, |_, _| 0.01),
+        };
+        let nb = NormMap {
+            norms: norms_b.clone(),
+            density: nm(4, 3, |_, _| 0.01),
+        };
+        let adaptive = Schedule::build_adaptive(&na, &nb, 1.0, 0.0).unwrap();
+        let dense = Schedule::build(&norms_a, &norms_b, 1.0).unwrap();
+        assert_eq!(adaptive.valid_k, dense.valid_k);
+        assert_eq!(adaptive.strategy_counts().0, adaptive.valid_products());
+        assert_eq!(adaptive.strategy_counts().1 + adaptive.strategy_counts().2, 0);
+    }
+
+    #[test]
+    fn adaptive_requires_both_operands_sparse() {
+        let norms = nm(1, 2, |_, _| 1.0);
+        let norms_b = nm(2, 1, |_, _| 1.0);
+        // A tiles sparse, B tile k=0 dense, k=1 sparse → only k=1 product
+        // may leave the dense path (single product: Sparse, not Packed).
+        let na = NormMap {
+            norms,
+            density: nm(1, 2, |_, _| 0.1),
+        };
+        let nb = NormMap {
+            norms: norms_b,
+            density: nm(2, 1, |k, _| if k == 0 { 0.9 } else { 0.1 }),
+        };
+        let s = Schedule::build_adaptive(&na, &nb, 0.0, 0.5).unwrap();
+        assert_eq!(s.strategies_for(0, 0), &[TileStrategy::Dense, TileStrategy::Sparse]);
+    }
+
+    #[test]
+    fn adaptive_packs_consecutive_sparse_runs() {
+        // 4 products for one output tile; k=1..=2 dense-blocked in the
+        // middle would split the run. Here densities: sparse, sparse,
+        // dense, sparse → [Packed, Packed, Dense, Sparse].
+        let na = NormMap {
+            norms: nm(1, 4, |_, _| 1.0),
+            density: nm(1, 4, |_, k| if k == 2 { 0.9 } else { 0.1 }),
+        };
+        let nb = NormMap {
+            norms: nm(4, 1, |_, _| 1.0),
+            density: nm(4, 1, |_, _| 0.1),
+        };
+        let s = Schedule::build_adaptive(&na, &nb, 0.0, 0.5).unwrap();
+        assert_eq!(
+            s.strategies_for(0, 0),
+            &[
+                TileStrategy::Packed,
+                TileStrategy::Packed,
+                TileStrategy::Dense,
+                TileStrategy::Sparse,
+            ]
+        );
+        assert_eq!(s.strategy_counts(), (1, 1, 2));
+        // products_for_tiles carries the strategy through.
+        let prods: Vec<ProductRef> = s.products_for_tiles([(0, 0)]).collect();
+        assert_eq!(prods[0].strategy, TileStrategy::Packed);
+        assert_eq!(prods[2].strategy, TileStrategy::Dense);
     }
 }

@@ -127,6 +127,94 @@ impl CscMatrix {
     }
 }
 
+/// Pack one row-major tile buffer into the COO wire payload the executor
+/// stages sparse-strategy tiles in: `[nnz, idx0, val0, idx1, val1, …]`,
+/// entries in row-major scan order, `idx = r·cols + c` stored as an exact
+/// f32 (tile linear indices stay far below 2²⁴, so the conversion is
+/// lossless).  An entry is kept when `|x| > floor`; with `floor == 0.0`
+/// the keep test is on the *bit pattern* instead (`to_bits() != 0`), so
+/// `-0.0` survives and [`unpack_tile`] reproduces the tile bitwise.
+pub fn pack_tile(tile: &[f32], cols: usize, floor: f32) -> Vec<f32> {
+    let keep = |x: f32| {
+        if floor == 0.0 {
+            x.to_bits() != 0
+        } else {
+            x.abs() > floor
+        }
+    };
+    debug_assert_eq!(tile.len() % cols.max(1), 0);
+    let mut out = vec![0.0f32];
+    let mut nnz = 0usize;
+    for (i, &x) in tile.iter().enumerate() {
+        if keep(x) {
+            out.push(i as f32);
+            out.push(x);
+            nnz += 1;
+        }
+    }
+    out[0] = nnz as f32;
+    out
+}
+
+/// Entry count of a [`pack_tile`] payload.
+pub fn packed_nnz(packed: &[f32]) -> usize {
+    packed.first().map(|&n| n as usize).unwrap_or(0)
+}
+
+/// Scatter a [`pack_tile`] payload back into a zeroed row-major buffer of
+/// `elems` entries.  Inverse of `pack_tile` bitwise when packing used a
+/// zero floor (dropped entries were exactly `+0.0`).
+pub fn unpack_tile(packed: &[f32], elems: usize, dst: &mut [f32]) -> Result<()> {
+    if dst.len() < elems {
+        return Err(Error::Shape(format!(
+            "unpack_tile: dst {} < elems {elems}",
+            dst.len()
+        )));
+    }
+    let nnz = packed_nnz(packed);
+    if packed.len() < 1 + 2 * nnz {
+        return Err(Error::Shape(format!(
+            "unpack_tile: payload {} too short for nnz {nnz}",
+            packed.len()
+        )));
+    }
+    dst[..elems].fill(0.0);
+    for pair in packed[1..1 + 2 * nnz].chunks_exact(2) {
+        let idx = pair[0] as usize;
+        if idx >= elems {
+            return Err(Error::Shape(format!(
+                "unpack_tile: index {idx} out of range {elems}"
+            )));
+        }
+        dst[idx] = pair[1];
+    }
+    Ok(())
+}
+
+/// Convert a packed tile payload to a [`CooMatrix`] over the tile's
+/// logical (rows × cols) shape — the bridge from the staged wire format
+/// to the [`spgemm`](crate::sparse::spgemm::spgemm) host kernel.
+pub fn packed_to_coo(packed: &[f32], rows: usize, cols: usize) -> Result<CooMatrix> {
+    let nnz = packed_nnz(packed);
+    if packed.len() < 1 + 2 * nnz {
+        return Err(Error::Shape(format!(
+            "packed_to_coo: payload {} too short for nnz {nnz}",
+            packed.len()
+        )));
+    }
+    let mut entries = Vec::with_capacity(nnz);
+    for pair in packed[1..1 + 2 * nnz].chunks_exact(2) {
+        let idx = pair[0] as usize;
+        if idx >= rows * cols {
+            return Err(Error::Shape(format!(
+                "packed_to_coo: index {idx} out of range {rows}x{cols}"
+            )));
+        }
+        entries.push((idx / cols, idx % cols, pair[1]));
+    }
+    Ok(CooMatrix { rows, cols, entries })
+}
+
 /// SpMM: sparse (CSR) × dense → dense — cuSPARSE's sparse-dense workhorse,
 /// used when only one operand of a near-sparse product truncates well.
 pub fn spmm(a: &CsrMatrix, b: &Matrix) -> Result<Matrix> {
@@ -205,6 +293,43 @@ mod tests {
     fn spmm_shape_mismatch() {
         let csr = CsrMatrix::from_dense(&Matrix::zeros(3, 4), 0.0);
         assert!(spmm(&csr, &Matrix::zeros(5, 2)).is_err());
+    }
+
+    #[test]
+    fn pack_tile_roundtrips_bitwise_at_zero_floor() {
+        let mut tile = vec![0.0f32; 8 * 8];
+        tile[3] = 1.5;
+        tile[9] = -0.0; // negative zero must survive a zero-floor pack
+        tile[63] = -2.5;
+        let packed = pack_tile(&tile, 8, 0.0);
+        assert_eq!(packed_nnz(&packed), 3);
+        let mut back = vec![7.0f32; 8 * 8];
+        unpack_tile(&packed, 64, &mut back).unwrap();
+        for (a, b) in tile.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Positive floor drops sub-floor magnitudes.
+        let packed = pack_tile(&tile, 8, 2.0);
+        assert_eq!(packed_nnz(&packed), 1);
+    }
+
+    #[test]
+    fn packed_to_coo_matches_dense_scan() {
+        let m = {
+            let mut m = Matrix::randn(8, 8, 5);
+            m.truncate(0.8);
+            m
+        };
+        let packed = pack_tile(m.data(), 8, 0.0);
+        let coo = packed_to_coo(&packed, 8, 8).unwrap();
+        assert_eq!(coo.to_dense(), m);
+        // Corrupt index caught.
+        let mut bad = packed.clone();
+        if packed_nnz(&bad) > 0 {
+            bad[1] = 1e6;
+            assert!(packed_to_coo(&bad, 8, 8).is_err());
+            assert!(unpack_tile(&bad, 64, &mut vec![0.0; 64]).is_err());
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 pub mod formats;
 pub mod spgemm;
 
-pub use formats::{spmm, CooMatrix, CscMatrix};
+pub use formats::{pack_tile, packed_nnz, packed_to_coo, spmm, unpack_tile, CooMatrix, CscMatrix};
+pub use spgemm::{spgemm, spgemm_flops};
 
 use crate::error::{Error, Result};
 use crate::matrix::Matrix;

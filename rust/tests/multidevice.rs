@@ -14,6 +14,7 @@ use cuspamm::coordinator::{Approx, Coordinator, SpammSession};
 use cuspamm::matrix::Matrix;
 use cuspamm::spamm::power::spamm_power;
 use cuspamm::spamm::purification::{initial_density, mcweeny_purify};
+use cuspamm::util::prng::Rng;
 
 use common::bundle;
 
@@ -280,6 +281,198 @@ fn more_devices_than_tiles_execute_everywhere() {
         )
         .unwrap();
         assert_eq!(power.value.data(), ref_power.value.data());
+    }
+}
+
+/// Low-density, high-norm workload: every `lonum`-sized tile holds
+/// `spikes` large entries at seeded positions, so τ never prunes a tile
+/// yet every tile sits far below any reasonable density threshold — the
+/// regime where the adaptive executor routes everything off the dense
+/// path.
+fn scattered(n: usize, lonum: usize, spikes: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::zeros(n, n);
+    let mut rng = Rng::new(seed);
+    let tiles = n.div_ceil(lonum);
+    for ti in 0..tiles {
+        for tj in 0..tiles {
+            for _ in 0..spikes {
+                let r = (ti * lonum + rng.below(lonum)).min(n - 1);
+                let c = (tj * lonum + rng.below(lonum)).min(n - 1);
+                let mag = rng.range_f32(0.25, 1.0);
+                m[(r, c)] = if rng.next_u64() & 1 == 0 { mag } else { -mag };
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn density_threshold_zero_is_bitwise_inert_on_every_path() {
+    // --density-threshold 0 must reproduce the classic executor exactly:
+    // multiply, prepared-plan session submits, and expression graphs all
+    // stay bitwise identical to the default config across device counts.
+    let b = bundle();
+    let a = Matrix::decay_exponential(160, 1.0, 0.5, 51);
+    let x = Matrix::decay_exponential(160, 1.0, 0.5, 52);
+    let p0 = initial_density(128, 53);
+    let tau = 1e-4f32;
+    let reference = Coordinator::new(&b, SpammConfig::default())
+        .unwrap()
+        .multiply(&a, &x, tau)
+        .unwrap();
+    let ref_power = spamm_power(
+        &Coordinator::new(&b, SpammConfig::default()).unwrap(),
+        &a,
+        3,
+        tau,
+    )
+    .unwrap();
+    let ref_purify = mcweeny_purify(
+        &Coordinator::new(&b, SpammConfig::default()).unwrap(),
+        &p0,
+        tau,
+        3,
+        0.0,
+    )
+    .unwrap();
+    for devices in DEVICES {
+        let mut cfg = cfg_with(devices, Balance::RowBlock);
+        cfg.density_threshold = 0.0;
+        let coord = Coordinator::new(&b, cfg.clone()).unwrap();
+        let rep = coord.multiply(&a, &x, tau).unwrap();
+        assert_eq!(
+            rep.c.data(),
+            reference.c.data(),
+            "threshold-0 multiply diverged at devices={devices}"
+        );
+        assert_eq!(
+            rep.stage.sparse_products + rep.stage.packed_products,
+            0,
+            "threshold 0 must never route off the dense path"
+        );
+        assert_eq!(rep.stage.format_saved_bytes, 0);
+
+        let s = SpammSession::new(&b, cfg.clone()).unwrap();
+        let ida = s.put(&a).unwrap();
+        let idx = s.put(&x).unwrap();
+        let plan = s.prepare(ida, idx, Approx::Tau(tau)).unwrap();
+        let done = s.wait(s.submit(plan).unwrap()).unwrap();
+        assert_eq!(
+            done.c.data(),
+            reference.c.data(),
+            "threshold-0 session submit diverged at devices={devices}"
+        );
+
+        let power = spamm_power(&coord, &a, 3, tau).unwrap();
+        assert_eq!(
+            power.value.data(),
+            ref_power.value.data(),
+            "threshold-0 expr power diverged at devices={devices}"
+        );
+        let purify = mcweeny_purify(&coord, &p0, tau, 3, 0.0).unwrap();
+        assert_eq!(
+            purify.p.data(),
+            ref_purify.p.data(),
+            "threshold-0 expr purify diverged at devices={devices}"
+        );
+    }
+}
+
+#[test]
+fn mixed_format_multiply_is_bitwise_identical_across_devices() {
+    // With formats actually routing (scattered-sparse workload, threshold
+    // 0.5), the partition must still never change a bit, and the result
+    // must agree with the all-dense executor to f32 accumulation noise.
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let a = scattered(n, b.lonum, 8, 61);
+    let x = scattered(n, b.lonum, 8, 62);
+    let mut cfg = cfg_with(1, Balance::RowBlock);
+    cfg.density_threshold = 0.5;
+    let reference = Coordinator::new(&b, cfg.clone())
+        .unwrap()
+        .multiply(&a, &x, 0.0)
+        .unwrap();
+    assert!(
+        reference.stage.sparse_products + reference.stage.packed_products > 0,
+        "scattered workload at threshold 0.5 must route off the dense path"
+    );
+    assert!(reference.stage.format_saved_bytes > 0);
+    let dense = Coordinator::new(&b, cfg_with(1, Balance::RowBlock))
+        .unwrap()
+        .multiply(&a, &x, 0.0)
+        .unwrap();
+    let err = reference.c.error_fnorm(&dense.c).unwrap();
+    assert!(
+        err <= 1e-5 * dense.c.fnorm().max(1.0),
+        "mixed-format result drifted from dense executor: rel {err}"
+    );
+    for devices in DEVICES {
+        for policy in POLICIES {
+            let mut dcfg = cfg_with(devices, policy);
+            dcfg.density_threshold = 0.5;
+            let coord = Coordinator::new(&b, dcfg).unwrap();
+            let rep = coord.multiply(&a, &x, 0.0).unwrap();
+            assert_eq!(
+                rep.c.data(),
+                reference.c.data(),
+                "mixed-format multiply diverged at devices={devices} policy={policy:?}"
+            );
+            // Format routing is schedule-driven, so the mix is identical
+            // on every partition of the same schedule.
+            assert_eq!(
+                (
+                    rep.stage.dense_products,
+                    rep.stage.sparse_products,
+                    rep.stage.packed_products
+                ),
+                (
+                    reference.stage.dense_products,
+                    reference.stage.sparse_products,
+                    reference.stage.packed_products
+                ),
+                "format mix changed with the partition at devices={devices} policy={policy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_format_session_and_expr_are_bitwise_identical_across_devices() {
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let a = scattered(n, b.lonum, 8, 63);
+    let x = scattered(n, b.lonum, 8, 64);
+    let mut cfg1 = cfg_with(1, Balance::RowBlock);
+    cfg1.density_threshold = 0.5;
+    let ref_mul = Coordinator::new(&b, cfg1.clone())
+        .unwrap()
+        .multiply(&a, &x, 0.0)
+        .unwrap();
+    let ref_power = spamm_power(&Coordinator::new(&b, cfg1.clone()).unwrap(), &a, 3, 0.0).unwrap();
+    for devices in DEVICES {
+        let mut cfg = cfg_with(devices, Balance::RowBlock);
+        cfg.density_threshold = 0.5;
+        let s = SpammSession::new(&b, cfg.clone()).unwrap();
+        let ida = s.put(&a).unwrap();
+        let idx = s.put(&x).unwrap();
+        let plan = s.prepare(ida, idx, Approx::Tau(0.0)).unwrap();
+        let cold = s.wait(s.submit(plan).unwrap()).unwrap();
+        let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+        for (tag, c) in [("cold", &cold), ("warm", &warm)] {
+            assert_eq!(
+                c.c.data(),
+                ref_mul.c.data(),
+                "mixed-format session {tag} diverged at devices={devices}"
+            );
+        }
+        let coord = Coordinator::new(&b, cfg).unwrap();
+        let power = spamm_power(&coord, &a, 3, 0.0).unwrap();
+        assert_eq!(
+            power.value.data(),
+            ref_power.value.data(),
+            "mixed-format expr power diverged at devices={devices}"
+        );
     }
 }
 

@@ -13,6 +13,7 @@ use cuspamm::spamm::normmap::normmap;
 use cuspamm::spamm::reference::{spamm_flat_host, spamm_recursive};
 use cuspamm::spamm::schedule::Schedule;
 use cuspamm::spamm::tuner::{tune_tau, TuneParams};
+use cuspamm::sparse::formats::{pack_tile, packed_nnz, unpack_tile};
 use cuspamm::sparse::spgemm::spgemm;
 use cuspamm::sparse::CsrMatrix;
 use cuspamm::util::bf16;
@@ -433,6 +434,77 @@ fn prop_csr_roundtrip_and_spgemm() {
             let err = got.to_dense().error_fnorm(&want).unwrap();
             if err > 1e-3 * want.fnorm().max(1.0) {
                 return Err(format!("spgemm err {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_unpack_roundtrips_bitwise_at_zero_floor() {
+    // The executor stages Sparse/Packed tiles through pack_tile at a
+    // zero floor; bitwise inversion (including -0.0) is what makes the
+    // threshold-0 conformance guarantee meaningful.
+    forall_ok(
+        cfg(20),
+        |rng: &mut Rng| {
+            let l = gen::usize_in(rng, 1, 32);
+            (l, gen::f32_in(rng, 0.0, 1.2), rng.next_u64())
+        },
+        |&(l, trunc, seed)| {
+            let mut tile = Matrix::randn(l, l, seed);
+            tile.truncate(trunc); // introduces exact +0.0 entries
+            let mut data = tile.data().to_vec();
+            if !data.is_empty() {
+                data[0] = -0.0; // -0.0 must survive a zero-floor pack
+            }
+            let packed = pack_tile(&data, l, 0.0);
+            let kept = data.iter().filter(|x| x.to_bits() != 0).count();
+            if packed_nnz(&packed) != kept {
+                return Err(format!(
+                    "l={l}: packed nnz {} != bit-pattern census {kept}",
+                    packed_nnz(&packed)
+                ));
+            }
+            let mut back = vec![f32::NAN; l * l];
+            unpack_tile(&packed, l * l, &mut back).map_err(|e| e.to_string())?;
+            for (i, (a, b)) in data.iter().zip(&back).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("l={l} elem {i}: {a} != {b} bitwise"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_positive_floor_keeps_exactly_above_floor() {
+    // With a positive floor the payload must hold exactly the entries
+    // whose magnitude strictly exceeds it — pinned on decay tiles,
+    // whose envelope sweeps magnitudes across the floor smoothly.
+    forall_ok(
+        cfg(15),
+        |rng: &mut Rng| (gen::f32_in(rng, 1e-4, 0.5), rng.next_u64()),
+        |&(floor, seed)| {
+            let m = Matrix::decay_exponential(32, 1.0, 0.2, seed);
+            let packed = pack_tile(m.data(), 32, floor);
+            let want: Vec<f32> = m
+                .data()
+                .iter()
+                .map(|&x| if x.abs() > floor { x } else { 0.0 })
+                .collect();
+            let kept = want.iter().filter(|&&x| x != 0.0).count();
+            if packed_nnz(&packed) != kept {
+                return Err(format!(
+                    "floor={floor}: nnz {} != census {kept}",
+                    packed_nnz(&packed)
+                ));
+            }
+            let mut back = vec![0.0f32; 32 * 32];
+            unpack_tile(&packed, 32 * 32, &mut back).map_err(|e| e.to_string())?;
+            if back != want {
+                return Err(format!("floor={floor}: floored reconstruction mismatch"));
             }
             Ok(())
         },

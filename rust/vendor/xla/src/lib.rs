@@ -262,6 +262,13 @@ enum OpSpec {
     Tune { bdim: usize },
     /// Fused SpAMM: normmaps + masked tile multiply in one call.
     SpammFused { n: usize, lonum: usize, bf16: bool },
+    /// Sparse tile product over COO-packed operands: C[l,l] += A·B where
+    /// A is l×(run·l) and B is (run·l)×l, both given as padded
+    /// (values, linear-indices) arrays of capacity `cap` plus a 2-entry
+    /// meta array holding the live entry counts.  `run > 1` is the packed
+    /// path: a fused run of `run` sparse tile-pair products dispatched as
+    /// one wider contraction.
+    Sptile { lonum: usize, run: usize, cap: usize },
 }
 
 fn parse_usize(kv: &BTreeMap<String, String>, key: &str) -> Result<usize> {
@@ -324,6 +331,11 @@ impl OpSpec {
                 n: parse_usize(&kv, "n")?,
                 lonum: parse_usize(&kv, "lonum")?,
                 bf16: parse_bf16(&kv),
+            }),
+            Some("sptile") => Ok(OpSpec::Sptile {
+                lonum: parse_usize(&kv, "lonum")?,
+                run: parse_usize(&kv, "run")?,
+                cap: parse_usize(&kv, "cap")?,
             }),
             Some(other) => Err(Error::new(format!("hostsim spec: unknown kind '{other}'"))),
             None => Err(Error::new("hostsim spec missing 'kind'")),
@@ -399,6 +411,31 @@ impl OpSpec {
                 Ok(vec![Literal::array(
                     vec![n, n],
                     spamm_fused(&a, &b, tau, n, lonum),
+                )])
+            }
+            OpSpec::Sptile { lonum, run, cap } => {
+                let a_vals = expect_input(inputs, 0, &[cap])?;
+                let a_idx = expect_input(inputs, 1, &[cap])?;
+                let b_vals = expect_input(inputs, 2, &[cap])?;
+                let b_idx = expect_input(inputs, 3, &[cap])?;
+                let meta = expect_input(inputs, 4, &[2])?;
+                expect_arity(inputs, 5)?;
+                let (a_nnz, b_nnz) = (meta[0] as usize, meta[1] as usize);
+                if a_nnz > cap || b_nnz > cap {
+                    return Err(Error::new(format!(
+                        "sptile: nnz ({a_nnz}, {b_nnz}) exceeds capacity {cap}"
+                    )));
+                }
+                Ok(vec![Literal::array(
+                    vec![lonum, lonum],
+                    sptile(
+                        &a_vals[..a_nnz],
+                        &a_idx[..a_nnz],
+                        &b_vals[..b_nnz],
+                        &b_idx[..b_nnz],
+                        lonum,
+                        run * lonum,
+                    )?,
                 )])
             }
         }
@@ -573,6 +610,47 @@ fn spamm_fused(a: &[f32], b: &[f32], tau: f32, n: usize, lonum: usize) -> Vec<f3
     out
 }
 
+/// Sparse tile contraction: C[l×l] = A[l×kw]·B[kw×l] over COO entry lists
+/// (values + row-major linear indices).  Gustavson row-wise order: B is
+/// bucketed by contraction row, then A entries stream in stored order —
+/// the same accumulation order per output element as a CSR SpGEMM over
+/// the same sorted entries, which is the host-fallback contract.
+fn sptile(
+    a_vals: &[f32],
+    a_idx: &[f32],
+    b_vals: &[f32],
+    b_idx: &[f32],
+    l: usize,
+    kw: usize,
+) -> Result<Vec<f32>> {
+    let mut b_rows: Vec<Vec<(usize, f32)>> = vec![Vec::new(); kw];
+    for (&idx, &v) in b_idx.iter().zip(b_vals) {
+        let idx = idx as usize;
+        let (r, c) = (idx / l, idx % l);
+        if r >= kw {
+            return Err(Error::new(format!(
+                "sptile: B index {idx} out of range {kw}x{l}"
+            )));
+        }
+        b_rows[r].push((c, v));
+    }
+    let mut out = vec![0.0f32; l * l];
+    for (&idx, &av) in a_idx.iter().zip(a_vals) {
+        let idx = idx as usize;
+        let (r, k) = (idx / kw, idx % kw);
+        if r >= l {
+            return Err(Error::new(format!(
+                "sptile: A index {idx} out of range {l}x{kw}"
+            )));
+        }
+        let crow = &mut out[r * l..(r + 1) * l];
+        for &(c, bv) in &b_rows[k] {
+            crow[c] += av * bv;
+        }
+    }
+    Ok(out)
+}
+
 fn copy_tile(m: &[f32], n: usize, ti: usize, tj: usize, l: usize, dst: &mut [f32]) {
     for r in 0..l {
         let src = &m[(ti * l + r) * n + tj * l..][..l];
@@ -680,6 +758,45 @@ mod tests {
         .unwrap();
         let ratio = out[1].to_vec::<f32>().unwrap()[0];
         assert!((ratio - 0.25).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sptile_matches_dense_contraction() {
+        // run=2, lonum=2: A is 2x4 with entries (0,0)=2 and (1,3)=3;
+        // B is 4x2 with entries (0,1)=5 and (3,0)=7.
+        // C = A·B → C[0,1] = 2·5 = 10, C[1,0] = 3·7 = 21.
+        let spec = "hostsim v1\nkind = sptile\nlonum = 2\nrun = 2\ncap = 4";
+        let a_vals = lit(&[4], &[2.0, 3.0, 0.0, 0.0]);
+        let a_idx = lit(&[4], &[0.0, 7.0, 0.0, 0.0]); // linear over 2x4
+        let b_vals = lit(&[4], &[5.0, 7.0, 0.0, 0.0]);
+        let b_idx = lit(&[4], &[1.0, 6.0, 0.0, 0.0]); // linear over 4x2
+        let meta = lit(&[2], &[2.0, 2.0]);
+        let out = run(spec, &[a_vals, a_idx, b_vals, b_idx, meta]).unwrap();
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![0.0, 10.0, 21.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn sptile_rejects_overflow_and_bad_indices() {
+        let spec = "hostsim v1\nkind = sptile\nlonum = 2\nrun = 1\ncap = 2";
+        let zeros = lit(&[2], &[0.0, 0.0]);
+        // nnz beyond capacity.
+        let meta = lit(&[2], &[3.0, 0.0]);
+        assert!(run(
+            spec,
+            &[zeros.clone(), zeros.clone(), zeros.clone(), zeros.clone(), meta]
+        )
+        .is_err());
+        // Out-of-range A index.
+        let bad_idx = lit(&[2], &[99.0, 0.0]);
+        let meta = lit(&[2], &[1.0, 0.0]);
+        assert!(run(
+            spec,
+            &[zeros.clone(), bad_idx, zeros.clone(), zeros, meta]
+        )
+        .is_err());
     }
 
     #[test]
