@@ -251,7 +251,51 @@ impl BenchRecord {
         }
         Ok(mismatches)
     }
+
+    /// Compare this record's `info` timings against a baseline's and
+    /// return *warnings* for gross slowdowns.  Timings are
+    /// machine-dependent, so this is deliberately loose — only a
+    /// `_secs` field both at least [`TREND_FLOOR_SECS`] and more than
+    /// [`TREND_RATIO`]× the baseline is flagged — and deliberately
+    /// non-failing: the caller prints the warnings, it does not gate on
+    /// them.  A baseline without an `info` section (or with non-timing
+    /// keys only) yields no warnings.
+    pub fn timing_trends_against(&self, baseline: &Path) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(baseline)
+            .map_err(|e| Error::Config(format!("baseline {}: {e}", baseline.display())))?;
+        let doc = Value::parse(&text)?;
+        let Ok(pinned) = doc.get("info").and_then(|v| v.as_object()) else {
+            return Ok(Vec::new());
+        };
+        let mut warnings = Vec::new();
+        for (key, was) in pinned {
+            if !key.ends_with("_secs") {
+                continue;
+            }
+            let Ok(was) = was.as_f64() else { continue };
+            let Some(&now) = self.info.get(key) else {
+                continue;
+            };
+            if now >= TREND_FLOOR_SECS && was > 0.0 && now > was * TREND_RATIO {
+                warnings.push(format!(
+                    "{}: {key} = {now:.4}s vs baseline {was:.4}s (>{TREND_RATIO}x; \
+                     timings are informational — not a failure)",
+                    self.name
+                ));
+            }
+        }
+        Ok(warnings)
+    }
 }
+
+/// Slowdown ratio above which [`BenchRecord::timing_trends_against`]
+/// warns.  Generous on purpose: CI machines vary wildly, and the check
+/// exists to catch order-of-magnitude regressions, not jitter.
+pub const TREND_RATIO: f64 = 3.0;
+
+/// Absolute floor below which timings are never trend-checked — a 1 ms
+/// op tripling is noise, not a trend.
+pub const TREND_FLOOR_SECS: f64 = 0.05;
 
 /// Format seconds for tables (μs/ms/s autoscale).
 pub fn fmt_secs(s: f64) -> String {
@@ -334,6 +378,37 @@ mod tests {
         )
         .unwrap();
         assert!(r.check_against(&path).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timing_trends_warn_only_on_gross_slowdowns() {
+        let dir = std::env::temp_dir().join(format!("cuspamm_benchtrend_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_trend.json");
+        std::fs::write(
+            &path,
+            r#"{"bench":"trend","deterministic":{},
+               "info":{"warm_secs":0.1,"tiny_secs":0.001,"count":5}}"#,
+        )
+        .unwrap();
+        let mut r = BenchRecord::new("trend");
+        // Gross slowdown above the floor: warned.
+        r.info("warm_secs", 0.5);
+        // Tiny op tripling: below the floor, ignored.
+        r.info("tiny_secs", 0.004);
+        // Non-timing key: ignored even if it grew.
+        r.info("count", 50.0);
+        let w = r.timing_trends_against(&path).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("warm_secs"), "{w:?}");
+        // Within tolerance: silent.
+        let mut ok = BenchRecord::new("trend");
+        ok.info("warm_secs", 0.2);
+        assert!(ok.timing_trends_against(&path).unwrap().is_empty());
+        // Baseline without an info section: silent.
+        std::fs::write(&path, r#"{"bench":"trend","deterministic":{}}"#).unwrap();
+        assert!(r.timing_trends_against(&path).unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

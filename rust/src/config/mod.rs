@@ -107,6 +107,13 @@ pub struct SpammConfig {
     /// selector — every product takes the dense tile-GEMM path, bitwise
     /// identical to the pre-adaptive executor.
     pub density_threshold: f32,
+    /// `--density-threshold auto`: derive the threshold per operand pair
+    /// from the normmap density histogram
+    /// ([`crate::spamm::normmap::auto_density_threshold`] — largest-gap
+    /// split of the combined census) instead of the fixed
+    /// `density_threshold` value.  Explicit numeric values (and the
+    /// default 0) keep exact legacy behavior.
+    pub density_threshold_auto: bool,
     /// Run device pipelines one after another instead of concurrently.
     /// On a testbed whose simulated devices share physical cores the
     /// concurrent mode inflates each device's busy clock with contention;
@@ -132,6 +139,7 @@ impl Default for SpammConfig {
             store_budget: 1024 * 1024 * 1024,
             balance: Balance::Strided(4),
             density_threshold: 0.0,
+            density_threshold_auto: false,
             device_normmap: false,
             sequential_devices: false,
         }
@@ -153,7 +161,15 @@ impl SpammConfig {
             "device_mem_budget" => self.device_mem_budget = parse_bytes(key, value)?,
             "queue_depth" => self.queue_depth = parse_num(key, value)?,
             "store_budget" => self.store_budget = parse_bytes(key, value)?,
-            "density_threshold" => self.density_threshold = parse_unit_interval(key, value)?,
+            "density_threshold" => {
+                if value.trim() == "auto" {
+                    self.density_threshold_auto = true;
+                    self.density_threshold = 0.0;
+                } else {
+                    self.density_threshold = parse_unit_interval(key, value)?;
+                    self.density_threshold_auto = false;
+                }
+            }
             "device_normmap" => {
                 self.device_normmap = parse_bool(key, value)?;
             }
@@ -429,6 +445,20 @@ mod tests {
         assert!(c.validate().is_err());
         c.density_threshold = 1.0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn density_threshold_auto_keyword() {
+        let mut c = SpammConfig::default();
+        assert!(!c.density_threshold_auto);
+        c.apply("density_threshold", "auto").unwrap();
+        assert!(c.density_threshold_auto);
+        assert_eq!(c.density_threshold, 0.0);
+        c.validate().unwrap();
+        // An explicit value switches auto back off.
+        c.apply("density_threshold", "0.25").unwrap();
+        assert!(!c.density_threshold_auto);
+        assert_eq!(c.density_threshold, 0.25);
     }
 
     #[test]

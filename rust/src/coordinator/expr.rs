@@ -66,7 +66,7 @@ use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
     execute_batches, MultiplyStats, Operand, TileAccumulator, TileSource,
 };
-use crate::spamm::normmap::{normmap_with_density, NormMap};
+use crate::spamm::normmap::{normmap_with_density, resolve_density_threshold, NormMap};
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams};
 
@@ -296,11 +296,10 @@ impl ExprGraph {
                     // exact normmap was computed at scatter time — no
                     // host norm work at all.
                     front.norms_refreshed += 1;
-                    // Scatter-time norms carry no density census: treat
-                    // resident tiles as dense (never selects sparse).
-                    input_norms.push(Arc::new(NormMap::dense_like(
-                        (**v.inner.normmap()).clone(),
-                    )));
+                    // Scatter-time tiles carry a density census alongside
+                    // the norms, so resident inputs stay eligible for the
+                    // sparse tile path (they used to be forced dense).
+                    input_norms.push(Arc::new(v.inner.norm_density_map()));
                     bound_inputs.push(PlannedInput::Resident(v.clone()));
                 }
             }
@@ -407,23 +406,19 @@ impl ExprGraph {
                         (NodeKind::Operand { .. }, NodeKind::Operand { .. })
                     );
                     let pinned = inputs_exact || tau == 0.0;
+                    let dt = resolve_density_threshold(cfg, &na, &nb);
                     let sched = if pinned && cfg.cache_enabled {
                         caches.schedule_via(
                             Some(pa.fp),
                             Some(pb.fp),
                             tau,
-                            cfg.density_threshold,
+                            dt,
                             &na,
                             &nb,
                             &mut front,
                         )?
                     } else {
-                        Arc::new(Schedule::build_adaptive(
-                            &na,
-                            &nb,
-                            tau,
-                            cfg.density_threshold,
-                        )?)
+                        Arc::new(Schedule::build_adaptive(&na, &nb, tau, dt)?)
                     };
                     // Propagated bounds carry no density census — dense
                     // downstream, so provisional nodes never pick sparse
@@ -1075,23 +1070,19 @@ impl Coordinator {
                             let na = self.exact_norm(&va, &plan.nodes[a.0], &mut nstats)?;
                             let nb = self.exact_norm(&vb, &plan.nodes[b.0], &mut nstats)?;
                             let t_s = Instant::now();
+                            let dt = resolve_density_threshold(cfg, &na, &nb);
                             let sched = if cfg.cache_enabled {
                                 self.caches().schedule_via(
                                     Some(fa),
                                     Some(fb),
                                     tau,
-                                    cfg.density_threshold,
+                                    dt,
                                     &na,
                                     &nb,
                                     &mut nstats,
                                 )?
                             } else {
-                                Arc::new(Schedule::build_adaptive(
-                                    &na,
-                                    &nb,
-                                    tau,
-                                    cfg.density_threshold,
-                                )?)
+                                Arc::new(Schedule::build_adaptive(&na, &nb, tau, dt)?)
                             };
                             nstats.schedule_secs = t_s.elapsed().as_secs_f64();
                             sched
@@ -1457,23 +1448,19 @@ impl Coordinator {
                             let na = self.exact_norm(&va, &plan.nodes[a.0], &mut nstats)?;
                             let nb = self.exact_norm(&vb, &plan.nodes[b.0], &mut nstats)?;
                             let t_s = Instant::now();
+                            let dt = resolve_density_threshold(cfg, &na, &nb);
                             let sched = if cfg.cache_enabled {
                                 self.caches().schedule_via(
                                     Some(fa),
                                     Some(fb),
                                     tau,
-                                    cfg.density_threshold,
+                                    dt,
                                     &na,
                                     &nb,
                                     &mut nstats,
                                 )?
                             } else {
-                                Arc::new(Schedule::build_adaptive(
-                                    &na,
-                                    &nb,
-                                    tau,
-                                    cfg.density_threshold,
-                                )?)
+                                Arc::new(Schedule::build_adaptive(&na, &nb, tau, dt)?)
                             };
                             nstats.schedule_secs = t_s.elapsed().as_secs_f64();
                             sched
@@ -1851,11 +1838,11 @@ impl Coordinator {
             }
             RunVal::Resident(v) => {
                 stats.norms_refreshed += 1;
-                // Scatter-time norms have no density census — dense, so
-                // refreshed intermediates never pick the sparse path.
-                Ok(Arc::new(NormMap::dense_like(
-                    (**v.inner.normmap()).clone(),
-                )))
+                // Refresh norms *and* the density census from the
+                // scatter-time tiles, so rebuilt downstream schedules can
+                // still route genuinely sparse intermediates through the
+                // sparse tile path.
+                Ok(Arc::new(v.inner.norm_density_map()))
             }
         }
     }

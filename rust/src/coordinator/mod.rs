@@ -28,6 +28,6 @@ pub use service::Approx;
 pub use service::SpammService;
 pub use session::{
     Completion, ExprPlanId, ExprTicket, OperandId, PlanId, Priority, SpammSession, StoreStats,
-    Ticket,
+    Ticket, UpdateReport,
 };
 pub use summa::SummaCoordinator;

@@ -31,13 +31,13 @@ use crate::config::SpammConfig;
 use crate::error::{Error, Result};
 use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
-use crate::runtime::residency::ResidencyPool;
+use crate::runtime::residency::{PatchOutcome, ResidencyPool};
 use crate::runtime::{ArtifactBundle, Runtime};
-use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
+use crate::spamm::cache::{fingerprint, fingerprint_patch, ExecCaches, Fingerprint};
 use crate::spamm::executor::{
-    check_inner_dims, execute_batches, MultiplyStats, Operand, TileAccumulator,
+    check_inner_dims, execute_batches, MultiplyStats, Operand, OperandUpdate, TileAccumulator,
 };
-use crate::spamm::normmap::{normmap_with_density, NormMap};
+use crate::spamm::normmap::{normmap_with_density, resolve_density_threshold, NormMap};
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams, TuneResult};
 
@@ -178,15 +178,10 @@ impl Coordinator {
         let (nb, mut fb) = self.cached_normmap(&pb, &mut front)?;
         front.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let sched = self.caches.schedule_via(
-            fa,
-            fb,
-            tau,
-            self.cfg.density_threshold,
-            &na,
-            &nb,
-            &mut front,
-        )?;
+        let dt = resolve_density_threshold(&self.cfg, &na, &nb);
+        let sched = self
+            .caches
+            .schedule_via(fa, fb, tau, dt, &na, &nb, &mut front)?;
         front.schedule_secs = t.elapsed().as_secs_f64();
         let sched: &Schedule = &sched;
         // Residency keys on content fingerprints; compute them here even
@@ -266,6 +261,23 @@ impl Coordinator {
             resident,
             placed,
         )
+    }
+
+    /// Apply a delta update to a prepared operand — the multi-device twin
+    /// of [`crate::spamm::executor::SpammEngine::update_operand`].  Same
+    /// incremental pipeline (patch padded tiles → derive fingerprint →
+    /// patch cached norms → repair cached schedules), but the residency
+    /// migration runs once per device pool, since every device holds its
+    /// own partition of the operand's tiles.  The session front-end calls
+    /// this from the caller thread against the shared caches/pools.
+    pub fn update_operand(
+        &self,
+        padded: &PaddedMatrix,
+        fp: Fingerprint,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<OperandUpdate> {
+        apply_operand_update(&self.cfg, &self.caches, &self.pools, padded, fp, changed, data)
     }
 
     /// Phase 2 (Alg. 4 lines 10–11): partition the schedule's output
@@ -539,6 +551,57 @@ impl Coordinator {
             stage: MultiplyStats::default(),
         })
     }
+}
+
+/// The shared delta-update front half — what [`Coordinator::update_operand`]
+/// and the session's `update` both run: patch the padded operand, derive
+/// the new fingerprint incrementally, patch the cached norm map, migrate
+/// every residency pool's tiles, and repair cached schedules.  Free
+/// function so the session front-end (whose coordinator lives inside the
+/// worker thread) can run it on the caller thread against the shared
+/// caches and pools.
+pub(crate) fn apply_operand_update(
+    cfg: &SpammConfig,
+    caches: &ExecCaches,
+    pools: &[Arc<ResidencyPool>],
+    padded: &PaddedMatrix,
+    fp: Fingerprint,
+    changed: &[(usize, usize)],
+    data: &[f32],
+) -> Result<OperandUpdate> {
+    let new_padded = padded.with_patched_tiles(changed, data)?;
+    let mut tiles = changed.to_vec();
+    tiles.sort_unstable();
+    tiles.dedup();
+    let new_fp = fingerprint_patch(fp, &new_padded, &tiles);
+    let (nm, norm_patched) = match caches.patch_normmap(fp, new_fp, &new_padded, &tiles) {
+        Some(nm) => (nm, true),
+        None => {
+            // Old norms not cached: take the full pass once and register
+            // it so repair and the next submit share it.
+            let nm = Arc::new(normmap_with_density(&new_padded));
+            if cfg.cache_enabled {
+                caches.norms.insert(new_fp, nm.clone());
+            }
+            (nm, false)
+        }
+    };
+    let l2 = new_padded.lonum * new_padded.lonum;
+    let mut pool = PatchOutcome::default();
+    for p in pools {
+        pool.absorb(&p.patch_operand(fp, new_fp, &tiles, l2, |t, buf| {
+            new_padded.copy_tile(t.0, t.1, buf)
+        }));
+    }
+    let repair = caches.repair_schedules(fp, new_fp, &nm, &tiles);
+    Ok(OperandUpdate {
+        padded: new_padded,
+        fp: new_fp,
+        norm_patched,
+        norm_tiles_patched: if norm_patched { tiles.len() } else { 0 },
+        pool,
+        repair,
+    })
 }
 
 /// One device's pipeline: warm up, wait at the barrier, then stream *all*

@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 use crate::config::SpammConfig;
 use crate::coordinator::expr::{ExprGraph, ExprNodeReport, ExprPlan, ExprSource};
 use crate::coordinator::partition::{assignment_ctx, PartitionCtx};
-use crate::coordinator::pipeline::report_to_stats;
+use crate::coordinator::pipeline::{apply_operand_update, report_to_stats};
 use crate::coordinator::service::Approx;
 use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
@@ -48,7 +48,7 @@ use crate::runtime::{ArtifactBundle, Runtime};
 use crate::spamm::balance::Assignment;
 use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
 use crate::spamm::executor::MultiplyStats;
-use crate::spamm::normmap::normmap_with_density;
+use crate::spamm::normmap::{normmap_with_density, resolve_density_threshold, NormMap};
 use crate::spamm::schedule::Schedule;
 use crate::spamm::tuner::{self, TuneParams};
 use crate::util::prng::Rng;
@@ -158,6 +158,44 @@ pub struct Completion {
     /// Per-node reports when this job was an expression graph
     /// ([`SpammSession::submit_expr`]); empty for plain multiplies.
     pub nodes: Vec<ExprNodeReport>,
+}
+
+/// What one [`SpammSession::update`] did incrementally — the receipt a
+/// caller inspects to verify the delta stayed a delta (only touched
+/// tiles re-fingerprinted/re-uploaded, schedules repaired not rebuilt).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UpdateReport {
+    /// Distinct tile coordinates patched.
+    pub tiles_changed: usize,
+    /// Whether the norm map was patched in place (vs. recomputed in full
+    /// because the old operand's norms were not cached).
+    pub norm_patched: bool,
+    /// Touched tiles re-censused (norm + density); zero on the full
+    /// recompute fallback.
+    pub norm_tiles_patched: usize,
+    /// Changed resident tiles re-uploaded across all device pools.
+    pub uploaded_tiles: usize,
+    /// Bytes of those uploads — the delta's whole transfer cost.
+    pub uploaded_bytes: u64,
+    /// Unchanged resident tiles re-keyed with zero transfer.
+    pub rekeyed_tiles: usize,
+    /// Stale packed payloads of changed tiles dropped from the pools.
+    pub dropped_stale: usize,
+    /// Cached schedules repaired in place (affected rows/columns only).
+    pub schedules_repaired: usize,
+    /// Cached schedules dropped (repair inputs missing; rebuilt on use).
+    pub schedules_dropped: usize,
+    /// Products that newly crossed τ across all repaired schedules.
+    pub products_added: usize,
+    /// Products newly culled across all repaired schedules.
+    pub products_removed: usize,
+    /// Surviving products whose tile strategy flipped.
+    pub products_retagged: usize,
+    /// Prepared multiply plans migrated to the new fingerprint (their
+    /// next submit runs warm on the repaired schedule).
+    pub plans_migrated: usize,
+    /// Prepared expression plans re-prepared against the patched caches.
+    pub expr_plans_migrated: usize,
 }
 
 /// Monotonic operand-store counters.
@@ -319,6 +357,35 @@ impl OperandStore {
         }
     }
 
+    /// Swap a delta-updated operand's content in place: same id, same
+    /// refs/pins/LRU identity, new padded data and fingerprint.  Refuses
+    /// if the entry's fingerprint moved since the caller snapshotted it
+    /// (a concurrent update of the same operand).
+    fn apply_update(
+        &mut self,
+        id: OperandId,
+        old_fp: Fingerprint,
+        new_fp: Fingerprint,
+        padded: Arc<PaddedMatrix>,
+    ) -> Result<()> {
+        let e = self
+            .entries
+            .get_mut(&id.0)
+            .ok_or_else(|| Error::Session(format!("operand {} not registered", id.0)))?;
+        if e.fp != old_fp {
+            return Err(Error::Session(format!(
+                "operand {} changed during update (concurrent update?)",
+                id.0
+            )));
+        }
+        e.fp = new_fp;
+        e.padded = padded;
+        self.by_fp.remove(&old_fp);
+        self.by_fp.insert(new_fp, id.0);
+        self.touch(id.0);
+        Ok(())
+    }
+
     fn stats(&self) -> StoreStats {
         let mut s = self.stats;
         s.resident_bytes = self.bytes as u64;
@@ -357,6 +424,11 @@ struct Plan {
     fa: Fingerprint,
     fb: Fingerprint,
     tau: f32,
+    /// The density threshold the schedule was built with — the value
+    /// `auto` resolved to at prepare time.  Delta updates migrate the
+    /// plan at this exact threshold so the repaired schedule stays
+    /// bitwise identical to a cold rebuild at the same τ/threshold.
+    density_threshold: f32,
     /// The compacted schedule, pinned for the plan's lifetime (cache
     /// eviction cannot un-prepare a plan).
     schedule: Arc<Schedule>,
@@ -399,6 +471,10 @@ struct PlanEntry {
 struct ExprJob {
     id: u64,
     plan: ExprPlan,
+    /// The source graph, kept so a delta update of an input operand can
+    /// re-prepare the plan in place (warm: patched norms and repaired
+    /// schedules are already cached).
+    graph: ExprGraph,
     /// Store handles pinned for the plan's lifetime.
     operands: Vec<OperandId>,
     /// Operand fingerprints pinned in the device residency pools.
@@ -608,6 +684,276 @@ impl SpammSession {
         self.shared.store.lock().unwrap().stats()
     }
 
+    // -- incremental updates -------------------------------------------
+
+    /// Delta-update a registered operand in place: overwrite the listed
+    /// padded-grid tiles with `data` (one row-major LoNum² block per
+    /// coordinate, concatenated in the order of `changed`) and propagate
+    /// the change *incrementally* through every layer that knows the
+    /// operand:
+    ///
+    /// * the content fingerprint is re-derived from the old fingerprint
+    ///   plus the changed tiles only — no full re-hash;
+    /// * the cached norm map is patched in place (norms + density census
+    ///   of the touched tiles only);
+    /// * device-resident tiles migrate to the new fingerprint — only the
+    ///   changed tiles re-upload; unchanged tiles (dense *and* still-valid
+    ///   packed payloads) re-key with zero transfer, and stale packed
+    ///   payloads of changed tiles are dropped;
+    /// * cached schedules involving the operand are *repaired* — only
+    ///   products whose norms crossed τ or whose tile strategy flipped
+    ///   are added/removed/retagged, in the affected rows/columns only —
+    ///   and re-keyed, bitwise identical to a cold rebuild at the same
+    ///   τ/threshold;
+    /// * prepared plans referencing the operand survive: they migrate to
+    ///   the new fingerprint (pins included) and their next submit runs
+    ///   warm, with the repair accounted in that job's
+    ///   [`MultiplyStats`].
+    ///
+    /// The operand keeps its [`OperandId`], refcount, and pins.  Jobs
+    /// already submitted keep executing the pre-update snapshot.
+    pub fn update(
+        &self,
+        id: OperandId,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<UpdateReport> {
+        let (old_padded, old_fp) = self.shared.store.lock().unwrap().get(id)?;
+        let up = apply_operand_update(
+            &self.shared.cfg,
+            &self.shared.caches,
+            &self.shared.pools,
+            &old_padded,
+            old_fp,
+            changed,
+            data,
+        )?;
+        let new_padded = Arc::new(up.padded);
+        let new_fp = up.fp;
+        self.shared
+            .store
+            .lock()
+            .unwrap()
+            .apply_update(id, old_fp, new_fp, new_padded.clone())?;
+
+        let mut tiles = changed.to_vec();
+        tiles.sort_unstable();
+        tiles.dedup();
+        let mut report = UpdateReport {
+            tiles_changed: tiles.len(),
+            norm_patched: up.norm_patched,
+            norm_tiles_patched: up.norm_tiles_patched,
+            uploaded_tiles: up.pool.uploaded_tiles,
+            uploaded_bytes: up.pool.uploaded_bytes,
+            rekeyed_tiles: up.pool.rekeyed_tiles,
+            dropped_stale: up.pool.dropped_stale,
+            schedules_repaired: up.repair.repaired,
+            schedules_dropped: up.repair.dropped,
+            products_added: up.repair.products_added,
+            products_removed: up.repair.products_removed,
+            products_retagged: up.repair.products_retagged,
+            ..UpdateReport::default()
+        };
+
+        // Migrate every prepared plan referencing the operand.  Same lock
+        // order as `prepare` (plans → store); in-flight jobs hold the old
+        // plan Arc and complete on the pre-update snapshot.
+        let mut plans = self.shared.plans.lock().unwrap();
+        let plan_ids: Vec<u64> = plans
+            .plans
+            .iter()
+            .filter(|(_, e)| e.plan.a == id || e.plan.b == id)
+            .map(|(k, _)| *k)
+            .collect();
+        for pid in plan_ids {
+            let old = plans
+                .plans
+                .get(&pid)
+                .map(|e| e.plan.clone())
+                .expect("plan id collected under this lock");
+            let t_plan = Instant::now();
+            let mut front = MultiplyStats::default();
+            let (touched_a, touched_b) = (old.a == id, old.b == id);
+            let pa = if touched_a { new_padded.clone() } else { old.pa.clone() };
+            let pb = if touched_b { new_padded.clone() } else { old.pb.clone() };
+            let fa = if touched_a { new_fp } else { old.fa };
+            let fb = if touched_b { new_fp } else { old.fb };
+            let na = self.norm_for(fa, &pa, &mut front)?;
+            let nb = self.norm_for(fb, &pb, &mut front)?;
+            // The repair sweep re-keyed the plan's cache entry to the new
+            // fingerprint, so this lookup hits the *repaired* schedule —
+            // a miss here means repair had to drop it (rebuild once).
+            let schedule = if self.shared.cfg.cache_enabled {
+                self.shared.caches.schedule_via(
+                    Some(fa),
+                    Some(fb),
+                    old.tau,
+                    old.density_threshold,
+                    &na,
+                    &nb,
+                    &mut front,
+                )?
+            } else {
+                Arc::new(Schedule::build_adaptive(
+                    &na,
+                    &nb,
+                    old.tau,
+                    old.density_threshold,
+                )?)
+            };
+            if front.schedule_cache_hits > 0 {
+                front.schedules_repaired = 1;
+                front.repair_products_added = up.repair.products_added;
+                front.repair_products_removed = up.repair.products_removed;
+                front.repair_products_retagged = up.repair.products_retagged;
+            }
+            front.norm_tiles_patched = up.norm_tiles_patched;
+            let assignment = {
+                let cfg = &self.shared.cfg;
+                let ctx = PartitionCtx {
+                    pools: &self.shared.pools,
+                    fa: Some(fa),
+                    fb: Some(fb),
+                    tile_bytes: cfg.lonum * cfg.lonum * std::mem::size_of::<f32>(),
+                };
+                assignment_ctx(&schedule, cfg.devices, cfg.balance, Some(&ctx))
+            };
+            let pin_devices: Vec<usize> = (0..self.shared.cfg.devices)
+                .filter(|&d| assignment.owner.iter().any(|&o| o == d))
+                .collect();
+            // Pool pin counts for the touched fingerprint migrated
+            // wholesale with the tiles; only the device *set* can drift.
+            for &d in &old.pin_devices {
+                if !pin_devices.contains(&d) {
+                    if let Some(p) = self.shared.pools.get(d) {
+                        p.unpin_operand(fa);
+                        p.unpin_operand(fb);
+                    }
+                }
+            }
+            for &d in &pin_devices {
+                if !old.pin_devices.contains(&d) {
+                    if let Some(p) = self.shared.pools.get(d) {
+                        p.pin_operand(fa);
+                        p.pin_operand(fb);
+                    }
+                }
+            }
+            let migrated = Arc::new(Plan {
+                id: old.id,
+                a: old.a,
+                b: old.b,
+                pa,
+                pb,
+                fa,
+                fb,
+                tau: old.tau,
+                density_threshold: old.density_threshold,
+                schedule,
+                rows: old.rows,
+                cols: old.cols,
+                dedup: old.dedup,
+                prepare_secs: t_plan.elapsed().as_secs_f64(),
+                front,
+                pin_devices,
+                assignment,
+                cold_charged: std::sync::atomic::AtomicBool::new(false),
+            });
+            if let Some(e) = plans.plans.get_mut(&pid) {
+                e.plan = migrated;
+            }
+            report.plans_migrated += 1;
+        }
+
+        // Re-prepare expression plans over the updated operand: warm by
+        // construction — the patched norms and repaired schedules are
+        // already cached under the new fingerprint.
+        let expr_ids: Vec<u64> = plans
+            .exprs
+            .iter()
+            .filter(|(_, j)| j.operands.contains(&id))
+            .map(|(k, _)| *k)
+            .collect();
+        for eid in expr_ids {
+            let old = plans
+                .exprs
+                .get(&eid)
+                .cloned()
+                .expect("expr id collected under this lock");
+            let resolved: Vec<(Arc<PaddedMatrix>, Fingerprint)> = {
+                let mut store = self.shared.store.lock().unwrap();
+                old.operands
+                    .iter()
+                    .map(|oid| store.get(*oid))
+                    .collect::<Result<Vec<_>>>()?
+            };
+            let sources: Vec<ExprSource<'_>> = resolved
+                .iter()
+                .map(|(p, f)| ExprSource::Padded(p.clone(), *f))
+                .collect();
+            let plan = old.graph.prepare_placed(
+                &self.shared.caches,
+                &self.shared.cfg,
+                &self.shared.pools,
+                &sources,
+            )?;
+            let fps = plan.input_fingerprints();
+            let pin_devices = plan.devices_used();
+            // The updated operand's pool pins migrated to the new
+            // fingerprint with its tiles — translate before unpinning.
+            let translated: Vec<Fingerprint> = old
+                .fps
+                .iter()
+                .map(|f| if *f == old_fp { new_fp } else { *f })
+                .collect();
+            for &d in &old.pin_devices {
+                if let Some(pool) = self.shared.pools.get(d) {
+                    for f in &translated {
+                        pool.unpin_operand(*f);
+                    }
+                }
+            }
+            for &d in &pin_devices {
+                if let Some(pool) = self.shared.pools.get(d) {
+                    for f in &fps {
+                        pool.pin_operand(*f);
+                    }
+                }
+            }
+            plans.exprs.insert(
+                eid,
+                Arc::new(ExprJob {
+                    id: old.id,
+                    plan,
+                    graph: old.graph.clone(),
+                    operands: old.operands.clone(),
+                    fps,
+                    pin_devices,
+                    cold_charged: std::sync::atomic::AtomicBool::new(false),
+                }),
+            );
+            report.expr_plans_migrated += 1;
+        }
+        Ok(report)
+    }
+
+    /// Cached norm map by fingerprint (computing + registering on miss);
+    /// bypasses the cache entirely under `--no-cache`.
+    fn norm_for(
+        &self,
+        fp: Fingerprint,
+        p: &Arc<PaddedMatrix>,
+        front: &mut MultiplyStats,
+    ) -> Result<Arc<NormMap>> {
+        if self.shared.cfg.cache_enabled {
+            self.shared
+                .caches
+                .normmap_keyed(fp, front, || Ok(normmap_with_density(p)))
+        } else {
+            Ok(Arc::new(normmap_with_density(p)))
+        }
+    }
+
     // -- prepare -------------------------------------------------------
 
     /// Prepare a multiply: resolve τ (tuner for valid-ratio targets),
@@ -671,7 +1017,7 @@ impl SpammSession {
         // resolution (MultiplyStats has no separate tuner clock).
         front.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let density_threshold = self.shared.cfg.density_threshold;
+        let density_threshold = resolve_density_threshold(&self.shared.cfg, &na, &nb);
         let schedule = if self.shared.cfg.cache_enabled {
             self.shared.caches.schedule_via(
                 Some(fa),
@@ -743,6 +1089,7 @@ impl SpammSession {
                     fa,
                     fb,
                     tau,
+                    density_threshold,
                     schedule,
                     dedup: key,
                     prepare_secs,
@@ -922,6 +1269,7 @@ impl SpammSession {
             Arc::new(ExprJob {
                 id,
                 plan,
+                graph: g.clone(),
                 operands: inputs.to_vec(),
                 fps,
                 pin_devices,
@@ -1214,6 +1562,11 @@ fn run_multiply_job(
         stats.norm_cache_misses += plan.front.norm_cache_misses;
         stats.schedule_cache_hits += plan.front.schedule_cache_hits;
         stats.schedule_cache_misses += plan.front.schedule_cache_misses;
+        stats.norm_tiles_patched += plan.front.norm_tiles_patched;
+        stats.schedules_repaired += plan.front.schedules_repaired;
+        stats.repair_products_added += plan.front.repair_products_added;
+        stats.repair_products_removed += plan.front.repair_products_removed;
+        stats.repair_products_retagged += plan.front.repair_products_retagged;
     }
     stats.total_secs = compute;
     Ok(Completion {
@@ -1255,6 +1608,11 @@ fn run_expr_job(
         stats.norm_cache_misses += front.norm_cache_misses;
         stats.schedule_cache_hits += front.schedule_cache_hits;
         stats.schedule_cache_misses += front.schedule_cache_misses;
+        stats.norm_tiles_patched += front.norm_tiles_patched;
+        stats.schedules_repaired += front.schedules_repaired;
+        stats.repair_products_added += front.repair_products_added;
+        stats.repair_products_removed += front.repair_products_removed;
+        stats.repair_products_retagged += front.repair_products_retagged;
     }
     stats.total_secs = compute;
     let valid_ratio = rep.stats.valid_ratio;
@@ -1448,11 +1806,13 @@ mod tests {
                 fa: Fingerprint(0, 0),
                 fb: Fingerprint(0, 0),
                 tau: 0.0,
+                density_threshold: 0.0,
                 schedule: Arc::new(Schedule {
                     tile_rows: 0,
                     tile_cols: 0,
                     tile_k: 0,
                     valid_k: Vec::new(),
+                    strategies: Vec::new(),
                 }),
                 rows: 0,
                 cols: 0,

@@ -75,6 +75,47 @@
 //! The old `SpammService` (submit whole matrices per call, blocking
 //! FIFO drain) is deprecated and now a thin shim over the session.
 //!
+//! ## Incremental operands
+//!
+//! Iterative workloads — SCF cycles, MD steps — re-run the *same* plan
+//! against an operand that drifted in a few tiles.
+//! [`coordinator::SpammSession::update`] charges only the delta: the
+//! content fingerprint is patched incrementally
+//! ([`spamm::cache::fingerprint_patch`]), changed tiles re-upload while
+//! unchanged resident tiles (dense and still-valid packed payloads)
+//! re-key with zero transfer (stale packed variants of changed tiles
+//! are dropped), the [`spamm::NormMap`] norms + density census are
+//! recomputed for the touched tiles only, and cached schedules are
+//! *repaired* in the affected rows/columns ([`spamm::Schedule::repair`])
+//! instead of rebuilt — bitwise identical to a cold rebuild at the same
+//! τ/threshold.  Prepared plans referencing the operand migrate (pins
+//! included) and their next submit runs warm:
+//!
+//! ```no_run
+//! use cuspamm::prelude::*;
+//!
+//! let bundle = ArtifactBundle::load("artifacts").unwrap();
+//! let session = SpammSession::new(&bundle, SpammConfig::default()).unwrap();
+//! let density = Matrix::decay_algebraic(1024, 0.1, 0.1, 7);
+//! let p = session.put(&density).unwrap();
+//! let plan = session.prepare(p, p, Approx::Tau(1e-4)).unwrap();
+//! session.wait(session.submit(plan).unwrap()).unwrap(); // cold SCF step
+//!
+//! // Next SCF step: two tiles drifted — patch them, don't re-put.
+//! let changed = [(0, 1), (2, 2)];
+//! let blocks = vec![0.0f32; changed.len() * 32 * 32]; // new tile contents
+//! let rep = session.update(p, &changed, &blocks).unwrap();
+//! assert_eq!(rep.norm_tiles_patched, rep.tiles_changed);
+//! let warm = session.wait(session.submit(plan).unwrap()).unwrap(); // delta cost
+//! println!("{} tiles uploaded, {} schedules repaired", rep.uploaded_tiles, rep.schedules_repaired);
+//! # let _ = warm;
+//! ```
+//!
+//! [`coordinator::Coordinator::update_operand`] is the session-free
+//! twin; `cuspamm update --smoke` is the CI gate asserting delta
+//! uploads ≥5x cheaper than re-put and bitwise identity with the cold
+//! rebuild.
+//!
 //! ## Expression graphs
 //!
 //! Iterated workloads — matrix powers (§4.3.1), McWeeny purification —
@@ -247,7 +288,7 @@ pub mod prelude {
     pub use crate::coordinator::{
         Approx, Completion, Coordinator, ExprGraph, ExprPlanId, ExprReport, ExprSource,
         ExprTicket, ExprValue, MultiDeviceReport, OperandId, PlanId, Priority, SpammSession,
-        Ticket,
+        Ticket, UpdateReport,
     };
     pub use crate::error::{Error, Result};
     pub use crate::matrix::Matrix;

@@ -11,6 +11,9 @@
 //!   cuspamm serve --requests 64           session serving bench (Zipf-hot
 //!                                         operands, priorities; --smoke for
 //!                                         the CI warm-plan assertion)
+//!   cuspamm update --steps 4              drifting-operand trace: delta
+//!                                         updates + schedule repair (--smoke
+//!                                         for the CI delta-cost assertion)
 //!
 //! Global options: --artifacts <dir>, --devices, --precision, --balance,
 //! --config <file> (key = value overrides, see config::SpammConfig).
@@ -126,6 +129,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "purify" => cmd_purify(rest),
         "cnn" => cmd_cnn(rest),
         "serve" => cmd_serve(rest),
+        "update" => cmd_update(rest),
         "coordinate" => cmd_coordinate(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
@@ -139,7 +143,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  loop (--expr/--loop)\n  purify McWeeny purification, same \
                  A/B\n  cnn    case-study CNN accuracy probe\n  serve  \
                  session serving bench: registered operands, prepared plans, \
-                 priority queue\n  coordinate  multi-device partition bench: \
+                 priority queue\n  update drifting-operand trace: delta \
+                 updates with schedule repair (--smoke for the CI \
+                 delta-cost assertion)\n  coordinate  multi-device partition bench: \
                  per-device transfer/busy table, residency-aware vs rowblock \
                  (--smoke)\n  bench  machine-readable BENCH_<suite>.json \
                  records (--check diffs deterministic fields vs committed \
@@ -1131,6 +1137,191 @@ fn coordinate_smoke(
     Ok(())
 }
 
+/// `cuspamm update`: the drifting-operand serving pattern (an SCF loop's
+/// Hamiltonian, a slowly-changing weight matrix) — one registered
+/// operand, one prepared plan, and per step a small fraction of tiles
+/// rewritten via `SpammSession::update` followed by a warm resubmit.
+/// Prints the per-step `UpdateReport`; `--smoke` additionally asserts
+/// the delta contract for CI.
+fn cmd_update(args: &[String]) -> Result<()> {
+    use cuspamm::coordinator::{Approx, SpammSession};
+    use cuspamm::util::prng::Rng;
+
+    let spec = common(Spec::new(
+        "cuspamm update",
+        "drifting-operand trace: delta-update a registered operand between \
+         submits of one prepared plan; --smoke asserts uploads scale with \
+         the delta (≥5x fewer bytes than re-registering), the normmap is \
+         patched (never recomputed in full), the schedule is repaired (not \
+         rebuilt), and results stay bitwise identical to a from-scratch \
+         re-put of the drifted operand",
+    ))
+    .opt("n", "512", "matrix size (rounded down to a LoNum multiple)")
+    .opt("tau", "1e-4", "SpAMM threshold τ")
+    .opt("steps", "4", "drift steps (one update + one warm submit each)")
+    .opt("churn", "0.05", "fraction of tiles rewritten per step")
+    .opt("seed", "7", "workload seed")
+    .flag(
+        "smoke",
+        "CI assertion: ≥5x fewer uploaded bytes than re-put, normmap \
+         patched not recomputed, schedule repaired not rebuilt, bitwise \
+         identity per step",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    let smoke = a.flag("smoke");
+    if smoke && !cfg.residency_enabled {
+        return Err(Error::Config(
+            "update --smoke measures pool uploads; run without --no-residency".into(),
+        ));
+    }
+    if smoke && !cfg.cache_enabled {
+        return Err(Error::Config(
+            "update --smoke asserts normmap patching; run without --no-cache".into(),
+        ));
+    }
+    let l = bundle.lonum;
+    let n = (a.usize("n")?.max(2 * l) / l) * l;
+    let tau = a.f64("tau")? as f32;
+    let steps = a.usize("steps")?.max(1);
+    let churn = a.f64("churn")?;
+    let seed = a.usize("seed")? as u64;
+
+    let mut host_a = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+    let b = Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1);
+    let side = n / l;
+    let total_tiles = side * side;
+    let churn_tiles = ((total_tiles as f64 * churn).round() as usize).clamp(1, total_tiles);
+
+    // Incremental session: one operand, one plan, drift via update().
+    let inc = SpammSession::new(&bundle, cfg.clone())?;
+    let aid = inc.put(&host_a)?;
+    let bid = inc.put(&b)?;
+    let plan = inc.prepare(aid, bid, Approx::Tau(tau))?;
+    let cold = inc.wait(inc.submit(plan)?)?;
+    // Reference session: same drift, but each step re-registers the
+    // drifted matrix from scratch (full re-fingerprint + re-upload).
+    let reput = SpammSession::new(&bundle, cfg.clone())?;
+    let rbid = reput.put(&b)?;
+    let warm_b = reput.prepare(rbid, rbid, Approx::Tau(tau))?;
+    let _ = reput.wait(reput.submit(warm_b)?)?;
+
+    let pool_bytes = |s: &SpammSession| -> u64 {
+        s.residency_pools()
+            .iter()
+            .map(|p| p.stats().uploaded_bytes)
+            .sum()
+    };
+    println!(
+        "== update: n={n} τ={tau:.1e} steps={steps} — {churn_tiles}/{total_tiles} \
+         tiles per step, cold submit {:.4}s ==",
+        cold.compute_secs
+    );
+
+    let mut rng = Rng::new(seed ^ 0xD1F7);
+    let l2 = l * l;
+    let (mut inc_up_total, mut reput_up_total) = (0u64, 0u64);
+    for step in 0..steps {
+        // Pick distinct tile coordinates and fresh (mild) payloads; the
+        // host mirror gets the identical patch so the re-put reference
+        // sees the same drifted content.
+        let mut changed: Vec<(usize, usize)> = Vec::new();
+        while changed.len() < churn_tiles {
+            let t = (rng.below(side), rng.below(side));
+            if !changed.contains(&t) {
+                changed.push(t);
+            }
+        }
+        let mut data = Vec::with_capacity(churn_tiles * l2);
+        for (k, &(ti, tj)) in changed.iter().enumerate() {
+            let block = Matrix::randn(l, l, seed.wrapping_add((step * 4096 + k) as u64 + 1));
+            data.extend(block.data().iter().map(|x| x * 0.05));
+            for r in 0..l {
+                host_a.data_mut()[(ti * l + r) * n + tj * l..][..l]
+                    .copy_from_slice(&data[k * l2 + r * l..k * l2 + (r + 1) * l]);
+            }
+        }
+
+        let before = pool_bytes(&inc);
+        let report = inc.update(aid, &changed, &data)?;
+        let job = inc.wait(inc.submit(plan)?)?;
+        let inc_up = pool_bytes(&inc) - before;
+        inc_up_total += inc_up;
+
+        let before = pool_bytes(&reput);
+        let said = reput.put(&host_a)?;
+        let splan = reput.prepare(said, rbid, Approx::Tau(tau))?;
+        let sjob = reput.wait(reput.submit(splan)?)?;
+        let reput_up = pool_bytes(&reput) - before;
+        reput_up_total += reput_up;
+
+        println!(
+            "step {step}: {} tiles — uploaded {} KiB (re-put {} KiB), norm tiles \
+             patched {}, schedules repaired {} (+{} -{} ~{} products), plans \
+             migrated {}, warm submit {:.4}s",
+            report.tiles_changed,
+            inc_up / 1024,
+            reput_up / 1024,
+            report.norm_tiles_patched,
+            report.schedules_repaired,
+            report.products_added,
+            report.products_removed,
+            report.products_retagged,
+            report.plans_migrated,
+            job.compute_secs,
+        );
+        // The delta path must be invisible in the result bits, smoke or
+        // not: same content, same τ, same threshold → same product.
+        assert_eq!(
+            job.c.data(),
+            sjob.c.data(),
+            "step {step}: incremental result diverged from the re-put rebuild"
+        );
+        if smoke {
+            assert!(
+                report.norm_patched,
+                "step {step}: normmap was recomputed in full, not patched"
+            );
+            assert_eq!(
+                report.norm_tiles_patched, report.tiles_changed,
+                "step {step}: patched more norm tiles than changed tiles"
+            );
+            assert!(
+                report.plans_migrated >= 1,
+                "step {step}: the prepared plan did not migrate"
+            );
+            assert!(
+                job.stats.schedules_repaired >= 1,
+                "step {step}: warm submit did not run on a repaired schedule"
+            );
+            assert_eq!(
+                job.stats.schedule_cache_misses, 0,
+                "step {step}: schedule was rebuilt, not repaired"
+            );
+        }
+        reput.release_plan(splan)?;
+        reput.release(said)?;
+    }
+    println!(
+        "uploaded over {steps} steps: incremental {} KiB vs re-put {} KiB",
+        inc_up_total / 1024,
+        reput_up_total / 1024
+    );
+    if smoke {
+        assert!(
+            inc_up_total * 5 <= reput_up_total,
+            "delta updates must upload ≥5x fewer bytes than re-registering: \
+             {inc_up_total} vs {reput_up_total}"
+        );
+        println!(
+            "smoke: OK — ≥5x fewer uploaded bytes than re-put, normmap patched, \
+             schedule repaired, bitwise identity on every step"
+        );
+    }
+    Ok(())
+}
+
 /// `cuspamm bench`: regenerate the machine-readable benchmark records
 /// (`BENCH_multiply.json`, `BENCH_serve.json`, `BENCH_expr.json`) on small
 /// deterministic hostsim workloads, and optionally diff their
@@ -1189,6 +1380,14 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 mismatches.join("\n  "),
                 dir.display()
             )));
+        }
+        // Timing-trend pass over the info fields: machine-dependent, so
+        // gross slowdowns are *warned*, never failed.
+        for r in &records {
+            let baseline = dir.join(format!("BENCH_{}.json", r.name));
+            for w in r.timing_trends_against(&baseline)? {
+                println!("warning: timing trend — {w}");
+            }
         }
         println!("baselines OK ({} records)", records.len());
     }

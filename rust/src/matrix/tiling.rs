@@ -48,6 +48,45 @@ impl PaddedMatrix {
             .copy_block(ti * self.lonum, tj * self.lonum, self.lonum, dst);
     }
 
+    /// Clone with the listed tiles replaced by the payloads in `data` —
+    /// the host-side half of a delta update.  `data` holds one row-major
+    /// lonum² block per coordinate, concatenated in the order of `tiles`
+    /// (tile-grid coordinates of the *padded* grid).  Untouched tiles are
+    /// carried over bitwise, so downstream per-tile derivations (norms,
+    /// density, fingerprint streams) of unchanged tiles stay identical.
+    pub fn with_patched_tiles(
+        &self,
+        tiles: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<PaddedMatrix> {
+        let l = self.lonum;
+        let l2 = l * l;
+        if data.len() != tiles.len() * l2 {
+            return Err(Error::Shape(format!(
+                "patch: {} payload floats for {} tiles of {l2} elems",
+                data.len(),
+                tiles.len()
+            )));
+        }
+        let mut out = self.clone();
+        let pc = out.inner.cols();
+        for (slot, &(ti, tj)) in tiles.iter().enumerate() {
+            if ti >= self.tile_rows() || tj >= self.tile_cols() {
+                return Err(Error::Shape(format!(
+                    "patch: tile ({ti},{tj}) out of {}x{} grid",
+                    self.tile_rows(),
+                    self.tile_cols()
+                )));
+            }
+            let src = &data[slot * l2..(slot + 1) * l2];
+            for r in 0..l {
+                out.inner.data_mut()[(ti * l + r) * pc + tj * l..][..l]
+                    .copy_from_slice(&src[r * l..(r + 1) * l]);
+            }
+        }
+        Ok(out)
+    }
+
     /// Crop back to the logical shape.
     pub fn crop(&self) -> Matrix {
         let mut out = Matrix::zeros(self.logical_rows, self.logical_cols);
@@ -172,6 +211,41 @@ mod tests {
                 assert_eq!(c.inner[(r, cc)], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn with_patched_tiles_replaces_only_listed_blocks() {
+        let m = Matrix::randn(64, 96, 7);
+        let p = PaddedMatrix::new(&m, 32);
+        let l2 = 32 * 32;
+        let mut payload = vec![0.0f32; 2 * l2];
+        payload[..l2].fill(3.5);
+        for (i, v) in payload[l2..].iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let q = p.with_patched_tiles(&[(0, 2), (1, 0)], &payload).unwrap();
+        let mut buf = vec![0.0f32; l2];
+        q.copy_tile(0, 2, &mut buf);
+        assert_eq!(buf, payload[..l2]);
+        q.copy_tile(1, 0, &mut buf);
+        assert_eq!(buf, payload[l2..]);
+        // Every other tile is carried over bitwise.
+        let mut orig = vec![0.0f32; l2];
+        for ti in 0..p.tile_rows() {
+            for tj in 0..p.tile_cols() {
+                if (ti, tj) == (0, 2) || (ti, tj) == (1, 0) {
+                    continue;
+                }
+                p.copy_tile(ti, tj, &mut orig);
+                q.copy_tile(ti, tj, &mut buf);
+                assert_eq!(buf, orig);
+            }
+        }
+        assert_eq!(q.logical_rows, p.logical_rows);
+        assert_eq!(q.logical_cols, p.logical_cols);
+        // Bad shapes and out-of-grid coordinates are rejected.
+        assert!(p.with_patched_tiles(&[(0, 0)], &payload).is_err());
+        assert!(p.with_patched_tiles(&[(2, 0)], &payload[..l2]).is_err());
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use crate::matrix::Matrix;
 use crate::spamm::cache::Fingerprint;
-use crate::spamm::normmap::tile_fnorm;
+use crate::spamm::normmap::{tile_density, tile_fnorm, NormMap};
 use crate::telemetry;
 
 /// One device-resident tile: the "device memory" copy of a LoNum² block.
@@ -95,6 +95,31 @@ pub struct Acquired {
     pub hit: bool,
     /// Tiles evicted to make room for this insert (0 on hits).
     pub evicted: usize,
+}
+
+/// Outcome of one [`ResidencyPool::patch_operand`] call (a delta
+/// update's per-pool migration).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PatchOutcome {
+    /// Changed dense tiles replaced by a fresh upload.
+    pub uploaded_tiles: usize,
+    /// Bytes of those uploads (also counted in `PoolStats::uploaded_bytes`).
+    pub uploaded_bytes: u64,
+    /// Unchanged tiles re-keyed to the new fingerprint with no transfer.
+    pub rekeyed_tiles: usize,
+    /// Stale packed payloads of changed tiles dropped.
+    pub dropped_stale: usize,
+}
+
+impl PatchOutcome {
+    /// Fold another pool's outcome in — the coordinator patches one pool
+    /// per device and reports the aggregate.
+    pub fn absorb(&mut self, o: &PatchOutcome) {
+        self.uploaded_tiles += o.uploaded_tiles;
+        self.uploaded_bytes += o.uploaded_bytes;
+        self.rekeyed_tiles += o.rekeyed_tiles;
+        self.dropped_stale += o.dropped_stale;
+    }
 }
 
 /// Monotonic counters snapshot of a pool.
@@ -328,6 +353,94 @@ impl ResidencyPool {
         handle
     }
 
+    /// Migrate operand `old_fp`'s resident tiles to `new_fp` after a
+    /// delta update, uploading only the changed tiles:
+    ///
+    /// * **unchanged tiles** are re-keyed in place — dense *and* packed
+    ///   payloads (a packed payload is a pure function of unchanged
+    ///   content, so it stays valid) — with no transfer and no hit/miss
+    ///   accounting; only their recency refreshes.
+    /// * **changed dense tiles** are replaced by a fresh upload via
+    ///   `fill` (counted as a miss + `uploaded_bytes`, exactly like an
+    ///   `acquire` miss — it *is* a host→device copy).
+    /// * **changed packed tiles** are dropped: the compressed payload
+    ///   describes the old content and would poison a sparse dispatch;
+    ///   the next sparse consumer re-packs from the new content.
+    /// * the operand's **pin count** (plans referencing it) migrates
+    ///   wholesale to the new fingerprint.
+    ///
+    /// Changed tiles that are not resident are skipped (`fill` never
+    /// runs for them) — the next gather uploads them on demand from the
+    /// updated operand.  Net pool bytes are unchanged modulo dropped
+    /// packed payloads, so no eviction pass is needed.
+    pub fn patch_operand(
+        &self,
+        old_fp: Fingerprint,
+        new_fp: Fingerprint,
+        changed: &[(usize, usize)],
+        tile_elems: usize,
+        mut fill: impl FnMut((usize, usize), &mut [f32]),
+    ) -> PatchOutcome {
+        let mut out = PatchOutcome::default();
+        let changed_set: std::collections::HashSet<(u32, u32)> =
+            changed.iter().map(|&(i, j)| (i as u32, j as u32)).collect();
+        let mut inner = self.inner.lock().unwrap();
+        let old_keys: Vec<TileKey> = inner
+            .map
+            .keys()
+            .filter(|k| k.op == old_fp)
+            .copied()
+            .collect();
+        for key in old_keys {
+            let Some(slot) = inner.map.remove(&key) else {
+                continue;
+            };
+            let len_bytes = slot.handle.data.len() * std::mem::size_of::<f32>();
+            let nk = TileKey { op: new_fp, ..key };
+            if changed_set.contains(&key.tile) {
+                inner.bytes -= len_bytes;
+                match key.fmt {
+                    TileFormat::Dense => {
+                        let mut data = vec![0.0f32; tile_elems];
+                        fill((key.tile.0 as usize, key.tile.1 as usize), &mut data);
+                        let bytes = tile_elems * std::mem::size_of::<f32>();
+                        if let Some(prev) = inner.map.remove(&nk) {
+                            inner.bytes -=
+                                prev.handle.data.len() * std::mem::size_of::<f32>();
+                        }
+                        let handle: TileHandle = Arc::new(DeviceTile { data });
+                        inner.map.insert(nk, Slot { handle, seq: 0 });
+                        inner.touch(nk);
+                        inner.bytes += bytes;
+                        inner.stats.misses += 1;
+                        inner.stats.uploaded_bytes += bytes as u64;
+                        out.uploaded_tiles += 1;
+                        out.uploaded_bytes += bytes as u64;
+                        telemetry::global().add("spamm.residency.misses", 1);
+                        telemetry::global()
+                            .add("spamm.transfer.uploaded_bytes", bytes as u64);
+                    }
+                    TileFormat::Packed => {
+                        out.dropped_stale += 1;
+                    }
+                }
+            } else {
+                if let Some(prev) = inner.map.remove(&nk) {
+                    inner.bytes -= prev.handle.data.len() * std::mem::size_of::<f32>();
+                }
+                inner.map.insert(nk, slot);
+                inner.touch(nk);
+                out.rekeyed_tiles += 1;
+            }
+        }
+        if let Some(n) = inner.pinned_ops.remove(&old_fp) {
+            *inner.pinned_ops.entry(new_fp).or_insert(0) += n;
+        }
+        inner.stats.resident_bytes = inner.bytes as u64;
+        inner.stats.resident_tiles = inner.map.len() as u64;
+        out
+    }
+
     /// Drop every currently-unpinned tile of operand `fp` — the
     /// expression executor's retirement path: when an intermediate's last
     /// consumer finishes, its tiles are freed immediately instead of
@@ -482,6 +595,11 @@ pub struct ResidentOperand {
     tiles: Vec<TileHandle>,
     /// Exact tile Frobenius norms (device-side get-norm at scatter time).
     normmap: Arc<Matrix>,
+    /// Exact per-tile density census (same floor and count-then-scale
+    /// arithmetic as the host census), taken from the same freshly
+    /// accumulated tiles — lets consumers route sparse/packed off a
+    /// resident intermediate instead of assuming dense.
+    density: Arc<Matrix>,
 }
 
 impl ResidentOperand {
@@ -510,6 +628,7 @@ impl ResidentOperand {
             )));
         }
         let mut normmap = Matrix::zeros(tile_rows, tile_cols);
+        let mut density = Matrix::zeros(tile_rows, tile_cols);
         let mut handles = Vec::with_capacity(tiles.len());
         for (idx, ((ti, tj), data)) in tiles.into_iter().enumerate() {
             if (ti * tile_cols + tj) != idx || data.len() != lonum * lonum {
@@ -518,6 +637,7 @@ impl ResidentOperand {
                 )));
             }
             normmap[(ti, tj)] = tile_fnorm(&data);
+            density[(ti, tj)] = tile_density(&data);
             let handle = match pool {
                 Some(p) => p.insert(TileKey::new(fp, (ti, tj)), data),
                 None => Arc::new(DeviceTile { data }),
@@ -533,6 +653,7 @@ impl ResidentOperand {
             tile_cols,
             tiles: handles,
             normmap: Arc::new(normmap),
+            density: Arc::new(density),
         })
     }
 
@@ -563,6 +684,23 @@ impl ResidentOperand {
     /// Exact tile-norm map (computed device-side at construction).
     pub fn normmap(&self) -> &Arc<Matrix> {
         &self.normmap
+    }
+
+    /// Exact per-tile density census (computed device-side at
+    /// construction, same rule as the host census).
+    pub fn densitymap(&self) -> &Arc<Matrix> {
+        &self.density
+    }
+
+    /// Norm *and* density map of this resident value — both channels
+    /// exact and bitwise identical to the host maps of the same content,
+    /// so a consumer's adaptive schedule routes a chained intermediate
+    /// exactly like the loop path that round-trips through the host.
+    pub fn norm_density_map(&self) -> NormMap {
+        NormMap {
+            norms: (*self.normmap).clone(),
+            density: (*self.density).clone(),
+        }
     }
 
     /// Resident bytes held by this operand's tiles.
@@ -825,6 +963,67 @@ mod tests {
         pool.insert(key(1, (0, 0)), vec![3.0; ELEMS]);
         assert_eq!(pool.resident_bytes(), TILE_BYTES as usize);
         assert!(pool.acquire(key(1, (0, 0)), ELEMS, |_| panic!()).handle.data[0] == 3.0);
+    }
+
+    #[test]
+    fn patch_operand_rekeys_unchanged_and_uploads_changed() {
+        let pool = ResidencyPool::new(0);
+        pool.insert(key(1, (0, 0)), vec![1.0; ELEMS]);
+        pool.insert(key(1, (0, 1)), vec![2.0; ELEMS]);
+        // Packed payloads: one of a changed tile (stale after the
+        // update), one of an unchanged tile (still valid).
+        pool.insert(TileKey::packed(fp(1), (0, 1)), vec![1.0, 0.0, 2.0]);
+        pool.insert(TileKey::packed(fp(1), (1, 0)), vec![1.0, 3.0, 4.0]);
+        let before = pool.stats();
+        let out = pool.patch_operand(fp(1), fp(2), &[(0, 1)], ELEMS, |t, buf| {
+            assert_eq!(t, (0, 1), "only the changed resident dense tile fills");
+            buf.fill(9.0);
+        });
+        assert_eq!(out.uploaded_tiles, 1);
+        assert_eq!(out.uploaded_bytes, TILE_BYTES);
+        assert_eq!(out.rekeyed_tiles, 2, "(0,0) dense + (1,0) packed");
+        assert_eq!(out.dropped_stale, 1, "stale packed (0,1) dropped");
+        let s = pool.stats();
+        assert_eq!(s.uploaded_bytes - before.uploaded_bytes, TILE_BYTES);
+        // Old fingerprint fully vacated; new one resident.
+        assert!(pool.resident_tiles_of(fp(1)).is_empty());
+        let mut tiles = pool.resident_tiles_of(fp(2));
+        tiles.sort_unstable();
+        assert_eq!(tiles, vec![(0, 0), (0, 1)]);
+        // Changed tile carries the new content; unchanged survived bitwise.
+        let got = pool.acquire(key(2, (0, 1)), ELEMS, |_| panic!("must be resident"));
+        assert!(got.hit);
+        assert_eq!(got.handle.data, vec![9.0; ELEMS]);
+        let got = pool.acquire(key(2, (0, 0)), ELEMS, |_| panic!("must be resident"));
+        assert_eq!(got.handle.data, vec![1.0; ELEMS]);
+        // Byte accounting: two dense tiles + the surviving packed payload.
+        assert_eq!(
+            pool.resident_bytes(),
+            2 * TILE_BYTES as usize + 12,
+            "dropped packed payload released its bytes"
+        );
+    }
+
+    #[test]
+    fn patch_operand_migrates_pin_counts() {
+        let pool = ResidencyPool::new(0);
+        pool.insert(key(5, (0, 0)), vec![1.0; ELEMS]);
+        pool.pin_operand(fp(5));
+        pool.pin_operand(fp(5));
+        let out = pool.patch_operand(fp(5), fp(6), &[], ELEMS, |_, _| {
+            panic!("no changed tiles — fill must not run")
+        });
+        assert_eq!(out.rekeyed_tiles, 1);
+        assert_eq!(out.uploaded_bytes, 0);
+        assert_eq!(pool.pinned_operands(), 1);
+        // Both pins moved: the first unpin keeps the operand pinned.
+        assert!(pool.unpin_operand(fp(6)), "one migrated pin left");
+        assert!(!pool.unpin_operand(fp(6)));
+        // Patching an operand with nothing resident is a harmless no-op.
+        let out = pool.patch_operand(fp(40), fp(41), &[(0, 0)], ELEMS, |_, _| {
+            panic!("nothing resident — fill must not run")
+        });
+        assert_eq!(out, PatchOutcome::default());
     }
 
     #[test]

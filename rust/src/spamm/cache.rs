@@ -112,6 +112,56 @@ pub fn fingerprint(p: &PaddedMatrix) -> Fingerprint {
     Fingerprint(h1.0, h2.0)
 }
 
+/// Derive the content fingerprint of an operand after a delta update:
+/// fold the *previous* fingerprint, the touched tile coordinates, and the
+/// new content of exactly those tiles (read from the already-patched
+/// padded matrix) into two fresh FNV streams.  `tiles` must be sorted and
+/// deduplicated — the caller's canonical delta order — so the same update
+/// always derives the same key.
+///
+/// The derived key is deterministic in (old fingerprint, delta), which is
+/// what the caches and pools need: equal keys imply equal content.  Two
+/// *different* delta paths to the same final content yield different keys
+/// (like any derived fingerprint, e.g. A³ built as (A·A)·A vs A·(A·A)) —
+/// that only costs a cold cache entry, never correctness.
+pub fn fingerprint_patch(
+    base: Fingerprint,
+    p: &PaddedMatrix,
+    tiles: &[(usize, usize)],
+) -> Fingerprint {
+    let mut h1 = Fnv::new(0x1f83_d9ab_fb41_bd6b);
+    let mut h2 = Fnv::new(0x5be0_cd19_137e_2179);
+    h1.mix(base.0);
+    h1.mix(base.1);
+    h2.mix(base.1.rotate_left(29));
+    h2.mix(base.0.rotate_left(11));
+    for h in [&mut h1, &mut h2] {
+        h.mix(tiles.len() as u64);
+    }
+    let l = p.lonum;
+    let cols = p.inner.cols();
+    let data = p.inner.data();
+    for &(ti, tj) in tiles {
+        h1.mix(((ti as u64) << 32) | tj as u64);
+        h2.mix(((tj as u64) << 32) | ti as u64);
+        for r in 0..l {
+            let row = &data[(ti * l + r) * cols + tj * l..][..l];
+            let mut chunks = row.chunks_exact(2);
+            for pair in &mut chunks {
+                let v = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+                h1.mix(v);
+                h2.mix(v.rotate_left(17));
+            }
+            if let [last] = chunks.remainder() {
+                let v = last.to_bits() as u64;
+                h1.mix(v);
+                h2.mix(v.rotate_left(17));
+            }
+        }
+    }
+    Fingerprint(h1.0, h2.0)
+}
+
 /// Bounded LRU map shared by both caches (`order` front = least
 /// recently used).
 struct BoundedMap<K, V> {
@@ -161,6 +211,25 @@ impl<K: Clone + Eq + std::hash::Hash, V: Clone> BoundedMap<K, V> {
         self.map.insert(key, value);
     }
 
+    fn remove(&mut self, key: &K) -> Option<V> {
+        let v = self.map.remove(key);
+        if v.is_some() {
+            if let Some(pos) = self.order.iter().position(|k| k == key) {
+                self.order.remove(pos);
+            }
+        }
+        v
+    }
+
+    /// Snapshot of the entries matching `pred` (no recency change).
+    fn entries_where(&self, mut pred: impl FnMut(&K) -> bool) -> Vec<(K, V)> {
+        self.map
+            .iter()
+            .filter(|(k, _)| pred(k))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
     fn len(&self) -> usize {
         self.map.len()
     }
@@ -199,6 +268,19 @@ impl NormCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         telemetry::global().add("spamm.norm_cache.misses", 1);
         Ok((value, false))
+    }
+
+    /// Silent lookup: refreshes recency but bumps no hit/miss counter —
+    /// the delta-update path probing whether an entry is patchable, which
+    /// must not masquerade as request traffic in the stats.
+    pub fn lookup(&self, key: Fingerprint) -> Option<Arc<NormMap>> {
+        self.inner.lock().unwrap().get(&key)
+    }
+
+    /// Register a normmap computed outside the cache — a patched map
+    /// inserted under its post-update fingerprint.
+    pub fn insert(&self, key: Fingerprint, value: Arc<NormMap>) {
+        self.inner.lock().unwrap().insert(key, value);
     }
 
     pub fn hits(&self) -> u64 {
@@ -269,6 +351,27 @@ impl ScheduleCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of every cached entry whose key references operand `fp`
+    /// on either side (no recency change) — the delta-update repair scan.
+    pub fn entries_involving(&self, fp: Fingerprint) -> Vec<(ScheduleKey, Arc<Schedule>)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries_where(|k| k.a == fp || k.b == fp)
+    }
+
+    /// Register a schedule built outside `get_or_compute` — a repaired
+    /// schedule inserted under its post-update key.
+    pub fn insert(&self, key: ScheduleKey, value: Arc<Schedule>) {
+        self.inner.lock().unwrap().insert(key, value);
+    }
+
+    /// Drop one entry (stale key after an update, or an entry whose
+    /// repair inputs are gone — it will rebuild on next use).
+    pub fn remove(&self, key: &ScheduleKey) {
+        self.inner.lock().unwrap().remove(key);
     }
 }
 
@@ -382,6 +485,105 @@ impl ExecCaches {
         }
         Ok(sched)
     }
+
+    /// Delta-update a cached normmap: clone the entry under `old_fp`,
+    /// recompute just the touched tiles from the patched operand (bitwise
+    /// identical per tile to a full recompute — see
+    /// [`NormMap::patch_tiles`]), and register the result under `new_fp`.
+    /// Returns `None` when the old entry is not cached (evicted, or the
+    /// operand was never multiplied) — the caller falls back to a full
+    /// recompute on next use, which is always correct.
+    pub fn patch_normmap(
+        &self,
+        old_fp: Fingerprint,
+        new_fp: Fingerprint,
+        p_new: &PaddedMatrix,
+        tiles: &[(usize, usize)],
+    ) -> Option<Arc<NormMap>> {
+        let old = self.norms.lookup(old_fp)?;
+        let mut patched = (*old).clone();
+        patched.patch_tiles(p_new, tiles);
+        let patched = Arc::new(patched);
+        self.norms.insert(new_fp, patched.clone());
+        telemetry::global().add("spamm.norm_cache.patched", 1);
+        Some(patched)
+    }
+
+    /// Repair every cached schedule that references `old_fp` on either
+    /// side, re-keying it to `new_fp`: only output tiles in a touched row
+    /// (A side) or column (B side) are re-culled/retagged
+    /// ([`Schedule::repair`]), everything else is carried over verbatim.
+    /// Entries whose *other* operand's normmap is no longer cached are
+    /// dropped instead (they rebuild from scratch on next use — cold but
+    /// correct).  `new_nm` is the updated operand's patched normmap.
+    pub fn repair_schedules(
+        &self,
+        old_fp: Fingerprint,
+        new_fp: Fingerprint,
+        new_nm: &Arc<NormMap>,
+        tiles: &[(usize, usize)],
+    ) -> ScheduleRepairOutcome {
+        let mut out = ScheduleRepairOutcome::default();
+        for (key, sched) in self.schedules.entries_involving(old_fp) {
+            let other_nm = |fp: Fingerprint| -> Option<Arc<NormMap>> {
+                if fp == old_fp {
+                    Some(new_nm.clone())
+                } else {
+                    self.norms.lookup(fp)
+                }
+            };
+            let (Some(na), Some(nb)) = (other_nm(key.a), other_nm(key.b)) else {
+                self.schedules.remove(&key);
+                out.dropped += 1;
+                continue;
+            };
+            let tau = f32::from_bits(key.tau_bits);
+            let dt = f32::from_bits(key.density_bits);
+            let touched_a = (key.a == old_fp).then_some(tiles);
+            let touched_b = (key.b == old_fp).then_some(tiles);
+            match sched.repair(&na, &nb, tau, dt, touched_a, touched_b) {
+                Ok((repaired, rs)) => {
+                    self.schedules.remove(&key);
+                    let rekeyed = ScheduleKey {
+                        a: if key.a == old_fp { new_fp } else { key.a },
+                        b: if key.b == old_fp { new_fp } else { key.b },
+                        ..key
+                    };
+                    self.schedules.insert(rekeyed, Arc::new(repaired));
+                    out.repaired += 1;
+                    out.products_added += rs.products_added;
+                    out.products_removed += rs.products_removed;
+                    out.products_retagged += rs.products_retagged;
+                    telemetry::global().add("spamm.schedule_cache.repaired", 1);
+                }
+                Err(_) => {
+                    // Shape drift or out-of-range coords: the entry cannot
+                    // describe the updated operand — drop it.
+                    self.schedules.remove(&key);
+                    out.dropped += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Summary of one [`ExecCaches::repair_schedules`] sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScheduleRepairOutcome {
+    /// Cached schedules patched in place and re-keyed to the new
+    /// fingerprint.
+    pub repaired: usize,
+    /// Entries dropped (missing repair inputs) — they rebuild on next use.
+    pub dropped: usize,
+    /// Products added across all repaired schedules (norm products newly
+    /// crossing τ).
+    pub products_added: usize,
+    /// Products culled across all repaired schedules.
+    pub products_removed: usize,
+    /// Surviving products whose [`TileStrategy`](crate::spamm::schedule::TileStrategy)
+    /// flipped under the density threshold.
+    pub products_retagged: usize,
 }
 
 #[cfg(test)]
@@ -531,6 +733,56 @@ mod tests {
         assert_eq!(keyed.norms.data(), via.0.norms.data());
         assert_eq!(stats.norm_cache_hits, 1);
         assert_eq!(stats.norm_cache_misses, 1);
+    }
+
+    #[test]
+    fn fingerprint_patch_is_deterministic_and_delta_sensitive() {
+        let m = Matrix::randn(64, 64, 21);
+        let p = PaddedMatrix::new(&m, 32);
+        let base = fingerprint(&p);
+        let a = fingerprint_patch(base, &p, &[(0, 1)]);
+        assert_eq!(a, fingerprint_patch(base, &p, &[(0, 1)]));
+        assert_ne!(a, base);
+        assert_ne!(a, fingerprint_patch(base, &p, &[(1, 0)]));
+        assert_ne!(a, fingerprint_patch(base, &p, &[(0, 1), (1, 1)]));
+        // Different base → different key even for the same delta.
+        assert_ne!(a, fingerprint_patch(Fingerprint(1, 2), &p, &[(0, 1)]));
+    }
+
+    #[test]
+    fn patch_normmap_matches_full_recompute() {
+        use crate::spamm::normmap::normmap_with_density;
+        let caches = ExecCaches::new();
+        let m0 = Matrix::randn(64, 64, 22);
+        let p0 = PaddedMatrix::new(&m0, 32);
+        let f0 = fingerprint(&p0);
+        let mut stats = MultiplyStats::default();
+        caches
+            .normmap_keyed(f0, &mut stats, || Ok(normmap_with_density(&p0)))
+            .unwrap();
+        let mut m1 = m0.clone();
+        for r in 32..64 {
+            for c in 0..32 {
+                m1[(r, c)] = 0.25 * r as f32;
+            }
+        }
+        let p1 = PaddedMatrix::new(&m1, 32);
+        let f1 = fingerprint_patch(f0, &p1, &[(1, 0)]);
+        let patched = caches
+            .patch_normmap(f0, f1, &p1, &[(1, 0)])
+            .expect("old entry cached");
+        let full = normmap_with_density(&p1);
+        assert_eq!(patched.norms.data(), full.norms.data());
+        assert_eq!(patched.density.data(), full.density.data());
+        // The patched map is now cached under the new fingerprint.
+        let hit = caches
+            .normmap_keyed(f1, &mut stats, || panic!("must hit the patched entry"))
+            .unwrap();
+        assert_eq!(hit.norms.data(), full.norms.data());
+        // Unknown old fingerprint → None (caller recomputes on next use).
+        assert!(caches
+            .patch_normmap(Fingerprint(9, 9), f1, &p1, &[(0, 0)])
+            .is_none());
     }
 
     #[test]

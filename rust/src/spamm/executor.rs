@@ -30,11 +30,15 @@ use crate::config::{Precision, SpammConfig};
 use crate::error::{Error, Result};
 use crate::matrix::tiling::{gather_tiles, scatter_accumulate, PaddedMatrix};
 use crate::matrix::Matrix;
-use crate::runtime::residency::{DeviceTile, ResidencyPool, ResidentOperand, TileHandle, TileKey};
+use crate::runtime::residency::{
+    DeviceTile, PatchOutcome, ResidencyPool, ResidentOperand, TileHandle, TileKey,
+};
 use crate::runtime::{ArtifactBundle, Runtime};
 use crate::sparse::{pack_tile, packed_to_coo, spgemm};
-use crate::spamm::cache::{fingerprint, ExecCaches, Fingerprint};
-use crate::spamm::normmap::{normmap_with_density, NormMap};
+use crate::spamm::cache::{
+    fingerprint, fingerprint_patch, ExecCaches, Fingerprint, ScheduleRepairOutcome,
+};
+use crate::spamm::normmap::{normmap_with_density, resolve_density_threshold, NormMap};
 use crate::spamm::schedule::{ProductRef, Schedule, TileStrategy};
 use crate::spamm::tuner::{self, TuneParams};
 use crate::telemetry;
@@ -111,6 +115,17 @@ pub struct MultiplyStats {
     /// bounce), and on multi-device runs it includes eviction-forced
     /// re-bounces alongside true producer/consumer mismatches.
     pub cross_device_bytes: u64,
+    /// Delta-update accounting, folded into the first submit after an
+    /// operand update (front-end fields like the cache counters — not
+    /// absorbed from device workers): norm-map tiles re-censused in
+    /// place instead of a full get-norm pass, cached schedules repaired
+    /// in place instead of rebuilt, and the product-level churn those
+    /// repairs applied.
+    pub norm_tiles_patched: usize,
+    pub schedules_repaired: usize,
+    pub repair_products_added: usize,
+    pub repair_products_removed: usize,
+    pub repair_products_retagged: usize,
 }
 
 impl MultiplyStats {
@@ -211,6 +226,31 @@ impl<'a> Operand<'a> {
             fp: Some(r.fingerprint()),
         }
     }
+}
+
+/// Result of one delta update applied through
+/// [`SpammEngine::update_operand`]: the patched padded operand and its
+/// incrementally-derived fingerprint, plus what the caches and the
+/// residency pool did with the touched tiles.
+#[derive(Debug)]
+pub struct OperandUpdate {
+    /// Padded operand with the changed tiles overwritten (untouched tiles
+    /// bitwise identical to the previous content).
+    pub padded: PaddedMatrix,
+    /// New content fingerprint, derived incrementally from the old one
+    /// plus the changed tiles only.
+    pub fp: Fingerprint,
+    /// Whether the norm map was patched in place (old entry was cached)
+    /// rather than recomputed from scratch.
+    pub norm_patched: bool,
+    /// Touched tiles re-censused (norm + density) — zero on the full
+    /// recompute fallback.
+    pub norm_tiles_patched: usize,
+    /// What the residency pool migrated/uploaded/dropped.
+    pub pool: PatchOutcome,
+    /// Cached-schedule repair summary across every entry involving the
+    /// operand.
+    pub repair: ScheduleRepairOutcome,
 }
 
 /// Single-device SpAMM engine.
@@ -329,15 +369,10 @@ impl SpammEngine {
         stats.norm_secs = t.elapsed().as_secs_f64();
 
         let t = Instant::now();
-        let sched = self.caches.schedule_via(
-            fa,
-            fb,
-            tau,
-            self.cfg.density_threshold,
-            &na,
-            &nb,
-            &mut stats,
-        )?;
+        let dt = resolve_density_threshold(&self.cfg, &na, &nb);
+        let sched = self
+            .caches
+            .schedule_via(fa, fb, tau, dt, &na, &nb, &mut stats)?;
         stats.schedule_secs = t.elapsed().as_secs_f64();
         stats.valid_products = sched.valid_products();
         stats.total_products = sched.total_products();
@@ -395,23 +430,12 @@ impl SpammEngine {
         };
         stats.norm_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
+        let dt = resolve_density_threshold(&self.cfg, &na, &nb);
         let sched = if cached {
-            self.caches.schedule_via(
-                Some(fa),
-                Some(fb),
-                tau,
-                self.cfg.density_threshold,
-                &na,
-                &nb,
-                &mut stats,
-            )?
+            self.caches
+                .schedule_via(Some(fa), Some(fb), tau, dt, &na, &nb, &mut stats)?
         } else {
-            Arc::new(Schedule::build_adaptive(
-                &na,
-                &nb,
-                tau,
-                self.cfg.density_threshold,
-            )?)
+            Arc::new(Schedule::build_adaptive(&na, &nb, tau, dt)?)
         };
         stats.schedule_secs = t.elapsed().as_secs_f64();
         stats.valid_products = sched.valid_products();
@@ -428,6 +452,62 @@ impl SpammEngine {
         )?;
         stats.total_secs = t_total.elapsed().as_secs_f64();
         Ok((c, stats))
+    }
+
+    /// Apply a delta update to a prepared operand: overwrite the listed
+    /// tiles with `data` (one row-major LoNum² block per coordinate, in
+    /// the order of `changed`), derive the new content fingerprint
+    /// incrementally, patch the cached norm map (touched tiles only),
+    /// migrate the operand's resident tiles (uploading only the changed
+    /// ones), and *repair* every cached schedule involving the operand
+    /// instead of rebuilding it.  The engine twin of the session-level
+    /// `update`: the caller keeps the returned padded matrix +
+    /// fingerprint and threads them into
+    /// [`SpammEngine::multiply_prepared_with_stats`].
+    pub fn update_operand(
+        &self,
+        padded: &PaddedMatrix,
+        fp: Fingerprint,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<OperandUpdate> {
+        let new_padded = padded.with_patched_tiles(changed, data)?;
+        let mut tiles = changed.to_vec();
+        tiles.sort_unstable();
+        tiles.dedup();
+        let new_fp = fingerprint_patch(fp, &new_padded, &tiles);
+        let (nm, norm_patched) = match self.caches.patch_normmap(fp, new_fp, &new_padded, &tiles)
+        {
+            Some(nm) => (nm, true),
+            None => {
+                // Old norms not cached (cold operand or caching off):
+                // nothing to patch — take the full pass once and register
+                // it so the repair sweep and the next submit share it.
+                let nm = Arc::new(self.normmap_of(&new_padded)?);
+                if self.cfg.cache_enabled {
+                    self.caches.norms.insert(new_fp, nm.clone());
+                }
+                (nm, false)
+            }
+        };
+        let pool = match &self.pool {
+            Some(pool) => {
+                let l2 = new_padded.lonum * new_padded.lonum;
+                pool.patch_operand(fp, new_fp, &tiles, l2, |t, buf| {
+                    new_padded.copy_tile(t.0, t.1, buf)
+                })
+            }
+            None => PatchOutcome::default(),
+        };
+        let repair = self.caches.repair_schedules(fp, new_fp, &nm, &tiles);
+        Ok(OperandUpdate {
+            padded: new_padded,
+            fp: new_fp,
+            norm_patched,
+            norm_tiles_patched: if norm_patched { tiles.len() } else { 0 },
+            pool,
+            repair,
+        })
     }
 
     /// Shared execution tail of both multiply entry points: allocate the

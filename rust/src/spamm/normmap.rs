@@ -3,6 +3,7 @@
 //! via `SpammConfig::device_normmap`); both must agree to float tolerance —
 //! rust/tests/integration.rs checks that.
 
+use crate::config::SpammConfig;
 use crate::matrix::tiling::PaddedMatrix;
 use crate::matrix::Matrix;
 
@@ -51,6 +52,86 @@ impl NormMap {
     pub fn tile_cols(&self) -> usize {
         self.norms.cols()
     }
+
+    /// Recompute norm + density census for just the listed tiles of `p` —
+    /// the delta-update path.  Each touched tile runs the exact inner loop
+    /// of [`normmap_with_density`] (same traversal, same f64 accumulation,
+    /// same census rule), so a patched map is bitwise identical to a full
+    /// recompute of the updated operand.  Untouched tiles are left alone.
+    pub fn patch_tiles(&mut self, p: &PaddedMatrix, tiles: &[(usize, usize)]) {
+        let l = p.lonum;
+        let cols = p.inner.cols();
+        let data = p.inner.data();
+        let inv_elems = 1.0f32 / (l * l) as f32;
+        for &(ti, tj) in tiles {
+            let mut acc = 0.0f64;
+            let mut nnz = 0usize;
+            for r in 0..l {
+                let row = &data[(ti * l + r) * cols + tj * l..][..l];
+                for &x in row {
+                    acc += (x as f64) * (x as f64);
+                    nnz += (x.abs() > DENSITY_FLOOR) as usize;
+                }
+            }
+            self.norms[(ti, tj)] = acc.sqrt() as f32;
+            self.density[(ti, tj)] = nnz as f32 * inv_elems;
+        }
+    }
+}
+
+/// Minimum bimodality gap for [`auto_density_threshold`]: if no pair of
+/// adjacent sorted densities is separated by at least this much, the
+/// census is considered unimodal and auto mode disables format routing
+/// (returns 0.0) rather than split a continuum arbitrarily.
+pub const AUTO_THRESHOLD_MIN_GAP: f32 = 0.25;
+
+/// Derive a density threshold from the operands' density histograms
+/// instead of a hand-tuned knob: sort the combined per-tile densities,
+/// find the largest gap between adjacent values, and return its midpoint
+/// when the gap is at least [`AUTO_THRESHOLD_MIN_GAP`] (a clearly bimodal
+/// census — e.g. decayed tiles near 0 vs gaussian tiles near 1).
+/// Unimodal censuses return 0.0, which disables adaptive routing — the
+/// conservative all-dense behavior.  Deterministic: a pure function of
+/// the two density maps, so the resolved value (and with it the
+/// schedule-cache key) is stable across calls for the same operand pair.
+pub fn auto_density_threshold(na: &NormMap, nb: &NormMap) -> f32 {
+    let mut ds: Vec<f32> = na
+        .density
+        .data()
+        .iter()
+        .chain(nb.density.data().iter())
+        .copied()
+        .collect();
+    if ds.len() < 2 {
+        return 0.0;
+    }
+    ds.sort_by(f32::total_cmp);
+    let mut best_gap = 0.0f32;
+    let mut best_mid = 0.0f32;
+    for w in ds.windows(2) {
+        let gap = w[1] - w[0];
+        if gap > best_gap {
+            best_gap = gap;
+            best_mid = w[0] + 0.5 * gap;
+        }
+    }
+    if best_gap < AUTO_THRESHOLD_MIN_GAP {
+        0.0
+    } else {
+        best_mid.clamp(0.0, 1.0)
+    }
+}
+
+/// The density threshold a schedule build should use for this operand
+/// pair: the configured value, or the histogram-derived one when
+/// `--density-threshold auto` is in effect.  Explicit values (including
+/// the default 0) bypass the histogram entirely — exact legacy behavior.
+pub fn resolve_density_threshold(cfg: &SpammConfig, na: &NormMap, nb: &NormMap) -> f32 {
+    if cfg.density_threshold_auto {
+        auto_density_threshold(na, nb)
+    } else {
+        cfg.density_threshold
+    }
 }
 
 /// Frobenius norm of one row-major tile buffer (f64 accumulation, f32
@@ -65,6 +146,16 @@ pub fn tile_fnorm(tile: &[f32]) -> f32 {
         acc += (x as f64) * (x as f64);
     }
     acc.sqrt() as f32
+}
+
+/// Census twin of [`tile_fnorm`]: the fraction of a row-major tile
+/// buffer's entries with `|x| > DENSITY_FLOOR`, computed with the same
+/// count-then-scale arithmetic as [`normmap_with_density`] — a census
+/// taken from a device-resident tile is bitwise identical to the host
+/// census of the same content.
+pub fn tile_density(tile: &[f32]) -> f32 {
+    let nnz = tile.iter().filter(|x| x.abs() > DENSITY_FLOOR).count();
+    nnz as f32 * (1.0f32 / tile.len() as f32)
 }
 
 /// normmap[i, j] = ‖tile(i, j)‖_F (f64 accumulation, f32 result — same
@@ -173,6 +264,80 @@ mod tests {
                 assert_eq!(nm.density[(ti, tj)], 1.0);
             }
         }
+    }
+
+    #[test]
+    fn patch_tiles_matches_full_recompute_bitwise() {
+        let m0 = Matrix::randn(96, 96, 11);
+        let mut m1 = m0.clone();
+        // Drift two tiles: (0,1) and (2,2) of the 3x3 grid.
+        for r in 0..32 {
+            for c in 32..64 {
+                m1[(r, c)] += 0.5;
+            }
+        }
+        for r in 64..96 {
+            for c in 64..96 {
+                m1[(r, c)] = 0.0;
+            }
+        }
+        let p1 = PaddedMatrix::new(&m1, 32);
+        let mut patched = normmap_with_density(&PaddedMatrix::new(&m0, 32));
+        patched.patch_tiles(&p1, &[(0, 1), (2, 2)]);
+        let full = normmap_with_density(&p1);
+        for ti in 0..3 {
+            for tj in 0..3 {
+                assert_eq!(
+                    patched.norms[(ti, tj)].to_bits(),
+                    full.norms[(ti, tj)].to_bits()
+                );
+                assert_eq!(
+                    patched.density[(ti, tj)].to_bits(),
+                    full.density[(ti, tj)].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tile_density_matches_census_bitwise() {
+        let m = Matrix::decay_exponential(96, 1.0, 0.5, 13);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap_with_density(&p);
+        let mut buf = vec![0.0f32; 32 * 32];
+        for ti in 0..p.tile_rows() {
+            for tj in 0..p.tile_cols() {
+                p.copy_tile(ti, tj, &mut buf);
+                assert_eq!(tile_density(&buf).to_bits(), nm.density[(ti, tj)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_threshold_splits_bimodal_census() {
+        // Bimodal: sparse cluster near 0.1, dense cluster at 1.0.
+        let mk = |vals: Vec<f32>| {
+            let n = vals.len();
+            NormMap {
+                norms: Matrix::from_vec(1, n, vec![1.0; n]).unwrap(),
+                density: Matrix::from_vec(1, n, vals).unwrap(),
+            }
+        };
+        let na = mk(vec![0.05, 0.08, 1.0, 1.0]);
+        let nb = mk(vec![0.1, 1.0, 1.0, 1.0]);
+        let t = auto_density_threshold(&na, &nb);
+        assert!(t > 0.1 && t < 1.0, "got {t}");
+        // Unimodal: everything dense — no split, routing disabled.
+        let all_dense = mk(vec![1.0; 4]);
+        assert_eq!(auto_density_threshold(&all_dense, &all_dense), 0.0);
+        // Explicit config bypasses the histogram.
+        let mut cfg = SpammConfig {
+            density_threshold: 0.3,
+            ..SpammConfig::default()
+        };
+        assert_eq!(resolve_density_threshold(&cfg, &na, &nb), 0.3);
+        cfg.density_threshold_auto = true;
+        assert_eq!(resolve_density_threshold(&cfg, &na, &nb), t);
     }
 
     #[test]

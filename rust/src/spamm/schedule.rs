@@ -107,37 +107,121 @@ impl Schedule {
         for i in 0..s.tile_rows {
             for j in 0..s.tile_cols {
                 let slot = i * s.tile_cols + j;
-                let ks = &s.valid_k[slot];
-                let strat = &mut s.strategies[slot];
-                for (pos, &k) in ks.iter().enumerate() {
-                    let k = k as usize;
-                    if na.density[(i, k)] < density_threshold
-                        && nb.density[(k, j)] < density_threshold
-                    {
-                        strat[pos] = TileStrategy::Sparse;
-                    }
-                }
-                // Promote runs of ≥2 consecutive Sparse to Packed.
-                let mut pos = 0;
-                while pos < strat.len() {
-                    if strat[pos] != TileStrategy::Sparse {
-                        pos += 1;
-                        continue;
-                    }
-                    let mut end = pos + 1;
-                    while end < strat.len() && strat[end] == TileStrategy::Sparse {
-                        end += 1;
-                    }
-                    if end - pos >= 2 {
-                        for s in &mut strat[pos..end] {
-                            *s = TileStrategy::Packed;
-                        }
-                    }
-                    pos = end;
-                }
+                s.strategies[slot] =
+                    tile_strategies(na, nb, density_threshold, i, j, &s.valid_k[slot]);
             }
         }
         Ok(s)
+    }
+
+    /// Repair this schedule after a delta update of one (or both)
+    /// operands, instead of rebuilding the whole grid.  Culling, strategy
+    /// tagging, and packed-run fusion are all *per output tile* — the
+    /// product list of C[i,j] depends only on A row i and B column j — so
+    /// only tiles in a touched A row (`touched_a` holds updated A tile
+    /// coords (i,k)) or touched B column (`touched_b` holds updated B
+    /// tile coords (k,j)) are re-derived, via the exact per-tile logic of
+    /// [`Schedule::build_adaptive`]; every other slot is carried over
+    /// verbatim.  The result is bitwise identical to a full
+    /// `build_adaptive` over the updated normmaps, at a cost proportional
+    /// to the touched rows/columns.
+    ///
+    /// `na`/`nb` are the *post-update* normmaps.  Returns the repaired
+    /// schedule plus added/removed/retagged product counts.
+    pub fn repair(
+        &self,
+        na: &NormMap,
+        nb: &NormMap,
+        tau: f32,
+        density_threshold: f32,
+        touched_a: Option<&[(usize, usize)]>,
+        touched_b: Option<&[(usize, usize)]>,
+    ) -> Result<(Schedule, RepairStats)> {
+        if na.tile_rows() != self.tile_rows
+            || na.tile_cols() != self.tile_k
+            || nb.tile_rows() != self.tile_k
+            || nb.tile_cols() != self.tile_cols
+        {
+            return Err(Error::Shape(format!(
+                "repair: normmaps {}x{} / {}x{} do not match schedule grid {}x{}x{}",
+                na.tile_rows(),
+                na.tile_cols(),
+                nb.tile_rows(),
+                nb.tile_cols(),
+                self.tile_rows,
+                self.tile_k,
+                self.tile_cols,
+            )));
+        }
+        let mut rows = std::collections::BTreeSet::new();
+        for &(i, k) in touched_a.unwrap_or(&[]) {
+            if i >= self.tile_rows || k >= self.tile_k {
+                return Err(Error::Shape(format!(
+                    "repair: touched A tile ({i},{k}) outside {}x{} grid",
+                    self.tile_rows, self.tile_k
+                )));
+            }
+            rows.insert(i);
+        }
+        let mut cols = std::collections::BTreeSet::new();
+        for &(k, j) in touched_b.unwrap_or(&[]) {
+            if k >= self.tile_k || j >= self.tile_cols {
+                return Err(Error::Shape(format!(
+                    "repair: touched B tile ({k},{j}) outside {}x{} grid",
+                    self.tile_k, self.tile_cols
+                )));
+            }
+            cols.insert(j);
+        }
+        let mut out = self.clone();
+        let mut stats = RepairStats::default();
+        for i in 0..self.tile_rows {
+            for j in 0..self.tile_cols {
+                if !rows.contains(&i) && !cols.contains(&j) {
+                    continue;
+                }
+                let slot = i * self.tile_cols + j;
+                // Re-cull this tile's k-list (same loop as `build`).
+                let mut ks = Vec::new();
+                for k in 0..self.tile_k {
+                    if na.norms[(i, k)] * nb.norms[(k, j)] >= tau {
+                        ks.push(k as u32);
+                    }
+                }
+                let strat = tile_strategies(na, nb, density_threshold, i, j, &ks);
+                // Diff against the old slot (both k-lists are ascending).
+                let (old_ks, old_st) = (&self.valid_k[slot], &self.strategies[slot]);
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < old_ks.len() || b < ks.len() {
+                    match (old_ks.get(a), ks.get(b)) {
+                        (Some(&ko), Some(&kn)) if ko == kn => {
+                            if old_st[a] != strat[b] {
+                                stats.products_retagged += 1;
+                            }
+                            a += 1;
+                            b += 1;
+                        }
+                        (Some(&ko), Some(&kn)) if ko < kn => {
+                            stats.products_removed += 1;
+                            a += 1;
+                        }
+                        (Some(_), Some(_)) | (None, Some(_)) => {
+                            stats.products_added += 1;
+                            b += 1;
+                        }
+                        (Some(_), None) => {
+                            stats.products_removed += 1;
+                            a += 1;
+                        }
+                        (None, None) => unreachable!(),
+                    }
+                }
+                stats.tiles_rebuilt += 1;
+                out.valid_k[slot] = ks;
+                out.strategies[slot] = strat;
+            }
+        }
+        Ok((out, stats))
     }
 
     /// (dense, sparse, packed) product counts over the whole schedule.
@@ -236,6 +320,65 @@ impl Schedule {
                 })
         })
     }
+}
+
+/// Strategy tags of one output tile's surviving k-list: `Sparse` where
+/// both operand tiles fall strictly below the density threshold, then
+/// runs of ≥ 2 consecutive `Sparse` promoted to `Packed`.  The single
+/// per-tile source of truth shared by [`Schedule::build_adaptive`] (full
+/// grid) and [`Schedule::repair`] (touched tiles only) — one code path,
+/// so a repaired tile cannot drift from a rebuilt one.  A non-positive
+/// threshold yields all-`Dense`.
+fn tile_strategies(
+    na: &NormMap,
+    nb: &NormMap,
+    density_threshold: f32,
+    i: usize,
+    j: usize,
+    ks: &[u32],
+) -> Vec<TileStrategy> {
+    let mut strat = vec![TileStrategy::Dense; ks.len()];
+    if density_threshold <= 0.0 {
+        return strat;
+    }
+    for (pos, &k) in ks.iter().enumerate() {
+        let k = k as usize;
+        if na.density[(i, k)] < density_threshold && nb.density[(k, j)] < density_threshold {
+            strat[pos] = TileStrategy::Sparse;
+        }
+    }
+    // Promote runs of ≥2 consecutive Sparse to Packed.
+    let mut pos = 0;
+    while pos < strat.len() {
+        if strat[pos] != TileStrategy::Sparse {
+            pos += 1;
+            continue;
+        }
+        let mut end = pos + 1;
+        while end < strat.len() && strat[end] == TileStrategy::Sparse {
+            end += 1;
+        }
+        if end - pos >= 2 {
+            for s in &mut strat[pos..end] {
+                *s = TileStrategy::Packed;
+            }
+        }
+        pos = end;
+    }
+    strat
+}
+
+/// Per-slot change counts from one [`Schedule::repair`] pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairStats {
+    /// Output tiles whose k-list/strategies were re-derived.
+    pub tiles_rebuilt: usize,
+    /// Products newly crossing τ (present after, absent before).
+    pub products_added: usize,
+    /// Products newly culled by τ.
+    pub products_removed: usize,
+    /// Surviving products whose [`TileStrategy`] flipped.
+    pub products_retagged: usize,
 }
 
 /// One surviving tile product A[i,k]·B[k,j] → C[i,j].
@@ -405,6 +548,111 @@ mod tests {
         };
         let s = Schedule::build_adaptive(&na, &nb, 0.0, 0.5).unwrap();
         assert_eq!(s.strategies_for(0, 0), &[TileStrategy::Dense, TileStrategy::Sparse]);
+    }
+
+    #[test]
+    fn repair_matches_full_rebuild_bitwise() {
+        use crate::matrix::tiling::PaddedMatrix;
+        use crate::spamm::normmap::normmap_with_density;
+
+        // A drifts in tiles (0,1) and (3,2); B drifts in (1,0).  Repair
+        // over the touched rows/columns must equal a full rebuild for
+        // every (τ, threshold) combination.
+        let a0 = Matrix::decay_exponential(128, 1.0, 0.5, 31);
+        let b0 = Matrix::decay_exponential(128, 1.0, 0.5, 32);
+        let mut a1 = a0.clone();
+        let mut b1 = b0.clone();
+        for r in 0..32 {
+            for c in 32..64 {
+                a1[(r, c)] += 0.75;
+            }
+        }
+        for r in 96..128 {
+            for c in 64..96 {
+                a1[(r, c)] = 0.0;
+            }
+        }
+        for r in 32..64 {
+            for c in 0..32 {
+                b1[(r, c)] += 1.5;
+            }
+        }
+        let nm = |m: &Matrix| normmap_with_density(&PaddedMatrix::new(m, 32));
+        let (na0, nb0) = (nm(&a0), nm(&b0));
+        let (na1, nb1) = (nm(&a1), nm(&b1));
+        for tau in [0.0f32, 1e-3] {
+            for dt in [0.0f32, 0.25, 0.9] {
+                let old = Schedule::build_adaptive(&na0, &nb0, tau, dt).unwrap();
+                let (repaired, rs) = old
+                    .repair(
+                        &na1,
+                        &nb1,
+                        tau,
+                        dt,
+                        Some(&[(0, 1), (3, 2)]),
+                        Some(&[(1, 0)]),
+                    )
+                    .unwrap();
+                let rebuilt = Schedule::build_adaptive(&na1, &nb1, tau, dt).unwrap();
+                assert_eq!(repaired.valid_k, rebuilt.valid_k, "tau {tau} dt {dt}");
+                assert_eq!(repaired.strategies, rebuilt.strategies, "tau {tau} dt {dt}");
+                // Touched rows {0,3} + column {0}: 2 rows × 4 cols + 2
+                // remaining tiles of column 0.
+                assert_eq!(rs.tiles_rebuilt, 2 * 4 + 2, "tau {tau} dt {dt}");
+            }
+        }
+        // A-side-only repair with no B changes.
+        let old = Schedule::build_adaptive(&na0, &nb0, 1e-3, 0.25).unwrap();
+        let (repaired, _) = old
+            .repair(&na1, &nb0, 1e-3, 0.25, Some(&[(0, 1), (3, 2)]), None)
+            .unwrap();
+        let rebuilt = Schedule::build_adaptive(&na1, &nb0, 1e-3, 0.25).unwrap();
+        assert_eq!(repaired.valid_k, rebuilt.valid_k);
+        assert_eq!(repaired.strategies, rebuilt.strategies);
+    }
+
+    #[test]
+    fn repair_counts_added_removed_retagged() {
+        // 1x1 tile grid with tile_k = 2: start with both products
+        // surviving, then push k=0 below τ and flip k=1's density.
+        let mk = |n0: f32, n1: f32, d0: f32, d1: f32| NormMap {
+            norms: nm(1, 2, |_, k| if k == 0 { n0 } else { n1 }),
+            density: nm(1, 2, |_, k| if k == 0 { d0 } else { d1 }),
+        };
+        let mkb = |d: f32| NormMap {
+            norms: nm(2, 1, |_, _| 1.0),
+            density: nm(2, 1, |_, _| d),
+        };
+        let na0 = mk(1.0, 1.0, 0.9, 0.9);
+        let nb = mkb(0.1);
+        let old = Schedule::build_adaptive(&na0, &nb, 0.5, 0.5).unwrap();
+        assert_eq!(old.ks(0, 0), &[0, 1]);
+        // After the update: k=0 culled (norm 0.1 < τ), k=1 goes sparse.
+        let na1 = mk(0.1, 1.0, 0.9, 0.2);
+        let (repaired, rs) = old
+            .repair(&na1, &nb, 0.5, 0.5, Some(&[(0, 0), (0, 1)]), None)
+            .unwrap();
+        assert_eq!(repaired.ks(0, 0), &[1]);
+        assert_eq!(repaired.strategies_for(0, 0), &[TileStrategy::Sparse]);
+        assert_eq!(rs.products_removed, 1);
+        assert_eq!(rs.products_retagged, 1);
+        assert_eq!(rs.products_added, 0);
+        // Reverse direction: the culled product reappears.
+        let (back, rs2) = repaired
+            .repair(&na0, &nb, 0.5, 0.5, Some(&[(0, 0), (0, 1)]), None)
+            .unwrap();
+        assert_eq!(back.ks(0, 0), &[0, 1]);
+        assert_eq!(rs2.products_added, 1);
+    }
+
+    #[test]
+    fn repair_rejects_bad_coords_and_shapes() {
+        let na = NormMap::dense_like(nm(2, 2, |_, _| 1.0));
+        let s = Schedule::build_adaptive(&na, &na, 0.0, 0.0).unwrap();
+        assert!(s.repair(&na, &na, 0.0, 0.0, Some(&[(2, 0)]), None).is_err());
+        assert!(s.repair(&na, &na, 0.0, 0.0, None, Some(&[(0, 5)])).is_err());
+        let wrong = NormMap::dense_like(nm(3, 2, |_, _| 1.0));
+        assert!(s.repair(&wrong, &na, 0.0, 0.0, None, None).is_err());
     }
 
     #[test]

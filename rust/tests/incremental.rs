@@ -1,0 +1,261 @@
+//! Integration tests for incremental operand updates
+//! ([`SpammSession::update`]): delta uploads, normmap patching, schedule
+//! repair, and plan migration.  The headline property: update-then-multiply
+//! is bitwise identical to a fresh put of the drifted matrix, across τ,
+//! density thresholds, and device counts.
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, ExprGraph, SpammSession};
+use cuspamm::matrix::Matrix;
+use cuspamm::util::prng::Rng;
+
+use common::bundle;
+
+/// Tile edge of the test bundle.
+const L: usize = 32;
+
+fn session(cfg: SpammConfig) -> SpammSession {
+    SpammSession::new(&bundle(), cfg).unwrap()
+}
+
+/// One `L×L` block of small random drift per changed tile, concatenated
+/// in `changed` order — the payload layout `update` expects.
+fn drift_payload(changed: &[(usize, usize)], seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..changed.len() * L * L)
+        .map(|_| 0.05 * rng.range_f32(-1.0, 1.0))
+        .collect()
+}
+
+/// Apply the same payload to a host-side mirror of the operand, so a
+/// fresh `put` of the mirror sees exactly what `update` produced.
+fn patch_host(m: &mut Matrix, changed: &[(usize, usize)], data: &[f32]) {
+    let n = m.cols();
+    for (k, &(ti, tj)) in changed.iter().enumerate() {
+        let block = &data[k * L * L..(k + 1) * L * L];
+        for r in 0..L {
+            m.data_mut()[(ti * L + r) * n + tj * L..][..L]
+                .copy_from_slice(&block[r * L..(r + 1) * L]);
+        }
+    }
+}
+
+/// An `n×n` matrix whose diagonal tiles are dense and whose off-diagonal
+/// tiles hold a single nonzero — under a 0.25 density threshold the
+/// off-diagonal tiles route through the packed (COO) tile path.
+fn block_sparse(n: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::zeros(n, n);
+    let side = n / L;
+    let mut rng = Rng::new(seed);
+    for ti in 0..side {
+        for tj in 0..side {
+            if ti == tj {
+                for r in 0..L {
+                    for c in 0..L {
+                        m.data_mut()[(ti * L + r) * n + tj * L + c] = rng.range_f32(-1.0, 1.0);
+                    }
+                }
+            } else {
+                let (r, c) = (rng.below(L), rng.below(L));
+                m.data_mut()[(ti * L + r) * n + tj * L + c] = rng.range_f32(0.5, 1.0);
+            }
+        }
+    }
+    m
+}
+
+/// The headline property: for every (devices, τ, density-threshold)
+/// combination, updating three tiles of a prepared operand and re-running
+/// the migrated plan produces bits identical to a fresh session that
+/// `put` the drifted matrix and built everything cold.
+#[test]
+fn update_matches_fresh_put_across_tau_threshold_devices() {
+    let n = 4 * L;
+    let changed = [(0usize, 1usize), (2, 2), (3, 0)];
+    for devices in [1usize, 2] {
+        for tau in [0.0f32, 1e-3] {
+            for dt in [0.0f32, 0.25] {
+                let cfg = SpammConfig {
+                    devices,
+                    density_threshold: dt,
+                    ..SpammConfig::default()
+                };
+                let mut host = Matrix::decay_algebraic(n, 0.1, 0.1, 17);
+                let s = session(cfg.clone());
+                let aid = s.put(&host).unwrap();
+                let plan = s.prepare(aid, aid, Approx::Tau(tau)).unwrap();
+                let _cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+                let data = drift_payload(&changed, 40 + devices as u64);
+                patch_host(&mut host, &changed, &data);
+                let rep = s.update(aid, &changed, &data).unwrap();
+                assert_eq!(rep.tiles_changed, 3, "{devices}d τ={tau} dt={dt}");
+                assert!(rep.norm_patched, "{devices}d τ={tau} dt={dt}: {rep:?}");
+                assert_eq!(rep.norm_tiles_patched, 3, "{devices}d τ={tau} dt={dt}");
+                assert!(
+                    rep.schedules_repaired >= 1,
+                    "{devices}d τ={tau} dt={dt}: the cached schedule must be \
+                     repaired, not rebuilt: {rep:?}"
+                );
+                assert_eq!(rep.plans_migrated, 1, "{devices}d τ={tau} dt={dt}");
+                let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+                assert_eq!(
+                    warm.stats.schedule_cache_misses, 0,
+                    "{devices}d τ={tau} dt={dt}: migrated plan must reuse the \
+                     repaired schedule"
+                );
+
+                let f = session(cfg);
+                let fid = f.put(&host).unwrap();
+                let fplan = f.prepare(fid, fid, Approx::Tau(tau)).unwrap();
+                let fresh = f.wait(f.submit(fplan).unwrap()).unwrap();
+                assert_eq!(
+                    warm.c.data(),
+                    fresh.c.data(),
+                    "{devices}d τ={tau} dt={dt}: update-then-multiply must be \
+                     bitwise identical to a fresh put of the drifted matrix"
+                );
+            }
+        }
+    }
+}
+
+/// Updates stay correct when the device pool is too small to hold the
+/// operand: evicted tiles simply aren't patched (they re-upload on next
+/// use), and only still-resident changed tiles cost transfer.
+#[test]
+fn update_under_pool_eviction_pressure_stays_correct() {
+    let n = 4 * L;
+    let tile_bytes = L * L * 4;
+    let cfg = SpammConfig {
+        device_mem_budget: 8 * tile_bytes, // half of one 16-tile operand
+        ..SpammConfig::default()
+    };
+    let mut host = Matrix::decay_algebraic(n, 0.1, 0.1, 23);
+    let s = session(cfg.clone());
+    let aid = s.put(&host).unwrap();
+    let plan = s.prepare(aid, aid, Approx::Tau(1e-4)).unwrap();
+    let _cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let changed = [(1usize, 1usize), (0, 3), (2, 0), (3, 3)];
+    let data = drift_payload(&changed, 9);
+    patch_host(&mut host, &changed, &data);
+    let rep = s.update(aid, &changed, &data).unwrap();
+    assert!(
+        rep.uploaded_tiles <= changed.len(),
+        "only still-resident changed tiles may upload: {rep:?}"
+    );
+    let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let f = session(cfg);
+    let fid = f.put(&host).unwrap();
+    let fplan = f.prepare(fid, fid, Approx::Tau(1e-4)).unwrap();
+    let fresh = f.wait(f.submit(fplan).unwrap()).unwrap();
+    assert_eq!(warm.c.data(), fresh.c.data());
+}
+
+/// Regression: a changed tile's cached *packed* (COO) payload is dropped,
+/// never re-keyed to the new fingerprint — a stale packed variant would
+/// silently feed the sparse tile path pre-update bytes.
+#[test]
+fn stale_packed_payloads_are_dropped_on_update() {
+    let n = 4 * L;
+    let cfg = SpammConfig {
+        density_threshold: 0.25,
+        ..SpammConfig::default()
+    };
+    let mut host = block_sparse(n, 5);
+    let s = session(cfg.clone());
+    let aid = s.put(&host).unwrap();
+    let plan = s.prepare(aid, aid, Approx::Tau(0.0)).unwrap();
+    let _cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    // Move the off-diagonal tile (0,2)'s nonzero somewhere else: same
+    // density class (still packed-eligible), different content.
+    let mut data = [0.0f32; L * L];
+    data[3 * L + 7] = 0.9;
+    patch_host(&mut host, &[(0, 2)], &data);
+    let rep = s.update(aid, &[(0, 2)], &data).unwrap();
+    assert!(
+        rep.dropped_stale >= 1,
+        "the changed tile's resident packed payload must be dropped: {rep:?}"
+    );
+    let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let f = session(cfg);
+    let fid = f.put(&host).unwrap();
+    let fplan = f.prepare(fid, fid, Approx::Tau(0.0)).unwrap();
+    let fresh = f.wait(f.submit(fplan).unwrap()).unwrap();
+    assert_eq!(
+        warm.c.data(),
+        fresh.c.data(),
+        "a stale packed payload surviving the update would corrupt these bits"
+    );
+}
+
+/// Malformed updates are rejected atomically: the operand, its caches,
+/// and its prepared plans are left exactly as they were.
+#[test]
+fn update_validates_inputs_and_leaves_state_intact() {
+    let n = 4 * L;
+    let host = Matrix::decay_algebraic(n, 0.1, 0.1, 31);
+    let s = session(SpammConfig::default());
+    let aid = s.put(&host).unwrap();
+    let plan = s.prepare(aid, aid, Approx::Tau(1e-4)).unwrap();
+    let cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    // Payload length must be exactly changed.len() tiles.
+    assert!(s.update(aid, &[(0, 0)], &[0.0; 7]).is_err());
+    assert!(s.update(aid, &[(0, 0)], &[0.0; 2 * L * L]).is_err());
+    // Tile coordinates must lie inside the padded grid.
+    assert!(s.update(aid, &[(4, 0)], &[0.0; L * L]).is_err());
+    assert!(s.update(aid, &[(0, 9)], &[0.0; L * L]).is_err());
+
+    // Nothing changed: the plan still runs and reproduces the cold bits.
+    let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+    assert_eq!(warm.c.data(), cold.c.data());
+
+    // Duplicate coordinates collapse to one logical tile change.
+    let dup = [(1usize, 1usize), (1, 1)];
+    let data = drift_payload(&dup, 3);
+    let rep = s.update(aid, &dup, &data).unwrap();
+    assert_eq!(rep.tiles_changed, 1);
+}
+
+/// Expression plans referencing an updated operand migrate too: the next
+/// graph submit runs against the new bits and matches a cold rebuild.
+#[test]
+fn expr_plans_survive_updates_of_their_inputs() {
+    let n = 4 * L;
+    let tau = 1e-4f32;
+    let cfg = SpammConfig::default();
+    let mut host = Matrix::decay_algebraic(n, 0.1, 0.1, 29);
+    let s = session(cfg.clone());
+    let aid = s.put(&host).unwrap();
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let sq = g.spamm(leaf, leaf, Approx::Tau(tau));
+    let cube = g.spamm(sq, leaf, Approx::Tau(tau));
+    g.output(cube);
+    let ep = s.prepare_expr(&g, &[aid]).unwrap();
+    let _cold = s.wait(s.submit_expr(ep).unwrap()).unwrap();
+
+    let changed = [(1usize, 2usize), (3, 1)];
+    let data = drift_payload(&changed, 77);
+    patch_host(&mut host, &changed, &data);
+    let rep = s.update(aid, &changed, &data).unwrap();
+    assert_eq!(rep.expr_plans_migrated, 1, "{rep:?}");
+    let warm = s.wait(s.submit_expr(ep).unwrap()).unwrap();
+
+    let f = session(cfg);
+    let fid = f.put(&host).unwrap();
+    let fep = f.prepare_expr(&g, &[fid]).unwrap();
+    let fresh = f.wait(f.submit_expr(fep).unwrap()).unwrap();
+    assert_eq!(
+        warm.c.data(),
+        fresh.c.data(),
+        "a migrated expression plan must reproduce the cold rebuild bitwise"
+    );
+}
