@@ -95,6 +95,15 @@ pub struct SpammConfig {
     /// operands; LRU eviction of released, unpinned entries).
     /// 0 = unlimited.  Accepts `k`/`m`/`g` suffixes.
     pub store_budget: usize,
+    /// Directory of the content-addressed on-disk warm-start store
+    /// ([`crate::store::WarmStore`]): normmaps, compacted schedules,
+    /// tuned τ results, and frozen hostsim bundles persist here across
+    /// process restarts.  Empty (the default) disables persistence.
+    pub store_dir: String,
+    /// Kill switch for the warm-start store (`--no-store`): when false,
+    /// `store_dir` is ignored and every request runs the in-memory-only
+    /// cold path, byte-identical to a build without the store.
+    pub store_enabled: bool,
     /// Load-balance strategy.
     pub balance: Balance,
     /// Compute normmaps on-device (get-norm artifact) or on the host.
@@ -137,6 +146,8 @@ impl Default for SpammConfig {
             device_mem_budget: 256 * 1024 * 1024,
             queue_depth: 64,
             store_budget: 1024 * 1024 * 1024,
+            store_dir: String::new(),
+            store_enabled: true,
             balance: Balance::Strided(4),
             density_threshold: 0.0,
             density_threshold_auto: false,
@@ -161,6 +172,8 @@ impl SpammConfig {
             "device_mem_budget" => self.device_mem_budget = parse_bytes(key, value)?,
             "queue_depth" => self.queue_depth = parse_num(key, value)?,
             "store_budget" => self.store_budget = parse_bytes(key, value)?,
+            "store_dir" => self.store_dir = value.to_string(),
+            "store_enabled" => self.store_enabled = parse_bool(key, value)?,
             "density_threshold" => {
                 if value.trim() == "auto" {
                     self.density_threshold_auto = true;

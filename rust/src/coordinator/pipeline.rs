@@ -73,7 +73,10 @@ pub(crate) struct DeviceResult {
 
 impl Coordinator {
     pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<Coordinator> {
-        Coordinator::with_shared(bundle, cfg, Arc::new(ExecCaches::new()), None)
+        let caches = Arc::new(ExecCaches::with_store(crate::store::WarmStore::from_config(
+            &cfg,
+        )));
+        Coordinator::with_shared(bundle, cfg, caches, None)
     }
 
     /// Construct a coordinator over externally-owned caches and residency
@@ -156,9 +159,26 @@ impl Coordinator {
     pub fn tune_tau(&self, a: &Matrix, b: &Matrix, target: f64) -> Result<TuneResult> {
         check_inner_dims("tune_tau", a, b)?;
         let mut scratch = MultiplyStats::default();
-        let (na, _) = self.cached_normmap(&PaddedMatrix::new(a, self.cfg.lonum), &mut scratch)?;
-        let (nb, _) = self.cached_normmap(&PaddedMatrix::new(b, self.cfg.lonum), &mut scratch)?;
-        tuner::tune_tau(&na.norms, &nb.norms, target, TuneParams::default())
+        let (na, fa) = self.cached_normmap(&PaddedMatrix::new(a, self.cfg.lonum), &mut scratch)?;
+        let (nb, fb) = self.cached_normmap(&PaddedMatrix::new(b, self.cfg.lonum), &mut scratch)?;
+        let params = TuneParams::default();
+        // Both fingerprints known (caching on) → the tune result is
+        // store-addressable.
+        let key = match (fa, fb, self.caches.store()) {
+            (Some(fa), Some(fb), Some(store)) => {
+                let key = crate::store::TauKey::new(fa, fb, target, &params);
+                if let Some(t) = store.load_tau(&key) {
+                    return Ok(t);
+                }
+                Some(key)
+            }
+            _ => None,
+        };
+        let tuned = tuner::tune_tau(&na.norms, &nb.norms, target, params)?;
+        if let (Some(key), Some(store)) = (key, self.caches.store()) {
+            store.save_tau(&key, &tuned);
+        }
+        Ok(tuned)
     }
 
     /// Multi-device SpAMM multiply per Algorithm 4.

@@ -29,7 +29,7 @@
 //! operand upload, *and* executable compilation — it pays for tile-GEMM
 //! on the surviving products and nothing else.
 
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -567,6 +567,10 @@ struct Shared {
     caches: Arc<ExecCaches>,
     pools: Vec<Arc<ResidencyPool>>,
     store: Mutex<OperandStore>,
+    /// Deferred deltas per operand, coalesced tile-wise (last writer
+    /// wins) until the next submit — or an explicit flush — applies each
+    /// operand's union as *one* patch.
+    pending: Mutex<HashMap<OperandId, BTreeMap<(usize, usize), Vec<f32>>>>,
     plans: Mutex<PlanTable>,
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
@@ -601,7 +605,9 @@ pub struct SpammSession {
 impl SpammSession {
     pub fn new(bundle: &ArtifactBundle, cfg: SpammConfig) -> Result<SpammSession> {
         cfg.validate()?;
-        let caches = Arc::new(ExecCaches::new());
+        let caches = Arc::new(ExecCaches::with_store(crate::store::WarmStore::from_config(
+            &cfg,
+        )));
         let pools: Vec<Arc<ResidencyPool>> = if cfg.residency_enabled {
             (0..cfg.devices)
                 .map(|_| Arc::new(ResidencyPool::new(cfg.device_mem_budget)))
@@ -620,6 +626,7 @@ impl SpammSession {
             caches,
             pools,
             store: Mutex::new(OperandStore::new(store_budget)),
+            pending: Mutex::new(HashMap::new()),
             plans: Mutex::new(PlanTable::default()),
             queue: Mutex::new(QueueState {
                 heap: BinaryHeap::new(),
@@ -713,6 +720,97 @@ impl SpammSession {
     /// The operand keeps its [`OperandId`], refcount, and pins.  Jobs
     /// already submitted keep executing the pre-update snapshot.
     pub fn update(
+        &self,
+        id: OperandId,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<UpdateReport> {
+        // Route through the coalescing buffer: any deltas deferred for
+        // this operand since the last submit merge with this one, and the
+        // union lands as a single patch (one fingerprint derivation, one
+        // norm patch, one repair sweep).
+        self.update_deferred(id, changed, data)?;
+        // An empty delta (and nothing previously deferred) is a no-op
+        // receipt, not an error — flush_operand has nothing to apply.
+        Ok(self.flush_operand(id)?.unwrap_or_default())
+    }
+
+    /// Defer a delta without applying it: the changed tiles merge into
+    /// the operand's pending patch (tile-wise, last writer wins).  The
+    /// patch applies as one [`SpammSession::update`]-equivalent pass at
+    /// the next submit, an explicit [`SpammSession::flush_updates`], or a
+    /// direct `update` of the same operand — whichever comes first.
+    /// Returns the number of distinct tiles now pending for the operand.
+    ///
+    /// `data` holds one LoNum×LoNum row-major payload per entry of
+    /// `changed`, in order; duplicate coordinates keep the last payload.
+    pub fn update_deferred(
+        &self,
+        id: OperandId,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<usize> {
+        let (padded, _) = self.shared.store.lock().unwrap().get(id)?;
+        let l2 = padded.lonum * padded.lonum;
+        if data.len() != changed.len() * l2 {
+            return Err(Error::Shape(format!(
+                "update_deferred: {} changed tiles need {} values, got {}",
+                changed.len(),
+                changed.len() * l2,
+                data.len()
+            )));
+        }
+        let (tr, tc) = (padded.tile_rows(), padded.tile_cols());
+        for &(ti, tj) in changed {
+            if ti >= tr || tj >= tc {
+                return Err(Error::Shape(format!(
+                    "update_deferred: tile ({ti}, {tj}) outside the {tr}x{tc} grid"
+                )));
+            }
+        }
+        let mut pending = self.shared.pending.lock().unwrap();
+        let entry = pending.entry(id).or_default();
+        for (i, &t) in changed.iter().enumerate() {
+            entry.insert(t, data[i * l2..(i + 1) * l2].to_vec());
+        }
+        Ok(entry.len())
+    }
+
+    /// Apply every pending deferred delta, one merged patch per operand.
+    /// Returns the per-operand receipts in operand-id order; empty when
+    /// nothing was pending.  Submits call this implicitly — jobs never
+    /// run against half-flushed operands.
+    pub fn flush_updates(&self) -> Result<Vec<(OperandId, UpdateReport)>> {
+        let mut ids: Vec<OperandId> = self.shared.pending.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable_by_key(|id| id.0);
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            if let Some(report) = self.flush_operand(id)? {
+                out.push((id, report));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Apply (and clear) the pending patch of one operand, if any.
+    fn flush_operand(&self, id: OperandId) -> Result<Option<UpdateReport>> {
+        let Some(tiles) = self.shared.pending.lock().unwrap().remove(&id) else {
+            return Ok(None);
+        };
+        if tiles.is_empty() {
+            return Ok(None);
+        }
+        let mut changed = Vec::with_capacity(tiles.len());
+        let mut data = Vec::with_capacity(tiles.len());
+        for (t, payload) in &tiles {
+            changed.push(*t);
+            data.extend_from_slice(payload);
+        }
+        self.apply_merged_update(id, &changed, &data).map(Some)
+    }
+
+    /// The one-merged-patch application path behind `update`/`flush_*`.
+    fn apply_merged_update(
         &self,
         id: OperandId,
         changed: &[(usize, usize)],
@@ -1010,7 +1108,26 @@ impl SpammSession {
         let tau = match approx {
             Approx::Tau(t) => t,
             Approx::ValidRatio(r) => {
-                tuner::tune_tau(&na.norms, &nb.norms, r, TuneParams::default())?.tau
+                // Tuned τ is pure in (A, B, target, tuner params) — a
+                // store hit restores the exact bisection result without
+                // re-running the expansion/bisection loop.
+                let params = TuneParams::default();
+                let tkey = crate::store::TauKey::new(fa, fb, r, &params);
+                let stored = self.shared.caches.store().and_then(|s| s.load_tau(&tkey));
+                match stored {
+                    Some(t) => {
+                        front.store_tau_hits += 1;
+                        t.tau
+                    }
+                    None => {
+                        let tuned = tuner::tune_tau(&na.norms, &nb.norms, r, params)?;
+                        front.tau_tuned += 1;
+                        if let Some(s) = self.shared.caches.store() {
+                            s.save_tau(&tkey, &tuned);
+                        }
+                        tuned.tau
+                    }
+                }
             }
         };
         // Norm phase of the plan's front stats spans normmaps + τ
@@ -1160,6 +1277,9 @@ impl SpammSession {
     /// Enqueue a prepared plan at an explicit priority class.  Fails when
     /// the admission queue is at `queue_depth`.
     pub fn submit_with(&self, plan: PlanId, priority: Priority) -> Result<Ticket> {
+        // Deferred deltas land before admission, so the job (and every
+        // plan migration they trigger) sees the coalesced content.
+        self.flush_updates()?;
         let plan = {
             let plans = self.shared.plans.lock().unwrap();
             plans
@@ -1303,6 +1423,7 @@ impl SpammSession {
 
     /// [`SpammSession::submit_expr`] at an explicit priority class.
     pub fn submit_expr_with(&self, plan: ExprPlanId, priority: Priority) -> Result<ExprTicket> {
+        self.flush_updates()?;
         let job = {
             let plans = self.shared.plans.lock().unwrap();
             plans.exprs.get(&plan.0).cloned().ok_or_else(|| {
@@ -1567,6 +1688,11 @@ fn run_multiply_job(
         stats.repair_products_added += plan.front.repair_products_added;
         stats.repair_products_removed += plan.front.repair_products_removed;
         stats.repair_products_retagged += plan.front.repair_products_retagged;
+        stats.store_normmap_hits += plan.front.store_normmap_hits;
+        stats.store_schedule_hits += plan.front.store_schedule_hits;
+        stats.store_tau_hits += plan.front.store_tau_hits;
+        stats.store_bundle_hits += plan.front.store_bundle_hits;
+        stats.tau_tuned += plan.front.tau_tuned;
     }
     stats.total_secs = compute;
     Ok(Completion {
@@ -1613,6 +1739,11 @@ fn run_expr_job(
         stats.repair_products_added += front.repair_products_added;
         stats.repair_products_removed += front.repair_products_removed;
         stats.repair_products_retagged += front.repair_products_retagged;
+        stats.store_normmap_hits += front.store_normmap_hits;
+        stats.store_schedule_hits += front.store_schedule_hits;
+        stats.store_tau_hits += front.store_tau_hits;
+        stats.store_bundle_hits += front.store_bundle_hits;
+        stats.tau_tuned += front.tau_tuned;
     }
     stats.total_secs = compute;
     let valid_ratio = rep.stats.valid_ratio;

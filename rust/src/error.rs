@@ -36,6 +36,10 @@ pub enum Error {
     /// worker terminated).
     Session(String),
 
+    /// Warm-start store problem (manifest schema skew, truncated or
+    /// corrupt payload).  Always recoverable: the store falls back cold.
+    Store(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -51,6 +55,7 @@ impl fmt::Display for Error {
             Error::TensorIo(m) => write!(f, "tensorio error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Session(m) => write!(f, "session error: {m}"),
+            Error::Store(m) => write!(f, "store error: {m}"),
             Error::Io(e) => e.fmt(f),
         }
     }

@@ -116,6 +116,31 @@
 //! uploads ≥5x cheaper than re-put and bitwise identity with the cold
 //! rebuild.
 //!
+//! ## Warm-start store
+//!
+//! The caches above are in-memory: a restarted process pays the full
+//! cold path on request one.  [`store::WarmStore`] (`store_dir` config /
+//! `--store-dir` CLI) adds a content-addressed on-disk tier behind the
+//! same caches, persisting all four artifact kinds — normmaps (keyed on
+//! the operand fingerprint), compacted schedules (both fingerprints +
+//! exact τ and density-threshold bits), tuned τ results (fingerprints +
+//! target and tuner-parameter bits), and frozen synthesized hostsim
+//! bundles (synthesis spec).  Restores are bitwise (f32s round-trip as
+//! raw bit patterns), every load is re-validated (schema version, kind,
+//! size, 128-bit checksum, payload-internal shape consistency), and any
+//! mismatch falls back cold and evicts the entry — the store can make a
+//! run *warm*, never *wrong*.  Saves are write-behind and crash-safe
+//! (temp file + atomic rename); an incremental update
+//! ([`coordinator::SpammSession::update`]) re-persists the patched
+//! normmap and repaired schedule under the new fingerprint.  Per-job restore counts surface as
+//! [`spamm::MultiplyStats`]`::store_*_hits` (a store hit is neither a
+//! cache hit nor a recompute) plus `tau_tuned`; global counters land in
+//! [`telemetry`] under `spamm.store.*`.  `--no-store`
+//! (`store_enabled = false`) is the kill switch, `cuspamm store
+//! ls|gc|verify` administers a store directory (byte-budgeted
+//! LRU-by-mtime GC), and `cuspamm warmstart --smoke` asserts the
+//! restart-to-warm contract end to end in CI.
+//!
 //! ## Expression graphs
 //!
 //! Iterated workloads — matrix powers (§4.3.1), McWeeny purification —
@@ -279,6 +304,7 @@ pub mod proptest;
 pub mod runtime;
 pub mod spamm;
 pub mod sparse;
+pub mod store;
 pub mod telemetry;
 pub mod util;
 
@@ -295,4 +321,5 @@ pub mod prelude {
     pub use crate::runtime::{ArtifactBundle, Runtime};
     pub use crate::spamm::{SpammEngine, TuneResult};
     pub use crate::sparse::CsrMatrix;
+    pub use crate::store::WarmStore;
 }

@@ -81,6 +81,18 @@ fn common(spec: Spec) -> Spec {
              tiles are both below this density run on the sparse/packed path \
              (0 = always dense, bitwise-identical to the classic executor)",
         )
+        .opt(
+            "store-dir",
+            &d.store_dir,
+            "content-addressed warm-start store directory (empty = no \
+             persistence): normmaps, schedules, tuned τ, and synthesized \
+             bundles survive process restarts",
+        )
+        .flag(
+            "no-store",
+            "disable the on-disk warm-start store even when --store-dir \
+             (or a config file) names one",
+        )
         .opt("config", "", "optional config file (key = value)")
 }
 
@@ -102,6 +114,7 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
         ("pipeline-depth", "pipeline_depth"),
         ("device-mem-budget", "device_mem_budget"),
         ("density-threshold", "density_threshold"),
+        ("store-dir", "store_dir"),
     ] {
         if a.provided(opt) || !from_file {
             cfg.apply(key, a.get(opt))?;
@@ -112,6 +125,9 @@ fn build_config(a: &cuspamm::cli::Args) -> Result<SpammConfig> {
     }
     if a.flag("no-residency") {
         cfg.residency_enabled = false;
+    }
+    if a.flag("no-store") {
+        cfg.store_enabled = false;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -132,6 +148,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "update" => cmd_update(rest),
         "coordinate" => cmd_coordinate(rest),
         "bench" => cmd_bench(rest),
+        "store" => cmd_store(rest),
+        "warmstart" => cmd_warmstart(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
@@ -149,7 +167,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                  per-device transfer/busy table, residency-aware vs rowblock \
                  (--smoke)\n  bench  machine-readable BENCH_<suite>.json \
                  records (--check diffs deterministic fields vs committed \
-                 baselines)\n\nUse `cuspamm <cmd> --help` for options."
+                 baselines)\n  store  warm-start store administration: \
+                 ls | gc --budget <bytes> | verify [--heal]\n  warmstart  \
+                 restart-to-warm demo over a --store-dir (--smoke for the \
+                 CI zero-recompute + bitwise-identity assertion)\n\nUse \
+                 `cuspamm <cmd> --help` for options."
             );
             Ok(())
         }
@@ -1333,7 +1355,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
          deterministic fields (counts, format mixes, cache behavior) \
          against committed baselines",
     ))
-    .opt("suite", "all", "all | multiply | serve | expr")
+    .opt("suite", "all", "all | multiply | serve | expr | multidevice")
     .opt("out", "bench_results", "output directory for BENCH_*.json")
     .opt(
         "check",
@@ -1355,9 +1377,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     if pick("expr") {
         records.push(bench_expr(&bundle, &cfg)?);
     }
+    if pick("multidevice") {
+        records.push(bench_multidevice(&bundle, &cfg)?);
+    }
     if records.is_empty() {
         return Err(Error::Config(format!(
-            "unknown suite '{suite}' (all | multiply | serve | expr)"
+            "unknown suite '{suite}' (all | multiply | serve | expr | multidevice)"
         )));
     }
     let out = std::path::Path::new(a.get("out"));
@@ -1499,6 +1524,463 @@ fn bench_expr(
         .det("leaf_norm_misses", coord.caches().norms.misses() as f64);
     r.info("wall_secs", r0.steps.iter().map(|s| s.wall_secs).sum::<f64>());
     Ok(r)
+}
+
+/// Multidevice suite: a forced 4-device strided run.  Pinned counters
+/// are structural — the τ = 0 schedule keeps every product, the strided
+/// policy hands each of the 4 devices exactly 2 of the 8 tile rows, and
+/// a warm prepared-plan resubmit re-uploads nothing — so the partition,
+/// the per-device load vector, and the residency contract are all CI
+/// regressions, not timings.
+fn bench_multidevice(
+    bundle: &ArtifactBundle,
+    cfg: &SpammConfig,
+) -> Result<cuspamm::bench_harness::BenchRecord> {
+    use cuspamm::bench_harness::BenchRecord;
+    use cuspamm::coordinator::{Approx, SpammSession};
+    use cuspamm::spamm::power::spamm_power;
+
+    const DEVICES: usize = 4;
+    let l = bundle.lonum;
+    let n = 8 * l;
+    let mut cfg = cfg.clone();
+    cfg.devices = DEVICES;
+    cfg.balance = cuspamm::config::Balance::Strided(DEVICES);
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, 91);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, 92);
+
+    // Session path: cold submit populates the per-device pools, the warm
+    // resubmit of the same pinned plan must transfer zero bytes.
+    let session = SpammSession::new(bundle, cfg.clone())?;
+    let ida = session.put(&ma)?;
+    let idb = session.put(&mb)?;
+    let plan = session.prepare(ida, idb, Approx::Tau(0.0))?;
+    let t_cold = session.submit(plan)?;
+    let cold = session.wait(t_cold)?;
+    let t_warm = session.submit(plan)?;
+    let warm = session.wait(t_warm)?;
+
+    // Coordinator path: the per-device partition counters for the same
+    // workload, then the A³ chain over the now-shared pools.
+    let coord = Coordinator::new(bundle, cfg.clone())?;
+    let rep = coord.multiply(&ma, &mb, 0.0)?;
+    let power = spamm_power(&coord, &ma, 3, 0.0)?;
+
+    let mut r = BenchRecord::new("multidevice");
+    r.det("devices", DEVICES as f64)
+        .det("total_products", rep.total_products as f64)
+        .det("valid_products", rep.valid_products as f64);
+    for (d, &load) in rep.device_load.iter().enumerate() {
+        r.det(&format!("device{d}_products"), load as f64);
+    }
+    r.det(
+        "multiply_cross_device_bytes",
+        rep.stage.cross_device_bytes as f64,
+    )
+    .det("warm_transfer_bytes", warm.stats.transfer_bytes as f64)
+    .det("warm_residency_misses", warm.stats.residency_misses as f64)
+    .det("warm_norm_recomputes", warm.stats.norm_cache_misses as f64)
+    .det("expr_steps", power.steps.len() as f64)
+    .det(
+        "expr_fully_valid_steps",
+        power.steps.iter().filter(|s| s.valid_ratio == 1.0).count() as f64,
+    );
+    r.info("cold_transfer_bytes", cold.stats.transfer_bytes as f64)
+        .info("cold_residency_misses", cold.stats.residency_misses as f64)
+        .info("warm_residency_hits", warm.stats.residency_hits as f64)
+        .info(
+            "multiply_transfer_bytes",
+            rep.stage.transfer_bytes as f64,
+        )
+        .info(
+            "expr_wall_secs",
+            power.steps.iter().map(|s| s.wall_secs).sum::<f64>(),
+        )
+        .info("cold_compute_secs", cold.compute_secs)
+        .info("warm_compute_secs", warm.compute_secs);
+    Ok(r)
+}
+
+/// `cuspamm store`: administer a warm-start store directory without
+/// running a workload — list entries, GC under a byte budget, or
+/// re-verify every payload against its manifest checksum.
+fn cmd_store(args: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "cuspamm store",
+        "warm-start store administration — verbs: ls (entry table), gc \
+         --budget <bytes> (evict least-recently-used payloads until the \
+         store fits), verify [--heal] (re-checksum every payload; --heal \
+         evicts failures instead of erroring)",
+    )
+    .opt(
+        "store-dir",
+        "",
+        "store directory (falls back to the config file's store_dir)",
+    )
+    .opt("config", "", "optional config file (key = value)")
+    .opt("budget", "64m", "gc byte budget (k/m/g suffixes)")
+    .flag("heal", "verify: evict entries that fail instead of erroring");
+    let a = spec.parse(args)?;
+    let verb = a.positionals.first().map(|s| s.as_str()).unwrap_or("ls");
+    let dir = if !a.get("store-dir").is_empty() {
+        a.get("store-dir").to_string()
+    } else if !a.get("config").is_empty() {
+        SpammConfig::from_file(std::path::Path::new(a.get("config")))?.store_dir
+    } else {
+        String::new()
+    };
+    if dir.is_empty() {
+        return Err(Error::Config(
+            "store: pass --store-dir <dir> (or a --config whose store_dir is set)".into(),
+        ));
+    }
+    let store = WarmStore::open(std::path::Path::new(&dir))?;
+    match verb {
+        "ls" => {
+            let mut entries = store.ls()?;
+            entries.sort_by(|x, y| x.0.cmp(&y.0));
+            let total: u64 = entries.iter().map(|(_, e, _)| e.bytes).sum();
+            println!("{:<44} {:<10} {:>12}  {}", "KEY", "KIND", "BYTES", "PATH");
+            for (key, e, _) in &entries {
+                println!("{:<44} {:<10} {:>12}  {}", key, e.kind, e.bytes, e.path);
+            }
+            println!(
+                "{} entries, {} KiB in {}",
+                entries.len(),
+                total / 1024,
+                store.dir().display()
+            );
+        }
+        "gc" => {
+            let rep = store.gc(a.bytes("budget")? as u64)?;
+            println!(
+                "gc: evicted {} of {} entries, {} -> {} KiB",
+                rep.evicted,
+                rep.entries_before,
+                rep.bytes_before / 1024,
+                rep.bytes_after / 1024
+            );
+        }
+        "verify" => {
+            let rep = store.verify(a.flag("heal"))?;
+            for (key, why) in &rep.bad {
+                println!("BAD {key}: {why}");
+            }
+            println!("verify: {} ok, {} bad", rep.ok, rep.bad.len());
+            if !rep.bad.is_empty() && !a.flag("heal") {
+                return Err(Error::Store(format!(
+                    "{} store entries failed verification (re-run with --heal to evict them)",
+                    rep.bad.len()
+                )));
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown store verb '{other}' (ls | gc | verify)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// `cuspamm warmstart`: the restart-to-warm contract, end to end.  Run a
+/// valid-ratio workload against a `--store-dir`, drop every piece of
+/// process state, and run the identical workload again: request one of
+/// the second "process" must restore both normmaps, the schedule, the
+/// tuned τ, and the synthesized hostsim bundle from disk — zero
+/// cold-path recomputation, bitwise-identical result.  `--smoke` also
+/// drives the incremental-update re-persist path and a corrupted-store
+/// fallback, asserting the whole contract for CI.
+fn cmd_warmstart(args: &[String]) -> Result<()> {
+    use cuspamm::runtime::hostsim::{warm_bundle, HostsimSpec};
+
+    let spec = common(Spec::new(
+        "cuspamm warmstart",
+        "restart-to-warm demo over a --store-dir: cold run, then a fresh \
+         session (a simulated process restart) whose first request hits \
+         the store for every artifact kind; --smoke asserts zero \
+         recomputes + bitwise identity, re-persisted incremental patches, \
+         and cold fallback from a corrupted store",
+    ))
+    .opt("n", "256", "matrix size (rounded down to a LoNum multiple)")
+    .opt("ratio", "0.5", "target valid ratio (exercises the τ tuner)")
+    .opt("seed", "11", "workload seed")
+    .flag(
+        "smoke",
+        "CI assertion: the warm restart recomputes nothing (all four \
+         artifact kinds restore from disk), results are bitwise identical \
+         cold vs warm vs --no-store, and a corrupted store falls back \
+         cold then self-heals",
+    );
+    let a = spec.parse(args)?;
+    let mut cfg = build_config(&a)?;
+    let smoke = a.flag("smoke");
+    if !cfg.store_enabled {
+        return Err(Error::Config(
+            "warmstart exercises the store; run without --no-store".into(),
+        ));
+    }
+    if !cfg.cache_enabled {
+        return Err(Error::Config(
+            "warmstart restores into the in-memory caches; run without --no-cache".into(),
+        ));
+    }
+    if cfg.store_dir.is_empty() {
+        cfg.store_dir = std::env::temp_dir()
+            .join("cuspamm_warmstore")
+            .to_string_lossy()
+            .into_owned();
+        println!("note: no --store-dir given; using {}", cfg.store_dir);
+    }
+    if smoke {
+        // The cold phase must actually be cold: wipe any prior contents
+        // so repeat CI runs over the same --store-dir stay deterministic.
+        let _ = std::fs::remove_dir_all(&cfg.store_dir);
+    }
+    let store_dir = std::path::PathBuf::from(&cfg.store_dir);
+    let hspec = HostsimSpec::default();
+
+    // Phase A — cold against an empty store.  The bundle synthesis is
+    // itself store-backed: the frozen artifact directory persists too.
+    let s1 = WarmStore::open(&store_dir)?;
+    let (bundle_a, bundle_hit_a) = warm_bundle(&s1, &hspec)?;
+    let l = bundle_a.lonum;
+    let n = (a.usize("n")?.max(2 * l) / l) * l;
+    let seed = a.usize("seed")? as u64;
+    let ratio = a.f64("ratio")?;
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1);
+
+    // One full "process": fresh session, register, prepare to a
+    // valid-ratio target (runs or restores the tuner), submit, wait.
+    let run = |cfg: &SpammConfig, bundle: &ArtifactBundle| -> Result<Completion> {
+        let s = SpammSession::new(bundle, cfg.clone())?;
+        let ida = s.put(&ma)?;
+        let idb = s.put(&mb)?;
+        let plan = s.prepare(ida, idb, Approx::ValidRatio(ratio))?;
+        s.wait(s.submit(plan)?)
+    };
+    let describe = |tag: &str, job: &Completion| {
+        println!(
+            "phase {tag}: τ={:.6e} valid={:.1}% — norm misses {}, schedule \
+             misses {}, τ tunes {}; store hits: normmap {}, schedule {}, τ {}",
+            job.tau,
+            job.valid_ratio * 100.0,
+            job.stats.norm_cache_misses,
+            job.stats.schedule_cache_misses,
+            job.stats.tau_tuned,
+            job.stats.store_normmap_hits,
+            job.stats.store_schedule_hits,
+            job.stats.store_tau_hits,
+        );
+    };
+
+    let cold = run(&cfg, &bundle_a)?;
+    println!(
+        "== warmstart: n={n} ratio={ratio} store {} ==",
+        store_dir.display()
+    );
+    describe("A cold     ", &cold);
+    if smoke {
+        assert!(!bundle_hit_a, "phase A: the wiped store restored a bundle");
+        assert_eq!(cold.stats.tau_tuned, 1, "phase A: the tuner did not run");
+        assert_eq!(
+            cold.stats.norm_cache_misses, 2,
+            "phase A: expected both normmaps computed cold"
+        );
+        assert_eq!(
+            cold.stats.schedule_cache_misses, 1,
+            "phase A: expected the schedule built cold"
+        );
+        assert_eq!(
+            cold.stats.store_normmap_hits
+                + cold.stats.store_schedule_hits
+                + cold.stats.store_tau_hits,
+            0,
+            "phase A: an empty store produced hits"
+        );
+    }
+
+    // Phase B — the restart.  A fresh store handle and a fresh session
+    // share nothing in memory with phase A; every artifact must come
+    // back from disk on the very first request.
+    let s2 = WarmStore::open(&store_dir)?;
+    let (bundle_b, bundle_hit_b) = warm_bundle(&s2, &hspec)?;
+    let warm = run(&cfg, &bundle_b)?;
+    describe("B restarted", &warm);
+    if smoke {
+        assert!(bundle_hit_b, "phase B: bundle was re-synthesized, not restored");
+        assert_eq!(
+            (
+                warm.stats.norm_cache_misses,
+                warm.stats.schedule_cache_misses,
+                warm.stats.tau_tuned
+            ),
+            (0, 0, 0),
+            "phase B: the restarted session recomputed on the cold path"
+        );
+        assert_eq!(
+            (
+                warm.stats.store_normmap_hits,
+                warm.stats.store_schedule_hits,
+                warm.stats.store_tau_hits
+            ),
+            (2, 1, 1),
+            "phase B: expected every artifact restored from the store"
+        );
+        assert_eq!(
+            warm.tau.to_bits(),
+            cold.tau.to_bits(),
+            "phase B: restored τ differs from the tuned τ"
+        );
+        assert_eq!(
+            warm.c.data(),
+            cold.c.data(),
+            "phase B: warm result diverged from the cold run"
+        );
+    }
+
+    // Phase E — incremental updates re-persist.  "Process" one drifts an
+    // operand (patched normmap + repaired schedule land in the store
+    // under the patched fingerprint); a restarted session that applies
+    // the same delta must find the repaired schedule on disk.
+    let side = n / l;
+    let changed = vec![(0usize, 0usize), (side - 1, side - 1)];
+    let l2 = l * l;
+    let mut delta = Vec::with_capacity(changed.len() * l2);
+    for k in 0..changed.len() {
+        let block = Matrix::randn(l, l, seed + 100 + k as u64);
+        delta.extend(block.data().iter().map(|x| x * 0.05));
+    }
+    let e1 = SpammSession::new(&bundle_b, cfg.clone())?;
+    let ea = e1.put(&ma)?;
+    let eb = e1.put(&mb)?;
+    let eplan = e1.prepare(ea, eb, Approx::ValidRatio(ratio))?;
+    let _ = e1.wait(e1.submit(eplan)?)?;
+    let report = e1.update(ea, &changed, &delta)?;
+    let r1 = e1.wait(e1.submit(eplan)?)?;
+    let e2 = SpammSession::new(&bundle_b, cfg.clone())?;
+    let fa = e2.put(&ma)?;
+    let fb = e2.put(&mb)?;
+    e2.update(fa, &changed, &delta)?;
+    // The migrated plan keeps its tuned τ, so the restarted session pins
+    // the same threshold to hit the re-persisted (rekeyed) schedule.
+    let fplan = e2.prepare(fa, fb, Approx::Tau(r1.tau))?;
+    let r2 = e2.wait(e2.submit(fplan)?)?;
+    describe("E repatched", &r2);
+    if smoke {
+        assert!(
+            report.schedules_repaired >= 1,
+            "phase E: the drift did not repair a schedule"
+        );
+        assert!(
+            r2.stats.store_schedule_hits >= 1,
+            "phase E: the repaired schedule was not re-persisted"
+        );
+        assert_eq!(
+            r2.stats.schedule_cache_misses, 0,
+            "phase E: the restarted session rebuilt the repaired schedule"
+        );
+        assert_eq!(
+            r2.c.data(),
+            r1.c.data(),
+            "phase E: restored-patched result diverged from the live-patched run"
+        );
+    }
+
+    // Phase C — kill switch.  With the store disabled the cold path runs
+    // end to end and produces the identical bits.
+    let mut cfg_off = cfg.clone();
+    cfg_off.store_enabled = false;
+    let off = run(&cfg_off, &bundle_a)?;
+    describe("C no-store ", &off);
+    if smoke {
+        assert_eq!(
+            off.stats.store_normmap_hits
+                + off.stats.store_schedule_hits
+                + off.stats.store_tau_hits
+                + off.stats.store_bundle_hits,
+            0,
+            "phase C: --no-store still touched the store"
+        );
+        assert_eq!(off.stats.tau_tuned, 1, "phase C: the tuner did not run");
+        assert_eq!(
+            off.tau.to_bits(),
+            cold.tau.to_bits(),
+            "phase C: no-store τ differs from the tuned τ"
+        );
+        assert_eq!(
+            off.c.data(),
+            cold.c.data(),
+            "phase C: no-store result diverged from the cold run"
+        );
+    }
+
+    // Phase D — corruption (smoke only: it vandalizes the store).  Flip
+    // one bit in every payload; the next run must detect the checksum
+    // mismatches, evict, fall back cold bitwise-identically, and
+    // re-persist good copies.  verify --heal sweeps the stragglers the
+    // workload never re-touched.
+    if smoke {
+        let mut flipped = 0usize;
+        if let Ok(rd) = std::fs::read_dir(store_dir.join("objects")) {
+            for ent in rd.flatten() {
+                let p = ent.path();
+                if p.extension().and_then(|e| e.to_str()) != Some("bin") {
+                    continue;
+                }
+                let Ok(mut bytes) = std::fs::read(&p) else {
+                    continue;
+                };
+                if let Some(b) = bytes.first_mut() {
+                    *b ^= 0x01;
+                    std::fs::write(&p, &bytes)?;
+                    flipped += 1;
+                }
+            }
+        }
+        assert!(flipped >= 4, "phase D: expected payloads to corrupt, found {flipped}");
+        let hurt = run(&cfg, &bundle_a)?;
+        describe("D corrupted", &hurt);
+        assert_eq!(
+            hurt.stats.store_normmap_hits
+                + hurt.stats.store_schedule_hits
+                + hurt.stats.store_tau_hits,
+            0,
+            "phase D: a corrupted store produced hits"
+        );
+        assert_eq!(
+            (hurt.stats.norm_cache_misses, hurt.stats.schedule_cache_misses),
+            (2, 1),
+            "phase D: corruption fallback was not fully cold"
+        );
+        assert_eq!(hurt.stats.tau_tuned, 1, "phase D: the tuner did not re-run");
+        assert_eq!(
+            hurt.c.data(),
+            cold.c.data(),
+            "phase D: corruption fallback diverged from the cold run"
+        );
+        let s3 = WarmStore::open(&store_dir)?;
+        let healed = s3.verify(true)?;
+        println!(
+            "phase D: flipped {flipped} payloads; cold fallback re-persisted \
+             {} entries, verify --heal evicted {}",
+            healed.ok,
+            healed.bad.len()
+        );
+        let clean = s3.verify(false)?;
+        assert!(
+            clean.bad.is_empty(),
+            "phase D: store still dirty after healing: {:?}",
+            clean.bad
+        );
+        println!(
+            "smoke: OK — restart restored all four artifact kinds with zero \
+             recomputation, incremental patches re-persisted, --no-store and \
+             corrupted-store runs stayed bitwise identical"
+        );
+    }
+    Ok(())
 }
 
 fn cmd_cnn(args: &[String]) -> Result<()> {

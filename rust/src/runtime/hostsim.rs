@@ -430,6 +430,53 @@ pub fn find_or_test_bundle() -> Result<ArtifactBundle> {
     test_bundle()
 }
 
+/// Synthesize-or-restore a hostsim bundle through a warm-start store.
+///
+/// The store entry is keyed on the full synthesis spec (every field —
+/// sizes, buckets, precisions, CNN fixture), so a restored bundle is the
+/// one this spec would have produced: synthesis is deterministic in the
+/// spec, and the store's directory digest catches any on-disk drift.  A
+/// hit loads the persisted directory without re-running synthesis (the
+/// CNN fixture training is the expensive part); a miss synthesizes once
+/// to a scratch directory and persists it.  Returns the loaded bundle
+/// and whether it came from the store.
+pub fn warm_bundle(
+    store: &crate::store::WarmStore,
+    spec: &HostsimSpec,
+) -> Result<(ArtifactBundle, bool)> {
+    let name = spec_key(spec);
+    if let Some(dir) = store.load_bundle_dir(&name) {
+        match ArtifactBundle::load(&dir) {
+            Ok(b) => return Ok((b, true)),
+            // Digest matched but the manifest no longer parses (schema
+            // skew from an older writer): self-heal and resynthesize.
+            Err(_) => store.evict_bundle(&name),
+        }
+    }
+    let scratch = std::env::temp_dir().join(format!(
+        "cuspamm_hostsim_stage_{}_{}",
+        std::process::id(),
+        name
+    ));
+    let _ = std::fs::remove_dir_all(&scratch);
+    write_bundle(&scratch, spec)?;
+    let dir = store
+        .save_bundle_dir(&name, &scratch)
+        .unwrap_or_else(|| scratch.clone());
+    let bundle = ArtifactBundle::load(&dir)?;
+    if dir != scratch {
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+    Ok((bundle, false))
+}
+
+/// Deterministic store key of a synthesis spec: two specs share a stored
+/// bundle iff every field matches.
+fn spec_key(spec: &HostsimSpec) -> String {
+    let repr = format!("{spec:?}");
+    format!("hostsim-{}", crate::store::checksum_hex(repr.as_bytes()))
+}
+
 /// Load (writing on first use in this process) the default hostsim bundle
 /// for tests and benches that have no real artifact directory.  A failed
 /// synthesis is remembered as the failure it was — every caller gets the

@@ -376,9 +376,19 @@ impl ScheduleCache {
 }
 
 /// The cache pair every executor front-end (engine, coordinator) owns.
+///
+/// When a [`WarmStore`](crate::store::WarmStore) handle is attached
+/// ([`ExecCaches::with_store`]), it acts as a persistent second tier
+/// behind both in-memory caches: a memory miss consults the store before
+/// computing, and every cold compute (and every delta patch/repair) is
+/// written behind under its content key — so a restarted process reaches
+/// warm latency on request one.  Store-restored entries count as
+/// `store_*_hits` in [`MultiplyStats`], not as cache misses: the cold
+/// recompute never ran.
 pub struct ExecCaches {
     pub norms: NormCache,
     pub schedules: ScheduleCache,
+    store: Option<Arc<crate::store::WarmStore>>,
 }
 
 /// Default capacity of the norm cache (operands in flight).
@@ -391,6 +401,7 @@ impl Default for ExecCaches {
         ExecCaches {
             norms: NormCache::new(NORM_CACHE_CAP),
             schedules: ScheduleCache::new(SCHEDULE_CACHE_CAP),
+            store: None,
         }
     }
 }
@@ -398,6 +409,19 @@ impl Default for ExecCaches {
 impl ExecCaches {
     pub fn new() -> ExecCaches {
         ExecCaches::default()
+    }
+
+    /// Caches backed by an optional on-disk warm-start store tier.
+    pub fn with_store(store: Option<Arc<crate::store::WarmStore>>) -> ExecCaches {
+        ExecCaches {
+            store,
+            ..ExecCaches::default()
+        }
+    }
+
+    /// The attached warm store, if any.
+    pub fn store(&self) -> Option<&Arc<crate::store::WarmStore>> {
+        self.store.as_ref()
     }
 
     /// Cached normmap of a padded operand: fingerprint + norm-cache
@@ -415,12 +439,7 @@ impl ExecCaches {
             return Ok((Arc::new(compute()?), None));
         }
         let fp = fingerprint(p);
-        let (nm, hit) = self.norms.get_or_compute(fp, compute)?;
-        if hit {
-            stats.norm_cache_hits += 1;
-        } else {
-            stats.norm_cache_misses += 1;
-        }
+        let nm = self.normmap_keyed(fp, stats, compute)?;
         Ok((nm, Some(fp)))
     }
 
@@ -435,9 +454,25 @@ impl ExecCaches {
         stats: &mut MultiplyStats,
         compute: impl FnOnce() -> Result<NormMap>,
     ) -> Result<Arc<NormMap>> {
-        let (nm, hit) = self.norms.get_or_compute(fp, compute)?;
+        let mut from_store = false;
+        let (nm, hit) = self.norms.get_or_compute(fp, || {
+            if let Some(store) = &self.store {
+                if let Some(nm) = store.load_normmap(fp) {
+                    from_store = true;
+                    return Ok(nm);
+                }
+            }
+            let nm = compute()?;
+            if let Some(store) = &self.store {
+                store.save_normmap(fp, &nm);
+            }
+            Ok(nm)
+        })?;
         if hit {
             stats.norm_cache_hits += 1;
+        } else if from_store {
+            // Restored from disk: warm, not a recompute.
+            stats.store_normmap_hits += 1;
         } else {
             stats.norm_cache_misses += 1;
         }
@@ -473,13 +508,25 @@ impl ExecCaches {
             tau_bits: tau.to_bits(),
             density_bits: density_threshold.to_bits(),
         };
-        let (sched, hit) = self
-            .schedules
-            .get_or_compute(key, || {
-                Schedule::build_adaptive(na, nb, tau, density_threshold)
-            })?;
+        let mut from_store = false;
+        let (sched, hit) = self.schedules.get_or_compute(key, || {
+            if let Some(store) = &self.store {
+                let expect = (na.norms.rows(), nb.norms.cols(), na.norms.cols());
+                if let Some(s) = store.load_schedule(&key, expect.0, expect.1, expect.2) {
+                    from_store = true;
+                    return Ok(s);
+                }
+            }
+            let s = Schedule::build_adaptive(na, nb, tau, density_threshold)?;
+            if let Some(store) = &self.store {
+                store.save_schedule(&key, &s);
+            }
+            Ok(s)
+        })?;
         if hit {
             stats.schedule_cache_hits += 1;
+        } else if from_store {
+            stats.store_schedule_hits += 1;
         } else {
             stats.schedule_cache_misses += 1;
         }
@@ -505,6 +552,11 @@ impl ExecCaches {
         patched.patch_tiles(p_new, tiles);
         let patched = Arc::new(patched);
         self.norms.insert(new_fp, patched.clone());
+        if let Some(store) = &self.store {
+            // Persist the post-update identity so a restart warms at the
+            // drifted fingerprint, not the original one.
+            store.save_normmap(new_fp, &patched);
+        }
         telemetry::global().add("spamm.norm_cache.patched", 1);
         Some(patched)
     }
@@ -549,7 +601,11 @@ impl ExecCaches {
                         b: if key.b == old_fp { new_fp } else { key.b },
                         ..key
                     };
-                    self.schedules.insert(rekeyed, Arc::new(repaired));
+                    let repaired = Arc::new(repaired);
+                    if let Some(store) = &self.store {
+                        store.save_schedule(&rekeyed, &repaired);
+                    }
+                    self.schedules.insert(rekeyed, repaired);
                     out.repaired += 1;
                     out.products_added += rs.products_added;
                     out.products_removed += rs.products_removed;

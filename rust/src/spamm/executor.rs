@@ -126,6 +126,17 @@ pub struct MultiplyStats {
     pub repair_products_added: usize,
     pub repair_products_removed: usize,
     pub repair_products_retagged: usize,
+    /// Warm-start store accounting (front-end fields, all zero without a
+    /// store): artifacts restored from disk instead of recomputed.  A
+    /// store hit is *neither* a cache hit nor a cache miss — the
+    /// in-memory tier missed, but the cold recompute never ran.
+    pub store_normmap_hits: usize,
+    pub store_schedule_hits: usize,
+    pub store_tau_hits: usize,
+    pub store_bundle_hits: usize,
+    /// τ auto-tunes actually executed (the bisection ran); a store-
+    /// restored tune increments `store_tau_hits` instead.
+    pub tau_tuned: usize,
 }
 
 impl MultiplyStats {
@@ -268,10 +279,11 @@ impl SpammEngine {
         let pool = cfg
             .residency_enabled
             .then(|| Arc::new(ResidencyPool::new(cfg.device_mem_budget)));
+        let caches = ExecCaches::with_store(crate::store::WarmStore::from_config(&cfg));
         Ok(SpammEngine {
             rt: Runtime::new(bundle)?,
             cfg,
-            caches: ExecCaches::new(),
+            caches,
             pool,
         })
     }

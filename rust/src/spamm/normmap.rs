@@ -77,6 +77,34 @@ impl NormMap {
             self.density[(ti, tj)] = nnz as f32 * inv_elems;
         }
     }
+
+    /// Reassemble a map from separately materialized norm and density
+    /// matrices — the warm-store restore path.  Validates that the two
+    /// grids agree and that every value is in its legal range (norms
+    /// finite and non-negative, densities in [0, 1]); a corrupt payload
+    /// must fail here rather than poison the scheduler.
+    pub fn from_parts(norms: Matrix, density: Matrix) -> crate::error::Result<NormMap> {
+        if norms.rows() != density.rows() || norms.cols() != density.cols() {
+            return Err(crate::error::Error::Store(format!(
+                "normmap grids disagree: norms {}x{}, density {}x{}",
+                norms.rows(),
+                norms.cols(),
+                density.rows(),
+                density.cols()
+            )));
+        }
+        if norms.data().iter().any(|&x| !x.is_finite() || x < 0.0) {
+            return Err(crate::error::Error::Store(
+                "normmap holds a negative or non-finite norm".into(),
+            ));
+        }
+        if density.data().iter().any(|&x| !(0.0..=1.0).contains(&x)) {
+            return Err(crate::error::Error::Store(
+                "normmap density outside [0, 1]".into(),
+            ));
+        }
+        Ok(NormMap { norms, density })
+    }
 }
 
 /// Minimum bimodality gap for [`auto_density_threshold`]: if no pair of

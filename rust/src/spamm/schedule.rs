@@ -29,6 +29,28 @@ pub enum TileStrategy {
     Packed,
 }
 
+impl TileStrategy {
+    /// Stable one-byte wire tag — the warm-store schedule payload format.
+    pub fn to_tag(self) -> u8 {
+        match self {
+            TileStrategy::Dense => 0,
+            TileStrategy::Sparse => 1,
+            TileStrategy::Packed => 2,
+        }
+    }
+
+    /// Inverse of [`TileStrategy::to_tag`]; unknown tags are a store
+    /// error (corrupt or future-format payload), never a panic.
+    pub fn from_tag(tag: u8) -> Result<TileStrategy> {
+        match tag {
+            0 => Ok(TileStrategy::Dense),
+            1 => Ok(TileStrategy::Sparse),
+            2 => Ok(TileStrategy::Packed),
+            other => Err(Error::Store(format!("unknown tile-strategy tag {other}"))),
+        }
+    }
+}
+
 /// Compacted SpAMM schedule for C = A·B with BDIM-tiled operands.
 #[derive(Clone, Debug)]
 pub struct Schedule {

@@ -1,0 +1,1171 @@
+//! Content-addressed on-disk warm-start store.
+//!
+//! Everything hot on the request path is already content-fingerprint-keyed
+//! *in memory* — normmaps ([`NormCache`](crate::spamm::cache::NormCache)),
+//! compacted schedules ([`ScheduleCache`](crate::spamm::cache::ScheduleCache)),
+//! tuned τ results, and the synthesized hostsim artifact bundle — but all
+//! of it dies with the process, so a restarted server pays the full cold
+//! path on request one.  [`WarmStore`] persists those four artifact kinds
+//! package-manager-style:
+//!
+//! ```text
+//!   <store_dir>/
+//!     manifest.json            versioned manifest: key → {kind, schema
+//!                              version, key bits, payload path, byte
+//!                              size, checksum}
+//!     objects/<key>.bin        binary payloads (normmap / schedule / τ),
+//!                              f32s stored as raw bit patterns
+//!     bundles/<key>/           frozen hostsim artifact bundles
+//! ```
+//!
+//! Keys embed the full invalidation state: normmaps are keyed by operand
+//! fingerprint alone, schedules by both operand fingerprints **plus the
+//! exact τ bits and density-threshold bits**, tuned τ by both fingerprints
+//! plus the target-ratio and tuner-parameter bits, bundles by their
+//! synthesis spec.  Payloads round-trip f32s by bit pattern, so a restored
+//! artifact is bitwise identical to the one computed cold.
+//!
+//! The store must never be able to make a result wrong — only warm.
+//! Every load is validated (manifest schema version, kind, byte size,
+//! 128-bit checksum, payload-internal shape/τ/threshold consistency) and
+//! any mismatch falls back to the cold path and evicts the bad entry.
+//! Writes are crash-safe: payloads land in a temp file first and are
+//! atomically renamed into place, then the manifest is re-read, merged,
+//! and itself atomically replaced — a concurrent writer of the same entry
+//! loses nothing worse than a redundant write.  Saves are write-behind in
+//! the failure sense: an unwritable store logs and counts an error but
+//! never surfaces one on the request path.
+//!
+//! `cuspamm store ls|gc|verify` administers a store directory; GC is
+//! byte-budgeted with LRU-by-mtime eviction.  Telemetry lands on the
+//! global counters `spamm.store.{hits,misses,read_bytes,write_bytes,
+//! evictions,errors}`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::SpammConfig;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::matrix::Matrix;
+use crate::spamm::cache::{Fingerprint, ScheduleKey};
+use crate::spamm::normmap::NormMap;
+use crate::spamm::schedule::{Schedule, TileStrategy};
+use crate::spamm::tuner::{TuneParams, TuneResult};
+use crate::telemetry;
+
+/// Schema version of the manifest + payload formats.  Bump on any layout
+/// change: entries written under another version are treated as cold and
+/// evicted on contact.
+pub const SCHEMA_VERSION: u64 = 1;
+
+const MANIFEST: &str = "manifest.json";
+const OBJECTS: &str = "objects";
+const BUNDLES: &str = "bundles";
+
+/// Payload header magic ("CSWS").
+const MAGIC: u32 = 0x4353_5753;
+
+const KIND_NORMMAP: &str = "normmap";
+const KIND_SCHEDULE: &str = "schedule";
+const KIND_TAU: &str = "tau";
+const KIND_BUNDLE: &str = "bundle";
+
+/// Key of a persisted tuned-τ result: both operand fingerprints, the
+/// exact target-ratio bits, and the tuner parameters that shaped the
+/// search (different parameters may converge to a different τ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TauKey {
+    pub a: Fingerprint,
+    pub b: Fingerprint,
+    pub target_bits: u64,
+    pub max_iters: u64,
+    pub tolerance_bits: u64,
+}
+
+impl TauKey {
+    pub fn new(a: Fingerprint, b: Fingerprint, target: f64, params: &TuneParams) -> TauKey {
+        TauKey {
+            a,
+            b,
+            target_bits: target.to_bits(),
+            max_iters: params.max_iters as u64,
+            tolerance_bits: params.tolerance.to_bits(),
+        }
+    }
+}
+
+/// One manifest entry (the wolfpack `PackageMeta` shape: checksum + path
+/// + byte size, plus our schema version and kind tag).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub kind: String,
+    /// Schema version the payload was written under.
+    pub version: u64,
+    /// Payload path relative to the store root.
+    pub path: String,
+    pub bytes: u64,
+    /// 128-bit FNV checksum over the payload bytes, hex-encoded (JSON
+    /// numbers are f64 and cannot carry u64s exactly).
+    pub checksum: String,
+}
+
+/// Byte-budgeted GC sweep summary.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    pub entries_before: usize,
+    pub evicted: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+/// `store verify` sweep summary.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub ok: usize,
+    /// Keys that failed verification, with the reason.
+    pub bad: Vec<(String, String)>,
+}
+
+/// Monotonic store counters (also mirrored onto the global telemetry).
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// The content-addressed on-disk warm-start store.  Handles are cheap and
+/// stateless: every operation re-reads the manifest from disk, so
+/// multiple processes (or a process that restarted) always observe the
+/// latest committed state.
+pub struct WarmStore {
+    dir: PathBuf,
+    /// Serializes manifest read-merge-write cycles within this process;
+    /// cross-process writers are handled by atomic rename semantics.
+    manifest_lock: Mutex<()>,
+    counters: Counters,
+}
+
+impl WarmStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<WarmStore> {
+        fs::create_dir_all(dir.join(OBJECTS))?;
+        fs::create_dir_all(dir.join(BUNDLES))?;
+        Ok(WarmStore {
+            dir: dir.to_path_buf(),
+            manifest_lock: Mutex::new(()),
+            counters: Counters::default(),
+        })
+    }
+
+    /// Open the store named by the config (`store_dir` + the
+    /// `store_enabled` kill switch).  Never fails: an unusable directory
+    /// logs a warning and yields `None` — the caller runs cold, which is
+    /// always correct.
+    pub fn from_config(cfg: &SpammConfig) -> Option<Arc<WarmStore>> {
+        if !cfg.store_enabled || cfg.store_dir.is_empty() {
+            return None;
+        }
+        match WarmStore::open(Path::new(&cfg.store_dir)) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                log::warn!("warm store '{}' unusable ({e}); running cold", cfg.store_dir);
+                None
+            }
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.counters.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.counters.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.counters.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.counters.errors.load(Ordering::Relaxed)
+    }
+
+    // ----- normmaps ------------------------------------------------------
+
+    /// Restore the normmap persisted under operand fingerprint `fp`, or
+    /// `None` (validated; mismatch or corruption evicts and runs cold).
+    pub fn load_normmap(&self, fp: Fingerprint) -> Option<NormMap> {
+        let key = normmap_key(fp);
+        let bytes = self.load_verified(&key, KIND_NORMMAP)?;
+        match decode_normmap(&bytes) {
+            Ok(nm) => Some(nm),
+            Err(e) => {
+                self.evict_bad(&key, &format!("undecodable normmap payload: {e}"));
+                None
+            }
+        }
+    }
+
+    /// Persist a normmap under its operand fingerprint (write-behind:
+    /// failures log + count, never propagate).
+    pub fn save_normmap(&self, fp: Fingerprint, nm: &NormMap) {
+        self.save_object(&normmap_key(fp), KIND_NORMMAP, encode_normmap(nm));
+    }
+
+    // ----- schedules -----------------------------------------------------
+
+    /// Restore the compacted schedule persisted under `key`, validated
+    /// against the expected tile grid (`tile_rows × tile_cols`, inner
+    /// dimension `tile_k`).
+    pub fn load_schedule(
+        &self,
+        key: &ScheduleKey,
+        tile_rows: usize,
+        tile_cols: usize,
+        tile_k: usize,
+    ) -> Option<Schedule> {
+        let skey = schedule_key(key);
+        let bytes = self.load_verified(&skey, KIND_SCHEDULE)?;
+        match decode_schedule(&bytes) {
+            Ok(s) if s.tile_rows == tile_rows && s.tile_cols == tile_cols && s.tile_k == tile_k => {
+                Some(s)
+            }
+            Ok(s) => {
+                self.evict_bad(
+                    &skey,
+                    &format!(
+                        "schedule shape {}x{}x{} does not match operands {}x{}x{}",
+                        s.tile_rows, s.tile_cols, s.tile_k, tile_rows, tile_cols, tile_k
+                    ),
+                );
+                None
+            }
+            Err(e) => {
+                self.evict_bad(&skey, &format!("undecodable schedule payload: {e}"));
+                None
+            }
+        }
+    }
+
+    pub fn save_schedule(&self, key: &ScheduleKey, sched: &Schedule) {
+        self.save_object(&schedule_key(key), KIND_SCHEDULE, encode_schedule(sched));
+    }
+
+    // ----- tuned τ -------------------------------------------------------
+
+    pub fn load_tau(&self, key: &TauKey) -> Option<TuneResult> {
+        let tkey = tau_key(key);
+        let bytes = self.load_verified(&tkey, KIND_TAU)?;
+        match decode_tau(&bytes) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                self.evict_bad(&tkey, &format!("undecodable τ payload: {e}"));
+                None
+            }
+        }
+    }
+
+    pub fn save_tau(&self, key: &TauKey, result: &TuneResult) {
+        self.save_object(&tau_key(key), KIND_TAU, encode_tau(result));
+    }
+
+    // ----- frozen artifact bundles --------------------------------------
+
+    /// Restore the frozen artifact-bundle directory persisted under
+    /// `name` (a synthesis-spec key, not a fingerprint).  The directory's
+    /// content checksum is re-verified file by file before it is handed
+    /// out; any drift evicts the whole bundle.
+    pub fn load_bundle_dir(&self, name: &str) -> Option<PathBuf> {
+        let key = bundle_key(name);
+        let entry = match self.read_manifest() {
+            Ok(m) => m.get(&key).cloned(),
+            Err(_) => None,
+        };
+        let Some(entry) = entry else {
+            self.miss();
+            return None;
+        };
+        if entry.kind != KIND_BUNDLE || entry.version != SCHEMA_VERSION {
+            self.evict_bad(&key, "bundle entry kind/version mismatch");
+            return None;
+        }
+        let dir = self.dir.join(&entry.path);
+        match dir_digest(&dir) {
+            Ok((bytes, sum)) if bytes == entry.bytes && sum == entry.checksum => {
+                self.hit(bytes);
+                Some(dir)
+            }
+            Ok(_) => {
+                self.evict_bad(&key, "bundle content drifted from its manifest checksum");
+                None
+            }
+            Err(e) => {
+                self.evict_bad(&key, &format!("bundle unreadable: {e}"));
+                None
+            }
+        }
+    }
+
+    /// Persist a synthesized bundle directory under `name` by copying it
+    /// into the store (temp dir + atomic rename).  Returns the stored
+    /// path, or `None` on failure (the caller keeps using its own copy).
+    pub fn save_bundle_dir(&self, name: &str, src: &Path) -> Option<PathBuf> {
+        let key = bundle_key(name);
+        let dst = self.dir.join(BUNDLES).join(name);
+        let tmp = self
+            .dir
+            .join(BUNDLES)
+            .join(format!(".tmp-{}-{}", name, std::process::id()));
+        let staged = (|| -> Result<()> {
+            let _ = fs::remove_dir_all(&tmp);
+            copy_dir(src, &tmp)?;
+            match fs::rename(&tmp, &dst) {
+                Ok(()) => Ok(()),
+                Err(_) if dst.is_dir() => {
+                    // A concurrent writer won the rename; keep its copy
+                    // (same content key → same content).
+                    let _ = fs::remove_dir_all(&tmp);
+                    Ok(())
+                }
+                Err(e) => Err(e.into()),
+            }
+        })();
+        if let Err(e) = staged {
+            self.write_error(&key, &e);
+            let _ = fs::remove_dir_all(&tmp);
+            return None;
+        }
+        let (bytes, checksum) = match dir_digest(&dst) {
+            Ok(d) => d,
+            Err(e) => {
+                self.write_error(&key, &e);
+                return None;
+            }
+        };
+        let entry = Entry {
+            kind: KIND_BUNDLE.into(),
+            version: SCHEMA_VERSION,
+            path: format!("{BUNDLES}/{name}"),
+            bytes,
+            checksum,
+        };
+        match self.commit_entry(&key, entry) {
+            Ok(()) => {
+                telemetry::global().add("spamm.store.write_bytes", bytes);
+                Some(dst)
+            }
+            Err(e) => {
+                self.write_error(&key, &e);
+                None
+            }
+        }
+    }
+
+    // ----- administration ------------------------------------------------
+
+    /// Snapshot of the manifest entries (key, entry, payload mtime).
+    pub fn ls(&self) -> Result<Vec<(String, Entry, Option<std::time::SystemTime>)>> {
+        let man = self.read_manifest()?;
+        Ok(man
+            .into_iter()
+            .map(|(k, e)| {
+                let mtime = entry_mtime(&self.dir.join(&e.path));
+                (k, e, mtime)
+            })
+            .collect())
+    }
+
+    /// Evict one entry by key: drop it from the manifest and best-effort
+    /// remove its payload.
+    pub fn evict(&self, key: &str) {
+        let entry = self
+            .read_manifest()
+            .ok()
+            .and_then(|m| m.get(key).cloned());
+        if let Err(e) = self.with_manifest(|m| {
+            m.remove(key);
+        }) {
+            self.write_error(key, &e);
+            return;
+        }
+        if let Some(e) = entry {
+            let path = self.dir.join(&e.path);
+            if e.kind == KIND_BUNDLE {
+                let _ = fs::remove_dir_all(&path);
+            } else {
+                let _ = fs::remove_file(&path);
+            }
+        }
+        self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.store.evictions", 1);
+    }
+
+    /// Evict a stored bundle by its logical name (the caller-facing
+    /// handle `save_bundle_dir` was given, not the manifest key).
+    pub fn evict_bundle(&self, name: &str) {
+        self.evict(&bundle_key(name));
+    }
+
+    /// Byte-budgeted GC: evict least-recently-touched entries (payload
+    /// mtime order — loads do not rewrite payloads, so mtime tracks the
+    /// write side; a warm entry that keeps being *re-saved* stays fresh)
+    /// until the store fits `budget_bytes`.
+    pub fn gc(&self, budget_bytes: u64) -> Result<GcReport> {
+        let mut entries = self.ls()?;
+        let mut report = GcReport {
+            entries_before: entries.len(),
+            bytes_before: entries.iter().map(|(_, e, _)| e.bytes).sum(),
+            ..GcReport::default()
+        };
+        report.bytes_after = report.bytes_before;
+        // LRU by mtime: oldest payloads first; entries whose payload is
+        // already gone sort first (they are pure manifest garbage).
+        entries.sort_by_key(|(_, _, mtime)| *mtime);
+        let mut i = 0;
+        while report.bytes_after > budget_bytes && i < entries.len() {
+            let (key, e, _) = &entries[i];
+            self.evict(key);
+            report.evicted += 1;
+            report.bytes_after = report.bytes_after.saturating_sub(e.bytes);
+            i += 1;
+        }
+        Ok(report)
+    }
+
+    /// Re-verify every manifest entry against its payload (size +
+    /// checksum + schema version).  With `heal`, bad entries are evicted
+    /// so the store self-repairs; without it the store is left untouched.
+    pub fn verify(&self, heal: bool) -> Result<VerifyReport> {
+        let man = self.read_manifest()?;
+        let mut report = VerifyReport::default();
+        for (key, e) in &man {
+            let reason = self.verify_entry(e);
+            match reason {
+                None => report.ok += 1,
+                Some(why) => {
+                    if heal {
+                        self.evict(key);
+                    }
+                    report.bad.push((key.clone(), why));
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    fn verify_entry(&self, e: &Entry) -> Option<String> {
+        if e.version != SCHEMA_VERSION {
+            return Some(format!(
+                "schema version {} (store is at {SCHEMA_VERSION})",
+                e.version
+            ));
+        }
+        let path = self.dir.join(&e.path);
+        let (bytes, sum) = if e.kind == KIND_BUNDLE {
+            match dir_digest(&path) {
+                Ok(d) => d,
+                Err(err) => return Some(format!("unreadable: {err}")),
+            }
+        } else {
+            match fs::read(&path) {
+                Ok(b) => {
+                    let sum = checksum_hex(&b);
+                    (b.len() as u64, sum)
+                }
+                Err(err) => return Some(format!("unreadable: {err}")),
+            }
+        };
+        if bytes != e.bytes {
+            return Some(format!("payload is {bytes} bytes, manifest says {}", e.bytes));
+        }
+        if sum != e.checksum {
+            return Some("checksum mismatch".into());
+        }
+        None
+    }
+
+    // ----- internals -----------------------------------------------------
+
+    fn hit(&self, bytes: u64) {
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.store.hits", 1);
+        telemetry::global().add("spamm.store.read_bytes", bytes);
+    }
+
+    fn miss(&self) {
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.store.misses", 1);
+    }
+
+    fn write_error(&self, key: &str, e: &Error) {
+        log::warn!("warm store: failed to persist '{key}': {e}");
+        self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("spamm.store.errors", 1);
+    }
+
+    fn evict_bad(&self, key: &str, why: &str) {
+        log::warn!("warm store: evicting '{key}' ({why}); falling back cold");
+        telemetry::global().add("spamm.store.errors", 1);
+        self.miss();
+        self.evict(key);
+    }
+
+    /// Read + fully validate one object payload; any failure evicts the
+    /// entry and reports a miss.
+    fn load_verified(&self, key: &str, kind: &str) -> Option<Vec<u8>> {
+        let man = match self.read_manifest() {
+            Ok(m) => m,
+            Err(_) => {
+                // Unparseable or version-skewed manifest: the store is
+                // cold until the next save rewrites it.
+                self.miss();
+                return None;
+            }
+        };
+        let Some(entry) = man.get(key) else {
+            self.miss();
+            return None;
+        };
+        if entry.kind != kind || entry.version != SCHEMA_VERSION {
+            self.evict_bad(key, "entry kind/version mismatch");
+            return None;
+        }
+        let bytes = match fs::read(self.dir.join(&entry.path)) {
+            Ok(b) => b,
+            Err(e) => {
+                self.evict_bad(key, &format!("payload unreadable: {e}"));
+                return None;
+            }
+        };
+        if bytes.len() as u64 != entry.bytes {
+            self.evict_bad(
+                key,
+                &format!("payload is {} bytes, manifest says {}", bytes.len(), entry.bytes),
+            );
+            return None;
+        }
+        if checksum_hex(&bytes) != entry.checksum {
+            self.evict_bad(key, "checksum mismatch");
+            return None;
+        }
+        let mut r = Reader::new(&bytes);
+        let (magic, version, k) = match (r.u32(), r.u32(), r.str_field()) {
+            (Ok(m), Ok(v), Ok(k)) => (m, v, k),
+            _ => {
+                self.evict_bad(key, "truncated payload header");
+                return None;
+            }
+        };
+        if magic != MAGIC || version as u64 != SCHEMA_VERSION || k != kind {
+            self.evict_bad(key, "payload header mismatch");
+            return None;
+        }
+        self.hit(entry.bytes);
+        Some(bytes)
+    }
+
+    /// Write-behind object save: payload to a temp file, atomic rename,
+    /// then manifest read-merge-write.  Never surfaces an error.
+    fn save_object(&self, key: &str, kind: &str, body: Vec<u8>) {
+        let mut payload = Writer::new();
+        payload.u32(MAGIC);
+        payload.u32(SCHEMA_VERSION as u32);
+        payload.str_field(kind);
+        payload.bytes(&body);
+        let payload = payload.into_inner();
+        let rel = format!("{OBJECTS}/{key}.bin");
+        let entry = Entry {
+            kind: kind.into(),
+            version: SCHEMA_VERSION,
+            path: rel.clone(),
+            bytes: payload.len() as u64,
+            checksum: checksum_hex(&payload),
+        };
+        let written = (|| -> Result<()> {
+            atomic_write(&self.dir.join(&rel), &payload)?;
+            self.commit_entry(key, entry)
+        })();
+        match written {
+            Ok(()) => telemetry::global().add("spamm.store.write_bytes", payload.len() as u64),
+            Err(e) => self.write_error(key, &e),
+        }
+    }
+
+    fn commit_entry(&self, key: &str, entry: Entry) -> Result<()> {
+        self.with_manifest(|m| {
+            m.insert(key.to_string(), entry);
+        })
+    }
+
+    /// Read-merge-write cycle over the on-disk manifest, serialized
+    /// in-process and atomically renamed on disk.
+    fn with_manifest(&self, edit: impl FnOnce(&mut BTreeMap<String, Entry>)) -> Result<()> {
+        let _guard = self.manifest_lock.lock().unwrap();
+        let mut man = self.read_manifest().unwrap_or_default();
+        edit(&mut man);
+        let mut entries = BTreeMap::new();
+        for (k, e) in &man {
+            let mut obj = BTreeMap::new();
+            obj.insert("kind".into(), Value::String(e.kind.clone()));
+            obj.insert("version".into(), Value::Number(e.version as f64));
+            obj.insert("path".into(), Value::String(e.path.clone()));
+            obj.insert("bytes".into(), Value::Number(e.bytes as f64));
+            obj.insert("checksum".into(), Value::String(e.checksum.clone()));
+            entries.insert(k.clone(), Value::Object(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Value::Number(SCHEMA_VERSION as f64));
+        root.insert("entries".into(), Value::Object(entries));
+        atomic_write(
+            &self.dir.join(MANIFEST),
+            Value::Object(root).to_json().as_bytes(),
+        )
+    }
+
+    /// Parse the on-disk manifest.  A missing file is an empty store; an
+    /// unparseable or wrong-version manifest is an error (callers treat
+    /// it as cold; the next save rewrites it wholesale).
+    fn read_manifest(&self) -> Result<BTreeMap<String, Entry>> {
+        let path = self.dir.join(MANIFEST);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeMap::new()),
+            Err(e) => return Err(e.into()),
+        };
+        let root = Value::parse(&text)?;
+        let version = root.get("version")?.as_f64()? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(Error::Store(format!(
+                "manifest schema version {version} (this build reads {SCHEMA_VERSION})"
+            )));
+        }
+        let mut out = BTreeMap::new();
+        for (k, v) in root.get("entries")?.as_object()? {
+            out.insert(
+                k.clone(),
+                Entry {
+                    kind: v.get("kind")?.as_str()?.to_string(),
+                    version: v.get("version")?.as_f64()? as u64,
+                    path: v.get("path")?.as_str()?.to_string(),
+                    bytes: v.get("bytes")?.as_f64()? as u64,
+                    checksum: v.get("checksum")?.as_str()?.to_string(),
+                },
+            );
+        }
+        Ok(out)
+    }
+}
+
+// ----- keys ---------------------------------------------------------------
+
+fn fp_hex(fp: Fingerprint) -> String {
+    format!("{:016x}{:016x}", fp.0, fp.1)
+}
+
+fn normmap_key(fp: Fingerprint) -> String {
+    format!("nm-{}", fp_hex(fp))
+}
+
+fn schedule_key(key: &ScheduleKey) -> String {
+    format!(
+        "sc-{}-{}-t{:08x}-d{:08x}",
+        fp_hex(key.a),
+        fp_hex(key.b),
+        key.tau_bits,
+        key.density_bits
+    )
+}
+
+fn tau_key(key: &TauKey) -> String {
+    format!(
+        "tau-{}-{}-r{:016x}-i{}-o{:016x}",
+        fp_hex(key.a),
+        fp_hex(key.b),
+        key.target_bits,
+        key.max_iters,
+        key.tolerance_bits
+    )
+}
+
+fn bundle_key(name: &str) -> String {
+    format!("bundle-{name}")
+}
+
+// ----- checksums -----------------------------------------------------------
+
+/// 128-bit checksum over raw bytes: two independent FNV-1a streams (the
+/// same construction as the operand fingerprints), hex-encoded.
+pub fn checksum_hex(bytes: &[u8]) -> String {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h1 = OFFSET ^ 0x9e37_79b9_7f4a_7c15;
+    let mut h2 = OFFSET ^ 0x5bd1_e995_0000_0003;
+    for &b in bytes {
+        h1 = (h1 ^ b as u64).wrapping_mul(PRIME);
+        h2 = (h2 ^ (b as u64).rotate_left(7)).wrapping_mul(PRIME);
+    }
+    h2 = (h2 ^ bytes.len() as u64).wrapping_mul(PRIME);
+    format!("{h1:016x}{h2:016x}")
+}
+
+/// Digest a bundle directory: byte total + checksum over every file's
+/// relative path and content, in sorted path order (rename-atomic
+/// directories have no single payload file to hash).
+fn dir_digest(dir: &Path) -> Result<(u64, String)> {
+    let mut files = Vec::new();
+    collect_files(dir, dir, &mut files)?;
+    files.sort();
+    let mut total = 0u64;
+    let mut acc = Vec::new();
+    for rel in &files {
+        let content = fs::read(dir.join(rel))?;
+        total += content.len() as u64;
+        acc.extend_from_slice(rel.as_bytes());
+        acc.push(0);
+        acc.extend_from_slice(checksum_hex(&content).as_bytes());
+    }
+    Ok((total, checksum_hex(&acc)))
+}
+
+fn collect_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_files(root, &path, out)?;
+        } else {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|_| Error::Store("bundle path escaped its root".into()))?;
+            out.push(rel.to_string_lossy().into_owned());
+        }
+    }
+    Ok(())
+}
+
+fn copy_dir(src: &Path, dst: &Path) -> Result<()> {
+    fs::create_dir_all(dst)?;
+    for entry in fs::read_dir(src)? {
+        let entry = entry?;
+        let from = entry.path();
+        let to = dst.join(entry.file_name());
+        if from.is_dir() {
+            copy_dir(&from, &to)?;
+        } else {
+            fs::copy(&from, &to)?;
+        }
+    }
+    Ok(())
+}
+
+fn entry_mtime(path: &Path) -> Option<std::time::SystemTime> {
+    let meta = fs::metadata(path).ok()?;
+    if meta.is_dir() {
+        // Bundles: freshest file inside (the rename itself may not touch
+        // the directory mtime on every filesystem).
+        let mut newest = meta.modified().ok();
+        let mut files = Vec::new();
+        if collect_files(path, path, &mut files).is_ok() {
+            for rel in files {
+                if let Ok(m) = fs::metadata(path.join(rel)) {
+                    let t = m.modified().ok();
+                    if t > newest {
+                        newest = t;
+                    }
+                }
+            }
+        }
+        newest
+    } else {
+        meta.modified().ok()
+    }
+}
+
+/// Crash-safe write: temp file in the target's directory, then atomic
+/// rename over the destination.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path
+        .parent()
+        .ok_or_else(|| Error::Store(format!("no parent directory for {}", path.display())))?;
+    let name = path
+        .file_name()
+        .ok_or_else(|| Error::Store(format!("no file name in {}", path.display())))?;
+    let tmp = dir.join(format!(
+        ".tmp-{}-{}",
+        name.to_string_lossy(),
+        std::process::id()
+    ));
+    fs::write(&tmp, bytes)?;
+    match fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e.into())
+        }
+    }
+}
+
+// ----- binary payload codecs ----------------------------------------------
+//
+// f32s are stored as raw little-endian bit patterns so a restored
+// artifact is bitwise identical to the computed one (decimal text would
+// not round-trip).
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn new() -> Writer {
+        Writer(Vec::new())
+    }
+
+    fn into_inner(self) -> Vec<u8> {
+        self.0
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn f32_bits(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+
+    fn str_field(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Store("truncated payload".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32_bits(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn str_field(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > self.buf.len() {
+            return Err(Error::Store("truncated payload".into()));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Store("non-utf8 string field".into()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(Error::Store("trailing bytes in payload".into()))
+        }
+    }
+}
+
+/// Skip the common header (already validated by `load_verified`).
+fn body_reader(bytes: &[u8]) -> Result<Reader<'_>> {
+    let mut r = Reader::new(bytes);
+    r.u32()?;
+    r.u32()?;
+    r.str_field()?;
+    Ok(r)
+}
+
+fn encode_matrix(w: &mut Writer, m: &Matrix) {
+    w.u32(m.rows() as u32);
+    w.u32(m.cols() as u32);
+    for &v in m.data() {
+        w.f32_bits(v);
+    }
+}
+
+fn decode_matrix(r: &mut Reader) -> Result<Matrix> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| Error::Store("matrix dims overflow".into()))?;
+    if count > r.buf.len() / 4 + 1 {
+        return Err(Error::Store("matrix dims exceed payload".into()));
+    }
+    let mut data = Vec::with_capacity(count);
+    for _ in 0..count {
+        data.push(r.f32_bits()?);
+    }
+    Matrix::from_vec(rows, cols, data)
+}
+
+fn encode_normmap(nm: &NormMap) -> Vec<u8> {
+    let mut w = Writer::new();
+    encode_matrix(&mut w, &nm.norms);
+    encode_matrix(&mut w, &nm.density);
+    w.into_inner()
+}
+
+fn decode_normmap(bytes: &[u8]) -> Result<NormMap> {
+    let mut r = body_reader(bytes)?;
+    let norms = decode_matrix(&mut r)?;
+    let density = decode_matrix(&mut r)?;
+    r.done()?;
+    NormMap::from_parts(norms, density)
+}
+
+fn encode_schedule(s: &Schedule) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(s.tile_rows as u32);
+    w.u32(s.tile_cols as u32);
+    w.u32(s.tile_k as u32);
+    for (ks, tags) in s.valid_k.iter().zip(&s.strategies) {
+        w.u32(ks.len() as u32);
+        for &k in ks {
+            w.u32(k);
+        }
+        for &t in tags {
+            w.u8(t.to_tag());
+        }
+    }
+    w.into_inner()
+}
+
+fn decode_schedule(bytes: &[u8]) -> Result<Schedule> {
+    let mut r = body_reader(bytes)?;
+    let tile_rows = r.u32()? as usize;
+    let tile_cols = r.u32()? as usize;
+    let tile_k = r.u32()? as usize;
+    let slots = tile_rows
+        .checked_mul(tile_cols)
+        .ok_or_else(|| Error::Store("schedule dims overflow".into()))?;
+    if slots > bytes.len() {
+        return Err(Error::Store("schedule dims exceed payload".into()));
+    }
+    let mut valid_k = Vec::with_capacity(slots);
+    let mut strategies = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        let len = r.u32()? as usize;
+        if len > tile_k {
+            return Err(Error::Store("slot has more products than tile_k".into()));
+        }
+        let mut ks = Vec::with_capacity(len);
+        for _ in 0..len {
+            let k = r.u32()?;
+            if k as usize >= tile_k {
+                return Err(Error::Store("product index out of k range".into()));
+            }
+            ks.push(k);
+        }
+        let mut tags = Vec::with_capacity(len);
+        for _ in 0..len {
+            tags.push(TileStrategy::from_tag(r.u8()?)?);
+        }
+        valid_k.push(ks);
+        strategies.push(tags);
+    }
+    r.done()?;
+    Ok(Schedule {
+        tile_rows,
+        tile_cols,
+        tile_k,
+        valid_k,
+        strategies,
+    })
+}
+
+fn encode_tau(t: &TuneResult) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(t.tau.to_bits());
+    w.u64(t.achieved_ratio.to_bits());
+    w.u64(t.iters as u64);
+    w.u64(t.expansion_k as u64);
+    w.into_inner()
+}
+
+fn decode_tau(bytes: &[u8]) -> Result<TuneResult> {
+    let mut r = body_reader(bytes)?;
+    let tau = f32::from_bits(r.u32()?);
+    let achieved_ratio = f64::from_bits(r.u64()?);
+    let iters = r.u64()? as usize;
+    let expansion_k = r.u64()? as usize;
+    r.done()?;
+    if !tau.is_finite() || tau < 0.0 || !achieved_ratio.is_finite() {
+        return Err(Error::Store("non-finite tuned τ".into()));
+    }
+    Ok(TuneResult {
+        tau,
+        achieved_ratio,
+        iters,
+        expansion_k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::tiling::PaddedMatrix;
+    use crate::spamm::cache::fingerprint;
+    use crate::spamm::normmap::normmap_with_density;
+
+    fn tmp_store(tag: &str) -> (PathBuf, WarmStore) {
+        let dir = std::env::temp_dir().join(format!(
+            "cuspamm_store_unit_{}_{}",
+            tag,
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let store = WarmStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn normmap_round_trips_bitwise() {
+        let (dir, store) = tmp_store("nm");
+        let m = Matrix::randn(64, 64, 3);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap_with_density(&p);
+        let fp = fingerprint(&p);
+        assert!(store.load_normmap(fp).is_none());
+        store.save_normmap(fp, &nm);
+        let restored = store.load_normmap(fp).expect("persisted entry");
+        assert_eq!(restored.norms.data(), nm.norms.data());
+        assert_eq!(restored.density.data(), nm.density.data());
+        // A fresh handle over the same directory (the "restarted
+        // process") sees the entry too.
+        let reopened = WarmStore::open(&dir).unwrap();
+        let again = reopened.load_normmap(fp).expect("restart warm");
+        assert_eq!(again.norms.data(), nm.norms.data());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schedule_round_trips_and_validates_shape() {
+        let (dir, store) = tmp_store("sc");
+        let m = Matrix::randn(64, 64, 5);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap_with_density(&p);
+        let sched = Schedule::build_adaptive(&nm, &nm, 1e-3, 0.5).unwrap();
+        let key = ScheduleKey {
+            a: Fingerprint(1, 2),
+            b: Fingerprint(3, 4),
+            tau_bits: 1e-3f32.to_bits(),
+            density_bits: 0.5f32.to_bits(),
+        };
+        store.save_schedule(&key, &sched);
+        let r = store
+            .load_schedule(&key, sched.tile_rows, sched.tile_cols, sched.tile_k)
+            .expect("persisted schedule");
+        assert_eq!(r.valid_k, sched.valid_k);
+        assert_eq!(r.strategies, sched.strategies);
+        // Wrong expected grid → cold + evicted.
+        assert!(store.load_schedule(&key, 99, 99, 99).is_none());
+        assert!(store
+            .load_schedule(&key, sched.tile_rows, sched.tile_cols, sched.tile_k)
+            .is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tau_round_trips_exactly() {
+        let (dir, store) = tmp_store("tau");
+        let key = TauKey::new(
+            Fingerprint(7, 8),
+            Fingerprint(9, 10),
+            0.1,
+            &TuneParams::default(),
+        );
+        let t = TuneResult {
+            tau: 3.0339e-4,
+            achieved_ratio: 0.10312,
+            iters: 9,
+            expansion_k: 3,
+        };
+        store.save_tau(&key, &t);
+        let r = store.load_tau(&key).expect("persisted τ");
+        assert_eq!(r.tau.to_bits(), t.tau.to_bits());
+        assert_eq!(r.achieved_ratio.to_bits(), t.achieved_ratio.to_bits());
+        assert_eq!((r.iters, r.expansion_k), (t.iters, t.expansion_k));
+        // Different target ratio → different key → miss.
+        let other = TauKey::new(key.a, key.b, 0.2, &TuneParams::default());
+        assert!(store.load_tau(&other).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_lru_by_mtime_under_budget() {
+        let (dir, store) = tmp_store("gc");
+        let m = Matrix::randn(64, 64, 6);
+        let p = PaddedMatrix::new(&m, 32);
+        let nm = normmap_with_density(&p);
+        for i in 0..4u64 {
+            store.save_normmap(Fingerprint(i, i + 100), &nm);
+            // mtime granularity: space the writes out.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let total: u64 = store.ls().unwrap().iter().map(|(_, e, _)| e.bytes).sum();
+        let one = total / 4;
+        let report = store.gc(2 * one + one / 2).unwrap();
+        assert_eq!(report.entries_before, 4);
+        assert_eq!(report.evicted, 2);
+        assert!(report.bytes_after <= 2 * one + one / 2);
+        // The *oldest* entries went: 0 and 1 are gone, 2 and 3 remain.
+        assert!(store.load_normmap(Fingerprint(0, 100)).is_none());
+        assert!(store.load_normmap(Fingerprint(1, 101)).is_none());
+        assert!(store.load_normmap(Fingerprint(2, 102)).is_some());
+        assert!(store.load_normmap(Fingerprint(3, 103)).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_is_position_and_length_sensitive() {
+        assert_ne!(checksum_hex(b"ab"), checksum_hex(b"ba"));
+        assert_ne!(checksum_hex(b""), checksum_hex(b"\0"));
+        assert_eq!(checksum_hex(b"xyz"), checksum_hex(b"xyz"));
+    }
+}

@@ -224,6 +224,172 @@ fn update_validates_inputs_and_leaves_state_intact() {
     assert_eq!(rep.tiles_changed, 1);
 }
 
+/// Deferred deltas to one operand coalesce: the union of changed tiles
+/// lands as a single patch (one fingerprint derivation, one norm patch,
+/// one repair sweep), overlapping tiles keep the last payload, and the
+/// result is bitwise identical to a fresh put of the merged content.
+#[test]
+fn deferred_updates_coalesce_into_one_patch() {
+    let n = 4 * L;
+    let tau = 1e-4f32;
+    let cfg = SpammConfig::default();
+    let mut host = Matrix::decay_algebraic(n, 0.1, 0.1, 51);
+    let s = session(cfg.clone());
+    let aid = s.put(&host).unwrap();
+    let plan = s.prepare(aid, aid, Approx::Tau(tau)).unwrap();
+    let _cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    // Two deferred deltas sharing tile (2,2): the second payload must
+    // win, and the pending set must be the 3-tile union.
+    let first = [(0usize, 1usize), (2, 2)];
+    let data1 = drift_payload(&first, 60);
+    assert_eq!(s.update_deferred(aid, &first, &data1).unwrap(), 2);
+    let second = [(2usize, 2usize), (3, 0)];
+    let data2 = drift_payload(&second, 61);
+    assert_eq!(s.update_deferred(aid, &second, &data2).unwrap(), 3);
+    // Host mirror in call order — the overlap resolves last-writer-wins.
+    patch_host(&mut host, &first, &data1);
+    patch_host(&mut host, &second, &data2);
+
+    let flushed = s.flush_updates().unwrap();
+    assert_eq!(flushed.len(), 1, "one operand pending → one merged patch");
+    let (id, rep) = &flushed[0];
+    assert_eq!(*id, aid);
+    assert_eq!(rep.tiles_changed, 3, "union of both deltas: {rep:?}");
+    assert_eq!(rep.norm_tiles_patched, 3, "one patch, not one per call");
+    assert!(rep.norm_patched, "{rep:?}");
+    // Nothing left pending: a second flush is a no-op.
+    assert!(s.flush_updates().unwrap().is_empty());
+
+    let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+    let f = session(cfg);
+    let fid = f.put(&host).unwrap();
+    let fplan = f.prepare(fid, fid, Approx::Tau(tau)).unwrap();
+    let fresh = f.wait(f.submit(fplan).unwrap()).unwrap();
+    assert_eq!(
+        warm.c.data(),
+        fresh.c.data(),
+        "coalesced patch must be bitwise identical to a fresh put of the \
+         merged content (last writer winning the overlapped tile)"
+    );
+}
+
+/// Submits flush implicitly: a job never runs against half-flushed
+/// operands, and the deferred content is visible to it.
+#[test]
+fn submit_flushes_deferred_updates() {
+    let n = 4 * L;
+    let tau = 1e-4f32;
+    let cfg = SpammConfig::default();
+    let mut host = Matrix::decay_algebraic(n, 0.1, 0.1, 53);
+    let s = session(cfg.clone());
+    let aid = s.put(&host).unwrap();
+    let plan = s.prepare(aid, aid, Approx::Tau(tau)).unwrap();
+    let _cold = s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let changed = [(1usize, 3usize), (2, 0)];
+    let data = drift_payload(&changed, 62);
+    patch_host(&mut host, &changed, &data);
+    s.update_deferred(aid, &changed, &data).unwrap();
+    // No explicit flush: submit must apply the pending patch first.
+    let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+    assert!(
+        s.flush_updates().unwrap().is_empty(),
+        "submit must have drained the pending patch"
+    );
+
+    let f = session(cfg);
+    let fid = f.put(&host).unwrap();
+    let fplan = f.prepare(fid, fid, Approx::Tau(tau)).unwrap();
+    let fresh = f.wait(f.submit(fplan).unwrap()).unwrap();
+    assert_eq!(
+        warm.c.data(),
+        fresh.c.data(),
+        "the submitted job must see the deferred delta"
+    );
+}
+
+/// Coalescing is transparent: deferring a batch of deltas and flushing
+/// once produces the same bits as applying each delta with its own
+/// `update` call — and flushes across operands apply in id order, one
+/// merged patch each.
+#[test]
+fn coalesced_flush_matches_sequential_updates() {
+    let n = 4 * L;
+    let tau = 1e-3f32;
+    let cfg = SpammConfig::default();
+    let host_a = Matrix::decay_algebraic(n, 0.1, 0.1, 55);
+    let host_b = Matrix::decay_algebraic(n, 0.1, 0.1, 56);
+    let d1 = [(0usize, 0usize), (1, 2)];
+    let d2 = [(3usize, 3usize)];
+    let p1 = drift_payload(&d1, 63);
+    let p2 = drift_payload(&d2, 64);
+
+    // Sequential: one update call per delta, per operand.
+    let seq = session(cfg.clone());
+    let sa = seq.put(&host_a).unwrap();
+    let sb = seq.put(&host_b).unwrap();
+    let splan = seq.prepare(sa, sb, Approx::Tau(tau)).unwrap();
+    let _ = seq.wait(seq.submit(splan).unwrap()).unwrap();
+    seq.update(sa, &d1, &p1).unwrap();
+    seq.update(sa, &d2, &p2).unwrap();
+    seq.update(sb, &d2, &p2).unwrap();
+    let s_done = seq.wait(seq.submit(splan).unwrap()).unwrap();
+
+    // Coalesced: defer everything, flush once.
+    let co = session(cfg);
+    let ca = co.put(&host_a).unwrap();
+    let cb = co.put(&host_b).unwrap();
+    let cplan = co.prepare(ca, cb, Approx::Tau(tau)).unwrap();
+    let _ = co.wait(co.submit(cplan).unwrap()).unwrap();
+    co.update_deferred(ca, &d1, &p1).unwrap();
+    co.update_deferred(ca, &d2, &p2).unwrap();
+    co.update_deferred(cb, &d2, &p2).unwrap();
+    let flushed = co.flush_updates().unwrap();
+    assert_eq!(flushed.len(), 2, "two operands pending → two merged patches");
+    assert_eq!(
+        (flushed[0].0, flushed[1].0),
+        (ca, cb),
+        "flush applies in operand-id order"
+    );
+    assert_eq!(flushed[0].1.tiles_changed, 3, "operand a: 3-tile union");
+    assert_eq!(flushed[1].1.tiles_changed, 1, "operand b: single tile");
+    let c_done = co.wait(co.submit(cplan).unwrap()).unwrap();
+
+    assert_eq!(
+        c_done.c.data(),
+        s_done.c.data(),
+        "one coalesced patch must reproduce the sequential updates bitwise"
+    );
+}
+
+/// Deferred-path validation mirrors `update`: malformed deltas are
+/// rejected before anything is buffered, earlier valid deferrals
+/// survive, and an empty `update` is a no-op receipt.
+#[test]
+fn update_deferred_validates_and_preserves_pending() {
+    let n = 4 * L;
+    let host = Matrix::decay_algebraic(n, 0.1, 0.1, 57);
+    let s = session(SpammConfig::default());
+    let aid = s.put(&host).unwrap();
+
+    let good = [(1usize, 1usize)];
+    let payload = drift_payload(&good, 65);
+    assert_eq!(s.update_deferred(aid, &good, &payload).unwrap(), 1);
+    // Wrong payload length and out-of-grid coordinates: rejected without
+    // disturbing the already-pending tile.
+    assert!(s.update_deferred(aid, &[(0, 0)], &[0.0; 7]).is_err());
+    assert!(s.update_deferred(aid, &[(9, 0)], &[0.0; L * L]).is_err());
+    let flushed = s.flush_updates().unwrap();
+    assert_eq!(flushed.len(), 1);
+    assert_eq!(flushed[0].1.tiles_changed, 1);
+
+    // An empty delta with nothing pending: a default (no-op) receipt.
+    let rep = s.update(aid, &[], &[]).unwrap();
+    assert_eq!(rep.tiles_changed, 0);
+    assert!(s.flush_updates().unwrap().is_empty());
+}
+
 /// Expression plans referencing an updated operand migrate too: the next
 /// graph submit runs against the new bits and matches a cold rebuild.
 #[test]

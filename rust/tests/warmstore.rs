@@ -1,0 +1,267 @@
+//! Robustness tests for the content-addressed warm-start store.  The
+//! store must never be able to make a result wrong — only warm — so
+//! every corruption mode here (truncation, bit flips, manifest/payload
+//! disagreement, stale schema versions, racing writers) has the same
+//! required outcome: the load falls back cold (`None`), nothing panics,
+//! and the bad entry is evicted so the next save self-heals.  The last
+//! test drives the end-to-end contract: a restarted `SpammSession` over
+//! the same store directory answers its first request entirely from
+//! disk, bitwise identical to the cold run.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, SpammSession};
+use cuspamm::json::Value;
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::spamm::cache::{fingerprint, Fingerprint};
+use cuspamm::spamm::normmap::{normmap_with_density, NormMap};
+use cuspamm::store::WarmStore;
+
+use common::bundle;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "cuspamm_warmstore_it_{}_{}",
+        tag,
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A store with one persisted normmap, plus everything needed to verify
+/// a restore of it.
+fn seeded_store(dir: &Path) -> (WarmStore, Fingerprint, NormMap) {
+    let store = WarmStore::open(dir).unwrap();
+    let m = Matrix::randn(64, 64, 9);
+    let p = PaddedMatrix::new(&m, 32);
+    let nm = normmap_with_density(&p);
+    let fp = fingerprint(&p);
+    store.save_normmap(fp, &nm);
+    (store, fp, nm)
+}
+
+fn payload_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for ent in fs::read_dir(dir.join("objects")).unwrap() {
+        let p = ent.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) == Some("bin") {
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[test]
+fn truncated_payload_falls_back_cold_and_self_heals() {
+    let dir = tmp_dir("trunc");
+    let (store, fp, nm) = seeded_store(&dir);
+    for p in payload_files(&dir) {
+        let bytes = fs::read(&p).unwrap();
+        fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    }
+    assert!(
+        store.load_normmap(fp).is_none(),
+        "a truncated payload must read as cold, never as data"
+    );
+    assert!(store.evictions() >= 1, "the bad entry must be evicted");
+    // Evicted means gone: the manifest no longer names it.
+    assert!(store.load_normmap(fp).is_none());
+    // Self-heal: the next save repopulates and restores round-trip.
+    store.save_normmap(fp, &nm);
+    let back = store.load_normmap(fp).expect("store heals after a re-save");
+    assert_eq!(back.norms.data(), nm.norms.data());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_flipped_payload_fails_its_checksum() {
+    let dir = tmp_dir("flip");
+    let (store, fp, nm) = seeded_store(&dir);
+    for p in payload_files(&dir) {
+        let mut bytes = fs::read(&p).unwrap();
+        // Flip one bit mid-payload: size and header stay plausible, so
+        // only the checksum can catch it.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        fs::write(&p, &bytes).unwrap();
+    }
+    assert!(store.load_normmap(fp).is_none(), "checksum must catch a bit flip");
+    assert!(store.evictions() >= 1);
+    store.save_normmap(fp, &nm);
+    assert!(store.load_normmap(fp).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_payload_size_disagreement_is_cold() {
+    let dir = tmp_dir("size");
+    let (store, fp, nm) = seeded_store(&dir);
+    // Grow every payload: content now disagrees with the manifest's
+    // recorded byte size (the append also breaks the checksum, but the
+    // size check fires first and must be enough on its own).
+    for p in payload_files(&dir) {
+        let mut bytes = fs::read(&p).unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        fs::write(&p, &bytes).unwrap();
+    }
+    assert!(store.load_normmap(fp).is_none());
+    assert!(store.evictions() >= 1);
+    store.save_normmap(fp, &nm);
+    assert!(store.load_normmap(fp).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Rewrite the manifest with every entry's schema version replaced.
+fn rewrite_entry_versions(dir: &Path, version: f64) {
+    let path = dir.join("manifest.json");
+    let root = Value::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+    let mut entries = BTreeMap::new();
+    for (k, v) in root.get("entries").unwrap().as_object().unwrap() {
+        let mut obj = v.as_object().unwrap().clone();
+        obj.insert("version".into(), Value::Number(version));
+        entries.insert(k.clone(), Value::Object(obj));
+    }
+    let mut new_root = root.as_object().unwrap().clone();
+    new_root.insert("entries".into(), Value::Object(entries));
+    fs::write(&path, Value::Object(new_root).to_json()).unwrap();
+}
+
+#[test]
+fn stale_entry_schema_version_is_cold() {
+    let dir = tmp_dir("stale");
+    let (store, fp, nm) = seeded_store(&dir);
+    rewrite_entry_versions(&dir, 999.0);
+    assert!(
+        store.load_normmap(fp).is_none(),
+        "an entry written under another schema version must be cold"
+    );
+    assert!(store.evictions() >= 1);
+    store.save_normmap(fp, &nm);
+    assert!(store.load_normmap(fp).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_manifest_schema_version_is_cold_until_rewritten() {
+    let dir = tmp_dir("staleman");
+    let (store, fp, nm) = seeded_store(&dir);
+    // Skew the *root* manifest version: the whole store reads as cold.
+    let path = dir.join("manifest.json");
+    let root = Value::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+    let mut new_root = root.as_object().unwrap().clone();
+    new_root.insert("version".into(), Value::Number(999.0));
+    fs::write(&path, Value::Object(new_root).to_json()).unwrap();
+    assert!(store.load_normmap(fp).is_none());
+    // The next save rewrites the manifest wholesale at the current
+    // schema version, resurrecting the store.
+    store.save_normmap(fp, &nm);
+    assert!(store.load_normmap(fp).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_same_entry_writers_never_corrupt() {
+    let dir = tmp_dir("race");
+    let shared = Arc::new(WarmStore::open(&dir).unwrap());
+    let m = Matrix::randn(64, 64, 13);
+    let p = PaddedMatrix::new(&m, 32);
+    let nm = Arc::new(normmap_with_density(&p));
+    let fp = fingerprint(&p);
+    // Same key, same content (the store is content-addressed, so racing
+    // writers of one entry are always writing identical bytes): half the
+    // threads share one handle, half open their own — the cross-process
+    // shape.  Whoever wins each rename, the entry must load intact.
+    let mut threads = Vec::new();
+    for i in 0..8 {
+        let dir = dir.clone();
+        let shared = shared.clone();
+        let nm = nm.clone();
+        threads.push(std::thread::spawn(move || {
+            let own;
+            let store: &WarmStore = if i % 2 == 0 {
+                &shared
+            } else {
+                own = WarmStore::open(&dir).unwrap();
+                &own
+            };
+            for _ in 0..10 {
+                store.save_normmap(fp, &nm);
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let restored = shared
+        .load_normmap(fp)
+        .expect("racing identical writers must leave a loadable entry");
+    assert_eq!(restored.norms.data(), nm.norms.data());
+    assert_eq!(restored.density.data(), nm.density.data());
+    assert!(shared.verify(false).unwrap().bad.is_empty());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restarted_session_is_warm_and_bitwise_identical() {
+    let dir = tmp_dir("restart");
+    let mut cfg = SpammConfig::default();
+    cfg.store_dir = dir.to_string_lossy().into_owned();
+    let b = bundle();
+    let ma = Matrix::decay_algebraic(128, 0.1, 0.1, 21);
+    let mb = Matrix::decay_algebraic(128, 0.1, 0.1, 22);
+    // One full "process": fresh session, nothing shared in memory.
+    let run = |cfg: &SpammConfig| {
+        let s = SpammSession::new(&b, cfg.clone()).unwrap();
+        let ida = s.put(&ma).unwrap();
+        let idb = s.put(&mb).unwrap();
+        let plan = s.prepare(ida, idb, Approx::ValidRatio(0.3)).unwrap();
+        s.wait(s.submit(plan).unwrap()).unwrap()
+    };
+
+    let cold = run(&cfg);
+    assert_eq!(cold.stats.tau_tuned, 1);
+    assert_eq!(cold.stats.norm_cache_misses, 2);
+    assert_eq!(cold.stats.schedule_cache_misses, 1);
+    assert_eq!(
+        cold.stats.store_normmap_hits + cold.stats.store_schedule_hits + cold.stats.store_tau_hits,
+        0,
+        "an empty store cannot produce hits"
+    );
+
+    let warm = run(&cfg);
+    assert_eq!(
+        (
+            warm.stats.norm_cache_misses,
+            warm.stats.schedule_cache_misses,
+            warm.stats.tau_tuned
+        ),
+        (0, 0, 0),
+        "the restarted session must not recompute anything"
+    );
+    assert_eq!(warm.stats.store_normmap_hits, 2);
+    assert_eq!(warm.stats.store_schedule_hits, 1);
+    assert_eq!(warm.stats.store_tau_hits, 1);
+    assert_eq!(warm.tau.to_bits(), cold.tau.to_bits(), "restored τ drifted");
+    assert_eq!(warm.c.data(), cold.c.data(), "warm result diverged");
+
+    // Kill switch: with the store disabled the cold path runs end to end
+    // and produces the identical bits.
+    let mut off = cfg.clone();
+    off.store_enabled = false;
+    let dark = run(&off);
+    assert_eq!(dark.stats.tau_tuned, 1);
+    assert_eq!(
+        dark.stats.store_normmap_hits + dark.stats.store_schedule_hits + dark.stats.store_tau_hits,
+        0
+    );
+    assert_eq!(dark.c.data(), cold.c.data(), "no-store result diverged");
+    let _ = fs::remove_dir_all(&dir);
+}
