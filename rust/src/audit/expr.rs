@@ -1,0 +1,281 @@
+//! Expression-plan dataflow analysis: liveness, fingerprint uniqueness,
+//! acyclicity, shape coherence, placement coverage, and pinned-schedule
+//! soundness over a prepared [`ExprPlan`].
+
+use std::collections::HashMap;
+
+use crate::coordinator::expr::{ExprPlan, NodeKind};
+
+use super::{audit_schedule, AuditKind, AuditLayer, AuditReport};
+
+/// Statically verify a prepared expression plan (see module docs of
+/// [`crate::audit`]).  The liveness model mirrors the executor exactly:
+/// each node's value is retired after `uses` consumption events, where
+/// the events are its consumers plus one extra for the root and each
+/// kept node — a stored count above that leaks the intermediate's
+/// resident tiles forever; a count below frees them before the last
+/// consumer reads them.
+pub fn audit_expr_plan(plan: &ExprPlan) -> AuditReport {
+    let mut r = AuditReport::default();
+    let nodes = &plan.nodes;
+    let n = nodes.len();
+
+    r.checks += 1;
+    if plan.root >= n {
+        r.push(
+            AuditLayer::ExprPlan,
+            AuditKind::DanglingInput,
+            None,
+            Some(plan.root),
+            None,
+            format!("root references node {} of {n}", plan.root),
+        );
+        return r;
+    }
+
+    // Recompute consumer counts and check acyclicity in one walk: the
+    // node list is execution order, so every input must strictly
+    // precede its consumer.
+    let mut uses = vec![0usize; n];
+    for (idx, node) in nodes.iter().enumerate() {
+        let inputs: Vec<usize> = match node.kind {
+            NodeKind::Operand { .. } => Vec::new(),
+            NodeKind::Spamm { a, b, .. } => vec![a.raw(), b.raw()],
+            NodeKind::Axpby { x, y, .. } | NodeKind::DiffNorm { x, y } => {
+                vec![x.raw(), y.raw()]
+            }
+            NodeKind::Scale { x, .. } | NodeKind::AddDiag { x, .. } => vec![x.raw()],
+        };
+        for inp in inputs {
+            r.checks += 1;
+            if inp >= idx {
+                r.push(
+                    AuditLayer::ExprPlan,
+                    AuditKind::DanglingInput,
+                    None,
+                    Some(idx),
+                    None,
+                    format!("node {idx} consumes node {inp}, which does not precede it"),
+                );
+            } else {
+                uses[inp] += 1;
+            }
+        }
+    }
+    uses[plan.root] += 1;
+    for &k in &plan.keeps {
+        if k < n {
+            uses[k] += 1;
+        } else {
+            r.checks += 1;
+            r.push(
+                AuditLayer::ExprPlan,
+                AuditKind::DanglingInput,
+                None,
+                Some(k),
+                None,
+                format!("kept node {k} of {n}"),
+            );
+        }
+    }
+    for (idx, node) in nodes.iter().enumerate() {
+        r.checks += 1;
+        if node.uses != uses[idx] {
+            let what = if node.uses > uses[idx] {
+                "leaked: its resident tiles are never freed"
+            } else {
+                "freed before its last consumer reads it"
+            };
+            r.push(
+                AuditLayer::ExprPlan,
+                AuditKind::UseCountMismatch,
+                None,
+                Some(idx),
+                None,
+                format!(
+                    "node plans {} retirement events, dataflow has {} — the value is {what}",
+                    node.uses, uses[idx]
+                ),
+            );
+        }
+    }
+
+    // Derived fingerprints must be unique across *compute* nodes — two
+    // intermediates sharing a fingerprint would alias in the residency
+    // pool, and retiring one would free the other's tiles.  (Operand
+    // nodes may legitimately share: two slots bound to the same operand.)
+    let mut seen: HashMap<(u64, u64), usize> = HashMap::new();
+    for (idx, node) in nodes.iter().enumerate() {
+        if matches!(node.kind, NodeKind::Operand { .. }) {
+            continue;
+        }
+        r.checks += 1;
+        if let Some(&prev) = seen.get(&(node.fp.0, node.fp.1)) {
+            r.push(
+                AuditLayer::ExprPlan,
+                AuditKind::FingerprintCollision,
+                None,
+                Some(idx),
+                Some(super::fp_hex(node.fp)),
+                format!("derived fingerprint collides with node {prev}"),
+            );
+        } else {
+            seen.insert((node.fp.0, node.fp.1), idx);
+        }
+    }
+
+    // Shape coherence node by node, plus placement coverage: every
+    // compute matrix node's owner map must cover its output grid with
+    // in-range devices (the static half of cross-device bounce
+    // accounting — execution charges a host bounce exactly when a
+    // consumer's owner differs from the producer's, so a missing or
+    // ill-sized map breaks that attribution).
+    for (idx, node) in nodes.iter().enumerate() {
+        match node.kind {
+            NodeKind::Operand { .. } => {}
+            NodeKind::Spamm { a, b, .. } => {
+                if a.raw() < idx && b.raw() < idx {
+                    let (pa, pb) = (&nodes[a.raw()], &nodes[b.raw()]);
+                    r.checks += 1;
+                    if pa.cols != pb.rows
+                        || node.rows != pa.rows
+                        || node.cols != pb.cols
+                        || node.tile_rows != pa.tile_rows
+                        || node.tile_cols != pb.tile_cols
+                    {
+                        r.push(
+                            AuditLayer::ExprPlan,
+                            AuditKind::ShapeMismatch,
+                            None,
+                            Some(idx),
+                            None,
+                            format!(
+                                "spamm {}x{} · {}x{} planned as {}x{}",
+                                pa.rows, pa.cols, pb.rows, pb.cols, node.rows, node.cols
+                            ),
+                        );
+                    }
+                }
+            }
+            NodeKind::Axpby { x, y, .. } | NodeKind::DiffNorm { x, y } => {
+                if x.raw() < idx && y.raw() < idx {
+                    let (px, py) = (&nodes[x.raw()], &nodes[y.raw()]);
+                    r.checks += 1;
+                    if px.rows != py.rows || px.cols != py.cols {
+                        r.push(
+                            AuditLayer::ExprPlan,
+                            AuditKind::ShapeMismatch,
+                            None,
+                            Some(idx),
+                            None,
+                            format!(
+                                "element-wise inputs {}x{} vs {}x{}",
+                                px.rows, px.cols, py.rows, py.cols
+                            ),
+                        );
+                    }
+                }
+            }
+            NodeKind::Scale { x, .. } => {
+                if x.raw() < idx {
+                    let px = &nodes[x.raw()];
+                    r.checks += 1;
+                    if node.rows != px.rows || node.cols != px.cols {
+                        r.push(
+                            AuditLayer::ExprPlan,
+                            AuditKind::ShapeMismatch,
+                            None,
+                            Some(idx),
+                            None,
+                            format!(
+                                "scale of {}x{} planned as {}x{}",
+                                px.rows, px.cols, node.rows, node.cols
+                            ),
+                        );
+                    }
+                }
+            }
+            NodeKind::AddDiag { x, .. } => {
+                r.checks += 1;
+                if node.rows != node.cols {
+                    r.push(
+                        AuditLayer::ExprPlan,
+                        AuditKind::ShapeMismatch,
+                        None,
+                        Some(idx),
+                        None,
+                        format!("add_diag on non-square {}x{}", node.rows, node.cols),
+                    );
+                }
+                let _ = x;
+            }
+        }
+        // Placement maps: required on every compute matrix node.
+        let is_compute_matrix = !matches!(
+            node.kind,
+            NodeKind::Operand { .. } | NodeKind::DiffNorm { .. }
+        );
+        if is_compute_matrix {
+            r.checks += 1;
+            match &node.owner {
+                None => r.push(
+                    AuditLayer::ExprPlan,
+                    AuditKind::OwnerMapMismatch,
+                    None,
+                    Some(idx),
+                    None,
+                    "compute node carries no tile->device placement map".into(),
+                ),
+                Some(o) => {
+                    if o.len() != node.tile_rows * node.tile_cols {
+                        r.push(
+                            AuditLayer::ExprPlan,
+                            AuditKind::OwnerMapMismatch,
+                            None,
+                            Some(idx),
+                            None,
+                            format!(
+                                "placement map covers {} tiles, node output has {}",
+                                o.len(),
+                                node.tile_rows * node.tile_cols
+                            ),
+                        );
+                    }
+                    for (t, &d) in o.iter().enumerate() {
+                        r.checks += 1;
+                        if d >= plan.devices {
+                            r.push(
+                                AuditLayer::ExprPlan,
+                                AuditKind::OwnerOutOfRange,
+                                Some((t / node.tile_cols.max(1), t % node.tile_cols.max(1))),
+                                Some(idx),
+                                None,
+                                format!(
+                                    "tile placed on device {d}, plan targets {}",
+                                    plan.devices
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Pinned schedules were built from the inputs' propagated bounds
+        // — recheck them for soundness against those very bounds.
+        if let (NodeKind::Spamm { a, b, .. }, Some(sched)) = (&node.kind, &node.sched) {
+            if a.raw() < idx && b.raw() < idx {
+                if let (Some(na), Some(nb)) =
+                    (&nodes[a.raw()].bound, &nodes[b.raw()].bound)
+                {
+                    let mut sub = audit_schedule(na, nb, node.tau, node.dt, sched);
+                    for v in &mut sub.violations {
+                        v.layer = AuditLayer::ExprPlan;
+                        v.index = Some(idx);
+                    }
+                    r.merge(sub);
+                }
+            }
+        }
+    }
+    r
+}

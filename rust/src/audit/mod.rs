@@ -1,0 +1,786 @@
+//! Cross-layer invariant auditor: static verification of schedules,
+//! expression plans, residency state, and the warm store.
+//!
+//! Every fast path in the crate — schedule *repair* instead of rebuild,
+//! normmap patching, pool re-keying, warm-store restores — is validated
+//! end-to-end by bitwise-identity tests, which prove *the output happened
+//! to match* but say nothing about the structural invariants those paths
+//! must preserve.  This module re-derives the invariants from first
+//! principles and checks the artifacts **without executing anything**:
+//!
+//! * **Schedule soundness** ([`audit_schedule`]) — for a
+//!   (NormMap_A, NormMap_B, τ, density-threshold, [`Schedule`]) tuple:
+//!   every culled product violates the paper's bound
+//!   ‖A_ik‖·‖B_kj‖ ≥ τ, every survivor satisfies it, every
+//!   [`TileStrategy`] tag agrees with the density census, and packed
+//!   runs are genuinely consecutive (≥ 2).  The checker is a deliberate
+//!   independent reimplementation — it never calls [`Schedule::build`]
+//!   or `Schedule::repair`, so a bug in the builder cannot hide from it.
+//! * **Assignment exclusivity** ([`audit_assignment`]) — every output
+//!   tile is owned by exactly one in-range device.
+//! * **Expression-plan dataflow** ([`audit_expr_plan`]) — liveness over
+//!   the planned node list: use counts free every resident intermediate
+//!   at its last consumer (no leak, no use-after-free), derived
+//!   fingerprints are unique and the dataflow acyclic, shapes are
+//!   coherent, and per-node placement maps cover the node's full output
+//!   grid with in-range owners (the static half of cross-device bounce
+//!   accounting).  Pinned node schedules are re-checked for soundness
+//!   against the propagated bounds.
+//! * **Residency accounting** ([`audit_pool`]) — the pool's byte counter
+//!   equals the sum of resident payload bytes exactly, and every pinned
+//!   operand fingerprint belongs to a live plan.
+//! * **Warm-store integrity** ([`audit_store`]) — manifest/object
+//!   cross-checks (schema version, readability, byte size, 128-bit
+//!   checksum).  This is the *one* implementation of store verification:
+//!   [`crate::store::WarmStore::verify`] (and `cuspamm store verify`)
+//!   delegate here.
+//!
+//! Violations come back as a structured [`AuditReport`] — kind, layer,
+//! tile/node coordinates — and publish `spamm.audit.*` telemetry.  Under
+//! `cfg(debug_assertions)` the session/coordinator front-ends run these
+//! checks at the end of every `prepare`/`submit`/`update`, so the whole
+//! test suite doubles as an audit fuzzer; release builds compile the
+//! hooks out and pay nothing unless `cuspamm audit` asks explicitly.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use crate::runtime::residency::{ResidencyPool, TileFormat};
+use crate::spamm::balance::Assignment;
+use crate::spamm::cache::Fingerprint;
+use crate::spamm::normmap::NormMap;
+use crate::spamm::schedule::{Schedule, TileStrategy};
+use crate::store::WarmStore;
+use crate::telemetry;
+
+mod expr;
+
+pub use expr::audit_expr_plan;
+
+/// Which artifact layer a violation was found in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AuditLayer {
+    Schedule,
+    Assignment,
+    ExprPlan,
+    Residency,
+    Store,
+}
+
+impl AuditLayer {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AuditLayer::Schedule => "schedule",
+            AuditLayer::Assignment => "assignment",
+            AuditLayer::ExprPlan => "expr_plan",
+            AuditLayer::Residency => "residency",
+            AuditLayer::Store => "store",
+        }
+    }
+}
+
+impl fmt::Display for AuditLayer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Violation class.  Mutation tests assert one kind per seeded
+/// corruption, so these stay fine-grained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AuditKind {
+    /// Grid dimensions of an artifact disagree with its operands.
+    ShapeMismatch,
+    /// A surviving product's norm bound falls below τ (it should have
+    /// been culled).
+    SpuriousProduct,
+    /// A culled product meets the τ bound (it should have survived).
+    MissedProduct,
+    /// A k-list is not strictly ascending, out of range, or its
+    /// strategy list has a different length.
+    MalformedKList,
+    /// A Dense/Sparse tag disagrees with the density census.
+    StrategyMismatch,
+    /// A Packed tag outside a genuine consecutive run of ≥ 2
+    /// sparse-eligible products (or a run left un-promoted / split).
+    BrokenPackedRun,
+    /// A tile owner index ≥ the device count.
+    OwnerOutOfRange,
+    /// An owner map is missing or does not cover the output grid
+    /// exactly once per tile.
+    OwnerMapMismatch,
+    /// A planned node's use count disagrees with its recomputed
+    /// consumer count (leak if too high, use-after-free if too low).
+    UseCountMismatch,
+    /// A node consumes a node that does not precede it (cycle or
+    /// dangling reference).
+    DanglingInput,
+    /// Two distinct compute nodes derived the same fingerprint — their
+    /// pool tiles would alias and retire each other's data.
+    FingerprintCollision,
+    /// Pool byte counter differs from the sum of resident payloads.
+    ByteAccounting,
+    /// A pinned operand fingerprint belongs to no live plan.
+    OrphanPin,
+    /// Store payload written under a different schema version.
+    StoreSchema,
+    /// Store payload missing or unreadable.
+    StoreUnreadable,
+    /// Store payload size differs from its manifest entry.
+    StoreSizeMismatch,
+    /// Store payload checksum differs from its manifest entry.
+    StoreChecksum,
+}
+
+/// One structural violation: kind, layer, and the coordinates needed to
+/// find it (output tile, k/node index, store key or fingerprint).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub layer: AuditLayer,
+    pub kind: AuditKind,
+    /// Output-tile coordinate, when the violation is tile-local.
+    pub tile: Option<(usize, usize)>,
+    /// k index (schedule products) or node index (expression plans).
+    pub index: Option<usize>,
+    /// Store key or operand fingerprint, when applicable.
+    pub key: Option<String>,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {:?}", self.layer, self.kind)?;
+        if let Some((i, j)) = self.tile {
+            write!(f, " tile ({i},{j})")?;
+        }
+        if let Some(k) = self.index {
+            write!(f, " index {k}")?;
+        }
+        if let Some(key) = &self.key {
+            write!(f, " key {key}")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// Result of one audit pass: how many facts were checked and every
+/// violation found.  Merge reports from several checkers with
+/// [`AuditReport::merge`]; publish counters with
+/// [`AuditReport::publish`].
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Individual facts verified (products, tags, tiles, nodes, store
+    /// entries) — a clean report with zero checks proves nothing.
+    pub checks: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn merge(&mut self, other: AuditReport) {
+        self.checks += other.checks;
+        self.violations.extend(other.violations);
+    }
+
+    /// First violation of `kind`, if any (mutation-test surface).
+    pub fn find(&self, kind: AuditKind) -> Option<&Violation> {
+        self.violations.iter().find(|v| v.kind == kind)
+    }
+
+    /// Record this report on the global `spamm.audit.*` telemetry
+    /// counters (reports, checks, violations, and per-layer violation
+    /// counts).  Returns `self.ok()` for call-site convenience.
+    pub fn publish(&self) -> bool {
+        let t = telemetry::global();
+        t.add("spamm.audit.reports", 1);
+        t.add("spamm.audit.checks", self.checks as u64);
+        t.add("spamm.audit.violations", self.violations.len() as u64);
+        for v in &self.violations {
+            t.add(&format!("spamm.audit.{}.violations", v.layer), 1);
+        }
+        self.ok()
+    }
+
+    fn push(
+        &mut self,
+        layer: AuditLayer,
+        kind: AuditKind,
+        tile: Option<(usize, usize)>,
+        index: Option<usize>,
+        key: Option<String>,
+        detail: String,
+    ) {
+        self.violations.push(Violation {
+            layer,
+            kind,
+            tile,
+            index,
+            key,
+            detail,
+        });
+    }
+}
+
+/// Panic (debug builds' always-on hooks) with every violation listed.
+/// Publishes the report's telemetry either way.
+pub fn debug_assert_clean(report: &AuditReport, what: &str) {
+    report.publish();
+    assert!(
+        report.ok(),
+        "audit({what}): {} violation(s) over {} checks:\n{}",
+        report.violations.len(),
+        report.checks,
+        report
+            .violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+fn fp_hex(fp: Fingerprint) -> String {
+    format!("{:016x}{:016x}", fp.0, fp.1)
+}
+
+// ---------------------------------------------------------------------
+// Schedule soundness
+// ---------------------------------------------------------------------
+
+/// The expected strategy tags for one output tile's surviving k-list,
+/// re-derived from the density census alone.  Deliberately independent
+/// of `spamm::schedule::tile_strategies`: Sparse iff both operand tile
+/// densities are strictly below the threshold, then every maximal run of
+/// ≥ 2 consecutive Sparse entries is promoted to Packed; a threshold
+/// ≤ 0 disables routing entirely (all Dense).
+fn expected_strategies(
+    na: &NormMap,
+    nb: &NormMap,
+    density_threshold: f32,
+    i: usize,
+    j: usize,
+    ks: &[u32],
+) -> Vec<TileStrategy> {
+    if density_threshold <= 0.0 {
+        return vec![TileStrategy::Dense; ks.len()];
+    }
+    let eligible: Vec<bool> = ks
+        .iter()
+        .map(|&k| {
+            let k = k as usize;
+            na.density[(i, k)] < density_threshold && nb.density[(k, j)] < density_threshold
+        })
+        .collect();
+    let mut out = Vec::with_capacity(ks.len());
+    let mut pos = 0;
+    while pos < eligible.len() {
+        if !eligible[pos] {
+            out.push(TileStrategy::Dense);
+            pos += 1;
+            continue;
+        }
+        let mut end = pos;
+        while end < eligible.len() && eligible[end] {
+            end += 1;
+        }
+        let tag = if end - pos >= 2 {
+            TileStrategy::Packed
+        } else {
+            TileStrategy::Sparse
+        };
+        out.extend(std::iter::repeat(tag).take(end - pos));
+        pos = end;
+    }
+    out
+}
+
+/// Recheck a compacted schedule against the artifacts it was built from.
+///
+/// Independent reimplementation of the culling rule (Algorithm 1 line 7:
+/// a product survives iff ‖A_ik‖·‖B_kj‖ ≥ τ, inclusive) and the
+/// density-adaptive tagging rule — no call into `Schedule::build`,
+/// `build_adaptive`, or `repair`.
+pub fn audit_schedule(
+    na: &NormMap,
+    nb: &NormMap,
+    tau: f32,
+    density_threshold: f32,
+    s: &Schedule,
+) -> AuditReport {
+    let mut r = AuditReport::default();
+    let (tr, tk) = (na.norms.rows(), na.norms.cols());
+    let (tkb, tc) = (nb.norms.rows(), nb.norms.cols());
+    r.checks += 1;
+    if tk != tkb {
+        r.push(
+            AuditLayer::Schedule,
+            AuditKind::ShapeMismatch,
+            None,
+            None,
+            None,
+            format!("normmaps disagree on the inner grid: A is {tr}x{tk}, B is {tkb}x{tc}"),
+        );
+        return r;
+    }
+    r.checks += 1;
+    if s.tile_rows != tr || s.tile_cols != tc || s.tile_k != tk {
+        r.push(
+            AuditLayer::Schedule,
+            AuditKind::ShapeMismatch,
+            None,
+            None,
+            None,
+            format!(
+                "schedule grid {}x{} (k {}) vs normmap grid {tr}x{tc} (k {tk})",
+                s.tile_rows, s.tile_cols, s.tile_k
+            ),
+        );
+        return r;
+    }
+    r.checks += 1;
+    if s.valid_k.len() != tr * tc || s.strategies.len() != tr * tc {
+        r.push(
+            AuditLayer::Schedule,
+            AuditKind::ShapeMismatch,
+            None,
+            None,
+            None,
+            format!(
+                "schedule has {} k-lists and {} strategy lists for {} output tiles",
+                s.valid_k.len(),
+                s.strategies.len(),
+                tr * tc
+            ),
+        );
+        return r;
+    }
+    for i in 0..tr {
+        for j in 0..tc {
+            let slot = i * tc + j;
+            let ks = &s.valid_k[slot];
+            let tags = &s.strategies[slot];
+            r.checks += 1;
+            if tags.len() != ks.len() {
+                r.push(
+                    AuditLayer::Schedule,
+                    AuditKind::MalformedKList,
+                    Some((i, j)),
+                    None,
+                    None,
+                    format!("{} strategy tags for {} products", tags.len(), ks.len()),
+                );
+                continue;
+            }
+            let mut malformed = false;
+            for (pos, &k) in ks.iter().enumerate() {
+                r.checks += 1;
+                if k as usize >= tk || (pos > 0 && ks[pos - 1] >= k) {
+                    r.push(
+                        AuditLayer::Schedule,
+                        AuditKind::MalformedKList,
+                        Some((i, j)),
+                        Some(k as usize),
+                        None,
+                        format!("k-list {ks:?} is not strictly ascending within 0..{tk}"),
+                    );
+                    malformed = true;
+                    break;
+                }
+            }
+            if malformed {
+                continue;
+            }
+            // Culling: walk every k once; `ks` is ascending so membership
+            // is a single merge pass.
+            let mut next = 0usize;
+            for k in 0..tk {
+                let survived = next < ks.len() && ks[next] as usize == k;
+                if survived {
+                    next += 1;
+                }
+                let bound = na.norms[(i, k)] * nb.norms[(k, j)];
+                r.checks += 1;
+                if survived && !(bound >= tau) {
+                    r.push(
+                        AuditLayer::Schedule,
+                        AuditKind::SpuriousProduct,
+                        Some((i, j)),
+                        Some(k),
+                        None,
+                        format!("survivor with ‖A‖·‖B‖ = {bound:e} < τ = {tau:e}"),
+                    );
+                } else if !survived && bound >= tau {
+                    r.push(
+                        AuditLayer::Schedule,
+                        AuditKind::MissedProduct,
+                        Some((i, j)),
+                        Some(k),
+                        None,
+                        format!("culled product with ‖A‖·‖B‖ = {bound:e} ≥ τ = {tau:e}"),
+                    );
+                }
+            }
+            // Strategy census + packed-run structure.
+            let expected = expected_strategies(na, nb, density_threshold, i, j, ks);
+            for (pos, (&got, &want)) in tags.iter().zip(&expected).enumerate() {
+                r.checks += 1;
+                if got != want {
+                    let kind = if got == TileStrategy::Packed || want == TileStrategy::Packed {
+                        AuditKind::BrokenPackedRun
+                    } else {
+                        AuditKind::StrategyMismatch
+                    };
+                    r.push(
+                        AuditLayer::Schedule,
+                        kind,
+                        Some((i, j)),
+                        Some(ks[pos] as usize),
+                        None,
+                        format!("product tagged {got:?}, census says {want:?}"),
+                    );
+                }
+            }
+        }
+    }
+    r
+}
+
+/// Structural equality of two schedules — same survivors and same
+/// strategy tags per output tile.  The repair≡rebuild satellite check:
+/// after `Schedule::repair`, the repaired schedule must be structurally
+/// identical to a fresh `build_adaptive` at the same τ/threshold, not
+/// just produce the same bits.
+pub fn schedule_structural_diff(repaired: &Schedule, fresh: &Schedule) -> AuditReport {
+    let mut r = AuditReport::default();
+    r.checks += 1;
+    if (repaired.tile_rows, repaired.tile_cols, repaired.tile_k)
+        != (fresh.tile_rows, fresh.tile_cols, fresh.tile_k)
+    {
+        r.push(
+            AuditLayer::Schedule,
+            AuditKind::ShapeMismatch,
+            None,
+            None,
+            None,
+            format!(
+                "grids differ: {}x{} (k {}) vs {}x{} (k {})",
+                repaired.tile_rows,
+                repaired.tile_cols,
+                repaired.tile_k,
+                fresh.tile_rows,
+                fresh.tile_cols,
+                fresh.tile_k
+            ),
+        );
+        return r;
+    }
+    for i in 0..fresh.tile_rows {
+        for j in 0..fresh.tile_cols {
+            let slot = i * fresh.tile_cols + j;
+            r.checks += 2;
+            if repaired.valid_k[slot] != fresh.valid_k[slot] {
+                r.push(
+                    AuditLayer::Schedule,
+                    AuditKind::MissedProduct,
+                    Some((i, j)),
+                    None,
+                    None,
+                    format!(
+                        "survivor lists differ: repaired {:?} vs fresh {:?}",
+                        repaired.valid_k[slot], fresh.valid_k[slot]
+                    ),
+                );
+            } else if repaired.strategies[slot] != fresh.strategies[slot] {
+                r.push(
+                    AuditLayer::Schedule,
+                    AuditKind::StrategyMismatch,
+                    Some((i, j)),
+                    None,
+                    None,
+                    format!(
+                        "strategy tags differ: repaired {:?} vs fresh {:?}",
+                        repaired.strategies[slot], fresh.strategies[slot]
+                    ),
+                );
+            }
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------------
+// Assignment exclusivity
+// ---------------------------------------------------------------------
+
+/// Every output tile of the schedule must be owned by exactly one
+/// in-range device.  The owner vector makes multiple ownership
+/// unrepresentable, so the checkable facts are coverage (one entry per
+/// tile) and range.
+pub fn audit_assignment(s: &Schedule, asg: &Assignment) -> AuditReport {
+    let mut r = AuditReport::default();
+    let tiles = s.tile_rows * s.tile_cols;
+    r.checks += 1;
+    if asg.owner.len() != tiles {
+        r.push(
+            AuditLayer::Assignment,
+            AuditKind::OwnerMapMismatch,
+            None,
+            None,
+            None,
+            format!("owner map covers {} tiles, schedule has {tiles}", asg.owner.len()),
+        );
+        return r;
+    }
+    r.checks += 1;
+    if asg.devices == 0 {
+        r.push(
+            AuditLayer::Assignment,
+            AuditKind::OwnerMapMismatch,
+            None,
+            None,
+            None,
+            "assignment declares zero devices".into(),
+        );
+        return r;
+    }
+    for (t, &d) in asg.owner.iter().enumerate() {
+        r.checks += 1;
+        if d >= asg.devices {
+            r.push(
+                AuditLayer::Assignment,
+                AuditKind::OwnerOutOfRange,
+                Some((t / s.tile_cols, t % s.tile_cols)),
+                None,
+                None,
+                format!("tile owned by device {d}, only {} exist", asg.devices),
+            );
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------------
+// Residency accounting
+// ---------------------------------------------------------------------
+
+/// Audit one device pool's accounting against a live-operand set:
+/// the byte counter must equal the sum of resident payload bytes
+/// exactly, and every pinned operand fingerprint must belong to a live
+/// plan (`live` = the union of operand/leaf fingerprints of every
+/// prepared plan pinned on this device).  Pass `None` for `live` to
+/// skip the pin-ownership check (pool-only audits with no plan table in
+/// scope).
+pub fn audit_pool(pool: &ResidencyPool, live: Option<&HashSet<Fingerprint>>) -> AuditReport {
+    let mut r = AuditReport::default();
+    let snap = pool.audit_snapshot();
+    let expected: usize = snap
+        .tiles
+        .iter()
+        .map(|t| t.payload_len * std::mem::size_of::<f32>())
+        .sum();
+    r.checks += 1;
+    if snap.bytes != expected {
+        r.push(
+            AuditLayer::Residency,
+            AuditKind::ByteAccounting,
+            None,
+            None,
+            None,
+            format!(
+                "pool accounts {} bytes, {} resident payloads sum to {expected}",
+                snap.bytes,
+                snap.tiles.len()
+            ),
+        );
+    }
+    for &(fp, count) in &snap.pinned {
+        r.checks += 1;
+        if count == 0 {
+            r.push(
+                AuditLayer::Residency,
+                AuditKind::OrphanPin,
+                None,
+                None,
+                Some(fp_hex(fp)),
+                "pin entry with zero count survived unpinning".into(),
+            );
+        } else if let Some(live) = live {
+            if !live.contains(&fp) {
+                r.push(
+                    AuditLayer::Residency,
+                    AuditKind::OrphanPin,
+                    None,
+                    None,
+                    Some(fp_hex(fp)),
+                    format!("operand pinned {count}x but referenced by no live plan"),
+                );
+            }
+        }
+    }
+    // Dense payloads must all be full tiles of one LoNum² size; packed
+    // payloads are variable-length COO.  A dense payload whose length
+    // disagrees with its siblings indicates a staging-layer bug.
+    let mut dense_len: Option<usize> = None;
+    for t in &snap.tiles {
+        if t.fmt != TileFormat::Dense {
+            continue;
+        }
+        r.checks += 1;
+        match dense_len {
+            None => dense_len = Some(t.payload_len),
+            Some(l) if l == t.payload_len => {}
+            Some(l) => r.push(
+                AuditLayer::Residency,
+                AuditKind::ByteAccounting,
+                Some((t.tile.0, t.tile.1)),
+                None,
+                Some(fp_hex(t.op)),
+                format!("dense payload of {} f32s among {l}-element tiles", t.payload_len),
+            ),
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------------
+// Warm-store integrity
+// ---------------------------------------------------------------------
+
+/// Cross-check every manifest entry against its on-disk object: schema
+/// version, readability, byte size, and the 128-bit content checksum.
+/// [`WarmStore::verify`] (and `cuspamm store verify`) delegate to this —
+/// store verification has exactly one implementation.
+pub fn audit_store(store: &WarmStore) -> AuditReport {
+    let mut r = AuditReport::default();
+    let entries = match store.entries() {
+        Ok(e) => e,
+        Err(e) => {
+            r.checks += 1;
+            r.push(
+                AuditLayer::Store,
+                AuditKind::StoreUnreadable,
+                None,
+                None,
+                Some("manifest".into()),
+                format!("manifest unreadable: {e}"),
+            );
+            return r;
+        }
+    };
+    for (key, e) in &entries {
+        r.checks += 1;
+        if e.version != crate::store::SCHEMA_VERSION {
+            r.push(
+                AuditLayer::Store,
+                AuditKind::StoreSchema,
+                None,
+                None,
+                Some(key.clone()),
+                format!(
+                    "schema version {} (store is at {})",
+                    e.version,
+                    crate::store::SCHEMA_VERSION
+                ),
+            );
+            continue;
+        }
+        let (bytes, sum) = match store.payload_digest(e) {
+            Ok(d) => d,
+            Err(err) => {
+                r.push(
+                    AuditLayer::Store,
+                    AuditKind::StoreUnreadable,
+                    None,
+                    None,
+                    Some(key.clone()),
+                    format!("unreadable: {err}"),
+                );
+                continue;
+            }
+        };
+        if bytes != e.bytes {
+            r.push(
+                AuditLayer::Store,
+                AuditKind::StoreSizeMismatch,
+                None,
+                None,
+                Some(key.clone()),
+                format!("payload is {bytes} bytes, manifest says {}", e.bytes),
+            );
+            continue;
+        }
+        if sum != e.checksum {
+            r.push(
+                AuditLayer::Store,
+                AuditKind::StoreChecksum,
+                None,
+                None,
+                Some(key.clone()),
+                "checksum mismatch".into(),
+            );
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------------
+// Plan-level composition helpers
+// ---------------------------------------------------------------------
+
+/// Audit a prepared multiply plan: schedule soundness against the
+/// operand normmaps plus assignment exclusivity, with the assignment's
+/// device set cross-checked against `pin_devices` (the pools the plan
+/// pinned its operands into must be exactly the devices that own
+/// tiles).
+pub fn audit_multiply_plan(
+    na: &NormMap,
+    nb: &NormMap,
+    tau: f32,
+    density_threshold: f32,
+    schedule: &Schedule,
+    assignment: &Assignment,
+    pin_devices: &[usize],
+) -> AuditReport {
+    let mut r = audit_schedule(na, nb, tau, density_threshold, schedule);
+    r.merge(audit_assignment(schedule, assignment));
+    let owners: HashSet<usize> = assignment.owner.iter().copied().collect();
+    let pinned: HashSet<usize> = pin_devices.iter().copied().collect();
+    r.checks += 1;
+    if owners != pinned {
+        let mut o: Vec<_> = owners.iter().copied().collect();
+        let mut p: Vec<_> = pinned.iter().copied().collect();
+        o.sort_unstable();
+        p.sort_unstable();
+        r.push(
+            AuditLayer::Assignment,
+            AuditKind::OwnerMapMismatch,
+            None,
+            None,
+            None,
+            format!("devices owning tiles {o:?} vs devices pinned {p:?}"),
+        );
+    }
+    r
+}
+
+/// Audit a set of device pools against the union of live-plan operand
+/// fingerprints per device (`live[d]` = fingerprints any live plan has
+/// pinned on device `d`).
+pub fn audit_pools(
+    pools: &[std::sync::Arc<ResidencyPool>],
+    live: &HashMap<usize, HashSet<Fingerprint>>,
+) -> AuditReport {
+    let mut r = AuditReport::default();
+    static EMPTY: std::sync::OnceLock<HashSet<Fingerprint>> = std::sync::OnceLock::new();
+    let empty = EMPTY.get_or_init(HashSet::new);
+    for (d, pool) in pools.iter().enumerate() {
+        r.merge(audit_pool(pool, Some(live.get(&d).unwrap_or(empty))));
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests;

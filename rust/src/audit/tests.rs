@@ -1,0 +1,137 @@
+//! Mutation tests needing crate-private access: expression-plan
+//! corruption (the plan's node fields are `pub(crate)`) and pool
+//! byte-counter corruption (test-only hook).  Schedule, store, and
+//! orphan-pin mutations live in `tests/audit.rs` against the public API.
+
+use std::collections::HashSet;
+
+use super::*;
+use crate::config::SpammConfig;
+use crate::coordinator::expr::{ExprGraph, ExprPlan};
+use crate::coordinator::Approx;
+use crate::matrix::Matrix;
+use crate::spamm::cache::ExecCaches;
+
+fn prepared_plan() -> ExprPlan {
+    let cfg = SpammConfig::default();
+    let caches = ExecCaches::new();
+    let a = Matrix::decay_algebraic(2 * cfg.lonum, 0.1, 0.1, 7);
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let c2 = g.spamm(leaf, leaf, Approx::Tau(1e-6));
+    let c3 = g.spamm(c2, leaf, Approx::Tau(1e-6));
+    g.output(c3);
+    g.prepare_placed(&caches, &cfg, &[], &[crate::coordinator::ExprSource::Host(&a)])
+        .expect("host-side prepare")
+}
+
+#[test]
+fn prepared_expr_plan_audits_clean() {
+    let plan = prepared_plan();
+    let r = audit_expr_plan(&plan);
+    assert!(r.ok(), "clean plan flagged: {:?}", r.violations);
+    assert!(r.checks > 0, "a clean report must have checked something");
+}
+
+#[test]
+fn leaked_intermediate_is_caught() {
+    let mut plan = prepared_plan();
+    // Bump the intermediate's retirement count: the executor would wait
+    // for a consumption event that never comes, leaking its tiles.
+    let mid = plan
+        .nodes
+        .iter()
+        .position(|n| n.uses > 0 && n.sched.is_some())
+        .expect("plan has a spamm intermediate");
+    plan.nodes[mid].uses += 1;
+    let r = audit_expr_plan(&plan);
+    let v = r
+        .find(AuditKind::UseCountMismatch)
+        .expect("leak not detected");
+    assert_eq!(v.index, Some(mid));
+    assert!(v.detail.contains("leaked"), "detail: {}", v.detail);
+}
+
+#[test]
+fn free_before_last_use_is_caught() {
+    let mut plan = prepared_plan();
+    let mid = plan
+        .nodes
+        .iter()
+        .position(|n| n.uses > 1)
+        .or_else(|| plan.nodes.iter().position(|n| n.uses > 0))
+        .expect("plan has a consumed node");
+    plan.nodes[mid].uses -= 1;
+    let r = audit_expr_plan(&plan);
+    let v = r
+        .find(AuditKind::UseCountMismatch)
+        .expect("premature free not detected");
+    assert_eq!(v.index, Some(mid));
+    assert!(v.detail.contains("freed before"), "detail: {}", v.detail);
+}
+
+#[test]
+fn duplicate_derived_fingerprint_is_caught() {
+    let mut plan = prepared_plan();
+    let computes: Vec<usize> = plan
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.sched.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    assert!(computes.len() >= 2, "need two compute nodes to collide");
+    plan.nodes[computes[1]].fp = plan.nodes[computes[0]].fp;
+    let r = audit_expr_plan(&plan);
+    let v = r
+        .find(AuditKind::FingerprintCollision)
+        .expect("fingerprint collision not detected");
+    assert_eq!(v.index, Some(computes[1]));
+}
+
+#[test]
+fn missing_placement_map_is_caught() {
+    let mut plan = prepared_plan();
+    let mid = plan
+        .nodes
+        .iter()
+        .position(|n| n.owner.is_some())
+        .expect("plan has a placed compute node");
+    plan.nodes[mid].owner = None;
+    let r = audit_expr_plan(&plan);
+    assert!(
+        r.find(AuditKind::OwnerMapMismatch).is_some(),
+        "missing placement map not detected: {:?}",
+        r.violations
+    );
+}
+
+#[test]
+fn pool_byte_accounting_corruption_is_caught() {
+    let pool = crate::runtime::residency::ResidencyPool::new(1 << 20);
+    assert!(audit_pool(&pool, None).ok(), "fresh pool must audit clean");
+    pool.corrupt_bytes_for_test(123);
+    let r = audit_pool(&pool, None);
+    assert!(
+        r.find(AuditKind::ByteAccounting).is_some(),
+        "byte-counter corruption not detected: {:?}",
+        r.violations
+    );
+}
+
+#[test]
+fn pin_without_live_plan_is_caught() {
+    let pool = crate::runtime::residency::ResidencyPool::new(1 << 20);
+    let fp = Fingerprint(0xdead, 0xbeef);
+    pool.pin_operand(fp);
+    // With no live-set the pin is unaccountable but legal...
+    assert!(audit_pool(&pool, None).ok());
+    // ...against an (empty) live-plan set it is an orphan.
+    let live: HashSet<Fingerprint> = HashSet::new();
+    let r = audit_pool(&pool, Some(&live));
+    let v = r.find(AuditKind::OrphanPin).expect("orphan pin not detected");
+    assert_eq!(v.key.as_deref(), Some(fp_hex(fp).as_str()));
+    // A pin that belongs to a live plan is clean.
+    let live: HashSet<Fingerprint> = [fp].into_iter().collect();
+    assert!(audit_pool(&pool, Some(&live)).ok());
+}

@@ -83,7 +83,7 @@ impl NodeId {
 /// One graph node (inputs refer to earlier nodes, so the vector order is
 /// already topological).
 #[derive(Clone, Copy, Debug)]
-enum NodeKind {
+pub(crate) enum NodeKind {
     /// Graph input `slot` (bound at prepare time).
     Operand { slot: usize },
     /// SpAMM product A·B at the node's approximation level.
@@ -368,6 +368,7 @@ impl ExprGraph {
                         tile_rows: tr,
                         tile_cols: tc,
                         tau: 0.0,
+                        dt: 0.0,
                         bound: Some(input_norms[slot].clone()),
                         sched: None,
                         owner: None,
@@ -480,6 +481,7 @@ impl ExprGraph {
                         tile_rows: pa.tile_rows,
                         tile_cols: pb.tile_cols,
                         tau,
+                        dt,
                         bound: Some(bound),
                         sched: pinned.then_some(sched),
                         owner: Some(owner),
@@ -513,6 +515,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
+                        dt: 0.0,
                         bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         // Element-wise: inherit X's placement so each
@@ -538,6 +541,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
+                        dt: 0.0,
                         bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         owner: inherit_owner(px, cfg.devices),
@@ -574,6 +578,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
+                        dt: 0.0,
                         bound: Some(Arc::new(NormMap::dense_like(bound))),
                         sched: None,
                         owner: inherit_owner(px, cfg.devices),
@@ -596,6 +601,7 @@ impl ExprGraph {
                         tile_rows: px.tile_rows,
                         tile_cols: px.tile_cols,
                         tau: 0.0,
+                        dt: 0.0,
                         bound: None,
                         sched: None,
                         owner: None,
@@ -607,7 +613,7 @@ impl ExprGraph {
         }
         front.schedule_secs = t_sched.elapsed().as_secs_f64();
 
-        Ok(ExprPlan {
+        let plan = ExprPlan {
             lonum,
             devices: cfg.devices,
             nodes: planned,
@@ -616,7 +622,13 @@ impl ExprGraph {
             inputs: bound_inputs,
             front,
             prepare_secs: t_prepare.elapsed().as_secs_f64(),
-        })
+        };
+        // Always-on static audit (debug builds): every prepared
+        // expression plan is verified before it can execute, so the
+        // whole test suite fuzzes the dataflow invariants.
+        #[cfg(debug_assertions)]
+        crate::audit::debug_assert_clean(&crate::audit::audit_expr_plan(&plan), "expr prepare");
+        Ok(plan)
     }
 }
 
@@ -685,29 +697,32 @@ fn inherit_owner(px: &PlannedNode, devices: usize) -> Option<Arc<Vec<usize>>> {
     })
 }
 
-struct PlannedNode {
-    kind: NodeKind,
-    fp: Fingerprint,
-    rows: usize,
-    cols: usize,
-    tile_rows: usize,
-    tile_cols: usize,
+pub(crate) struct PlannedNode {
+    pub(crate) kind: NodeKind,
+    pub(crate) fp: Fingerprint,
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) tile_rows: usize,
+    pub(crate) tile_cols: usize,
     /// Resolved τ (spamm nodes; 0.0 elsewhere).
-    tau: f32,
+    pub(crate) tau: f32,
+    /// Density threshold the node's schedule was built with (spamm
+    /// nodes; 0.0 elsewhere) — recorded for the static auditor.
+    pub(crate) dt: f32,
     /// Propagated tile-norm upper bound (exact for leaves; None for
     /// scalar nodes).  Leaves carry the real density census; computed
     /// bounds are density-dense so downstream nodes stay conservative.
-    bound: Option<Arc<NormMap>>,
+    pub(crate) bound: Option<Arc<NormMap>>,
     /// Pinned schedule when the bound is already exact (leaf-fed or
     /// τ = 0) — cache eviction cannot un-prepare those nodes.
-    sched: Option<Arc<Schedule>>,
+    pub(crate) sched: Option<Arc<Schedule>>,
     /// Tile→device placement of this node's output (compute nodes only).
     /// Multi-device execution fans the node out per this map; each
     /// device scatters its owned tiles into its *own* pool.
-    owner: Option<Arc<Vec<usize>>>,
+    pub(crate) owner: Option<Arc<Vec<usize>>>,
     /// Consumers + root/keep references; execution frees an
     /// intermediate's tiles when this many uses have retired.
-    uses: usize,
+    pub(crate) uses: usize,
 }
 
 /// A prepared expression: shapes resolved, τ fixed, bounds propagated,
@@ -715,13 +730,13 @@ struct PlannedNode {
 /// [`Coordinator::execute_expr`] (any number of times — warm re-submits
 /// ride the schedule cache and the residency pool).
 pub struct ExprPlan {
-    lonum: usize,
+    pub(crate) lonum: usize,
     /// Device count the placement maps were built for (must match the
     /// executing coordinator's).
-    devices: usize,
-    nodes: Vec<PlannedNode>,
-    root: usize,
-    keeps: Vec<usize>,
+    pub(crate) devices: usize,
+    pub(crate) nodes: Vec<PlannedNode>,
+    pub(crate) root: usize,
+    pub(crate) keeps: Vec<usize>,
     inputs: Vec<PlannedInput>,
     front: MultiplyStats,
     prepare_secs: f64,

@@ -937,6 +937,19 @@ impl SpammSession {
                     }
                 }
             }
+            #[cfg(debug_assertions)]
+            crate::audit::debug_assert_clean(
+                &crate::audit::audit_multiply_plan(
+                    &na,
+                    &nb,
+                    old.tau,
+                    old.density_threshold,
+                    &schedule,
+                    &assignment,
+                    &pin_devices,
+                ),
+                "session update (migrated plan)",
+            );
             let migrated = Arc::new(Plan {
                 id: old.id,
                 a: old.a,
@@ -1190,6 +1203,19 @@ impl SpammSession {
                 p.pin_operand(fb);
             }
         }
+        #[cfg(debug_assertions)]
+        crate::audit::debug_assert_clean(
+            &crate::audit::audit_multiply_plan(
+                &na,
+                &nb,
+                tau,
+                density_threshold,
+                &schedule,
+                &assignment,
+                &pin_devices,
+            ),
+            "session prepare",
+        );
         let id = plans.next_id;
         plans.next_id += 1;
         plans.plans.insert(
@@ -1230,6 +1256,65 @@ impl SpammSession {
             .get(&id.0)
             .map(|e| (e.plan.tau, e.plan.rows, e.plan.cols))
             .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))
+    }
+
+    /// The schedule a prepared plan would execute, with the τ and
+    /// density threshold it was built (or repaired) at — the auditor's
+    /// window for repair≡rebuild structural checks.
+    pub fn plan_schedule(&self, id: PlanId) -> Result<(Arc<Schedule>, f32, f32)> {
+        let plans = self.shared.plans.lock().unwrap();
+        plans
+            .plans
+            .get(&id.0)
+            .map(|e| (e.plan.schedule.clone(), e.plan.tau, e.plan.density_threshold))
+            .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))
+    }
+
+    /// Statically audit every live artifact of the session: each
+    /// prepared multiply plan (schedule soundness against the cached
+    /// normmaps + assignment exclusivity), each prepared expression plan
+    /// (dataflow liveness, fingerprints, placement), and the device
+    /// residency pools (byte accounting; every pinned operand must
+    /// belong to a live plan).  Executes nothing — see [`crate::audit`].
+    pub fn audit(&self) -> Result<crate::audit::AuditReport> {
+        let mut r = crate::audit::AuditReport::default();
+        // Snapshot the live plan Arcs, then drop the plan-table lock
+        // before any cache/pool work (lock order: plans → store → pools).
+        let (plan_arcs, expr_arcs) = {
+            let plans = self.shared.plans.lock().unwrap();
+            (
+                plans.plans.values().map(|e| e.plan.clone()).collect::<Vec<_>>(),
+                plans.exprs.values().cloned().collect::<Vec<_>>(),
+            )
+        };
+        let mut live: HashMap<usize, HashSet<Fingerprint>> = HashMap::new();
+        for plan in &plan_arcs {
+            let mut front = MultiplyStats::default();
+            let na = self.norm_for(plan.fa, &plan.pa, &mut front)?;
+            let nb = self.norm_for(plan.fb, &plan.pb, &mut front)?;
+            r.merge(crate::audit::audit_multiply_plan(
+                &na,
+                &nb,
+                plan.tau,
+                plan.density_threshold,
+                &plan.schedule,
+                &plan.assignment,
+                &plan.pin_devices,
+            ));
+            for &d in &plan.pin_devices {
+                let fps = live.entry(d).or_default();
+                fps.insert(plan.fa);
+                fps.insert(plan.fb);
+            }
+        }
+        for job in &expr_arcs {
+            r.merge(crate::audit::audit_expr_plan(&job.plan));
+            for &d in &job.pin_devices {
+                live.entry(d).or_default().extend(job.fps.iter().copied());
+            }
+        }
+        r.merge(crate::audit::audit_pools(&self.shared.pools, &live));
+        Ok(r)
     }
 
     /// Drop one reference to a prepared plan.  Plan handles are
@@ -1288,6 +1373,28 @@ impl SpammSession {
                 .map(|e| e.plan.clone())
                 .ok_or_else(|| Error::Session(format!("plan {} not prepared", plan.0)))?
         };
+        // Always-on debug audit: re-verify the plan's pinned schedule and
+        // placement against the (cached) normmaps at the moment of
+        // admission — a migration or repair bug between prepare and
+        // submit dies here instead of producing a silently wrong product.
+        #[cfg(debug_assertions)]
+        {
+            let mut front = MultiplyStats::default();
+            let na = self.norm_for(plan.fa, &plan.pa, &mut front)?;
+            let nb = self.norm_for(plan.fb, &plan.pb, &mut front)?;
+            crate::audit::debug_assert_clean(
+                &crate::audit::audit_multiply_plan(
+                    &na,
+                    &nb,
+                    plan.tau,
+                    plan.density_threshold,
+                    &plan.schedule,
+                    &plan.assignment,
+                    &plan.pin_devices,
+                ),
+                "session submit",
+            );
+        }
         self.enqueue(JobPayload::Multiply(plan), priority)
     }
 
@@ -1430,6 +1537,11 @@ impl SpammSession {
                 Error::Session(format!("expr plan {} not prepared", plan.0))
             })?
         };
+        #[cfg(debug_assertions)]
+        crate::audit::debug_assert_clean(
+            &crate::audit::audit_expr_plan(&job.plan),
+            "session submit_expr",
+        );
         self.enqueue(JobPayload::Expr(job), priority)
     }
 

@@ -40,6 +40,11 @@ pub enum Error {
     /// corrupt payload).  Always recoverable: the store falls back cold.
     Store(String),
 
+    /// Static invariant audit failure: an artifact (schedule, expression
+    /// plan, residency pool, store manifest) violates a cross-layer
+    /// invariant that [`crate::audit`] verifies without executing.
+    Audit(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -56,6 +61,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Session(m) => write!(f, "session error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
+            Error::Audit(m) => write!(f, "audit error: {m}"),
             Error::Io(e) => e.fmt(f),
         }
     }

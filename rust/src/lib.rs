@@ -250,6 +250,34 @@
 //! and `coordinate --smoke` asserts the warm-pool ≥2x transfer cut vs
 //! `rowblock` in CI.
 //!
+//! ## Static analysis & invariants
+//!
+//! Every fast path above (schedule repair, normmap patching, pool
+//! re-keying, warm-store restores) must preserve structural invariants
+//! the end-to-end bitwise tests only observe indirectly.  The [`audit`]
+//! module re-derives those invariants from first principles and verifies
+//! the artifacts **without executing**:
+//!
+//! | Invariant | Owning layer | Checker |
+//! |---|---|---|
+//! | Culling: survivor ⇔ ‖A_ik‖·‖B_kj‖ ≥ τ (inclusive) | [`spamm::Schedule`] | [`audit::audit_schedule`] |
+//! | Strategy tags match the density census; packed runs are consecutive ≥ 2 | [`spamm::Schedule`] | [`audit::audit_schedule`] |
+//! | Every output tile owned by exactly one in-range device | `spamm::balance` | [`audit::audit_assignment`] |
+//! | Intermediates freed at last consumer; no use-after-free | [`coordinator::expr`] | [`audit::audit_expr_plan`] |
+//! | Derived fingerprints unique; dataflow acyclic; placement maps cover the grid | [`coordinator::expr`] | [`audit::audit_expr_plan`] |
+//! | Pool byte counter = Σ resident payload bytes; pins belong to live plans | [`runtime::residency`] | [`audit::audit_pool`] |
+//! | Store manifest ↔ object agreement (schema, size, checksum) | [`store`] | [`audit::audit_store`] |
+//!
+//! The checkers are deliberately *independent reimplementations* — they
+//! never call `Schedule::build`/`repair`, so a builder bug cannot hide
+//! from them.  Under `cfg(debug_assertions)` the session and coordinator
+//! run them at the end of every `prepare`/`submit`/`update` (the whole
+//! test suite doubles as an audit fuzzer); release builds compile the
+//! hooks out entirely.  On demand: `cuspamm audit plan|session|store`
+//! re-audits artifacts in a release binary, and `cuspamm audit --smoke`
+//! runs the multiply/serve/expr/update/warmstart smoke workloads plus
+//! seeded corruption detection as the CI gate.
+//!
 //! ## Quick start
 //!
 //! The serving lifecycle — put → prepare → submit → wait:
@@ -292,6 +320,9 @@
 //! println!("‖C‖_F = {}", c.fnorm());
 //! ```
 
+#![forbid(unsafe_code)]
+
+pub mod audit;
 pub mod bench_harness;
 pub mod cli;
 pub mod cnn;

@@ -14,6 +14,9 @@
 //!   cuspamm update --steps 4              drifting-operand trace: delta
 //!                                         updates + schedule repair (--smoke
 //!                                         for the CI delta-cost assertion)
+//!   cuspamm audit [plan|session|store]    static invariant auditor (--smoke
+//!                                         for the CI clean-workloads +
+//!                                         seeded-violation assertion)
 //!
 //! Global options: --artifacts <dir>, --devices, --precision, --balance,
 //! --config <file> (key = value overrides, see config::SpammConfig).
@@ -150,6 +153,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(rest),
         "store" => cmd_store(rest),
         "warmstart" => cmd_warmstart(rest),
+        "audit" => cmd_audit(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "cuspamm — SpAMM on an AOT-compiled XLA runtime\n\n\
@@ -170,7 +174,10 @@ fn dispatch(args: &[String]) -> Result<()> {
                  baselines)\n  store  warm-start store administration: \
                  ls | gc --budget <bytes> | verify [--heal]\n  warmstart  \
                  restart-to-warm demo over a --store-dir (--smoke for the \
-                 CI zero-recompute + bitwise-identity assertion)\n\nUse \
+                 CI zero-recompute + bitwise-identity assertion)\n  audit  \
+                 static invariant auditor: plan | session | store verbs \
+                 (--smoke audits every workload class clean and proves \
+                 each seeded violation class is detected)\n\nUse \
                  `cuspamm <cmd> --help` for options."
             );
             Ok(())
@@ -2010,6 +2017,360 @@ fn cmd_cnn(args: &[String]) -> Result<()> {
         baseline * 100.0,
         approx * 100.0,
         (approx - baseline) * 100.0
+    );
+    Ok(())
+}
+
+/// `cuspamm audit`: static invariant verification — no kernels are
+/// launched by any verb.  `plan` builds a schedule + assignment
+/// host-side and sweeps culling/strategy/packed-run/ownership
+/// invariants; `session` drives representative workloads through a
+/// live session and audits its plan table, expression dataflow, pool
+/// accounting, and pins; `store` cross-checks a warm-store manifest
+/// against its payloads.  `--smoke` is the CI contract: every workload
+/// class must audit clean, then one corruption per violation class is
+/// seeded and the auditor must catch each with the correct report kind.
+fn cmd_audit(args: &[String]) -> Result<()> {
+    use cuspamm::audit;
+    use cuspamm::matrix::tiling::PaddedMatrix;
+    use cuspamm::spamm::balance::Assignment;
+    use cuspamm::spamm::normmap::{normmap_with_density, resolve_density_threshold};
+    use cuspamm::spamm::Schedule;
+
+    let spec = common(Spec::new(
+        "cuspamm audit",
+        "static invariant auditor — verbs: plan (schedule + assignment \
+         soundness for a synthetic workload), session (audit a live session \
+         after multiply/expr/update workloads), store (manifest/payload \
+         cross-check of --store-dir); --smoke runs every workload class, \
+         requires each audit clean, then seeds one corruption per violation \
+         class and requires detection with the correct kind",
+    ))
+    .opt("n", "256", "matrix size (rounded down to a LoNum multiple)")
+    .opt("tau", "1e-4", "SpAMM threshold τ")
+    .opt("seed", "7", "workload seed")
+    .flag(
+        "smoke",
+        "CI assertion: all workload classes audit clean + every seeded \
+         violation class is detected",
+    );
+    let a = spec.parse(args)?;
+    let cfg = build_config(&a)?;
+    if a.flag("smoke") {
+        return audit_smoke(&a, cfg);
+    }
+    let verb = a.positionals.first().map(|s| s.as_str()).unwrap_or("session");
+    match verb {
+        "plan" => {
+            let bundle = load_bundle_or_hostsim(&a)?;
+            let l = bundle.lonum;
+            let n = (a.usize("n")?.max(2 * l) / l) * l;
+            let tau = a.f64("tau")? as f32;
+            let seed = a.usize("seed")? as u64;
+            let ma = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+            let mb = Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1);
+            let na = normmap_with_density(&PaddedMatrix::new(&ma, l));
+            let nb = normmap_with_density(&PaddedMatrix::new(&mb, l));
+            let dt = resolve_density_threshold(&cfg, &na, &nb);
+            let sched = Schedule::build_adaptive(&na, &nb, tau, dt)?;
+            let asg = Assignment::build(&sched, cfg.devices, cfg.balance);
+            let mut r = audit::audit_schedule(&na, &nb, tau, dt, &sched);
+            r.merge(audit::audit_assignment(&sched, &asg));
+            report_gate("plan", &r)
+        }
+        "session" => {
+            let bundle = load_bundle_or_hostsim(&a)?;
+            let session = SpammSession::new(&bundle, cfg)?;
+            audit_run_workloads(&a, &bundle, &session)?;
+            report_gate("session", &session.audit()?)
+        }
+        "store" => {
+            if cfg.store_dir.is_empty() {
+                return Err(Error::Config(
+                    "audit store: pass --store-dir <dir> (or a --config whose \
+                     store_dir is set)"
+                        .into(),
+                ));
+            }
+            let store = WarmStore::open(std::path::Path::new(&cfg.store_dir))?;
+            report_gate("store", &audit::audit_store(&store))
+        }
+        other => Err(Error::Config(format!(
+            "unknown audit verb '{other}' (plan | session | store)"
+        ))),
+    }
+}
+
+/// Print an audit report and turn any violation into a nonzero exit.
+fn report_gate(what: &str, r: &cuspamm::audit::AuditReport) -> Result<()> {
+    r.publish();
+    for v in &r.violations {
+        println!("VIOLATION {v}");
+    }
+    println!(
+        "audit {what}: {} checks, {} violations",
+        r.checks,
+        r.violations.len()
+    );
+    if r.ok() {
+        Ok(())
+    } else {
+        Err(Error::Audit(format!(
+            "audit {what}: {} invariant violations",
+            r.violations.len()
+        )))
+    }
+}
+
+/// The representative workload mix behind `audit session` and the clean
+/// half of `audit --smoke`: a prepared multiply, a mixed-priority serve
+/// burst, an A³ expression chain, and a delta update with a warm
+/// re-submit — the session is left live for `SpammSession::audit`.
+fn audit_run_workloads(
+    a: &cuspamm::cli::Args,
+    bundle: &ArtifactBundle,
+    session: &SpammSession,
+) -> Result<()> {
+    let l = bundle.lonum;
+    let n = (a.usize("n")?.max(2 * l) / l) * l;
+    let tau = a.f64("tau")? as f32;
+    let seed = a.usize("seed")? as u64;
+    let host_a = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+    let host_b = Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1);
+
+    // multiply: one prepared plan, one submit.
+    let ida = session.put(&host_a)?;
+    let idb = session.put(&host_b)?;
+    let plan = session.prepare(ida, idb, Approx::Tau(tau))?;
+    session.wait(session.submit(plan)?)?;
+
+    // serve: a mixed-priority burst over the warm plan.
+    for pri in [Priority::High, Priority::Normal, Priority::Low] {
+        session.submit_with(plan, pri)?;
+    }
+    session.wait_all()?;
+
+    // expr: an A³ chain through the expression planner.
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let c2 = g.spamm(leaf, leaf, Approx::Tau(tau));
+    let c3 = g.spamm(c2, leaf, Approx::Tau(tau));
+    g.output(c3);
+    let eplan = session.prepare_expr(&g, &[ida])?;
+    session.wait(session.submit_expr(eplan)?)?;
+
+    // update: drift two tiles, then a warm submit on the repaired plan.
+    let l2 = l * l;
+    let side = n / l;
+    let mut changed = vec![(0usize, 0usize)];
+    if side > 1 {
+        changed.push((1, side - 1));
+    }
+    let mut data = Vec::with_capacity(changed.len() * l2);
+    for (k, _) in changed.iter().enumerate() {
+        let block = Matrix::randn(l, l, seed + 100 + k as u64);
+        data.extend(block.data().iter().map(|x| x * 0.05));
+    }
+    session.update(ida, &changed, &data)?;
+    session.wait(session.submit(plan)?)?;
+    Ok(())
+}
+
+/// `audit --smoke`: the clean workloads, then seeded corruption per
+/// violation class.  Runs against a throwaway warm store so the store
+/// sweep has real payloads to corrupt.
+fn audit_smoke(a: &cuspamm::cli::Args, mut cfg: SpammConfig) -> Result<()> {
+    use cuspamm::audit::{self, AuditKind, AuditReport};
+    use cuspamm::spamm::balance::Assignment;
+    use cuspamm::spamm::cache::Fingerprint;
+    use cuspamm::spamm::{NormMap, Schedule, TileStrategy};
+
+    fn expect_detected(r: &AuditReport, kind: AuditKind, what: &str) -> Result<()> {
+        match r.find(kind) {
+            Some(v) => {
+                println!("  detected {what}: {v}");
+                Ok(())
+            }
+            None => Err(Error::Audit(format!(
+                "seeded {what} was NOT detected as {kind:?} \
+                 (got {} other violations)",
+                r.violations.len()
+            ))),
+        }
+    }
+
+    let tmp = std::env::temp_dir().join(format!("cuspamm-audit-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    cfg.store_dir = tmp.to_string_lossy().into_owned();
+    cfg.store_enabled = true;
+    let bundle = load_bundle_or_hostsim(a)?;
+
+    // -- Phase 1: every workload class must audit clean. ----------------
+    let session = SpammSession::new(&bundle, cfg.clone())?;
+    audit_run_workloads(a, &bundle, &session)?;
+    report_gate("smoke workloads (multiply/serve/expr/update)", &session.audit()?)?;
+    drop(session);
+
+    // warmstart: a fresh session over the same store must also audit
+    // clean after restoring its artifacts from disk.
+    {
+        let warm = SpammSession::new(&bundle, cfg.clone())?;
+        let l = bundle.lonum;
+        let n = (a.usize("n")?.max(2 * l) / l) * l;
+        let tau = a.f64("tau")? as f32;
+        let seed = a.usize("seed")? as u64;
+        let wa = warm.put(&Matrix::decay_algebraic(n, 0.1, 0.1, seed))?;
+        let wb = warm.put(&Matrix::decay_algebraic(n, 0.1, 0.1, seed + 1))?;
+        let wp = warm.prepare(wa, wb, Approx::Tau(tau))?;
+        warm.wait(warm.submit(wp)?)?;
+        report_gate("smoke workload (warmstart)", &warm.audit()?)?;
+    }
+    let store = WarmStore::open(&tmp)?;
+    report_gate("smoke store", &audit::audit_store(&store))?;
+
+    // -- Phase 2: seeded corruption per violation class. ----------------
+    println!("seeding one corruption per violation class:");
+
+    // A synthetic 2×2-output grid, contraction depth 3, engineered so
+    // every culling/strategy/packed case appears (τ = 1, threshold 0.5):
+    //   slot (0,0): ks [0]    [Dense]
+    //   slot (0,1): ks [0,1]  [Packed, Packed]
+    //   slot (1,0): ks [0]    [Dense]
+    //   slot (1,1): ks [0,1]  [Dense, Dense]
+    let na = NormMap {
+        norms: Matrix::from_vec(2, 3, vec![2.0, 1.0, 0.1, 1.0, 2.0, 0.5])?,
+        density: Matrix::from_vec(2, 3, vec![0.1, 0.1, 1.0, 1.0, 1.0, 1.0])?,
+    };
+    let nb = NormMap {
+        norms: Matrix::from_vec(3, 2, vec![2.0, 1.0, 0.1, 2.0, 1.0, 1.0])?,
+        density: Matrix::from_vec(3, 2, vec![1.0, 0.1, 1.0, 0.1, 1.0, 1.0])?,
+    };
+    let (tau, dt) = (1.0f32, 0.5f32);
+    let pristine = Schedule::build_adaptive(&na, &nb, tau, dt)?;
+    let base = audit::audit_schedule(&na, &nb, tau, dt, &pristine);
+    if !base.ok() {
+        return Err(Error::Audit(
+            "the pristine synthetic schedule failed its own audit".into(),
+        ));
+    }
+
+    // Un-cull a below-τ product (k=1 in slot (0,0) has bound 0.1 < 1).
+    let mut s = pristine.clone();
+    s.valid_k[0].push(1);
+    s.strategies[0].push(TileStrategy::Dense);
+    expect_detected(
+        &audit::audit_schedule(&na, &nb, tau, dt, &s),
+        AuditKind::SpuriousProduct,
+        "un-culled below-τ product",
+    )?;
+
+    // Drop a surviving product (k=0 in slot (1,1) has bound 1 ≥ 1).
+    let mut s = pristine.clone();
+    s.valid_k[3].remove(0);
+    s.strategies[3].remove(0);
+    expect_detected(
+        &audit::audit_schedule(&na, &nb, tau, dt, &s),
+        AuditKind::MissedProduct,
+        "dropped surviving product",
+    )?;
+
+    // Break k-list ordering (compaction requires strictly ascending k).
+    let mut s = pristine.clone();
+    s.valid_k[3].swap(0, 1);
+    expect_detected(
+        &audit::audit_schedule(&na, &nb, tau, dt, &s),
+        AuditKind::MalformedKList,
+        "descending k-list",
+    )?;
+
+    // Mistag a dense product as sparse (census says both tiles dense).
+    let mut s = pristine.clone();
+    s.strategies[2][0] = TileStrategy::Sparse;
+    expect_detected(
+        &audit::audit_schedule(&na, &nb, tau, dt, &s),
+        AuditKind::StrategyMismatch,
+        "dense product mistagged sparse",
+    )?;
+
+    // Split a packed run (second element of the (0,1) run de-packed).
+    let mut s = pristine.clone();
+    s.strategies[1][1] = TileStrategy::Dense;
+    expect_detected(
+        &audit::audit_schedule(&na, &nb, tau, dt, &s),
+        AuditKind::BrokenPackedRun,
+        "split packed run",
+    )?;
+
+    // Ownership: a short owner map, then an out-of-range device.
+    let asg = Assignment::build(&pristine, 2, cuspamm::config::Balance::RowBlock);
+    let mut bad = asg.clone();
+    bad.owner.pop();
+    expect_detected(
+        &audit::audit_assignment(&pristine, &bad),
+        AuditKind::OwnerMapMismatch,
+        "owner map shorter than the tile grid",
+    )?;
+    let mut bad = asg.clone();
+    bad.owner[0] = 9;
+    expect_detected(
+        &audit::audit_assignment(&pristine, &bad),
+        AuditKind::OwnerOutOfRange,
+        "tile owned by a nonexistent device",
+    )?;
+
+    // Residency: a pin no live plan accounts for.
+    let pool = cuspamm::runtime::residency::ResidencyPool::new(1 << 20);
+    pool.pin_operand(Fingerprint(0xdead, 0xbeef));
+    let live: std::collections::HashSet<Fingerprint> = std::collections::HashSet::new();
+    expect_detected(
+        &audit::audit_pool(&pool, Some(&live)),
+        AuditKind::OrphanPin,
+        "pin with no live plan",
+    )?;
+
+    // Store: corrupt three distinct on-disk payloads — a flipped byte, a
+    // truncation, a deletion — and require the matching kinds.
+    let objects: Vec<(String, cuspamm::store::Entry)> = store
+        .entries()?
+        .into_iter()
+        .filter(|(_, e)| e.kind != "bundle")
+        .collect();
+    if objects.len() < 3 {
+        return Err(Error::Audit(format!(
+            "smoke store has {} object payloads, need 3 to corrupt",
+            objects.len()
+        )));
+    }
+    let path0 = tmp.join(&objects[0].1.path);
+    let mut bytes = std::fs::read(&path0)?;
+    if let Some(last) = bytes.last_mut() {
+        *last ^= 0xFF;
+    }
+    std::fs::write(&path0, &bytes)?;
+    let path1 = tmp.join(&objects[1].1.path);
+    let bytes = std::fs::read(&path1)?;
+    std::fs::write(&path1, &bytes[..bytes.len().saturating_sub(1)])?;
+    std::fs::remove_file(tmp.join(&objects[2].1.path))?;
+    let r = audit::audit_store(&store);
+    expect_detected(&r, AuditKind::StoreChecksum, "flipped payload byte")?;
+    expect_detected(&r, AuditKind::StoreSizeMismatch, "truncated payload")?;
+    expect_detected(&r, AuditKind::StoreUnreadable, "deleted payload")?;
+
+    // Healing must evict exactly the corrupted entries and leave the
+    // store clean again.
+    let healed = store.verify(true)?;
+    if healed.bad.len() != 3 {
+        return Err(Error::Audit(format!(
+            "heal evicted {} entries, expected the 3 corrupted ones",
+            healed.bad.len()
+        )));
+    }
+    report_gate("smoke store (healed)", &audit::audit_store(&store))?;
+
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!(
+        "audit --smoke: all workload classes clean, all 11 seeded violation \
+         classes detected"
     );
     Ok(())
 }

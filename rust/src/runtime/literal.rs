@@ -3,9 +3,9 @@
 use crate::error::{Error, Result};
 use crate::matrix::Matrix;
 
-/// Build an f32 literal of the given shape from a flat slice (no copy into
-/// an intermediate Vec — `create_from_shape_and_untyped_data` consumes raw
-/// bytes directly).
+/// Build an f32 literal of the given shape from a flat slice
+/// (`create_from_shape_and_untyped_data` consumes raw bytes; one
+/// native-endian byte copy here keeps the crate `forbid(unsafe_code)`).
 pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let count: usize = dims.iter().product::<usize>().max(1);
     if data.len() != count && !(dims.is_empty() && data.len() == 1) {
@@ -14,13 +14,14 @@ pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
             data.len()
         )));
     }
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_ne_bytes());
+    }
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
         dims,
-        bytes,
+        &bytes,
     )?)
 }
 

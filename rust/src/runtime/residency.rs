@@ -138,6 +138,32 @@ pub struct PoolStats {
     pub resident_tiles: u64,
 }
 
+/// One resident tile in a [`PoolSnapshot`] — the audit-facing view of a
+/// map entry.
+#[derive(Clone, Debug)]
+pub struct PoolAuditTile {
+    pub op: Fingerprint,
+    pub tile: (usize, usize),
+    pub fmt: TileFormat,
+    /// f32 element count of the resident payload (LoNum² for dense,
+    /// variable for packed COO).
+    pub payload_len: usize,
+    /// Whether a handle to this tile is currently held outside the pool.
+    pub in_flight: bool,
+}
+
+/// Point-in-time pool state for the static auditor
+/// ([`ResidencyPool::audit_snapshot`]).
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    pub tiles: Vec<PoolAuditTile>,
+    /// Resident bytes as the pool accounts them (the auditor recomputes
+    /// the sum independently from `tiles`).
+    pub bytes: usize,
+    /// Pinned operand fingerprints with their pin counts.
+    pub pinned: Vec<(Fingerprint, u32)>,
+}
+
 /// A resident tile plus the sequence number of its latest use.
 struct Slot {
     handle: TileHandle,
@@ -497,6 +523,37 @@ impl ResidencyPool {
     /// Number of distinct pinned operand fingerprints.
     pub fn pinned_operands(&self) -> usize {
         self.inner.lock().unwrap().pinned_ops.len()
+    }
+
+    /// Consistent point-in-time view of the pool's internal state for
+    /// the static auditor ([`crate::audit::audit_pool`]): every resident
+    /// tile with its payload length, the byte counter as accounted (not
+    /// recomputed), and the pinned-operand table.  One lock, no LRU
+    /// touches — auditing must not perturb eviction order.
+    pub fn audit_snapshot(&self) -> PoolSnapshot {
+        let inner = self.inner.lock().unwrap();
+        PoolSnapshot {
+            tiles: inner
+                .map
+                .iter()
+                .map(|(k, s)| PoolAuditTile {
+                    op: k.op,
+                    tile: (k.tile.0 as usize, k.tile.1 as usize),
+                    fmt: k.fmt,
+                    payload_len: s.handle.data.len(),
+                    in_flight: Arc::strong_count(&s.handle) > 1,
+                })
+                .collect(),
+            bytes: inner.bytes,
+            pinned: inner.pinned_ops.iter().map(|(f, n)| (*f, *n)).collect(),
+        }
+    }
+
+    /// Deliberately corrupt the byte counter — mutation-test hook for
+    /// the auditor's accounting check; unreachable outside unit tests.
+    #[cfg(test)]
+    pub(crate) fn corrupt_bytes_for_test(&self, bytes: usize) {
+        self.inner.lock().unwrap().bytes = bytes;
     }
 
     /// Counter snapshot.

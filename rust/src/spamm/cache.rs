@@ -595,6 +595,17 @@ impl ExecCaches {
             let touched_b = (key.b == old_fp).then_some(tiles);
             match sched.repair(&na, &nb, tau, dt, touched_a, touched_b) {
                 Ok((repaired, rs)) => {
+                    // Always-on debug audit: the repaired schedule must be
+                    // *structurally* sound against the patched normmaps —
+                    // every cull/survivor/tag re-derived from first
+                    // principles, not just bitwise-stable (this choke
+                    // point covers every update path: session, deferred
+                    // flush, and coordinator).
+                    #[cfg(debug_assertions)]
+                    crate::audit::debug_assert_clean(
+                        &crate::audit::audit_schedule(&na, &nb, tau, dt, &repaired),
+                        "schedule repair",
+                    );
                     self.schedules.remove(&key);
                     let rekeyed = ScheduleKey {
                         a: if key.a == old_fp { new_fp } else { key.a },

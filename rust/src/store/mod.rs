@@ -442,56 +442,47 @@ impl WarmStore {
         Ok(report)
     }
 
+    /// Manifest snapshot keyed by entry key — the auditor's view of the
+    /// store ([`crate::audit::audit_store`] sweeps these against their
+    /// on-disk payloads).
+    pub fn entries(&self) -> Result<BTreeMap<String, Entry>> {
+        self.read_manifest()
+    }
+
+    /// Size + 128-bit checksum of one entry's on-disk payload (a
+    /// directory digest for bundles, a flat file digest otherwise) —
+    /// the raw fact the auditor compares against the manifest.
+    pub fn payload_digest(&self, e: &Entry) -> Result<(u64, String)> {
+        let path = self.dir.join(&e.path);
+        if e.kind == KIND_BUNDLE {
+            dir_digest(&path)
+        } else {
+            let b = fs::read(&path)?;
+            let sum = checksum_hex(&b);
+            Ok((b.len() as u64, sum))
+        }
+    }
+
     /// Re-verify every manifest entry against its payload (size +
     /// checksum + schema version).  With `heal`, bad entries are evicted
     /// so the store self-repairs; without it the store is left untouched.
+    ///
+    /// The sweep itself is [`crate::audit::audit_store`] — store
+    /// verification has exactly one implementation, shared with
+    /// `cuspamm audit store`.
     pub fn verify(&self, heal: bool) -> Result<VerifyReport> {
-        let man = self.read_manifest()?;
+        let total = self.read_manifest()?.len();
+        let audit = crate::audit::audit_store(self);
         let mut report = VerifyReport::default();
-        for (key, e) in &man {
-            let reason = self.verify_entry(e);
-            match reason {
-                None => report.ok += 1,
-                Some(why) => {
-                    if heal {
-                        self.evict(key);
-                    }
-                    report.bad.push((key.clone(), why));
-                }
+        for v in &audit.violations {
+            let key = v.key.clone().unwrap_or_default();
+            if heal {
+                self.evict(&key);
             }
+            report.bad.push((key, v.detail.clone()));
         }
+        report.ok = total - report.bad.len();
         Ok(report)
-    }
-
-    fn verify_entry(&self, e: &Entry) -> Option<String> {
-        if e.version != SCHEMA_VERSION {
-            return Some(format!(
-                "schema version {} (store is at {SCHEMA_VERSION})",
-                e.version
-            ));
-        }
-        let path = self.dir.join(&e.path);
-        let (bytes, sum) = if e.kind == KIND_BUNDLE {
-            match dir_digest(&path) {
-                Ok(d) => d,
-                Err(err) => return Some(format!("unreadable: {err}")),
-            }
-        } else {
-            match fs::read(&path) {
-                Ok(b) => {
-                    let sum = checksum_hex(&b);
-                    (b.len() as u64, sum)
-                }
-                Err(err) => return Some(format!("unreadable: {err}")),
-            }
-        };
-        if bytes != e.bytes {
-            return Some(format!("payload is {bytes} bytes, manifest says {}", e.bytes));
-        }
-        if sum != e.checksum {
-            return Some("checksum mismatch".into());
-        }
-        None
     }
 
     // ----- internals -----------------------------------------------------

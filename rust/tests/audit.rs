@@ -1,0 +1,280 @@
+//! Mutation tests for the cross-layer invariant auditor, driven through
+//! the public API: a hand-engineered schedule is corrupted one invariant
+//! at a time and the auditor must name each violation with the right
+//! kind; a real warm store gets on-disk corruption; and real session
+//! workloads must audit clean end-to-end.  (Expression-plan and
+//! pool-counter mutations need crate-private access and live in
+//! `src/audit/tests.rs`.)
+
+mod common;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use cuspamm::audit::{
+    audit_assignment, audit_pool, audit_schedule, audit_store, AuditKind, AuditReport,
+};
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, ExprGraph, SpammSession};
+use cuspamm::matrix::tiling::PaddedMatrix;
+use cuspamm::matrix::Matrix;
+use cuspamm::runtime::residency::ResidencyPool;
+use cuspamm::spamm::balance::Assignment;
+use cuspamm::spamm::cache::{fingerprint, Fingerprint};
+use cuspamm::spamm::normmap::{normmap_with_density, NormMap};
+use cuspamm::spamm::{Schedule, TileStrategy};
+use cuspamm::store::WarmStore;
+
+use common::bundle;
+
+const L: usize = 32;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cuspamm_audit_it_{}_{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A synthetic 2×2-output grid with contraction depth 3, engineered so
+/// every culling/strategy/packed case appears at τ = 1, threshold 0.5:
+///   slot (0,0): ks [0]    [Dense]
+///   slot (0,1): ks [0,1]  [Packed, Packed]
+///   slot (1,0): ks [0]    [Dense]
+///   slot (1,1): ks [0,1]  [Dense, Dense]
+fn synthetic() -> (NormMap, NormMap, Schedule) {
+    let na = NormMap {
+        norms: Matrix::from_vec(2, 3, vec![2.0, 1.0, 0.1, 1.0, 2.0, 0.5]).unwrap(),
+        density: Matrix::from_vec(2, 3, vec![0.1, 0.1, 1.0, 1.0, 1.0, 1.0]).unwrap(),
+    };
+    let nb = NormMap {
+        norms: Matrix::from_vec(3, 2, vec![2.0, 1.0, 0.1, 2.0, 1.0, 1.0]).unwrap(),
+        density: Matrix::from_vec(3, 2, vec![1.0, 0.1, 1.0, 0.1, 1.0, 1.0]).unwrap(),
+    };
+    let s = Schedule::build_adaptive(&na, &nb, 1.0, 0.5).unwrap();
+    (na, nb, s)
+}
+
+fn expect_kind(r: &AuditReport, kind: AuditKind) {
+    assert!(
+        r.find(kind).is_some(),
+        "expected a {kind:?} violation, got: {:?}",
+        r.violations
+    );
+}
+
+#[test]
+fn pristine_synthetic_schedule_audits_clean() {
+    let (na, nb, s) = synthetic();
+    // Sanity: the engineered grid really exercises every case.
+    assert_eq!(s.valid_k, vec![vec![0], vec![0, 1], vec![0], vec![0, 1]]);
+    assert_eq!(s.strategies[1], vec![TileStrategy::Packed, TileStrategy::Packed]);
+    assert_eq!(s.strategies[3], vec![TileStrategy::Dense, TileStrategy::Dense]);
+    let r = audit_schedule(&na, &nb, 1.0, 0.5, &s);
+    assert!(r.ok(), "pristine schedule flagged: {:?}", r.violations);
+    assert!(r.checks > 0);
+}
+
+#[test]
+fn unculled_below_tau_product_is_spurious() {
+    let (na, nb, mut s) = synthetic();
+    // k=1 in slot (0,0) has bound 1·0.1 = 0.1 < τ = 1.
+    s.valid_k[0].push(1);
+    s.strategies[0].push(TileStrategy::Dense);
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::SpuriousProduct,
+    );
+}
+
+#[test]
+fn dropped_surviving_product_is_missed() {
+    let (na, nb, mut s) = synthetic();
+    // k=0 in slot (1,1) has bound 1·1 = 1 ≥ τ — culling is inclusive.
+    s.valid_k[3].remove(0);
+    s.strategies[3].remove(0);
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::MissedProduct,
+    );
+}
+
+#[test]
+fn descending_k_list_is_malformed() {
+    let (na, nb, mut s) = synthetic();
+    s.valid_k[3].swap(0, 1);
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::MalformedKList,
+    );
+}
+
+#[test]
+fn tag_length_disagreement_is_malformed() {
+    let (na, nb, mut s) = synthetic();
+    s.strategies[1].pop();
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::MalformedKList,
+    );
+}
+
+#[test]
+fn dense_product_mistagged_sparse_is_a_strategy_mismatch() {
+    let (na, nb, mut s) = synthetic();
+    // Slot (1,0)'s operand tiles are census-dense; neither the expected
+    // nor the forged tag is Packed, so this is a plain mismatch.
+    s.strategies[2][0] = TileStrategy::Sparse;
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::StrategyMismatch,
+    );
+}
+
+#[test]
+fn split_packed_run_is_reported_as_broken() {
+    let (na, nb, mut s) = synthetic();
+    // De-pack the second element of slot (0,1)'s 2-run: the survivor set
+    // is untouched, only the consecutive-run property breaks.
+    s.strategies[1][1] = TileStrategy::Dense;
+    expect_kind(
+        &audit_schedule(&na, &nb, 1.0, 0.5, &s),
+        AuditKind::BrokenPackedRun,
+    );
+}
+
+#[test]
+fn ownership_corruptions_are_detected() {
+    let (_, _, s) = synthetic();
+    let asg = Assignment::build(&s, 2, cuspamm::config::Balance::RowBlock);
+    assert!(audit_assignment(&s, &asg).ok());
+
+    let mut bad = asg.clone();
+    bad.owner.pop();
+    expect_kind(&audit_assignment(&s, &bad), AuditKind::OwnerMapMismatch);
+
+    let mut bad = asg.clone();
+    bad.owner[0] = 5;
+    expect_kind(&audit_assignment(&s, &bad), AuditKind::OwnerOutOfRange);
+}
+
+/// The auditor's independent reimplementation must agree with the real
+/// builder on real matrices across the (τ, density-threshold) plane.
+#[test]
+fn real_schedules_audit_clean_across_tau_and_threshold() {
+    let m = Matrix::decay_algebraic(4 * L, 0.1, 0.1, 11);
+    let nm = normmap_with_density(&PaddedMatrix::new(&m, L));
+    for tau in [0.0f32, 1e-4, 1e-2] {
+        for dt in [0.0f32, 0.25, 1.0] {
+            let s = Schedule::build_adaptive(&nm, &nm, tau, dt).unwrap();
+            let r = audit_schedule(&nm, &nm, tau, dt, &s);
+            assert!(r.ok(), "τ={tau} dt={dt}: {:?}", r.violations);
+        }
+    }
+}
+
+#[test]
+fn orphan_pin_is_detected_through_the_public_api() {
+    let pool = ResidencyPool::new(1 << 20);
+    pool.pin_operand(Fingerprint(1, 2));
+    let live = std::collections::HashSet::new();
+    expect_kind(&audit_pool(&pool, Some(&live)), AuditKind::OrphanPin);
+    let live: std::collections::HashSet<Fingerprint> = [Fingerprint(1, 2)].into_iter().collect();
+    assert!(audit_pool(&pool, Some(&live)).ok());
+}
+
+/// One persisted normmap per corruption mode; `audit_store` must name
+/// the exact failure kind, and `verify(heal)` — which routes through the
+/// same auditor — must evict the bad entry and leave the store clean.
+fn seeded_store(dir: &Path, seed: u64) -> WarmStore {
+    let store = WarmStore::open(dir).unwrap();
+    let m = Matrix::randn(2 * L, 2 * L, seed);
+    let p = PaddedMatrix::new(&m, L);
+    store.save_normmap(fingerprint(&p), &normmap_with_density(&p));
+    store
+}
+
+fn object_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for ent in fs::read_dir(dir.join("objects")).unwrap() {
+        let p = ent.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) == Some("bin") {
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[test]
+fn store_bit_flip_is_a_checksum_violation() {
+    let dir = tmp_dir("flip");
+    let store = seeded_store(&dir, 3);
+    assert!(audit_store(&store).ok());
+    for p in object_files(&dir) {
+        let mut bytes = fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        fs::write(&p, &bytes).unwrap();
+    }
+    expect_kind(&audit_store(&store), AuditKind::StoreChecksum);
+    store.verify(true).unwrap();
+    assert!(audit_store(&store).ok(), "heal must leave the store clean");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_truncation_is_a_size_violation() {
+    let dir = tmp_dir("trunc");
+    let store = seeded_store(&dir, 4);
+    for p in object_files(&dir) {
+        let bytes = fs::read(&p).unwrap();
+        fs::write(&p, &bytes[..bytes.len() - 1]).unwrap();
+    }
+    expect_kind(&audit_store(&store), AuditKind::StoreSizeMismatch);
+    store.verify(true).unwrap();
+    assert!(audit_store(&store).ok());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_missing_payload_is_unreadable() {
+    let dir = tmp_dir("gone");
+    let store = seeded_store(&dir, 5);
+    for p in object_files(&dir) {
+        fs::remove_file(&p).unwrap();
+    }
+    expect_kind(&audit_store(&store), AuditKind::StoreUnreadable);
+    store.verify(true).unwrap();
+    assert!(audit_store(&store).ok());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// End-to-end: a session that ran a prepared multiply, an expression
+/// chain, and a delta update audits clean — plan table, expression
+/// dataflow, pool accounting, and pins all verified statically.
+#[test]
+fn session_workloads_audit_clean() {
+    let n = 4 * L;
+    let s = SpammSession::new(&bundle(), SpammConfig::default()).unwrap();
+    let a = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let b = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+    let ida = s.put(&a).unwrap();
+    let idb = s.put(&b).unwrap();
+    let plan = s.prepare(ida, idb, Approx::Tau(1e-4)).unwrap();
+    s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let mut g = ExprGraph::new();
+    let leaf = g.operand();
+    let c2 = g.spamm(leaf, leaf, Approx::Tau(1e-4));
+    g.output(c2);
+    let eplan = s.prepare_expr(&g, &[ida]).unwrap();
+    s.wait(s.submit_expr(eplan).unwrap()).unwrap();
+
+    let changed = [(0usize, 1usize)];
+    let data = vec![0.01f32; L * L];
+    s.update(ida, &changed, &data).unwrap();
+    s.wait(s.submit(plan).unwrap()).unwrap();
+
+    let r = s.audit().unwrap();
+    assert!(r.ok(), "live session flagged: {:?}", r.violations);
+    assert!(r.checks > 0, "a clean session audit must check something");
+}

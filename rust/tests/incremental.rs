@@ -6,15 +6,37 @@
 
 mod common;
 
+use cuspamm::audit::schedule_structural_diff;
 use cuspamm::config::SpammConfig;
-use cuspamm::coordinator::{Approx, ExprGraph, SpammSession};
+use cuspamm::coordinator::{Approx, ExprGraph, PlanId, SpammSession};
+use cuspamm::matrix::tiling::PaddedMatrix;
 use cuspamm::matrix::Matrix;
+use cuspamm::spamm::normmap::normmap_with_density;
+use cuspamm::spamm::Schedule;
 use cuspamm::util::prng::Rng;
 
 use common::bundle;
 
 /// Tile edge of the test bundle.
 const L: usize = 32;
+
+/// The repair ≡ rebuild contract: after any delta update, the schedule a
+/// migrated plan holds (repaired in place by `Schedule::repair`) must be
+/// structurally identical — same surviving products, same strategy tags —
+/// to one built from scratch over the drifted operand.  The comparison
+/// runs through the static auditor's `schedule_structural_diff`, which
+/// never calls the builder or the repairer itself.
+fn assert_repair_matches_rebuild(s: &SpammSession, plan: PlanId, host: &Matrix, ctx: &str) {
+    let (sched, tau, dt) = s.plan_schedule(plan).unwrap();
+    let nm = normmap_with_density(&PaddedMatrix::new(host, L));
+    let fresh = Schedule::build_adaptive(&nm, &nm, tau, dt).unwrap();
+    let diff = schedule_structural_diff(&sched, &fresh);
+    assert!(
+        diff.ok(),
+        "{ctx}: repaired schedule diverged from a fresh rebuild: {:?}",
+        diff.violations
+    );
+}
 
 fn session(cfg: SpammConfig) -> SpammSession {
     SpammSession::new(&bundle(), cfg).unwrap()
@@ -100,6 +122,12 @@ fn update_matches_fresh_put_across_tau_threshold_devices() {
                      repaired, not rebuilt: {rep:?}"
                 );
                 assert_eq!(rep.plans_migrated, 1, "{devices}d τ={tau} dt={dt}");
+                assert_repair_matches_rebuild(
+                    &s,
+                    plan,
+                    &host,
+                    &format!("{devices}d τ={tau} dt={dt}"),
+                );
                 let warm = s.wait(s.submit(plan).unwrap()).unwrap();
                 assert_eq!(
                     warm.stats.schedule_cache_misses, 0,
@@ -182,6 +210,7 @@ fn stale_packed_payloads_are_dropped_on_update() {
         rep.dropped_stale >= 1,
         "the changed tile's resident packed payload must be dropped: {rep:?}"
     );
+    assert_repair_matches_rebuild(&s, plan, &host, "packed drift");
     let warm = s.wait(s.submit(plan).unwrap()).unwrap();
 
     let f = session(cfg);
