@@ -123,6 +123,20 @@ pub struct SpammConfig {
     /// `density_threshold` value.  Explicit numeric values (and the
     /// default 0) keep exact legacy behavior.
     pub density_threshold_auto: bool,
+    /// Serving tier: cache completed results keyed on derived operand
+    /// fingerprints + approximation knobs, so an idempotent re-submitted
+    /// plan returns without executing (`--no-result-cache` turns this
+    /// off; bitwise-inert — a miss and a hit return the same bytes).
+    pub result_cache_enabled: bool,
+    /// Serving tier: per-client byte budget for `put` operands across one
+    /// connection's live handles, enforced at admission with a typed
+    /// `QuotaExceeded` reply.  0 = unlimited.  Accepts `k`/`m`/`g`
+    /// suffixes.
+    pub client_store_budget: usize,
+    /// Serving tier: per-client in-flight submit budget, enforced at
+    /// admission with a typed `Busy` reply.  0 = inherit `queue_depth`
+    /// (whole-session bound only).
+    pub client_queue_depth: usize,
     /// Run device pipelines one after another instead of concurrently.
     /// On a testbed whose simulated devices share physical cores the
     /// concurrent mode inflates each device's busy clock with contention;
@@ -152,6 +166,9 @@ impl Default for SpammConfig {
             density_threshold: 0.0,
             density_threshold_auto: false,
             device_normmap: false,
+            result_cache_enabled: true,
+            client_store_budget: 0,
+            client_queue_depth: 0,
             sequential_devices: false,
         }
     }
@@ -174,6 +191,9 @@ impl SpammConfig {
             "store_budget" => self.store_budget = parse_bytes(key, value)?,
             "store_dir" => self.store_dir = value.to_string(),
             "store_enabled" => self.store_enabled = parse_bool(key, value)?,
+            "result_cache_enabled" => self.result_cache_enabled = parse_bool(key, value)?,
+            "client_store_budget" => self.client_store_budget = parse_bytes(key, value)?,
+            "client_queue_depth" => self.client_queue_depth = parse_num(key, value)?,
             "density_threshold" => {
                 if value.trim() == "auto" {
                     self.density_threshold_auto = true;
@@ -439,6 +459,23 @@ mod tests {
         c.queue_depth = 1;
         c.store_budget = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_keys() {
+        let mut c = SpammConfig::default();
+        assert!(c.result_cache_enabled);
+        assert_eq!(c.client_store_budget, 0);
+        assert_eq!(c.client_queue_depth, 0);
+        c.apply("result_cache_enabled", "false").unwrap();
+        c.apply("client_store_budget", "64k").unwrap();
+        c.apply("client_queue_depth", "2").unwrap();
+        assert!(!c.result_cache_enabled);
+        assert_eq!(c.client_store_budget, 64 << 10);
+        assert_eq!(c.client_queue_depth, 2);
+        c.validate().unwrap();
+        assert!(c.apply("client_store_budget", "lots").is_err());
+        assert!(c.apply("client_queue_depth", "-1").is_err());
     }
 
     #[test]

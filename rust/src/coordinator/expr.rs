@@ -979,10 +979,10 @@ impl Coordinator {
     }
 
     /// [`Coordinator::execute_expr`] with an optional caller-owned
-    /// resident runtime (compiled executables persist across calls,
-    /// `devices == 1` only).  Multi-device configurations fan every
-    /// compute node out across all device workers per the plan's
-    /// placement maps.
+    /// resident runtime (compiled executables persist across calls).  On
+    /// `devices == 1` the whole walk runs on it; on `devices > 1` it
+    /// serves as the combine orchestrator while spamm nodes fan out
+    /// across the persistent worker pool per the plan's placement maps.
     pub fn execute_expr_on(
         &self,
         resident: Option<&Runtime>,
@@ -1002,12 +1002,7 @@ impl Coordinator {
             )));
         }
         if cfg.devices > 1 {
-            if resident.is_some() {
-                return Err(Error::Coordinator(
-                    "resident runtime execution requires devices == 1".into(),
-                ));
-            }
-            return self.execute_expr_multi(plan);
+            return self.execute_expr_multi(resident, plan);
         }
         let lonum = plan.lonum;
         let l2 = lonum * lonum;
@@ -1025,6 +1020,7 @@ impl Coordinator {
         // compile time is excluded from node walls, the coordinator's
         // timing protocol.
         let compile0 = rt.compile_secs();
+        let compiles0 = rt.compiles();
         let precision = cfg.precision.as_str();
         let warm: Vec<String> = rt
             .bundle()
@@ -1346,6 +1342,8 @@ impl Coordinator {
             agg.valid_ratio = agg.valid_products as f64 / agg.total_products as f64;
         }
         agg.total_secs = span.elapsed().as_secs_f64();
+        agg.compiles = rt.compiles() - compiles0;
+        agg.compile_secs = rt.compile_secs() - compile0;
 
         let value = match values[plan.root].clone() {
             Some(RunVal::Resident(v)) => v,
@@ -1374,7 +1372,7 @@ impl Coordinator {
             device_busy,
             device_products,
             wall_secs: span.elapsed().as_secs_f64(),
-            compile_secs: rt.compile_secs() - compile0,
+            compile_secs: agg.compile_secs,
         })
     }
 
@@ -1392,7 +1390,11 @@ impl Coordinator {
     /// bitwise identical to the single-device path: tile ownership is
     /// exclusive and every output tile accumulates its products in the
     /// same k order regardless of the partition.
-    fn execute_expr_multi(&self, plan: &ExprPlan) -> Result<ExprReport> {
+    fn execute_expr_multi(
+        &self,
+        resident: Option<&Runtime>,
+        plan: &ExprPlan,
+    ) -> Result<ExprReport> {
         let cfg = self.config();
         let devices = cfg.devices;
         let lonum = plan.lonum;
@@ -1401,9 +1403,20 @@ impl Coordinator {
         let pool_of = |d: usize| pools.get(d).map(|p| p.as_ref());
 
         // Orchestrator runtime: element-wise tile kernels only; spamm
-        // nodes run on per-device worker runtimes below.
-        let rt = Runtime::new(self.bundle())?;
+        // nodes run on the persistent per-device pool workers below.  A
+        // session worker passes its long-lived runtime as the
+        // orchestrator so repeated expr submits stop recompiling the
+        // combine kernels too.
+        let owned;
+        let rt: &Runtime = match resident {
+            Some(rt) => rt,
+            None => {
+                owned = Runtime::new(self.bundle())?;
+                &owned
+            }
+        };
         let compile0 = rt.compile_secs();
+        let compiles0 = rt.compiles();
         let warm: Vec<String> = rt
             .bundle()
             .names()
@@ -1415,6 +1428,7 @@ impl Coordinator {
         }
         let axpby_buckets = rt.bundle().axpby_buckets(lonum);
         let mut worker_compile = 0.0f64;
+        let mut worker_compiles = 0u64;
 
         let span = Instant::now();
         let mut uses: Vec<usize> = plan.nodes.iter().map(|n| n.uses).collect();
@@ -1447,8 +1461,8 @@ impl Coordinator {
                         Error::Coordinator("expr: spamm input value missing".into())
                     })?;
                     let tau = node.tau;
-                    let (src_a, fa) = va.as_operand();
-                    let (src_b, fb) = vb.as_operand();
+                    let (_, fa) = va.as_operand();
+                    let (_, fb) = vb.as_operand();
                     // Schedule: pinned where the prepare-time bound was
                     // exact, otherwise rebuilt from exact norms (leaf
                     // norms via the keyed cache, intermediates refreshed
@@ -1495,23 +1509,30 @@ impl Coordinator {
                         owner: owner.as_ref().clone(),
                     };
                     let work = batches_of(&sched, &assignment, cfg.pipeline_batches);
-                    let active: Vec<&DeviceWork> =
-                        work.iter().filter(|w| w.tile_count() > 0).collect();
-                    let barrier = Barrier::new(active.len());
-                    let mut results: Vec<DeviceResult> = Vec::with_capacity(active.len());
-                    std::thread::scope(|scope| -> Result<()> {
-                        let mut handles = Vec::new();
-                        for &w in &active {
-                            let barrier = &barrier;
-                            let bundle = self.bundle();
-                            let pool = pool_of(w.device);
-                            let sched: &Schedule = &sched;
-                            handles.push(scope.spawn(move || -> Result<DeviceResult> {
-                                let rt = Runtime::new(bundle)?;
+                    let active: Vec<DeviceWork> =
+                        work.into_iter().filter(|w| w.tile_count() > 0).collect();
+                    // Fan out to the persistent pool workers: each job
+                    // owns Arc handles to its inputs and schedule, and the
+                    // node barrier spans only the active workers (the
+                    // orchestrator just collects replies).
+                    let barrier = Arc::new(Barrier::new(active.len()));
+                    let jobs: Vec<_> = active
+                        .into_iter()
+                        .map(|w| {
+                            let device = w.device;
+                            let va = va.clone();
+                            let vb = vb.clone();
+                            let sched = sched.clone();
+                            let cfg = cfg.clone();
+                            let rpool = pools.get(w.device).cloned();
+                            let barrier = barrier.clone();
+                            let job = move |rt: &Runtime| -> Result<DeviceResult> {
+                                let (src_a, fa) = va.as_operand();
+                                let (src_b, fb) = vb.as_operand();
                                 run_device(
-                                    &rt,
-                                    cfg,
-                                    pool,
+                                    rt,
+                                    &cfg,
+                                    rpool.as_deref(),
                                     Operand {
                                         src: src_a,
                                         fp: Some(fa),
@@ -1520,19 +1541,21 @@ impl Coordinator {
                                         src: src_b,
                                         fp: Some(fb),
                                     },
-                                    sched,
-                                    w,
-                                    barrier,
+                                    &sched,
+                                    &w,
+                                    &barrier,
                                 )
-                            }));
-                        }
-                        for h in handles {
-                            results.push(h.join().map_err(|_| {
-                                Error::Coordinator("expr device worker panicked".into())
-                            })??);
-                        }
-                        Ok(())
-                    })?;
+                            };
+                            (device, job)
+                        })
+                        .collect();
+                    let replies = self.worker_pool()?.dispatch(jobs)?;
+                    let mut results: Vec<DeviceResult> = Vec::with_capacity(replies.len());
+                    for rx in replies {
+                        results.push(rx.recv().map_err(|_| {
+                            Error::Coordinator("expr device worker terminated".into())
+                        })??);
+                    }
 
                     // Merge: each device's tiles land in its own pool
                     // under the derived fingerprint (device-produced —
@@ -1544,6 +1567,7 @@ impl Coordinator {
                         device_busy[r.device] += r.busy_secs;
                         device_products[r.device] += r.products;
                         worker_compile += r.compile_secs;
+                        worker_compiles += r.compiles;
                         nstats.absorb_stages(&r.stats);
                         for ((i, j), data) in r.tiles {
                             if let Some(p) = pool_of(r.device) {
@@ -1807,6 +1831,8 @@ impl Coordinator {
                 _ => None,
             })
             .collect();
+        agg.compiles = rt.compiles() - compiles0 + worker_compiles;
+        agg.compile_secs = rt.compile_secs() - compile0 + worker_compile;
         Ok(ExprReport {
             value,
             kept,
@@ -1816,7 +1842,7 @@ impl Coordinator {
             device_busy,
             device_products,
             wall_secs: span.elapsed().as_secs_f64(),
-            compile_secs: rt.compile_secs() - compile0 + worker_compile,
+            compile_secs: agg.compile_secs,
         })
     }
 

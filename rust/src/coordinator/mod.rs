@@ -17,6 +17,7 @@ pub mod pipeline;
 pub mod service;
 pub mod session;
 pub mod summa;
+pub(crate) mod workers;
 
 pub use expr::{
     ExprGraph, ExprNodeReport, ExprPlan, ExprReport, ExprSource, ExprValue, NodeId,

@@ -24,7 +24,7 @@
 //! whole iteration chains through this same executor with
 //! device-resident intermediates instead of one `multiply` per step.
 
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 use crate::config::SpammConfig;
@@ -45,6 +45,7 @@ use crate::spamm::balance::Assignment;
 
 use super::metrics::MultiDeviceReport;
 use super::partition::{batches_of, partition_ctx, DeviceWork, PartitionCtx};
+use super::workers::DeviceWorkerPool;
 
 /// Multi-device SpAMM coordinator.
 pub struct Coordinator {
@@ -54,6 +55,10 @@ pub struct Coordinator {
     /// One operand-tile pool per device (empty under `--no-residency`).
     /// Device memory is per-GPU, so pools are never shared across workers.
     pools: Vec<Arc<ResidencyPool>>,
+    /// Persistent per-device worker threads (one resident [`Runtime`]
+    /// each), built lazily on the first dispatched multiply and reused for
+    /// the life of the coordinator — warm requests pay zero recompiles.
+    workers: Mutex<Option<Arc<DeviceWorkerPool>>>,
 }
 
 /// What one device worker returns: its owned output tiles and clocks.
@@ -66,6 +71,9 @@ pub(crate) struct DeviceResult {
     pub(crate) tiles: Vec<((usize, usize), Vec<f32>)>,
     pub(crate) busy_secs: f64,
     pub(crate) compile_secs: f64,
+    /// Fresh executable compiles this call charged its runtime — zero on
+    /// a warm pool worker.
+    pub(crate) compiles: u64,
     pub(crate) products: usize,
     /// Pipeline-stage breakdown of this worker's batches.
     pub(crate) stats: MultiplyStats,
@@ -113,7 +121,21 @@ impl Coordinator {
             cfg,
             caches,
             pools,
+            workers: Mutex::new(None),
         })
+    }
+
+    /// The lazily-built persistent worker pool.  Shared by the multiply
+    /// and expression executors so every dispatch path reuses the same
+    /// per-device runtimes.
+    pub(crate) fn worker_pool(&self) -> Result<Arc<DeviceWorkerPool>> {
+        let mut slot = self.workers.lock().unwrap();
+        if let Some(p) = slot.as_ref() {
+            return Ok(p.clone());
+        }
+        let p = Arc::new(DeviceWorkerPool::new(&self.bundle, self.cfg.devices)?);
+        *slot = Some(p.clone());
+        Ok(p)
     }
 
     pub fn config(&self) -> &SpammConfig {
@@ -185,8 +207,8 @@ impl Coordinator {
     pub fn multiply(&self, a: &Matrix, b: &Matrix, tau: f32) -> Result<MultiDeviceReport> {
         check_inner_dims("multiply", a, b)?;
         let lonum = self.cfg.lonum;
-        let pa = PaddedMatrix::new(a, lonum);
-        let pb = PaddedMatrix::new(b, lonum);
+        let pa = Arc::new(PaddedMatrix::new(a, lonum));
+        let pb = Arc::new(PaddedMatrix::new(b, lonum));
         // Phase 1 (Alg. 4 lines 4–9): normmaps for A and B — memoized, so
         // power/purification loops skip this phase on every repeat.  The
         // get-norm work is O(N²) vs the O(N³/ratio) multiply.  `front`
@@ -203,14 +225,13 @@ impl Coordinator {
             .caches
             .schedule_via(fa, fb, tau, dt, &na, &nb, &mut front)?;
         front.schedule_secs = t.elapsed().as_secs_f64();
-        let sched: &Schedule = &sched;
         // Residency keys on content fingerprints; compute them here even
         // when the norm cache (which normally provides them) is off.
         if !self.pools.is_empty() {
             fa = fa.or_else(|| Some(fingerprint(&pa)));
             fb = fb.or_else(|| Some(fingerprint(&pb)));
         }
-        self.run_scheduled(&pa, &pb, fa, fb, sched, front, a.rows(), b.cols(), None, None)
+        self.run_scheduled(&pa, &pb, fa, fb, &sched, front, a.rows(), b.cols(), None, None)
     }
 
     /// Execute a *prepared* multiply: operands already padded and
@@ -219,32 +240,36 @@ impl Coordinator {
     /// get-norm and scheduling phases are skipped entirely.
     pub fn multiply_prepared(
         &self,
-        pa: &PaddedMatrix,
-        pb: &PaddedMatrix,
+        pa: &Arc<PaddedMatrix>,
+        pb: &Arc<PaddedMatrix>,
         fa: Fingerprint,
         fb: Fingerprint,
-        sched: &Schedule,
+        sched: &Arc<Schedule>,
     ) -> Result<MultiDeviceReport> {
         self.multiply_prepared_on(None, pa, pb, fa, fb, sched, None)
     }
 
     /// [`Coordinator::multiply_prepared`] with an optional long-lived
-    /// runtime (session worker, `devices == 1` only): compiled executables
-    /// persist across requests, so warm requests also skip the per-call
-    /// compile/warm-up a fresh runtime pays.  `placed` pins the
-    /// tile→device assignment resolved at plan-prepare time — the devices
-    /// the session pinned the operands into are exactly the devices that
-    /// execute, even if pool residency shifted since (a live re-partition
-    /// could otherwise land on unpinned devices).
+    /// runtime (session worker): on `devices == 1` the multiply executes
+    /// directly on it, so compiled executables persist across requests;
+    /// on `devices > 1` the persistent worker pool provides the same
+    /// warm-runtime guarantee per device and `resident` is unused here
+    /// (the expression executor uses it as its combine orchestrator).
+    /// `placed` pins the tile→device assignment resolved at plan-prepare
+    /// time — the devices the session pinned the operands into are
+    /// exactly the devices that execute, even if pool residency shifted
+    /// since (a live re-partition could otherwise land on unpinned
+    /// devices).  Operands and schedule arrive as `Arc`s because pool
+    /// jobs outlive the borrow scope of a call frame.
     #[allow(clippy::too_many_arguments)]
     pub fn multiply_prepared_on(
         &self,
         resident: Option<&Runtime>,
-        pa: &PaddedMatrix,
-        pb: &PaddedMatrix,
+        pa: &Arc<PaddedMatrix>,
+        pb: &Arc<PaddedMatrix>,
         fa: Fingerprint,
         fb: Fingerprint,
-        sched: &Schedule,
+        sched: &Arc<Schedule>,
         placed: Option<&Assignment>,
     ) -> Result<MultiDeviceReport> {
         if pa.logical_cols != pb.logical_rows {
@@ -304,15 +329,17 @@ impl Coordinator {
     /// tiles over devices and run the per-device pipelines.  Shared by the
     /// full multiply (front phases just computed) and the prepared path
     /// (front phases skipped).  `resident` reuses a caller-owned runtime
-    /// for the single-device case instead of building one per call.
+    /// for the single-device case; everything else dispatches to the
+    /// persistent worker pool ([`DeviceWorkerPool`]), whose per-device
+    /// runtimes survive across multiplies.
     #[allow(clippy::too_many_arguments)]
     fn run_scheduled(
         &self,
-        pa: &PaddedMatrix,
-        pb: &PaddedMatrix,
+        pa: &Arc<PaddedMatrix>,
+        pb: &Arc<PaddedMatrix>,
         fa: Option<Fingerprint>,
         fb: Option<Fingerprint>,
-        sched: &Schedule,
+        sched: &Arc<Schedule>,
         front: MultiplyStats,
         out_rows: usize,
         out_cols: usize,
@@ -361,17 +388,12 @@ impl Coordinator {
 
         // Phase 2 (lines 10–11): per-device pipelines.
         let mut results: Vec<Option<DeviceResult>> = Vec::new();
-        let mut wall_secs = 0.0f64;
-        if let Some(rt) = resident {
-            // Serving mode: the caller (a session worker) owns one
-            // long-lived runtime whose compiled executables persist across
-            // requests — only legal single-device, since a runtime cannot
-            // cross threads.
-            if self.cfg.devices != 1 {
-                return Err(Error::Coordinator(
-                    "resident runtime execution requires devices == 1".into(),
-                ));
-            }
+        let wall_secs;
+        if let (Some(rt), 1) = (resident, self.cfg.devices) {
+            // Serving mode, single device: the caller (a session worker)
+            // owns one long-lived runtime whose compiled executables
+            // persist across requests; execute directly on the caller
+            // thread (a runtime cannot cross threads).
             let solo = Barrier::new(1);
             let t0 = Instant::now();
             for w in &work {
@@ -387,83 +409,54 @@ impl Coordinator {
                 )?));
             }
             wall_secs = t0.elapsed().as_secs_f64();
-            return self.finish(
-                out_rows,
-                out_cols,
-                sched,
-                device_load,
-                imbalance,
-                results,
-                wall_secs,
-                front,
-            );
-        }
-        if self.cfg.sequential_devices {
+        } else if self.cfg.sequential_devices {
             // Modeled-device mode: run pipelines back-to-back so each busy
-            // clock is contention-free (see SpammConfig::sequential_devices).
-            let solo = Barrier::new(1);
+            // clock is contention-free (see SpammConfig::sequential_devices)
+            // — dispatched one at a time to the persistent workers, so
+            // even this mode keeps warm runtimes.
+            let pool = self.worker_pool()?;
             let t0 = Instant::now();
-            for w in &work {
-                let rt = Runtime::new(&self.bundle)?;
-                results.push(Some(run_device(
-                    &rt,
-                    &self.cfg,
-                    self.pool_of(w.device),
-                    Operand::new(pa, fa),
-                    Operand::new(pb, fb),
-                    sched,
-                    w,
-                    &solo,
-                )?));
+            for w in work {
+                let device = w.device;
+                let job = self.device_job(pa, pb, fa, fb, sched, w, Arc::new(Barrier::new(1)));
+                let mut replies = pool.dispatch(vec![(device, job)])?;
+                let rx = replies.pop().expect("one reply per job");
+                results.push(Some(rx.recv().map_err(|_| {
+                    Error::Coordinator("device worker terminated".into())
+                })??));
             }
             wall_secs = t0.elapsed().as_secs_f64();
-            return self.finish(
-                out_rows,
-                out_cols,
-                sched,
-                device_load,
-                imbalance,
-                results,
-                wall_secs,
-                front,
-            );
-        }
-        let barrier = Barrier::new(self.cfg.devices + 1);
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            for w in &work {
-                let barrier = &barrier;
-                let bundle = &self.bundle;
-                let cfg = &self.cfg;
-                let pool = self.pool_of(w.device);
-                handles.push(scope.spawn(move || -> Result<DeviceResult> {
-                    let rt = Runtime::new(bundle)?;
-                    run_device(
-                        &rt,
-                        cfg,
-                        pool,
-                        Operand::new(pa, fa),
-                        Operand::new(pb, fb),
-                        sched,
-                        w,
-                        barrier,
+        } else {
+            // Dispatch the whole multiply to the persistent worker pool:
+            // every device warms up (a no-op once its runtime is hot),
+            // parks at the release barrier, and the wall clock runs from
+            // the caller's barrier entry to the last reply — the same
+            // compile-excluded timing protocol the scoped-thread executor
+            // used, but with runtimes that outlive the request.
+            let pool = self.worker_pool()?;
+            let barrier = Arc::new(Barrier::new(work.len() + 1));
+            let jobs: Vec<_> = work
+                .into_iter()
+                .map(|w| {
+                    let device = w.device;
+                    (
+                        device,
+                        self.device_job(pa, pb, fa, fb, sched, w, barrier.clone()),
                     )
-                }));
-            }
+                })
+                .collect();
+            let replies = pool.dispatch(jobs)?;
             // Release the workers together once they are all warmed up,
             // then time to completion.
             barrier.wait();
             let t0 = Instant::now();
-            let mut collected = Vec::new();
-            for h in handles {
-                collected.push(Some(h.join().map_err(|_| {
-                    Error::Coordinator("device worker panicked".into())
+            for rx in replies {
+                results.push(Some(rx.recv().map_err(|_| {
+                    Error::Coordinator("device worker terminated".into())
                 })??));
             }
             wall_secs = t0.elapsed().as_secs_f64();
-            results = collected;
-            Ok(())
-        })?;
+        }
         self.finish(
             out_rows,
             out_cols,
@@ -474,6 +467,38 @@ impl Coordinator {
             wall_secs,
             front,
         )
+    }
+
+    /// Build one pool job: a closure owning `Arc` handles to everything a
+    /// device pipeline needs, runnable on any worker's resident runtime.
+    #[allow(clippy::too_many_arguments)]
+    fn device_job(
+        &self,
+        pa: &Arc<PaddedMatrix>,
+        pb: &Arc<PaddedMatrix>,
+        fa: Option<Fingerprint>,
+        fb: Option<Fingerprint>,
+        sched: &Arc<Schedule>,
+        work: DeviceWork,
+        barrier: Arc<Barrier>,
+    ) -> impl FnOnce(&Runtime) -> Result<DeviceResult> + Send + 'static {
+        let pa = pa.clone();
+        let pb = pb.clone();
+        let sched = sched.clone();
+        let cfg = self.cfg.clone();
+        let rpool = self.pools.get(work.device).cloned();
+        move |rt: &Runtime| {
+            run_device(
+                rt,
+                &cfg,
+                rpool.as_deref(),
+                Operand::new(&pa, fa),
+                Operand::new(&pb, fb),
+                &sched,
+                &work,
+                &barrier,
+            )
+        }
     }
 
     /// Merge device results into the final report (each output tile has
@@ -503,6 +528,8 @@ impl Coordinator {
         for r in results.into_iter().flatten() {
             device_busy[r.device] = r.busy_secs;
             compile_secs[r.device] = r.compile_secs;
+            stage.compiles += r.compiles;
+            stage.compile_secs += r.compile_secs;
             // The gather stage *is* the device's transfer queue: handle
             // resolution plus residency-miss uploads.
             device_transfer_secs[r.device] = r.stats.gather_secs;
@@ -644,25 +671,34 @@ pub(crate) fn run_device(
     barrier: &Barrier,
 ) -> Result<DeviceResult> {
     let compile0 = rt.compile_secs();
+    let compiles0 = rt.compiles();
     let precision = cfg.precision.as_str();
-    // Warm up every tile-GEMM bucket this device may use.
-    let buckets: Vec<String> = rt
-        .bundle()
-        .names()
-        .filter(|n| {
-            n.starts_with(&format!("tilegemm_l{}_", cfg.lonum)) && n.ends_with(precision)
-        })
-        .map(|s| s.to_string())
-        .collect();
-    for b in &buckets {
-        rt.warmup(&[b])?;
-    }
+    // Warm up every tile-GEMM bucket this device may use.  A warm-up
+    // failure is captured (not returned) until after the barrier: every
+    // party reaches the barrier exactly once, so a broken artifact
+    // surfaces as an error reply instead of stranding the releasing
+    // caller and the sibling workers.
+    let warm = (|| -> Result<()> {
+        let buckets: Vec<String> = rt
+            .bundle()
+            .names()
+            .filter(|n| {
+                n.starts_with(&format!("tilegemm_l{}_", cfg.lonum)) && n.ends_with(precision)
+            })
+            .map(|s| s.to_string())
+            .collect();
+        for b in &buckets {
+            rt.warmup(&[b])?;
+        }
+        Ok(())
+    })();
 
     // Local accumulator for owned tiles (rejects unowned products).
     let mut sink = TileAccumulator::new(cfg.lonum, work.tiles());
     let mut stats = MultiplyStats::default();
 
     barrier.wait();
+    warm?;
     let t0 = Instant::now();
     let batches: Vec<&[(usize, usize)]> =
         work.tile_batches.iter().map(|b| b.as_slice()).collect();
@@ -676,6 +712,7 @@ pub(crate) fn run_device(
         busy_secs: busy,
         // Compile delta of *this* call: zero on a warm resident runtime.
         compile_secs: rt.compile_secs() - compile0,
+        compiles: rt.compiles() - compiles0,
         products: products_done,
         stats,
     })

@@ -1270,6 +1270,19 @@ impl SpammSession {
             .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))
     }
 
+    /// The content fingerprints of a prepared plan's operands, tracking
+    /// migrations: after [`SpammSession::update`] the returned pair is
+    /// the *patched* operands'.  The serving tier derives its result-cache
+    /// keys from these.
+    pub fn plan_fingerprints(&self, id: PlanId) -> Result<(Fingerprint, Fingerprint)> {
+        let plans = self.shared.plans.lock().unwrap();
+        plans
+            .plans
+            .get(&id.0)
+            .map(|e| (e.plan.fa, e.plan.fb))
+            .ok_or_else(|| Error::Session(format!("plan {} not prepared", id.0)))
+    }
+
     /// Statically audit every live artifact of the session: each
     /// prepared multiply plan (schedule soundness against the cached
     /// normmaps + assignment exclusivity), each prepared expression plan
@@ -1706,22 +1719,19 @@ impl Drop for SpammSession {
 
 fn worker_loop(coord: Coordinator, shared: Arc<Shared>) {
     let _dead = DeadFlag(shared.clone());
-    // Single device: one long-lived runtime whose compiled executables
-    // persist across requests.  Multi-device coordinators keep the
-    // per-multiply worker threads (a runtime cannot cross threads).
-    let resident = if coord.config().devices == 1 {
-        match Runtime::new(coord.bundle()) {
-            Ok(rt) => Some(rt),
-            Err(e) => {
-                log::warn!(
-                    "session worker: resident runtime unavailable ({e}); \
-                     falling back to per-request runtimes (compile is re-paid per job)"
-                );
-                None
-            }
+    // One long-lived runtime whose compiled executables persist across
+    // requests: single-device jobs execute directly on it; multi-device
+    // jobs dispatch to the coordinator's persistent per-device worker
+    // pool and use this one as the expression orchestrator.
+    let resident = match Runtime::new(coord.bundle()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            log::warn!(
+                "session worker: resident runtime unavailable ({e}); \
+                 falling back to per-request runtimes (compile is re-paid per job)"
+            );
+            None
         }
-    } else {
-        None
     };
     loop {
         let job = {

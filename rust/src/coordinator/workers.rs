@@ -1,0 +1,158 @@
+//! Persistent per-device worker threads, each owning one long-lived
+//! [`Runtime`] whose compiled executables persist across requests.
+//!
+//! The per-multiply scoped-thread executor paid a fresh [`Runtime::new`]
+//! (PJRT client + empty executable cache) per device *per request* — the
+//! recompile cost the paper's warmup-exclusion hides from wall clocks but
+//! a serving tier pays on every call.  The pool moves runtime ownership
+//! into the thread: a worker compiles an artifact at most once for the
+//! life of the pool, so a warm request's compile delta is zero (the
+//! invariant `MultiplyStats::compiles` pins in the `devices = 4`
+//! regression test).
+//!
+//! Jobs are closures over the runtime, type-erased into boxes and
+//! delivered over per-worker channels; each job carries its own reply
+//! channel.  [`DeviceWorkerPool::dispatch`] enqueues one whole multiply's
+//! jobs under a single dispatch lock so two concurrent multiplies can
+//! never interleave on the per-worker queues — every worker sees the same
+//! multiply order, which makes the per-multiply release barrier
+//! deadlock-free (all workers park at multiply *i*'s barrier before any
+//! touches multiply *i+1*).
+//!
+//! Construction is fallible end-to-end: every worker reports its
+//! `Runtime::new` outcome over a ready channel before the pool is usable,
+//! so a broken artifact bundle surfaces as an error at pool creation, not
+//! as a hung barrier mid-request.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactBundle, Runtime};
+
+/// Type-erased unit of device work.  The closure owns everything it needs
+/// (operands, schedule, reply channel) — the worker only lends its
+/// runtime.
+type Job = Box<dyn FnOnce(&Runtime) + Send + 'static>;
+
+/// One worker thread per device, each with a private job queue and a
+/// runtime built once at spawn.
+pub(crate) struct DeviceWorkerPool {
+    /// Job queues, guarded by the dispatch lock: a multiply's jobs are
+    /// enqueued atomically across workers (see module docs).  Keeping the
+    /// senders inside the mutex also makes the pool `Sync` by
+    /// construction.
+    queues: Mutex<Vec<mpsc::Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl DeviceWorkerPool {
+    /// Spawn `devices` workers, each building its own runtime from
+    /// `bundle`.  Fails (with all threads joined) if any worker's runtime
+    /// construction fails.
+    pub(crate) fn new(bundle: &ArtifactBundle, devices: usize) -> Result<DeviceWorkerPool> {
+        if devices == 0 {
+            return Err(Error::Coordinator("worker pool needs >= 1 device".into()));
+        }
+        let mut senders = Vec::with_capacity(devices);
+        let mut handles = Vec::with_capacity(devices);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for device in 0..devices {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let bundle = bundle.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("spamm-dev{device}"))
+                .spawn(move || {
+                    let rt = match Runtime::new(&bundle) {
+                        Ok(rt) => {
+                            let _ = ready.send(Ok(()));
+                            rt
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    drop(ready);
+                    while let Ok(job) = rx.recv() {
+                        job(&rt);
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn device worker: {e}")))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        // Collect every worker's runtime-construction outcome before the
+        // pool is usable: no job can ever land on a worker without a
+        // runtime.
+        let mut first_err = None;
+        for r in ready_rx.iter().take(devices) {
+            if let Err(e) = r {
+                first_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = first_err {
+            drop(senders); // close queues so surviving workers exit
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(DeviceWorkerPool {
+            queues: Mutex::new(senders),
+            handles,
+        })
+    }
+
+    pub(crate) fn devices(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Atomically enqueue one multiply's jobs — `(device, closure)` pairs
+    /// — and return one reply receiver per job, in input order.  Device
+    /// indices are validated before anything is enqueued, so a bad index
+    /// can never strand half a multiply on the queues.
+    pub(crate) fn dispatch<T, F>(
+        &self,
+        jobs: Vec<(usize, F)>,
+    ) -> Result<Vec<mpsc::Receiver<Result<T>>>>
+    where
+        T: Send + 'static,
+        F: FnOnce(&Runtime) -> Result<T> + Send + 'static,
+    {
+        let queues = self.queues.lock().unwrap();
+        if let Some((bad, _)) = jobs.iter().find(|(d, _)| *d >= queues.len()) {
+            return Err(Error::Coordinator(format!(
+                "dispatch to device {bad} but pool has {} workers",
+                queues.len()
+            )));
+        }
+        let mut replies = Vec::with_capacity(jobs.len());
+        for (device, f) in jobs {
+            let (tx, rx) = mpsc::channel();
+            let job: Job = Box::new(move |rt: &Runtime| {
+                let _ = tx.send(f(rt));
+            });
+            queues[device]
+                .send(job)
+                .map_err(|_| Error::Coordinator("device worker terminated".into()))?;
+            replies.push(rx);
+        }
+        Ok(replies)
+    }
+}
+
+impl Drop for DeviceWorkerPool {
+    fn drop(&mut self) {
+        // Closing the queues ends each worker's recv loop; join so no
+        // worker outlives the pool (a dangling worker would hold a PJRT
+        // client past coordinator teardown).
+        self.queues.lock().unwrap().clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -45,6 +45,13 @@ pub enum Error {
     /// invariant that [`crate::audit`] verifies without executing.
     Audit(String),
 
+    /// Wire-protocol violation on the serving tier (bad magic/version,
+    /// truncated or oversized frame, unknown message kind, malformed
+    /// payload).  Always typed, never a panic: a server replies and a
+    /// client surfaces the error instead of dropping the connection
+    /// state on the floor.
+    Protocol(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -62,6 +69,7 @@ impl fmt::Display for Error {
             Error::Session(m) => write!(f, "session error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
             Error::Audit(m) => write!(f, "audit error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Io(e) => e.fmt(f),
         }
     }

@@ -250,6 +250,37 @@
 //! and `coordinate --smoke` asserts the warm-pool ≥2x transfer cut vs
 //! `rowblock` in CI.
 //!
+//! ## Serving over the wire
+//!
+//! The [`serve`] module exposes the whole session lifecycle over TCP —
+//! a [`ServeServer`](serve::ServeServer) owns one resident
+//! [`SpammSession`](coordinator::SpammSession) (and its persistent
+//! per-device worker runtimes) and any number of tenants drive it with
+//! the framed protocol in [`serve::proto`]:
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0 | 4 | magic `0x4353_4E50` ("CSNP", little-endian) |
+//! | 4 | 2 | protocol version (currently 1) |
+//! | 6 | 1 | frame kind tag |
+//! | 7 | 1 | reserved (0) |
+//! | 8 | 4 | payload length (≤ 64 MiB, checked before allocation) |
+//!
+//! The payload is compact JSON ([`json`]); matrix data crosses as
+//! IEEE-754 bit-pattern hex, so remote products are **bitwise** equal to
+//! in-process execution.  Admission is multi-tenant: per-client
+//! store-bytes (`--client-store-budget`) and inflight-submit depth
+//! (`--client-queue-depth`) budgets shed with typed `QuotaExceeded`
+//! replies, global queue saturation sheds with `Busy`, and a shed never
+//! drops the connection.  Concurrent same-plan submits coalesce into
+//! one device dispatch, and completed products land in a result cache
+//! keyed on the plan's derived fingerprint — a warm re-submit is
+//! answered with zero device work, and incremental updates invalidate
+//! only the cached products their schedule repair actually changed
+//! (`--no-result-cache` disables the cache bitwise-inertly).
+//! `cuspamm serve-net --smoke` drives server + clients in-process as
+//! the CI gate.
+//!
 //! ## Static analysis & invariants
 //!
 //! Every fast path above (schedule repair, normmap patching, pool
@@ -333,6 +364,7 @@ pub mod json;
 pub mod matrix;
 pub mod proptest;
 pub mod runtime;
+pub mod serve;
 pub mod spamm;
 pub mod sparse;
 pub mod store;
@@ -350,6 +382,9 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::matrix::Matrix;
     pub use crate::runtime::{ArtifactBundle, Runtime};
+    pub use crate::serve::{
+        PutOutcome, RemoteApprox, RemoteCompletion, ServeClient, ServeServer, SubmitOutcome,
+    };
     pub use crate::spamm::{SpammEngine, TuneResult};
     pub use crate::sparse::CsrMatrix;
     pub use crate::store::WarmStore;

@@ -11,6 +11,10 @@
 //!   cuspamm serve --requests 64           session serving bench (Zipf-hot
 //!                                         operands, priorities; --smoke for
 //!                                         the CI warm-plan assertion)
+//!   cuspamm serve-net --clients 2         network serving tier over the framed
+//!                                         TCP protocol: tenant quotas, plan
+//!                                         batching, result cache (--smoke for
+//!                                         the CI warm/shed/bitwise assertion)
 //!   cuspamm update --steps 4              drifting-operand trace: delta
 //!                                         updates + schedule repair (--smoke
 //!                                         for the CI delta-cost assertion)
@@ -148,6 +152,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "purify" => cmd_purify(rest),
         "cnn" => cmd_cnn(rest),
         "serve" => cmd_serve(rest),
+        "serve-net" => cmd_serve_net(rest),
         "update" => cmd_update(rest),
         "coordinate" => cmd_coordinate(rest),
         "bench" => cmd_bench(rest),
@@ -165,7 +170,10 @@ fn dispatch(args: &[String]) -> Result<()> {
                  loop (--expr/--loop)\n  purify McWeeny purification, same \
                  A/B\n  cnn    case-study CNN accuracy probe\n  serve  \
                  session serving bench: registered operands, prepared plans, \
-                 priority queue\n  update drifting-operand trace: delta \
+                 priority queue\n  serve-net  serve the session over the framed \
+                 TCP protocol: multi-tenant quotas, plan batching, result \
+                 cache (--smoke for the CI warm/shed/bitwise assertion)\n  \
+                 update drifting-operand trace: delta \
                  updates with schedule repair (--smoke for the CI \
                  delta-cost assertion)\n  coordinate  multi-device partition bench: \
                  per-device transfer/busy table, residency-aware vs rowblock \
@@ -992,6 +1000,334 @@ fn serve_smoke(bundle: &ArtifactBundle, cfg: SpammConfig, ratio: f64) -> Result<
     Ok(())
 }
 
+fn cmd_serve_net(args: &[String]) -> Result<()> {
+    let spec = common(Spec::new(
+        "cuspamm serve-net",
+        "serve the session over the framed TCP wire protocol: multi-tenant \
+         quotas at admission, plan-aware batching, and a fingerprint-keyed \
+         result cache with repair-aware invalidation",
+    ))
+    .opt("addr", "127.0.0.1:0", "listen address (port 0 = ephemeral)")
+    .opt("clients", "2", "concurrent demo clients (tenants)")
+    .opt("requests", "8", "requests per demo client")
+    .opt("n", "256", "matrix size per operand")
+    .opt("ratio", "0.01", "valid-ratio target for the smoke plan")
+    .opt("queue-depth", "64", "session admission-queue depth (defaults to the config's)")
+    .opt(
+        "client-store-budget",
+        "0",
+        "per-tenant put-bytes budget, sheds with QuotaExceeded \
+         (k/m/g suffixes; 0 = unlimited)",
+    )
+    .opt(
+        "client-queue-depth",
+        "0",
+        "per-tenant inflight-submit depth, sheds with QuotaExceeded \
+         (0 = unlimited)",
+    )
+    .flag(
+        "no-result-cache",
+        "disable the fingerprint-keyed result cache (bitwise-inert: every \
+         submit executes)",
+    )
+    .flag(
+        "smoke",
+        "CI smoke: in-process server + clients over localhost; asserts warm \
+         cache-hit rounds ≥2x cheaper than the cold round, executed=false \
+         re-submits, typed quota + busy shedding on a live connection, and \
+         bitwise identity with a direct in-process session",
+    );
+    let a = spec.parse(args)?;
+    let mut cfg = build_config(&a)?;
+    for (opt, key) in [
+        ("queue-depth", "queue_depth"),
+        ("client-store-budget", "client_store_budget"),
+        ("client-queue-depth", "client_queue_depth"),
+    ] {
+        if a.provided(opt) {
+            cfg.apply(key, a.get(opt))?;
+        }
+    }
+    if a.flag("no-result-cache") {
+        cfg.result_cache_enabled = false;
+    }
+    cfg.validate()?;
+    let bundle = load_bundle_or_hostsim(&a)?;
+    if a.flag("smoke") {
+        return serve_net_smoke(&bundle, cfg, a.f64("ratio")?);
+    }
+    serve_net_demo(
+        &bundle,
+        cfg,
+        a.get("addr"),
+        a.usize("clients")?,
+        a.usize("requests")?,
+        a.usize("n")?,
+    )
+}
+
+/// Multi-tenant demo workload: each client connects as its own tenant,
+/// registers two operands, and round-robins submits over three τ levels
+/// (retrying politely on `Busy`).  Ends with the server's counter table.
+fn serve_net_demo(
+    bundle: &ArtifactBundle,
+    cfg: SpammConfig,
+    addr: &str,
+    clients: usize,
+    requests: usize,
+    n: usize,
+) -> Result<()> {
+    use cuspamm::serve::{PutOutcome, RemoteApprox, ServeClient, ServeServer, SubmitOutcome};
+
+    let server = ServeServer::start(bundle, cfg, addr)?;
+    let addr = server.local_addr();
+    println!("serving on {addr}");
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            std::thread::spawn(move || -> Result<(usize, usize)> {
+                let mut c = ServeClient::connect(addr, &format!("tenant-{ci}"))?;
+                let a = match c.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 2 * ci as u64 + 1))? {
+                    PutOutcome::Ok(id) => id,
+                    PutOutcome::QuotaExceeded(m) => return Err(Error::Session(m)),
+                };
+                let b = match c.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 2 * ci as u64 + 2))? {
+                    PutOutcome::Ok(id) => id,
+                    PutOutcome::QuotaExceeded(m) => return Err(Error::Session(m)),
+                };
+                let plans = [0.0f32, 0.05, 0.1]
+                    .iter()
+                    .map(|&t| c.prepare(a, b, RemoteApprox::Tau(t)).map(|p| p.id))
+                    .collect::<Result<Vec<_>>>()?;
+                let (mut executed, mut warm) = (0, 0);
+                for r in 0..requests {
+                    let plan = plans[r % plans.len()];
+                    let ticket = loop {
+                        match c.submit(plan)? {
+                            SubmitOutcome::Ticket(t, _) => break t,
+                            SubmitOutcome::Busy(_) | SubmitOutcome::QuotaExceeded(_) => {
+                                std::thread::sleep(std::time::Duration::from_millis(2));
+                            }
+                        }
+                    };
+                    let done = c.wait(ticket)?;
+                    if done.executed {
+                        executed += 1;
+                    } else {
+                        warm += 1;
+                    }
+                }
+                Ok((executed, warm))
+            })
+        })
+        .collect();
+    let mut executed = 0;
+    let mut warm = 0;
+    for h in handles {
+        let joined = match h.join() {
+            Ok(r) => r,
+            Err(_) => return Err(Error::Session("demo client panicked".into())),
+        };
+        let (e, w) = joined?;
+        executed += e;
+        warm += w;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut probe = ServeClient::connect(addr, "probe")?;
+    let stats = probe.stats()?;
+    println!(
+        "completed {} requests from {clients} tenants in {wall:.3}s — {} executed on device, \
+         {} answered warm (cache or batch)",
+        clients * requests,
+        executed,
+        warm
+    );
+    println!(
+        "  server: {} frames, {} executed, {} batched, {} cache hits / {} misses, \
+         shed {} busy / {} quota",
+        stats.requests,
+        stats.executed,
+        stats.batched,
+        stats.result_cache_hits,
+        stats.result_cache_misses,
+        stats.shed_busy,
+        stats.shed_quota
+    );
+    println!(
+        "  store: {} puts ({} dedup hits), {} KiB resident",
+        stats.store_puts,
+        stats.store_dedup_hits,
+        stats.store_resident_bytes / 1024
+    );
+    drop(probe);
+    server.shutdown();
+    Ok(())
+}
+
+/// CI smoke for `serve-net` (`--smoke`): an in-process [`ServeServer`]
+/// and clients over localhost.  Asserts, in order: (1) warm re-submits
+/// are result-cache hits — `executed == false`, zero compiles, wall
+/// ≥2x cheaper than the cold round; (2) the per-tenant store budget
+/// sheds a `put` with a typed `QuotaExceeded` on a connection that stays
+/// usable, while a second tenant's own budget is untouched; (3) flooding
+/// distinct-τ submits at `queue_depth = 1` sheds with typed `Busy` and
+/// every admitted ticket is still redeemed (zero lost tickets); (4) the
+/// remote product is bitwise identical to a direct in-process session.
+fn serve_net_smoke(bundle: &ArtifactBundle, mut cfg: SpammConfig, ratio: f64) -> Result<()> {
+    use cuspamm::coordinator::{Approx, SpammSession};
+    use cuspamm::serve::{PutOutcome, RemoteApprox, ServeClient, ServeServer, SubmitOutcome};
+
+    const REPEATS: usize = 8;
+    const FLOOD: usize = 16;
+    let n = 512;
+    // One operand fits the tenant store budget exactly; the session's
+    // global admission queue is a single slot so the flood sheds.
+    cfg.client_store_budget = n * n * 4;
+    cfg.queue_depth = 1;
+    let a_mat = Matrix::decay_algebraic(n, 0.1, 0.1, 7);
+    let server = ServeServer::start(bundle, cfg.clone(), "127.0.0.1:0")?;
+    let addr = server.local_addr();
+    let mut client = ServeClient::connect(addr, "smoke")?;
+    let aid = match client.put(&a_mat)? {
+        PutOutcome::Ok(id) => id,
+        PutOutcome::QuotaExceeded(m) => {
+            return Err(Error::Session(format!("first put must fit the budget: {m}")))
+        }
+    };
+    let plan = client.prepare(aid, aid, RemoteApprox::ValidRatio(ratio))?;
+    println!(
+        "smoke: n={n} τ={:.4e} (ratio target {ratio}) over {addr}, output {}x{}",
+        plan.tau,
+        plan.rows,
+        plan.cols
+    );
+
+    // (1) Cold round executes; every re-submit is a result-cache hit.
+    let mut rounds = Vec::with_capacity(REPEATS);
+    for i in 0..REPEATS {
+        let t0 = std::time::Instant::now();
+        let ticket = match client.submit(plan.id)? {
+            SubmitOutcome::Ticket(t, cached) => {
+                assert_eq!(cached, i > 0, "round {i}: cache admission flag");
+                t
+            }
+            other => return Err(Error::Session(format!("round {i}: unexpected {other:?}"))),
+        };
+        let done = client.wait(ticket)?;
+        rounds.push((t0.elapsed().as_secs_f64(), done));
+    }
+    assert!(rounds[0].1.executed, "cold round must execute on device");
+    for (i, (_, done)) in rounds.iter().enumerate().skip(1) {
+        assert!(!done.executed, "warm round {i} dispatched device work");
+        assert_eq!(done.compiles, 0, "warm round {i} compiled kernels");
+        assert_eq!(
+            done.c.data(),
+            rounds[0].1.c.data(),
+            "warm round {i} diverged from the cold product"
+        );
+    }
+    let cold_wall = rounds[0].0;
+    let warm_min = rounds[1..].iter().map(|(w, _)| *w).fold(f64::MAX, f64::min);
+    println!(
+        "smoke: cold round {:.4}s, warm min {:.4}s — {:.1}x",
+        cold_wall,
+        warm_min,
+        cold_wall / warm_min.max(1e-12)
+    );
+    assert!(
+        cold_wall >= 2.0 * warm_min,
+        "warm cache-hit rounds must be ≥2x cheaper: cold {cold_wall:.4}s vs warm {warm_min:.4}s"
+    );
+
+    // (2) Store-budget shed: the budget holds exactly one operand, so a
+    // second distinct put sheds typed — and the connection stays usable.
+    let b_mat = Matrix::decay_algebraic(n, 0.1, 0.1, 8);
+    match client.put(&b_mat)? {
+        PutOutcome::QuotaExceeded(m) => println!("smoke: put shed as expected ({m})"),
+        PutOutcome::Ok(_) => {
+            return Err(Error::Session("second put must exceed the store budget".into()))
+        }
+    }
+    // Tenant isolation: another tenant's budget is its own.
+    let mut other = ServeClient::connect(addr, "other")?;
+    match other.put(&b_mat)? {
+        PutOutcome::Ok(_) => {}
+        PutOutcome::QuotaExceeded(m) => {
+            return Err(Error::Session(format!(
+                "tenant budgets must be isolated, second tenant shed: {m}"
+            )))
+        }
+    }
+
+    // (3) Busy shed: distinct-τ (cold) submits flood the single-slot
+    // admission queue faster than the worker drains it.
+    let flood_plans = (0..FLOOD)
+        .map(|i| {
+            client
+                .prepare(aid, aid, RemoteApprox::Tau(0.011 * (i + 1) as f32))
+                .map(|p| p.id)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut admitted = Vec::new();
+    let mut saw_busy = false;
+    for p in &flood_plans {
+        match client.submit(*p)? {
+            SubmitOutcome::Ticket(t, cached) => {
+                assert!(!cached, "distinct-τ flood plans cannot be cache hits");
+                admitted.push(t);
+            }
+            SubmitOutcome::Busy(m) => {
+                println!("smoke: submit shed busy after {} admissions ({m})", admitted.len());
+                saw_busy = true;
+                break;
+            }
+            SubmitOutcome::QuotaExceeded(m) => {
+                return Err(Error::Session(format!("flood shed on quota, not busy: {m}")))
+            }
+        }
+    }
+    assert!(saw_busy, "flooding {FLOOD} cold submits at queue_depth=1 must shed Busy");
+    // Zero lost tickets: everything admitted before the shed redeems.
+    for (i, t) in admitted.iter().enumerate() {
+        let done = client.wait(*t)?;
+        assert!(done.executed, "flood ticket {i} was admitted cold, must execute");
+        assert_eq!(
+            (done.c.rows(), done.c.cols()),
+            (plan.rows, plan.cols),
+            "flood ticket {i} has the wrong output shape"
+        );
+    }
+
+    // (4) Bitwise identity with a direct in-process session at the same
+    // resolved τ.
+    let session = SpammSession::new(bundle, cfg)?;
+    let da = session.put(&a_mat)?;
+    let dplan = session.prepare(da, da, Approx::Tau(plan.tau))?;
+    let direct = session.wait(session.submit(dplan)?)?;
+    assert_eq!(
+        rounds[0].1.c.data(),
+        direct.c.data(),
+        "remote product diverged from the direct in-process session"
+    );
+
+    let stats = client.stats()?;
+    assert!(stats.shed_quota >= 1, "stats must count the quota shed");
+    assert!(stats.shed_busy >= 1, "stats must count the busy shed");
+    assert_eq!(
+        stats.result_cache_hits,
+        (REPEATS - 1) as u64,
+        "every warm round must be a result-cache hit"
+    );
+    drop(client);
+    drop(other);
+    server.shutdown();
+    println!(
+        "smoke: OK — warm rounds ≥2x cheaper with executed=false, typed quota/busy \
+         shedding on live connections, bitwise-identical to the in-process session"
+    );
+    Ok(())
+}
+
 fn cmd_coordinate(args: &[String]) -> Result<()> {
     let spec = common(Spec::new(
         "cuspamm coordinate",
@@ -1362,7 +1698,11 @@ fn cmd_bench(args: &[String]) -> Result<()> {
          deterministic fields (counts, format mixes, cache behavior) \
          against committed baselines",
     ))
-    .opt("suite", "all", "all | multiply | serve | expr | multidevice")
+    .opt(
+        "suite",
+        "all",
+        "all | multiply | serve | serve-net | expr | multidevice",
+    )
     .opt("out", "bench_results", "output directory for BENCH_*.json")
     .opt(
         "check",
@@ -1381,6 +1721,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     if pick("serve") {
         records.push(bench_serve(&bundle, &cfg)?);
     }
+    if pick("serve-net") {
+        records.push(bench_serve_net(&bundle, &cfg)?);
+    }
     if pick("expr") {
         records.push(bench_expr(&bundle, &cfg)?);
     }
@@ -1389,7 +1732,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
     if records.is_empty() {
         return Err(Error::Config(format!(
-            "unknown suite '{suite}' (all | multiply | serve | expr | multidevice)"
+            "unknown suite '{suite}' (all | multiply | serve | serve-net | expr | multidevice)"
         )));
     }
     let out = std::path::Path::new(a.get("out"));
@@ -1506,6 +1849,81 @@ fn bench_serve(
         "warm_compute_secs_mean",
         warm.iter().map(|c| c.compute_secs).sum::<f64>() / warm.len() as f64,
     );
+    Ok(r)
+}
+
+/// Serve-net suite: one sequential tenant over the wire protocol, so every
+/// pinned counter is an exact frame-trace regression.  With a per-tenant
+/// inflight depth of 1, the second of two back-to-back cold submits sheds
+/// `QuotaExceeded` deterministically (inflight is charged at admission and
+/// released at wait, independent of device timing); warm re-submits of the
+/// first plan are result-cache hits that never reach the device.
+fn bench_serve_net(
+    bundle: &ArtifactBundle,
+    cfg: &SpammConfig,
+) -> Result<cuspamm::bench_harness::BenchRecord> {
+    use cuspamm::bench_harness::BenchRecord;
+    use cuspamm::serve::{PutOutcome, RemoteApprox, ServeClient, ServeServer, SubmitOutcome};
+
+    const WARM_ROUNDS: usize = 3;
+    let n = 4 * bundle.lonum;
+    let mut cfg = cfg.clone();
+    cfg.client_queue_depth = 1;
+    let t0 = std::time::Instant::now();
+    let server = ServeServer::start(bundle, cfg, "127.0.0.1:0")?;
+    let mut c = ServeClient::connect(server.local_addr(), "bench")?;
+    let put = |out: PutOutcome| match out {
+        PutOutcome::Ok(id) => Ok(id),
+        PutOutcome::QuotaExceeded(m) => Err(Error::Session(format!("bench put shed: {m}"))),
+    };
+    let ticket = |out: SubmitOutcome| match out {
+        SubmitOutcome::Ticket(t, _) => Ok(t),
+        other => Err(Error::Session(format!("bench submit shed: {other:?}"))),
+    };
+    let ida = put(c.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 7))?)?;
+    let idb = put(c.put(&Matrix::decay_algebraic(n, 0.1, 0.1, 8))?)?;
+    let p0 = c.prepare(ida, idb, RemoteApprox::Tau(0.0))?.id;
+    // Cold round then warm re-submits: all three must come back from the
+    // result cache without executing.
+    let mut warm_executed = 0u64;
+    for round in 0..=WARM_ROUNDS {
+        let t = ticket(c.submit(p0)?)?;
+        let done = c.wait(t)?;
+        if round > 0 && done.executed {
+            warm_executed += 1;
+        }
+    }
+    // Two fresh plans, inflight depth 1: submit p1, then p2 sheds typed,
+    // then p2 is admitted once p1's wait releases the slot.
+    let p1 = c.prepare(ida, idb, RemoteApprox::Tau(0.125))?.id;
+    let p2 = c.prepare(ida, idb, RemoteApprox::Tau(0.25))?.id;
+    let t1 = ticket(c.submit(p1)?)?;
+    let shed = match c.submit(p2)? {
+        SubmitOutcome::QuotaExceeded(_) => 1u64,
+        other => return Err(Error::Session(format!("expected a typed quota shed, got {other:?}"))),
+    };
+    c.wait(t1)?;
+    let t2 = ticket(c.submit(p2)?)?;
+    c.wait(t2)?;
+    let stats = c.stats()?;
+    let wall = t0.elapsed().as_secs_f64();
+    drop(c);
+    server.shutdown();
+
+    let mut r = BenchRecord::new("serve_net");
+    r.det("requests", stats.requests as f64)
+        .det("executed", stats.executed as f64)
+        .det("batched", stats.batched as f64)
+        .det("result_cache_hits", stats.result_cache_hits as f64)
+        .det("result_cache_misses", stats.result_cache_misses as f64)
+        .det("result_cache_len", stats.result_cache_len as f64)
+        .det("shed_quota", stats.shed_quota as f64)
+        .det("shed_busy", stats.shed_busy as f64)
+        .det("observed_quota_sheds", shed as f64)
+        .det("store_puts", stats.store_puts as f64)
+        .det("store_dedup_hits", stats.store_dedup_hits as f64)
+        .det("warm_executed", warm_executed as f64);
+    r.info("wall_secs", wall);
     Ok(r)
 }
 

@@ -23,6 +23,11 @@ pub struct Runtime {
     busy: RefCell<f64>,
     /// Cumulative seconds spent compiling (excluded from busy).
     compile_time: RefCell<f64>,
+    /// Number of fresh executable compiles (cache misses in the
+    /// per-artifact executable cache).  A warm runtime serving repeated
+    /// requests holds this constant — the counter the serving tier's
+    /// zero-recompile regression pins.
+    compile_count: std::cell::Cell<u64>,
 }
 
 impl Runtime {
@@ -33,6 +38,7 @@ impl Runtime {
             cache: RefCell::new(BTreeMap::new()),
             busy: RefCell::new(0.0),
             compile_time: RefCell::new(0.0),
+            compile_count: std::cell::Cell::new(0),
         })
     }
 
@@ -47,6 +53,13 @@ impl Runtime {
 
     pub fn compile_secs(&self) -> f64 {
         *self.compile_time.borrow()
+    }
+
+    /// Executables compiled so far (executable-cache misses).  The delta
+    /// across one call is zero exactly when the call ran entirely on
+    /// already-compiled artifacts.
+    pub fn compiles(&self) -> u64 {
+        self.compile_count.get()
     }
 
     pub fn reset_busy(&self) {
@@ -64,6 +77,7 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         *self.compile_time.borrow_mut() += t.elapsed().as_secs_f64();
+        self.compile_count.set(self.compile_count.get() + 1);
         log::debug!(
             "compiled {name} in {:.1} ms",
             t.elapsed().as_secs_f64() * 1e3

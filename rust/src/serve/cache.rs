@@ -1,0 +1,183 @@
+//! Fingerprint-keyed result cache for the serving tier.
+//!
+//! A served multiply is pure in its plan identity: the operand content
+//! fingerprints, the executed τ, and the density threshold determine the
+//! product bitwise (the pipeline's tile products are deterministic for
+//! fixed inputs).  The cache keys on
+//! `Fingerprint::derive("serve.result", [fa, fb], [τ, density])` so a
+//! re-submitted warm plan is answered from the host without touching a
+//! device — and, because [`crate::coordinator::SpammSession::update`]
+//! migrates plan fingerprints, entries survive *clean* incremental
+//! updates by re-keying (see the server's repair-aware invalidation).
+//!
+//! Bounded FIFO by insertion order: the serving tier's hot set is the
+//! Zipf head of repeated plans, and a stale entry costs only a re-execute.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::matrix::Matrix;
+use crate::spamm::cache::Fingerprint;
+
+/// A cached served product.
+#[derive(Clone, Debug)]
+pub struct CachedResult {
+    pub c: Matrix,
+    pub tau: f32,
+    pub valid_ratio: f64,
+}
+
+/// Derive the result-cache key of a prepared plan.
+pub fn result_key(fa: Fingerprint, fb: Fingerprint, tau: f32, density: f32) -> Fingerprint {
+    Fingerprint::derive("serve.result", &[fa, fb], &[tau, density])
+}
+
+/// Capacity-bounded result cache with typed hit/miss counters.
+#[derive(Debug)]
+pub struct ResultCache {
+    entries: HashMap<Fingerprint, CachedResult>,
+    order: VecDeque<Fingerprint>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+    rekeys: u64,
+}
+
+impl ResultCache {
+    /// `capacity` = 0 disables caching entirely (every lookup misses,
+    /// every insert is dropped) — the `--no-result-cache` kill switch.
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            capacity,
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+            rekeys: 0,
+        }
+    }
+
+    pub fn get(&mut self, key: &Fingerprint) -> Option<&CachedResult> {
+        match self.entries.get(key) {
+            Some(r) => {
+                self.hits += 1;
+                Some(r)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: Fingerprint, result: CachedResult) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.entries.insert(key, result).is_none() {
+            self.order.push_back(key);
+        }
+        while self.entries.len() > self.capacity {
+            let Some(victim) = self.order.pop_front() else {
+                break;
+            };
+            self.entries.remove(&victim);
+        }
+    }
+
+    /// Drop an entry whose product a repair actually changed.
+    pub fn invalidate(&mut self, key: &Fingerprint) {
+        if self.entries.remove(key).is_some() {
+            self.invalidations += 1;
+            self.order.retain(|k| k != key);
+        }
+    }
+
+    /// Migrate an entry untouched by a repair to its post-update key.
+    pub fn rekey(&mut self, old: &Fingerprint, new: Fingerprint) {
+        if old == &new {
+            return;
+        }
+        if let Some(r) = self.entries.remove(old) {
+            self.rekeys += 1;
+            self.order.retain(|k| k != old);
+            self.insert(new, r);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations
+    }
+
+    pub fn rekeys(&self) -> u64 {
+        self.rekeys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(seed: u64) -> CachedResult {
+        CachedResult {
+            c: Matrix::randn(2, 2, seed),
+            tau: 0.5,
+            valid_ratio: 1.0,
+        }
+    }
+
+    fn key(i: f32) -> Fingerprint {
+        Fingerprint::derive("test", &[], &[i])
+    }
+
+    #[test]
+    fn fifo_eviction_and_counters() {
+        let mut c = ResultCache::new(2);
+        c.insert(key(1.0), entry(1));
+        c.insert(key(2.0), entry(2));
+        c.insert(key(3.0), entry(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1.0)).is_none());
+        assert!(c.get(&key(3.0)).is_some());
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let mut c = ResultCache::new(0);
+        c.insert(key(1.0), entry(1));
+        assert!(c.is_empty());
+        assert!(c.get(&key(1.0)).is_none());
+    }
+
+    #[test]
+    fn rekey_preserves_content() {
+        let mut c = ResultCache::new(4);
+        c.insert(key(1.0), entry(7));
+        c.rekey(&key(1.0), key(2.0));
+        assert!(c.get(&key(1.0)).is_none());
+        let got = c.get(&key(2.0)).unwrap();
+        assert_eq!(got.c, Matrix::randn(2, 2, 7));
+        assert_eq!(c.rekeys(), 1);
+        c.invalidate(&key(2.0));
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations(), 1);
+    }
+}

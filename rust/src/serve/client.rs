@@ -1,0 +1,355 @@
+//! Framed-protocol client for the serving tier — the remote twin of
+//! [`crate::coordinator::SpammSession`]'s put → prepare → submit → wait
+//! lifecycle.  Shed replies ([`FrameKind::Busy`] /
+//! [`FrameKind::QuotaExceeded`]) surface as typed outcome variants, not
+//! errors: the connection stays usable and the caller decides whether
+//! to retry, back off, or release budget.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::matrix::Matrix;
+use crate::serve::proto::{self, Frame, FrameKind};
+
+/// Server-issued operand handle (wire id, not the session's internal id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RemoteOperandId(pub u64);
+
+/// Server-issued plan handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RemotePlanId(pub u64);
+
+/// Server-issued ticket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RemoteTicket(pub u64);
+
+/// Approximation target for [`ServeClient::prepare`].
+#[derive(Clone, Copy, Debug)]
+pub enum RemoteApprox {
+    Tau(f32),
+    ValidRatio(f64),
+}
+
+/// A prepared remote plan with its resolved τ and output shape.
+#[derive(Clone, Copy, Debug)]
+pub struct RemotePlan {
+    pub id: RemotePlanId,
+    pub tau: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// What a `put` request came back as.
+#[derive(Clone, Debug)]
+pub enum PutOutcome {
+    Ok(RemoteOperandId),
+    /// Shed at admission: the tenant's store budget is exhausted.
+    QuotaExceeded(String),
+}
+
+/// What a `submit` request came back as.
+#[derive(Clone, Debug)]
+pub enum SubmitOutcome {
+    /// Admitted.  `cached` means the result cache will answer the wait
+    /// without any device work.
+    Ticket(RemoteTicket, bool),
+    /// Shed: the session's global admission queue is saturated.
+    Busy(String),
+    /// Shed: the tenant's inflight-submit budget is exhausted.
+    QuotaExceeded(String),
+}
+
+/// A redeemed result.
+#[derive(Clone, Debug)]
+pub struct RemoteCompletion {
+    pub c: Matrix,
+    pub tau: f32,
+    pub valid_ratio: f64,
+    /// Whether redeeming this ticket dispatched device work (`false`
+    /// for result-cache hits and batched followers).
+    pub executed: bool,
+    pub compute_secs: f64,
+    /// Kernel compiles the execution charged (0 on warm paths).
+    pub compiles: u64,
+}
+
+/// Incremental-update receipt, extended with the server's result-cache
+/// maintenance (how many cached products the repair invalidated vs.
+/// migrated untouched).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RemoteUpdateReport {
+    pub tiles_changed: usize,
+    pub norm_patched: bool,
+    pub schedules_repaired: usize,
+    pub products_added: usize,
+    pub products_removed: usize,
+    pub plans_migrated: usize,
+    pub invalidated: u64,
+    pub rekeyed: u64,
+}
+
+/// Server + session counter snapshot ([`ServeClient::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RemoteStats {
+    pub requests: u64,
+    pub executed: u64,
+    pub batched: u64,
+    pub shed_busy: u64,
+    pub shed_quota: u64,
+    pub result_cache_hits: u64,
+    pub result_cache_misses: u64,
+    pub result_cache_invalidations: u64,
+    pub result_cache_rekeys: u64,
+    pub result_cache_len: u64,
+    pub store_puts: u64,
+    pub store_dedup_hits: u64,
+    pub store_resident_bytes: u64,
+}
+
+/// One tenant connection to a [`crate::serve::ServeServer`].
+pub struct ServeClient {
+    stream: TcpStream,
+    /// Server device count (from the hello reply).
+    pub devices: usize,
+    /// Server tile size — update payloads carry `lonum²` f32 per tile.
+    pub lonum: usize,
+}
+
+impl ServeClient {
+    /// Connect and handshake as tenant `client`.
+    pub fn connect<A: ToSocketAddrs>(addr: A, client: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut c = ServeClient {
+            stream,
+            devices: 0,
+            lonum: 0,
+        };
+        let reply = c.call(
+            FrameKind::Hello,
+            &[("client", Value::String(client.to_string()))],
+        )?;
+        let p = expect(reply, FrameKind::HelloOk)?;
+        let version = proto::get_u64(&p, "version")?;
+        if version != proto::VERSION as u64 {
+            return Err(Error::Protocol(format!(
+                "server speaks protocol version {version}, client wants {}",
+                proto::VERSION
+            )));
+        }
+        c.devices = proto::get_u64(&p, "devices")? as usize;
+        c.lonum = proto::get_u64(&p, "lonum")? as usize;
+        Ok(c)
+    }
+
+    fn call(&mut self, kind: FrameKind, fields: &[(&str, Value)]) -> Result<Frame> {
+        let mut m = std::collections::BTreeMap::new();
+        for (k, v) in fields {
+            m.insert((*k).to_string(), v.clone());
+        }
+        proto::write_frame(&mut self.stream, kind, &Value::Object(m))?;
+        proto::read_frame(&mut self.stream)
+    }
+
+    /// Register an operand.
+    pub fn put(&mut self, m: &Matrix) -> Result<PutOutcome> {
+        let reply = self.call(
+            FrameKind::Put,
+            &[
+                ("rows", num(m.rows() as u64)),
+                ("cols", num(m.cols() as u64)),
+                ("data", Value::String(proto::encode_f32s(m.data()))),
+            ],
+        )?;
+        match reply.kind {
+            FrameKind::PutOk => Ok(PutOutcome::Ok(RemoteOperandId(proto::get_u64(
+                &reply.payload,
+                "op",
+            )?))),
+            FrameKind::QuotaExceeded => Ok(PutOutcome::QuotaExceeded(message(&reply.payload))),
+            _ => Err(unexpected(&reply, FrameKind::PutOk)),
+        }
+    }
+
+    /// Prepare a multiply plan.
+    pub fn prepare(
+        &mut self,
+        a: RemoteOperandId,
+        b: RemoteOperandId,
+        approx: RemoteApprox,
+    ) -> Result<RemotePlan> {
+        let (mode, value) = match approx {
+            RemoteApprox::Tau(t) => ("tau", t as f64),
+            RemoteApprox::ValidRatio(r) => ("valid_ratio", r),
+        };
+        let p = expect(
+            self.call(
+                FrameKind::Prepare,
+                &[
+                    ("a", num(a.0)),
+                    ("b", num(b.0)),
+                    ("approx", Value::String(mode.to_string())),
+                    ("value", Value::Number(value)),
+                ],
+            )?,
+            FrameKind::PrepareOk,
+        )?;
+        Ok(RemotePlan {
+            id: RemotePlanId(proto::get_u64(&p, "plan")?),
+            tau: proto::get_f64(&p, "tau")? as f32,
+            rows: proto::get_u64(&p, "rows")? as usize,
+            cols: proto::get_u64(&p, "cols")? as usize,
+        })
+    }
+
+    /// Submit a prepared plan at normal priority.
+    pub fn submit(&mut self, plan: RemotePlanId) -> Result<SubmitOutcome> {
+        self.submit_with(plan, "normal")
+    }
+
+    /// Submit with an explicit priority class (`low | normal | high`).
+    pub fn submit_with(&mut self, plan: RemotePlanId, priority: &str) -> Result<SubmitOutcome> {
+        let reply = self.call(
+            FrameKind::Submit,
+            &[
+                ("plan", num(plan.0)),
+                ("priority", Value::String(priority.to_string())),
+            ],
+        )?;
+        match reply.kind {
+            FrameKind::SubmitOk => Ok(SubmitOutcome::Ticket(
+                RemoteTicket(proto::get_u64(&reply.payload, "ticket")?),
+                proto::get_bool(&reply.payload, "cached")?,
+            )),
+            FrameKind::Busy => Ok(SubmitOutcome::Busy(message(&reply.payload))),
+            FrameKind::QuotaExceeded => Ok(SubmitOutcome::QuotaExceeded(message(&reply.payload))),
+            _ => Err(unexpected(&reply, FrameKind::SubmitOk)),
+        }
+    }
+
+    /// Block for a submitted ticket's product.
+    pub fn wait(&mut self, ticket: RemoteTicket) -> Result<RemoteCompletion> {
+        let p = expect(
+            self.call(FrameKind::Wait, &[("ticket", num(ticket.0))])?,
+            FrameKind::ResultOk,
+        )?;
+        let rows = proto::get_u64(&p, "rows")? as usize;
+        let cols = proto::get_u64(&p, "cols")? as usize;
+        let data = proto::decode_f32s(proto::get_str(&p, "data")?)?;
+        Ok(RemoteCompletion {
+            c: Matrix::from_vec(rows, cols, data)?,
+            tau: proto::get_f64(&p, "tau")? as f32,
+            valid_ratio: proto::get_f64(&p, "valid_ratio")?,
+            executed: proto::get_bool(&p, "executed")?,
+            compute_secs: proto::get_f64(&p, "compute_secs")?,
+            compiles: proto::get_u64(&p, "compiles")?,
+        })
+    }
+
+    /// Delta-update tiles of a registered operand (`data` holds one
+    /// row-major `lonum²` block per entry of `changed`, concatenated).
+    pub fn update(
+        &mut self,
+        op: RemoteOperandId,
+        changed: &[(usize, usize)],
+        data: &[f32],
+    ) -> Result<RemoteUpdateReport> {
+        let tiles = Value::Array(
+            changed
+                .iter()
+                .map(|&(ti, tj)| Value::Array(vec![num(ti as u64), num(tj as u64)]))
+                .collect(),
+        );
+        let p = expect(
+            self.call(
+                FrameKind::Update,
+                &[
+                    ("op", num(op.0)),
+                    ("tiles", tiles),
+                    ("data", Value::String(proto::encode_f32s(data))),
+                ],
+            )?,
+            FrameKind::UpdateOk,
+        )?;
+        Ok(RemoteUpdateReport {
+            tiles_changed: proto::get_u64(&p, "tiles_changed")? as usize,
+            norm_patched: proto::get_bool(&p, "norm_patched")?,
+            schedules_repaired: proto::get_u64(&p, "schedules_repaired")? as usize,
+            products_added: proto::get_u64(&p, "products_added")? as usize,
+            products_removed: proto::get_u64(&p, "products_removed")? as usize,
+            plans_migrated: proto::get_u64(&p, "plans_migrated")? as usize,
+            invalidated: proto::get_u64(&p, "invalidated")?,
+            rekeyed: proto::get_u64(&p, "rekeyed")?,
+        })
+    }
+
+    /// Drop one reference to a registered operand.
+    pub fn release(&mut self, op: RemoteOperandId) -> Result<()> {
+        expect(
+            self.call(FrameKind::Release, &[("op", num(op.0))])?,
+            FrameKind::ReleaseOk,
+        )?;
+        Ok(())
+    }
+
+    /// Drop one reference to a prepared plan.
+    pub fn release_plan(&mut self, plan: RemotePlanId) -> Result<()> {
+        expect(
+            self.call(FrameKind::ReleasePlan, &[("plan", num(plan.0))])?,
+            FrameKind::ReleaseOk,
+        )?;
+        Ok(())
+    }
+
+    /// Server + session counter snapshot.
+    pub fn stats(&mut self) -> Result<RemoteStats> {
+        let p = expect(self.call(FrameKind::Stats, &[])?, FrameKind::StatsOk)?;
+        Ok(RemoteStats {
+            requests: proto::get_u64(&p, "requests")?,
+            executed: proto::get_u64(&p, "executed")?,
+            batched: proto::get_u64(&p, "batched")?,
+            shed_busy: proto::get_u64(&p, "shed_busy")?,
+            shed_quota: proto::get_u64(&p, "shed_quota")?,
+            result_cache_hits: proto::get_u64(&p, "result_cache_hits")?,
+            result_cache_misses: proto::get_u64(&p, "result_cache_misses")?,
+            result_cache_invalidations: proto::get_u64(&p, "result_cache_invalidations")?,
+            result_cache_rekeys: proto::get_u64(&p, "result_cache_rekeys")?,
+            result_cache_len: proto::get_u64(&p, "result_cache_len")?,
+            store_puts: proto::get_u64(&p, "store_puts")?,
+            store_dedup_hits: proto::get_u64(&p, "store_dedup_hits")?,
+            store_resident_bytes: proto::get_u64(&p, "store_resident_bytes")?,
+        })
+    }
+}
+
+fn num(x: u64) -> Value {
+    Value::Number(x as f64)
+}
+
+fn message(p: &Value) -> String {
+    p.get_opt("message")
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("(no message)")
+        .to_string()
+}
+
+/// Unwrap a reply of the expected kind; server errors become typed
+/// session errors, anything else is a protocol violation.
+fn expect(frame: Frame, want: FrameKind) -> Result<Value> {
+    if frame.kind == want {
+        return Ok(frame.payload);
+    }
+    Err(unexpected(&frame, want))
+}
+
+fn unexpected(frame: &Frame, want: FrameKind) -> Error {
+    match frame.kind {
+        FrameKind::ErrorReply => Error::Session(format!("server: {}", message(&frame.payload))),
+        FrameKind::Busy => Error::Session(format!("server busy: {}", message(&frame.payload))),
+        FrameKind::QuotaExceeded => {
+            Error::Session(format!("quota exceeded: {}", message(&frame.payload)))
+        }
+        got => Error::Protocol(format!("expected {want:?} reply, got {got:?}")),
+    }
+}

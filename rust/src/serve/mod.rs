@@ -1,0 +1,60 @@
+//! Network serving tier — the session API over a framed TCP protocol.
+//!
+//! Serving over the wire:
+//!
+//! * [`proto`] — the length-prefixed frame codec.  A 12-byte header
+//!   (magic `0x4353_4E50`, version, kind tag, payload length — the same
+//!   validate-before-trust discipline as [`crate::store`]'s object
+//!   headers) frames a compact-JSON payload ([`crate::json`]); f32 data
+//!   crosses as IEEE-754 bit-pattern hex so products stay *bitwise*
+//!   identical to in-process execution.
+//! * [`server`] — [`ServeServer`]: one resident
+//!   [`SpammSession`](crate::coordinator::SpammSession) (and its
+//!   persistent per-device worker runtimes) behind any number of tenant
+//!   connections, with per-tenant store-bytes and inflight-depth quotas
+//!   enforced at admission, plan-aware batching of concurrent same-plan
+//!   submits, and a fingerprint-keyed result cache with repair-aware
+//!   invalidation on incremental updates.
+//! * [`cache`] — the [`ResultCache`] keyed on
+//!   `derive("serve.result", [fa, fb], [τ, density])`.
+//! * [`client`] — [`ServeClient`]: the blocking tenant-side API with
+//!   typed shed outcomes (`Busy` / `QuotaExceeded` are values, not
+//!   errors; a shed never costs the connection).
+//!
+//! ```no_run
+//! # use cuspamm::serve::{ServeClient, RemoteApprox, SubmitOutcome};
+//! # use cuspamm::matrix::Matrix;
+//! # fn main() -> cuspamm::error::Result<()> {
+//! let mut client = ServeClient::connect("127.0.0.1:7477", "tenant-a")?;
+//! let a = match client.put(&Matrix::randn(256, 256, 1))? {
+//!     cuspamm::serve::PutOutcome::Ok(id) => id,
+//!     cuspamm::serve::PutOutcome::QuotaExceeded(m) => panic!("over budget: {m}"),
+//! };
+//! let b = match client.put(&Matrix::randn(256, 256, 2))? {
+//!     cuspamm::serve::PutOutcome::Ok(id) => id,
+//!     cuspamm::serve::PutOutcome::QuotaExceeded(m) => panic!("over budget: {m}"),
+//! };
+//! let plan = client.prepare(a, b, RemoteApprox::Tau(0.05))?;
+//! match client.submit(plan.id)? {
+//!     SubmitOutcome::Ticket(t, _cached) => {
+//!         let done = client.wait(t)?;
+//!         println!("C is {}x{}, executed={}", done.c.rows(), done.c.cols(), done.executed);
+//!     }
+//!     SubmitOutcome::Busy(m) => println!("shed, retry later: {m}"),
+//!     SubmitOutcome::QuotaExceeded(m) => println!("over budget: {m}"),
+//! }
+//! # Ok(()) }
+//! ```
+
+pub mod cache;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use cache::{result_key, CachedResult, ResultCache};
+pub use client::{
+    PutOutcome, RemoteApprox, RemoteCompletion, RemoteOperandId, RemotePlan, RemotePlanId,
+    RemoteStats, RemoteTicket, RemoteUpdateReport, ServeClient, SubmitOutcome,
+};
+pub use proto::{Frame, FrameKind, MAX_PAYLOAD};
+pub use server::ServeServer;

@@ -1,0 +1,430 @@
+//! Framed wire protocol for the network serving tier.
+//!
+//! Every message on the wire is one *frame*: a fixed 12-byte header
+//! followed by a JSON payload (the in-tree [`crate::json`] substrate —
+//! serde is not in the offline crate set).  The header mirrors the
+//! object-header discipline of [`crate::store`]: magic, schema version,
+//! and a kind tag are checked *before* any payload byte is trusted, and
+//! the declared length is bounds-checked before allocation.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   0x4353_4E50  ("CSNP", little-endian)
+//! 4       2     version 1            (little-endian)
+//! 6       1     kind    FrameKind tag
+//! 7       1     reserved (must be 0)
+//! 8       4     payload length in bytes (little-endian, ≤ 64 MiB)
+//! 12      len   payload: UTF-8 JSON
+//! ```
+//!
+//! Decoding failures are *typed*: a truncated header or payload, a wrong
+//! magic, an unsupported version, an unknown kind tag, an oversized
+//! length prefix, or an unparseable payload each surface as
+//! [`Error::Protocol`] — never a panic, never an unbounded read.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Frame magic: `"CSNP"` (cuSpAMM Network Protocol) as little-endian u32.
+pub const MAGIC: u32 = 0x4353_4E50;
+
+/// Wire schema version.  Bumped on any header or payload-shape change;
+/// a server rejects frames from a different version with a typed error.
+pub const VERSION: u16 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Hard ceiling on a frame payload.  The length prefix is validated
+/// against this *before* the payload buffer is allocated, so a hostile
+/// or corrupt length cannot trigger an outsized allocation.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+
+/// Message kind.  Requests use the low tag space, replies the high
+/// space (bit 7 set), and shedding/error replies the 0xE0 block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FrameKind {
+    /// Client handshake: names the tenant; must precede other requests.
+    Hello,
+    /// Register an operand matrix.
+    Put,
+    /// Prepare a multiply plan over two registered operands.
+    Prepare,
+    /// Submit a prepared plan for execution.
+    Submit,
+    /// Block for a submitted ticket's result.
+    Wait,
+    /// Delta-update a registered operand's tiles.
+    Update,
+    /// Drop one reference to a registered operand.
+    Release,
+    /// Drop one reference to a prepared plan.
+    ReleasePlan,
+    /// Server + session counters snapshot.
+    Stats,
+    /// Reply to [`FrameKind::Hello`].
+    HelloOk,
+    /// Reply to [`FrameKind::Put`].
+    PutOk,
+    /// Reply to [`FrameKind::Prepare`].
+    PrepareOk,
+    /// Reply to [`FrameKind::Submit`]: the ticket was admitted.
+    SubmitOk,
+    /// Reply to [`FrameKind::Wait`]: the product matrix.
+    ResultOk,
+    /// Reply to [`FrameKind::Update`]: the incremental-update receipt.
+    UpdateOk,
+    /// Reply to [`FrameKind::Release`] / [`FrameKind::ReleasePlan`].
+    ReleaseOk,
+    /// Reply to [`FrameKind::Stats`].
+    StatsOk,
+    /// Request failed; the connection stays usable.
+    ErrorReply,
+    /// Graceful shed: the admission queue is saturated.  Not an error —
+    /// the client may retry; the connection stays open.
+    Busy,
+    /// Graceful shed: the request would exceed the tenant's budget.
+    QuotaExceeded,
+}
+
+impl FrameKind {
+    /// The on-wire tag byte.
+    pub fn to_tag(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0x01,
+            FrameKind::Put => 0x02,
+            FrameKind::Prepare => 0x03,
+            FrameKind::Submit => 0x04,
+            FrameKind::Wait => 0x05,
+            FrameKind::Update => 0x06,
+            FrameKind::Release => 0x07,
+            FrameKind::ReleasePlan => 0x08,
+            FrameKind::Stats => 0x09,
+            FrameKind::HelloOk => 0x81,
+            FrameKind::PutOk => 0x82,
+            FrameKind::PrepareOk => 0x83,
+            FrameKind::SubmitOk => 0x84,
+            FrameKind::ResultOk => 0x85,
+            FrameKind::UpdateOk => 0x86,
+            FrameKind::ReleaseOk => 0x87,
+            FrameKind::StatsOk => 0x88,
+            FrameKind::ErrorReply => 0xE0,
+            FrameKind::Busy => 0xE1,
+            FrameKind::QuotaExceeded => 0xE2,
+        }
+    }
+
+    /// Decode a tag byte; unknown tags are a typed protocol error.
+    pub fn from_tag(tag: u8) -> Result<FrameKind> {
+        Ok(match tag {
+            0x01 => FrameKind::Hello,
+            0x02 => FrameKind::Put,
+            0x03 => FrameKind::Prepare,
+            0x04 => FrameKind::Submit,
+            0x05 => FrameKind::Wait,
+            0x06 => FrameKind::Update,
+            0x07 => FrameKind::Release,
+            0x08 => FrameKind::ReleasePlan,
+            0x09 => FrameKind::Stats,
+            0x81 => FrameKind::HelloOk,
+            0x82 => FrameKind::PutOk,
+            0x83 => FrameKind::PrepareOk,
+            0x84 => FrameKind::SubmitOk,
+            0x85 => FrameKind::ResultOk,
+            0x86 => FrameKind::UpdateOk,
+            0x87 => FrameKind::ReleaseOk,
+            0x88 => FrameKind::StatsOk,
+            0xE0 => FrameKind::ErrorReply,
+            0xE1 => FrameKind::Busy,
+            0xE2 => FrameKind::QuotaExceeded,
+            _ => {
+                return Err(Error::Protocol(format!(
+                    "unknown frame kind tag 0x{tag:02x}"
+                )))
+            }
+        })
+    }
+
+    /// Every kind, for conformance sweeps.
+    pub fn all() -> &'static [FrameKind] {
+        &[
+            FrameKind::Hello,
+            FrameKind::Put,
+            FrameKind::Prepare,
+            FrameKind::Submit,
+            FrameKind::Wait,
+            FrameKind::Update,
+            FrameKind::Release,
+            FrameKind::ReleasePlan,
+            FrameKind::Stats,
+            FrameKind::HelloOk,
+            FrameKind::PutOk,
+            FrameKind::PrepareOk,
+            FrameKind::SubmitOk,
+            FrameKind::ResultOk,
+            FrameKind::UpdateOk,
+            FrameKind::ReleaseOk,
+            FrameKind::StatsOk,
+            FrameKind::ErrorReply,
+            FrameKind::Busy,
+            FrameKind::QuotaExceeded,
+        ]
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Value,
+}
+
+/// Encode a frame into a byte buffer (header + compact JSON payload).
+pub fn encode_frame(kind: FrameKind, payload: &Value) -> Result<Vec<u8>> {
+    let body = payload.to_json().into_bytes();
+    if body.len() > MAX_PAYLOAD as usize {
+        return Err(Error::Protocol(format!(
+            "payload of {} bytes exceeds the {} byte frame ceiling",
+            body.len(),
+            MAX_PAYLOAD
+        )));
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind.to_tag());
+    out.push(0);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &Value) -> Result<()> {
+    let bytes = encode_frame(kind, payload)?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Validate a 12-byte header; returns `(kind, payload_len)`.
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(FrameKind, usize)> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(Error::Protocol(format!(
+            "bad frame magic 0x{magic:08x} (want 0x{MAGIC:08x})"
+        )));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(Error::Protocol(format!(
+            "unsupported protocol version {version} (want {VERSION})"
+        )));
+    }
+    let kind = FrameKind::from_tag(h[6])?;
+    if h[7] != 0 {
+        return Err(Error::Protocol(format!(
+            "non-zero reserved header byte 0x{:02x}",
+            h[7]
+        )));
+    }
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(Error::Protocol(format!(
+            "frame length {len} exceeds the {MAX_PAYLOAD} byte ceiling"
+        )));
+    }
+    Ok((kind, len as usize))
+}
+
+/// Read exactly `buf.len()` bytes, mapping any short read to a typed
+/// protocol error (`what` names the part that truncated).
+fn read_exact_proto<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(Error::Protocol(format!(
+                    "truncated {what}: got {filled} of {} bytes",
+                    buf.len()
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Protocol(format!("read failed mid-{what}: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame.  A clean end-of-stream *at a frame boundary* returns
+/// `Ok(None)` (the peer hung up between messages); any mid-frame
+/// truncation or corruption is a typed [`Error::Protocol`].
+pub fn try_read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte decides between clean EOF and truncation.
+    let mut first = 0;
+    loop {
+        match r.read(&mut header[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(n) => {
+                first = n;
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                return Err(Error::Protocol(format!(
+                    "read failed at frame boundary: {e}"
+                )))
+            }
+        }
+    }
+    debug_assert_eq!(first, 1);
+    read_exact_proto(r, &mut header[1..], "frame header")?;
+    let (kind, len) = decode_header(&header)?;
+    let mut body = vec![0u8; len];
+    read_exact_proto(r, &mut body, "frame payload")?;
+    let text = std::str::from_utf8(&body)
+        .map_err(|_| Error::Protocol("frame payload is not UTF-8".into()))?;
+    let payload = Value::parse(text)
+        .map_err(|e| Error::Protocol(format!("unparseable frame payload: {e}")))?;
+    Ok(Some(Frame { kind, payload }))
+}
+
+/// Read one frame, treating end-of-stream as an error (for clients,
+/// which always expect a reply).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    try_read_frame(r)?
+        .ok_or_else(|| Error::Protocol("connection closed while awaiting a frame".into()))
+}
+
+// ---------------------------------------------------------------------
+// f32 payload codec
+// ---------------------------------------------------------------------
+
+/// Encode an f32 slice as fixed-width hex of the IEEE-754 bit patterns
+/// (8 hex chars per element).  JSON numbers are f64 and cannot round-trip
+/// every f32 bit pattern textually; the bit-level codec keeps results
+/// bitwise identical across the wire.
+pub fn encode_f32s(data: &[f32]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(data.len() * 8);
+    for x in data {
+        let _ = write!(s, "{:08x}", x.to_bits());
+    }
+    s
+}
+
+/// Decode [`encode_f32s`] output; length and digit errors are typed.
+pub fn decode_f32s(s: &str) -> Result<Vec<f32>> {
+    let b = s.as_bytes();
+    if b.len() % 8 != 0 {
+        return Err(Error::Protocol(format!(
+            "f32 hex payload length {} is not a multiple of 8",
+            b.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(b.len() / 8);
+    for chunk in b.chunks_exact(8) {
+        let text = std::str::from_utf8(chunk)
+            .map_err(|_| Error::Protocol("f32 hex payload is not ASCII".into()))?;
+        let bits = u32::from_str_radix(text, 16)
+            .map_err(|_| Error::Protocol(format!("bad f32 hex chunk '{text}'")))?;
+        out.push(f32::from_bits(bits));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// payload accessors (shared by client and server)
+// ---------------------------------------------------------------------
+
+/// Object field as u64 (wire ids are small counters, exact under f64).
+pub fn get_u64(v: &Value, key: &str) -> Result<u64> {
+    let x = v.get(key)?.as_f64()?;
+    if !(0.0..=9.007_199_254_740_992e15).contains(&x) || x.fract() != 0.0 {
+        return Err(Error::Protocol(format!(
+            "field '{key}' is not an exact non-negative integer: {x}"
+        )));
+    }
+    Ok(x as u64)
+}
+
+/// Object field as f64.
+pub fn get_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)?.as_f64()
+}
+
+/// Object field as str.
+pub fn get_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.get(key)?.as_str()
+}
+
+/// Object field as bool.
+pub fn get_bool(v: &Value, key: &str) -> Result<bool> {
+    match v.get(key)? {
+        Value::Bool(b) => Ok(*b),
+        other => Err(Error::Protocol(format!(
+            "field '{key}' is not a bool: {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn tag_roundtrip_every_kind() {
+        for &k in FrameKind::all() {
+            assert_eq!(FrameKind::from_tag(k.to_tag()).unwrap(), k);
+        }
+        assert!(FrameKind::from_tag(0x00).is_err());
+        assert!(FrameKind::from_tag(0x7f).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".into(), Value::Number(7.0));
+        let payload = Value::Object(obj);
+        let bytes = encode_frame(FrameKind::Put, &payload).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + payload.to_json().len());
+        let f = read_frame(&mut &bytes[..]).unwrap();
+        assert_eq!(f.kind, FrameKind::Put);
+        assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn f32_codec_bitwise() {
+        let data = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-12, 1e30];
+        let dec = decode_f32s(&encode_f32s(&data)).unwrap();
+        assert_eq!(data.len(), dec.len());
+        for (a, b) in data.iter().zip(&dec) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_f32s("abc").is_err());
+        assert!(decode_f32s("zzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_alloc() {
+        let mut bytes = encode_frame(FrameKind::Stats, &Value::Object(BTreeMap::new())).unwrap();
+        bytes[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_error() {
+        assert!(try_read_frame(&mut &[][..]).unwrap().is_none());
+        let bytes = encode_frame(FrameKind::Stats, &Value::Object(BTreeMap::new())).unwrap();
+        for cut in 1..bytes.len() {
+            let err = try_read_frame(&mut &bytes[..cut]).unwrap_err();
+            assert!(matches!(err, Error::Protocol(_)), "cut={cut}: {err}");
+        }
+    }
+}

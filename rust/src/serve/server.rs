@@ -1,0 +1,893 @@
+//! The serving tier's TCP server: one resident [`SpammSession`] behind a
+//! framed wire protocol, multi-tenant admission quotas, plan-aware
+//! batching, and the fingerprint-keyed result cache.
+//!
+//! Request lifecycle (mirroring the in-process session API): `hello` →
+//! `put` → `prepare` → `submit` → `wait`, with `update` / `release` /
+//! `release-plan` / `stats` interleaved freely.  Admission control is
+//! per-tenant (the `hello` client name): a store-bytes budget gates
+//! `put`, an inflight-submit depth gates `submit`, and both shed with a
+//! *typed* reply ([`FrameKind::QuotaExceeded`]) on the open connection —
+//! the server never drops a connection to shed load.  Saturation of the
+//! session's global admission queue sheds as [`FrameKind::Busy`].
+//!
+//! Same-plan submits racing through the server coalesce: the first
+//! becomes the *leader* (it occupies the session queue and reports
+//! `executed = true`), later ones attach as followers and are answered
+//! from the leader's completion (`executed = false`).  Completed
+//! products land in the [`ResultCache`] keyed on
+//! `derive("serve.result", [fa, fb], [τ, density])`; a warm re-submit is
+//! answered at admission with zero device work.  Incremental operand
+//! updates invalidate *only* the cached products a schedule repair
+//! actually changed — untouched entries migrate to their post-update
+//! keys (see [`ServeServer`]'s update handling).
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::SpammConfig;
+use crate::coordinator::{Approx, OperandId, PlanId, Priority, SpammSession, Ticket};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::matrix::Matrix;
+use crate::runtime::ArtifactBundle;
+use crate::serve::cache::{result_key, CachedResult, ResultCache};
+use crate::serve::proto::{self, Frame, FrameKind};
+use crate::spamm::cache::Fingerprint;
+use crate::spamm::schedule::Schedule;
+use crate::telemetry;
+
+/// Result-cache capacity when enabled (entries, FIFO-evicted).
+const RESULT_CACHE_CAPACITY: usize = 256;
+
+/// Per-connection read poll interval — bounds shutdown latency while a
+/// client is idle (reads retry on timeout until the stop flag is set).
+const READ_POLL: Duration = Duration::from_millis(50);
+
+#[derive(Default)]
+struct Tenant {
+    store_bytes: usize,
+    inflight: usize,
+}
+
+struct OpEntry {
+    id: OperandId,
+    bytes: usize,
+    tenant: String,
+}
+
+struct PlanMeta {
+    id: PlanId,
+    a: OperandId,
+    b: OperandId,
+    key: Fingerprint,
+    tenant: String,
+}
+
+/// One completed served product, shareable across batched waiters.
+#[derive(Clone)]
+struct ServedResult {
+    c: Matrix,
+    tau: f32,
+    valid_ratio: f64,
+    compute_secs: f64,
+    compiles: u64,
+}
+
+/// In-flight same-plan batch: the leader holds the session ticket, all
+/// waiters rendezvous on the condvar.
+struct Batch {
+    key: Fingerprint,
+    state: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct BatchState {
+    /// Present until a waiter claims the blocking `session.wait`.
+    session_ticket: Option<Ticket>,
+    done: Option<std::result::Result<ServedResult, String>>,
+}
+
+enum TicketState {
+    /// Answered from the result cache at submit time.
+    Cached(CachedResult),
+    Pending {
+        batch: Arc<Batch>,
+        leader: bool,
+        tenant: String,
+    },
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    executed: AtomicU64,
+    batched: AtomicU64,
+    shed_busy: AtomicU64,
+    shed_quota: AtomicU64,
+}
+
+struct Inner {
+    session: SpammSession,
+    cfg: SpammConfig,
+    cache: Mutex<ResultCache>,
+    tenants: Mutex<HashMap<String, Tenant>>,
+    ops: Mutex<HashMap<u64, OpEntry>>,
+    plans: Mutex<HashMap<u64, PlanMeta>>,
+    tickets: Mutex<HashMap<u64, TicketState>>,
+    pending: Mutex<HashMap<Fingerprint, Arc<Batch>>>,
+    next_op: AtomicU64,
+    next_plan: AtomicU64,
+    next_ticket: AtomicU64,
+    counters: Counters,
+}
+
+/// The network serving tier.  Owns one [`SpammSession`] (and through it
+/// the persistent per-device worker runtimes) and serves any number of
+/// concurrent framed-protocol connections.
+pub struct ServeServer {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ServeServer {
+    /// Build the session and start accepting on `addr` (use
+    /// `"127.0.0.1:0"` for an ephemeral test port).
+    pub fn start(bundle: &ArtifactBundle, cfg: SpammConfig, addr: &str) -> Result<ServeServer> {
+        let session = SpammSession::new(bundle, cfg.clone())?;
+        let capacity = if cfg.result_cache_enabled {
+            RESULT_CACHE_CAPACITY
+        } else {
+            0
+        };
+        let inner = Arc::new(Inner {
+            session,
+            cfg,
+            cache: Mutex::new(ResultCache::new(capacity)),
+            tenants: Mutex::new(HashMap::new()),
+            ops: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
+            tickets: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
+            next_op: AtomicU64::new(1),
+            next_plan: AtomicU64::new(1),
+            next_ticket: AtomicU64::new(1),
+            counters: Counters::default(),
+        });
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let inner = inner.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("spamm-serve-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let inner = inner.clone();
+                        let stop = stop.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("spamm-serve-conn".into())
+                            .spawn(move || serve_connection(inner, stream, stop));
+                        if let Ok(h) = handle {
+                            conns.lock().unwrap().push(h);
+                        }
+                    }
+                })?
+        };
+        Ok(ServeServer {
+            inner,
+            addr: local,
+            stop,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (for clients to connect to).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct access to the underlying session (in-process comparisons).
+    pub fn session(&self) -> &SpammSession {
+        &self.inner.session
+    }
+
+    /// Stop accepting, drain connection threads, and shut down.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeServer {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+// ---------------------------------------------------------------------
+// connection loop
+// ---------------------------------------------------------------------
+
+enum Fill {
+    Full,
+    Eof(usize),
+    Stopped,
+}
+
+/// Read exactly `buf.len()` bytes, retrying on poll timeouts until the
+/// stop flag is raised (so shutdown never waits on an idle client).
+fn fill(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<Fill> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(Fill::Eof(filled)),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(Fill::Stopped);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Protocol(format!("connection read failed: {e}"))),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+fn serve_connection(inner: Arc<Inner>, mut stream: TcpStream, stop: Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    // The tenant this connection authenticated as (via `hello`).
+    let mut tenant: Option<String> = None;
+    loop {
+        let frame = match read_request(&mut stream, &stop) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                // Framing is lost on a corrupt stream: answer with a
+                // typed error, then close (resync is impossible).
+                let _ = send(&mut stream, FrameKind::ErrorReply, &[(
+                    "message",
+                    Value::String(e.to_string()),
+                )]);
+                break;
+            }
+        };
+        inner.counters.requests.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("serve.requests", 1);
+        let reply = dispatch(&inner, &mut tenant, &frame);
+        let (kind, payload) = match reply {
+            Ok(r) => r,
+            Err(e) => (
+                FrameKind::ErrorReply,
+                object(&[("message", Value::String(e.to_string()))]),
+            ),
+        };
+        if proto::write_frame(&mut stream, kind, &payload).is_err() {
+            break;
+        }
+    }
+}
+
+fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Frame>> {
+    let mut header = [0u8; proto::HEADER_LEN];
+    match fill(stream, &mut header, stop)? {
+        Fill::Eof(0) | Fill::Stopped => return Ok(None),
+        Fill::Eof(n) => {
+            return Err(Error::Protocol(format!(
+                "truncated frame header: got {n} of {} bytes",
+                proto::HEADER_LEN
+            )))
+        }
+        Fill::Full => {}
+    }
+    let (kind, len) = proto::decode_header(&header)?;
+    let mut body = vec![0u8; len];
+    match fill(stream, &mut body, stop)? {
+        Fill::Full => {}
+        Fill::Stopped => return Ok(None),
+        Fill::Eof(n) => {
+            return Err(Error::Protocol(format!(
+                "truncated frame payload: got {n} of {len} bytes"
+            )))
+        }
+    }
+    let text = std::str::from_utf8(&body)
+        .map_err(|_| Error::Protocol("frame payload is not UTF-8".into()))?;
+    let payload = Value::parse(text)
+        .map_err(|e| Error::Protocol(format!("unparseable frame payload: {e}")))?;
+    Ok(Some(Frame { kind, payload }))
+}
+
+fn send(stream: &mut TcpStream, kind: FrameKind, fields: &[(&str, Value)]) -> Result<()> {
+    proto::write_frame(stream, kind, &object(fields))
+}
+
+fn object(fields: &[(&str, Value)]) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert((*k).to_string(), v.clone());
+    }
+    Value::Object(m)
+}
+
+fn num(x: u64) -> Value {
+    Value::Number(x as f64)
+}
+
+// ---------------------------------------------------------------------
+// request dispatch
+// ---------------------------------------------------------------------
+
+type Reply = (FrameKind, Value);
+
+fn dispatch(inner: &Inner, tenant: &mut Option<String>, frame: &Frame) -> Result<Reply> {
+    if frame.kind == FrameKind::Hello {
+        return handle_hello(inner, tenant, &frame.payload);
+    }
+    let who = tenant
+        .clone()
+        .ok_or_else(|| Error::Protocol("hello required before other requests".into()))?;
+    match frame.kind {
+        FrameKind::Put => handle_put(inner, &who, &frame.payload),
+        FrameKind::Prepare => handle_prepare(inner, &who, &frame.payload),
+        FrameKind::Submit => handle_submit(inner, &who, &frame.payload),
+        FrameKind::Wait => handle_wait(inner, &who, &frame.payload),
+        FrameKind::Update => handle_update(inner, &who, &frame.payload),
+        FrameKind::Release => handle_release(inner, &who, &frame.payload),
+        FrameKind::ReleasePlan => handle_release_plan(inner, &who, &frame.payload),
+        FrameKind::Stats => handle_stats(inner),
+        other => Err(Error::Protocol(format!(
+            "unexpected frame kind {other:?} in a request position"
+        ))),
+    }
+}
+
+fn handle_hello(inner: &Inner, tenant: &mut Option<String>, p: &Value) -> Result<Reply> {
+    let client = proto::get_str(p, "client")?;
+    if client.is_empty() {
+        return Err(Error::Protocol("hello: empty client name".into()));
+    }
+    inner
+        .tenants
+        .lock()
+        .unwrap()
+        .entry(client.to_string())
+        .or_default();
+    *tenant = Some(client.to_string());
+    Ok((
+        FrameKind::HelloOk,
+        object(&[
+            ("version", num(proto::VERSION as u64)),
+            ("devices", num(inner.cfg.devices as u64)),
+            ("lonum", num(inner.cfg.lonum as u64)),
+        ]),
+    ))
+}
+
+fn handle_put(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let rows = proto::get_u64(p, "rows")? as usize;
+    let cols = proto::get_u64(p, "cols")? as usize;
+    let data = proto::decode_f32s(proto::get_str(p, "data")?)?;
+    let m = Matrix::from_vec(rows, cols, data)?;
+    let bytes = rows * cols * 4;
+    // Admission: the tenant's logical store budget (charged per put,
+    // refunded per release; session-level content dedup is invisible to
+    // the quota — admission accounts what the tenant asked to store).
+    let budget = inner.cfg.client_store_budget;
+    {
+        let mut tenants = inner.tenants.lock().unwrap();
+        let t = tenants.entry(who.to_string()).or_default();
+        if budget > 0 && t.store_bytes.saturating_add(bytes) > budget {
+            inner.counters.shed_quota.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().add("serve.shed_quota", 1);
+            return Ok((
+                FrameKind::QuotaExceeded,
+                object(&[(
+                    "message",
+                    Value::String(format!(
+                        "store budget exceeded: {} + {} > {} bytes",
+                        t.store_bytes, bytes, budget
+                    )),
+                )]),
+            ));
+        }
+        t.store_bytes += bytes;
+    }
+    let id = match inner.session.put(&m) {
+        Ok(id) => id,
+        Err(e) => {
+            let mut tenants = inner.tenants.lock().unwrap();
+            if let Some(t) = tenants.get_mut(who) {
+                t.store_bytes = t.store_bytes.saturating_sub(bytes);
+            }
+            return Err(e);
+        }
+    };
+    let wire = inner.next_op.fetch_add(1, Ordering::Relaxed);
+    inner.ops.lock().unwrap().insert(
+        wire,
+        OpEntry {
+            id,
+            bytes,
+            tenant: who.to_string(),
+        },
+    );
+    Ok((FrameKind::PutOk, object(&[("op", num(wire))])))
+}
+
+fn lookup_op(inner: &Inner, who: &str, wire: u64) -> Result<OperandId> {
+    let ops = inner.ops.lock().unwrap();
+    let e = ops
+        .get(&wire)
+        .ok_or_else(|| Error::Session(format!("operand {wire} not registered")))?;
+    if e.tenant != who {
+        return Err(Error::Session(format!(
+            "operand {wire} belongs to another tenant"
+        )));
+    }
+    Ok(e.id)
+}
+
+fn handle_prepare(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let a = lookup_op(inner, who, proto::get_u64(p, "a")?)?;
+    let b = lookup_op(inner, who, proto::get_u64(p, "b")?)?;
+    let approx = match proto::get_str(p, "approx")? {
+        "tau" => Approx::Tau(proto::get_f64(p, "value")? as f32),
+        "valid_ratio" => Approx::ValidRatio(proto::get_f64(p, "value")?),
+        other => {
+            return Err(Error::Protocol(format!(
+                "unknown approx mode '{other}' (tau | valid_ratio)"
+            )))
+        }
+    };
+    let plan = inner.session.prepare(a, b, approx)?;
+    let (tau, rows, cols) = inner.session.plan_info(plan)?;
+    let (fa, fb) = inner.session.plan_fingerprints(plan)?;
+    let (_, _, density) = inner.session.plan_schedule(plan)?;
+    let key = result_key(fa, fb, tau, density);
+    let wire = inner.next_plan.fetch_add(1, Ordering::Relaxed);
+    inner.plans.lock().unwrap().insert(
+        wire,
+        PlanMeta {
+            id: plan,
+            a,
+            b,
+            key,
+            tenant: who.to_string(),
+        },
+    );
+    Ok((
+        FrameKind::PrepareOk,
+        object(&[
+            ("plan", num(wire)),
+            ("tau", Value::Number(tau as f64)),
+            ("rows", num(rows as u64)),
+            ("cols", num(cols as u64)),
+        ]),
+    ))
+}
+
+fn handle_submit(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let wire_plan = proto::get_u64(p, "plan")?;
+    let priority = match p.get_opt("priority") {
+        Some(v) => Priority::parse(v.as_str()?)?,
+        None => Priority::default(),
+    };
+    let (plan_id, key) = {
+        let plans = inner.plans.lock().unwrap();
+        let meta = plans
+            .get(&wire_plan)
+            .ok_or_else(|| Error::Session(format!("plan {wire_plan} not prepared")))?;
+        if meta.tenant != who {
+            return Err(Error::Session(format!(
+                "plan {wire_plan} belongs to another tenant"
+            )));
+        }
+        (meta.id, meta.key)
+    };
+    // Result cache first: a warm hit costs no quota, no queue slot, no
+    // device work.
+    if let Some(hit) = inner.cache.lock().unwrap().get(&key).cloned() {
+        telemetry::global().add("serve.result_cache_hits", 1);
+        let ticket = inner.next_ticket.fetch_add(1, Ordering::Relaxed);
+        inner
+            .tickets
+            .lock()
+            .unwrap()
+            .insert(ticket, TicketState::Cached(hit));
+        return Ok((
+            FrameKind::SubmitOk,
+            object(&[("ticket", num(ticket)), ("cached", Value::Bool(true))]),
+        ));
+    }
+    // Per-tenant inflight depth (0 = unlimited).
+    let depth = inner.cfg.client_queue_depth;
+    {
+        let mut tenants = inner.tenants.lock().unwrap();
+        let t = tenants.entry(who.to_string()).or_default();
+        if depth > 0 && t.inflight >= depth {
+            inner.counters.shed_quota.fetch_add(1, Ordering::Relaxed);
+            telemetry::global().add("serve.shed_quota", 1);
+            return Ok((
+                FrameKind::QuotaExceeded,
+                object(&[(
+                    "message",
+                    Value::String(format!(
+                        "inflight budget exceeded: {} submits outstanding, depth {depth}",
+                        t.inflight
+                    )),
+                )]),
+            ));
+        }
+        t.inflight += 1;
+    }
+    // Plan-aware batching: coalesce with an in-flight submit of the same
+    // result key, else lead a new batch.  The pending map is held across
+    // the session submit so racing same-key submits coalesce
+    // deterministically instead of double-dispatching.
+    let mut pending = inner.pending.lock().unwrap();
+    let (batch, leader) = if let Some(b) = pending.get(&key) {
+        inner.counters.batched.fetch_add(1, Ordering::Relaxed);
+        telemetry::global().add("serve.batched", 1);
+        (b.clone(), false)
+    } else {
+        match inner.session.submit_with(plan_id, priority) {
+            Ok(t) => {
+                let b = Arc::new(Batch {
+                    key,
+                    state: Mutex::new(BatchState {
+                        session_ticket: Some(t),
+                        done: None,
+                    }),
+                    cv: Condvar::new(),
+                });
+                pending.insert(key, b.clone());
+                inner.counters.executed.fetch_add(1, Ordering::Relaxed);
+                telemetry::global().add("serve.executed", 1);
+                (b, true)
+            }
+            Err(e) => {
+                drop(pending);
+                tenant_dec_inflight(inner, who);
+                return match e {
+                    Error::Session(m) if m.contains("admission queue full") => {
+                        inner.counters.shed_busy.fetch_add(1, Ordering::Relaxed);
+                        telemetry::global().add("serve.shed_busy", 1);
+                        Ok((
+                            FrameKind::Busy,
+                            object(&[("message", Value::String(m))]),
+                        ))
+                    }
+                    other => Err(other),
+                };
+            }
+        }
+    };
+    drop(pending);
+    let ticket = inner.next_ticket.fetch_add(1, Ordering::Relaxed);
+    inner.tickets.lock().unwrap().insert(
+        ticket,
+        TicketState::Pending {
+            batch,
+            leader,
+            tenant: who.to_string(),
+        },
+    );
+    Ok((
+        FrameKind::SubmitOk,
+        object(&[("ticket", num(ticket)), ("cached", Value::Bool(false))]),
+    ))
+}
+
+fn tenant_dec_inflight(inner: &Inner, who: &str) {
+    let mut tenants = inner.tenants.lock().unwrap();
+    if let Some(t) = tenants.get_mut(who) {
+        t.inflight = t.inflight.saturating_sub(1);
+    }
+}
+
+fn handle_wait(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let wire = proto::get_u64(p, "ticket")?;
+    let state = inner
+        .tickets
+        .lock()
+        .unwrap()
+        .remove(&wire)
+        .ok_or_else(|| Error::Session(format!("ticket {wire} unknown or already redeemed")))?;
+    match state {
+        TicketState::Cached(hit) => Ok(result_reply(
+            &ServedResult {
+                c: hit.c,
+                tau: hit.tau,
+                valid_ratio: hit.valid_ratio,
+                compute_secs: 0.0,
+                compiles: 0,
+            },
+            false,
+        )),
+        TicketState::Pending {
+            batch,
+            leader,
+            tenant,
+        } => {
+            if tenant != who {
+                // Put it back: the ticket is not this tenant's to redeem.
+                inner.tickets.lock().unwrap().insert(
+                    wire,
+                    TicketState::Pending {
+                        batch,
+                        leader,
+                        tenant,
+                    },
+                );
+                return Err(Error::Session(format!(
+                    "ticket {wire} belongs to another tenant"
+                )));
+            }
+            let served = wait_batch(inner, &batch);
+            tenant_dec_inflight(inner, who);
+            match served {
+                Ok(r) => Ok(result_reply(&r, leader)),
+                Err(m) => Err(Error::Session(m)),
+            }
+        }
+    }
+}
+
+/// Rendezvous on a batch: the first waiter claims the blocking session
+/// wait and publishes the completion; everyone else parks on the condvar.
+fn wait_batch(inner: &Inner, batch: &Arc<Batch>) -> std::result::Result<ServedResult, String> {
+    let claimed = {
+        let mut st = batch.state.lock().unwrap();
+        loop {
+            if let Some(done) = &st.done {
+                return done.clone();
+            }
+            if let Some(t) = st.session_ticket.take() {
+                break t;
+            }
+            st = batch.cv.wait(st).unwrap();
+        }
+    };
+    let outcome = inner.session.wait(claimed).map(|c| ServedResult {
+        c: c.c,
+        tau: c.tau,
+        valid_ratio: c.valid_ratio,
+        compute_secs: c.compute_secs,
+        compiles: c.stats.compiles,
+    });
+    // Publish to the cache and retire the pending entry *before* waking
+    // the batch, so a re-submit after any waiter returns sees the cache.
+    if let Ok(r) = &outcome {
+        inner.cache.lock().unwrap().insert(
+            batch.key,
+            CachedResult {
+                c: r.c.clone(),
+                tau: r.tau,
+                valid_ratio: r.valid_ratio,
+            },
+        );
+    }
+    {
+        let mut pending = inner.pending.lock().unwrap();
+        if let Some(cur) = pending.get(&batch.key) {
+            if Arc::ptr_eq(cur, batch) {
+                pending.remove(&batch.key);
+            }
+        }
+    }
+    let shared = outcome.map_err(|e| e.to_string());
+    let mut st = batch.state.lock().unwrap();
+    st.done = Some(shared.clone());
+    batch.cv.notify_all();
+    shared
+}
+
+fn result_reply(r: &ServedResult, executed: bool) -> Reply {
+    (
+        FrameKind::ResultOk,
+        object(&[
+            ("rows", num(r.c.rows() as u64)),
+            ("cols", num(r.c.cols() as u64)),
+            ("data", Value::String(proto::encode_f32s(r.c.data()))),
+            ("tau", Value::Number(r.tau as f64)),
+            ("valid_ratio", Value::Number(r.valid_ratio)),
+            ("executed", Value::Bool(executed)),
+            ("compute_secs", Value::Number(r.compute_secs)),
+            ("compiles", num(r.compiles)),
+        ]),
+    )
+}
+
+fn handle_update(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let wire_op = proto::get_u64(p, "op")?;
+    let op = lookup_op(inner, who, wire_op)?;
+    let tiles_v = p.get("tiles")?.as_array()?;
+    let mut changed = Vec::with_capacity(tiles_v.len());
+    for t in tiles_v {
+        let pair = t.as_array()?;
+        if pair.len() != 2 {
+            return Err(Error::Protocol("update: tile entries are [ti, tj] pairs".into()));
+        }
+        changed.push((pair[0].as_usize()?, pair[1].as_usize()?));
+    }
+    let data = proto::decode_f32s(proto::get_str(p, "data")?)?;
+    // Capture the schedules the affected plans executed *before* the
+    // update — repair-aware invalidation needs both sides of the repair.
+    struct Affected {
+        wire: u64,
+        plan: PlanId,
+        is_a: bool,
+        is_b: bool,
+        old_key: Fingerprint,
+        old_sched: Option<Arc<Schedule>>,
+    }
+    let mut affected: Vec<Affected> = {
+        let plans = inner.plans.lock().unwrap();
+        plans
+            .iter()
+            .filter(|(_, m)| m.a == op || m.b == op)
+            .map(|(w, m)| Affected {
+                wire: *w,
+                plan: m.id,
+                is_a: m.a == op,
+                is_b: m.b == op,
+                old_key: m.key,
+                old_sched: None,
+            })
+            .collect()
+    };
+    for a in &mut affected {
+        a.old_sched = inner.session.plan_schedule(a.plan).ok().map(|(s, _, _)| s);
+    }
+    let report = inner.session.update(op, &changed, &data)?;
+    // Repair-aware result-cache maintenance: a cached product is dirty
+    // iff a changed tile feeds a surviving product of the old *or* the
+    // repaired schedule (removed products change the sum too); clean
+    // entries migrate to the post-update key with their bits intact.
+    let mut invalidated = 0u64;
+    let mut rekeyed = 0u64;
+    for a in &affected {
+        let Ok((new_sched, tau, density)) = inner.session.plan_schedule(a.plan) else {
+            continue;
+        };
+        let Ok((fa, fb)) = inner.session.plan_fingerprints(a.plan) else {
+            continue;
+        };
+        let new_key = result_key(fa, fb, tau, density);
+        let touched = |s: &Schedule| {
+            changed.iter().any(|&(ti, tj)| {
+                (a.is_a && s.touches_a_tile(ti, tj)) || (a.is_b && s.touches_b_tile(ti, tj))
+            })
+        };
+        let dirty =
+            a.old_sched.as_deref().map(&touched).unwrap_or(true) || touched(new_sched.as_ref());
+        {
+            let mut cache = inner.cache.lock().unwrap();
+            if dirty {
+                cache.invalidate(&a.old_key);
+                invalidated += 1;
+            } else {
+                cache.rekey(&a.old_key, new_key);
+                rekeyed += 1;
+            }
+        }
+        if let Some(meta) = inner.plans.lock().unwrap().get_mut(&a.wire) {
+            meta.key = new_key;
+        }
+    }
+    Ok((
+        FrameKind::UpdateOk,
+        object(&[
+            ("tiles_changed", num(report.tiles_changed as u64)),
+            ("norm_patched", Value::Bool(report.norm_patched)),
+            ("schedules_repaired", num(report.schedules_repaired as u64)),
+            ("products_added", num(report.products_added as u64)),
+            ("products_removed", num(report.products_removed as u64)),
+            ("plans_migrated", num(report.plans_migrated as u64)),
+            ("invalidated", num(invalidated)),
+            ("rekeyed", num(rekeyed)),
+        ]),
+    ))
+}
+
+fn handle_release(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let wire = proto::get_u64(p, "op")?;
+    let entry = {
+        let mut ops = inner.ops.lock().unwrap();
+        let owned = ops
+            .get(&wire)
+            .map(|e| e.tenant == who)
+            .ok_or_else(|| Error::Session(format!("operand {wire} not registered")))?;
+        if !owned {
+            return Err(Error::Session(format!(
+                "operand {wire} belongs to another tenant"
+            )));
+        }
+        ops.remove(&wire).expect("entry exists under the lock")
+    };
+    inner.session.release(entry.id)?;
+    let mut tenants = inner.tenants.lock().unwrap();
+    if let Some(t) = tenants.get_mut(who) {
+        t.store_bytes = t.store_bytes.saturating_sub(entry.bytes);
+    }
+    Ok((FrameKind::ReleaseOk, object(&[("op", num(wire))])))
+}
+
+fn handle_release_plan(inner: &Inner, who: &str, p: &Value) -> Result<Reply> {
+    let wire = proto::get_u64(p, "plan")?;
+    let meta = {
+        let mut plans = inner.plans.lock().unwrap();
+        let owned = plans
+            .get(&wire)
+            .map(|m| m.tenant == who)
+            .ok_or_else(|| Error::Session(format!("plan {wire} not prepared")))?;
+        if !owned {
+            return Err(Error::Session(format!(
+                "plan {wire} belongs to another tenant"
+            )));
+        }
+        plans.remove(&wire).expect("entry exists under the lock")
+    };
+    inner.session.release_plan(meta.id)?;
+    Ok((FrameKind::ReleaseOk, object(&[("plan", num(wire))])))
+}
+
+fn handle_stats(inner: &Inner) -> Result<Reply> {
+    let store = inner.session.store_stats();
+    let cache = inner.cache.lock().unwrap();
+    let c = &inner.counters;
+    Ok((
+        FrameKind::StatsOk,
+        object(&[
+            ("requests", num(c.requests.load(Ordering::Relaxed))),
+            ("executed", num(c.executed.load(Ordering::Relaxed))),
+            ("batched", num(c.batched.load(Ordering::Relaxed))),
+            ("shed_busy", num(c.shed_busy.load(Ordering::Relaxed))),
+            ("shed_quota", num(c.shed_quota.load(Ordering::Relaxed))),
+            ("result_cache_hits", num(cache.hits())),
+            ("result_cache_misses", num(cache.misses())),
+            ("result_cache_invalidations", num(cache.invalidations())),
+            ("result_cache_rekeys", num(cache.rekeys())),
+            ("result_cache_len", num(cache.len() as u64)),
+            ("store_puts", num(store.puts)),
+            ("store_dedup_hits", num(store.dedup_hits)),
+            ("store_resident_bytes", num(store.resident_bytes)),
+        ]),
+    ))
+}

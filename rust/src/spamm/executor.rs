@@ -137,6 +137,15 @@ pub struct MultiplyStats {
     /// τ auto-tunes actually executed (the bisection ran); a store-
     /// restored tune increments `store_tau_hits` instead.
     pub tau_tuned: usize,
+    /// Fresh executable compiles this call paid across every runtime it
+    /// touched (device workers and, for expression graphs, the
+    /// orchestrator).  Warm requests on persistent per-device worker
+    /// runtimes hold this at zero — the serving tier's no-recompile
+    /// contract.
+    pub compiles: u64,
+    /// Seconds inside those compiles (excluded from the busy clocks and
+    /// the pipeline walls, like the paper excludes warmup).
+    pub compile_secs: f64,
 }
 
 impl MultiplyStats {
@@ -370,6 +379,7 @@ impl SpammEngine {
     ) -> Result<(Matrix, MultiplyStats)> {
         check_inner_dims("multiply", a, b)?;
         let t_total = Instant::now();
+        let (compiles0, compile_secs0) = (self.rt.compiles(), self.rt.compile_secs());
         let mut stats = MultiplyStats::default();
 
         let pa = PaddedMatrix::new(a, self.cfg.lonum);
@@ -405,6 +415,8 @@ impl SpammEngine {
             b.cols(),
             &mut stats,
         )?;
+        stats.compiles = self.rt.compiles() - compiles0;
+        stats.compile_secs = self.rt.compile_secs() - compile_secs0;
         stats.total_secs = t_total.elapsed().as_secs_f64();
         Ok((c, stats))
     }
@@ -429,6 +441,7 @@ impl SpammEngine {
             )));
         }
         let t_total = Instant::now();
+        let (compiles0, compile_secs0) = (self.rt.compiles(), self.rt.compile_secs());
         let mut stats = MultiplyStats::default();
         let cached = self.cfg.cache_enabled;
         let t = Instant::now();
@@ -462,6 +475,8 @@ impl SpammEngine {
             pb.logical_cols,
             &mut stats,
         )?;
+        stats.compiles = self.rt.compiles() - compiles0;
+        stats.compile_secs = self.rt.compile_secs() - compile_secs0;
         stats.total_secs = t_total.elapsed().as_secs_f64();
         Ok((c, stats))
     }

@@ -302,6 +302,30 @@ impl Schedule {
         &self.valid_k[i * self.tile_cols + j]
     }
 
+    /// Does any surviving product consume A tile (ti, tk)?  A[i,k] feeds
+    /// C[i,*], so scan row `ti`'s compacted k-lists for `tk`.  The
+    /// serving tier's result cache uses this to decide whether a delta
+    /// update of A dirtied a cached output: a changed tile that no valid
+    /// product reads cannot change the result.
+    pub fn touches_a_tile(&self, ti: usize, tk: usize) -> bool {
+        if ti >= self.tile_rows || tk >= self.tile_k {
+            return false;
+        }
+        let tk = tk as u32;
+        (0..self.tile_cols).any(|j| self.ks(ti, j).contains(&tk))
+    }
+
+    /// Does any surviving product consume B tile (tk, tj)?  B[k,j] feeds
+    /// C[*,j], so scan column `tj`'s compacted k-lists for `tk` — the B
+    /// twin of [`Schedule::touches_a_tile`].
+    pub fn touches_b_tile(&self, tk: usize, tj: usize) -> bool {
+        if tk >= self.tile_k || tj >= self.tile_cols {
+            return false;
+        }
+        let tk = tk as u32;
+        (0..self.tile_rows).any(|i| self.ks(i, tj).contains(&tk))
+    }
+
     /// Propagated norm upper bound of the product this schedule computes:
     /// bound[i, j] = Σ_{k surviving} ‖A[i,k]‖·‖B[k,j]‖ ≥ ‖C[i,j]‖_F (the
     /// triangle inequality over the compacted k-list, with Frobenius

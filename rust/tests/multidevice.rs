@@ -530,3 +530,37 @@ fn session_plans_pin_only_the_devices_that_use_them() {
         assert_eq!(p.pinned_operands(), 0);
     }
 }
+
+#[test]
+fn warm_multidevice_submits_never_recompile() {
+    // Regression: the multi-device fan-out used to rebuild per-device
+    // runtimes (and recompile every kernel) on each request.  With the
+    // persistent per-device worker pool, the cold submit pays all the
+    // compiles and every warm submit on the same session reports zero —
+    // across fan-out widths and both the multiply and expression paths.
+    let b = bundle();
+    let a = Matrix::decay_exponential(256, 1.0, 0.5, 47);
+    let x = Matrix::decay_exponential(256, 1.0, 0.5, 48);
+    for devices in [2usize, 4] {
+        let s = SpammSession::new(&b, cfg_with(devices, Balance::Strided(devices))).unwrap();
+        let ida = s.put(&a).unwrap();
+        let idx = s.put(&x).unwrap();
+        let plan = s.prepare(ida, idx, Approx::Tau(0.0)).unwrap();
+        let cold = s.wait(s.submit(plan).unwrap()).unwrap();
+        assert!(
+            cold.stats.compiles > 0,
+            "devices={devices}: the cold submit pays the kernel compiles"
+        );
+        let warm = s.wait(s.submit(plan).unwrap()).unwrap();
+        assert_eq!(
+            warm.stats.compiles,
+            0,
+            "devices={devices}: a warm submit on resident workers must not recompile"
+        );
+        assert_eq!(warm.c.data(), cold.c.data());
+        // Resubmitting once more stays at zero — the pool's runtimes and
+        // their executable caches are session-lifetime, not per-request.
+        let third = s.wait(s.submit(plan).unwrap()).unwrap();
+        assert_eq!(third.stats.compiles, 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Result-cache correctness for the serving tier: warm re-submits are
+//! answered from the fingerprint-keyed cache with zero device dispatches,
+//! repair-aware invalidation after an incremental update drops *only* the
+//! cached products the repair actually touched (untouched entries migrate
+//! to their post-update keys bit-for-bit), and disabling the cache is
+//! bitwise inert.
+
+mod common;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, SpammSession};
+use cuspamm::matrix::Matrix;
+use cuspamm::serve::{
+    PutOutcome, RemoteApprox, RemoteCompletion, RemoteOperandId, RemotePlanId, ServeClient,
+    ServeServer, SubmitOutcome,
+};
+
+use common::bundle;
+
+fn put_ok(c: &mut ServeClient, m: &Matrix) -> RemoteOperandId {
+    match c.put(m).unwrap() {
+        PutOutcome::Ok(id) => id,
+        PutOutcome::QuotaExceeded(msg) => panic!("unexpected quota shed: {msg}"),
+    }
+}
+
+fn submit_wait(c: &mut ServeClient, plan: RemotePlanId) -> (bool, RemoteCompletion) {
+    match c.submit(plan).unwrap() {
+        SubmitOutcome::Ticket(t, cached) => (cached, c.wait(t).unwrap()),
+        other => panic!("submit shed on an unloaded server: {other:?}"),
+    }
+}
+
+#[test]
+fn warm_resubmits_hit_the_cache_with_zero_dispatches() {
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let server = ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap();
+    let mut c = ServeClient::connect(server.local_addr(), "warm").unwrap();
+    let m = Matrix::decay_algebraic(n, 0.1, 0.1, 81);
+    let id = put_ok(&mut c, &m);
+    let plan = c.prepare(id, id, RemoteApprox::Tau(0.0)).unwrap().id;
+
+    let (cold_cached, cold) = submit_wait(&mut c, plan);
+    assert!(!cold_cached);
+    assert!(cold.executed, "the first submit executes on the device");
+    for round in 1..4 {
+        let (cached, warm) = submit_wait(&mut c, plan);
+        assert!(cached, "round {round}: warm submit must be admitted from the cache");
+        assert!(!warm.executed, "round {round}: a cache hit dispatches nothing");
+        assert_eq!(warm.compiles, 0, "round {round}: a cache hit compiles nothing");
+        assert_eq!(warm.compute_secs, 0.0, "round {round}: a cache hit charges no compute");
+        assert_eq!(warm.c.data(), cold.c.data(), "round {round}: cached bits diverged");
+        assert_eq!(warm.tau.to_bits(), cold.tau.to_bits());
+        assert_eq!(warm.valid_ratio, cold.valid_ratio);
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.result_cache_hits, 3);
+    assert_eq!(stats.result_cache_misses, 1);
+    assert_eq!(stats.result_cache_len, 1);
+    assert_eq!(stats.executed, 1);
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn disabling_the_result_cache_is_bitwise_inert() {
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let m = Matrix::decay_algebraic(n, 0.1, 0.1, 82);
+
+    let on = ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap();
+    let mut c_on = ServeClient::connect(on.local_addr(), "on").unwrap();
+    let id = put_ok(&mut c_on, &m);
+    let plan = c_on.prepare(id, id, RemoteApprox::Tau(1e-4)).unwrap().id;
+    let (_, first_on) = submit_wait(&mut c_on, plan);
+    let (warm_cached, warm_on) = submit_wait(&mut c_on, plan);
+    assert!(warm_cached);
+
+    let mut cfg = SpammConfig::default();
+    cfg.result_cache_enabled = false;
+    let off = ServeServer::start(&b, cfg, "127.0.0.1:0").unwrap();
+    let mut c_off = ServeClient::connect(off.local_addr(), "off").unwrap();
+    let id = put_ok(&mut c_off, &m);
+    let plan = c_off.prepare(id, id, RemoteApprox::Tau(1e-4)).unwrap().id;
+    let (c1, first_off) = submit_wait(&mut c_off, plan);
+    let (c2, second_off) = submit_wait(&mut c_off, plan);
+    assert!(!c1 && !c2, "a disabled cache never admits from the cache");
+    assert!(first_off.executed && second_off.executed, "with the cache off every submit executes");
+    // The kill switch changes scheduling of work, never bits.
+    assert_eq!(first_off.c.data(), first_on.c.data());
+    assert_eq!(second_off.c.data(), warm_on.c.data());
+    let stats = c_off.stats().unwrap();
+    assert_eq!(stats.result_cache_hits, 0);
+    assert_eq!(stats.result_cache_len, 0);
+    assert_eq!(stats.executed, 2);
+    drop((c_on, c_off));
+    on.shutdown();
+    off.shutdown();
+}
+
+/// Zero an operand's last tile row and column so every product touching
+/// tile (T-1, T-1) is norm-pruned at any τ > 0.
+fn with_cold_border(n: usize, l: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::decay_algebraic(n, 0.1, 0.1, seed);
+    let t = n / l;
+    for r in 0..n {
+        for c in 0..n {
+            if r >= (t - 1) * l || c >= (t - 1) * l {
+                m[(r, c)] = 0.0;
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn update_invalidates_only_repair_touched_products() {
+    let b = bundle();
+    let l = b.lonum;
+    let n = 4 * l;
+    let tau = 0.01f32;
+    let server = ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap();
+    let mut c = ServeClient::connect(server.local_addr(), "updater").unwrap();
+
+    // Three independent products: u's update dirties its cached result,
+    // v is never updated, w's update lands only in its norm-pruned cold
+    // border so the surviving products are untouched.
+    let mu = Matrix::decay_algebraic(n, 0.1, 0.1, 83);
+    let mv = Matrix::decay_algebraic(n, 0.1, 0.1, 84);
+    let mw = with_cold_border(n, l, 85);
+    let u = put_ok(&mut c, &mu);
+    let v = put_ok(&mut c, &mv);
+    let w = put_ok(&mut c, &mw);
+    let plan_u = c.prepare(u, u, RemoteApprox::Tau(0.0)).unwrap().id;
+    let plan_v = c.prepare(v, v, RemoteApprox::Tau(0.0)).unwrap().id;
+    let plan_w = c.prepare(w, w, RemoteApprox::Tau(tau)).unwrap().id;
+    let (_, cold_u) = submit_wait(&mut c, plan_u);
+    let (_, cold_v) = submit_wait(&mut c, plan_v);
+    let (_, cold_w) = submit_wait(&mut c, plan_w);
+
+    // u: rewrite tile (0,0) — it feeds surviving products, so the cached
+    // product is stale and must drop.
+    let hot_tile = vec![0.5f32; l * l];
+    let rep_u = c.update(u, &[(0, 0)], &hot_tile).unwrap();
+    assert_eq!(rep_u.tiles_changed, 1);
+    assert_eq!(rep_u.invalidated, 1, "u's cached product is repair-touched");
+    assert_eq!(rep_u.rekeyed, 0);
+
+    // w: rewrite tile (T-1, T-1) with values tiny enough that its norm
+    // products stay below τ — the schedule's surviving products never
+    // read it, so the cached bits remain exact and migrate keys.
+    let cold_tile = vec![1e-4f32; l * l];
+    let rep_w = c.update(w, &[(n / l - 1, n / l - 1)], &cold_tile).unwrap();
+    assert_eq!(rep_w.tiles_changed, 1);
+    assert_eq!(rep_w.invalidated, 0, "w's surviving products are untouched");
+    assert_eq!(rep_w.rekeyed, 1, "w's cached product migrates to the new key");
+
+    // v was never part of either update: still a pure hit.
+    let (cached_v, warm_v) = submit_wait(&mut c, plan_v);
+    assert!(cached_v && !warm_v.executed);
+    assert_eq!(warm_v.c.data(), cold_v.c.data());
+
+    // w re-submits as a hit under its migrated key, and the cached bits
+    // equal a from-scratch session over the *updated* operand.
+    let (cached_w, warm_w) = submit_wait(&mut c, plan_w);
+    assert!(cached_w, "rekeyed entries must still hit");
+    assert!(!warm_w.executed);
+    assert_eq!(warm_w.c.data(), cold_w.c.data());
+    let mut mw_updated = mw.clone();
+    for r in 0..l {
+        for cc in 0..l {
+            mw_updated[((n - l) + r, (n - l) + cc)] = 1e-4;
+        }
+    }
+    let s = SpammSession::new(&b, SpammConfig::default()).unwrap();
+    let sid = s.put(&mw_updated).unwrap();
+    let splan = s.prepare(sid, sid, Approx::Tau(tau)).unwrap();
+    let direct_w = s.wait(s.submit(splan).unwrap()).unwrap();
+    assert_eq!(
+        warm_w.c.data(),
+        direct_w.c.data(),
+        "the migrated cache entry must equal recomputing over the updated operand"
+    );
+
+    // u re-submits cold: the invalidation forced a re-execution whose
+    // bits reflect the new tile — and match a from-scratch session.
+    let (cached_u, fresh_u) = submit_wait(&mut c, plan_u);
+    assert!(!cached_u, "invalidated entries must miss");
+    assert!(fresh_u.executed);
+    assert_ne!(fresh_u.c.data(), cold_u.c.data(), "rewriting a hot tile must change the product");
+    let mut mu_updated = mu.clone();
+    for r in 0..l {
+        for cc in 0..l {
+            mu_updated[(r, cc)] = 0.5;
+        }
+    }
+    let s2 = SpammSession::new(&b, SpammConfig::default()).unwrap();
+    let sid2 = s2.put(&mu_updated).unwrap();
+    let splan2 = s2.prepare(sid2, sid2, Approx::Tau(0.0)).unwrap();
+    let direct_u = s2.wait(s2.submit(splan2).unwrap()).unwrap();
+    assert_eq!(fresh_u.c.data(), direct_u.c.data());
+
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.result_cache_invalidations, 1);
+    assert_eq!(stats.result_cache_rekeys, 1);
+    drop(c);
+    server.shutdown();
+}

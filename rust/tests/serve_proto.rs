@@ -1,0 +1,299 @@
+//! Wire-protocol conformance for the serving tier: golden frame layout,
+//! round-trips for every frame kind, and an adversarial sweep — truncated
+//! headers and payloads, wrong magic/version, unknown kind tags, hostile
+//! length prefixes, non-UTF-8 and garbage payloads — against both the
+//! codec and a live server.  Every corruption must surface as a *typed*
+//! reply or error: never a panic, never a hang, never a poisoned server.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::error::Error;
+use cuspamm::json::Value;
+use cuspamm::matrix::Matrix;
+use cuspamm::serve::proto::{
+    self, decode_header, encode_frame, try_read_frame, FrameKind, HEADER_LEN, MAGIC, MAX_PAYLOAD,
+    VERSION,
+};
+use cuspamm::serve::{PutOutcome, RemoteApprox, ServeClient, ServeServer, SubmitOutcome};
+
+use common::bundle;
+
+fn obj(fields: &[(&str, Value)]) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert((*k).to_string(), v.clone());
+    }
+    Value::Object(m)
+}
+
+#[test]
+fn golden_frame_byte_layout() {
+    // The exact on-wire bytes of a hello frame are a compatibility
+    // contract: header fields little-endian, payload compact JSON.
+    let payload = obj(&[("client", Value::String("a".into()))]);
+    let bytes = encode_frame(FrameKind::Hello, &payload).unwrap();
+    let body = br#"{"client":"a"}"#;
+    assert_eq!(&bytes[0..4], &MAGIC.to_le_bytes());
+    assert_eq!(&bytes[4..6], &VERSION.to_le_bytes());
+    assert_eq!(bytes[6], 0x01, "hello tag");
+    assert_eq!(bytes[7], 0, "reserved byte");
+    assert_eq!(&bytes[8..12], &(body.len() as u32).to_le_bytes());
+    assert_eq!(&bytes[HEADER_LEN..], body);
+}
+
+#[test]
+fn every_frame_kind_roundtrips() {
+    for &kind in FrameKind::all() {
+        let payload = obj(&[
+            ("tag", Value::Number(kind.to_tag() as f64)),
+            ("data", Value::String(proto::encode_f32s(&[1.5, -0.0]))),
+        ]);
+        let bytes = encode_frame(kind, &payload).unwrap();
+        let frame = try_read_frame(&mut &bytes[..]).unwrap().expect("one frame");
+        assert_eq!(frame.kind, kind);
+        assert_eq!(frame.payload, payload);
+        // And the remainder of the stream is a clean boundary EOF.
+        let mut rest: &[u8] = &[];
+        assert!(try_read_frame(&mut rest).unwrap().is_none());
+    }
+}
+
+#[test]
+fn corrupt_headers_are_typed_errors() {
+    let good = encode_frame(FrameKind::Stats, &obj(&[])).unwrap();
+    let mut header = [0u8; HEADER_LEN];
+    header.copy_from_slice(&good[..HEADER_LEN]);
+
+    let mut wrong_magic = header;
+    wrong_magic[0] ^= 0xff;
+    assert!(matches!(decode_header(&wrong_magic), Err(Error::Protocol(_))));
+
+    let mut wrong_version = header;
+    wrong_version[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    assert!(matches!(decode_header(&wrong_version), Err(Error::Protocol(_))));
+
+    let mut unknown_kind = header;
+    unknown_kind[6] = 0x7f;
+    assert!(matches!(decode_header(&unknown_kind), Err(Error::Protocol(_))));
+
+    let mut reserved = header;
+    reserved[7] = 1;
+    assert!(matches!(decode_header(&reserved), Err(Error::Protocol(_))));
+
+    let mut oversized = header;
+    oversized[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    assert!(matches!(decode_header(&oversized), Err(Error::Protocol(_))));
+}
+
+#[test]
+fn corrupt_payloads_are_typed_errors() {
+    // Valid header, payload bytes that are not UTF-8.
+    let mut frame = encode_frame(FrameKind::Stats, &obj(&[])).unwrap();
+    frame.truncate(HEADER_LEN);
+    frame[8..12].copy_from_slice(&4u32.to_le_bytes());
+    frame.extend_from_slice(&[0xff, 0xfe, 0xfd, 0xfc]);
+    assert!(matches!(try_read_frame(&mut &frame[..]), Err(Error::Protocol(_))));
+
+    // Valid header, payload that is not JSON.
+    let mut garbage = encode_frame(FrameKind::Stats, &obj(&[])).unwrap();
+    garbage.truncate(HEADER_LEN);
+    garbage[8..12].copy_from_slice(&4u32.to_le_bytes());
+    garbage.extend_from_slice(b"!!!!");
+    assert!(matches!(try_read_frame(&mut &garbage[..]), Err(Error::Protocol(_))));
+
+    // Every possible truncation point of a real frame.
+    let bytes = encode_frame(
+        FrameKind::Put,
+        &obj(&[("data", Value::String(proto::encode_f32s(&[1.0, 2.0])))]),
+    )
+    .unwrap();
+    for cut in 1..bytes.len() {
+        let err = try_read_frame(&mut &bytes[..cut]).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "cut={cut}: {err}");
+    }
+}
+
+fn start_server() -> ServeServer {
+    let b = bundle();
+    ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap()
+}
+
+/// Write raw bytes, then read one reply frame off the same socket.
+fn raw_exchange(addr: std::net::SocketAddr, bytes: &[u8]) -> (TcpStream, proto::Frame) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(bytes).unwrap();
+    s.flush().unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    (s, reply)
+}
+
+#[test]
+fn live_server_sheds_corrupt_frames_with_a_typed_reply_then_closes() {
+    let server = start_server();
+    let addr = server.local_addr();
+    let good = encode_frame(FrameKind::Stats, &obj(&[])).unwrap();
+
+    // Framing corruptions: the server answers with ErrorReply, then
+    // closes (resync on a corrupt byte stream is impossible).
+    let mut wrong_magic = good.clone();
+    wrong_magic[0] ^= 0xff;
+    let mut wrong_version = good.clone();
+    wrong_version[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    let mut unknown_kind = good.clone();
+    unknown_kind[6] = 0x7f;
+    let mut oversized = good.clone();
+    oversized[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    let mut not_json = good.clone();
+    not_json.truncate(HEADER_LEN);
+    not_json[8..12].copy_from_slice(&4u32.to_le_bytes());
+    not_json.extend_from_slice(b"!!!!");
+    for (what, bytes) in [
+        ("wrong magic", &wrong_magic),
+        ("wrong version", &wrong_version),
+        ("unknown kind", &unknown_kind),
+        ("oversized length", &oversized),
+        ("non-JSON payload", &not_json),
+    ] {
+        let (mut s, reply) = raw_exchange(addr, bytes);
+        assert_eq!(reply.kind, FrameKind::ErrorReply, "{what}");
+        // The server hangs up after losing framing — a clean EOF here,
+        // not a hang.
+        assert!(try_read_frame(&mut s).unwrap().is_none(), "{what}");
+    }
+
+    // Mid-frame truncation: declare a 64-byte payload, send 8, hang up
+    // our write half.  The server must reply (typed) rather than wait
+    // forever.
+    let mut truncated = good.clone();
+    truncated[8..12].copy_from_slice(&64u32.to_le_bytes());
+    truncated.truncate(HEADER_LEN + 8);
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&truncated).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    assert_eq!(reply.kind, FrameKind::ErrorReply);
+
+    // None of that poisoned the server: a well-formed client still works.
+    let mut c = ServeClient::connect(addr, "after-the-storm").unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.requests > 0);
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn dispatch_errors_keep_the_connection_open() {
+    let server = start_server();
+    let addr = server.local_addr();
+
+    // A request before hello is a dispatch error, not a framing error:
+    // the reply is typed and the connection survives.
+    let put = encode_frame(FrameKind::Put, &obj(&[("rows", Value::Number(1.0))])).unwrap();
+    let (mut s, reply) = raw_exchange(addr, &put);
+    assert_eq!(reply.kind, FrameKind::ErrorReply);
+    let name = obj(&[("client", Value::String("raw".into()))]);
+    let hello = encode_frame(FrameKind::Hello, &name).unwrap();
+    s.write_all(&hello).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    assert_eq!(reply.kind, FrameKind::HelloOk, "connection must survive a dispatch error");
+
+    // A reply kind in request position is rejected without closing.
+    let backwards = encode_frame(FrameKind::ResultOk, &obj(&[])).unwrap();
+    s.write_all(&backwards).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    assert_eq!(reply.kind, FrameKind::ErrorReply);
+
+    // An empty tenant name is rejected.
+    let empty = obj(&[("client", Value::String(String::new()))]);
+    let anon = encode_frame(FrameKind::Hello, &empty).unwrap();
+    s.write_all(&anon).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    assert_eq!(reply.kind, FrameKind::ErrorReply);
+
+    // Still alive: stats answers on the same socket.
+    let stats = encode_frame(FrameKind::Stats, &obj(&[])).unwrap();
+    s.write_all(&stats).unwrap();
+    let reply = proto::read_frame(&mut s).unwrap();
+    assert_eq!(reply.kind, FrameKind::StatsOk);
+    drop(s);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_handles_are_typed_session_errors() {
+    use cuspamm::serve::{RemoteOperandId, RemotePlanId, RemoteTicket};
+    let server = start_server();
+    let mut c = ServeClient::connect(server.local_addr(), "handles").unwrap();
+    let bad_op = RemoteOperandId(999);
+    let bad_plan = RemotePlanId(999);
+    let bad_ticket = RemoteTicket(999);
+    for err in [
+        c.prepare(bad_op, bad_op, RemoteApprox::Tau(0.0)).unwrap_err(),
+        c.submit(bad_plan).map(|_| ()).unwrap_err(),
+        c.wait(bad_ticket).map(|_| ()).unwrap_err(),
+        c.release(bad_op).unwrap_err(),
+        c.release_plan(bad_plan).unwrap_err(),
+    ] {
+        assert!(matches!(err, Error::Session(_)), "{err}");
+    }
+    // The connection survived all five rejections.
+    let m = Matrix::decay_exponential(64, 1.0, 0.5, 3);
+    let id = match c.put(&m).unwrap() {
+        PutOutcome::Ok(id) => id,
+        PutOutcome::QuotaExceeded(m) => panic!("unlimited budget shed a put: {m}"),
+    };
+    let plan = c.prepare(id, id, RemoteApprox::Tau(0.0)).unwrap();
+    match c.submit(plan.id).unwrap() {
+        SubmitOutcome::Ticket(t, cached) => {
+            assert!(!cached);
+            let done = c.wait(t).unwrap();
+            assert!(done.executed);
+            assert_eq!((done.c.rows(), done.c.cols()), (64, 64));
+            // A ticket redeems exactly once.
+            let again = c.wait(t).unwrap_err();
+            assert!(matches!(again, Error::Session(_)), "{again}");
+        }
+        other => panic!("submit shed on an idle server: {other:?}"),
+    }
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn products_cross_the_wire_bitwise() {
+    // The f32 hex codec end-to-end: a remote product must match the
+    // in-process session bit for bit, including on re-decode of awkward
+    // values (negative zero, subnormals survive encode_f32s round-trips).
+    let data = vec![0.0f32, -0.0, f32::MIN_POSITIVE, 1.0e-39, -3.25e-12, 1e30];
+    let dec = proto::decode_f32s(&proto::encode_f32s(&data)).unwrap();
+    for (a, b) in data.iter().zip(&dec) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let b = bundle();
+    let server = ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap();
+    let mut c = ServeClient::connect(server.local_addr(), "bitwise").unwrap();
+    let m = Matrix::decay_exponential(96, 1.0, 0.5, 5);
+    let id = match c.put(&m).unwrap() {
+        PutOutcome::Ok(id) => id,
+        PutOutcome::QuotaExceeded(msg) => panic!("{msg}"),
+    };
+    let plan = c.prepare(id, id, RemoteApprox::Tau(1e-4)).unwrap();
+    let remote = match c.submit(plan.id).unwrap() {
+        SubmitOutcome::Ticket(t, _) => c.wait(t).unwrap(),
+        other => panic!("{other:?}"),
+    };
+    use cuspamm::coordinator::{Approx, SpammSession};
+    let s = SpammSession::new(&b, SpammConfig::default()).unwrap();
+    let sid = s.put(&m).unwrap();
+    let splan = s.prepare(sid, sid, Approx::Tau(1e-4)).unwrap();
+    let direct = s.wait(s.submit(splan).unwrap()).unwrap();
+    assert_eq!(remote.c.data(), direct.c.data(), "wire transport changed bits");
+    drop(c);
+    server.shutdown();
+}

@@ -1,0 +1,365 @@
+//! Overload soak for the serving tier: concurrent tenants with a
+//! Zipf-hot plan mix against tiny quotas.  Invariants under saturation:
+//! sheds are *typed* replies on connections that stay open, per-tenant
+//! budgets are isolated, every admitted ticket redeems (zero lost
+//! tickets), each distinct product executes exactly once no matter how
+//! many submits race it, and every byte that comes back is bitwise
+//! identical to an in-process session.
+
+mod common;
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use cuspamm::config::SpammConfig;
+use cuspamm::coordinator::{Approx, SpammSession};
+use cuspamm::error::Error;
+use cuspamm::matrix::Matrix;
+use cuspamm::serve::{
+    PutOutcome, RemoteApprox, RemoteOperandId, ServeClient, ServeServer, SubmitOutcome,
+};
+
+use common::bundle;
+
+fn put_ok(c: &mut ServeClient, m: &Matrix) -> RemoteOperandId {
+    match c.put(m).unwrap() {
+        PutOutcome::Ok(id) => id,
+        PutOutcome::QuotaExceeded(msg) => panic!("unexpected quota shed: {msg}"),
+    }
+}
+
+#[test]
+fn concurrent_zipf_hot_tenants_lose_no_tickets_and_stay_bitwise_identical() {
+    const CLIENTS: usize = 5;
+    const REQUESTS: usize = 10;
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let ma = Matrix::decay_algebraic(n, 0.1, 0.1, 71);
+    let mb = Matrix::decay_algebraic(n, 0.1, 0.1, 72);
+    // τ index 0 is the Zipf-hot plan every tenant hammers; 1..=CLIENTS
+    // are per-tenant cold tails.
+    let taus: Vec<f32> = std::iter::once(0.0)
+        .chain((0..CLIENTS).map(|ci| 0.003 * (ci + 1) as f32))
+        .collect();
+
+    // In-process ground truth at every τ.
+    let reference = SpammSession::new(&b, SpammConfig::default()).unwrap();
+    let ra = reference.put(&ma).unwrap();
+    let rb = reference.put(&mb).unwrap();
+    let expected: Arc<Vec<Vec<f32>>> = Arc::new(
+        taus.iter()
+            .map(|&tau| {
+                let plan = reference.prepare(ra, rb, Approx::Tau(tau)).unwrap();
+                reference
+                    .wait(reference.submit(plan).unwrap())
+                    .unwrap()
+                    .c
+                    .data()
+                    .to_vec()
+            })
+            .collect(),
+    );
+
+    let mut cfg = SpammConfig::default();
+    cfg.queue_depth = 4;
+    cfg.client_queue_depth = 2;
+    let server = ServeServer::start(&b, cfg, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|ci| {
+            let (ma, mb) = (ma.clone(), mb.clone());
+            let expected = expected.clone();
+            let tau_own = taus[1 + ci];
+            std::thread::spawn(move || -> (usize, usize) {
+                let mut c = ServeClient::connect(addr, &format!("tenant-{ci}")).unwrap();
+                let a = put_ok(&mut c, &ma);
+                let bb = put_ok(&mut c, &mb);
+                let hot = c.prepare(a, bb, RemoteApprox::Tau(0.0)).unwrap().id;
+                let own = c.prepare(a, bb, RemoteApprox::Tau(tau_own)).unwrap().id;
+                let (mut tickets, mut sheds) = (0, 0);
+                for r in 0..REQUESTS {
+                    let (plan, want) = if r % 3 != 0 {
+                        (hot, &expected[0])
+                    } else {
+                        (own, &expected[1 + ci])
+                    };
+                    let t = loop {
+                        match c.submit(plan).unwrap() {
+                            SubmitOutcome::Ticket(t, _) => break t,
+                            SubmitOutcome::Busy(_) | SubmitOutcome::QuotaExceeded(_) => {
+                                sheds += 1;
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                        }
+                    };
+                    tickets += 1;
+                    // Zero lost tickets: every admitted ticket redeems,
+                    // and redeems the *right bits*.
+                    let done = c.wait(t).unwrap();
+                    assert_eq!(
+                        done.c.data(),
+                        &want[..],
+                        "tenant-{ci} request {r} diverged from the in-process session"
+                    );
+                }
+                (tickets, sheds)
+            })
+        })
+        .collect();
+    let mut tickets = 0u64;
+    let mut sheds = 0u64;
+    for h in handles {
+        let (t, s) = h.join().expect("soak client panicked");
+        tickets += t as u64;
+        sheds += s as u64;
+    }
+    assert_eq!(tickets, (CLIENTS * REQUESTS) as u64, "every request must eventually redeem");
+
+    let mut probe = ServeClient::connect(addr, "probe").unwrap();
+    let stats = probe.stats().unwrap();
+    // Each distinct result key executes exactly once, ever — the hot
+    // plan plus one tail per tenant — regardless of how the submits
+    // interleaved.
+    assert_eq!(
+        stats.executed,
+        (1 + CLIENTS) as u64,
+        "distinct products must execute exactly once (sheds retried: {sheds})"
+    );
+    // Ticket conservation: every admitted submit was exactly one of
+    // leader / batched follower / result-cache hit.
+    assert_eq!(
+        stats.executed + stats.batched + stats.result_cache_hits,
+        tickets,
+        "admission outcomes must partition the admitted tickets"
+    );
+    assert_eq!(stats.shed_quota + stats.shed_busy, sheds);
+    drop(probe);
+    server.shutdown();
+}
+
+#[test]
+fn racing_same_plan_submits_execute_exactly_once() {
+    const RACERS: usize = 8;
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let m = Matrix::decay_algebraic(n, 0.1, 0.1, 73);
+
+    let reference = SpammSession::new(&b, SpammConfig::default()).unwrap();
+    let rid = reference.put(&m).unwrap();
+    let rplan = reference.prepare(rid, rid, Approx::Tau(0.0)).unwrap();
+    let want = reference
+        .wait(reference.submit(rplan).unwrap())
+        .unwrap()
+        .c
+        .data()
+        .to_vec();
+
+    let server = ServeServer::start(&b, SpammConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let barrier = Arc::new(Barrier::new(RACERS));
+    let handles: Vec<_> = (0..RACERS)
+        .map(|_| {
+            let m = m.clone();
+            let want = want.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || -> bool {
+                let mut c = ServeClient::connect(addr, "race").unwrap();
+                let id = put_ok(&mut c, &m);
+                let plan = c.prepare(id, id, RemoteApprox::Tau(0.0)).unwrap().id;
+                barrier.wait();
+                let t = match c.submit(plan).unwrap() {
+                    SubmitOutcome::Ticket(t, _) => t,
+                    other => panic!("racing submit shed with default quotas: {other:?}"),
+                };
+                let done = c.wait(t).unwrap();
+                assert_eq!(done.c.data(), &want[..], "racer diverged");
+                done.executed
+            })
+        })
+        .collect();
+    let executed_flags: Vec<bool> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(
+        executed_flags.iter().filter(|&&e| e).count(),
+        1,
+        "exactly one racer is the leader; followers and cache hits report executed=false"
+    );
+    let mut probe = ServeClient::connect(addr, "probe").unwrap();
+    let stats = probe.stats().unwrap();
+    assert_eq!(stats.executed, 1, "the device ran the shared plan exactly once");
+    assert_eq!(
+        stats.batched + stats.result_cache_hits,
+        (RACERS - 1) as u64,
+        "everyone else coalesced onto the leader or the cache"
+    );
+    drop(probe);
+    server.shutdown();
+}
+
+#[test]
+fn tenant_quotas_are_isolated_and_typed() {
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let mut cfg = SpammConfig::default();
+    // Budget for exactly one n×n f32 operand per tenant.
+    cfg.client_store_budget = n * n * 4;
+    let server = ServeServer::start(&b, cfg, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let m1 = Matrix::decay_algebraic(n, 0.1, 0.1, 74);
+    let m2 = Matrix::decay_algebraic(n, 0.1, 0.1, 75);
+
+    let mut alice = ServeClient::connect(addr, "alice").unwrap();
+    let a1 = put_ok(&mut alice, &m1);
+    match alice.put(&m2).unwrap() {
+        PutOutcome::QuotaExceeded(msg) => {
+            assert!(msg.contains("store budget"), "untyped shed message: {msg}")
+        }
+        PutOutcome::Ok(_) => panic!("second put must exceed a one-operand budget"),
+    }
+    // The shed cost alice nothing but the request: her connection and
+    // her first operand both still work.
+    let plan = alice.prepare(a1, a1, RemoteApprox::Tau(0.0)).unwrap();
+    assert_eq!((plan.rows, plan.cols), (n, n));
+
+    // Bob's budget is bob's: alice exhausting hers must not shed him.
+    let mut bob = ServeClient::connect(addr, "bob").unwrap();
+    let b1 = put_ok(&mut bob, &m2);
+
+    // Ownership is per-tenant even though the underlying store dedups
+    // content: alice cannot prepare over bob's handle.
+    let stolen = alice.prepare(b1, b1, RemoteApprox::Tau(0.0)).unwrap_err();
+    assert!(matches!(stolen, Error::Session(_)), "{stolen}");
+
+    // Release refunds the budget: alice can swap operands.
+    alice.release_plan(plan.id).unwrap();
+    alice.release(a1).unwrap();
+    let a2 = put_ok(&mut alice, &m2);
+    let plan2 = alice.prepare(a2, a2, RemoteApprox::Tau(0.0)).unwrap();
+    match alice.submit(plan2.id).unwrap() {
+        SubmitOutcome::Ticket(t, _) => {
+            let done = alice.wait(t).unwrap();
+            assert_eq!((done.c.rows(), done.c.cols()), (n, n));
+        }
+        other => panic!("post-refund submit shed: {other:?}"),
+    }
+    let stats = alice.stats().unwrap();
+    assert!(stats.shed_quota >= 1);
+    drop((alice, bob));
+    server.shutdown();
+}
+
+#[test]
+fn inflight_depth_sheds_deterministically() {
+    let b = bundle();
+    let n = 4 * b.lonum;
+    let mut cfg = SpammConfig::default();
+    cfg.client_queue_depth = 1;
+    let server = ServeServer::start(&b, cfg, "127.0.0.1:0").unwrap();
+    let mut c = ServeClient::connect(server.local_addr(), "narrow").unwrap();
+    let m = Matrix::decay_algebraic(n, 0.1, 0.1, 76);
+    let id = put_ok(&mut c, &m);
+    let p1 = c.prepare(id, id, RemoteApprox::Tau(0.0)).unwrap().id;
+    let p2 = c.prepare(id, id, RemoteApprox::Tau(0.05)).unwrap().id;
+    // Inflight is charged at admission and released at wait, so the
+    // second back-to-back cold submit sheds regardless of device timing.
+    let t1 = match c.submit(p1).unwrap() {
+        SubmitOutcome::Ticket(t, _) => t,
+        other => panic!("first submit must be admitted: {other:?}"),
+    };
+    match c.submit(p2).unwrap() {
+        SubmitOutcome::QuotaExceeded(msg) => {
+            assert!(msg.contains("inflight"), "untyped shed message: {msg}")
+        }
+        other => panic!("depth-1 second submit must shed typed: {other:?}"),
+    }
+    c.wait(t1).unwrap();
+    // The wait released the slot.
+    match c.submit(p2).unwrap() {
+        SubmitOutcome::Ticket(t, _) => {
+            c.wait(t).unwrap();
+        }
+        other => panic!("post-wait submit shed: {other:?}"),
+    }
+    // Cache hits bypass the depth budget entirely: with a cold submit
+    // holding the single inflight slot, warm re-submits still admit.
+    let p3 = c.prepare(id, id, RemoteApprox::Tau(0.1)).unwrap().id;
+    let t_hold = match c.submit(p3).unwrap() {
+        SubmitOutcome::Ticket(t, cached) => {
+            assert!(!cached);
+            t
+        }
+        other => panic!("cold p3 submit shed with an empty slot: {other:?}"),
+    };
+    for warm in [p1, p2] {
+        match c.submit(warm).unwrap() {
+            SubmitOutcome::Ticket(t, cached) => {
+                assert!(cached, "executed plans re-submit as cache hits");
+                let done = c.wait(t).unwrap();
+                assert!(!done.executed);
+            }
+            other => panic!("cache hits must not be charged against the depth: {other:?}"),
+        }
+    }
+    c.wait(t_hold).unwrap();
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn global_saturation_sheds_busy_and_admitted_tickets_all_redeem() {
+    const FLOOD: usize = 16;
+    let b = bundle();
+    let n = 8 * b.lonum;
+    let mut cfg = SpammConfig::default();
+    cfg.queue_depth = 1;
+    let server = ServeServer::start(&b, cfg, "127.0.0.1:0").unwrap();
+    let mut c = ServeClient::connect(server.local_addr(), "flood").unwrap();
+    let m = Matrix::decay_algebraic(n, 0.1, 0.1, 77);
+    let id = put_ok(&mut c, &m);
+    // Distinct-τ plans: none can coalesce or ride the cache, so every
+    // admission takes a real queue slot.
+    let plans: Vec<_> = (0..FLOOD)
+        .map(|i| {
+            c.prepare(id, id, RemoteApprox::Tau(0.011 * (i + 1) as f32))
+                .unwrap()
+                .id
+        })
+        .collect();
+    let mut admitted = Vec::new();
+    let mut saw_busy = false;
+    for &p in &plans {
+        match c.submit(p).unwrap() {
+            SubmitOutcome::Ticket(t, cached) => {
+                assert!(!cached);
+                admitted.push(t);
+            }
+            SubmitOutcome::Busy(msg) => {
+                assert!(msg.contains("admission queue"), "untyped busy message: {msg}");
+                saw_busy = true;
+                break;
+            }
+            SubmitOutcome::QuotaExceeded(msg) => {
+                panic!("global saturation must shed Busy, not quota: {msg}")
+            }
+        }
+    }
+    assert!(saw_busy, "flooding {FLOOD} cold submits at queue_depth=1 must saturate the session");
+    assert!(!admitted.is_empty(), "at least the first submit is admitted");
+    // Zero lost tickets: the shed dropped only the shed request.
+    for (i, &t) in admitted.iter().enumerate() {
+        let done = c.wait(t).unwrap();
+        assert!(done.executed, "admitted flood ticket {i} must execute");
+        assert_eq!((done.c.rows(), done.c.cols()), (n, n));
+    }
+    // The shed plan itself is still servable afterwards.
+    match c.submit(plans[FLOOD - 1]).unwrap() {
+        SubmitOutcome::Ticket(t, _) => {
+            c.wait(t).unwrap();
+        }
+        SubmitOutcome::Busy(_) => {} // the queue may still be draining
+        SubmitOutcome::QuotaExceeded(msg) => panic!("{msg}"),
+    }
+    let stats = c.stats().unwrap();
+    assert!(stats.shed_busy >= 1);
+    drop(c);
+    server.shutdown();
+}
